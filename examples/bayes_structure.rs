@@ -1,0 +1,97 @@
+//! Bayesian structure learning (paper §B.4): train the MDB objective on the
+//! d = 5 edge-addition DAG environment against a linear-Gaussian dataset and
+//! report the Jensen–Shannon divergence to the **exact** posterior over all
+//! 29 281 DAGs, plus edge/path/Markov-blanket marginal correlations.
+//!
+//! Run: `cargo run --release --example bayes_structure -- [--iters N]`
+
+use gfnx::coordinator::config::{artifacts_dir, run_config};
+use gfnx::coordinator::buffer::TerminalCounter;
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::data::ancestral::ancestral_sample;
+use gfnx::data::erdos_renyi::sample_er_dag;
+use gfnx::envs::bayesnet::{BayesNetEnv, BayesNetState};
+use gfnx::metrics::dag_enum::{dag_index, enumerate_dags, exact_posterior};
+use gfnx::metrics::jsd::jsd_from_counts;
+use gfnx::metrics::marginals::{
+    edge_marginals, marginal_correlation, markov_blanket_marginals, path_marginals,
+};
+use gfnx::reward::bge::{bge_table, BgeParams};
+use gfnx::reward::lingauss::lingauss_table;
+use gfnx::runtime::Artifact;
+use gfnx::util::cli::Cli;
+use gfnx::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("bayes_structure", "structure learning with MDB + exact posterior eval")
+        .flag("iters", "1200", "training iterations")
+        .flag("seed", "0", "dataset seed")
+        .flag("score", "bge", "score family: bge | lingauss")
+        .parse();
+    let d = 5usize;
+
+    // Dataset: ER ground truth, expected in-degree 1, 100 ancestral samples.
+    let mut rng = Rng::new(args.get_u64("seed"));
+    let g = sample_er_dag(d, 1.0, &mut rng);
+    let data = ancestral_sample(&g, 100, 0.1, &mut rng);
+    println!("ground-truth DAG edges: {}", g.adj.count_ones());
+
+    let table = match args.get("score") {
+        "bge" => bge_table(&data, BgeParams::default_for(d)),
+        "lingauss" => lingauss_table(&data, 0.1, 1.0),
+        other => anyhow::bail!("unknown score {other}"),
+    };
+
+    // Exact posterior by enumeration (29 281 DAGs at d = 5).
+    let dags = enumerate_dags(d);
+    println!("enumerated {} DAGs", dags.len());
+    let posterior = exact_posterior(&dags, &table);
+    // Posterior mass of the ground truth's class (sanity).
+    if let Some(gi) = dag_index(&dags, g.adj) {
+        println!("P(G* | D) = {:.4}", posterior[gi]);
+    }
+
+    let env = BayesNetEnv::new(d, table.clone());
+    let art = Artifact::load(&artifacts_dir(), "bayesnet_d5.mdb")?;
+    let rc = run_config("bayesnet_d5", "mdb");
+    let mut trainer = Trainer::new(&env, &art, args.get_u64("seed"), rc.explore)?;
+
+    let table_ref = &table;
+    let extra = ExtraSource::StateLogReward(&move |s: &BayesNetState, i: usize| {
+        table_ref.log_score(s.adj[i])
+    });
+
+    let mut counter = TerminalCounter::new(dags.len(), rc.fifo_window);
+    let iters = args.get_u64("iters");
+    for i in 0..=iters {
+        let (stats, objs) = trainer.train_iter(&extra)?;
+        for o in &objs {
+            if let Some(idx) = dag_index(&dags, *o) {
+                counter.push(idx);
+            }
+        }
+        if i % (iters / 6).max(1) == 0 {
+            let jsd = jsd_from_counts(&posterior, counter.counts());
+            println!("iter {i:5}  mdb-loss {:9.4}  JSD {jsd:.4}", stats.loss);
+        }
+    }
+
+    // Structural feature marginals: learned vs exact (paper eqs. 16–18).
+    let total: u64 = counter.counts().iter().sum();
+    let emp: Vec<f64> = counter.counts().iter().map(|&c| c as f64 / total as f64).collect();
+    for (name, f) in [
+        ("edge", edge_marginals as fn(&[u64], &[f64], usize) -> Vec<f64>),
+        ("path", path_marginals),
+        ("markov-blanket", markov_blanket_marginals),
+    ] {
+        let m_exact = f(&dags, &posterior, d);
+        let m_emp = f(&dags, &emp, d);
+        println!(
+            "{name:15} marginal correlation: {:.4}",
+            marginal_correlation(&m_exact, &m_emp, d)
+        );
+    }
+    println!("bayes_structure OK");
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! End-to-end system driver (DESIGN.md §End-to-end validation).
+//!
+//! Trains the transformer policy on the bit-sequence environment — the full
+//! three-layer stack under real load:
+//!
+//!   L3 rust: vectorized non-autoregressive env, mode-set reward, ε-explore,
+//!            FIFO metrics, Pearson-correlation eval with MC backward P̂_θ;
+//!   L2 jax : transformer encoder + TB objective + Adam, one fused HLO;
+//!   L1     : fused masked log-softmax over the position×token action space.
+//!
+//! Logs the loss curve and the reward-correlation metric; the run recorded
+//! in EXPERIMENTS.md §E2E comes from this binary.
+//!
+//! Run: `cargo run --release --example e2e_train -- [--iters N]`
+
+use gfnx::coordinator::config::artifacts_dir;
+use gfnx::coordinator::eval::reward_correlation;
+use gfnx::coordinator::explore::EpsSchedule;
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::data::modes::generate_test_set;
+use gfnx::envs::bitseq::{bitseq_env, test_set_tokens, BitSeqConfig};
+use gfnx::envs::VecEnv;
+use gfnx::runtime::Artifact;
+use gfnx::util::cli::Cli;
+use gfnx::util::logging::MetricsLog;
+use gfnx::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("e2e_train", "end-to-end bitseq training driver")
+        .flag("iters", "600", "training iterations")
+        .flag("seed", "0", "rng seed")
+        .flag("log", "runs/e2e_train.jsonl", "JSONL metrics path")
+        .parse();
+    let iters = args.get_u64("iters");
+    let seed = args.get_u64("seed");
+
+    let cfg = BitSeqConfig::small();
+    let (env, modes) = bitseq_env(cfg);
+    let spec = env.spec();
+    println!(
+        "bitseq n={} k={}: obs_dim={} actions={} t_max={} modes={}",
+        cfg.n_bits, cfg.k, spec.obs_dim, spec.n_actions, spec.t_max, modes.len()
+    );
+
+    let art = Artifact::load(&artifacts_dir(), "bitseq_small.tb")?;
+    let n_params: usize = art.manifest.params.iter().map(|p| p.element_count()).sum();
+    println!("transformer parameters: {n_params}");
+
+    // Evaluation test set: per paper §B.2 — every mode with 0..n bit flips.
+    let mut rng = Rng::new(seed ^ 0xEE);
+    let test_bits = generate_test_set(&modes, &mut rng);
+    let test = test_set_tokens(cfg, &test_bits);
+    // Budget-scale: correlate on a subsample.
+    let test: Vec<_> = test.into_iter().step_by(3).collect();
+    println!("correlation test set: {} sequences", test.len());
+
+    let mut trainer = Trainer::new(&env, &art, seed, EpsSchedule::Constant(1e-3))?;
+    let mut log = MetricsLog::to_file("e2e_train", std::path::Path::new(args.get("log")))?;
+
+    let eval_every = (iters / 6).max(1);
+    for i in 0..=iters {
+        let (stats, _objs) = trainer.train_iter(&ExtraSource::None)?;
+        if i % 25 == 0 {
+            log.log(i, &[
+                ("loss", stats.loss as f64),
+                ("logZ", stats.log_z as f64),
+                ("mean_log_reward", stats.mean_log_reward),
+            ]);
+        }
+        if i % eval_every == 0 {
+            let corr = reward_correlation(
+                &env,
+                &art,
+                &trainer.state,
+                &mut trainer.ctx,
+                &mut trainer.rng,
+                &test,
+                4,
+            )?;
+            log.log(i, &[("pearson_corr", corr)]);
+            println!(
+                "iter {i:5}  loss {:9.4}  logZ {:7.3}  E[logR] {:7.3}  corr {corr:.3}",
+                stats.loss, stats.log_z, stats.mean_log_reward
+            );
+        }
+    }
+
+    // Final check: the policy's samples should concentrate near modes.
+    let mut dist_sum = 0u32;
+    let mut n = 0u32;
+    for _ in 0..20 {
+        for obj in trainer.sample_objs()? {
+            dist_sum += env.reward.min_distance(&obj);
+            n += 1;
+        }
+    }
+    let mean_dist = dist_sum as f64 / n as f64;
+    println!(
+        "mean Hamming distance to nearest mode over {n} samples: {mean_dist:.2} / {} bits",
+        cfg.n_bits
+    );
+    println!("e2e_train OK");
+    Ok(())
+}

@@ -1,0 +1,220 @@
+"""AOT lowering driver (build-time entry point).
+
+For each requested (config, loss) pair, writes to ``artifacts/``:
+
+- ``<name>.policy.hlo.txt`` — the batched policy evaluation graph
+- ``<name>.train.hlo.txt``  — the fused rollout-loss-grad-Adam step
+- ``<name>.manifest.json``  — tensor specs + io ordering for both graphs
+- ``<name>.params.bin``     — concatenated little-endian f32 initial
+                              params + Adam state, in manifest order
+
+HLO **text** is the interchange format (not ``.serialize()``): jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids that the xla_extension
+0.5.1 backing the Rust ``xla`` crate rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+  python -m compile.aot --config hypergrid_small --loss tb --out ../artifacts
+  python -m compile.aot --preset default --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, LOSSES, get_config
+from .model import (
+    example_batch,
+    example_policy_inputs,
+    make_full_state,
+    make_policy_fn,
+    make_train_step_fn,
+    param_order,
+)
+
+# The artifact sets built by `make artifacts` (budget-scaled: small versions
+# of every env family so the full rust test/bench suite runs on CPU).
+PRESETS = {
+    "default": [
+        ("hypergrid_small", "tb"),
+        ("hypergrid_small", "db"),
+        ("hypergrid_small", "subtb"),
+        ("hypergrid_2d_20", "tb"),
+        ("hypergrid_2d_20", "db"),
+        ("hypergrid_2d_20", "subtb"),
+        ("hypergrid_4d_20", "tb"),
+        ("hypergrid_4d_20", "db"),
+        ("hypergrid_4d_20", "subtb"),
+        ("hypergrid_8d_10", "tb"),
+        ("hypergrid_8d_10", "db"),
+        ("hypergrid_8d_10", "subtb"),
+        ("bitseq_small", "tb"),
+        ("bitseq_small", "db"),
+        ("tfbind8", "tb"),
+        ("qm9", "tb"),
+        ("amp_small", "tb"),
+        ("phylo_small", "fldb"),
+        ("bayesnet_d5", "mdb"),
+        ("ising_small", "tb"),
+    ],
+    # Paper-scale additions (slower to build; used by --paper-scale benches).
+    "paper": [
+        ("bitseq_120_8", "tb"),
+        ("bitseq_120_8", "db"),
+        ("amp", "tb"),
+        ("ising_n9", "tb"),
+        ("ising_n10", "tb"),
+    ]
+    + [(f"phylo_ds{i}", "fldb") for i in range(1, 9)],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def tensor_spec(name: str, arr) -> dict:
+    dt = {"float32": "f32", "int32": "i32"}[str(arr.dtype)]
+    return {"name": name, "shape": list(arr.shape), "dtype": dt}
+
+
+def build_artifact(config_name: str, loss: str, out_dir: str, seed: int) -> str:
+    cfg = get_config(config_name)
+    assert loss in LOSSES
+    name = f"{config_name}.{loss}"
+    params, m, v, t = make_full_state(cfg, seed)
+    names = param_order(params)
+
+    # --- Lower the policy graph. --------------------------------------
+    policy_fn = make_policy_fn(cfg, names)
+    policy_in = tuple(jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params.values())
+    policy_in += example_policy_inputs(cfg)
+    policy_lowered = jax.jit(policy_fn).lower(*policy_in)
+    policy_hlo = to_hlo_text(policy_lowered)
+
+    # --- Lower the train step. -----------------------------------------
+    train_fn = make_train_step_fn(cfg, loss, names)
+    state_in = tuple(jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params.values())
+    state_in += tuple(jax.ShapeDtypeStruct(p.shape, p.dtype) for p in m.values())
+    state_in += tuple(jax.ShapeDtypeStruct(p.shape, p.dtype) for p in v.values())
+    state_in += (jax.ShapeDtypeStruct(t.shape, t.dtype),)
+    train_in = state_in + example_batch(cfg)
+    train_lowered = jax.jit(train_fn).lower(*train_in)
+    train_hlo = to_hlo_text(train_lowered)
+
+    # --- Serialize initial state. ---------------------------------------
+    blob = bytearray()
+    offsets = []
+    for group, leaves in (("param", params), ("m", m), ("v", v)):
+        for k in names:
+            arr = np.asarray(leaves[k], dtype=np.float32)
+            offsets.append(
+                {"group": group, "name": k, "offset": len(blob), "shape": list(arr.shape)}
+            )
+            blob += arr.tobytes()  # little-endian on every supported host
+    t_arr = np.asarray(t, dtype=np.float32)
+    offsets.append({"group": "t", "name": "t", "offset": len(blob), "shape": list(t_arr.shape)})
+    blob += t_arr.tobytes()
+
+    # --- Manifest. --------------------------------------------------------
+    batch_specs = [
+        {"name": n, "shape": list(s.shape), "dtype": {np.dtype("float32"): "f32", np.dtype("int32"): "i32"}[np.dtype(s.dtype)]}
+        for n, s in zip(
+            ["obs", "fwd_actions", "bwd_actions", "fwd_masks", "bwd_masks", "length", "log_reward", "extra"],
+            example_batch(cfg),
+        )
+    ]
+    manifest = {
+        "name": name,
+        "config": {
+            "config_name": config_name,
+            "loss": loss,
+            "obs_dim": cfg.obs_dim,
+            "n_actions": cfg.n_actions,
+            "n_bwd_actions": cfg.n_bwd_actions,
+            "t_max": cfg.t_max,
+            "batch": cfg.batch,
+            "uniform_pb": cfg.uniform_pb,
+            "seed": seed,
+        },
+        "params": [tensor_spec(k, params[k]) for k in names],
+        "policy": {
+            "file": f"{name}.policy.hlo.txt",
+            "inputs": [tensor_spec(k, params[k]) for k in names]
+            + [
+                {"name": "obs", "shape": [cfg.batch, cfg.obs_dim], "dtype": "f32"},
+                {"name": "fwd_mask", "shape": [cfg.batch, cfg.n_actions], "dtype": "f32"},
+                {"name": "bwd_mask", "shape": [cfg.batch, cfg.n_bwd_actions], "dtype": "f32"},
+            ],
+            "outputs": [
+                {"name": "fwd_logp", "shape": [cfg.batch, cfg.n_actions], "dtype": "f32"},
+                {"name": "bwd_logp", "shape": [cfg.batch, cfg.n_bwd_actions], "dtype": "f32"},
+                {"name": "log_flow", "shape": [cfg.batch], "dtype": "f32"},
+            ],
+        },
+        "train": {
+            "file": f"{name}.train.hlo.txt",
+            "state": [tensor_spec(k, params[k]) for k in names]
+            + [tensor_spec(f"m.{k}", m[k]) for k in names]
+            + [tensor_spec(f"v.{k}", v[k]) for k in names]
+            + [{"name": "t", "shape": [1], "dtype": "f32"}],
+            "batch": batch_specs,
+            "extra_outputs": [
+                {"name": "loss", "shape": [], "dtype": "f32"},
+                {"name": "logZ", "shape": [], "dtype": "f32"},
+            ],
+        },
+        "init_blob": {"file": f"{name}.params.bin", "layout": offsets},
+    }
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{name}.policy.hlo.txt"), "w") as f:
+        f.write(policy_hlo)
+    with open(os.path.join(out_dir, f"{name}.train.hlo.txt"), "w") as f:
+        f.write(train_hlo)
+    with open(os.path.join(out_dir, f"{name}.params.bin"), "wb") as f:
+        f.write(bytes(blob))
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", help="config name (see configs.py)")
+    ap.add_argument("--loss", default="tb", choices=LOSSES)
+    ap.add_argument("--preset", help="build a named preset set", choices=sorted(PRESETS))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    jobs = []
+    if args.preset:
+        jobs += PRESETS[args.preset]
+    if args.config:
+        jobs.append((args.config, args.loss))
+    if not jobs:
+        ap.error("need --config or --preset")
+
+    for config_name, loss in jobs:
+        # Skip existing artifacts (make-style no-op rebuilds).
+        marker = os.path.join(args.out, f"{config_name}.{loss}.manifest.json")
+        if os.path.exists(marker):
+            print(f"[aot] {config_name}.{loss} up to date")
+            continue
+        name = build_artifact(config_name, loss, args.out, args.seed)
+        print(f"[aot] built {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Named experiment configurations (Layer 2).
+
+Each config fixes every shape the AOT artifacts bake in: observation dim,
+action counts, padded trajectory length, batch size, network architecture
+and optimizer hyperparameters. The Rust coordinator mirrors these in
+``rust/src/coordinator/config.rs``; integration tests cross-check the two
+via the artifact manifest.
+
+Shapes must agree with the Rust env specs (``rust/src/envs``):
+  obs_dim / n_actions / n_bwd_actions / t_max per environment family.
+"""
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    kind: str = "mlp"  # "mlp" | "transformer"
+    hidden: int = 256
+    n_layers: int = 2
+    # Transformer-only fields: obs is reshaped to [seq_len, token_dim].
+    seq_len: int = 0
+    token_dim: int = 0
+    n_heads: int = 8
+    embed: int = 64
+    ff_hidden: int = 128
+
+
+@dataclass(frozen=True)
+class Config:
+    name: str
+    obs_dim: int
+    n_actions: int
+    n_bwd_actions: int
+    t_max: int
+    batch: int = 16
+    net: NetConfig = field(default_factory=NetConfig)
+    lr: float = 1e-3
+    z_lr: float = 1e-1
+    weight_decay: float = 0.0
+    subtb_lambda: float = 0.9
+    uniform_pb: bool = True
+    # Learning-rate schedule: "const" | "cosine" (cosine needs total_steps).
+    lr_schedule: str = "const"
+    total_steps: int = 100_000
+
+    @property
+    def t1(self) -> int:
+        return self.t_max + 1
+
+
+def _hypergrid(name: str, d: int, h: int, **kw) -> Config:
+    return Config(
+        name=name,
+        obs_dim=d * h,
+        n_actions=d + 1,
+        n_bwd_actions=d,
+        t_max=d * (h - 1) + 1,
+        net=NetConfig(kind="mlp", hidden=256, n_layers=2),
+        lr=1e-3,
+        z_lr=1e-1,
+        **kw,
+    )
+
+
+def _seq_transformer(
+    name: str, seq_len: int, vocab: int, n_actions: int, n_bwd: int, t_max: int, **kw
+) -> Config:
+    return Config(
+        name=name,
+        obs_dim=seq_len * (vocab + 1),
+        n_actions=n_actions,
+        n_bwd_actions=n_bwd,
+        t_max=t_max,
+        net=NetConfig(
+            kind="transformer",
+            seq_len=seq_len,
+            token_dim=vocab + 1,
+            n_layers=3,
+            n_heads=8,
+            embed=64,
+            ff_hidden=128,
+        ),
+        **kw,
+    )
+
+
+def _phylo(name: str, n_species: int, n_sites: int, **kw) -> Config:
+    slot_dim = 1 + 4 * n_sites
+    return Config(
+        name=name,
+        obs_dim=n_species * slot_dim,
+        n_actions=n_species * (n_species - 1) // 2,
+        n_bwd_actions=n_species,
+        t_max=n_species - 1,
+        net=NetConfig(
+            kind="transformer",
+            seq_len=n_species,
+            token_dim=slot_dim,
+            n_layers=3,
+            n_heads=8,
+            embed=64,
+            ff_hidden=128,
+        ),
+        lr=3e-4,
+        **kw,
+    )
+
+
+def _ising(name: str, n: int, **kw) -> Config:
+    d = n * n
+    return Config(
+        name=name,
+        obs_dim=2 * d,
+        n_actions=2 * d,
+        n_bwd_actions=d,
+        t_max=d,
+        net=NetConfig(kind="mlp", hidden=256, n_layers=4),
+        **kw,
+    )
+
+
+def _phylo_ds(ds: int) -> Config:
+    # Mirrors rust/src/data/phylo_data.rs::ds_config.
+    dims = {1: (8, 32), 2: (10, 32), 3: (12, 40), 4: (12, 48),
+            5: (14, 48), 6: (16, 48), 7: (18, 64), 8: (20, 64)}
+    n, m = dims[ds]
+    return _phylo(f"phylo_ds{ds}", n, m, batch=16)
+
+
+CONFIGS = {
+    # Hypergrids (Table 1, Table 2, Fig. 2).
+    "hypergrid_small": _hypergrid("hypergrid_small", 2, 8),
+    "hypergrid_2d_20": _hypergrid("hypergrid_2d_20", 2, 20),
+    "hypergrid_4d_20": _hypergrid("hypergrid_4d_20", 4, 20),
+    "hypergrid_8d_10": _hypergrid("hypergrid_8d_10", 8, 10),
+    # Bit sequences (Table 1, Fig. 3): non-autoregressive, L = n/k tokens,
+    # vocab 2^k, actions L·2^k, bwd L.
+    "bitseq_small": _seq_transformer(
+        "bitseq_small", 6, 16, 6 * 16, 6, 6, lr=1e-3, weight_decay=1e-5
+    ),
+    "bitseq_120_8": _seq_transformer(
+        "bitseq_120_8", 15, 256, 15 * 256, 15, 15, lr=1e-3, weight_decay=1e-5
+    ),
+    # TFBind8 / QM9 (Table 1, Fig. 4): MLP 2×256 (paper Table 4).
+    "tfbind8": Config(
+        name="tfbind8", obs_dim=8 * 5, n_actions=4, n_bwd_actions=1, t_max=8,
+        net=NetConfig(kind="mlp", hidden=256, n_layers=2), lr=5e-4, z_lr=0.05,
+    ),
+    "qm9": Config(
+        name="qm9", obs_dim=5 * 12, n_actions=22, n_bwd_actions=2, t_max=5,
+        net=NetConfig(kind="mlp", hidden=256, n_layers=2), lr=5e-4, z_lr=0.05,
+    ),
+    # AMP (Table 1, Fig. 5): transformer 3×64 (paper Table 5).
+    "amp_small": _seq_transformer(
+        "amp_small", 8, 20, 21, 1, 9, lr=1e-3, weight_decay=1e-5
+    ),
+    "amp": _seq_transformer(
+        "amp", 60, 20, 21, 1, 61, lr=1e-3, weight_decay=1e-5
+    ),
+    # Phylogenetics DS1–DS8 (Table 1, Fig. 6), scaled sizes.
+    **{f"phylo_ds{i}": _phylo_ds(i) for i in range(1, 9)},
+    "phylo_small": _phylo("phylo_small", 6, 8, batch=8),
+    # Bayesian structure learning (Table 1, Fig. 7), d = 5.
+    "bayesnet_d5": Config(
+        name="bayesnet_d5", obs_dim=25, n_actions=26, n_bwd_actions=25,
+        t_max=11, batch=128, net=NetConfig(kind="mlp", hidden=128, n_layers=2),
+        lr=1e-4, uniform_pb=True,
+    ),
+    # Ising (Table 1, Table 8): MLP depth 4, hidden 256 (paper Table 9).
+    "ising_small": _ising("ising_small", 3, batch=16),
+    "ising_n9": _ising("ising_n9", 9, batch=256),
+    "ising_n10": _ising("ising_n10", 10, batch=256),
+}
+
+LOSSES = ("tb", "db", "subtb", "fldb", "mdb")
+
+
+def get_config(name: str) -> Config:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown config {name!r}; known: {sorted(CONFIGS)}")
+    return CONFIGS[name]
+
+
+def with_batch(cfg: Config, batch: int) -> Config:
+    return replace(cfg, batch=batch)

@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels.
+
+Every kernel here is the compute hot-spot of the GFlowNet objectives:
+
+- ``masked_softmax.masked_log_softmax`` — fused action-mask + log-softmax
+  over policy logits. Called once per state per objective term, i.e. the
+  single most-executed op in training.
+- ``dense.dense`` — fused matmul + bias + activation tile kernel used for
+  the MLP policy trunk.
+
+Kernels are lowered with ``interpret=True`` (the CPU PJRT plugin cannot run
+Mosaic custom-calls; see DESIGN.md §Hardware-Adaptation) but are written
+TPU-shaped: (8, 128)-aligned VMEM blocks and MXU-sized matmul tiles.
+Correctness oracles live in ``ref.py`` and are enforced by the pytest +
+hypothesis suite.
+"""
+
+from . import ref  # noqa: F401
+from .dense import dense  # noqa: F401
+from .masked_softmax import masked_log_softmax  # noqa: F401

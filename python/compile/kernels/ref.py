@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+These are deliberately written with textbook jnp ops only — no pallas, no
+tricks — so the pytest/hypothesis suite can assert the kernels against them.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative stand-in for -inf that keeps grads finite
+
+
+def masked_log_softmax_ref(logits: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise log-softmax restricted to ``mask != 0`` entries.
+
+    Masked-out entries return ``NEG_INF`` (not -inf, so that downstream
+    gathers of illegal actions stay finite; the trainer never selects them).
+
+    Args:
+      logits: [..., A] float array.
+      mask:   [..., A] {0,1} float array, at least one legal entry per row.
+    Returns:
+      [..., A] log-probabilities (legal entries sum to 1 in prob space).
+    """
+    masked = jnp.where(mask != 0, logits, NEG_INF)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    shifted = masked - m
+    lse = jnp.log(jnp.sum(jnp.where(mask != 0, jnp.exp(shifted), 0.0), axis=-1, keepdims=True))
+    out = shifted - lse
+    return jnp.where(mask != 0, out, NEG_INF)
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, act: str = "relu") -> jnp.ndarray:
+    """y = act(x @ w + b). ``act`` ∈ {"relu", "tanh", "none"}."""
+    y = x @ w + b
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "none":
+        return y
+    raise ValueError(f"unknown activation {act!r}")

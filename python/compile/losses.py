@@ -1,0 +1,116 @@
+"""GFlowNet training objectives over padded trajectory batches (Layer 2).
+
+All losses consume the same pre-gathered tensors:
+
+- ``fwd_lp``  [B, T]  — log P_F(s_{t+1} | s_t) of the taken actions
+- ``bwd_lp``  [B, T]  — log P_B(s_t | s_{t+1}) of the matching backward actions
+- ``log_f``   [B, T1] — log-flow head at every state (T1 = T + 1)
+- ``log_reward`` [B]  — terminal log-reward
+- ``length`` [B]      — number of real transitions per trajectory
+- ``extra``  [B, T1]  — per-state energies (FLDB) or per-transition delta
+                        scores in ``extra[:, :T]`` (MDB); zeros otherwise
+- ``stop_lp`` [B, T1] — log P_F(stop | s_t) at every state (MDB only)
+
+Transitions with t ≥ length are padding and contribute nothing. Formulas are
+paper eqs. (3)–(5), (7) and the Modified DB objective of Deleu et al. 2022.
+"""
+
+import jax.numpy as jnp
+
+
+def _valid_t(length: jnp.ndarray, t: int) -> jnp.ndarray:  # pragma: no cover
+    raise NotImplementedError
+
+
+def _transition_mask(length, T):
+    # [B, T]: 1 where t < length.
+    t_idx = jnp.arange(T)[None, :]
+    return (t_idx < length[:, None]).astype(jnp.float32)
+
+
+def tb_loss(log_z, fwd_lp, bwd_lp, log_reward, length):
+    """Trajectory Balance (eq. 4): (logZ + Σ logP_F − logR − Σ logP_B)²."""
+    m = _transition_mask(length, fwd_lp.shape[1])
+    s_fwd = jnp.sum(fwd_lp * m, axis=1)
+    s_bwd = jnp.sum(bwd_lp * m, axis=1)
+    resid = log_z + s_fwd - log_reward - s_bwd
+    return jnp.mean(resid**2)
+
+
+def db_loss(log_f, fwd_lp, bwd_lp, log_reward, length):
+    """Detailed Balance (eq. 3), with F(s_T) ≡ R at the terminal state."""
+    B, T = fwd_lp.shape
+    m = _transition_mask(length, T)
+    # log F at s_t (t < T) and s_{t+1}; replace the entering-terminal flow
+    # (t == length-1) by log R.
+    f_t = log_f[:, :T]
+    f_next = log_f[:, 1:]
+    t_idx = jnp.arange(T)[None, :]
+    is_last = (t_idx == (length[:, None] - 1)).astype(jnp.float32)
+    f_next = f_next * (1.0 - is_last) + log_reward[:, None] * is_last
+    resid = (f_t + fwd_lp - f_next - bwd_lp) * m
+    return jnp.sum(resid**2) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def subtb_loss(log_f, fwd_lp, bwd_lp, log_reward, length, lam: float):
+    """Sub-Trajectory Balance (eq. 5) with λ^{k−j} weights normalized per
+    trajectory; F(s_length) ≡ R."""
+    B, T = fwd_lp.shape
+    T1 = T + 1
+    m = _transition_mask(length, T)
+    # Prefix sums of (logP_F − logP_B): cum[:, k] = Σ_{t<k}.
+    diff = (fwd_lp - bwd_lp) * m
+    cum = jnp.concatenate([jnp.zeros((B, 1)), jnp.cumsum(diff, axis=1)], axis=1)  # [B,T1]
+    # Flow with terminal substitution at k == length.
+    k_idx = jnp.arange(T1)[None, :]
+    at_term = (k_idx == length[:, None]).astype(jnp.float32)
+    f = log_f * (1.0 - at_term) + log_reward[:, None] * at_term  # [B, T1]
+    # Pairwise residuals A[b,j,k] = f_j − f_k + (cum_k − cum_j).
+    a = f[:, :, None] - f[:, None, :] + (cum[:, None, :] - cum[:, :, None])
+    # Weights λ^{k−j} on valid pairs j < k ≤ length.
+    j_idx = jnp.arange(T1)[:, None]
+    k2 = jnp.arange(T1)[None, :]
+    pair_valid = (j_idx < k2).astype(jnp.float32)[None, :, :] * (
+        k2[None, :, :] <= length[:, None, None]
+    ).astype(jnp.float32)
+    w = (lam ** jnp.maximum(k2 - j_idx, 0).astype(jnp.float32))[None, :, :] * pair_valid
+    w = w / jnp.maximum(jnp.sum(w, axis=(1, 2), keepdims=True), 1e-9)
+    return jnp.mean(jnp.sum(w * a**2, axis=(1, 2)))
+
+
+def fldb_loss(log_ftilde, fwd_lp, bwd_lp, energy, length):
+    """Forward-Looking DB (eq. 7): residual
+    log F̃(s) + logP_F − log F̃(s') − logP_B + E(s') − E(s),
+    with F̃(terminal) ≡ 1 (log F̃ = 0)."""
+    B, T = fwd_lp.shape
+    m = _transition_mask(length, T)
+    t_idx = jnp.arange(T)[None, :]
+    is_last = (t_idx == (length[:, None] - 1)).astype(jnp.float32)
+    f_t = log_ftilde[:, :T]
+    f_next = log_ftilde[:, 1:] * (1.0 - is_last)  # terminal: log F̃ = 0
+    de = energy[:, 1:] - energy[:, :T]
+    resid = (f_t + fwd_lp - f_next - bwd_lp + de) * m
+    return jnp.sum(resid**2) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def mdb_loss(fwd_lp, bwd_lp, stop_lp, delta_score, length):
+    """Modified DB for every-state-terminal DAGs (Deleu et al. 2022):
+    residual over non-stop transitions t < length − 1:
+
+      Δscore(s_t→s_{t+1}) + logP_B(s_t|s_{t+1}) + logP_F(stop|s_t)
+        − logP_F(s_{t+1}|s_t) − logP_F(stop|s_{t+1})
+
+    where Δscore = log R(s_{t+1}) − log R(s_t) (the delta-score trick,
+    paper eq. (13)).
+    """
+    B, T = fwd_lp.shape
+    t_idx = jnp.arange(T)[None, :]
+    m = (t_idx < (length[:, None] - 1)).astype(jnp.float32)
+    resid = (
+        delta_score[:, :T]
+        + bwd_lp
+        + stop_lp[:, :T]
+        - fwd_lp
+        - stop_lp[:, 1:]
+    ) * m
+    return jnp.sum(resid**2) / jnp.maximum(jnp.sum(m), 1.0)

@@ -1,0 +1,233 @@
+"""Layer-2 graph assembly: builds the two functions each artifact exports.
+
+- ``policy_fwd(params…, obs, fwd_mask, bwd_mask)``
+    → ``(fwd_logp, bwd_logp, log_flow)``
+  One batched policy evaluation; log-probs are already masked+normalized
+  in-graph by the Layer-1 fused masked log-softmax kernel, so the Rust
+  rollout only has to Gumbel-sample from them.
+
+- ``train_step(params…, m…, v…, t, batch…)``
+    → ``(params'…, m'…, v'…, t', loss, logZ)``
+  Re-runs the policy over every state of a padded trajectory batch, applies
+  one of the five objectives, takes Adam(W) step — a single fused HLO
+  module, so one PJRT dispatch per training iteration.
+
+Parameters travel as a flat, deterministically-ordered list of leaves; the
+order is recorded in the artifact manifest (see ``aot.py``) and mirrored by
+the Rust runtime.
+"""
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import Config
+from .kernels.masked_softmax import masked_log_softmax
+from .losses import db_loss, fldb_loss, mdb_loss, subtb_loss, tb_loss
+from .models.mlp import init_mlp, mlp_apply
+from .models.transformer import init_transformer, transformer_apply
+from .optim import adam_update, init_opt_state
+
+
+def init_params(cfg: Config, seed: int) -> Dict[str, jnp.ndarray]:
+    key = jax.random.PRNGKey(seed)
+    net = cfg.net
+    if net.kind == "mlp":
+        return init_mlp(key, cfg.obs_dim, net.hidden, net.n_layers, cfg.n_actions, cfg.n_bwd_actions)
+    if net.kind == "transformer":
+        return init_transformer(
+            key, net.seq_len, net.token_dim, net.embed, net.n_layers, net.n_heads,
+            net.ff_hidden, cfg.n_actions, cfg.n_bwd_actions,
+        )
+    raise ValueError(f"unknown net kind {net.kind!r}")
+
+
+def param_order(params: Dict[str, jnp.ndarray]) -> List[str]:
+    """Deterministic leaf order (insertion order of the init functions)."""
+    return list(params.keys())
+
+
+def _trunk_apply(cfg: Config, params, obs):
+    net = cfg.net
+    if net.kind == "mlp":
+        return mlp_apply(params, obs, net.n_layers)
+    return transformer_apply(params, obs, net.seq_len, net.token_dim, net.n_layers, net.n_heads)
+
+
+def apply_policy(cfg: Config, params, obs, fwd_mask, bwd_mask):
+    """(fwd_logp [B,A], bwd_logp [B,A'], log_flow [B]) with in-graph masking."""
+    fwd_logits, bwd_logits, log_flow = _trunk_apply(cfg, params, obs)
+    fwd_logp = masked_log_softmax(fwd_logits, fwd_mask)
+    if cfg.uniform_pb:
+        # Uniform backward policy over legal parents: log(1/count).
+        cnt = jnp.maximum(jnp.sum(bwd_mask, axis=-1, keepdims=True), 1.0)
+        bwd_logp = jnp.where(bwd_mask != 0, -jnp.log(cnt), -1e30)
+    else:
+        bwd_logp = masked_log_softmax(bwd_logits, bwd_mask)
+    return fwd_logp, bwd_logp, log_flow
+
+
+def make_policy_fn(cfg: Config, names: List[str]):
+    """Flat-signature policy function for AOT lowering.
+
+    Every parameter leaf is anchored into the outputs with a zero-weight
+    term: under `uniform_pb` the backward head and `logZ` are otherwise
+    dead, and JAX would prune them from the lowered signature — breaking
+    the manifest's input arity contract with the Rust runtime.
+    """
+
+    def policy(*args):
+        params = dict(zip(names, args[: len(names)]))
+        obs, fwd_mask, bwd_mask = args[len(names):]
+        fwd_logp, bwd_logp, log_flow = apply_policy(cfg, params, obs, fwd_mask, bwd_mask)
+        anchor = sum(jnp.reshape(p, (-1,))[0] for p in params.values()) * 0.0
+        return fwd_logp + anchor, bwd_logp + anchor, log_flow + anchor
+
+    return policy
+
+
+def _gather_lp(logp: jnp.ndarray, actions: jnp.ndarray) -> jnp.ndarray:
+    """logp [B,T,A], actions [B,T] (may contain -1 padding → clipped)."""
+    a = jnp.clip(actions, 0, logp.shape[-1] - 1)
+    return jnp.take_along_axis(logp, a[..., None], axis=-1)[..., 0]
+
+
+def loss_from_batch(
+    cfg: Config,
+    loss_name: str,
+    params,
+    obs,          # [B, T1, O]
+    fwd_actions,  # [B, T] i32
+    bwd_actions,  # [B, T] i32
+    fwd_masks,    # [B, T1, A]
+    bwd_masks,    # [B, T1, A']
+    length,       # [B] i32
+    log_reward,   # [B]
+    extra,        # [B, T1]
+):
+    b, t1, o = obs.shape
+    t = t1 - 1
+    flat_obs = obs.reshape(b * t1, o)
+    fwd_logp, bwd_logp, log_flow = apply_policy(
+        cfg, params,
+        flat_obs,
+        fwd_masks.reshape(b * t1, -1),
+        bwd_masks.reshape(b * t1, -1),
+    )
+    fwd_logp = fwd_logp.reshape(b, t1, -1)
+    bwd_logp = bwd_logp.reshape(b, t1, -1)
+    log_flow = log_flow.reshape(b, t1)
+    lenf = length.astype(jnp.float32)
+
+    # Per-transition gathers: P_F at s_t, P_B at s_{t+1}.
+    f_lp = _gather_lp(fwd_logp[:, :t, :], fwd_actions)
+    b_lp = _gather_lp(bwd_logp[:, 1:, :], bwd_actions)
+
+    if loss_name == "tb":
+        return tb_loss(params["logZ"][0], f_lp, b_lp, log_reward, lenf)
+    if loss_name == "db":
+        return db_loss(log_flow, f_lp, b_lp, log_reward, lenf)
+    if loss_name == "subtb":
+        return subtb_loss(log_flow, f_lp, b_lp, log_reward, lenf, cfg.subtb_lambda)
+    if loss_name == "fldb":
+        return fldb_loss(log_flow, f_lp, b_lp, extra, lenf)
+    if loss_name == "mdb":
+        stop_lp = fwd_logp[:, :, cfg.n_actions - 1]
+        return mdb_loss(f_lp, b_lp, stop_lp, extra, lenf)
+    raise ValueError(f"unknown loss {loss_name!r}")
+
+
+def make_train_step_fn(cfg: Config, loss_name: str, names: List[str]):
+    """Flat-signature train step for AOT lowering.
+
+    Argument layout (all positional):
+      params ×P, m ×P, v ×P, t,
+      obs, fwd_actions, bwd_actions, fwd_masks, bwd_masks, length,
+      log_reward, extra
+    Returns: params' ×P, m' ×P, v' ×P, t', loss, logZ.
+    """
+    p = len(names)
+
+    def train_step(*args):
+        params = dict(zip(names, args[:p]))
+        m = dict(zip(names, args[p : 2 * p]))
+        v = dict(zip(names, args[2 * p : 3 * p]))
+        t = args[3 * p]
+        (obs, fwd_actions, bwd_actions, fwd_masks, bwd_masks, length, log_reward, extra) = args[
+            3 * p + 1 :
+        ]
+
+        def lf(ps):
+            loss = loss_from_batch(
+                cfg, loss_name, ps, obs, fwd_actions, bwd_actions,
+                fwd_masks, bwd_masks, length, log_reward, extra,
+            )
+            # Anchor every batch input (and every param leaf) into the loss
+            # with zero weight: objectives that ignore a tensor (TB ignores
+            # `extra`, MDB ignores `log_reward`, …) would otherwise have it
+            # pruned from the lowered signature, breaking the manifest's
+            # arity contract with the Rust runtime.
+            anchor_f = (
+                jnp.reshape(obs, (-1,))[0]
+                + jnp.reshape(fwd_masks, (-1,))[0]
+                + jnp.reshape(bwd_masks, (-1,))[0]
+                + log_reward[0]
+                + jnp.reshape(extra, (-1,))[0]
+            )
+            anchor_i = (
+                jnp.reshape(fwd_actions, (-1,))[0]
+                + jnp.reshape(bwd_actions, (-1,))[0]
+                + length[0]
+            ).astype(jnp.float32)
+            anchor_p = sum(jnp.reshape(p, (-1,))[0] for p in ps.values())
+            return loss + 0.0 * (anchor_f + anchor_i + anchor_p)
+
+        loss, grads = jax.value_and_grad(lf)(params)
+        new_params, new_m, new_v, new_t = adam_update(
+            params, grads, m, v, t,
+            lr=cfg.lr, z_lr=cfg.z_lr, weight_decay=cfg.weight_decay,
+            lr_schedule=cfg.lr_schedule, total_steps=cfg.total_steps,
+        )
+        out: Tuple[jnp.ndarray, ...] = tuple(new_params[k] for k in names)
+        out += tuple(new_m[k] for k in names)
+        out += tuple(new_v[k] for k in names)
+        out += (new_t, loss, new_params["logZ"][0])
+        return out
+
+    return train_step
+
+
+def example_batch(cfg: Config):
+    """ShapeDtypeStructs for the train-step batch inputs."""
+    b, t1, t = cfg.batch, cfg.t1, cfg.t1 - 1
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    return (
+        sds((b, t1, cfg.obs_dim), f32),        # obs
+        sds((b, t), i32),                      # fwd_actions
+        sds((b, t), i32),                      # bwd_actions
+        sds((b, t1, cfg.n_actions), f32),      # fwd_masks
+        sds((b, t1, cfg.n_bwd_actions), f32),  # bwd_masks
+        sds((b,), i32),                        # length
+        sds((b,), f32),                        # log_reward
+        sds((b, t1), f32),                     # extra
+    )
+
+
+def example_policy_inputs(cfg: Config):
+    b = cfg.batch
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    return (
+        sds((b, cfg.obs_dim), f32),
+        sds((b, cfg.n_actions), f32),
+        sds((b, cfg.n_bwd_actions), f32),
+    )
+
+
+def make_full_state(cfg: Config, seed: int):
+    """params + adam state, in manifest order."""
+    params = init_params(cfg, seed)
+    m, v, t = init_opt_state(params)
+    return params, m, v, t

@@ -1,0 +1,4 @@
+"""Layer-2 policy networks (pure jnp over flat param dicts)."""
+
+from .mlp import init_mlp, mlp_apply  # noqa: F401
+from .transformer import init_transformer, transformer_apply  # noqa: F401

@@ -1,0 +1,55 @@
+"""MLP policy (paper Tables 3/4/7/9 architectures).
+
+Trunk: ``n_layers`` fused dense+ReLU layers (the Layer-1 Pallas kernel),
+then three heads: forward-action logits, backward-action logits, and a
+scalar log-flow (used by DB/SubTB/FLDB). ``logZ`` is an extra scalar leaf
+consumed by the TB objective.
+
+Parameters are a flat ``{name: array}`` dict with deterministic insertion
+order — the artifact manifest records this order and the Rust runtime
+round-trips it.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.dense import dense
+
+
+def init_mlp(key, obs_dim: int, hidden: int, n_layers: int, n_actions: int, n_bwd: int):
+    """He-initialized parameter dict."""
+    params = {}
+    sizes = [obs_dim] + [hidden] * n_layers
+    keys = jax.random.split(key, n_layers + 3)
+    for i in range(n_layers):
+        fan_in, fan_out = sizes[i], sizes[i + 1]
+        params[f"w{i}"] = jax.random.normal(keys[i], (fan_in, fan_out), jnp.float32) * (
+            2.0 / fan_in
+        ) ** 0.5
+        params[f"b{i}"] = jnp.zeros((fan_out,), jnp.float32)
+    h = sizes[-1]
+    params["head_fwd_w"] = jax.random.normal(keys[-3], (h, n_actions), jnp.float32) * (
+        1.0 / h
+    ) ** 0.5
+    params["head_fwd_b"] = jnp.zeros((n_actions,), jnp.float32)
+    params["head_bwd_w"] = jax.random.normal(keys[-2], (h, n_bwd), jnp.float32) * (
+        1.0 / h
+    ) ** 0.5
+    params["head_bwd_b"] = jnp.zeros((n_bwd,), jnp.float32)
+    params["head_flow_w"] = jax.random.normal(keys[-1], (h, 1), jnp.float32) * (
+        1.0 / h
+    ) ** 0.5
+    params["head_flow_b"] = jnp.zeros((1,), jnp.float32)
+    params["logZ"] = jnp.zeros((1,), jnp.float32)
+    return params
+
+
+def mlp_apply(params, obs: jnp.ndarray, n_layers: int):
+    """obs [B, O] → (fwd_logits [B, A], bwd_logits [B, A'], log_flow [B])."""
+    h = obs
+    for i in range(n_layers):
+        h = dense(h, params[f"w{i}"], params[f"b{i}"], act="relu")
+    fwd = dense(h, params["head_fwd_w"], params["head_fwd_b"], act="none")
+    bwd = dense(h, params["head_bwd_w"], params["head_bwd_b"], act="none")
+    flow = dense(h, params["head_flow_w"], params["head_flow_b"], act="none")[:, 0]
+    return fwd, bwd, flow

@@ -1,0 +1,115 @@
+"""Transformer-encoder policy (paper Tables 4/5/6 architectures).
+
+The flat observation is reshaped to ``[seq_len, token_dim]`` (position-wise
+one-hots for sequence envs, per-slot Fitch profiles for phylogenetics),
+embedded with a linear layer plus learned positional embeddings, passed
+through pre-LN encoder blocks (MHA + FFN with residuals), mean-pooled, and
+fed to the same three heads as the MLP policy. The FFN uses the Layer-1
+fused dense kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.dense import dense
+
+
+def init_transformer(
+    key,
+    seq_len: int,
+    token_dim: int,
+    embed: int,
+    n_layers: int,
+    n_heads: int,
+    ff_hidden: int,
+    n_actions: int,
+    n_bwd: int,
+):
+    assert embed % n_heads == 0
+    params = {}
+    k = iter(jax.random.split(key, 4 + n_layers * 6 + 3))
+    params["embed_w"] = jax.random.normal(next(k), (token_dim, embed), jnp.float32) * (
+        1.0 / token_dim
+    ) ** 0.5
+    params["embed_b"] = jnp.zeros((embed,), jnp.float32)
+    params["pos"] = jax.random.normal(next(k), (seq_len, embed), jnp.float32) * 0.02
+    for l in range(n_layers):
+        params[f"l{l}_qkv_w"] = jax.random.normal(
+            next(k), (embed, 3 * embed), jnp.float32
+        ) * (1.0 / embed) ** 0.5
+        params[f"l{l}_qkv_b"] = jnp.zeros((3 * embed,), jnp.float32)
+        params[f"l{l}_proj_w"] = jax.random.normal(
+            next(k), (embed, embed), jnp.float32
+        ) * (1.0 / embed) ** 0.5
+        params[f"l{l}_proj_b"] = jnp.zeros((embed,), jnp.float32)
+        params[f"l{l}_ff1_w"] = jax.random.normal(
+            next(k), (embed, ff_hidden), jnp.float32
+        ) * (2.0 / embed) ** 0.5
+        params[f"l{l}_ff1_b"] = jnp.zeros((ff_hidden,), jnp.float32)
+        params[f"l{l}_ff2_w"] = jax.random.normal(
+            next(k), (ff_hidden, embed), jnp.float32
+        ) * (1.0 / ff_hidden) ** 0.5
+        params[f"l{l}_ff2_b"] = jnp.zeros((embed,), jnp.float32)
+        params[f"l{l}_ln1_g"] = jnp.ones((embed,), jnp.float32)
+        params[f"l{l}_ln1_b"] = jnp.zeros((embed,), jnp.float32)
+        params[f"l{l}_ln2_g"] = jnp.ones((embed,), jnp.float32)
+        params[f"l{l}_ln2_b"] = jnp.zeros((embed,), jnp.float32)
+    params["head_fwd_w"] = jax.random.normal(next(k), (embed, n_actions), jnp.float32) * (
+        1.0 / embed
+    ) ** 0.5
+    params["head_fwd_b"] = jnp.zeros((n_actions,), jnp.float32)
+    params["head_bwd_w"] = jax.random.normal(next(k), (embed, n_bwd), jnp.float32) * (
+        1.0 / embed
+    ) ** 0.5
+    params["head_bwd_b"] = jnp.zeros((n_bwd,), jnp.float32)
+    params["head_flow_w"] = jax.random.normal(next(k), (embed, 1), jnp.float32) * (
+        1.0 / embed
+    ) ** 0.5
+    params["head_flow_b"] = jnp.zeros((1,), jnp.float32)
+    params["logZ"] = jnp.zeros((1,), jnp.float32)
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x, params, l, n_heads):
+    b, s, e = x.shape
+    hd = e // n_heads
+    qkv = x.reshape(b * s, e) @ params[f"l{l}_qkv_w"] + params[f"l{l}_qkv_b"]
+    qkv = qkv.reshape(b, s, 3, n_heads, hd).transpose(2, 0, 3, 1, 4)  # [3,B,H,S,hd]
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (hd**0.5)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)  # [B,H,S,hd]
+    out = out.transpose(0, 2, 1, 3).reshape(b * s, e)
+    out = out @ params[f"l{l}_proj_w"] + params[f"l{l}_proj_b"]
+    return out.reshape(b, s, e)
+
+
+def transformer_apply(
+    params, obs: jnp.ndarray, seq_len: int, token_dim: int, n_layers: int, n_heads: int
+):
+    """obs [B, seq_len·token_dim] → (fwd_logits, bwd_logits, log_flow)."""
+    b = obs.shape[0]
+    tokens = obs.reshape(b, seq_len, token_dim)
+    x = dense(
+        tokens.reshape(b * seq_len, token_dim), params["embed_w"], params["embed_b"], act="none"
+    ).reshape(b, seq_len, -1)
+    x = x + params["pos"][None, :, :]
+    e = x.shape[-1]
+    for l in range(n_layers):
+        h = _layer_norm(x, params[f"l{l}_ln1_g"], params[f"l{l}_ln1_b"])
+        x = x + _attention(h, params, l, n_heads)
+        h = _layer_norm(x, params[f"l{l}_ln2_g"], params[f"l{l}_ln2_b"])
+        h2 = dense(h.reshape(b * seq_len, e), params[f"l{l}_ff1_w"], params[f"l{l}_ff1_b"], act="relu")
+        h2 = dense(h2, params[f"l{l}_ff2_w"], params[f"l{l}_ff2_b"], act="none")
+        x = x + h2.reshape(b, seq_len, e)
+    pooled = jnp.mean(x, axis=1)  # [B, E]
+    fwd = dense(pooled, params["head_fwd_w"], params["head_fwd_b"], act="none")
+    bwd = dense(pooled, params["head_bwd_w"], params["head_bwd_b"], act="none")
+    flow = dense(pooled, params["head_flow_w"], params["head_flow_b"], act="none")[:, 0]
+    return fwd, bwd, flow

@@ -1,0 +1,100 @@
+"""AOT export: manifest consistency, params.bin layout, HLO text syntax."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.aot import build_artifact
+from compile.configs import get_config
+
+
+@pytest.fixture(scope="module")
+def artifact(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    name = build_artifact("hypergrid_small", "tb", str(out), seed=0)
+    return out, name
+
+
+def test_all_files_written(artifact):
+    out, name = artifact
+    for suffix in ("policy.hlo.txt", "train.hlo.txt", "manifest.json", "params.bin"):
+        assert (out / f"{name}.{suffix}").exists()
+
+
+def test_manifest_matches_config(artifact):
+    out, name = artifact
+    man = json.loads((out / f"{name}.manifest.json").read_text())
+    cfg = get_config("hypergrid_small")
+    assert man["config"]["obs_dim"] == cfg.obs_dim
+    assert man["config"]["n_actions"] == cfg.n_actions
+    assert man["config"]["t_max"] == cfg.t_max
+    assert man["config"]["batch"] == cfg.batch
+    # policy inputs = params + obs/fwd_mask/bwd_mask.
+    n_params = len(man["params"])
+    assert len(man["policy"]["inputs"]) == n_params + 3
+    # train state = 3·P + 1 leaves.
+    assert len(man["train"]["state"]) == 3 * n_params + 1
+
+
+def test_params_bin_layout(artifact):
+    out, name = artifact
+    man = json.loads((out / f"{name}.manifest.json").read_text())
+    blob = (out / f"{name}.params.bin").read_bytes()
+    total = 0
+    for entry in man["init_blob"]["layout"]:
+        n = int(np.prod(entry["shape"])) if entry["shape"] else 1
+        assert entry["offset"] == total
+        total += 4 * n
+    assert total == len(blob)
+    # m and v blocks start as zeros.
+    m_entries = [e for e in man["init_blob"]["layout"] if e["group"] == "m"]
+    for e in m_entries[:3]:
+        n = int(np.prod(e["shape"]))
+        arr = np.frombuffer(blob, np.float32, count=n, offset=e["offset"])
+        assert (arr == 0).all()
+
+
+def test_hlo_text_is_parsable_syntax(artifact):
+    out, name = artifact
+    text = (out / f"{name}.policy.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    train = (out / f"{name}.train.hlo.txt").read_text()
+    assert train.startswith("HloModule")
+
+
+def _entry_param_count(hlo_text: str) -> int:
+    # The ENTRY computation's parameters are its input arity.
+    import re
+
+    entry = hlo_text[hlo_text.index("ENTRY"):]
+    body = entry[: entry.index("ROOT")]
+    return len(re.findall(r"\bparameter\(\d+\)", body))
+
+
+@pytest.mark.parametrize("loss", ["tb", "db", "subtb", "fldb", "mdb"])
+def test_lowered_arity_matches_manifest(tmp_path, loss):
+    """Regression test for input-DCE: JAX prunes unused inputs from lowered
+    signatures (e.g. `extra` under TB, `log_reward` under MDB) unless the
+    model anchors them; the Rust runtime feeds inputs by manifest order, so
+    any pruning breaks execution with an arity error."""
+    name = build_artifact("hypergrid_small", loss, str(tmp_path), seed=0)
+    man = json.loads((tmp_path / f"{name}.manifest.json").read_text())
+    policy_hlo = (tmp_path / f"{name}.policy.hlo.txt").read_text()
+    train_hlo = (tmp_path / f"{name}.train.hlo.txt").read_text()
+    assert _entry_param_count(policy_hlo) == len(man["policy"]["inputs"])
+    assert _entry_param_count(train_hlo) == len(man["train"]["state"]) + len(
+        man["train"]["batch"]
+    )
+
+
+def test_rebuild_is_noop(artifact, capsys):
+    out, name = artifact
+    # build_artifact itself always writes; the CLI-level skip is exercised in
+    # the Makefile path. Here we just confirm determinism of the blob.
+    blob1 = (out / f"{name}.params.bin").read_bytes()
+    build_artifact("hypergrid_small", "tb", str(out), seed=0)
+    blob2 = (out / f"{name}.params.bin").read_bytes()
+    assert blob1 == blob2

@@ -1,0 +1,120 @@
+"""Objective-function micro-cases with hand-derived values."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.losses import db_loss, fldb_loss, mdb_loss, subtb_loss, tb_loss
+
+
+def test_tb_zero_when_balanced():
+    # One trajectory, two transitions: logZ + Σfwd = logR + Σbwd.
+    fwd = jnp.asarray([[-1.0, -2.0]])
+    bwd = jnp.asarray([[-0.5, -0.5]])
+    log_r = jnp.asarray([1.0])
+    length = jnp.asarray([2.0])
+    log_z = jnp.asarray(1.0 + (-0.5 - 0.5) - (-1.0 - 2.0))
+    assert abs(float(tb_loss(log_z, fwd, bwd, log_r, length))) < 1e-12
+
+
+def test_tb_quadratic_residual():
+    fwd = jnp.asarray([[-1.0]])
+    bwd = jnp.asarray([[0.0]])
+    log_r = jnp.asarray([0.0])
+    length = jnp.asarray([1.0])
+    # residual = logZ + (-1) - 0 - 0 = logZ - 1.
+    assert abs(float(tb_loss(jnp.asarray(3.0), fwd, bwd, log_r, length)) - 4.0) < 1e-6
+
+
+def test_tb_ignores_padding():
+    fwd = jnp.asarray([[-1.0, -99.0]])
+    bwd = jnp.asarray([[0.0, -99.0]])
+    log_r = jnp.asarray([-1.0])
+    length = jnp.asarray([1.0])  # second transition is padding
+    assert abs(float(tb_loss(jnp.asarray(0.0), fwd, bwd, log_r, length))) < 1e-12
+
+
+def test_db_terminal_flow_is_reward():
+    # Single transition ending terminal: residual = f0 + fwd − logR − bwd.
+    log_f = jnp.asarray([[2.0, 123.0]])  # f at s1 must be ignored (terminal)
+    fwd = jnp.asarray([[-1.0]])
+    bwd = jnp.asarray([[0.0]])
+    log_r = jnp.asarray([1.0])
+    length = jnp.asarray([1.0])
+    resid = 2.0 - 1.0 - 1.0 - 0.0
+    assert abs(float(db_loss(log_f, fwd, bwd, log_r, length)) - resid**2) < 1e-6
+
+
+def test_db_averages_over_valid_transitions():
+    log_f = jnp.asarray([[0.0, 0.0, 99.0]])
+    fwd = jnp.asarray([[0.0, 0.0]])
+    bwd = jnp.asarray([[0.0, 0.0]])
+    log_r = jnp.asarray([2.0])
+    length = jnp.asarray([2.0])
+    # t=0: 0+0-0-0 = 0; t=1 (terminal): 0+0-2-0 = -2 → mean(0,4) = 2.
+    assert abs(float(db_loss(log_f, fwd, bwd, log_r, length)) - 2.0) < 1e-6
+
+
+def test_subtb_reduces_to_tb_like_term_single_transition():
+    # With one transition there is exactly one (j,k) pair: (0,1).
+    log_f = jnp.asarray([[1.5, 0.0]])
+    fwd = jnp.asarray([[-0.7]])
+    bwd = jnp.asarray([[-0.2]])
+    log_r = jnp.asarray([0.3])
+    length = jnp.asarray([1.0])
+    # A = f0 − R + (fwd − bwd) = 1.5 − 0.3 + (−0.5) = 0.7.
+    got = float(subtb_loss(log_f, fwd, bwd, log_r, length, lam=0.9))
+    assert abs(got - 0.7**2) < 1e-6
+
+
+def test_subtb_weights_longer_subtrajectories_less():
+    # Construct a 2-transition traj where only the full-trajectory pair has
+    # nonzero residual; check λ changes the loss.
+    log_f = jnp.asarray([[1.0, 1.0, 0.0]])
+    fwd = jnp.asarray([[0.0, 0.0]])
+    bwd = jnp.asarray([[0.0, 0.0]])
+    log_r = jnp.asarray([0.0])
+    length = jnp.asarray([2.0])
+    l_small = float(subtb_loss(log_f, fwd, bwd, log_r, length, lam=0.1))
+    l_big = float(subtb_loss(log_f, fwd, bwd, log_r, length, lam=0.99))
+    assert l_small != l_big
+
+
+def test_fldb_zero_for_perfect_forward_looking_flow():
+    # F̃ ≡ 1 (log = 0) and P_F = P_B, E constant ⇒ residual 0.
+    log_ft = jnp.zeros((1, 3))
+    fwd = jnp.asarray([[-0.5, -0.5]])
+    bwd = jnp.asarray([[-0.5, -0.5]])
+    energy = jnp.zeros((1, 3))
+    length = jnp.asarray([2.0])
+    assert abs(float(fldb_loss(log_ft, fwd, bwd, energy, length))) < 1e-12
+
+
+def test_fldb_energy_differences_enter():
+    log_ft = jnp.zeros((1, 2))
+    fwd = jnp.asarray([[0.0]])
+    bwd = jnp.asarray([[0.0]])
+    energy = jnp.asarray([[0.0, 3.0]])
+    length = jnp.asarray([1.0])
+    # residual = 0 + 0 − 0 − 0 + (3 − 0) = 3 (terminal F̃ term is 0).
+    assert abs(float(fldb_loss(log_ft, fwd, bwd, energy, length)) - 9.0) < 1e-6
+
+
+def test_mdb_balanced_case():
+    # delta + bwd + stop(s_t) − fwd − stop(s_{t+1}) = 0.
+    fwd = jnp.asarray([[-1.0, 0.0]])
+    bwd = jnp.asarray([[-0.5, 0.0]])
+    stop = jnp.asarray([[-2.0, -1.5, 0.0]])
+    delta = jnp.asarray([[0.0, 0.0, 0.0]])
+    delta = delta.at[0, 0].set(-(-0.5) - (-2.0) + (-1.0) + (-1.5))
+    length = jnp.asarray([2.0])  # 1 edge + stop → one MDB term (t=0)
+    assert abs(float(mdb_loss(fwd, bwd, stop, delta, length))) < 1e-6
+
+
+def test_mdb_excludes_stop_transition():
+    # length=1 means the only transition is the stop → no loss terms.
+    fwd = jnp.asarray([[-1.0]])
+    bwd = jnp.asarray([[-1.0]])
+    stop = jnp.asarray([[-1.0, -1.0]])
+    delta = jnp.asarray([[5.0, 5.0]])
+    length = jnp.asarray([1.0])
+    assert abs(float(mdb_loss(fwd, bwd, stop, delta, length))) < 1e-12

@@ -1,0 +1,88 @@
+//! Ablations — decomposing *why* the compiled/vectorized path wins
+//! (the mechanism behind Tables 1–2), plus coordinator design choices:
+//!
+//!  A. policy-call granularity: one vectorized call per env step vs one
+//!     padded call per sample per step (the baseline's dispatch pattern);
+//!  B. parameter transfer: device-cached parameter buffers vs re-upload
+//!     before every call (host-synchronized pattern);
+//!  C. rollout staging: reused obs/mask buffers vs fresh allocation.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use gfnx::bench::harness::{measure_it_per_sec, BenchTable};
+use gfnx::coordinator::config::artifacts_dir;
+use gfnx::coordinator::rollout::RolloutCtx;
+use gfnx::envs::hypergrid::HypergridEnv;
+use gfnx::envs::VecEnv;
+use gfnx::reward::hypergrid::HypergridReward;
+use gfnx::runtime::Artifact;
+
+fn main() {
+    let env = HypergridEnv::new(4, 20, HypergridReward::standard(20));
+    let art = Artifact::load(&artifacts_dir(), "hypergrid_4d_20.tb").expect("artifact");
+    let mut state = art.init_state().unwrap();
+    let spec = env.spec();
+    let b = art.batch();
+    let ctx = RolloutCtx::for_artifact(&art);
+    let obs = ctx.obs.clone();
+    let mut fwd_mask = ctx.fwd_mask.clone();
+    let mut bwd_mask = ctx.bwd_mask.clone();
+    for i in 0..b {
+        fwd_mask[i * spec.n_actions] = 1.0;
+        bwd_mask[i * spec.n_bwd_actions] = 1.0;
+    }
+
+    let mut table = BenchTable::new(
+        "Ablations — mechanism decomposition (policy calls/second)",
+        &["Variant", "calls/s", "slowdown vs fast"],
+    );
+
+    // A: vectorized, cached params (the fast path).
+    let fast = measure_it_per_sec(5, 3, 50, || {
+        state.policy(&art, &obs, &fwd_mask, &bwd_mask).unwrap();
+    });
+
+    // B: re-upload parameters before every call.
+    let reupload = measure_it_per_sec(3, 3, 30, || {
+        state.refresh_param_bufs().unwrap();
+        state.policy(&art, &obs, &fwd_mask, &bwd_mask).unwrap();
+    });
+
+    // C: per-sample dispatch — b calls each covering one row (padded), as a
+    // host-side per-sample training loop would issue.
+    let per_sample = measure_it_per_sec(1, 3, 4, || {
+        for _row in 0..b {
+            state.policy(&art, &obs, &fwd_mask, &bwd_mask).unwrap();
+        }
+    });
+
+    // D: per-sample dispatch + per-call re-upload (the full baseline).
+    let per_sample_reupload = measure_it_per_sec(1, 3, 2, || {
+        for _row in 0..b {
+            state.refresh_param_bufs().unwrap();
+            state.policy(&art, &obs, &fwd_mask, &bwd_mask).unwrap();
+        }
+    });
+
+    table.row(&[
+        "vectorized + cached params".into(),
+        format!("{:.1}", fast.mean),
+        "1.0x".into(),
+    ]);
+    table.row(&[
+        "vectorized + re-upload".into(),
+        format!("{:.1}", reupload.mean),
+        format!("{:.1}x", fast.mean / reupload.mean),
+    ]);
+    table.row(&[
+        format!("per-sample x{b} + cached"),
+        format!("{:.1}", per_sample.mean),
+        format!("{:.1}x", fast.mean / per_sample.mean),
+    ]);
+    table.row(&[
+        format!("per-sample x{b} + re-upload"),
+        format!("{:.1}", per_sample_reupload.mean),
+        format!("{:.1}x", fast.mean / per_sample_reupload.mean),
+    ]);
+    table.print();
+}

@@ -1,0 +1,76 @@
+//! Figure 2 — total variation between the exact target distribution and the
+//! empirical distribution of sampled terminals, versus wall-clock seconds,
+//! for DB / TB / SubTB on the 4-d H=20 hypergrid, with the perfect-sampler
+//! floor.
+//!
+//! Run: `cargo bench --bench fig2_hypergrid_tv`
+//! Env: GFNX_BENCH_TRAIN_ITERS overrides the per-objective budget.
+
+use gfnx::bench::harness::BenchTable;
+use gfnx::coordinator::buffer::TerminalCounter;
+use gfnx::coordinator::config::{artifacts_dir, run_config};
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::envs::hypergrid::HypergridEnv;
+use gfnx::envs::VecEnv;
+use gfnx::metrics::tv::{perfect_sampler_tv, tv_from_counts};
+use gfnx::reward::hypergrid::HypergridReward;
+use gfnx::runtime::Artifact;
+use gfnx::util::rng::Rng;
+use gfnx::util::stats::softmax_from_logs;
+use std::time::Instant;
+
+fn main() {
+    let iters: u64 = std::env::var("GFNX_BENCH_TRAIN_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1500);
+    let env = HypergridEnv::new(4, 20, HypergridReward::standard(20));
+    let n_states = env.num_terminal_states();
+    let exact = softmax_from_logs(
+        &(0..n_states)
+            .map(|i| env.log_reward_obj(&env.unflatten(i)))
+            .collect::<Vec<_>>(),
+    );
+
+    // Perfect-sampler floor at the same sample budget the FIFO holds.
+    let window = 24_000usize.min((iters as usize) * 16);
+    let mut rng = Rng::new(0);
+    let floor = perfect_sampler_tv(&exact, window, &mut rng);
+
+    let mut table = BenchTable::new(
+        "Figure 2 — TV vs wall-clock, hypergrid 4d·20 (floor = perfect sampler)",
+        &["Objective", "t (s)", "iters", "TV"],
+    );
+    for obj in ["db", "tb", "subtb"] {
+        let art = Artifact::load(&artifacts_dir(), &format!("hypergrid_4d_20.{obj}"))
+            .expect("artifact (run `make artifacts`)");
+        let rc = run_config("hypergrid_4d_20", obj);
+        let mut trainer = Trainer::new(&env, &art, 0, rc.explore).unwrap();
+        let mut counter = TerminalCounter::new(n_states, window);
+        let t0 = Instant::now();
+        let checkpoints = 6u64;
+        for i in 0..=iters {
+            let (_stats, objs) = trainer.train_iter(&ExtraSource::None).unwrap();
+            for o in &objs {
+                counter.push(env.flat_index(o));
+            }
+            if i % (iters / checkpoints).max(1) == 0 {
+                let tv = tv_from_counts(&exact, counter.counts());
+                table.row(&[
+                    obj.to_uppercase(),
+                    format!("{:.1}", t0.elapsed().as_secs_f64()),
+                    i.to_string(),
+                    format!("{tv:.4}"),
+                ]);
+            }
+        }
+    }
+    table.row(&[
+        "perfect sampler".to_string(),
+        "—".to_string(),
+        "—".to_string(),
+        format!("{floor:.4}"),
+    ]);
+    table.print();
+}

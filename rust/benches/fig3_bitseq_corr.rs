@@ -1,0 +1,63 @@
+//! Figure 3 — Pearson correlation between log R(x) and the Monte-Carlo
+//! log P̂_θ(x) on the flip test set, versus wall-clock, for TB and DB on
+//! the bit-sequence environment.
+//!
+//! Run: `cargo bench --bench fig3_bitseq_corr`
+
+use gfnx::bench::harness::BenchTable;
+use gfnx::coordinator::config::artifacts_dir;
+use gfnx::coordinator::eval::reward_correlation;
+use gfnx::coordinator::explore::EpsSchedule;
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::data::modes::generate_test_set;
+use gfnx::envs::bitseq::{bitseq_env, test_set_tokens, BitSeqConfig};
+use gfnx::runtime::Artifact;
+use gfnx::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let iters: u64 = std::env::var("GFNX_BENCH_TRAIN_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(900);
+    let cfg = BitSeqConfig::small();
+    let (env, modes) = bitseq_env(cfg);
+    let mut rng = Rng::new(42);
+    let test = test_set_tokens(cfg, &generate_test_set(&modes, &mut rng));
+    // Budget: subsample the paper's |M|·n test set.
+    let test: Vec<_> = test.into_iter().step_by(4).collect();
+
+    let mut table = BenchTable::new(
+        "Figure 3 — Pearson(log R, log P̂_θ) vs wall-clock, bitseq",
+        &["Objective", "t (s)", "iters", "corr"],
+    );
+    for obj in ["tb", "db"] {
+        let art = Artifact::load(&artifacts_dir(), &format!("bitseq_small.{obj}"))
+            .expect("artifact (run `make artifacts`)");
+        let mut trainer = Trainer::new(&env, &art, 0, EpsSchedule::Constant(1e-3)).unwrap();
+        let t0 = Instant::now();
+        for i in 0..=iters {
+            trainer.train_iter(&ExtraSource::None).unwrap();
+            if i % (iters / 6).max(1) == 0 {
+                let corr = reward_correlation(
+                    &env,
+                    &art,
+                    &trainer.state,
+                    &mut trainer.ctx,
+                    &mut trainer.rng,
+                    &test,
+                    6,
+                )
+                .unwrap();
+                table.row(&[
+                    obj.to_uppercase(),
+                    format!("{:.1}", t0.elapsed().as_secs_f64()),
+                    i.to_string(),
+                    format!("{corr:+.3}"),
+                ]);
+            }
+        }
+    }
+    table.print();
+}

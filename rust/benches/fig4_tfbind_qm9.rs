@@ -1,0 +1,99 @@
+//! Figure 4 — TV between the exact target (enumerable: 4⁸ DNA sequences,
+//! 11⁵ molecules) and the empirical sampling distribution versus wall-clock,
+//! TB objective, with the perfect-sampler floor.
+//!
+//! Run: `cargo bench --bench fig4_tfbind_qm9`
+
+use gfnx::bench::harness::BenchTable;
+use gfnx::coordinator::buffer::TerminalCounter;
+use gfnx::coordinator::config::{artifacts_dir, run_config};
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::envs::VecEnv;
+use gfnx::metrics::tv::{perfect_sampler_tv, tv_from_counts};
+use gfnx::runtime::Artifact;
+use gfnx::util::rng::Rng;
+use std::time::Instant;
+
+fn run_env<E, F>(
+    table: &mut BenchTable,
+    label: &str,
+    env: &E,
+    exact: &[f64],
+    flat: F,
+    artifact: &str,
+    iters: u64,
+) where
+    E: VecEnv,
+    F: Fn(&E::Obj) -> usize,
+{
+    let art = Artifact::load(&artifacts_dir(), artifact).expect("artifact");
+    let (cfg_name, loss) = artifact.split_once('.').unwrap();
+    let rc = run_config(cfg_name, loss);
+    let mut trainer = Trainer::new(env, &art, 0, rc.explore).unwrap();
+    let window = 24_000usize;
+    let mut counter = TerminalCounter::new(exact.len(), window);
+    let t0 = Instant::now();
+    for i in 0..=iters {
+        let (_s, objs) = trainer.train_iter(&ExtraSource::None).unwrap();
+        for o in &objs {
+            counter.push(flat(o));
+        }
+        if i % (iters / 6).max(1) == 0 {
+            table.row(&[
+                label.to_string(),
+                format!("{:.1}", t0.elapsed().as_secs_f64()),
+                i.to_string(),
+                format!("{:.4}", tv_from_counts(exact, counter.counts())),
+            ]);
+        }
+    }
+    let mut rng = Rng::new(1);
+    table.row(&[
+        format!("{label} perfect sampler"),
+        "—".to_string(),
+        "—".to_string(),
+        format!("{:.4}", perfect_sampler_tv(exact, window, &mut rng)),
+    ]);
+}
+
+fn main() {
+    let iters: u64 = std::env::var("GFNX_BENCH_TRAIN_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1200);
+    let mut table = BenchTable::new(
+        "Figure 4 — TV vs wall-clock (TB): TFBind8 and QM9",
+        &["Env", "t (s)", "iters", "TV"],
+    );
+    {
+        use gfnx::envs::tfbind8::{exact_target, tfbind8_env};
+        use gfnx::reward::proxy::TfBindReward;
+        let env = tfbind8_env(0, 10.0);
+        let exact = exact_target(&env);
+        run_env(
+            &mut table,
+            "TFBind8",
+            &env,
+            &exact,
+            |o: &Vec<i16>| TfBindReward::flatten(o),
+            "tfbind8.tb",
+            iters,
+        );
+    }
+    {
+        use gfnx::envs::qm9::{exact_target, flatten, qm9_env};
+        let env = qm9_env(0, 10.0);
+        let exact = exact_target(&env);
+        run_env(
+            &mut table,
+            "QM9",
+            &env,
+            &exact,
+            |o: &Vec<i16>| flatten(o),
+            "qm9.tb",
+            iters,
+        );
+    }
+    table.print();
+}

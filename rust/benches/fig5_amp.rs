@@ -1,0 +1,47 @@
+//! Figure 5 — top-100 mean reward and diversity (mean pairwise edit
+//! distance) versus wall-clock on the AMP environment, TB objective.
+//!
+//! Run: `cargo bench --bench fig5_amp`
+
+use gfnx::bench::harness::BenchTable;
+use gfnx::coordinator::config::artifacts_dir;
+use gfnx::coordinator::explore::EpsSchedule;
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::envs::amp::amp_env_sized;
+use gfnx::envs::VecEnv;
+use gfnx::metrics::diversity::TopK;
+use gfnx::runtime::Artifact;
+use std::time::Instant;
+
+fn main() {
+    let iters: u64 = std::env::var("GFNX_BENCH_TRAIN_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(800);
+    let env = amp_env_sized(0, 1e-3, 8);
+    let art = Artifact::load(&artifacts_dir(), "amp_small.tb").expect("artifact");
+    let mut trainer = Trainer::new(&env, &art, 0, EpsSchedule::Constant(1e-2)).unwrap();
+    let mut topk = TopK::new(100);
+
+    let mut table = BenchTable::new(
+        "Figure 5 — AMP top-100 reward & diversity vs wall-clock (TB)",
+        &["t (s)", "iters", "top-100 mean R", "diversity"],
+    );
+    let t0 = Instant::now();
+    for i in 0..=iters {
+        let (_s, objs) = trainer.train_iter(&ExtraSource::None).unwrap();
+        for o in &objs {
+            topk.push(env.log_reward_obj(o).exp(), o);
+        }
+        if i % (iters / 8).max(1) == 0 {
+            table.row(&[
+                format!("{:.1}", t0.elapsed().as_secs_f64()),
+                i.to_string(),
+                format!("{:.4}", topk.mean_reward()),
+                format!("{:.2}", topk.diversity()),
+            ]);
+        }
+    }
+    table.print();
+}

@@ -1,0 +1,101 @@
+//! Figure 6 — Pearson correlation between terminating-state log-probability
+//! and log-reward on sampled trees, versus wall-clock, FLDB objective, for
+//! the scaled DS-style phylogenetic datasets.
+//!
+//! The default artifact set covers `phylo_small` (6 species). If the
+//! paper-scale artifacts (phylo_ds1…) were built via `make artifacts-paper`,
+//! they are benchmarked too.
+//!
+//! Run: `cargo bench --bench fig6_phylo`
+
+use gfnx::bench::harness::BenchTable;
+use gfnx::coordinator::config::{artifacts_dir, run_config};
+use gfnx::coordinator::eval::reward_correlation;
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::data::phylo_data::{ds_config, ds_reward_c, synthetic_alignment};
+use gfnx::envs::phylo::PhyloEnv;
+use gfnx::runtime::Artifact;
+use gfnx::util::rng::Rng;
+use std::time::Instant;
+
+fn bench_dataset(table: &mut BenchTable, label: &str, env: &PhyloEnv, artifact: &str, iters: u64) {
+    let art = match Artifact::load(&artifacts_dir(), artifact) {
+        Ok(a) => a,
+        Err(_) => {
+            table.row(&[
+                label.to_string(),
+                "—".to_string(),
+                "—".to_string(),
+                "(artifact not built)".to_string(),
+            ]);
+            return;
+        }
+    };
+    let rc = run_config(artifact.split_once('.').unwrap().0, "fldb");
+    let mut trainer = Trainer::new(env, &art, 0, rc.explore).unwrap();
+    let t0 = Instant::now();
+    for i in 0..=iters {
+        let env_ref = trainer.env;
+        let extra = ExtraSource::Energy(&move |s, idx| env_ref.energy(s, idx));
+        trainer.train_iter(&extra).unwrap();
+        if i % (iters / 5).max(1) == 0 {
+            // Eval protocol: correlation on 32 trees sampled from the policy
+            // (paper §B.3), scored with the MC backward estimator.
+            let mut trees = Vec::new();
+            while trees.len() < 32 {
+                trees.extend(trainer.sample_objs().unwrap());
+            }
+            trees.truncate(32);
+            trees.dedup();
+            let corr = reward_correlation(
+                env,
+                &art,
+                &trainer.state,
+                &mut trainer.ctx,
+                &mut trainer.rng,
+                &trees,
+                4,
+            )
+            .unwrap();
+            table.row(&[
+                label.to_string(),
+                format!("{:.1}", t0.elapsed().as_secs_f64()),
+                i.to_string(),
+                format!("{corr:+.3}"),
+            ]);
+        }
+    }
+}
+
+fn main() {
+    let iters: u64 = std::env::var("GFNX_BENCH_TRAIN_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+    let mut table = BenchTable::new(
+        "Figure 6 — Pearson(log P̂_θ, log R) vs wall-clock, phylogenetics (FLDB)",
+        &["Dataset", "t (s)", "iters", "corr"],
+    );
+    {
+        let mut rng = Rng::new(7);
+        let aln = synthetic_alignment(6, 8, 0.15, &mut rng);
+        let env = PhyloEnv::new(aln, 16.0, 4.0);
+        bench_dataset(&mut table, "small (6 sp)", &env, "phylo_small.fldb", iters);
+    }
+    // Paper-scale DS1–DS8 analogues, if built.
+    for ds in 1..=8usize {
+        let (n, m) = ds_config(ds);
+        let mut rng = Rng::new(100 + ds as u64);
+        let aln = synthetic_alignment(n, m, 0.15, &mut rng);
+        let env = PhyloEnv::new(aln, ds_reward_c(ds), 4.0);
+        bench_dataset(
+            &mut table,
+            &format!("DS-{ds} ({n} sp)"),
+            &env,
+            &format!("phylo_ds{ds}.fldb"),
+            iters / 2,
+        );
+    }
+    table.print();
+}

@@ -1,0 +1,88 @@
+//! Figure 7 — Jensen–Shannon divergence between the learned distribution
+//! over DAGs and the exact enumerated posterior, versus wall-clock, MDB
+//! objective with the BGe score (paper §B.4).
+//!
+//! Run: `cargo bench --bench fig7_bayesnet_jsd`
+
+use gfnx::bench::harness::BenchTable;
+use gfnx::coordinator::buffer::TerminalCounter;
+use gfnx::coordinator::config::{artifacts_dir, run_config};
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::data::ancestral::ancestral_sample;
+use gfnx::data::erdos_renyi::sample_er_dag;
+use gfnx::envs::bayesnet::{BayesNetEnv, BayesNetState};
+use gfnx::metrics::dag_enum::{dag_index, enumerate_dags, exact_posterior};
+use gfnx::metrics::jsd::jsd_from_counts;
+use gfnx::metrics::marginals::{
+    edge_marginals, marginal_correlation, markov_blanket_marginals, path_marginals,
+};
+use gfnx::reward::bge::{bge_table, BgeParams};
+use gfnx::runtime::Artifact;
+use gfnx::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let iters: u64 = std::env::var("GFNX_BENCH_TRAIN_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000);
+    let d = 5usize;
+    // Paper protocol: 20 ER datasets; budget default benches 2 seeds (set
+    // GFNX_BENCH_SEEDS=20 for the paper's count).
+    let seeds: u64 = std::env::var("GFNX_BENCH_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+
+    let dags = enumerate_dags(d);
+    let mut table = BenchTable::new(
+        "Figure 7 — JSD(learned ‖ exact posterior) vs wall-clock, MDB + BGe",
+        &["Seed", "t (s)", "iters", "JSD", "edge-corr", "path-corr", "mb-corr"],
+    );
+
+    for seed in 0..seeds {
+        let mut rng = Rng::new(seed);
+        let g = sample_er_dag(d, 1.0, &mut rng);
+        let data = ancestral_sample(&g, 100, 0.1, &mut rng);
+        let table_scores = bge_table(&data, BgeParams::default_for(d));
+        let posterior = exact_posterior(&dags, &table_scores);
+        let env = BayesNetEnv::new(d, table_scores.clone());
+        let art = Artifact::load(&artifacts_dir(), "bayesnet_d5.mdb").expect("artifact");
+        let rc = run_config("bayesnet_d5", "mdb");
+        let mut trainer = Trainer::new(&env, &art, seed, rc.explore).unwrap();
+        let mut counter = TerminalCounter::new(dags.len(), rc.fifo_window);
+        let t0 = Instant::now();
+        let tref = &table_scores;
+        let extra = ExtraSource::StateLogReward(&move |s: &BayesNetState, i: usize| {
+            tref.log_score(s.adj[i])
+        });
+        for i in 0..=iters {
+            let (_s, objs) = trainer.train_iter(&extra).unwrap();
+            for o in &objs {
+                if let Some(idx) = dag_index(&dags, *o) {
+                    counter.push(idx);
+                }
+            }
+            if i % (iters / 5).max(1) == 0 {
+                let jsd = jsd_from_counts(&posterior, counter.counts());
+                let total: u64 = counter.counts().iter().sum();
+                let emp: Vec<f64> =
+                    counter.counts().iter().map(|&c| c as f64 / total.max(1) as f64).collect();
+                let corr = |f: fn(&[u64], &[f64], usize) -> Vec<f64>| {
+                    marginal_correlation(&f(&dags, &posterior, d), &f(&dags, &emp, d), d)
+                };
+                table.row(&[
+                    seed.to_string(),
+                    format!("{:.1}", t0.elapsed().as_secs_f64()),
+                    i.to_string(),
+                    format!("{jsd:.4}"),
+                    format!("{:.3}", corr(edge_marginals)),
+                    format!("{:.3}", corr(path_marginals)),
+                    format!("{:.3}", corr(markov_blanket_marginals)),
+                ]);
+            }
+        }
+    }
+    table.print();
+}

@@ -1,0 +1,173 @@
+//! Table 1 — iterations/second, host-synchronized baseline vs gfnx-rs fast
+//! path, across every environment family and objective the paper lists.
+//!
+//! The baseline reproduces the *mechanism* of torchgfn/author PyTorch
+//! implementations (per-sample policy dispatch + per-call parameter
+//! re-upload + scalar env stepping; see coordinator::baseline). Absolute
+//! numbers depend on this CPU testbed; the paper's claim under reproduction
+//! is the *ratio and its ordering* across environments.
+//!
+//! Run: `cargo bench --bench table1_throughput`
+//! Env: GFNX_BENCH_REPEATS / GFNX_BENCH_ITERS override the measurement size.
+
+use gfnx::bench::harness::{measure_it_per_sec, BenchTable};
+use gfnx::coordinator::baseline::BaselineTrainer;
+use gfnx::coordinator::config::{artifacts_dir, run_config};
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::envs::VecEnv;
+use gfnx::runtime::Artifact;
+use gfnx::util::stats::ItPerSec;
+
+fn envv(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct Row {
+    env: &'static str,
+    objective: &'static str,
+    baseline: Option<ItPerSec>,
+    fast: ItPerSec,
+}
+
+fn bench_pair<E: VecEnv>(
+    env: &E,
+    artifact: &str,
+    extra: &ExtraSource<'_, E>,
+    with_baseline: bool,
+) -> (Option<ItPerSec>, ItPerSec) {
+    let repeats = envv("GFNX_BENCH_REPEATS", 3);
+    let iters = envv("GFNX_BENCH_ITERS", 8);
+    let art = Artifact::load(&artifacts_dir(), artifact).expect("artifact (run `make artifacts`)");
+    let (cfg_name, loss) = artifact.split_once('.').unwrap();
+    let rc = run_config(cfg_name, loss);
+
+    let mut fast_tr = Trainer::new(env, &art, 0, rc.explore).unwrap();
+    let fast = measure_it_per_sec(2, repeats, iters, || {
+        fast_tr.train_iter(extra).unwrap();
+    });
+
+    let baseline = with_baseline.then(|| {
+        let mut base_tr = BaselineTrainer::new(env, &art, 0, rc.explore).unwrap();
+        measure_it_per_sec(1, repeats.min(2), (iters / 4).max(1), || {
+            base_tr.train_iter(extra).unwrap();
+        })
+    });
+    (baseline, fast)
+}
+
+fn main() {
+    let mut rows: Vec<Row> = Vec::new();
+
+    // --- Hypergrid 4d·20, DB / TB / SubTB (paper rows 1–3). ------------
+    {
+        use gfnx::envs::hypergrid::HypergridEnv;
+        use gfnx::reward::hypergrid::HypergridReward;
+        let env = HypergridEnv::new(4, 20, HypergridReward::standard(20));
+        for (obj, art) in [
+            ("DB", "hypergrid_4d_20.db"),
+            ("TB", "hypergrid_4d_20.tb"),
+            ("SubTB", "hypergrid_4d_20.subtb"),
+        ] {
+            let (b, f) = bench_pair(&env, art, &ExtraSource::None, true);
+            rows.push(Row { env: "Hypergrid (20^4)", objective: obj, baseline: b, fast: f });
+        }
+    }
+
+    // --- Bit sequences, DB / TB. ------------------------------------------
+    {
+        use gfnx::envs::bitseq::{bitseq_env, BitSeqConfig};
+        let (env, _modes) = bitseq_env(BitSeqConfig::small());
+        for (obj, art) in [("DB", "bitseq_small.db"), ("TB", "bitseq_small.tb")] {
+            let (b, f) = bench_pair(&env, art, &ExtraSource::None, true);
+            rows.push(Row { env: "Bitseq (n=24, k=4)", objective: obj, baseline: b, fast: f });
+        }
+    }
+
+    // --- TFBind8, TB. -------------------------------------------------------
+    {
+        use gfnx::envs::tfbind8::tfbind8_env;
+        let env = tfbind8_env(0, 10.0);
+        let (b, f) = bench_pair(&env, "tfbind8.tb", &ExtraSource::None, true);
+        rows.push(Row { env: "TFBind8", objective: "TB", baseline: b, fast: f });
+    }
+
+    // --- QM9, TB. ---------------------------------------------------------
+    {
+        use gfnx::envs::qm9::qm9_env;
+        let env = qm9_env(0, 10.0);
+        let (b, f) = bench_pair(&env, "qm9.tb", &ExtraSource::None, true);
+        rows.push(Row { env: "QM9", objective: "TB", baseline: b, fast: f });
+    }
+
+    // --- AMP, TB. --------------------------------------------------------
+    {
+        use gfnx::envs::amp::amp_env_sized;
+        let env = amp_env_sized(0, 1e-3, 8);
+        let (b, f) = bench_pair(&env, "amp_small.tb", &ExtraSource::None, true);
+        rows.push(Row { env: "AMP (len<=8)", objective: "TB", baseline: b, fast: f });
+    }
+
+    // --- Phylogenetics, FLDB. -----------------------------------------------
+    {
+        use gfnx::data::phylo_data::synthetic_alignment;
+        use gfnx::envs::phylo::PhyloEnv;
+        use gfnx::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        let aln = synthetic_alignment(6, 8, 0.15, &mut rng);
+        let env = PhyloEnv::new(aln, 16.0, 4.0);
+        let env_ref = &env;
+        let extra = ExtraSource::Energy(&move |s, i| env_ref.energy(s, i));
+        let (b, f) = bench_pair(&env, "phylo_small.fldb", &extra, true);
+        rows.push(Row { env: "Phylo (6 species)", objective: "FLDB", baseline: b, fast: f });
+    }
+
+    // --- Structure learning, MDB. -----------------------------------------
+    {
+        use gfnx::data::ancestral::ancestral_sample;
+        use gfnx::data::erdos_renyi::sample_er_dag;
+        use gfnx::envs::bayesnet::{BayesNetEnv, BayesNetState};
+        use gfnx::reward::lingauss::lingauss_table;
+        use gfnx::util::rng::Rng;
+        let mut rng = Rng::new(8);
+        let g = sample_er_dag(5, 1.0, &mut rng);
+        let data = ancestral_sample(&g, 100, 0.1, &mut rng);
+        let table = lingauss_table(&data, 0.1, 1.0);
+        let env = BayesNetEnv::new(5, table.clone());
+        let table_ref = &table;
+        let extra = ExtraSource::StateLogReward(
+            &move |s: &BayesNetState, i: usize| table_ref.log_score(s.adj[i]),
+        );
+        let (b, f) = bench_pair(&env, "bayesnet_d5.mdb", &extra, true);
+        rows.push(Row { env: "Structure Learning", objective: "MDB", baseline: b, fast: f });
+    }
+
+    // --- Ising, TB (no open-source baseline in the paper: "—"). --------------
+    {
+        use gfnx::envs::ising::IsingEnv;
+        use gfnx::reward::ising::IsingReward;
+        let env = IsingEnv::lattice(3, IsingReward::torus(3, 0.2));
+        let (_b, f) = bench_pair(&env, "ising_small.tb", &ExtraSource::None, false);
+        rows.push(Row { env: "Ising (N=3)", objective: "TB", baseline: None, fast: f });
+    }
+
+    // --- Render. -----------------------------------------------------------
+    let mut table = BenchTable::new(
+        "Table 1 — it/s, host-synchronized baseline vs gfnx-rs",
+        &["Environment", "Objective", "Baseline", "gfnx-rs", "Speedup"],
+    );
+    for r in &rows {
+        let (b_s, speed) = match r.baseline {
+            Some(b) => (b.to_string(), format!("{:.1}x", r.fast.mean / b.mean)),
+            None => ("—".to_string(), "—".to_string()),
+        };
+        table.row(&[
+            r.env.to_string(),
+            r.objective.to_string(),
+            b_s,
+            r.fast.to_string(),
+            speed,
+        ]);
+    }
+    table.print();
+}

@@ -1,0 +1,50 @@
+//! Table 2 — it/s on the small (2-d, H=20) and large (8-d, H=10) hypergrids
+//! for DB / TB / SubTB, baseline vs gfnx-rs.
+//!
+//! Run: `cargo bench --bench table2_hypergrid`
+
+use gfnx::bench::harness::{measure_it_per_sec, BenchTable};
+use gfnx::coordinator::baseline::BaselineTrainer;
+use gfnx::coordinator::config::{artifacts_dir, run_config};
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::envs::hypergrid::HypergridEnv;
+use gfnx::reward::hypergrid::HypergridReward;
+use gfnx::runtime::Artifact;
+
+fn main() {
+    let repeats = 3;
+    let iters = 8;
+    let mut table = BenchTable::new(
+        "Table 2 — hypergrid it/s (small 20², large 10⁸ grids)",
+        &["Grid", "Objective", "Baseline", "gfnx-rs", "Speedup"],
+    );
+    for (grid, d, h, prefix) in [
+        ("2-d, H=20", 2usize, 20usize, "hypergrid_2d_20"),
+        ("8-d, H=10", 8, 10, "hypergrid_8d_10"),
+    ] {
+        let env = HypergridEnv::new(d, h, HypergridReward::standard(h));
+        for obj in ["db", "tb", "subtb"] {
+            let name = format!("{prefix}.{obj}");
+            let art = Artifact::load(&artifacts_dir(), &name)
+                .expect("artifact (run `make artifacts`)");
+            let rc = run_config(prefix, obj);
+            let mut fast_tr = Trainer::new(&env, &art, 0, rc.explore).unwrap();
+            let fast = measure_it_per_sec(2, repeats, iters, || {
+                fast_tr.train_iter(&ExtraSource::None).unwrap();
+            });
+            let mut base_tr = BaselineTrainer::new(&env, &art, 0, rc.explore).unwrap();
+            let base = measure_it_per_sec(1, 2, 2, || {
+                base_tr.train_iter(&ExtraSource::None).unwrap();
+            });
+            table.row(&[
+                grid.to_string(),
+                obj.to_uppercase(),
+                base.to_string(),
+                fast.to_string(),
+                format!("{:.1}x", fast.mean / base.mean),
+            ]);
+        }
+    }
+    table.print();
+}

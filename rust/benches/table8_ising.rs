@@ -1,0 +1,76 @@
+//! Table 8 — EB-GFN on the Ising model: mean −log RMSE between the learned
+//! coupling matrix J_φ and the data-generating J = σ·A_N, across coupling
+//! strengths σ (higher is better).
+//!
+//! Budget default: 3×3 torus (the `ising_small` artifact) over the paper's σ
+//! grid; `make artifacts-paper` + GFNX_BENCH_PAPER=1 adds N = 9/10.
+//!
+//! Run: `cargo bench --bench table8_ising`
+
+use gfnx::bench::harness::BenchTable;
+use gfnx::coordinator::config::artifacts_dir;
+use gfnx::coordinator::ebgfn::{EbGfnTrainer, SharedIsingReward};
+use gfnx::data::ising_mcmc::generate_ising_dataset;
+use gfnx::envs::ising::IsingEnv;
+use gfnx::reward::ising::torus_adjacency;
+use gfnx::runtime::Artifact;
+use gfnx::util::rng::Rng;
+use gfnx::util::stats::Welford;
+
+fn run_sigma(n: usize, artifact: &str, sigma: f64, iters: u64, seeds: u64) -> (f64, f64) {
+    let mut w = Welford::new();
+    for seed in 0..seeds {
+        let mut j_true = torus_adjacency(n);
+        j_true.scale(sigma);
+        let mut rng = Rng::new(seed * 31 + 7);
+        let dataset = generate_ising_dataset(n, sigma, 2000, &mut rng);
+        let reward = SharedIsingReward::zeros(n * n);
+        let env = IsingEnv::lattice(n, reward.clone());
+        let art = Artifact::load(&artifacts_dir(), artifact).expect("artifact");
+        let mut trainer = EbGfnTrainer::new(&env, &art, reward, dataset, seed).unwrap();
+        let mut best = f64::NEG_INFINITY;
+        for _ in 0..iters {
+            trainer.train_iter().unwrap();
+            // Paper protocol: stop at the best J error (§B.5).
+            best = best.max(trainer.neg_log_rmse(&j_true));
+        }
+        w.push(best);
+    }
+    (w.mean(), w.std())
+}
+
+fn main() {
+    let iters: u64 = std::env::var("GFNX_BENCH_TRAIN_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+    let seeds = 2u64;
+    let mut table = BenchTable::new(
+        "Table 8 — EB-GFN mean −log RMSE(J_φ, J) per coupling σ (higher better)",
+        &["Lattice", "sigma", "-log RMSE (mean±std)"],
+    );
+    for sigma in [0.1, 0.2, 0.3, 0.4, 0.5, -0.1, -0.2] {
+        let (mean, std) = run_sigma(3, "ising_small.tb", sigma, iters, seeds);
+        table.row(&[
+            "3x3".to_string(),
+            format!("{sigma:+.1}"),
+            format!("{mean:.2} ± {std:.2}"),
+        ]);
+    }
+    if std::env::var("GFNX_BENCH_PAPER").is_ok() {
+        for (n, art, sigmas) in [
+            (9usize, "ising_n9.tb", vec![-0.1, -0.2]),
+            (10, "ising_n10.tb", vec![0.1, 0.2, 0.3, 0.4, 0.5]),
+        ] {
+            for sigma in sigmas {
+                let (mean, std) = run_sigma(n, art, sigma, iters, 1);
+                table.row(&[
+                    format!("{n}x{n}"),
+                    format!("{sigma:+.1}"),
+                    format!("{mean:.2} ± {std:.2}"),
+                ]);
+            }
+        }
+    }
+    table.print();
+}

@@ -1,0 +1,132 @@
+//! Measurement harness for the `cargo bench` targets (no `criterion` in the
+//! image, so we implement the part we need: warmup, repeated timed windows,
+//! it/s mean ± 3·SEM, and a markdown table printer shaped like the paper's
+//! Tables 1–2).
+
+use crate::util::stats::ItPerSec;
+use std::time::Instant;
+
+/// Measure iterations/second of `step` (one call = one training iteration).
+///
+/// Runs `warmup` untimed calls, then `repeats` timed windows of `iters`
+/// calls each, and summarizes the per-window it/s samples as mean ± 3·SEM —
+/// the exact statistic the paper reports.
+pub fn measure_it_per_sec<F: FnMut()>(
+    warmup: usize,
+    repeats: usize,
+    iters: usize,
+    mut step: F,
+) -> ItPerSec {
+    for _ in 0..warmup {
+        step();
+    }
+    let mut samples = Vec::with_capacity(repeats);
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            step();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        samples.push(iters as f64 / dt.max(1e-12));
+    }
+    ItPerSec::from_samples(&samples)
+}
+
+/// Time a single closure, returning seconds.
+pub fn time_once<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+/// A markdown results table, printed at the end of every bench binary.
+pub struct BenchTable {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl BenchTable {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        BenchTable {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "bench table row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Render as github-flavored markdown.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = format!("\n## {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                line.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        s.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        sep.push('\n');
+        s.push_str(&sep);
+        for row in &self.rows {
+            s.push_str(&fmt_row(row, &widths));
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations() {
+        let mut n = 0usize;
+        let r = measure_it_per_sec(2, 3, 10, || n += 1);
+        assert_eq!(n, 2 + 3 * 10);
+        assert!(r.mean > 0.0);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = BenchTable::new("Demo", &["Env", "gfnx"]);
+        t.row_strs(&["Hypergrid", "1560.0±3.6 it/s"]);
+        let r = t.render();
+        assert!(r.contains("## Demo"));
+        assert!(r.contains("| Env"));
+        assert!(r.contains("1560.0±3.6"));
+        assert!(r.lines().filter(|l| l.starts_with('|')).count() == 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_checks_arity() {
+        let mut t = BenchTable::new("x", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+}

@@ -1,0 +1,6 @@
+//! Benchmark support: a criterion-style measurement harness plus the
+//! paper-style table printer used by every `cargo bench` target.
+
+pub mod harness;
+
+pub use harness::{measure_it_per_sec, BenchTable};

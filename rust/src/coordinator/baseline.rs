@@ -1,0 +1,179 @@
+//! Host-synchronized scalar baseline — the comparator standing in for the
+//! paper's torchgfn / author PyTorch implementations (DESIGN.md §3).
+//!
+//! It reproduces the *mechanism* the paper identifies as the bottleneck of
+//! host-side GFlowNet stacks:
+//!
+//! 1. **per-sample dispatch** — each env instance is rolled out with its own
+//!    policy calls (batch-of-one semantics padded into the artifact's fixed
+//!    batch), instead of one vectorized call per step;
+//! 2. **per-call parameter transfer** — the policy parameters are re-uploaded
+//!    to the device for every call, modelling the CPU↔device churn of a
+//!    host-side training loop that does not keep state device-resident.
+//!
+//! Everything else (env logic, objective, optimizer) is identical, so the
+//! it/s ratio isolates exactly the effect the paper measures in Tables 1–2.
+
+use super::explore::EpsSchedule;
+use super::rollout::{ExtraSource, RolloutCtx, TrajBatch};
+use super::trainer::IterStats;
+use crate::envs::{VecEnv, NOOP};
+use crate::runtime::{Artifact, TrainState};
+use crate::util::rng::Rng;
+
+/// Baseline trainer: same artifact, host-synchronized execution.
+pub struct BaselineTrainer<'a, E: VecEnv> {
+    pub env: &'a E,
+    pub art: &'a Artifact,
+    pub state: TrainState,
+    pub ctx: RolloutCtx,
+    pub rng: Rng,
+    pub explore: EpsSchedule,
+    pub step: u64,
+    mdb_deltas: bool,
+}
+
+impl<'a, E: VecEnv> BaselineTrainer<'a, E> {
+    pub fn new(
+        env: &'a E,
+        art: &'a Artifact,
+        seed: u64,
+        explore: EpsSchedule,
+    ) -> anyhow::Result<Self> {
+        Ok(BaselineTrainer {
+            env,
+            art,
+            state: art.init_state()?,
+            ctx: RolloutCtx::for_artifact(art),
+            rng: Rng::new(seed),
+            explore,
+            step: 0,
+            mdb_deltas: art.manifest.config.loss == "mdb",
+        })
+    }
+
+    /// One baseline iteration: roll each of the batch's trajectories
+    /// *sequentially*, with a fresh parameter upload before every policy
+    /// call (the host-synchronized pattern), then run the same train step.
+    pub fn train_iter(
+        &mut self,
+        extra: &ExtraSource<'_, E>,
+    ) -> anyhow::Result<(IterStats, Vec<E::Obj>)> {
+        let spec = self.env.spec();
+        let cfg = &self.art.manifest.config;
+        let b = cfg.batch;
+        let t1 = cfg.t_max + 1;
+        let eps = self.explore.at(self.step);
+        let mut batch = TrajBatch::new(b, t1, spec.obs_dim, spec.n_actions, spec.n_bwd_actions);
+        let mut objs: Vec<E::Obj> = Vec::with_capacity(b);
+
+        for row in 0..b {
+            // Scalar env: a batch of one.
+            let mut state = self.env.reset(1);
+            let mut t = 0usize;
+            let mut mask = vec![false; spec.n_actions];
+            let mut bmask = vec![false; spec.n_bwd_actions];
+            let mut obs_row = vec![0.0f32; spec.obs_dim];
+            loop {
+                // Stage this single sample into row 0 of the policy batch
+                // (the rest of the rows are wasted work, exactly like
+                // running a batch-1 model on padded kernels).
+                self.env.obs_into(&state, 0, &mut obs_row);
+                self.env.fwd_mask_into(&state, 0, &mut mask);
+                self.env.bwd_mask_into(&state, 0, &mut bmask);
+                let base_o = row * t1 + t;
+                batch.obs[base_o * spec.obs_dim..(base_o + 1) * spec.obs_dim]
+                    .copy_from_slice(&obs_row);
+                for (j, &m) in mask.iter().enumerate() {
+                    batch.fwd_masks[base_o * spec.n_actions + j] = if m { 1.0 } else { 0.0 };
+                }
+                let any_b = bmask.iter().any(|&m| m);
+                for (j, &m) in bmask.iter().enumerate() {
+                    batch.bwd_masks[base_o * spec.n_bwd_actions + j] =
+                        if m || (!any_b && j == 0) { 1.0 } else { 0.0 };
+                }
+                if let ExtraSource::Energy(f) | ExtraSource::StateLogReward(f) = extra {
+                    batch.extra[row * t1 + t] = f(&state, 0) as f32;
+                }
+                if self.env.is_terminal(&state, 0) {
+                    break;
+                }
+
+                // Host-synchronized policy call: re-upload params, stage a
+                // batch with only row 0 populated, fetch everything back.
+                self.state.refresh_param_bufs()?;
+                self.ctx.obs[..spec.obs_dim].copy_from_slice(&obs_row);
+                for j in 0..spec.n_actions {
+                    self.ctx.fwd_mask[j] = if mask[j] { 1.0 } else { 0.0 };
+                }
+                for j in 0..spec.n_bwd_actions {
+                    self.ctx.bwd_mask[j] = if bmask[j] { 1.0 } else { 0.0 };
+                }
+                // Sentinel-fill the unused rows so the graph stays finite.
+                for i in 1..b {
+                    self.ctx.fwd_mask[i * spec.n_actions] = 1.0;
+                    self.ctx.bwd_mask[i * spec.n_bwd_actions] = 1.0;
+                }
+                let (fwd_logp, _bwd, _f) =
+                    self.state
+                        .policy(self.art, &self.ctx.obs, &self.ctx.fwd_mask, &self.ctx.bwd_mask)?;
+
+                let a = if eps > 0.0 && self.rng.bernoulli(eps) {
+                    self.rng.uniform_masked(&mask) as i32
+                } else {
+                    self.rng.categorical_masked(&fwd_logp[..spec.n_actions], &mask) as i32
+                };
+                batch.fwd_actions[row * (t1 - 1) + t] = a;
+                batch.bwd_actions[row * (t1 - 1) + t] =
+                    self.env.get_backward_action(&state, 0, a);
+                batch.log_pf[row] += fwd_logp[a as usize] as f64;
+                let out = self.env.step(&mut state, &[a]);
+                t += 1;
+                if out.done[0] {
+                    batch.length[row] = t as i32;
+                    batch.log_reward[row] = out.log_reward[0] as f32;
+                }
+            }
+            // Pad the remaining slots with the terminal observation.
+            let len = batch.length[row] as usize;
+            for tt in len + 1..t1 {
+                let src = (row * t1 + len) * spec.obs_dim;
+                let dst = (row * t1 + tt) * spec.obs_dim;
+                batch.obs.copy_within(src..src + spec.obs_dim, dst);
+                batch.fwd_masks[(row * t1 + tt) * spec.n_actions] = 1.0;
+                let bsrc = (row * t1 + len) * spec.n_bwd_actions;
+                let bdst = (row * t1 + tt) * spec.n_bwd_actions;
+                batch.bwd_masks.copy_within(bsrc..bsrc + spec.n_bwd_actions, bdst);
+                batch.extra[row * t1 + tt] = batch.extra[row * t1 + len];
+            }
+            // Terminal slot needs a legal fwd sentinel too.
+            if batch.fwd_masks[(row * t1 + len) * spec.n_actions..]
+                .iter()
+                .take(spec.n_actions)
+                .all(|&x| x == 0.0)
+            {
+                batch.fwd_masks[(row * t1 + len) * spec.n_actions] = 1.0;
+            }
+            objs.push(self.env.extract(&state, 0));
+            let _ = NOOP;
+        }
+
+        if self.mdb_deltas {
+            batch.extra_to_deltas();
+        }
+        self.state.refresh_param_bufs()?; // model the extra sync before update
+        let literals = batch.to_literals()?;
+        let (loss, log_z) = self.state.train_step(self.art, &literals)?;
+        self.step += 1;
+        let bf = b as f64;
+        Ok((
+            IterStats {
+                loss,
+                log_z,
+                mean_log_reward: batch.log_reward.iter().map(|&x| x as f64).sum::<f64>() / bf,
+                mean_length: batch.length.iter().map(|&x| x as f64).sum::<f64>() / bf,
+            },
+            objs,
+        ))
+    }
+}

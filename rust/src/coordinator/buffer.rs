@@ -1,0 +1,137 @@
+//! FIFO terminal-state buffers.
+//!
+//! The paper's TV / JSD protocols measure the empirical distribution of the
+//! **last 2·10⁵ terminal states sampled during training** — a fixed-capacity
+//! FIFO over flattened state indices. A generic object ring buffer backs the
+//! replay-style uses (EB-GFN data batches, AMP top-k feeding).
+
+use std::collections::VecDeque;
+
+/// FIFO over flattened terminal-state indices with O(1) running counts —
+/// evaluating TV/JSD is then O(|X|) with no re-scan of the window.
+pub struct TerminalCounter {
+    cap: usize,
+    window: VecDeque<usize>,
+    counts: Vec<u64>,
+}
+
+impl TerminalCounter {
+    pub fn new(n_states: usize, cap: usize) -> Self {
+        TerminalCounter { cap, window: VecDeque::with_capacity(cap), counts: vec![0; n_states] }
+    }
+
+    pub fn push(&mut self, idx: usize) {
+        if self.window.len() == self.cap {
+            let old = self.window.pop_front().unwrap();
+            self.counts[old] -= 1;
+        }
+        self.window.push_back(idx);
+        self.counts[idx] += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+}
+
+/// Fixed-capacity FIFO ring of arbitrary objects.
+pub struct RingBuffer<T> {
+    cap: usize,
+    items: VecDeque<T>,
+}
+
+impl<T> RingBuffer<T> {
+    pub fn new(cap: usize) -> Self {
+        RingBuffer { cap, items: VecDeque::with_capacity(cap) }
+    }
+
+    pub fn push(&mut self, item: T) {
+        if self.items.len() == self.cap {
+            self.items.pop_front();
+        }
+        self.items.push_back(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.items.iter()
+    }
+
+    /// Sample one element uniformly.
+    pub fn sample<'a>(&'a self, rng: &mut crate::util::rng::Rng) -> Option<&'a T> {
+        if self.items.is_empty() {
+            None
+        } else {
+            Some(&self.items[rng.below(self.items.len())])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn counter_fifo_eviction() {
+        let mut c = TerminalCounter::new(4, 3);
+        c.push(0);
+        c.push(1);
+        c.push(1);
+        assert_eq!(c.counts(), &[1, 2, 0, 0]);
+        c.push(3); // evicts the first 0
+        assert_eq!(c.counts(), &[0, 2, 0, 1]);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn counter_counts_match_window() {
+        let mut c = TerminalCounter::new(10, 100);
+        let mut rng = Rng::new(0);
+        for _ in 0..1_000 {
+            c.push(rng.below(10));
+        }
+        assert_eq!(c.len(), 100);
+        let total: u64 = c.counts().iter().sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn ring_buffer_eviction_order() {
+        let mut r = RingBuffer::new(2);
+        r.push("a");
+        r.push("b");
+        r.push("c");
+        let v: Vec<_> = r.iter().cloned().collect();
+        assert_eq!(v, vec!["b", "c"]);
+    }
+
+    #[test]
+    fn ring_buffer_sampling() {
+        let mut r = RingBuffer::new(5);
+        assert!(r.sample(&mut Rng::new(0)).is_none());
+        for i in 0..5 {
+            r.push(i);
+        }
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let &x = r.sample(&mut rng).unwrap();
+            assert!(x < 5);
+        }
+    }
+}

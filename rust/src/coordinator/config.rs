@@ -1,0 +1,107 @@
+//! Experiment presets mirroring `python/compile/configs.py` plus the paper's
+//! training hyperparameter tables (3–7, 9) that live outside the graphs
+//! (exploration schedules, iteration budgets, buffer sizes).
+
+use super::explore::EpsSchedule;
+
+/// Training-loop hyperparameters for one named experiment.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Artifact name prefix (matches configs.py).
+    pub config_name: &'static str,
+    /// Objective (artifact suffix).
+    pub loss: &'static str,
+    /// Exploration schedule (paper Tables 3–7).
+    pub explore: EpsSchedule,
+    /// Default iteration budget (budget-scaled; `--paper-scale` multiplies).
+    pub iters: u64,
+    /// FIFO window for TV/JSD empirical distributions (paper: 2·10⁵).
+    pub fifo_window: usize,
+}
+
+/// Look up the preset for `<config>.<loss>`.
+pub fn run_config(config_name: &str, loss: &str) -> RunConfig {
+    let explore = match config_name {
+        // Hypergrid: on-policy, no exploration (Table 3).
+        c if c.starts_with("hypergrid") => EpsSchedule::none(),
+        // Bit sequences: constant ε = 1e-3 (Table 4).
+        c if c.starts_with("bitseq") => EpsSchedule::Constant(1e-3),
+        // TFBind8/QM9: ε from 1.0 → 0.0 over 5·10⁴ steps (Table 4).
+        "tfbind8" | "qm9" => EpsSchedule::Linear { start: 1.0, end: 0.0, steps: 50_000 },
+        // AMP: constant ε = 1e-2 (§B.2.2).
+        c if c.starts_with("amp") => EpsSchedule::Constant(1e-2),
+        // Phylo: ε 1.0 → 0.0 for half of training (Table 6).
+        c if c.starts_with("phylo") => EpsSchedule::Linear { start: 1.0, end: 0.0, steps: 5_000 },
+        // Structure learning: ε 1.0 → 0.1 for half of training (Table 7).
+        c if c.starts_with("bayesnet") => {
+            EpsSchedule::Linear { start: 1.0, end: 0.1, steps: 50_000 }
+        }
+        // Ising: on-policy TB (Table 9).
+        c if c.starts_with("ising") => EpsSchedule::none(),
+        _ => EpsSchedule::none(),
+    };
+    let iters = match config_name {
+        c if c.starts_with("hypergrid_small") => 2_000,
+        c if c.starts_with("hypergrid") => 10_000,
+        c if c.starts_with("bitseq") => 2_000,
+        "tfbind8" | "qm9" => 10_000,
+        c if c.starts_with("amp") => 1_000,
+        c if c.starts_with("phylo") => 2_000,
+        c if c.starts_with("bayesnet") => 5_000,
+        c if c.starts_with("ising") => 1_000,
+        _ => 1_000,
+    };
+    RunConfig {
+        config_name: Box::leak(config_name.to_string().into_boxed_str()),
+        loss: Box::leak(loss.to_string().into_boxed_str()),
+        explore,
+        iters,
+        fifo_window: 200_000,
+    }
+}
+
+/// Artifact directory resolution: `GFNX_ARTIFACTS` env var or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("GFNX_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_cover_all_families() {
+        for name in [
+            "hypergrid_4d_20",
+            "bitseq_120_8",
+            "tfbind8",
+            "qm9",
+            "amp",
+            "phylo_ds1",
+            "bayesnet_d5",
+            "ising_n9",
+        ] {
+            let rc = run_config(name, "tb");
+            assert!(rc.iters > 0);
+            assert_eq!(rc.fifo_window, 200_000);
+        }
+    }
+
+    #[test]
+    fn hypergrid_is_on_policy() {
+        match run_config("hypergrid_4d_20", "tb").explore {
+            EpsSchedule::Constant(e) => assert_eq!(e, 0.0),
+            _ => panic!("expected constant 0"),
+        }
+    }
+
+    #[test]
+    fn bayesnet_anneals_to_floor() {
+        match run_config("bayesnet_d5", "mdb").explore {
+            EpsSchedule::Linear { end, .. } => assert!((end - 0.1).abs() < 1e-12),
+            _ => panic!("expected linear"),
+        }
+    }
+}

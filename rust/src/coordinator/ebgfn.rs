@@ -1,0 +1,209 @@
+//! EB-GFN: joint training of an energy-based reward model and a GFlowNet
+//! sampler (Zhang et al. 2022; paper §B.5, Table 8).
+//!
+//! Alternates (1) a GFlowNet TB step on trajectories drawn either from the
+//! current forward policy (prob α) or by walking backward from dataset
+//! samples, and (2) a contrastive-divergence update of the Ising coupling
+//! matrix J_φ, with negative samples drawn from the GFlowNet and filtered by
+//! the MH acceptance test of eq. (20) (K = D, so q_K(x'|x) = P_θ(x')).
+
+use super::rollout::{
+    backward_rollout_score, backward_rollout_to_batch, forward_rollout, ExtraSource, RolloutCtx,
+};
+use super::trainer::IterStats;
+use crate::envs::ising::IsingEnv;
+use crate::reward::RewardModule;
+use crate::runtime::{Artifact, TrainState};
+use crate::util::linalg::Mat;
+use crate::util::rng::Rng;
+use crate::util::stats::rmse;
+use std::sync::{Arc, RwLock};
+
+/// Reward module reading the *learned* coupling matrix (shared with the
+/// trainer, which updates it between iterations).
+#[derive(Clone)]
+pub struct SharedIsingReward {
+    pub j: Arc<RwLock<Mat>>,
+}
+
+impl SharedIsingReward {
+    pub fn zeros(d: usize) -> Self {
+        SharedIsingReward { j: Arc::new(RwLock::new(Mat::zeros(d, d))) }
+    }
+
+    pub fn energy(&self, x: &[i8]) -> f64 {
+        crate::reward::ising::ising_energy(&self.j.read().unwrap(), x)
+    }
+}
+
+impl RewardModule<Vec<i8>> for SharedIsingReward {
+    fn log_reward(&self, obj: &Vec<i8>) -> f64 {
+        -self.energy(obj)
+    }
+}
+
+/// The alternating EB-GFN trainer.
+pub struct EbGfnTrainer<'a> {
+    pub env: &'a IsingEnv<SharedIsingReward>,
+    pub art: &'a Artifact,
+    pub state: TrainState,
+    pub ctx: RolloutCtx,
+    pub rng: Rng,
+    /// Probability of drawing GFN training trajectories from P_F (vs from
+    /// backward walks over dataset samples).
+    pub alpha: f64,
+    /// Learning rate of the CD update on J.
+    pub j_lr: f64,
+    pub dataset: Vec<Vec<i8>>,
+    pub reward: SharedIsingReward,
+    pub step: u64,
+}
+
+impl<'a> EbGfnTrainer<'a> {
+    pub fn new(
+        env: &'a IsingEnv<SharedIsingReward>,
+        art: &'a Artifact,
+        reward: SharedIsingReward,
+        dataset: Vec<Vec<i8>>,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!dataset.is_empty(), "EB-GFN needs a dataset");
+        Ok(EbGfnTrainer {
+            env,
+            art,
+            state: art.init_state()?,
+            ctx: RolloutCtx::for_artifact(art),
+            rng: Rng::new(seed),
+            alpha: 0.5,
+            j_lr: 0.02,
+            dataset,
+            reward,
+            step: 0,
+        })
+    }
+
+    /// One EB-GFN iteration: GFN TB step + CD update of J.
+    pub fn train_iter(&mut self) -> anyhow::Result<IterStats> {
+        let b = self.art.manifest.config.batch;
+
+        // ---- (1) GFlowNet update. ------------------------------------
+        let use_forward = self.rng.bernoulli(self.alpha);
+        let (batch, objs) = if use_forward {
+            forward_rollout(
+                self.env, self.art, &self.state, &mut self.ctx, &mut self.rng, 0.0,
+                &ExtraSource::None,
+            )?
+        } else {
+            // Backward trajectories from data samples.
+            let data: Vec<Vec<i8>> = (0..b)
+                .map(|_| self.dataset[self.rng.below(self.dataset.len())].clone())
+                .collect();
+            backward_rollout_to_batch(
+                self.env, self.art, &self.state, &mut self.ctx, &mut self.rng, &data,
+            )?
+        };
+        let literals = batch.to_literals()?;
+        let (loss, log_z) = self.state.train_step(self.art, &literals)?;
+
+        // ---- (2) Contrastive-divergence update of J. -------------------
+        // Positive phase: dataset samples.
+        let d = self.env.d;
+        let mut pos = Mat::zeros(d, d);
+        let pos_batch: Vec<&Vec<i8>> = (0..b)
+            .map(|_| &self.dataset[self.rng.below(self.dataset.len())])
+            .collect();
+        for x in &pos_batch {
+            accumulate_outer(&mut pos, x);
+        }
+        pos.scale(1.0 / b as f64);
+
+        // Negative phase: fresh P_θ samples (K = D ⇒ full regeneration),
+        // MH-filtered against the paired positive samples (eq. 20).
+        let (neg_batch, neg_objs) = if use_forward {
+            (batch, objs)
+        } else {
+            forward_rollout(
+                self.env, self.art, &self.state, &mut self.ctx, &mut self.rng, 0.0,
+                &ExtraSource::None,
+            )?
+        };
+        let mut neg = Mat::zeros(d, d);
+        let mut accepted = 0usize;
+        // Score the data side of the MH ratio with backward rollouts.
+        let data_scores = backward_rollout_score(
+            self.env,
+            self.art,
+            &self.state,
+            &mut self.ctx,
+            &mut self.rng,
+            &pos_batch.iter().map(|x| (*x).clone()).collect::<Vec<_>>(),
+        )?;
+        for i in 0..b {
+            let x = pos_batch[i];
+            let xp = &neg_objs[i];
+            let (log_pf_x, log_pb_x, _) = data_scores[i];
+            let log_pf_xp = neg_batch.log_pf[i];
+            let log_pb_xp = neg_batch.log_pb[i];
+            let log_acc = (-self.reward.energy(xp) + self.reward.energy(x))
+                + (log_pb_x + log_pf_xp)
+                - (log_pb_xp + log_pf_x);
+            let take = log_acc >= 0.0 || self.rng.uniform().ln() < log_acc;
+            if take {
+                accumulate_outer(&mut neg, xp);
+                accepted += 1;
+            } else {
+                accumulate_outer(&mut neg, x);
+            }
+        }
+        neg.scale(1.0 / b as f64);
+
+        {
+            let mut j = self.reward.j.write().unwrap();
+            for r in 0..d {
+                for c in 0..d {
+                    if r == c {
+                        continue; // diagonal is gauge (x_i² = 1)
+                    }
+                    let g = pos.get(r, c) - neg.get(r, c);
+                    j.add_at(r, c, self.j_lr * g);
+                }
+            }
+        }
+        self.step += 1;
+        let _ = accepted;
+        Ok(IterStats {
+            loss,
+            log_z,
+            mean_log_reward: 0.0,
+            mean_length: d as f64,
+        })
+    }
+
+    /// Paper Table 8 metric: −log RMSE(J_φ, J_true) over off-diagonal
+    /// entries.
+    pub fn neg_log_rmse(&self, j_true: &Mat) -> f64 {
+        let j = self.reward.j.read().unwrap();
+        let d = j.rows;
+        let mut a = Vec::with_capacity(d * d - d);
+        let mut b = Vec::with_capacity(d * d - d);
+        for r in 0..d {
+            for c in 0..d {
+                if r != c {
+                    a.push(j.get(r, c));
+                    b.push(j_true.get(r, c));
+                }
+            }
+        }
+        -rmse(&a, &b).max(1e-12).ln()
+    }
+}
+
+fn accumulate_outer(m: &mut Mat, x: &[i8]) {
+    let d = x.len();
+    for r in 0..d {
+        let xr = x[r] as f64;
+        for c in 0..d {
+            m.add_at(r, c, xr * x[c] as f64);
+        }
+    }
+}

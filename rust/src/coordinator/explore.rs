@@ -1,0 +1,58 @@
+//! ε-uniform exploration schedules (paper Tables 4–7 use constant ε and
+//! linearly-annealed ε from 1.0 to 0.0/0.1 over a fraction of training).
+
+/// Exploration-rate schedule.
+#[derive(Clone, Copy, Debug)]
+pub enum EpsSchedule {
+    Constant(f64),
+    /// Linear from `start` to `end` over `steps`, then `end`.
+    Linear { start: f64, end: f64, steps: u64 },
+}
+
+impl EpsSchedule {
+    pub fn at(&self, step: u64) -> f64 {
+        match *self {
+            EpsSchedule::Constant(e) => e,
+            EpsSchedule::Linear { start, end, steps } => {
+                if steps == 0 || step >= steps {
+                    end
+                } else {
+                    start + (end - start) * step as f64 / steps as f64
+                }
+            }
+        }
+    }
+
+    /// The paper's hypergrid setting: no exploration.
+    pub fn none() -> Self {
+        EpsSchedule::Constant(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_flat() {
+        let e = EpsSchedule::Constant(0.25);
+        assert_eq!(e.at(0), 0.25);
+        assert_eq!(e.at(1_000_000), 0.25);
+    }
+
+    #[test]
+    fn linear_anneals_and_clamps() {
+        let e = EpsSchedule::Linear { start: 1.0, end: 0.0, steps: 100 };
+        assert_eq!(e.at(0), 1.0);
+        assert!((e.at(50) - 0.5).abs() < 1e-12);
+        assert_eq!(e.at(100), 0.0);
+        assert_eq!(e.at(10_000), 0.0);
+    }
+
+    #[test]
+    fn linear_to_nonzero_floor() {
+        let e = EpsSchedule::Linear { start: 1.0, end: 0.1, steps: 10 };
+        assert!((e.at(5) - 0.55).abs() < 1e-12);
+        assert_eq!(e.at(20), 0.1);
+    }
+}

@@ -1,0 +1,21 @@
+//! The L3 coordinator: rollout orchestration, trajectory batching, the
+//! training loop, evaluation protocols, the EB-GFN alternating trainer, and
+//! the host-synchronized baseline comparator.
+//!
+//! The coordinator owns everything outside the neural network: it drives the
+//! vectorized Rust environments, samples actions from the AOT policy graph's
+//! log-probabilities, assembles padded trajectory batches in the exact
+//! layout the train-step artifact expects, and invokes the fused
+//! rollout-loss-grad-Adam step — one PJRT dispatch per training iteration.
+
+pub mod config;
+pub mod rollout;
+pub mod buffer;
+pub mod explore;
+pub mod trainer;
+pub mod eval;
+pub mod baseline;
+pub mod ebgfn;
+
+pub use rollout::{RolloutCtx, TrajBatch};
+pub use trainer::{IterStats, Trainer};

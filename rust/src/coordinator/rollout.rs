@@ -1,0 +1,564 @@
+//! Vectorized rollouts driven by the AOT policy graph.
+//!
+//! Forward rollouts sample trajectories from ε-perturbed P_F; backward
+//! rollouts start from injected terminal objects and walk P_B (used for the
+//! Monte-Carlo P̂_θ estimator and EB-GFN's data-driven trajectories). Both
+//! produce a [`TrajBatch`] padded to the artifact's fixed [B, T+1] layout.
+
+use crate::envs::{VecEnv, NOOP};
+use crate::runtime::artifact::{literal_f32, literal_i32, Artifact};
+use crate::runtime::state::TrainState;
+use crate::util::rng::Rng;
+use xla::Literal;
+
+/// Per-state scalar injected into the batch's `extra` channel.
+pub enum ExtraSource<'a, E: VecEnv> {
+    /// Fill with zeros (TB/DB/SubTB).
+    None,
+    /// Per-state energy E(s) (FLDB; e.g. accumulated parsimony).
+    Energy(&'a dyn Fn(&E::State, usize) -> f64),
+    /// Per-state log R(s) for every-state-terminal envs (MDB); the batch
+    /// assembly converts consecutive differences into delta-scores.
+    StateLogReward(&'a dyn Fn(&E::State, usize) -> f64),
+}
+
+/// A padded trajectory batch in the artifact's train-step layout.
+pub struct TrajBatch {
+    pub b: usize,
+    pub t1: usize,
+    pub obs_dim: usize,
+    pub n_actions: usize,
+    pub n_bwd: usize,
+    pub obs: Vec<f32>,         // [B, T1, O]
+    pub fwd_actions: Vec<i32>, // [B, T]
+    pub bwd_actions: Vec<i32>, // [B, T]
+    pub fwd_masks: Vec<f32>,   // [B, T1, A]
+    pub bwd_masks: Vec<f32>,   // [B, T1, A']
+    pub length: Vec<i32>,      // [B]
+    pub log_reward: Vec<f32>,  // [B]
+    pub extra: Vec<f32>,       // [B, T1] (per-state; see ExtraSource)
+    /// Σ_t log P_F of the sampled actions (no ε mixing), per row.
+    pub log_pf: Vec<f64>,
+    /// Σ_t log P_B of the matching backward actions, per row.
+    pub log_pb: Vec<f64>,
+}
+
+impl TrajBatch {
+    pub fn new(b: usize, t1: usize, obs_dim: usize, n_actions: usize, n_bwd: usize) -> Self {
+        let t = t1 - 1;
+        TrajBatch {
+            b,
+            t1,
+            obs_dim,
+            n_actions,
+            n_bwd,
+            obs: vec![0.0; b * t1 * obs_dim],
+            fwd_actions: vec![0; b * t],
+            bwd_actions: vec![0; b * t],
+            fwd_masks: vec![0.0; b * t1 * n_actions],
+            bwd_masks: vec![0.0; b * t1 * n_bwd],
+            length: vec![0; b],
+            log_reward: vec![0.0; b],
+            extra: vec![0.0; b * t1],
+            log_pf: vec![0.0; b],
+            log_pb: vec![0.0; b],
+        }
+    }
+
+    #[inline]
+    fn obs_slot(&mut self, row: usize, t: usize) -> &mut [f32] {
+        let o = self.obs_dim;
+        let base = (row * self.t1 + t) * o;
+        &mut self.obs[base..base + o]
+    }
+
+    #[inline]
+    fn fwd_mask_slot(&mut self, row: usize, t: usize) -> &mut [f32] {
+        let a = self.n_actions;
+        let base = (row * self.t1 + t) * a;
+        &mut self.fwd_masks[base..base + a]
+    }
+
+    #[inline]
+    fn bwd_mask_slot(&mut self, row: usize, t: usize) -> &mut [f32] {
+        let a = self.n_bwd;
+        let base = (row * self.t1 + t) * a;
+        &mut self.bwd_masks[base..base + a]
+    }
+
+    /// Convert per-state `extra` log-rewards into per-transition deltas
+    /// (MDB): extra[b, t] ← extra[b, t+1] − extra[b, t] for t < T.
+    pub fn extra_to_deltas(&mut self) {
+        for row in 0..self.b {
+            let base = row * self.t1;
+            for t in 0..self.t1 - 1 {
+                self.extra[base + t] = self.extra[base + t + 1] - self.extra[base + t];
+            }
+            self.extra[base + self.t1 - 1] = 0.0;
+        }
+    }
+
+    /// Serialize into the train-step literal order
+    /// (obs, fwd_actions, bwd_actions, fwd_masks, bwd_masks, length,
+    /// log_reward, extra).
+    pub fn to_literals(&self) -> anyhow::Result<Vec<Literal>> {
+        let (b, t1, t) = (self.b, self.t1, self.t1 - 1);
+        Ok(vec![
+            literal_f32(&self.obs, &[b, t1, self.obs_dim])?,
+            literal_i32(&self.fwd_actions, &[b, t])?,
+            literal_i32(&self.bwd_actions, &[b, t])?,
+            literal_f32(&self.fwd_masks, &[b, t1, self.n_actions])?,
+            literal_f32(&self.bwd_masks, &[b, t1, self.n_bwd])?,
+            literal_i32(&self.length, &[b])?,
+            literal_f32(&self.log_reward, &[b])?,
+            literal_f32(&self.extra, &[b, t1])?,
+        ])
+    }
+}
+
+/// Reusable rollout scratch: host-side obs/mask staging buffers sized for
+/// one policy call (avoids reallocation in the hot loop).
+pub struct RolloutCtx {
+    pub obs: Vec<f32>,
+    pub fwd_mask: Vec<f32>,
+    pub bwd_mask: Vec<f32>,
+    mask_scratch: Vec<bool>,
+    bwd_scratch: Vec<bool>,
+}
+
+impl RolloutCtx {
+    pub fn for_artifact(art: &Artifact) -> Self {
+        let c = &art.manifest.config;
+        RolloutCtx {
+            obs: vec![0.0; c.batch * c.obs_dim],
+            fwd_mask: vec![0.0; c.batch * c.n_actions],
+            bwd_mask: vec![0.0; c.batch * c.n_bwd_actions],
+            mask_scratch: vec![false; c.n_actions],
+            bwd_scratch: vec![false; c.n_bwd_actions],
+        }
+    }
+
+    /// Stage obs + masks of the current env states into the policy-call
+    /// buffers; rows that are `skip` get a sentinel (obs zeros kept from the
+    /// last write, action-0-legal masks) so the masked softmax stays finite.
+    fn stage<E: VecEnv>(&mut self, env: &E, state: &E::State, skip: &[bool]) {
+        let spec = env.spec();
+        let b = skip.len();
+        for i in 0..b {
+            let obs_row = &mut self.obs[i * spec.obs_dim..(i + 1) * spec.obs_dim];
+            env.obs_into(state, i, obs_row);
+            let fm = &mut self.fwd_mask[i * spec.n_actions..(i + 1) * spec.n_actions];
+            let bm = &mut self.bwd_mask[i * spec.n_bwd_actions..(i + 1) * spec.n_bwd_actions];
+            if skip[i] {
+                fm.iter_mut().for_each(|x| *x = 0.0);
+                bm.iter_mut().for_each(|x| *x = 0.0);
+                fm[0] = 1.0;
+                bm[0] = 1.0;
+            } else {
+                env.fwd_mask_into(state, i, &mut self.mask_scratch);
+                for (dst, &m) in fm.iter_mut().zip(&self.mask_scratch) {
+                    *dst = if m { 1.0 } else { 0.0 };
+                }
+                env.bwd_mask_into(state, i, &mut self.bwd_scratch);
+                for (dst, &m) in bm.iter_mut().zip(&self.bwd_scratch) {
+                    *dst = if m { 1.0 } else { 0.0 };
+                }
+            }
+        }
+    }
+}
+
+fn fill_extra<E: VecEnv>(
+    extra: &ExtraSource<'_, E>,
+    state: &E::State,
+    batch: &mut TrajBatch,
+    t: usize,
+    active: &[bool],
+) {
+    match extra {
+        ExtraSource::None => {}
+        ExtraSource::Energy(f) | ExtraSource::StateLogReward(f) => {
+            for (i, &a) in active.iter().enumerate() {
+                if a {
+                    batch.extra[i * batch.t1 + t] = f(state, i) as f32;
+                }
+            }
+        }
+    }
+}
+
+/// Sample a forward trajectory batch from the current policy.
+///
+/// `eps` is the ε-uniform exploration rate; `log_pf` records the *policy's*
+/// log-probabilities of the chosen actions (not the ε-mixture), as the
+/// objectives require.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_rollout<E: VecEnv>(
+    env: &E,
+    art: &Artifact,
+    ts: &TrainState,
+    ctx: &mut RolloutCtx,
+    rng: &mut Rng,
+    eps: f64,
+    extra: &ExtraSource<'_, E>,
+) -> anyhow::Result<(TrajBatch, Vec<E::Obj>)> {
+    let spec = env.spec();
+    let cfg = &art.manifest.config;
+    let b = cfg.batch;
+    debug_assert_eq!(spec.obs_dim, cfg.obs_dim, "env/artifact obs_dim mismatch");
+    debug_assert_eq!(spec.n_actions, cfg.n_actions);
+    debug_assert_eq!(spec.t_max, cfg.t_max);
+    let t1 = cfg.t_max + 1;
+    let mut batch = TrajBatch::new(b, t1, spec.obs_dim, spec.n_actions, spec.n_bwd_actions);
+    let mut state = env.reset(b);
+    let mut done = vec![false; b];
+    let mut actions = vec![NOOP; b];
+
+    for t in 0..spec.t_max {
+        if done.iter().all(|&d| d) {
+            break; // padding slots are filled from the terminal staging below
+        }
+        let _ = t;
+        ctx.stage(env, &state, &done);
+        // Copy staged rows into the batch at slot t (no intermediate
+        // allocations — this runs once per env step).
+        for i in 0..b {
+            batch.obs_slot(i, t)
+                .copy_from_slice(&ctx.obs[i * spec.obs_dim..(i + 1) * spec.obs_dim]);
+            batch
+                .fwd_mask_slot(i, t)
+                .copy_from_slice(&ctx.fwd_mask[i * spec.n_actions..(i + 1) * spec.n_actions]);
+            batch.bwd_mask_slot(i, t).copy_from_slice(
+                &ctx.bwd_mask[i * spec.n_bwd_actions..(i + 1) * spec.n_bwd_actions],
+            );
+        }
+        let active: Vec<bool> = done.iter().map(|&d| !d).collect();
+        fill_extra(extra, &state, &mut batch, t, &active);
+
+        let (fwd_logp, _bwd_logp, _flow) = ts.policy(art, &ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
+        for i in 0..b {
+            if done[i] {
+                actions[i] = NOOP;
+                continue;
+            }
+            // ε-uniform exploration, sampling from the masked log-probs.
+            env.fwd_mask_into(&state, i, &mut ctx.mask_scratch);
+            let a = if eps > 0.0 && rng.bernoulli(eps) {
+                rng.uniform_masked(&ctx.mask_scratch) as i32
+            } else {
+                let row = &fwd_logp[i * spec.n_actions..(i + 1) * spec.n_actions];
+                rng.categorical_masked(row, &ctx.mask_scratch) as i32
+            };
+            actions[i] = a;
+            batch.fwd_actions[i * (t1 - 1) + t] = a;
+            batch.log_pf[i] += fwd_logp[i * spec.n_actions + a as usize] as f64;
+            batch.bwd_actions[i * (t1 - 1) + t] = env.get_backward_action(&state, i, a);
+        }
+        let out = env.step(&mut state, &actions);
+        for i in 0..b {
+            if !done[i] && out.done[i] {
+                done[i] = true;
+                batch.length[i] = (t + 1) as i32;
+                batch.log_reward[i] = out.log_reward[i] as f32;
+            }
+        }
+    }
+    // Final state slots: stage terminal obs/masks at index `length`.
+    ctx.stage(env, &state, &vec![false; b]);
+    for i in 0..b {
+        debug_assert!(env.is_terminal(&state, i), "rollout ended non-terminal");
+        let len = batch.length[i] as usize;
+        let o = &ctx.obs[i * spec.obs_dim..(i + 1) * spec.obs_dim];
+        let bm = &ctx.bwd_mask[i * spec.n_bwd_actions..(i + 1) * spec.n_bwd_actions];
+        let bm_empty = bm.iter().all(|&x| x == 0.0);
+        for tt in len..t1 {
+            batch.obs_slot(i, tt).copy_from_slice(o);
+            let fm = batch.fwd_mask_slot(i, tt);
+            fm.iter_mut().for_each(|x| *x = 0.0);
+            fm[0] = 1.0;
+            batch.bwd_mask_slot(i, tt).copy_from_slice(bm);
+            if bm_empty {
+                batch.bwd_mask_slot(i, tt)[0] = 1.0;
+            }
+        }
+    }
+    // extra at the terminal slot (index = length; fill every t ≥ len too so
+    // FLDB's E(s_{len}) is present).
+    match extra {
+        ExtraSource::None => {}
+        ExtraSource::Energy(f) | ExtraSource::StateLogReward(f) => {
+            for i in 0..b {
+                let v = f(&state, i) as f32;
+                for tt in batch.length[i] as usize..t1 {
+                    batch.extra[i * t1 + tt] = v;
+                }
+            }
+        }
+    }
+    // Accumulate log P_B of the recorded backward actions. We recompute by
+    // walking the trajectory backward with uniform-P_B counting (uniform_pb
+    // configs) — learned-P_B scoring happens inside the train graph; host
+    // log_pb here is only used by eval protocols which pass uniform_pb.
+    for i in 0..b {
+        let len = batch.length[i] as usize;
+        let mut lp = 0.0f64;
+        for t in 0..len {
+            // Count legal backward actions at s_{t+1} from the staged masks.
+            let bm = &batch.bwd_masks
+                [(i * t1 + t + 1) * spec.n_bwd_actions..(i * t1 + t + 2) * spec.n_bwd_actions];
+            let cnt: f32 = bm.iter().sum();
+            lp -= (cnt.max(1.0) as f64).ln();
+        }
+        batch.log_pb[i] = lp;
+    }
+    let objs: Vec<E::Obj> = (0..b).map(|i| env.extract(&state, i)).collect();
+    Ok((batch, objs))
+}
+
+/// Walk backward from terminal objects and assemble a **forward-oriented**
+/// trajectory batch (EB-GFN trains the GFlowNet on backward walks from data
+/// samples; paper §B.5). Also fills `log_pf` / `log_pb` of the walks.
+pub fn backward_rollout_to_batch<E: VecEnv>(
+    env: &E,
+    art: &Artifact,
+    ts: &TrainState,
+    ctx: &mut RolloutCtx,
+    rng: &mut Rng,
+    objs: &[E::Obj],
+) -> anyhow::Result<(TrajBatch, Vec<E::Obj>)> {
+    let spec = env.spec();
+    let cfg = &art.manifest.config;
+    let b = cfg.batch;
+    assert_eq!(objs.len(), b, "backward batch must fill the artifact batch");
+    let t1 = cfg.t_max + 1;
+
+    struct RowRec {
+        obs: Vec<Vec<f32>>,
+        fmask: Vec<Vec<f32>>,
+        bmask: Vec<Vec<f32>>,
+        fwd_a: Vec<i32>,
+        bwd_a: Vec<i32>,
+        log_pf: f64,
+        log_pb: f64,
+    }
+    let mut recs: Vec<RowRec> = (0..b)
+        .map(|_| RowRec {
+            obs: Vec::new(),
+            fmask: Vec::new(),
+            bmask: Vec::new(),
+            fwd_a: Vec::new(),
+            bwd_a: Vec::new(),
+            log_pf: 0.0,
+            log_pb: 0.0,
+        })
+        .collect();
+
+    let mut state = env.inject_terminal(objs);
+    let mut done: Vec<bool> = (0..b).map(|i| env.is_initial(&state, i)).collect();
+    let mut pending: Vec<i32> = vec![NOOP; b];
+
+    for _t in 0..spec.t_max + 1 {
+        ctx.stage(env, &state, &vec![false; b]);
+        let (fwd_logp, bwd_logp, _flow) = ts.policy(art, &ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
+        for i in 0..b {
+            if pending[i] != NOOP {
+                recs[i].log_pf += fwd_logp[i * spec.n_actions + pending[i] as usize] as f64;
+                pending[i] = NOOP;
+            }
+        }
+        // Snapshot the visited state for every not-yet-finished row (the
+        // terminal state is snapshot index 0).
+        for i in 0..b {
+            if recs[i].obs.len() <= recs[i].fwd_a.len() {
+                recs[i]
+                    .obs
+                    .push(ctx.obs[i * spec.obs_dim..(i + 1) * spec.obs_dim].to_vec());
+                recs[i].fmask.push(
+                    ctx.fwd_mask[i * spec.n_actions..(i + 1) * spec.n_actions].to_vec(),
+                );
+                recs[i].bmask.push(
+                    ctx.bwd_mask[i * spec.n_bwd_actions..(i + 1) * spec.n_bwd_actions].to_vec(),
+                );
+            }
+        }
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let mut actions = vec![NOOP; b];
+        for i in 0..b {
+            if done[i] {
+                continue;
+            }
+            env.bwd_mask_into(&state, i, &mut ctx.bwd_scratch);
+            let ba = if cfg.uniform_pb {
+                rng.uniform_masked(&ctx.bwd_scratch) as i32
+            } else {
+                let row = &bwd_logp[i * spec.n_bwd_actions..(i + 1) * spec.n_bwd_actions];
+                rng.categorical_masked(row, &ctx.bwd_scratch) as i32
+            };
+            actions[i] = ba;
+            recs[i].log_pb += if cfg.uniform_pb {
+                -((ctx.bwd_scratch.iter().filter(|&&m| m).count() as f64).ln())
+            } else {
+                bwd_logp[i * spec.n_bwd_actions + ba as usize] as f64
+            };
+            recs[i].bwd_a.push(ba);
+            let fa = env.forward_action_of(&state, i, ba);
+            recs[i].fwd_a.push(fa);
+            pending[i] = fa;
+        }
+        env.backward_step(&mut state, &actions);
+        for i in 0..b {
+            if !done[i] && env.is_initial(&state, i) {
+                done[i] = true;
+            }
+        }
+    }
+    if pending.iter().any(|&p| p != NOOP) {
+        ctx.stage(env, &state, &vec![false; b]);
+        let (fwd_logp, _b, _f) = ts.policy(art, &ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
+        for i in 0..b {
+            if pending[i] != NOOP {
+                recs[i].log_pf += fwd_logp[i * spec.n_actions + pending[i] as usize] as f64;
+                pending[i] = NOOP;
+            }
+        }
+        // Snapshot s0 for rows that finished on the final step.
+        for i in 0..b {
+            if recs[i].obs.len() <= recs[i].fwd_a.len() {
+                recs[i]
+                    .obs
+                    .push(ctx.obs[i * spec.obs_dim..(i + 1) * spec.obs_dim].to_vec());
+                recs[i].fmask.push(
+                    ctx.fwd_mask[i * spec.n_actions..(i + 1) * spec.n_actions].to_vec(),
+                );
+                recs[i].bmask.push(
+                    ctx.bwd_mask[i * spec.n_bwd_actions..(i + 1) * spec.n_bwd_actions].to_vec(),
+                );
+            }
+        }
+    }
+
+    // Assemble the forward-oriented batch: visit k ↔ forward slot len − k.
+    let mut batch = TrajBatch::new(b, t1, spec.obs_dim, spec.n_actions, spec.n_bwd_actions);
+    for i in 0..b {
+        let rec = &recs[i];
+        let len = rec.fwd_a.len();
+        debug_assert_eq!(rec.obs.len(), len + 1, "row {i}: visits vs transitions");
+        batch.length[i] = len as i32;
+        batch.log_reward[i] = env.log_reward_obj(&objs[i]) as f32;
+        batch.log_pf[i] = rec.log_pf;
+        batch.log_pb[i] = rec.log_pb;
+        for t in 0..=len {
+            let visit = len - t;
+            batch.obs_slot(i, t).copy_from_slice(&rec.obs[visit]);
+            batch.fwd_mask_slot(i, t).copy_from_slice(&rec.fmask[visit]);
+            batch.bwd_mask_slot(i, t).copy_from_slice(&rec.bmask[visit]);
+        }
+        for t in 0..len {
+            // Transition s_t → s_{t+1} was recorded when stepping back from
+            // visit len−1−t… which is rec index (len − 1 − t).
+            batch.fwd_actions[i * (t1 - 1) + t] = rec.fwd_a[len - 1 - t];
+            batch.bwd_actions[i * (t1 - 1) + t] = rec.bwd_a[len - 1 - t];
+        }
+        // Padding slots: terminal obs + sentinel masks.
+        for tt in len + 1..t1 {
+            let term = rec.obs[0].clone();
+            batch.obs_slot(i, tt).copy_from_slice(&term);
+            let fm = batch.fwd_mask_slot(i, tt);
+            fm.iter_mut().for_each(|x| *x = 0.0);
+            fm[0] = 1.0;
+            let bsrc = rec.bmask[0].clone();
+            batch.bwd_mask_slot(i, tt).copy_from_slice(&bsrc);
+            if bsrc.iter().all(|&x| x == 0.0) {
+                batch.bwd_mask_slot(i, tt)[0] = 1.0;
+            }
+        }
+    }
+    Ok((batch, objs.to_vec()))
+}
+
+/// Walk backward from terminal objects under P_B (uniform over legal
+/// parents), scoring Σ log P_B and Σ log P_F of the reversed trajectory.
+/// Returns per-row (log_pf, log_pb, length).
+pub fn backward_rollout_score<E: VecEnv>(
+    env: &E,
+    art: &Artifact,
+    ts: &TrainState,
+    ctx: &mut RolloutCtx,
+    rng: &mut Rng,
+    objs: &[E::Obj],
+) -> anyhow::Result<Vec<(f64, f64, usize)>> {
+    let spec = env.spec();
+    let cfg = &art.manifest.config;
+    let b = cfg.batch;
+    assert!(objs.len() <= b, "too many objects for artifact batch");
+    // Pad with clones of the first object.
+    let mut padded: Vec<E::Obj> = objs.to_vec();
+    while padded.len() < b {
+        padded.push(objs[0].clone());
+    }
+    let mut state = env.inject_terminal(&padded);
+    let mut done: Vec<bool> = (0..b).map(|i| env.is_initial(&state, i)).collect();
+    let mut scores: Vec<(f64, f64, usize)> = vec![(0.0, 0.0, 0); b];
+    // Pending forward action to score at the *next* policy call (the state
+    // after backward_step is the action's source state).
+    let mut pending: Vec<i32> = vec![NOOP; b];
+
+    for _t in 0..spec.t_max + 1 {
+        ctx.stage(env, &state, &vec![false; b]);
+        let (fwd_logp, bwd_logp, _flow) = ts.policy(art, &ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
+        // Score pending forward actions from the previous backward step.
+        for i in 0..b {
+            if pending[i] != NOOP {
+                scores[i].0 += fwd_logp[i * spec.n_actions + pending[i] as usize] as f64;
+                pending[i] = NOOP;
+            }
+        }
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        // Sample backward actions for active rows.
+        let mut actions = vec![NOOP; b];
+        for i in 0..b {
+            if done[i] {
+                continue;
+            }
+            env.bwd_mask_into(&state, i, &mut ctx.bwd_scratch);
+            let ba = if cfg.uniform_pb {
+                rng.uniform_masked(&ctx.bwd_scratch) as i32
+            } else {
+                let row = &bwd_logp[i * spec.n_bwd_actions..(i + 1) * spec.n_bwd_actions];
+                rng.categorical_masked(row, &ctx.bwd_scratch) as i32
+            };
+            actions[i] = ba;
+            scores[i].1 += if cfg.uniform_pb {
+                let cnt = ctx.bwd_scratch.iter().filter(|&&m| m).count() as f64;
+                -(cnt.ln())
+            } else {
+                bwd_logp[i * spec.n_bwd_actions + ba as usize] as f64
+            };
+            pending[i] = env.forward_action_of(&state, i, ba);
+            scores[i].2 += 1;
+        }
+        env.backward_step(&mut state, &actions);
+        for i in 0..b {
+            if !done[i] && env.is_initial(&state, i) {
+                done[i] = true;
+            }
+        }
+    }
+    // Any still-pending actions (rows that finished on the last step) are
+    // scored with one more policy call.
+    if pending.iter().any(|&p| p != NOOP) {
+        ctx.stage(env, &state, &vec![false; b]);
+        let (fwd_logp, _b, _f) = ts.policy(art, &ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
+        for i in 0..b {
+            if pending[i] != NOOP {
+                scores[i].0 += fwd_logp[i * spec.n_actions + pending[i] as usize] as f64;
+            }
+        }
+    }
+    scores.truncate(objs.len());
+    Ok(scores)
+}

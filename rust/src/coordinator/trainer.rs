@@ -1,0 +1,102 @@
+//! The generic training loop: rollout → batch assembly → fused train step.
+//!
+//! One [`Trainer::train_iter`] = one paper "iteration" (the unit of the
+//! Table 1/2 it/s numbers): sample a batch of trajectories from the current
+//! policy with ε-exploration, assemble the padded batch, and execute the
+//! AOT rollout-loss-grad-Adam graph once.
+
+use super::explore::EpsSchedule;
+use super::rollout::{forward_rollout, ExtraSource, RolloutCtx};
+use crate::envs::VecEnv;
+use crate::runtime::{Artifact, TrainState};
+use crate::util::rng::Rng;
+
+/// Per-iteration statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct IterStats {
+    pub loss: f32,
+    pub log_z: f32,
+    pub mean_log_reward: f64,
+    pub mean_length: f64,
+}
+
+/// Generic trainer binding an environment to an artifact.
+pub struct Trainer<'a, E: VecEnv> {
+    pub env: &'a E,
+    pub art: &'a Artifact,
+    pub state: TrainState,
+    pub ctx: RolloutCtx,
+    pub rng: Rng,
+    pub explore: EpsSchedule,
+    pub step: u64,
+    /// Whether the batch's per-state `extra` should be converted to deltas
+    /// (MDB) before hitting the graph.
+    mdb_deltas: bool,
+}
+
+impl<'a, E: VecEnv> Trainer<'a, E> {
+    pub fn new(env: &'a E, art: &'a Artifact, seed: u64, explore: EpsSchedule) -> anyhow::Result<Self> {
+        let spec = env.spec();
+        let cfg = &art.manifest.config;
+        anyhow::ensure!(
+            spec.obs_dim == cfg.obs_dim
+                && spec.n_actions == cfg.n_actions
+                && spec.n_bwd_actions == cfg.n_bwd_actions
+                && spec.t_max == cfg.t_max,
+            "env spec {:?} does not match artifact config {:?}",
+            spec,
+            cfg
+        );
+        Ok(Trainer {
+            env,
+            art,
+            state: art.init_state()?,
+            ctx: RolloutCtx::for_artifact(art),
+            rng: Rng::new(seed),
+            explore,
+            step: 0,
+            mdb_deltas: cfg.loss == "mdb",
+        })
+    }
+
+    /// One training iteration; returns stats and the sampled terminal
+    /// objects (for the caller's metric buffers).
+    pub fn train_iter(
+        &mut self,
+        extra: &ExtraSource<'_, E>,
+    ) -> anyhow::Result<(IterStats, Vec<E::Obj>)> {
+        let eps = self.explore.at(self.step);
+        let (mut batch, objs) = forward_rollout(
+            self.env, self.art, &self.state, &mut self.ctx, &mut self.rng, eps, extra,
+        )?;
+        if self.mdb_deltas {
+            batch.extra_to_deltas();
+        }
+        let literals = batch.to_literals()?;
+        let (loss, log_z) = self.state.train_step(self.art, &literals)?;
+        self.step += 1;
+        let b = batch.b as f64;
+        let stats = IterStats {
+            loss,
+            log_z,
+            mean_log_reward: batch.log_reward.iter().map(|&x| x as f64).sum::<f64>() / b,
+            mean_length: batch.length.iter().map(|&x| x as f64).sum::<f64>() / b,
+        };
+        Ok((stats, objs))
+    }
+
+    /// Sample terminal objects from the current policy without training
+    /// (ε = 0). Used by evaluation loops.
+    pub fn sample_objs(&mut self) -> anyhow::Result<Vec<E::Obj>> {
+        let (_batch, objs) = forward_rollout(
+            self.env,
+            self.art,
+            &self.state,
+            &mut self.ctx,
+            &mut self.rng,
+            0.0,
+            &ExtraSource::None,
+        )?;
+        Ok(objs)
+    }
+}

@@ -1,0 +1,74 @@
+//! Ancestral sampling from a linear-Gaussian Bayesian network
+//! (paper eq. (14)): X_j | Pa(X_j) ~ N( Σ w_ij X_i , σ_j² ), nodes visited
+//! in topological order.
+
+use super::erdos_renyi::GroundTruthDag;
+use crate::util::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Sample `n` observations; returns an `n × d` data matrix.
+pub fn ancestral_sample(g: &GroundTruthDag, n: usize, noise_var: f64, rng: &mut Rng) -> Mat {
+    let d = g.d;
+    let std = noise_var.sqrt();
+    let mut data = Mat::zeros(n, d);
+    for s in 0..n {
+        for &v in &g.order {
+            let mut mean = 0.0;
+            for u in 0..d {
+                if g.adj & (1u64 << (u * d + v)) != 0 {
+                    mean += g.weights[u * d + v] * data.get(s, u);
+                }
+            }
+            data.set(s, v, mean + std * rng.normal());
+        }
+    }
+    data
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::erdos_renyi::sample_er_dag;
+
+    #[test]
+    fn roots_have_noise_variance() {
+        let mut rng = Rng::new(0);
+        // Build a fixed chain 0→1 manually.
+        let d = 2;
+        let g = GroundTruthDag {
+            d,
+            adj: 1u64 << (0 * d + 1),
+            weights: {
+                let mut w = vec![0.0; 4];
+                w[0 * d + 1] = 2.0;
+                w
+            },
+            order: vec![0, 1],
+        };
+        let n = 50_000;
+        let data = ancestral_sample(&g, n, 0.1, &mut rng);
+        let mean0: f64 = (0..n).map(|s| data.get(s, 0)).sum::<f64>() / n as f64;
+        let var0: f64 =
+            (0..n).map(|s| (data.get(s, 0) - mean0).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean0.abs() < 0.01, "{mean0}");
+        assert!((var0 - 0.1).abs() < 0.01, "{var0}");
+        // Child: X1 = 2 X0 + ε ⇒ Var = 4·0.1 + 0.1 = 0.5.
+        let mean1: f64 = (0..n).map(|s| data.get(s, 1)).sum::<f64>() / n as f64;
+        let var1: f64 =
+            (0..n).map(|s| (data.get(s, 1) - mean1).powi(2)).sum::<f64>() / n as f64;
+        assert!((var1 - 0.5).abs() < 0.03, "{var1}");
+    }
+
+    #[test]
+    fn shapes_and_determinism() {
+        let mut rng1 = Rng::new(5);
+        let g = sample_er_dag(5, 1.0, &mut rng1);
+        let mut ra = Rng::new(9);
+        let mut rb = Rng::new(9);
+        let a = ancestral_sample(&g, 100, 0.1, &mut ra);
+        let b = ancestral_sample(&g, 100, 0.1, &mut rb);
+        assert_eq!(a.rows, 100);
+        assert_eq!(a.cols, 5);
+        assert_eq!(a.data, b.data);
+    }
+}

@@ -1,0 +1,332 @@
+//! MCMC samplers for Ising ground-truth datasets (paper §B.5): the Wolff
+//! cluster algorithm (Wang & Swendsen 1990) for ferromagnetic couplings and
+//! heat-bath sweeps with parallel tempering (Hukushima & Nemoto 1996) for
+//! the general case. These generate the "true data samples" the EB-GFN
+//! experiment learns J from.
+
+use crate::util::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Neighbour lists of the N×N torus (each site: 4 distinct neighbours for
+/// N ≥ 3).
+pub fn torus_neighbors(n: usize) -> Vec<Vec<usize>> {
+    let idx = |r: usize, c: usize| (r % n) * n + (c % n);
+    let mut nb = vec![Vec::new(); n * n];
+    for r in 0..n {
+        for c in 0..n {
+            let i = idx(r, c);
+            for j in [idx(r + 1, c), idx(r + n - 1, c), idx(r, c + 1), idx(r, c + n - 1)] {
+                if j != i && !nb[i].contains(&j) {
+                    nb[i].push(j);
+                }
+            }
+        }
+    }
+    nb
+}
+
+/// One Wolff cluster update for a uniform-coupling lattice Ising model with
+/// P(x) ∝ exp(x' (σA) x) (i.e. bond strength 2σ between neighbours —
+/// the quadratic form counts each edge twice). Requires σ > 0; use
+/// [`gauge_flip`] to map antiferromagnetic torus models onto this case.
+pub fn wolff_step(spins: &mut [i8], neighbors: &[Vec<usize>], sigma: f64, rng: &mut Rng) {
+    debug_assert!(sigma > 0.0);
+    let p_add = 1.0 - (-4.0 * sigma).exp(); // bond activation probability
+    let seed = rng.below(spins.len());
+    let s0 = spins[seed];
+    let mut stack = vec![seed];
+    let mut in_cluster = vec![false; spins.len()];
+    in_cluster[seed] = true;
+    while let Some(u) = stack.pop() {
+        for &v in &neighbors[u] {
+            if !in_cluster[v] && spins[v] == s0 && rng.bernoulli(p_add) {
+                in_cluster[v] = true;
+                stack.push(v);
+            }
+        }
+    }
+    for (i, inc) in in_cluster.iter().enumerate() {
+        if *inc {
+            spins[i] = -spins[i];
+        }
+    }
+}
+
+/// Checkerboard gauge transform: flips spins on odd sublattice sites. Maps
+/// an antiferromagnetic torus model (σ < 0, even N) onto the ferromagnetic
+/// one with |σ|. Self-inverse.
+pub fn gauge_flip(spins: &mut [i8], n: usize) {
+    for r in 0..n {
+        for c in 0..n {
+            if (r + c) % 2 == 1 {
+                spins[r * n + c] = -spins[r * n + c];
+            }
+        }
+    }
+}
+
+/// One heat-bath sweep for a general symmetric coupling matrix J with
+/// target P(x) ∝ exp(xᵀJx / temp). Visits all sites in order.
+pub fn heat_bath_sweep(spins: &mut [i8], j: &Mat, temp: f64, rng: &mut Rng) {
+    let d = spins.len();
+    for site in 0..d {
+        // Local field: ΔlogP between +1 and -1 at this site = 4·h/temp
+        // with h = Σ_c J[site][c]·x_c (J symmetric, diagonal zero).
+        let mut h = 0.0;
+        let row = j.row(site);
+        for c in 0..d {
+            if c != site {
+                h += row[c] * spins[c] as f64;
+            }
+        }
+        let p_up = 1.0 / (1.0 + (-4.0 * h / temp).exp());
+        spins[site] = if rng.bernoulli(p_up) { 1 } else { -1 };
+    }
+}
+
+/// Parallel-tempering sampler over a temperature ladder (T = 1 is the
+/// target chain). Returns `n_samples` configurations from the T = 1 chain.
+pub struct ParallelTempering {
+    pub j: Mat,
+    pub temps: Vec<f64>,
+    chains: Vec<Vec<i8>>,
+}
+
+impl ParallelTempering {
+    pub fn new(j: Mat, temps: Vec<f64>, rng: &mut Rng) -> Self {
+        assert!((temps[0] - 1.0).abs() < 1e-12, "first ladder rung must be T=1");
+        let d = j.rows;
+        let chains = temps
+            .iter()
+            .map(|_| (0..d).map(|_| if rng.bernoulli(0.5) { 1i8 } else { -1 }).collect())
+            .collect();
+        ParallelTempering { j, temps, chains }
+    }
+
+    fn log_weight(&self, chain: usize) -> f64 {
+        // log P_T(x) ∝ xᵀJx / T.
+        let x = &self.chains[chain];
+        let mut s = 0.0;
+        for r in 0..self.j.rows {
+            let row = self.j.row(r);
+            let mut acc = 0.0;
+            for c in 0..self.j.cols {
+                acc += row[c] * x[c] as f64;
+            }
+            s += x[r] as f64 * acc;
+        }
+        s / self.temps[chain]
+    }
+
+    /// One PT round: a heat-bath sweep per chain + adjacent swap proposals.
+    pub fn round(&mut self, rng: &mut Rng) {
+        for (k, temp) in self.temps.clone().iter().enumerate() {
+            heat_bath_sweep(&mut self.chains[k], &self.j, *temp, rng);
+        }
+        for k in 0..self.temps.len() - 1 {
+            // Swap acceptance: exp((1/T_k − 1/T_{k+1})(E_{k+1} − E_k)) with
+            // E = −xᵀJx; expressed via the cached log-weights.
+            let lw_kk = self.log_weight(k);
+            let lw_k1k1 = self.log_weight(k + 1);
+            self.chains.swap(k, k + 1);
+            let lw_kk_sw = self.log_weight(k);
+            let lw_k1k1_sw = self.log_weight(k + 1);
+            let log_acc = (lw_kk_sw + lw_k1k1_sw) - (lw_kk + lw_k1k1);
+            if !(log_acc >= 0.0 || rng.uniform().ln() < log_acc) {
+                self.chains.swap(k, k + 1); // reject: swap back
+            }
+        }
+    }
+
+    /// Draw samples from the target (T=1) chain with `thin` rounds between
+    /// draws after `burn_in` rounds.
+    pub fn sample(
+        &mut self,
+        n_samples: usize,
+        burn_in: usize,
+        thin: usize,
+        rng: &mut Rng,
+    ) -> Vec<Vec<i8>> {
+        for _ in 0..burn_in {
+            self.round(rng);
+        }
+        let mut out = Vec::with_capacity(n_samples);
+        for _ in 0..n_samples {
+            for _ in 0..thin {
+                self.round(rng);
+            }
+            out.push(self.chains[0].clone());
+        }
+        out
+    }
+}
+
+/// Generate the paper's Ising dataset: N×N torus, J = σ·A_N, using Wolff
+/// for σ > 0 (with gauge transform for σ < 0 on even N; PT fallback for odd
+/// N antiferromagnets).
+pub fn generate_ising_dataset(
+    n: usize,
+    sigma: f64,
+    n_samples: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<i8>> {
+    let d = n * n;
+    if sigma > 0.0 || n % 2 == 0 {
+        let neighbors = torus_neighbors(n);
+        let s = sigma.abs();
+        let mut spins: Vec<i8> =
+            (0..d).map(|_| if rng.bernoulli(0.5) { 1 } else { -1 }).collect();
+        let burn = 200;
+        let thin = 5;
+        for _ in 0..burn {
+            wolff_step(&mut spins, &neighbors, s, rng);
+        }
+        let mut out = Vec::with_capacity(n_samples);
+        for _ in 0..n_samples {
+            for _ in 0..thin {
+                wolff_step(&mut spins, &neighbors, s, rng);
+            }
+            let mut x = spins.clone();
+            if sigma < 0.0 {
+                gauge_flip(&mut x, n); // map back to the AF model
+            }
+            out.push(x);
+        }
+        out
+    } else {
+        // Odd-N antiferromagnet (frustrated): general PT sampler.
+        let mut j = crate::reward::ising::torus_adjacency(n);
+        j.scale(sigma);
+        let temps = vec![1.0, 1.5, 2.25, 3.4, 5.0];
+        let mut pt = ParallelTempering::new(j, temps, rng);
+        pt.sample(n_samples, 100, 3, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reward::ising::{ising_energy, torus_adjacency};
+    use std::collections::HashMap;
+
+    /// Exact distribution over all 2^D configurations (tiny lattices only).
+    fn exact_distribution(j: &Mat) -> HashMap<Vec<i8>, f64> {
+        let d = j.rows;
+        let mut logs = Vec::new();
+        let mut configs = Vec::new();
+        for mask in 0u64..(1 << d) {
+            let x: Vec<i8> =
+                (0..d).map(|i| if mask >> i & 1 == 1 { 1i8 } else { -1 }).collect();
+            logs.push(-ising_energy(j, &x));
+            configs.push(x);
+        }
+        let probs = crate::util::stats::softmax_from_logs(&logs);
+        configs.into_iter().zip(probs).collect()
+    }
+
+    fn empirical_tv(samples: &[Vec<i8>], exact: &HashMap<Vec<i8>, f64>) -> f64 {
+        let mut counts: HashMap<&Vec<i8>, f64> = HashMap::new();
+        for s in samples {
+            *counts.entry(s).or_default() += 1.0 / samples.len() as f64;
+        }
+        let mut tv = 0.0;
+        for (x, p) in exact {
+            tv += (p - counts.get(x).copied().unwrap_or(0.0)).abs();
+        }
+        0.5 * tv
+    }
+
+    #[test]
+    fn torus_neighbors_degree() {
+        let nb = torus_neighbors(3);
+        assert!(nb.iter().all(|v| v.len() == 4));
+        let nb2 = torus_neighbors(2); // parallel edges collapse
+        assert!(nb2.iter().all(|v| v.len() == 2));
+    }
+
+    #[test]
+    fn heat_bath_matches_exact_2x2() {
+        let mut rng = Rng::new(0);
+        let mut j = torus_adjacency(2);
+        j.scale(0.3);
+        let mut spins = vec![1i8, 1, 1, 1];
+        // Burn.
+        for _ in 0..200 {
+            heat_bath_sweep(&mut spins, &j, 1.0, &mut rng);
+        }
+        let mut samples = Vec::new();
+        for _ in 0..20_000 {
+            heat_bath_sweep(&mut spins, &j, 1.0, &mut rng);
+            samples.push(spins.clone());
+        }
+        let exact = exact_distribution(&j);
+        let tv = empirical_tv(&samples, &exact);
+        assert!(tv < 0.03, "heat-bath TV = {tv}");
+    }
+
+    #[test]
+    fn wolff_matches_exact_3x3() {
+        let mut rng = Rng::new(1);
+        let sigma = 0.15;
+        let mut j = torus_adjacency(3);
+        j.scale(sigma);
+        let exact = exact_distribution(&j);
+        let neighbors = torus_neighbors(3);
+        let mut spins = vec![1i8; 9];
+        for _ in 0..200 {
+            wolff_step(&mut spins, &neighbors, sigma, &mut rng);
+        }
+        let mut samples = Vec::new();
+        for _ in 0..40_000 {
+            wolff_step(&mut spins, &neighbors, sigma, &mut rng);
+            samples.push(spins.clone());
+        }
+        let tv = empirical_tv(&samples, &exact);
+        assert!(tv < 0.05, "wolff TV = {tv}");
+    }
+
+    #[test]
+    fn parallel_tempering_matches_exact_2x2() {
+        let mut rng = Rng::new(2);
+        let mut j = torus_adjacency(2);
+        j.scale(-0.4); // antiferromagnetic
+        let exact = exact_distribution(&j);
+        let mut pt =
+            ParallelTempering::new(j.clone(), vec![1.0, 2.0, 4.0], &mut rng);
+        let samples = pt.sample(20_000, 100, 1, &mut rng);
+        let tv = empirical_tv(&samples, &exact);
+        assert!(tv < 0.04, "PT TV = {tv}");
+    }
+
+    #[test]
+    fn gauge_flip_is_involution_and_maps_energy() {
+        let n = 4;
+        let mut rng = Rng::new(3);
+        let mut x: Vec<i8> =
+            (0..16).map(|_| if rng.bernoulli(0.5) { 1 } else { -1 }).collect();
+        let orig = x.clone();
+        // Energy under +σ of flipped == energy under −σ of original.
+        let mut jp = torus_adjacency(n);
+        jp.scale(0.3);
+        let mut jm = torus_adjacency(n);
+        jm.scale(-0.3);
+        let e_m = ising_energy(&jm, &x);
+        gauge_flip(&mut x, n);
+        let e_p = ising_energy(&jp, &x);
+        assert!((e_m - e_p).abs() < 1e-12);
+        gauge_flip(&mut x, n);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn dataset_generator_shapes() {
+        let mut rng = Rng::new(4);
+        let ds = generate_ising_dataset(3, 0.2, 20, &mut rng);
+        assert_eq!(ds.len(), 20);
+        assert!(ds.iter().all(|x| x.len() == 9));
+        assert!(ds.iter().all(|x| x.iter().all(|&s| s == 1 || s == -1)));
+        // Antiferro odd-N path.
+        let ds2 = generate_ising_dataset(3, -0.1, 5, &mut rng);
+        assert_eq!(ds2.len(), 5);
+    }
+}

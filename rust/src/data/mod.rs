@@ -1,0 +1,9 @@
+//! Dataset and workload generators: everything the paper's experiments read
+//! from disk or from proprietary sources is generated here, deterministically
+//! from seeds (see DESIGN.md §3 for the substitution rationale).
+
+pub mod modes;
+pub mod erdos_renyi;
+pub mod ancestral;
+pub mod ising_mcmc;
+pub mod phylo_data;

@@ -1,0 +1,126 @@
+//! Bit-sequence mode-set and test-set generation (Malkin et al. 2022
+//! protocol, as used by gfnx appendix B.2).
+//!
+//! Modes are built by concatenating n/8 elements drawn with replacement from
+//! the fixed 8-bit alphabet H; the evaluation test set takes every mode and
+//! flips i random bits for each 0 ≤ i < n.
+
+use crate::util::rng::Rng;
+
+/// The fixed 8-bit building blocks H from the paper.
+pub const H_BLOCKS: [[u8; 8]; 5] = [
+    [0, 0, 0, 0, 0, 0, 0, 0],
+    [1, 1, 1, 1, 1, 1, 1, 1],
+    [1, 1, 1, 1, 0, 0, 0, 0],
+    [0, 0, 0, 0, 1, 1, 1, 1],
+    [0, 0, 1, 1, 1, 1, 0, 0],
+];
+
+/// Generate `m` modes of `n_bits` each (n_bits must be divisible by 8).
+pub fn generate_modes(n_bits: usize, m: usize, rng: &mut Rng) -> Vec<Vec<u8>> {
+    assert!(n_bits % 8 == 0, "mode length must be a multiple of 8");
+    let blocks = n_bits / 8;
+    (0..m)
+        .map(|_| {
+            let mut bits = Vec::with_capacity(n_bits);
+            for _ in 0..blocks {
+                bits.extend_from_slice(&H_BLOCKS[rng.below(H_BLOCKS.len())]);
+            }
+            bits
+        })
+        .collect()
+}
+
+/// Build the correlation test set: for every mode and every 0 ≤ i < n, flip
+/// i distinct random bits. Returns |modes|·n bit strings.
+pub fn generate_test_set(modes: &[Vec<u8>], rng: &mut Rng) -> Vec<Vec<u8>> {
+    let n = modes.first().map_or(0, |m| m.len());
+    let mut out = Vec::with_capacity(modes.len() * n);
+    for mode in modes {
+        for i in 0..n {
+            let mut x = mode.clone();
+            for pos in rng.choose_k(n, i) {
+                x[pos] ^= 1;
+            }
+            out.push(x);
+        }
+    }
+    out
+}
+
+/// Convert a bit string into k-bit tokens (low bit first within a token),
+/// matching [`crate::reward::hamming::pack_tokens`].
+pub fn bits_to_tokens(bits: &[u8], k: usize) -> Vec<i16> {
+    assert!(bits.len() % k == 0);
+    bits.chunks(k)
+        .map(|chunk| {
+            let mut v = 0i16;
+            for (j, &b) in chunk.iter().enumerate() {
+                if b != 0 {
+                    v |= 1 << j;
+                }
+            }
+            v
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reward::hamming::{hamming_packed, pack_tokens};
+
+    #[test]
+    fn modes_have_right_shape() {
+        let mut rng = Rng::new(0);
+        let modes = generate_modes(120, 60, &mut rng);
+        assert_eq!(modes.len(), 60);
+        assert!(modes.iter().all(|m| m.len() == 120));
+        assert!(modes.iter().all(|m| m.iter().all(|&b| b <= 1)));
+    }
+
+    #[test]
+    fn modes_are_block_structured() {
+        let mut rng = Rng::new(1);
+        let modes = generate_modes(24, 10, &mut rng);
+        for m in &modes {
+            for chunk in m.chunks(8) {
+                assert!(
+                    H_BLOCKS.iter().any(|h| h == chunk),
+                    "chunk not from H: {chunk:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn test_set_flip_counts() {
+        let mut rng = Rng::new(2);
+        let modes = generate_modes(16, 3, &mut rng);
+        let test = generate_test_set(&modes, &mut rng);
+        assert_eq!(test.len(), 3 * 16);
+        // The i-th element of each mode's block differs in exactly i bits.
+        for (mi, mode) in modes.iter().enumerate() {
+            for i in 0..16 {
+                let x = &test[mi * 16 + i];
+                let d: usize = x.iter().zip(mode).filter(|(a, b)| a != b).count();
+                assert_eq!(d, i);
+            }
+        }
+    }
+
+    #[test]
+    fn bits_tokens_roundtrip_via_packing() {
+        let bits: Vec<u8> = vec![1, 0, 1, 1, 0, 0, 1, 0, 1, 1, 1, 1, 0, 0, 0, 0];
+        let tokens = bits_to_tokens(&bits, 4);
+        let packed = pack_tokens(&tokens, 4);
+        // Direct packing of the raw bits must agree.
+        let mut direct = vec![0u64; 1];
+        for (i, &b) in bits.iter().enumerate() {
+            if b != 0 {
+                direct[0] |= 1 << i;
+            }
+        }
+        assert_eq!(hamming_packed(&packed, &direct), 0);
+    }
+}

@@ -1,0 +1,64 @@
+//! AMP (antimicrobial peptide) environment (Jain et al. 2022; gfnx env #5):
+//! variable-length autoregressive generation over the 20 amino acids (up to
+//! 60 tokens) with a (synthetic, see DESIGN.md §3) frozen classifier reward
+//! R(x) = max(σ(f(x)), r_min).
+
+use super::seq::{SeqEnv, SeqScheme};
+use crate::reward::proxy::AmpReward;
+
+/// AMP env: variable-length autoregressive, stop action last.
+pub type AmpEnv = SeqEnv<AmpReward>;
+
+pub const AMP_VOCAB: usize = 20;
+pub const AMP_MAX_LEN: usize = 60;
+
+/// Build the AMP environment with the paper's dimensions.
+pub fn amp_env(seed: u64, r_min: f64) -> AmpEnv {
+    amp_env_sized(seed, r_min, AMP_MAX_LEN)
+}
+
+/// Reduced-length variant for tests and budget-scaled benches.
+pub fn amp_env_sized(seed: u64, r_min: f64, max_len: usize) -> AmpEnv {
+    SeqEnv::new(
+        SeqScheme::AutoregVar,
+        AMP_VOCAB,
+        max_len,
+        AmpReward::synthetic(seed, max_len, AMP_VOCAB, r_min),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::{testkit, VecEnv};
+
+    #[test]
+    fn spec_matches_paper() {
+        let e = amp_env(0, 1e-3);
+        let s = e.spec();
+        assert_eq!(s.n_actions, 21); // 20 aa + stop
+        assert_eq!(s.n_bwd_actions, 1);
+        assert_eq!(s.t_max, 61);
+        assert_eq!(s.obs_dim, 60 * 21);
+    }
+
+    #[test]
+    fn variable_length_objects() {
+        let e = amp_env_sized(0, 1e-3, 10);
+        let mut st = e.reset(1);
+        e.step(&mut st, &[4]);
+        e.step(&mut st, &[7]);
+        e.step(&mut st, &[e.stop_action()]);
+        assert!(e.is_terminal(&st, 0));
+        assert_eq!(e.extract(&st, 0), vec![4, 7]);
+    }
+
+    #[test]
+    fn invariants() {
+        let e = amp_env_sized(0, 1e-3, 8);
+        testkit::check_forward_backward_inversion(&e, 8, 71);
+        testkit::check_masks_and_obs(&e, 8, 72);
+        testkit::check_inject_extract_roundtrip(&e, 8, 73);
+        testkit::check_backward_rollout_reaches_s0(&e, 8, 74);
+    }
+}

@@ -1,0 +1,91 @@
+//! Bit-sequence environment (Malkin et al. 2022 / Tiapkin et al. 2024;
+//! gfnx env #2): non-autoregressive generation of n-bit strings split into
+//! k-bit tokens, with the mode-set Hamming reward.
+
+use super::seq::{SeqEnv, SeqScheme};
+use crate::data::modes::{bits_to_tokens, generate_modes};
+use crate::reward::hamming::HammingReward;
+use crate::util::rng::Rng;
+
+/// Bit-sequence env: `SeqEnv` in non-autoregressive mode with vocab 2^k.
+pub type BitSeqEnv = SeqEnv<HammingReward>;
+
+/// Configuration for the bit-sequence benchmark.
+#[derive(Clone, Copy, Debug)]
+pub struct BitSeqConfig {
+    /// Total bit length n (the paper benchmarks n = 120).
+    pub n_bits: usize,
+    /// Bits per token k (paper: k = 8). Must divide n.
+    pub k: usize,
+    /// Number of modes |M| (paper: 60).
+    pub n_modes: usize,
+    /// Reward exponent β (paper: 3).
+    pub beta: f64,
+    /// Mode-set seed.
+    pub seed: u64,
+}
+
+impl BitSeqConfig {
+    pub fn paper() -> Self {
+        BitSeqConfig { n_bits: 120, k: 8, n_modes: 60, beta: 3.0, seed: 0 }
+    }
+
+    /// A small variant for tests/quick benches.
+    pub fn small() -> Self {
+        BitSeqConfig { n_bits: 24, k: 4, n_modes: 10, beta: 3.0, seed: 0 }
+    }
+}
+
+/// Build the environment together with its (hidden) mode set.
+pub fn bitseq_env(cfg: BitSeqConfig) -> (BitSeqEnv, Vec<Vec<u8>>) {
+    assert!(cfg.n_bits % cfg.k == 0);
+    let mut rng = Rng::new(cfg.seed);
+    let modes = generate_modes(cfg.n_bits, cfg.n_modes, &mut rng);
+    let reward = HammingReward::new(&modes, cfg.k, cfg.beta);
+    let env = SeqEnv::new(
+        SeqScheme::NonAutoreg,
+        1usize << cfg.k,
+        cfg.n_bits / cfg.k,
+        reward,
+    );
+    (env, modes)
+}
+
+/// Convert test-set bit strings to token sequences for this config.
+pub fn test_set_tokens(cfg: BitSeqConfig, test_bits: &[Vec<u8>]) -> Vec<Vec<i16>> {
+    test_bits.iter().map(|b| bits_to_tokens(b, cfg.k)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::{testkit, VecEnv};
+
+    #[test]
+    fn paper_config_shapes() {
+        let (env, modes) = bitseq_env(BitSeqConfig::paper());
+        let spec = env.spec();
+        assert_eq!(spec.n_actions, 15 * 256);
+        assert_eq!(spec.n_bwd_actions, 15);
+        assert_eq!(spec.obs_dim, 15 * 257);
+        assert_eq!(spec.t_max, 15);
+        assert_eq!(modes.len(), 60);
+    }
+
+    #[test]
+    fn mode_sequences_get_max_reward() {
+        let cfg = BitSeqConfig::small();
+        let (env, modes) = bitseq_env(cfg);
+        let tokens = bits_to_tokens(&modes[0], cfg.k);
+        assert_eq!(env.log_reward_obj(&tokens), 0.0); // d = 0 ⇒ log R = 0
+    }
+
+    #[test]
+    fn invariants() {
+        let (env, _) = bitseq_env(BitSeqConfig::small());
+        testkit::check_forward_backward_inversion(&env, 6, 41);
+        testkit::check_masks_and_obs(&env, 6, 42);
+        testkit::check_inject_extract_roundtrip(&env, 6, 43);
+        testkit::check_backward_rollout_reaches_s0(&env, 6, 44);
+    }
+}

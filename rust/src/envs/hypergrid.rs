@@ -1,0 +1,314 @@
+//! Hypergrid environment (Bengio et al. 2021; gfnx env #1).
+//!
+//! A d-dimensional grid of side H. Actions 0..d increment one coordinate
+//! (staying inside the grid); the **last** action is the stop/exit action
+//! that moves the state to its terminal copy. Every state is reachable and
+//! every state has a terminal copy, so trajectories have length ≤ d(H−1)+1.
+
+use super::{EnvSpec, StepOut, VecEnv};
+use crate::reward::RewardModule;
+use crate::util::tensor::one_hot_into;
+
+/// Batched hypergrid state: row-major `[n, d]` coordinates + terminal flags.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HypergridState {
+    pub coords: Vec<i32>,
+    pub terminal: Vec<bool>,
+    pub d: usize,
+}
+
+impl HypergridState {
+    #[inline]
+    pub fn coords_of(&self, i: usize) -> &[i32] {
+        &self.coords[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    fn coords_of_mut(&mut self, i: usize) -> &mut [i32] {
+        &mut self.coords[i * self.d..(i + 1) * self.d]
+    }
+}
+
+/// The hypergrid environment. `R` scores terminal coordinate vectors.
+pub struct HypergridEnv<R> {
+    pub dim: usize,
+    pub side: usize,
+    pub reward: R,
+}
+
+impl<R: RewardModule<Vec<i32>>> HypergridEnv<R> {
+    pub fn new(dim: usize, side: usize, reward: R) -> Self {
+        assert!(dim >= 1 && side >= 2);
+        HypergridEnv { dim, side, reward }
+    }
+
+    /// Index of the stop action.
+    #[inline]
+    pub fn stop_action(&self) -> i32 {
+        self.dim as i32
+    }
+
+    /// Total number of terminal states (H^d).
+    pub fn num_terminal_states(&self) -> usize {
+        self.side.pow(self.dim as u32)
+    }
+
+    /// Flatten coordinates to a linear index in [0, H^d).
+    pub fn flat_index(&self, coords: &[i32]) -> usize {
+        let mut idx = 0usize;
+        for &c in coords {
+            idx = idx * self.side + c as usize;
+        }
+        idx
+    }
+
+    /// Inverse of [`Self::flat_index`].
+    pub fn unflatten(&self, mut idx: usize) -> Vec<i32> {
+        let mut coords = vec![0i32; self.dim];
+        for j in (0..self.dim).rev() {
+            coords[j] = (idx % self.side) as i32;
+            idx /= self.side;
+        }
+        coords
+    }
+}
+
+impl<R: RewardModule<Vec<i32>>> VecEnv for HypergridEnv<R> {
+    type State = HypergridState;
+    type Obj = Vec<i32>;
+
+    fn spec(&self) -> EnvSpec {
+        EnvSpec {
+            obs_dim: self.dim * self.side,
+            n_actions: self.dim + 1,
+            n_bwd_actions: self.dim,
+            t_max: self.dim * (self.side - 1) + 1,
+        }
+    }
+
+    fn reset(&self, n: usize) -> HypergridState {
+        HypergridState {
+            coords: vec![0; n * self.dim],
+            terminal: vec![false; n],
+            d: self.dim,
+        }
+    }
+
+    fn batch_len(&self, state: &HypergridState) -> usize {
+        state.terminal.len()
+    }
+
+    fn step(&self, state: &mut HypergridState, actions: &[i32]) -> StepOut {
+        let n = state.terminal.len();
+        debug_assert_eq!(actions.len(), n);
+        let mut out = StepOut::new(n);
+        for i in 0..n {
+            if state.terminal[i] || actions[i] < 0 {
+                out.done[i] = state.terminal[i];
+                continue;
+            }
+            let a = actions[i];
+            if a == self.stop_action() {
+                state.terminal[i] = true;
+                out.done[i] = true;
+                out.log_reward[i] = self.reward.log_reward(&state.coords_of(i).to_vec());
+            } else {
+                let j = a as usize;
+                debug_assert!(j < self.dim, "action out of range");
+                let c = &mut state.coords_of_mut(i)[j];
+                debug_assert!((*c as usize) < self.side - 1, "illegal increment");
+                *c += 1;
+            }
+        }
+        out
+    }
+
+    fn backward_step(&self, state: &mut HypergridState, actions: &[i32]) {
+        let n = state.terminal.len();
+        debug_assert_eq!(actions.len(), n);
+        for i in 0..n {
+            if actions[i] < 0 {
+                continue;
+            }
+            if state.terminal[i] {
+                // Unique parent: the non-terminal copy (undo stop).
+                state.terminal[i] = false;
+            } else {
+                let j = actions[i] as usize;
+                debug_assert!(j < self.dim);
+                let c = &mut state.coords_of_mut(i)[j];
+                debug_assert!(*c > 0, "illegal decrement");
+                *c -= 1;
+            }
+        }
+    }
+
+    fn get_backward_action(&self, _prev: &HypergridState, _idx: usize, fwd_action: i32) -> i32 {
+        if fwd_action == self.stop_action() {
+            0 // ignored: undo-stop is deterministic
+        } else {
+            fwd_action
+        }
+    }
+
+    fn forward_action_of(&self, state: &HypergridState, idx: usize, bwd_action: i32) -> i32 {
+        if state.terminal[idx] {
+            self.stop_action()
+        } else {
+            bwd_action
+        }
+    }
+
+    fn fwd_mask_into(&self, state: &HypergridState, idx: usize, out: &mut [bool]) {
+        debug_assert_eq!(out.len(), self.dim + 1);
+        let coords = state.coords_of(idx);
+        for j in 0..self.dim {
+            out[j] = (coords[j] as usize) < self.side - 1;
+        }
+        out[self.dim] = true; // stop always legal
+    }
+
+    fn bwd_mask_into(&self, state: &HypergridState, idx: usize, out: &mut [bool]) {
+        debug_assert_eq!(out.len(), self.dim);
+        if state.terminal[idx] {
+            // Deterministic undo-stop: expose a single legal pseudo-action.
+            out.iter_mut().for_each(|m| *m = false);
+            out[0] = true;
+            return;
+        }
+        let coords = state.coords_of(idx);
+        for j in 0..self.dim {
+            out[j] = coords[j] > 0;
+        }
+    }
+
+    fn obs_into(&self, state: &HypergridState, idx: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim * self.side);
+        let coords = state.coords_of(idx);
+        for j in 0..self.dim {
+            one_hot_into(out, j * self.side, self.side, coords[j] as usize);
+        }
+    }
+
+    fn is_terminal(&self, state: &HypergridState, idx: usize) -> bool {
+        state.terminal[idx]
+    }
+
+    fn is_initial(&self, state: &HypergridState, idx: usize) -> bool {
+        !state.terminal[idx] && state.coords_of(idx).iter().all(|&c| c == 0)
+    }
+
+    fn extract(&self, state: &HypergridState, idx: usize) -> Vec<i32> {
+        debug_assert!(state.terminal[idx], "extract on non-terminal state");
+        state.coords_of(idx).to_vec()
+    }
+
+    fn inject_terminal(&self, objs: &[Vec<i32>]) -> HypergridState {
+        let n = objs.len();
+        let mut coords = Vec::with_capacity(n * self.dim);
+        for o in objs {
+            assert_eq!(o.len(), self.dim);
+            coords.extend_from_slice(o);
+        }
+        HypergridState { coords, terminal: vec![true; n], d: self.dim }
+    }
+
+    fn log_reward_obj(&self, obj: &Vec<i32>) -> f64 {
+        self.reward.log_reward(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::testkit;
+    use crate::reward::hypergrid::HypergridReward;
+
+    fn env(d: usize, h: usize) -> HypergridEnv<HypergridReward> {
+        HypergridEnv::new(d, h, HypergridReward::standard(h))
+    }
+
+    #[test]
+    fn spec_shapes() {
+        let e = env(4, 20);
+        let s = e.spec();
+        assert_eq!(s.obs_dim, 80);
+        assert_eq!(s.n_actions, 5);
+        assert_eq!(s.n_bwd_actions, 4);
+        assert_eq!(s.t_max, 77);
+    }
+
+    #[test]
+    fn listing1_semantics() {
+        // Mirrors the paper's Listing 1: step coord 0, then stop.
+        let e = env(3, 5);
+        let mut st = e.reset(1);
+        let out = e.step(&mut st, &[0]);
+        assert!(!st.terminal[0]);
+        assert_eq!(out.log_reward[0], 0.0);
+        let out = e.step(&mut st, &[e.stop_action()]);
+        assert!(st.terminal[0]);
+        assert!(out.log_reward[0].is_finite());
+        assert!(out.log_reward[0] != 0.0);
+    }
+
+    #[test]
+    fn listing2_backward_inverts() {
+        let e = env(3, 5);
+        let mut st = e.reset(1);
+        e.step(&mut st, &[0]);
+        let before = st.clone();
+        e.step(&mut st, &[1]);
+        let bwd = e.get_backward_action(&before, 0, 1);
+        e.backward_step(&mut st, &[bwd]);
+        assert_eq!(st, before);
+    }
+
+    #[test]
+    fn boundary_masking() {
+        let e = env(2, 3);
+        let mut st = e.reset(1);
+        // Walk coord 0 to the edge.
+        e.step(&mut st, &[0]);
+        e.step(&mut st, &[0]);
+        let mut mask = [false; 3];
+        e.fwd_mask_into(&st, 0, &mut mask);
+        assert_eq!(mask, [false, true, true]); // coord0 at edge, coord1 free, stop
+    }
+
+    #[test]
+    fn flat_index_roundtrip() {
+        let e = env(3, 7);
+        for idx in [0usize, 1, 42, 341, 342] {
+            assert_eq!(e.flat_index(&e.unflatten(idx)), idx);
+        }
+    }
+
+    #[test]
+    fn stepping_terminal_is_noop() {
+        let e = env(2, 4);
+        let mut st = e.reset(1);
+        e.step(&mut st, &[e.stop_action()]);
+        let snap = st.clone();
+        let out = e.step(&mut st, &[0]);
+        assert_eq!(st, snap);
+        assert!(out.done[0]);
+        assert_eq!(out.log_reward[0], 0.0); // reward only on the terminal transition
+    }
+
+    #[test]
+    fn invariants_small() {
+        let e = env(3, 4);
+        testkit::check_forward_backward_inversion(&e, 8, 11);
+        testkit::check_masks_and_obs(&e, 8, 12);
+        testkit::check_inject_extract_roundtrip(&e, 8, 13);
+        testkit::check_backward_rollout_reaches_s0(&e, 8, 14);
+    }
+
+    #[test]
+    fn invariants_paper_size() {
+        let e = env(4, 20);
+        testkit::check_forward_backward_inversion(&e, 4, 21);
+        testkit::check_backward_rollout_reaches_s0(&e, 4, 22);
+    }
+}

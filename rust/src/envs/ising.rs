@@ -1,0 +1,211 @@
+//! Ising model environment (Zhang et al. 2022; gfnx env #8): states are
+//! partial spin assignments s ∈ {−1, +1, ∅}^D on an N×N toroidal lattice;
+//! each step picks an unassigned site and sets its spin; after D steps the
+//! configuration is complete (terminal — no stop action).
+//!
+//! Action layout: `site·2 + b` with b = 0 → spin −1, b = 1 → spin +1.
+//! Backward actions: `site` (unassign), legal when assigned.
+
+use super::{EnvSpec, StepOut, VecEnv};
+use crate::reward::RewardModule;
+
+/// Batched partial-assignment state. `spins` holds −1/0/+1 (0 = unassigned).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IsingState {
+    pub spins: Vec<i8>,
+    pub n_assigned: Vec<u16>,
+    pub d: usize,
+}
+
+impl IsingState {
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i8] {
+        &self.spins[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    fn row_mut(&mut self, i: usize) -> &mut [i8] {
+        &mut self.spins[i * self.d..(i + 1) * self.d]
+    }
+}
+
+/// The Ising environment; `R` scores full configurations.
+pub struct IsingEnv<R> {
+    /// Number of sites D = N².
+    pub d: usize,
+    pub reward: R,
+}
+
+impl<R: RewardModule<Vec<i8>>> IsingEnv<R> {
+    pub fn new(d: usize, reward: R) -> Self {
+        IsingEnv { d, reward }
+    }
+
+    /// Convenience: N×N torus with D = N² sites.
+    pub fn lattice(n: usize, reward: R) -> Self {
+        Self::new(n * n, reward)
+    }
+}
+
+impl<R: RewardModule<Vec<i8>>> VecEnv for IsingEnv<R> {
+    type State = IsingState;
+    type Obj = Vec<i8>;
+
+    fn spec(&self) -> EnvSpec {
+        EnvSpec {
+            // Two channels: spin value and assigned mask.
+            obs_dim: 2 * self.d,
+            n_actions: 2 * self.d,
+            n_bwd_actions: self.d,
+            t_max: self.d,
+        }
+    }
+
+    fn reset(&self, n: usize) -> IsingState {
+        IsingState { spins: vec![0; n * self.d], n_assigned: vec![0; n], d: self.d }
+    }
+
+    fn batch_len(&self, state: &IsingState) -> usize {
+        state.n_assigned.len()
+    }
+
+    fn step(&self, state: &mut IsingState, actions: &[i32]) -> StepOut {
+        let n = state.n_assigned.len();
+        let mut out = StepOut::new(n);
+        for i in 0..n {
+            if state.n_assigned[i] as usize == self.d || actions[i] < 0 {
+                out.done[i] = state.n_assigned[i] as usize == self.d;
+                continue;
+            }
+            let a = actions[i] as usize;
+            let (site, b) = (a / 2, a % 2);
+            debug_assert_eq!(state.row(i)[site], 0, "site already assigned");
+            state.row_mut(i)[site] = if b == 0 { -1 } else { 1 };
+            state.n_assigned[i] += 1;
+            if state.n_assigned[i] as usize == self.d {
+                out.done[i] = true;
+                out.log_reward[i] = self.reward.log_reward(&state.row(i).to_vec());
+            }
+        }
+        out
+    }
+
+    fn backward_step(&self, state: &mut IsingState, actions: &[i32]) {
+        let n = state.n_assigned.len();
+        for i in 0..n {
+            if actions[i] < 0 {
+                continue;
+            }
+            let site = actions[i] as usize;
+            debug_assert!(state.row(i)[site] != 0, "unassigning empty site");
+            state.row_mut(i)[site] = 0;
+            state.n_assigned[i] -= 1;
+        }
+    }
+
+    fn get_backward_action(&self, _prev: &IsingState, _idx: usize, fwd_action: i32) -> i32 {
+        fwd_action / 2
+    }
+
+    fn forward_action_of(&self, state: &IsingState, idx: usize, bwd_action: i32) -> i32 {
+        let site = bwd_action as usize;
+        let spin = state.row(idx)[site];
+        debug_assert!(spin != 0);
+        (site * 2 + if spin > 0 { 1 } else { 0 }) as i32
+    }
+
+    fn fwd_mask_into(&self, state: &IsingState, idx: usize, out: &mut [bool]) {
+        let row = state.row(idx);
+        for site in 0..self.d {
+            let empty = row[site] == 0;
+            out[site * 2] = empty;
+            out[site * 2 + 1] = empty;
+        }
+    }
+
+    fn bwd_mask_into(&self, state: &IsingState, idx: usize, out: &mut [bool]) {
+        let row = state.row(idx);
+        for site in 0..self.d {
+            out[site] = row[site] != 0;
+        }
+    }
+
+    fn obs_into(&self, state: &IsingState, idx: usize, out: &mut [f32]) {
+        let row = state.row(idx);
+        for site in 0..self.d {
+            out[site] = row[site] as f32;
+            out[self.d + site] = if row[site] != 0 { 1.0 } else { 0.0 };
+        }
+    }
+
+    fn is_terminal(&self, state: &IsingState, idx: usize) -> bool {
+        state.n_assigned[idx] as usize == self.d
+    }
+
+    fn is_initial(&self, state: &IsingState, idx: usize) -> bool {
+        state.n_assigned[idx] == 0
+    }
+
+    fn extract(&self, state: &IsingState, idx: usize) -> Vec<i8> {
+        debug_assert!(self.is_terminal(state, idx));
+        state.row(idx).to_vec()
+    }
+
+    fn inject_terminal(&self, objs: &[Vec<i8>]) -> IsingState {
+        let n = objs.len();
+        let mut spins = Vec::with_capacity(n * self.d);
+        for o in objs {
+            assert_eq!(o.len(), self.d);
+            assert!(o.iter().all(|&s| s == 1 || s == -1));
+            spins.extend_from_slice(o);
+        }
+        IsingState { spins, n_assigned: vec![self.d as u16; n], d: self.d }
+    }
+
+    fn log_reward_obj(&self, obj: &Vec<i8>) -> f64 {
+        self.reward.log_reward(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::testkit;
+    use crate::reward::ising::IsingReward;
+
+    fn env(n: usize, sigma: f64) -> IsingEnv<IsingReward> {
+        IsingEnv::lattice(n, IsingReward::torus(n, sigma))
+    }
+
+    #[test]
+    fn spec_n9() {
+        let s = env(9, 0.1).spec();
+        assert_eq!(s.n_actions, 162);
+        assert_eq!(s.n_bwd_actions, 81);
+        assert_eq!(s.t_max, 81);
+        assert_eq!(s.obs_dim, 162);
+    }
+
+    #[test]
+    fn assignment_sequence() {
+        let e = env(2, 0.5);
+        let mut st = e.reset(1);
+        e.step(&mut st, &[0 * 2 + 1]); // site0 = +1
+        e.step(&mut st, &[3 * 2 + 0]); // site3 = -1
+        assert_eq!(st.row(0), &[1, 0, 0, -1]);
+        assert!(!e.is_terminal(&st, 0));
+        e.step(&mut st, &[1 * 2 + 1]);
+        let out = e.step(&mut st, &[2 * 2 + 1]);
+        assert!(out.done[0]);
+        assert!(out.log_reward[0].is_finite());
+    }
+
+    #[test]
+    fn invariants() {
+        let e = env(3, 0.2);
+        testkit::check_forward_backward_inversion(&e, 6, 101);
+        testkit::check_masks_and_obs(&e, 6, 102);
+        testkit::check_inject_extract_roundtrip(&e, 6, 103);
+        testkit::check_backward_rollout_reaches_s0(&e, 6, 104);
+    }
+}

@@ -1,0 +1,334 @@
+//! Vectorized GFlowNet environments.
+//!
+//! Mirrors the reference gfnx design: environments are *stateless* — all
+//! mutable data lives in a state struct returned by [`VecEnv::reset`] and
+//! modified explicitly by [`VecEnv::step`] / [`VecEnv::backward_step`].
+//! Rewards are decoupled from dynamics (see [`crate::reward`]), environments
+//! emit **log-rewards** on terminal transitions and zero otherwise, and
+//! backward transitions mirror forward ones closely enough that a backward
+//! rollout is "replace initial states by terminal ones and `step` by
+//! `backward_step`" (paper §2, Listing 2).
+//!
+//! Action conventions:
+//! - Forward actions are `i32` indices in `[0, spec().n_actions)`.
+//! - The sentinel [`NOOP`] (−1) leaves a row untouched in both `step` and
+//!   `backward_step`; rollout code uses it for rows that already finished.
+//! - Backward actions are indices in `[0, spec().n_bwd_actions)`; where a
+//!   parent is unique the backward policy is degenerate and
+//!   `n_bwd_actions == 1`.
+//! - Environments with explicit termination expose the stop action as the
+//!   **last** forward action (`spec().n_actions - 1`), as in gfnx.
+
+pub mod hypergrid;
+pub mod seq;
+pub mod bitseq;
+pub mod tfbind8;
+pub mod qm9;
+pub mod amp;
+pub mod phylo;
+pub mod bayesnet;
+pub mod ising;
+
+use crate::util::rng::Rng;
+
+/// Sentinel action: leave this batch row untouched.
+pub const NOOP: i32 = -1;
+
+/// Static shape information about an environment family instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EnvSpec {
+    /// Flattened observation length per environment instance.
+    pub obs_dim: usize,
+    /// Number of forward actions (including the stop action if any).
+    pub n_actions: usize,
+    /// Number of backward actions (1 when the parent is unique).
+    pub n_bwd_actions: usize,
+    /// Maximum trajectory length (number of forward transitions, including
+    /// the stop transition if any). Rollout buffers are padded to this.
+    pub t_max: usize,
+}
+
+/// Result of stepping a batch of environments.
+#[derive(Clone, Debug, Default)]
+pub struct StepOut {
+    /// Per-env log-reward: the terminal log-reward for transitions that
+    /// *became* terminal this step, 0.0 otherwise (paper convention).
+    pub log_reward: Vec<f64>,
+    /// Per-env terminal flag *after* this step.
+    pub done: Vec<bool>,
+}
+
+impl StepOut {
+    pub fn new(n: usize) -> Self {
+        StepOut { log_reward: vec![0.0; n], done: vec![false; n] }
+    }
+}
+
+/// A vectorized, stateless GFlowNet environment.
+///
+/// `State` holds the batch of mutable env states; `Obj` is the type of a
+/// completed (terminal) object, used to inject terminal states for backward
+/// rollouts and by the metrics code.
+pub trait VecEnv {
+    type State;
+    type Obj: Clone;
+
+    /// Shape information (constant for a given env instance).
+    fn spec(&self) -> EnvSpec;
+
+    /// Fresh batch of `n` initial states.
+    fn reset(&self, n: usize) -> Self::State;
+
+    /// Number of env instances in a state batch.
+    fn batch_len(&self, state: &Self::State) -> usize;
+
+    /// Apply forward `actions` (one per env). Envs that are already terminal
+    /// are left untouched and report `done = true`, `log_reward = 0`.
+    fn step(&self, state: &mut Self::State, actions: &[i32]) -> StepOut;
+
+    /// Apply backward `actions`. Backward from a terminal state with an
+    /// explicit stop transition first undoes the stop (unique parent); the
+    /// provided action is then interpreted in the pre-stop state where the
+    /// environment documents so.
+    fn backward_step(&self, state: &mut Self::State, actions: &[i32]);
+
+    /// The backward action that inverts `fwd_action` taken from `prev` —
+    /// i.e. `backward_step(step(prev, a), get_backward_action(prev, a))`
+    /// restores `prev` (paper Listing 2).
+    fn get_backward_action(&self, prev: &Self::State, idx: usize, fwd_action: i32) -> i32;
+
+    /// The forward action that the backward action `bwd_action` undoes from
+    /// state `state` (used to score backward rollouts under `P_F`).
+    fn forward_action_of(&self, state: &Self::State, idx: usize, bwd_action: i32) -> i32;
+
+    /// Write the legal-forward-action mask of env `idx` into `out`
+    /// (`out.len() == n_actions`).
+    fn fwd_mask_into(&self, state: &Self::State, idx: usize, out: &mut [bool]);
+
+    /// Write the legal-backward-action mask of env `idx` into `out`
+    /// (`out.len() == n_bwd_actions`).
+    fn bwd_mask_into(&self, state: &Self::State, idx: usize, out: &mut [bool]);
+
+    /// Encode env `idx` into `out` (`out.len() == obs_dim`).
+    fn obs_into(&self, state: &Self::State, idx: usize, out: &mut [f32]);
+
+    /// Is env `idx` in a terminal state?
+    fn is_terminal(&self, state: &Self::State, idx: usize) -> bool;
+
+    /// Is env `idx` in the initial state (backward rollout finished)?
+    fn is_initial(&self, state: &Self::State, idx: usize) -> bool;
+
+    /// Extract the completed object of a terminal env.
+    fn extract(&self, state: &Self::State, idx: usize) -> Self::Obj;
+
+    /// Build a batch of *terminal* states from objects (for backward
+    /// rollouts, P̂_θ estimation, and EB-GFN negative sampling).
+    fn inject_terminal(&self, objs: &[Self::Obj]) -> Self::State;
+
+    /// Log-reward of a completed object (delegates to the reward module).
+    fn log_reward_obj(&self, obj: &Self::Obj) -> f64;
+
+    /// Sample a uniformly random legal forward action for env `idx`
+    /// (ε-uniform exploration helper).
+    fn random_fwd_action(&self, state: &Self::State, idx: usize, rng: &mut Rng) -> i32 {
+        let mut mask = vec![false; self.spec().n_actions];
+        self.fwd_mask_into(state, idx, &mut mask);
+        rng.uniform_masked(&mask) as i32
+    }
+}
+
+/// Shared helper: number of legal actions in a mask (used for uniform P_B
+/// log-probabilities and in tests).
+pub fn mask_count(mask: &[bool]) -> usize {
+    mask.iter().filter(|&&m| m).count()
+}
+
+#[cfg(test)]
+pub(crate) mod testkit {
+    //! Generic invariant checks run by every environment's test module.
+    use super::*;
+
+    /// Roll random legal forward actions until all terminal; at every step
+    /// check mask consistency and forward/backward inversion via snapshots.
+    pub fn check_forward_backward_inversion<E>(env: &E, n: usize, seed: u64)
+    where
+        E: VecEnv,
+        E::State: Clone,
+    {
+        let mut rng = Rng::new(seed);
+        let spec = env.spec();
+        let mut state = env.reset(n);
+        for i in 0..n {
+            assert!(env.is_initial(&state, i), "reset not initial at {i}");
+            assert!(!env.is_terminal(&state, i), "reset terminal at {i}");
+        }
+        let mut steps = 0usize;
+        loop {
+            let all_done = (0..n).all(|i| env.is_terminal(&state, i));
+            if all_done {
+                break;
+            }
+            assert!(steps <= spec.t_max, "trajectory exceeded t_max={}", spec.t_max);
+            // Pick random legal actions (NOOP for terminal rows).
+            let mut actions = vec![NOOP; n];
+            for i in 0..n {
+                if !env.is_terminal(&state, i) {
+                    actions[i] = env.random_fwd_action(&state, i, &mut rng);
+                }
+            }
+            let prev = state.clone();
+            let out = env.step(&mut state, &actions);
+            assert_eq!(out.done.len(), n);
+            // Inversion: applying the matching backward action must restore
+            // the previous state exactly.
+            let mut undone = state.clone();
+            let mut bwd = vec![NOOP; n];
+            for i in 0..n {
+                if !env.is_terminal(&prev, i) {
+                    bwd[i] = env.get_backward_action(&prev, i, actions[i]);
+                    let fwd_again = env.forward_action_of(&state, i, bwd[i]);
+                    assert_eq!(
+                        fwd_again, actions[i],
+                        "forward_action_of does not invert get_backward_action at env {i}"
+                    );
+                }
+            }
+            env.backward_step(&mut undone, &bwd);
+            for i in 0..n {
+                if !env.is_terminal(&prev, i) {
+                    // Compare via obs encoding + flags (state types may
+                    // carry caches that are allowed to differ).
+                    let mut a = vec![0f32; spec.obs_dim];
+                    let mut b = vec![0f32; spec.obs_dim];
+                    env.obs_into(&prev, i, &mut a);
+                    env.obs_into(&undone, i, &mut b);
+                    assert_eq!(a, b, "backward_step did not invert step at env {i}");
+                    assert_eq!(
+                        env.is_terminal(&prev, i),
+                        env.is_terminal(&undone, i),
+                        "terminal flag mismatch after inversion at env {i}"
+                    );
+                }
+            }
+            steps += 1;
+        }
+        // Terminal rewards are finite.
+        for i in 0..n {
+            let obj = env.extract(&state, i);
+            let lr = env.log_reward_obj(&obj);
+            assert!(lr.is_finite(), "non-finite log reward at env {i}");
+        }
+    }
+
+    /// Masks must always admit at least one action for non-terminal states,
+    /// and the obs encoding must have the declared length with finite values.
+    pub fn check_masks_and_obs<E: VecEnv>(env: &E, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let spec = env.spec();
+        let mut state = env.reset(n);
+        let mut obs = vec![0f32; spec.obs_dim];
+        let mut mask = vec![false; spec.n_actions];
+        for _ in 0..spec.t_max {
+            let mut actions = vec![NOOP; n];
+            for i in 0..n {
+                env.obs_into(&state, i, &mut obs);
+                assert!(obs.iter().all(|v| v.is_finite()));
+                if !env.is_terminal(&state, i) {
+                    env.fwd_mask_into(&state, i, &mut mask);
+                    assert!(
+                        mask_count(&mask) > 0,
+                        "non-terminal state with empty action mask"
+                    );
+                    actions[i] = rng.uniform_masked(&mask) as i32;
+                }
+            }
+            env.step(&mut state, &actions);
+            if (0..n).all(|i| env.is_terminal(&state, i)) {
+                break;
+            }
+        }
+    }
+
+    /// inject_terminal(extract(s)) must be terminal, decode to the same
+    /// object, and encode to the same observation.
+    pub fn check_inject_extract_roundtrip<E>(env: &E, n: usize, seed: u64)
+    where
+        E: VecEnv,
+        E::Obj: PartialEq + std::fmt::Debug,
+    {
+        let mut rng = Rng::new(seed);
+        let mut state = env.reset(n);
+        for _ in 0..env.spec().t_max + 1 {
+            if (0..n).all(|i| env.is_terminal(&state, i)) {
+                break;
+            }
+            let mut actions = vec![NOOP; n];
+            for i in 0..n {
+                if !env.is_terminal(&state, i) {
+                    actions[i] = env.random_fwd_action(&state, i, &mut rng);
+                }
+            }
+            env.step(&mut state, &actions);
+        }
+        let objs: Vec<E::Obj> = (0..n).map(|i| env.extract(&state, i)).collect();
+        let injected = env.inject_terminal(&objs);
+        for i in 0..n {
+            assert!(env.is_terminal(&injected, i), "injected state not terminal");
+            assert_eq!(env.extract(&injected, i), objs[i], "inject/extract mismatch");
+            let mut a = vec![0f32; env.spec().obs_dim];
+            let mut b = vec![0f32; env.spec().obs_dim];
+            env.obs_into(&state, i, &mut a);
+            env.obs_into(&injected, i, &mut b);
+            assert_eq!(a, b, "injected obs mismatch at env {i}");
+        }
+    }
+
+    /// Backward rollout from terminal states reaches the initial state in at
+    /// most t_max steps, with legal backward actions throughout.
+    pub fn check_backward_rollout_reaches_s0<E>(env: &E, n: usize, seed: u64)
+    where
+        E: VecEnv,
+    {
+        let mut rng = Rng::new(seed);
+        // Forward to terminal first.
+        let mut state = env.reset(n);
+        for _ in 0..env.spec().t_max + 1 {
+            if (0..n).all(|i| env.is_terminal(&state, i)) {
+                break;
+            }
+            let mut actions = vec![NOOP; n];
+            for i in 0..n {
+                if !env.is_terminal(&state, i) {
+                    actions[i] = env.random_fwd_action(&state, i, &mut rng);
+                }
+            }
+            env.step(&mut state, &actions);
+        }
+        // Now walk backward.
+        let spec = env.spec();
+        let mut bmask = vec![false; spec.n_bwd_actions];
+        for _ in 0..2 * (spec.t_max + 1) {
+            if (0..n).all(|i| env.is_initial(&state, i)) {
+                break;
+            }
+            let mut actions = vec![NOOP; n];
+            for i in 0..n {
+                if !env.is_initial(&state, i) {
+                    env.bwd_mask_into(&state, i, &mut bmask);
+                    assert!(
+                        mask_count(&bmask) > 0,
+                        "non-initial state with empty backward mask"
+                    );
+                    actions[i] = rng.uniform_masked(&bmask) as i32;
+                }
+            }
+            env.backward_step(&mut state, &actions);
+        }
+        for i in 0..n {
+            assert!(
+                env.is_initial(&state, i),
+                "backward rollout did not reach s0 at env {i}"
+            );
+        }
+    }
+}

@@ -1,0 +1,441 @@
+//! Phylogenetic tree generation environment (Zhou et al. 2024 PhyloGFN /
+//! Deleu et al. 2024 setting; gfnx env #6).
+//!
+//! The state is a forest over `n` species: initially `n` singleton trees in
+//! slots 0..n; each step merges the trees in two active slots under a new
+//! common ancestor. After n−1 merges a single rooted binary tree remains
+//! (terminal — no stop action). A merged tree is stored in the slot holding
+//! the minimum leaf index of its union, which makes slot assignment a pure
+//! function of the tree (needed for exact backward inversion).
+//!
+//! Forward actions enumerate unordered slot pairs (i<j); backward actions
+//! pick the slot whose root merge is undone. Fitch state sets and mutation
+//! counts are maintained incrementally per merge, giving the FLDB energy
+//! E(s) = Σ_{roots} muts(root) for free.
+
+use super::{EnvSpec, StepOut, VecEnv};
+use crate::reward::parsimony::{Alignment, ParsimonyReward, PhyloTree};
+use crate::reward::RewardModule;
+use std::sync::Arc;
+
+/// One arena node: a rooted (sub)tree with cached Fitch data.
+#[derive(Clone, Debug, PartialEq)]
+struct Node {
+    left: Option<usize>,
+    right: Option<usize>,
+    leaf: Option<u16>,
+    leaf_set: u64,
+    /// Per-site Fitch state masks of this root.
+    fitch: Vec<u8>,
+    /// Total mutations in this subtree (Fitch count).
+    muts: u32,
+}
+
+/// One environment instance: an arena of nodes plus slot → node mapping.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Forest {
+    nodes: Vec<Node>,
+    /// `slots[i]` = arena index of the root living in slot i (None = empty).
+    slots: Vec<Option<usize>>,
+    n_active: usize,
+}
+
+/// Batched phylogenetic state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhyloState {
+    pub forests: Vec<Forest>,
+}
+
+/// The phylogenetics environment.
+pub struct PhyloEnv {
+    pub n_species: usize,
+    pub alignment: Arc<Alignment>,
+    pub reward: ParsimonyReward,
+}
+
+impl PhyloEnv {
+    pub fn new(alignment: Alignment, c: f64, alpha: f64) -> Self {
+        let n = alignment.n_species();
+        assert!(n >= 2 && n <= 64);
+        let alignment = Arc::new(alignment);
+        PhyloEnv {
+            n_species: n,
+            alignment: alignment.clone(),
+            reward: ParsimonyReward {
+                alignment: (*alignment).clone(),
+                c,
+                alpha,
+            },
+        }
+    }
+
+    /// Number of unordered slot pairs = forward action count.
+    pub fn n_pairs(&self) -> usize {
+        self.n_species * (self.n_species - 1) / 2
+    }
+
+    /// Map an unordered pair (i < j) to its action index.
+    pub fn pair_to_action(&self, i: usize, j: usize) -> i32 {
+        debug_assert!(i < j && j < self.n_species);
+        let n = self.n_species;
+        (i * n - i * (i + 1) / 2 + (j - i - 1)) as i32
+    }
+
+    /// Inverse of [`Self::pair_to_action`].
+    pub fn action_to_pair(&self, a: i32) -> (usize, usize) {
+        let n = self.n_species;
+        let mut a = a as usize;
+        for i in 0..n {
+            let row = n - i - 1;
+            if a < row {
+                return (i, i + 1 + a);
+            }
+            a -= row;
+        }
+        panic!("action out of range");
+    }
+
+    fn leaf_node(&self, species: u16) -> Node {
+        let aln = &self.alignment;
+        Node {
+            left: None,
+            right: None,
+            leaf: Some(species),
+            leaf_set: 1u64 << species,
+            fitch: (0..aln.n_sites)
+                .map(|s| aln.leaf_mask(species as usize, s))
+                .collect(),
+            muts: 0,
+        }
+    }
+
+    fn merge_nodes(&self, f: &mut Forest, a: usize, b: usize) -> usize {
+        let (ma, mb) = (f.nodes[a].fitch.clone(), f.nodes[b].fitch.clone());
+        let mut fitch = Vec::with_capacity(ma.len());
+        let mut new_muts = 0u32;
+        for s in 0..ma.len() {
+            let inter = ma[s] & mb[s];
+            if inter == 0 {
+                fitch.push(ma[s] | mb[s]);
+                new_muts += 1;
+            } else {
+                fitch.push(inter);
+            }
+        }
+        let node = Node {
+            left: Some(a),
+            right: Some(b),
+            leaf: None,
+            leaf_set: f.nodes[a].leaf_set | f.nodes[b].leaf_set,
+            fitch,
+            muts: f.nodes[a].muts + f.nodes[b].muts + new_muts,
+        };
+        f.nodes.push(node);
+        f.nodes.len() - 1
+    }
+
+    /// FLDB energy of env `idx`: total mutations across active roots
+    /// (E(s₀) = 0; at terminal states E = M(x)).
+    pub fn energy(&self, state: &PhyloState, idx: usize) -> f64 {
+        let f = &state.forests[idx];
+        f.slots
+            .iter()
+            .flatten()
+            .map(|&ni| f.nodes[ni].muts as f64)
+            .sum()
+    }
+
+    fn build_tree(&self, f: &Forest, ni: usize) -> PhyloTree {
+        let n = &f.nodes[ni];
+        match n.leaf {
+            Some(l) => PhyloTree::Leaf(l),
+            None => PhyloTree::node(
+                self.build_tree(f, n.left.unwrap()),
+                self.build_tree(f, n.right.unwrap()),
+            ),
+        }
+    }
+
+    fn insert_tree(&self, f: &mut Forest, tree: &PhyloTree) -> usize {
+        match tree {
+            PhyloTree::Leaf(l) => {
+                f.nodes.push(self.leaf_node(*l));
+                f.nodes.len() - 1
+            }
+            PhyloTree::Node(a, b) => {
+                let ia = self.insert_tree(f, a);
+                let ib = self.insert_tree(f, b);
+                self.merge_nodes(f, ia, ib)
+            }
+        }
+    }
+}
+
+impl VecEnv for PhyloEnv {
+    type State = PhyloState;
+    type Obj = PhyloTree;
+
+    fn spec(&self) -> EnvSpec {
+        let m = self.alignment.n_sites;
+        EnvSpec {
+            // Per slot: active flag + 4 Fitch bits per site.
+            obs_dim: self.n_species * (1 + 4 * m),
+            n_actions: self.n_pairs(),
+            n_bwd_actions: self.n_species,
+            t_max: self.n_species - 1,
+        }
+    }
+
+    fn reset(&self, n: usize) -> PhyloState {
+        let forests = (0..n)
+            .map(|_| {
+                let nodes: Vec<Node> =
+                    (0..self.n_species).map(|s| self.leaf_node(s as u16)).collect();
+                Forest {
+                    slots: (0..self.n_species).map(Some).collect(),
+                    nodes,
+                    n_active: self.n_species,
+                }
+            })
+            .collect();
+        PhyloState { forests }
+    }
+
+    fn batch_len(&self, state: &PhyloState) -> usize {
+        state.forests.len()
+    }
+
+    fn step(&self, state: &mut PhyloState, actions: &[i32]) -> StepOut {
+        let n = state.forests.len();
+        let mut out = StepOut::new(n);
+        for i in 0..n {
+            if state.forests[i].n_active == 1 || actions[i] < 0 {
+                out.done[i] = state.forests[i].n_active == 1;
+                continue;
+            }
+            let (si, sj) = self.action_to_pair(actions[i]);
+            let f = &mut state.forests[i];
+            let (a, b) = (
+                f.slots[si].expect("merge from empty slot"),
+                f.slots[sj].expect("merge from empty slot"),
+            );
+            let merged = self.merge_nodes(f, a, b);
+            f.slots[si] = Some(merged);
+            f.slots[sj] = None;
+            f.n_active -= 1;
+            if f.n_active == 1 {
+                out.done[i] = true;
+                let tree = self.build_tree(&state.forests[i], state.forests[i].slots[si].unwrap());
+                out.log_reward[i] = self.reward.log_reward(&tree);
+            }
+        }
+        out
+    }
+
+    fn backward_step(&self, state: &mut PhyloState, actions: &[i32]) {
+        for (i, f) in state.forests.iter_mut().enumerate() {
+            if actions[i] < 0 {
+                continue;
+            }
+            let s = actions[i] as usize;
+            let ni = f.slots[s].expect("split on empty slot");
+            let node = f.nodes[ni].clone();
+            let (l, r) = (
+                node.left.expect("split on a leaf"),
+                node.right.expect("split on a leaf"),
+            );
+            // Children return to their min-leaf slots.
+            let sl = f.nodes[l].leaf_set.trailing_zeros() as usize;
+            let sr = f.nodes[r].leaf_set.trailing_zeros() as usize;
+            debug_assert!(sl == s || sr == s, "merged slot must be a child's min leaf");
+            f.slots[sl] = Some(l);
+            f.slots[sr] = Some(r);
+            f.n_active += 1;
+            // Free the node if it is the last allocated (keeps the arena
+            // tight during backward rollouts).
+            if ni == f.nodes.len() - 1 {
+                f.nodes.pop();
+            }
+        }
+    }
+
+    fn get_backward_action(&self, prev: &PhyloState, idx: usize, fwd_action: i32) -> i32 {
+        let (i, j) = self.action_to_pair(fwd_action);
+        debug_assert!(prev.forests[idx].slots[i].is_some());
+        i.min(j) as i32
+    }
+
+    fn forward_action_of(&self, state: &PhyloState, idx: usize, bwd_action: i32) -> i32 {
+        let f = &state.forests[idx];
+        let ni = f.slots[bwd_action as usize].expect("bwd action on empty slot");
+        let node = &f.nodes[ni];
+        let sl = f.nodes[node.left.unwrap()].leaf_set.trailing_zeros() as usize;
+        let sr = f.nodes[node.right.unwrap()].leaf_set.trailing_zeros() as usize;
+        self.pair_to_action(sl.min(sr), sl.max(sr))
+    }
+
+    fn fwd_mask_into(&self, state: &PhyloState, idx: usize, out: &mut [bool]) {
+        let f = &state.forests[idx];
+        for i in 0..self.n_species {
+            for j in (i + 1)..self.n_species {
+                out[self.pair_to_action(i, j) as usize] =
+                    f.slots[i].is_some() && f.slots[j].is_some();
+            }
+        }
+    }
+
+    fn bwd_mask_into(&self, state: &PhyloState, idx: usize, out: &mut [bool]) {
+        let f = &state.forests[idx];
+        for s in 0..self.n_species {
+            out[s] = f.slots[s]
+                .map(|ni| f.nodes[ni].leaf.is_none())
+                .unwrap_or(false);
+        }
+    }
+
+    fn obs_into(&self, state: &PhyloState, idx: usize, out: &mut [f32]) {
+        let m = self.alignment.n_sites;
+        let w = 1 + 4 * m;
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let f = &state.forests[idx];
+        for s in 0..self.n_species {
+            if let Some(ni) = f.slots[s] {
+                let base = s * w;
+                out[base] = 1.0;
+                let fitch = &f.nodes[ni].fitch;
+                for (site, &mask) in fitch.iter().enumerate() {
+                    for b in 0..4 {
+                        if mask & (1 << b) != 0 {
+                            out[base + 1 + site * 4 + b] = 1.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn is_terminal(&self, state: &PhyloState, idx: usize) -> bool {
+        state.forests[idx].n_active == 1
+    }
+
+    fn is_initial(&self, state: &PhyloState, idx: usize) -> bool {
+        state.forests[idx].n_active == self.n_species
+    }
+
+    fn extract(&self, state: &PhyloState, idx: usize) -> PhyloTree {
+        let f = &state.forests[idx];
+        debug_assert_eq!(f.n_active, 1);
+        let root = f.slots.iter().flatten().next().expect("no active root");
+        self.build_tree(f, *root)
+    }
+
+    fn inject_terminal(&self, objs: &[PhyloTree]) -> PhyloState {
+        let forests = objs
+            .iter()
+            .map(|tree| {
+                assert_eq!(tree.leaf_count(), self.n_species);
+                let mut f = Forest {
+                    nodes: Vec::new(),
+                    slots: vec![None; self.n_species],
+                    n_active: 1,
+                };
+                let root = self.insert_tree(&mut f, tree);
+                let slot = f.nodes[root].leaf_set.trailing_zeros() as usize;
+                f.slots[slot] = Some(root);
+                f
+            })
+            .collect();
+        PhyloState { forests }
+    }
+
+    fn log_reward_obj(&self, obj: &PhyloTree) -> f64 {
+        self.reward.log_reward(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::phylo_data::synthetic_alignment;
+    use crate::envs::testkit;
+    use crate::util::rng::Rng;
+
+    fn env(n: usize, m: usize) -> PhyloEnv {
+        let mut rng = Rng::new(7);
+        let aln = synthetic_alignment(n, m, 0.15, &mut rng);
+        PhyloEnv::new(aln, 2.0 * m as f64, 4.0)
+    }
+
+    #[test]
+    fn pair_action_roundtrip() {
+        let e = env(6, 4);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                let a = e.pair_to_action(i, j);
+                assert_eq!(e.action_to_pair(a), (i, j));
+                seen.insert(a);
+            }
+        }
+        assert_eq!(seen.len(), 15);
+        assert_eq!(e.n_pairs(), 15);
+    }
+
+    #[test]
+    fn trajectory_has_fixed_length() {
+        let e = env(5, 4);
+        let mut st = e.reset(1);
+        let mut rng = Rng::new(0);
+        let mut steps = 0;
+        while !e.is_terminal(&st, 0) {
+            let a = e.random_fwd_action(&st, 0, &mut rng);
+            e.step(&mut st, &[a]);
+            steps += 1;
+        }
+        assert_eq!(steps, 4); // n - 1
+        let tree = e.extract(&st, 0);
+        assert_eq!(tree.leaf_count(), 5);
+    }
+
+    #[test]
+    fn energy_matches_final_parsimony() {
+        use crate::reward::parsimony::parsimony_score;
+        let e = env(6, 8);
+        let mut st = e.reset(1);
+        let mut rng = Rng::new(3);
+        assert_eq!(e.energy(&st, 0), 0.0); // E(s0) = 0
+        while !e.is_terminal(&st, 0) {
+            let a = e.random_fwd_action(&st, 0, &mut rng);
+            e.step(&mut st, &[a]);
+        }
+        let tree = e.extract(&st, 0);
+        assert_eq!(
+            e.energy(&st, 0),
+            parsimony_score(&tree, &e.alignment) as f64,
+            "incremental Fitch count must equal recursive Fitch"
+        );
+    }
+
+    #[test]
+    fn merged_slot_is_min_leaf() {
+        let e = env(4, 4);
+        let mut st = e.reset(1);
+        // Merge slots 1 and 3 → goes to slot 1.
+        e.step(&mut st, &[e.pair_to_action(1, 3)]);
+        assert!(st.forests[0].slots[1].is_some());
+        assert!(st.forests[0].slots[3].is_none());
+        // Merge slots 0 and 1 → slot 0.
+        e.step(&mut st, &[e.pair_to_action(0, 1)]);
+        assert!(st.forests[0].slots[0].is_some());
+        assert!(st.forests[0].slots[1].is_none());
+    }
+
+    #[test]
+    fn invariants() {
+        let e = env(6, 6);
+        testkit::check_forward_backward_inversion(&e, 6, 91);
+        testkit::check_masks_and_obs(&e, 6, 92);
+        testkit::check_inject_extract_roundtrip(&e, 6, 93);
+        testkit::check_backward_rollout_reaches_s0(&e, 6, 94);
+    }
+}

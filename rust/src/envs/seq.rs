@@ -1,0 +1,501 @@
+//! Shared sequence-generation machinery (gfnx appendix B.2).
+//!
+//! One vectorized environment covering the four generation schemes the paper
+//! catalogues; the concrete benchmark envs (TFBind8, QM9, AMP, bit
+//! sequences) are thin wrappers choosing a scheme + reward module:
+//!
+//! - [`SeqScheme::AutoregFixed`] — left-to-right, fixed length, no stop
+//!   (TFBind8). Backward is degenerate (remove last).
+//! - [`SeqScheme::AutoregVar`] — left-to-right with a stop action, variable
+//!   length (AMP). Backward is degenerate.
+//! - [`SeqScheme::PrependAppend`] — grow at either end to a fixed length
+//!   (QM9): actions `[0, m)` prepend, `[m, 2m)` append; backward chooses
+//!   remove-first / remove-last.
+//! - [`SeqScheme::NonAutoreg`] — fixed length, pick (position, symbol) to
+//!   fill an empty slot (bit sequences): action `p·m + v`; backward chooses
+//!   which position to clear.
+
+use super::{EnvSpec, StepOut, VecEnv};
+use crate::reward::RewardModule;
+
+/// Empty-token marker inside `SeqState::tokens`.
+pub const EMPTY: i16 = -1;
+
+/// Sequence generation scheme (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqScheme {
+    AutoregFixed,
+    AutoregVar,
+    PrependAppend,
+    NonAutoreg,
+}
+
+/// Batched sequence state: row-major `[n, max_len]` tokens (autoregressive
+/// and prepend/append rows are left-aligned), fill counts, terminal flags.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SeqState {
+    pub tokens: Vec<i16>,
+    pub len: Vec<u16>,
+    pub terminal: Vec<bool>,
+    pub max_len: usize,
+}
+
+impl SeqState {
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i16] {
+        &self.tokens[i * self.max_len..(i + 1) * self.max_len]
+    }
+
+    #[inline]
+    fn row_mut(&mut self, i: usize) -> &mut [i16] {
+        &mut self.tokens[i * self.max_len..(i + 1) * self.max_len]
+    }
+}
+
+/// The generic sequence environment. `R` scores completed token vectors.
+pub struct SeqEnv<R> {
+    pub scheme: SeqScheme,
+    /// Vocabulary size m (symbols are `0..m`).
+    pub vocab: usize,
+    /// Maximum (or exact, for fixed-length schemes) sequence length.
+    pub max_len: usize,
+    /// Minimum length before stop becomes legal (AutoregVar only).
+    pub min_len: usize,
+    pub reward: R,
+}
+
+impl<R> SeqEnv<R> {
+    pub fn new(scheme: SeqScheme, vocab: usize, max_len: usize, reward: R) -> Self {
+        assert!(vocab >= 1 && max_len >= 1);
+        SeqEnv { scheme, vocab, max_len, min_len: 1, reward }
+    }
+
+    /// Stop action index (AutoregVar only): the last action.
+    #[inline]
+    pub fn stop_action(&self) -> i32 {
+        debug_assert_eq!(self.scheme, SeqScheme::AutoregVar);
+        self.vocab as i32
+    }
+}
+
+impl<R: RewardModule<Vec<i16>>> VecEnv for SeqEnv<R> {
+    type State = SeqState;
+    type Obj = Vec<i16>;
+
+    fn spec(&self) -> EnvSpec {
+        let (n_actions, n_bwd, t_max) = match self.scheme {
+            SeqScheme::AutoregFixed => (self.vocab, 1, self.max_len),
+            SeqScheme::AutoregVar => (self.vocab + 1, 1, self.max_len + 1),
+            SeqScheme::PrependAppend => (2 * self.vocab, 2, self.max_len),
+            SeqScheme::NonAutoreg => (self.max_len * self.vocab, self.max_len, self.max_len),
+        };
+        EnvSpec {
+            // One-hot per position over vocab + empty class.
+            obs_dim: self.max_len * (self.vocab + 1),
+            n_actions,
+            n_bwd_actions: n_bwd,
+            t_max,
+        }
+    }
+
+    fn reset(&self, n: usize) -> SeqState {
+        SeqState {
+            tokens: vec![EMPTY; n * self.max_len],
+            len: vec![0; n],
+            terminal: vec![false; n],
+            max_len: self.max_len,
+        }
+    }
+
+    fn batch_len(&self, state: &SeqState) -> usize {
+        state.terminal.len()
+    }
+
+    fn step(&self, state: &mut SeqState, actions: &[i32]) -> StepOut {
+        let n = state.terminal.len();
+        debug_assert_eq!(actions.len(), n);
+        let mut out = StepOut::new(n);
+        for i in 0..n {
+            if state.terminal[i] || actions[i] < 0 {
+                out.done[i] = state.terminal[i];
+                continue;
+            }
+            let a = actions[i] as usize;
+            let len = state.len[i] as usize;
+            let max_len = self.max_len;
+            match self.scheme {
+                SeqScheme::AutoregFixed => {
+                    debug_assert!(a < self.vocab && len < max_len);
+                    state.row_mut(i)[len] = a as i16;
+                    state.len[i] += 1;
+                    if len + 1 == max_len {
+                        state.terminal[i] = true;
+                    }
+                }
+                SeqScheme::AutoregVar => {
+                    if a == self.vocab {
+                        debug_assert!(len >= self.min_len, "stop before min_len");
+                        state.terminal[i] = true;
+                    } else {
+                        debug_assert!(len < max_len);
+                        state.row_mut(i)[len] = a as i16;
+                        state.len[i] += 1;
+                    }
+                }
+                SeqScheme::PrependAppend => {
+                    debug_assert!(len < max_len);
+                    if a < self.vocab {
+                        // Prepend: shift right by one, insert at 0.
+                        let row = state.row_mut(i);
+                        for j in (0..len).rev() {
+                            row[j + 1] = row[j];
+                        }
+                        row[0] = a as i16;
+                    } else {
+                        state.row_mut(i)[len] = (a - self.vocab) as i16;
+                    }
+                    state.len[i] += 1;
+                    if len + 1 == max_len {
+                        state.terminal[i] = true;
+                    }
+                }
+                SeqScheme::NonAutoreg => {
+                    let p = a / self.vocab;
+                    let v = a % self.vocab;
+                    debug_assert!(p < max_len);
+                    debug_assert_eq!(state.row(i)[p], EMPTY, "position already filled");
+                    state.row_mut(i)[p] = v as i16;
+                    state.len[i] += 1;
+                    if len + 1 == max_len {
+                        state.terminal[i] = true;
+                    }
+                }
+            }
+            if state.terminal[i] {
+                out.done[i] = true;
+                out.log_reward[i] = self.reward.log_reward(&self.extract(state, i));
+            }
+        }
+        out
+    }
+
+    fn backward_step(&self, state: &mut SeqState, actions: &[i32]) {
+        let n = state.terminal.len();
+        debug_assert_eq!(actions.len(), n);
+        for i in 0..n {
+            if actions[i] < 0 {
+                continue;
+            }
+            let len = state.len[i] as usize;
+            match self.scheme {
+                SeqScheme::AutoregFixed => {
+                    // Terminal ⇔ len == max_len; removing the last token also
+                    // clears terminality (no explicit stop transition).
+                    debug_assert!(len > 0);
+                    state.row_mut(i)[len - 1] = EMPTY;
+                    state.len[i] -= 1;
+                    state.terminal[i] = false;
+                }
+                SeqScheme::AutoregVar => {
+                    if state.terminal[i] {
+                        // Unique parent: undo stop.
+                        state.terminal[i] = false;
+                    } else {
+                        debug_assert!(len > 0);
+                        state.row_mut(i)[len - 1] = EMPTY;
+                        state.len[i] -= 1;
+                    }
+                }
+                SeqScheme::PrependAppend => {
+                    debug_assert!(len > 0);
+                    if actions[i] == 0 {
+                        // Remove first: shift left.
+                        let row = state.row_mut(i);
+                        for j in 1..len {
+                            row[j - 1] = row[j];
+                        }
+                        row[len - 1] = EMPTY;
+                    } else {
+                        state.row_mut(i)[len - 1] = EMPTY;
+                    }
+                    state.len[i] -= 1;
+                    state.terminal[i] = false;
+                }
+                SeqScheme::NonAutoreg => {
+                    let p = actions[i] as usize;
+                    debug_assert!(state.row(i)[p] != EMPTY, "clearing empty position");
+                    state.row_mut(i)[p] = EMPTY;
+                    state.len[i] -= 1;
+                    state.terminal[i] = false;
+                }
+            }
+        }
+    }
+
+    fn get_backward_action(&self, _prev: &SeqState, _idx: usize, fwd_action: i32) -> i32 {
+        match self.scheme {
+            SeqScheme::AutoregFixed | SeqScheme::AutoregVar => 0,
+            SeqScheme::PrependAppend => {
+                if (fwd_action as usize) < self.vocab {
+                    0 // prepend ↔ remove-first
+                } else {
+                    1 // append ↔ remove-last
+                }
+            }
+            SeqScheme::NonAutoreg => fwd_action / self.vocab as i32,
+        }
+    }
+
+    fn forward_action_of(&self, state: &SeqState, idx: usize, bwd_action: i32) -> i32 {
+        let len = state.len[idx] as usize;
+        match self.scheme {
+            SeqScheme::AutoregFixed => state.row(idx)[len - 1] as i32,
+            SeqScheme::AutoregVar => {
+                if state.terminal[idx] {
+                    self.stop_action()
+                } else {
+                    state.row(idx)[len - 1] as i32
+                }
+            }
+            SeqScheme::PrependAppend => {
+                if bwd_action == 0 {
+                    state.row(idx)[0] as i32
+                } else {
+                    self.vocab as i32 + state.row(idx)[len - 1] as i32
+                }
+            }
+            SeqScheme::NonAutoreg => {
+                let p = bwd_action as usize;
+                p as i32 * self.vocab as i32 + state.row(idx)[p] as i32
+            }
+        }
+    }
+
+    fn fwd_mask_into(&self, state: &SeqState, idx: usize, out: &mut [bool]) {
+        let len = state.len[idx] as usize;
+        match self.scheme {
+            SeqScheme::AutoregFixed => {
+                out.iter_mut().for_each(|m| *m = len < self.max_len);
+            }
+            SeqScheme::AutoregVar => {
+                let can_append = len < self.max_len;
+                out[..self.vocab].iter_mut().for_each(|m| *m = can_append);
+                out[self.vocab] = len >= self.min_len;
+            }
+            SeqScheme::PrependAppend => {
+                out.iter_mut().for_each(|m| *m = len < self.max_len);
+            }
+            SeqScheme::NonAutoreg => {
+                let row = state.row(idx);
+                for p in 0..self.max_len {
+                    let empty = row[p] == EMPTY;
+                    out[p * self.vocab..(p + 1) * self.vocab]
+                        .iter_mut()
+                        .for_each(|m| *m = empty);
+                }
+            }
+        }
+    }
+
+    fn bwd_mask_into(&self, state: &SeqState, idx: usize, out: &mut [bool]) {
+        match self.scheme {
+            SeqScheme::AutoregFixed | SeqScheme::AutoregVar => {
+                out[0] = true;
+            }
+            SeqScheme::PrependAppend => {
+                let len = state.len[idx] as usize;
+                out[0] = len > 0;
+                out[1] = len > 0;
+            }
+            SeqScheme::NonAutoreg => {
+                let row = state.row(idx);
+                for p in 0..self.max_len {
+                    out[p] = row[p] != EMPTY;
+                }
+            }
+        }
+    }
+
+    fn obs_into(&self, state: &SeqState, idx: usize, out: &mut [f32]) {
+        // Per position: one-hot over vocab symbols + trailing "empty" class.
+        let w = self.vocab + 1;
+        debug_assert_eq!(out.len(), self.max_len * w);
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let row = state.row(idx);
+        for p in 0..self.max_len {
+            let t = row[p];
+            let cls = if t == EMPTY { self.vocab } else { t as usize };
+            out[p * w + cls] = 1.0;
+        }
+    }
+
+    fn is_terminal(&self, state: &SeqState, idx: usize) -> bool {
+        state.terminal[idx]
+    }
+
+    fn is_initial(&self, state: &SeqState, idx: usize) -> bool {
+        !state.terminal[idx] && state.len[idx] == 0
+    }
+
+    fn extract(&self, state: &SeqState, idx: usize) -> Vec<i16> {
+        match self.scheme {
+            SeqScheme::AutoregVar => state.row(idx)[..state.len[idx] as usize].to_vec(),
+            _ => state.row(idx).to_vec(),
+        }
+    }
+
+    fn inject_terminal(&self, objs: &[Vec<i16>]) -> SeqState {
+        let n = objs.len();
+        let mut tokens = vec![EMPTY; n * self.max_len];
+        let mut len = vec![0u16; n];
+        for (i, o) in objs.iter().enumerate() {
+            match self.scheme {
+                SeqScheme::AutoregVar => {
+                    assert!(o.len() <= self.max_len);
+                    len[i] = o.len() as u16;
+                }
+                _ => {
+                    assert_eq!(o.len(), self.max_len);
+                    len[i] = o.iter().filter(|&&t| t != EMPTY).count() as u16;
+                }
+            }
+            tokens[i * self.max_len..i * self.max_len + o.len()].copy_from_slice(o);
+        }
+        SeqState { tokens, len, terminal: vec![true; n], max_len: self.max_len }
+    }
+
+    fn log_reward_obj(&self, obj: &Vec<i16>) -> f64 {
+        self.reward.log_reward(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::testkit;
+    use crate::testing::forall;
+
+    /// Toy reward: sum of tokens (finite for any completed sequence).
+    struct SumReward;
+    impl RewardModule<Vec<i16>> for SumReward {
+        fn log_reward(&self, obj: &Vec<i16>) -> f64 {
+            obj.iter().map(|&t| t.max(0) as f64).sum::<f64>() * 0.1
+        }
+    }
+
+    fn env(scheme: SeqScheme, vocab: usize, max_len: usize) -> SeqEnv<SumReward> {
+        SeqEnv::new(scheme, vocab, max_len, SumReward)
+    }
+
+    #[test]
+    fn specs_per_scheme() {
+        assert_eq!(env(SeqScheme::AutoregFixed, 4, 8).spec().n_actions, 4);
+        assert_eq!(env(SeqScheme::AutoregVar, 20, 60).spec().n_actions, 21);
+        assert_eq!(env(SeqScheme::PrependAppend, 11, 5).spec().n_actions, 22);
+        assert_eq!(env(SeqScheme::NonAutoreg, 256, 15).spec().n_actions, 3840);
+        assert_eq!(env(SeqScheme::NonAutoreg, 256, 15).spec().n_bwd_actions, 15);
+    }
+
+    #[test]
+    fn autoreg_fixed_terminates_at_length() {
+        let e = env(SeqScheme::AutoregFixed, 4, 3);
+        let mut st = e.reset(1);
+        e.step(&mut st, &[1]);
+        e.step(&mut st, &[2]);
+        assert!(!e.is_terminal(&st, 0));
+        let out = e.step(&mut st, &[3]);
+        assert!(out.done[0]);
+        assert_eq!(e.extract(&st, 0), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn autoreg_var_stop_and_minlen() {
+        let e = env(SeqScheme::AutoregVar, 3, 5);
+        let st = e.reset(1);
+        let mut mask = vec![false; 4];
+        e.fwd_mask_into(&st, 0, &mut mask);
+        assert!(!mask[3], "stop must be illegal before min_len");
+        let mut st = st;
+        e.step(&mut st, &[2]);
+        e.fwd_mask_into(&st, 0, &mut mask);
+        assert!(mask[3]);
+        e.step(&mut st, &[e.stop_action()]);
+        assert!(e.is_terminal(&st, 0));
+        assert_eq!(e.extract(&st, 0), vec![2]);
+    }
+
+    #[test]
+    fn prepend_append_order() {
+        let e = env(SeqScheme::PrependAppend, 5, 3);
+        let mut st = e.reset(1);
+        e.step(&mut st, &[5 + 2]); // append 2 -> [2]
+        e.step(&mut st, &[1]); // prepend 1 -> [1, 2]
+        e.step(&mut st, &[5 + 4]); // append 4 -> [1, 2, 4]
+        assert!(e.is_terminal(&st, 0));
+        assert_eq!(e.extract(&st, 0), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn nonautoreg_fills_positions() {
+        let e = env(SeqScheme::NonAutoreg, 2, 3);
+        let mut st = e.reset(1);
+        e.step(&mut st, &[1 * 2 + 1]); // pos1 = 1
+        let mut mask = vec![false; 6];
+        e.fwd_mask_into(&st, 0, &mut mask);
+        assert_eq!(mask, vec![true, true, false, false, true, true]);
+        e.step(&mut st, &[0]); // pos0 = 0
+        e.step(&mut st, &[2 * 2 + 1]); // pos2 = 1
+        assert!(e.is_terminal(&st, 0));
+        assert_eq!(e.extract(&st, 0), vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn invariants_all_schemes() {
+        for (scheme, vocab, max_len) in [
+            (SeqScheme::AutoregFixed, 4, 6),
+            (SeqScheme::AutoregVar, 5, 7),
+            (SeqScheme::PrependAppend, 6, 5),
+            (SeqScheme::NonAutoreg, 3, 5),
+        ] {
+            let e = env(scheme, vocab, max_len);
+            testkit::check_forward_backward_inversion(&e, 8, 31);
+            testkit::check_masks_and_obs(&e, 8, 32);
+            testkit::check_inject_extract_roundtrip(&e, 8, 33);
+            testkit::check_backward_rollout_reaches_s0(&e, 8, 34);
+        }
+    }
+
+    #[test]
+    fn property_random_walks_stay_valid() {
+        forall("seq env random walks valid", 25, |rng| {
+            let schemes = [
+                SeqScheme::AutoregFixed,
+                SeqScheme::AutoregVar,
+                SeqScheme::PrependAppend,
+                SeqScheme::NonAutoreg,
+            ];
+            let scheme = schemes[rng.below(4)];
+            let vocab = 2 + rng.below(6);
+            let max_len = 2 + rng.below(5);
+            let e = env(scheme, vocab, max_len);
+            let spec = e.spec();
+            let mut st = e.reset(4);
+            let mut mask = vec![false; spec.n_actions];
+            for _ in 0..spec.t_max {
+                let mut actions = vec![0i32; 4];
+                for i in 0..4 {
+                    if !e.is_terminal(&st, i) {
+                        e.fwd_mask_into(&st, i, &mut mask);
+                        actions[i] = rng.uniform_masked(&mask) as i32;
+                    }
+                }
+                e.step(&mut st, &actions);
+            }
+            for i in 0..4 {
+                // Fill counts consistent with tokens.
+                let filled = st.row(i).iter().filter(|&&t| t != EMPTY).count();
+                assert_eq!(filled, st.len[i] as usize);
+            }
+        });
+    }
+}

@@ -1,0 +1,46 @@
+//! # gfnx-rs
+//!
+//! A Rust + JAX + Pallas reproduction of **gfnx: Fast and Scalable Library
+//! for Generative Flow Networks in JAX** (Tiapkin et al., 2025).
+//!
+//! The stack has three layers:
+//!
+//! - **L3 (this crate)** — the coordinator: vectorized GFlowNet environments,
+//!   decoupled reward modules, dataset generators, success metrics, rollout /
+//!   training orchestration, and the throughput benchmark harness.
+//! - **L2 (`python/compile`, build-time only)** — policy networks and the
+//!   TB/DB/SubTB/FLDB/MDB objectives in pure JAX, AOT-lowered to HLO text.
+//! - **L1 (`python/compile/kernels`)** — Pallas kernels for the per-step
+//!   hot-spot (fused masked log-softmax, fused dense layers).
+//!
+//! At run time the `runtime` module loads the AOT artifacts through the PJRT
+//! CPU client (`xla` crate) and the coordinator drives everything from Rust;
+//! Python never executes on the training path.
+
+pub mod util {
+    pub mod cli;
+    pub mod json;
+    pub mod linalg;
+    pub mod logging;
+    pub mod rng;
+    pub mod stats;
+    pub mod tensor;
+    pub mod threadpool;
+}
+
+pub mod testing;
+
+pub mod envs;
+pub mod reward;
+pub mod data;
+pub mod metrics;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+
+/// Convenience prelude for examples and benches.
+pub mod prelude {
+    pub use crate::util::rng::Rng;
+    pub use crate::util::stats::{pearson, ItPerSec, Welford};
+    pub use crate::util::tensor::{TensorF32, TensorI32};
+}

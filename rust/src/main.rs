@@ -1,0 +1,143 @@
+//! `gfnx` CLI — train, evaluate and benchmark GFlowNets against the AOT
+//! artifacts (see README.md for the full workflow).
+//!
+//! Subcommands:
+//!   train        --config <name> --loss <tb|db|subtb|fldb|mdb> [--iters N]
+//!   list-configs
+//!   info         --config <name> --loss <l>   (print the artifact manifest)
+
+use gfnx::coordinator::config::{artifacts_dir, run_config};
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::envs::VecEnv;
+use gfnx::reward::hypergrid::HypergridReward;
+use gfnx::runtime::Artifact;
+use gfnx::util::cli::Cli;
+use gfnx::util::logging::MetricsLog;
+
+fn main() {
+    let cli = Cli::new(
+        "gfnx",
+        "Rust+JAX+Pallas GFlowNet benchmark infrastructure (gfnx reproduction)",
+    )
+    .positional("command", "train | list-configs | info")
+    .flag("config", "hypergrid_small", "experiment config name")
+    .flag("loss", "tb", "objective: tb | db | subtb | fldb | mdb")
+    .flag("iters", "0", "iteration count (0 = preset default)")
+    .flag("seed", "0", "rng seed")
+    .flag("log", "", "JSONL metrics path (empty = stdout only)")
+    .switch("quiet", "suppress progress lines");
+    let args = cli.parse();
+    let command = args
+        .positional()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "list-configs".to_string());
+
+    let result = match command.as_str() {
+        "list-configs" => {
+            println!("configs (build artifacts via `make artifacts`):");
+            for name in [
+                "hypergrid_small",
+                "hypergrid_2d_20",
+                "hypergrid_4d_20",
+                "hypergrid_8d_10",
+                "bitseq_small",
+                "bitseq_120_8",
+                "tfbind8",
+                "qm9",
+                "amp_small",
+                "amp",
+                "phylo_small",
+                "phylo_ds1..phylo_ds8",
+                "bayesnet_d5",
+                "ising_small",
+                "ising_n9",
+                "ising_n10",
+            ] {
+                println!("  {name}");
+            }
+            Ok(())
+        }
+        "info" => info(args.get("config"), args.get("loss")),
+        "train" => train(
+            args.get("config"),
+            args.get("loss"),
+            args.get_u64("iters"),
+            args.get_u64("seed"),
+            args.get("log"),
+            args.get_bool("quiet"),
+        ),
+        other => Err(anyhow::anyhow!("unknown command {other:?}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn info(config: &str, loss: &str) -> anyhow::Result<()> {
+    let art = Artifact::load(&artifacts_dir(), &format!("{config}.{loss}"))?;
+    let m = &art.manifest;
+    println!("artifact     {}", m.name);
+    println!("obs_dim      {}", m.config.obs_dim);
+    println!("n_actions    {}", m.config.n_actions);
+    println!("n_bwd        {}", m.config.n_bwd_actions);
+    println!("t_max        {}", m.config.t_max);
+    println!("batch        {}", m.config.batch);
+    println!("uniform_pb   {}", m.config.uniform_pb);
+    println!("param leaves {}", m.n_params());
+    let total: usize = m.params.iter().map(|p| p.element_count()).sum();
+    println!("param count  {total}");
+    Ok(())
+}
+
+/// Train the hypergrid family from the CLI (other families are exposed via
+/// the examples and benches, which own their dataset generation).
+fn train(
+    config: &str,
+    loss: &str,
+    iters: u64,
+    seed: u64,
+    log_path: &str,
+    quiet: bool,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        config.starts_with("hypergrid"),
+        "the CLI trainer covers the hypergrid family; other environments \
+         have dedicated example binaries (see examples/)"
+    );
+    let (d, h) = match config {
+        "hypergrid_small" => (2, 8),
+        "hypergrid_2d_20" => (2, 20),
+        "hypergrid_4d_20" => (4, 20),
+        "hypergrid_8d_10" => (8, 10),
+        other => anyhow::bail!("unknown hypergrid config {other:?}"),
+    };
+    let env = gfnx::envs::hypergrid::HypergridEnv::new(d, h, HypergridReward::standard(h));
+    let art = Artifact::load(&artifacts_dir(), &format!("{config}.{loss}"))?;
+    let rc = run_config(config, loss);
+    let iters = if iters == 0 { rc.iters } else { iters };
+    let mut trainer = Trainer::new(&env, &art, seed, rc.explore)?;
+    let mut log = if log_path.is_empty() {
+        MetricsLog::stdout_only(&art.manifest.name)
+    } else {
+        MetricsLog::to_file(&art.manifest.name, std::path::Path::new(log_path))?
+    };
+    for i in 0..iters {
+        let (stats, _objs) = trainer.train_iter(&ExtraSource::None)?;
+        if i % 100 == 0 {
+            log.log(i, &[("loss", stats.loss as f64), ("logZ", stats.log_z as f64)]);
+            if !quiet {
+                log.progress(
+                    i,
+                    iters,
+                    &[("loss", stats.loss as f64), ("logZ", stats.log_z as f64)],
+                );
+            }
+        }
+    }
+    println!("trained {} for {} iterations", art.manifest.name, iters);
+    let _ = env.spec();
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! Top-k reward and diversity tracking (paper Fig. 5, AMP experiment):
+//! keep the best k distinct sequences seen so far; report their mean reward
+//! and mean pairwise edit distance.
+
+use std::collections::HashSet;
+
+/// Levenshtein edit distance between two token sequences.
+pub fn edit_distance(a: &[i16], b: &[i16]) -> usize {
+    let (la, lb) = (a.len(), b.len());
+    if la == 0 {
+        return lb;
+    }
+    let mut prev: Vec<usize> = (0..=lb).collect();
+    let mut cur = vec![0usize; lb + 1];
+    for i in 1..=la {
+        cur[0] = i;
+        for j in 1..=lb {
+            let cost = if a[i - 1] == b[j - 1] { 0 } else { 1 };
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + cost);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[lb]
+}
+
+/// Tracks the top-k *distinct* sequences by reward.
+pub struct TopK {
+    k: usize,
+    /// (reward, sequence), kept sorted descending by reward.
+    items: Vec<(f64, Vec<i16>)>,
+    seen: HashSet<Vec<i16>>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        TopK { k, items: Vec::new(), seen: HashSet::new() }
+    }
+
+    pub fn push(&mut self, reward: f64, seq: &[i16]) {
+        if self.seen.contains(seq) {
+            return;
+        }
+        if self.items.len() == self.k
+            && reward <= self.items.last().map(|(r, _)| *r).unwrap_or(f64::NEG_INFINITY)
+        {
+            return;
+        }
+        self.seen.insert(seq.to_vec());
+        let pos = self
+            .items
+            .partition_point(|(r, _)| *r > reward);
+        self.items.insert(pos, (reward, seq.to_vec()));
+        if self.items.len() > self.k {
+            let (_, dropped) = self.items.pop().unwrap();
+            self.seen.remove(&dropped);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Mean reward over the current top-k.
+    pub fn mean_reward(&self) -> f64 {
+        if self.items.is_empty() {
+            return 0.0;
+        }
+        self.items.iter().map(|(r, _)| r).sum::<f64>() / self.items.len() as f64
+    }
+
+    /// Mean pairwise edit distance (the paper's diversity score).
+    pub fn diversity(&self) -> f64 {
+        let n = self.items.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        let mut count = 0usize;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                total += edit_distance(&self.items[i].1, &self.items[j].1) as f64;
+                count += 1;
+            }
+        }
+        total / count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edit_distance_cases() {
+        assert_eq!(edit_distance(&[], &[1, 2]), 2);
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 3]), 1); // deletion
+        assert_eq!(edit_distance(&[1, 2], &[2, 1]), 2); // two substitutions
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 9, 3]), 1); // substitution
+    }
+
+    #[test]
+    fn topk_keeps_best_distinct() {
+        let mut t = TopK::new(2);
+        t.push(1.0, &[1]);
+        t.push(3.0, &[3]);
+        t.push(2.0, &[2]);
+        assert_eq!(t.len(), 2);
+        assert!((t.mean_reward() - 2.5).abs() < 1e-12);
+        // Duplicates ignored.
+        t.push(10.0, &[3]);
+        assert!((t.mean_reward() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_diversity() {
+        let mut t = TopK::new(3);
+        t.push(1.0, &[1, 1, 1]);
+        t.push(2.0, &[2, 2, 2]);
+        assert!((t.diversity() - 3.0).abs() < 1e-12);
+        t.push(3.0, &[1, 1, 2]);
+        // Pairs: (111,222)=3, (111,112)=1, (222,112)=2 → mean 2.
+        assert!((t.diversity() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evicted_sequences_can_reenter() {
+        let mut t = TopK::new(1);
+        t.push(1.0, &[1]);
+        t.push(2.0, &[2]); // evicts [1]
+        t.push(3.0, &[1]); // re-enter with higher reward
+        assert_eq!(t.len(), 1);
+        assert!((t.mean_reward() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,71 @@
+//! Jensen–Shannon divergence (paper eq. (15)) between the learned and exact
+//! distributions over DAGs (structure-learning experiment, Fig. 7).
+
+/// KL(P‖Q) with the 0·log(0/·) = 0 convention. Q must dominate P.
+pub fn kl(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let mut s = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi > 0.0 {
+            s += pi * (pi / qi.max(1e-300)).ln();
+        }
+    }
+    s
+}
+
+/// JSD(P‖Q) = ½ KL(P‖M) + ½ KL(Q‖M), M = (P+Q)/2. Bounded by ln 2.
+pub fn jsd(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let m: Vec<f64> = p.iter().zip(q).map(|(&a, &b)| 0.5 * (a + b)).collect();
+    0.5 * kl(p, &m) + 0.5 * kl(q, &m)
+}
+
+/// JSD between an exact distribution and empirical counts.
+pub fn jsd_from_counts(exact: &[f64], counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return (2f64).ln();
+    }
+    let emp: Vec<f64> = counts.iter().map(|&c| c as f64 / total as f64).collect();
+    jsd(exact, &emp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsd_zero_for_identical() {
+        let p = [0.1, 0.2, 0.7];
+        assert!(jsd(&p, &p).abs() < 1e-15);
+    }
+
+    #[test]
+    fn jsd_is_symmetric() {
+        let p = [0.1, 0.9, 0.0];
+        let q = [0.5, 0.25, 0.25];
+        assert!((jsd(&p, &q) - jsd(&q, &p)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn jsd_bounded_by_ln2() {
+        let p = [1.0, 0.0];
+        let q = [0.0, 1.0];
+        assert!((jsd(&p, &q) - (2f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_hand_case() {
+        let p = [0.5, 0.5];
+        let q = [0.25, 0.75];
+        let expect = 0.5 * (0.5f64 / 0.25).ln() + 0.5 * (0.5f64 / 0.75).ln();
+        assert!((kl(&p, &q) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counts_version() {
+        let exact = [0.5, 0.5];
+        assert!(jsd_from_counts(&exact, &[500, 500]) < 1e-12);
+        assert_eq!(jsd_from_counts(&exact, &[0, 0]), (2f64).ln());
+    }
+}

@@ -1,0 +1,146 @@
+//! Structural feature marginals over DAG posteriors (paper eqs. (16)–(18)):
+//! edge, directed-path, and Markov-blanket membership probabilities, plus
+//! the correlation between marginals under two distributions.
+
+use crate::envs::bayesnet::closure_of;
+use crate::util::stats::pearson;
+
+#[inline]
+fn has_edge(adj: u64, d: usize, u: usize, v: usize) -> bool {
+    adj & (1u64 << (u * d + v)) != 0
+}
+
+/// P(X_u → X_v) for all ordered pairs under a distribution over DAGs.
+/// Returns a d×d row-major matrix (diagonal zero).
+pub fn edge_marginals(dags: &[u64], probs: &[f64], d: usize) -> Vec<f64> {
+    let mut out = vec![0.0; d * d];
+    for (&g, &p) in dags.iter().zip(probs) {
+        for u in 0..d {
+            for v in 0..d {
+                if has_edge(g, d, u, v) {
+                    out[u * d + v] += p;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// P(X_u ⇝ X_v) (directed path) marginals.
+pub fn path_marginals(dags: &[u64], probs: &[f64], d: usize) -> Vec<f64> {
+    let mut out = vec![0.0; d * d];
+    for (&g, &p) in dags.iter().zip(probs) {
+        let reach = closure_of(g, d);
+        for u in 0..d {
+            for v in 0..d {
+                if u != v && reach & (1u64 << (u * d + v)) != 0 {
+                    out[u * d + v] += p;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Markov-blanket membership: X_u ∈ MB(X_v) iff u is a parent, child, or
+/// co-parent of v.
+pub fn markov_blanket_marginals(dags: &[u64], probs: &[f64], d: usize) -> Vec<f64> {
+    let mut out = vec![0.0; d * d];
+    for (&g, &p) in dags.iter().zip(probs) {
+        for u in 0..d {
+            for v in 0..d {
+                if u == v {
+                    continue;
+                }
+                let mut in_mb = has_edge(g, d, u, v) || has_edge(g, d, v, u);
+                if !in_mb {
+                    // Co-parent: ∃ w with u→w and v→w.
+                    for w in 0..d {
+                        if has_edge(g, d, u, w) && has_edge(g, d, v, w) {
+                            in_mb = true;
+                            break;
+                        }
+                    }
+                }
+                if in_mb {
+                    out[u * d + v] += p;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pearson correlation between the off-diagonal entries of two marginal
+/// matrices (the paper's "correlation scores over … marginals").
+pub fn marginal_correlation(a: &[f64], b: &[f64], d: usize) -> f64 {
+    let mut xs = Vec::with_capacity(d * d - d);
+    let mut ys = Vec::with_capacity(d * d - d);
+    for u in 0..d {
+        for v in 0..d {
+            if u != v {
+                xs.push(a[u * d + v]);
+                ys.push(b[u * d + v]);
+            }
+        }
+    }
+    pearson(&xs, &ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_mass_edge_marginals() {
+        // Single DAG 0→1 on d=2 with probability 1.
+        let d = 2;
+        let g = 1u64 << (0 * d + 1);
+        let m = edge_marginals(&[g], &[1.0], d);
+        assert_eq!(m, vec![0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn path_includes_transitivity() {
+        // Chain 0→1→2: path marginal includes 0⇝2.
+        let d = 3;
+        let g = (1u64 << (0 * d + 1)) | (1u64 << (1 * d + 2));
+        let m = path_marginals(&[g], &[1.0], d);
+        assert_eq!(m[0 * d + 2], 1.0);
+        assert_eq!(m[2 * d + 0], 0.0);
+    }
+
+    #[test]
+    fn markov_blanket_coparents() {
+        // Collider 0→2←1: 0 and 1 are co-parents ⇒ in each other's MB.
+        let d = 3;
+        let g = (1u64 << (0 * d + 2)) | (1u64 << (1 * d + 2));
+        let m = markov_blanket_marginals(&[g], &[1.0], d);
+        assert_eq!(m[0 * d + 1], 1.0);
+        assert_eq!(m[1 * d + 0], 1.0);
+        // Chain 0→1→2: 0 and 2 are not in each other's MB.
+        let chain = (1u64 << (0 * d + 1)) | (1u64 << (1 * d + 2));
+        let mc = markov_blanket_marginals(&[chain], &[1.0], d);
+        assert_eq!(mc[0 * d + 2], 0.0);
+    }
+
+    #[test]
+    fn mixture_averages_probabilities() {
+        let d = 2;
+        let g01 = 1u64 << (0 * d + 1);
+        let g10 = 1u64 << (1 * d + 0);
+        let m = edge_marginals(&[g01, g10], &[0.25, 0.75], d);
+        assert!((m[0 * d + 1] - 0.25).abs() < 1e-12);
+        assert!((m[1 * d + 0] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correlation_of_identical_marginals_is_one() {
+        let d = 3;
+        let g = (1u64 << (0 * d + 1)) | (1u64 << (1 * d + 2));
+        let dags = vec![g, 0];
+        let probs = vec![0.7, 0.3];
+        let m = edge_marginals(&dags, &probs, d);
+        assert!((marginal_correlation(&m, &m, d) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,22 @@
+//! Success metrics for GFlowNet sampling quality (gfnx `metrics/` module).
+//!
+//! GFlowNet evaluation differs from standard RL — raw return is *not* the
+//! score; instead we compare the sampler's terminal-state distribution to
+//! the target π(x) ∝ R(x):
+//!
+//! - [`tv`] — total variation against the exactly enumerated target
+//!   (hypergrid, TFBind8, QM9).
+//! - [`jsd`] — Jensen–Shannon divergence against the exact DAG posterior
+//!   (structure learning).
+//! - [`marginals`] — edge / path / Markov-blanket feature marginals.
+//! - [`diversity`] — top-k mean reward and diversity (AMP).
+//! - [`dag_enum`] — exact enumeration of all DAGs on d ≤ 5 nodes.
+//!
+//! The Pearson-correlation protocol (reward vs Monte-Carlo P̂_θ estimates)
+//! lives in `coordinator::eval` because it needs policy rollouts.
+
+pub mod tv;
+pub mod jsd;
+pub mod diversity;
+pub mod marginals;
+pub mod dag_enum;

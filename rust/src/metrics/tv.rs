@@ -1,0 +1,88 @@
+//! Total variation distance between the exact target distribution and the
+//! empirical distribution of sampled terminal states (paper Figs. 2 & 4).
+
+/// TV between two probability vectors: ½ Σ |p − q|.
+pub fn tv_dist(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    0.5 * p.iter().zip(q).map(|(&a, &b)| (a - b).abs()).sum::<f64>()
+}
+
+/// TV between an exact distribution and empirical counts over the same
+/// index space.
+pub fn tv_from_counts(exact: &[f64], counts: &[u64]) -> f64 {
+    assert_eq!(exact.len(), counts.len());
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let t = total as f64;
+    0.5 * exact
+        .iter()
+        .zip(counts)
+        .map(|(&p, &c)| (p - c as f64 / t).abs())
+        .sum::<f64>()
+}
+
+/// The TV a *perfect sampler* attains with `n_samples` draws (the floor the
+/// paper plots in Figs. 2 and 4): estimated by drawing from the exact
+/// distribution itself.
+pub fn perfect_sampler_tv(exact: &[f64], n_samples: usize, rng: &mut crate::util::rng::Rng) -> f64 {
+    // Draw n samples from `exact` via the alias-free CDF walk (fine at this
+    // scale) and measure the empirical TV.
+    let mut counts = vec![0u64; exact.len()];
+    // Precompute CDF.
+    let mut cdf = Vec::with_capacity(exact.len());
+    let mut acc = 0.0;
+    for &p in exact {
+        acc += p;
+        cdf.push(acc);
+    }
+    for _ in 0..n_samples {
+        let u = rng.uniform();
+        // Binary search the CDF.
+        let idx = cdf.partition_point(|&c| c < u).min(exact.len() - 1);
+        counts[idx] += 1;
+    }
+    tv_from_counts(exact, &counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_distributions_have_zero_tv() {
+        let p = [0.25, 0.25, 0.5];
+        assert_eq!(tv_dist(&p, &p), 0.0);
+    }
+
+    #[test]
+    fn disjoint_distributions_have_tv_one() {
+        assert_eq!(tv_dist(&[1.0, 0.0], &[0.0, 1.0]), 1.0);
+    }
+
+    #[test]
+    fn counts_version_matches_dist_version() {
+        let exact = [0.5, 0.3, 0.2];
+        let counts = [50u64, 30, 20];
+        assert!(tv_from_counts(&exact, &counts) < 1e-12);
+        assert_eq!(tv_from_counts(&exact, &[0, 0, 0]), 1.0);
+    }
+
+    #[test]
+    fn perfect_sampler_floor_shrinks_with_samples() {
+        let mut rng = Rng::new(0);
+        let exact: Vec<f64> = {
+            let mut v: Vec<f64> = (1..=50).map(|i| i as f64).collect();
+            let s: f64 = v.iter().sum();
+            v.iter_mut().for_each(|x| *x /= s);
+            v
+        };
+        let small = perfect_sampler_tv(&exact, 200, &mut rng);
+        let large = perfect_sampler_tv(&exact, 50_000, &mut rng);
+        assert!(large < small, "floor should shrink: {small} -> {large}");
+        assert!(large < 0.05);
+        assert!(small > 0.0, "finite-sample TV is biased above zero");
+    }
+}

@@ -1,0 +1,139 @@
+//! Bit-sequence reward (Malkin et al. 2022; gfnx env #2):
+//!
+//! R(x) = exp(−β · min_{x'∈M} d(x, x') / n)
+//!
+//! where d is Hamming distance over the n-bit strings and M is a hidden
+//! mode set. Sequences are stored as k-bit tokens; distances are computed
+//! over packed u64 words with XOR + popcount.
+
+use super::RewardModule;
+
+/// Pack a token sequence (each token is a k-bit word) into u64 words.
+pub fn pack_tokens(tokens: &[i16], k: usize) -> Vec<u64> {
+    let n_bits = tokens.len() * k;
+    let mut words = vec![0u64; n_bits.div_ceil(64)];
+    for (p, &t) in tokens.iter().enumerate() {
+        debug_assert!(t >= 0 && (t as usize) < (1usize << k));
+        let base = p * k;
+        for j in 0..k {
+            if (t as usize >> j) & 1 == 1 {
+                words[(base + j) / 64] |= 1u64 << ((base + j) % 64);
+            }
+        }
+    }
+    words
+}
+
+/// Hamming distance between two packed bit strings.
+#[inline]
+pub fn hamming_packed(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| (x ^ y).count_ones()).sum()
+}
+
+/// Mode-set Hamming reward over k-bit token sequences.
+#[derive(Clone, Debug)]
+pub struct HammingReward {
+    /// Packed modes, each `n_bits` long.
+    modes: Vec<Vec<u64>>,
+    /// Total bit length n.
+    pub n_bits: usize,
+    /// Bits per token k.
+    pub k: usize,
+    /// Reward exponent β.
+    pub beta: f64,
+}
+
+impl HammingReward {
+    pub fn new(modes_bits: &[Vec<u8>], k: usize, beta: f64) -> Self {
+        let n_bits = modes_bits.first().map_or(0, |m| m.len());
+        assert!(n_bits > 0 && n_bits % k == 0);
+        let modes = modes_bits
+            .iter()
+            .map(|bits| {
+                assert_eq!(bits.len(), n_bits);
+                let mut words = vec![0u64; n_bits.div_ceil(64)];
+                for (i, &b) in bits.iter().enumerate() {
+                    if b != 0 {
+                        words[i / 64] |= 1u64 << (i % 64);
+                    }
+                }
+                words
+            })
+            .collect();
+        HammingReward { modes, n_bits, k, beta }
+    }
+
+    /// Minimum Hamming distance from a token sequence to the mode set.
+    pub fn min_distance(&self, tokens: &[i16]) -> u32 {
+        let packed = pack_tokens(tokens, self.k);
+        self.modes
+            .iter()
+            .map(|m| hamming_packed(m, &packed))
+            .min()
+            .expect("empty mode set")
+    }
+
+    pub fn num_modes(&self) -> usize {
+        self.modes.len()
+    }
+}
+
+impl RewardModule<Vec<i16>> for HammingReward {
+    fn log_reward(&self, obj: &Vec<i16>) -> f64 {
+        -self.beta * self.min_distance(obj) as f64 / self.n_bits as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_single_token() {
+        // k=4, token 0b1010 = 10.
+        let w = pack_tokens(&[10], 4);
+        assert_eq!(w[0], 0b1010);
+    }
+
+    #[test]
+    fn pack_crosses_words() {
+        // 17 tokens of k=4 → 68 bits → 2 words.
+        let tokens = vec![0xF; 17];
+        let w = pack_tokens(&tokens, 4);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0], u64::MAX);
+        assert_eq!(w[1], 0xF);
+    }
+
+    #[test]
+    fn hamming_identity_and_flip() {
+        let a = pack_tokens(&[3, 5], 4);
+        let b = pack_tokens(&[3, 5], 4);
+        assert_eq!(hamming_packed(&a, &b), 0);
+        let c = pack_tokens(&[3, 4], 4); // 5=0101 vs 4=0100 → 1 bit
+        assert_eq!(hamming_packed(&a, &c), 1);
+    }
+
+    #[test]
+    fn reward_at_mode_is_zero_log() {
+        // Mode = all-zero 8 bits; token seq of two k=4 zero tokens.
+        let r = HammingReward::new(&[vec![0u8; 8]], 4, 3.0);
+        let lr = RewardModule::log_reward(&r, &vec![0i16, 0]);
+        assert_eq!(lr, 0.0);
+        // One bit set → d=1 → log R = -3/8.
+        let lr1 = RewardModule::log_reward(&r, &vec![1i16, 0]);
+        assert!((lr1 + 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_over_modes() {
+        let m0 = vec![0u8; 8];
+        let m1 = vec![1u8; 8];
+        let r = HammingReward::new(&[m0, m1], 4, 1.0);
+        // All-ones tokens (0xF, 0xF) = 8 set bits: d(m0)=8, d(m1)=0.
+        assert_eq!(r.min_distance(&[0xF, 0xF]), 0);
+        // Zero sequence: d(m0)=0.
+        assert_eq!(r.min_distance(&[0, 0]), 0);
+    }
+}

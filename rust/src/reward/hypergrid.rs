@@ -1,0 +1,106 @@
+//! Hypergrid reward (Bengio et al. 2021, eq. (8) of the gfnx paper):
+//!
+//! R(s) = R0 + R1·∏ᵢ 𝕀[0.25 < |sᵢ/(H−1) − 0.5|]
+//!           + R2·∏ᵢ 𝕀[0.3 < |sᵢ/(H−1) − 0.5| < 0.4]
+//!
+//! High reward concentrates in 2^d regions near the corners of the grid.
+
+use super::RewardModule;
+
+/// Parameterized hypergrid reward over coordinate vectors.
+#[derive(Clone, Copy, Debug)]
+pub struct HypergridReward {
+    pub r0: f64,
+    pub r1: f64,
+    pub r2: f64,
+    /// Side length H (coordinates live in {0, …, H−1}).
+    pub side: usize,
+}
+
+impl HypergridReward {
+    /// The standard parameters used in the paper's experiments
+    /// (R0 = 1e-3, R1 = 0.5, R2 = 2.0).
+    pub fn standard(side: usize) -> Self {
+        HypergridReward { r0: 1e-3, r1: 0.5, r2: 2.0, side }
+    }
+
+    /// The "easy" variant from the gfnx docs (larger base reward, flatter
+    /// landscape — handy for quick tests).
+    pub fn easy(side: usize) -> Self {
+        HypergridReward { r0: 0.1, r1: 0.5, r2: 2.0, side }
+    }
+
+    /// Raw (non-log) reward.
+    pub fn reward(&self, coords: &[i32]) -> f64 {
+        let h1 = (self.side - 1) as f64;
+        let mut in1 = true;
+        let mut in2 = true;
+        for &c in coords {
+            let x = (c as f64 / h1 - 0.5).abs();
+            in1 &= x > 0.25;
+            in2 &= x > 0.3 && x < 0.4;
+        }
+        self.r0 + if in1 { self.r1 } else { 0.0 } + if in2 { self.r2 } else { 0.0 }
+    }
+}
+
+impl RewardModule<Vec<i32>> for HypergridReward {
+    fn log_reward(&self, obj: &Vec<i32>) -> f64 {
+        self.reward(obj).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reward::RewardModule;
+
+    #[test]
+    fn corners_are_high_reward() {
+        let r = HypergridReward::standard(20);
+        // Corner (0, 0): |0/19 - 0.5| = 0.5 > 0.25 → R1 region but not R2.
+        assert!((r.reward(&[0, 0]) - (1e-3 + 0.5)).abs() < 1e-12);
+        // Center (10, 10): |10/19-0.5| ≈ 0.026 → base reward only.
+        assert!((r.reward(&[10, 10]) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_band() {
+        let r = HypergridReward::standard(20);
+        // s=3: |3/19 - 0.5| = 0.342 → in (0.3, 0.4) and > 0.25 → R1 + R2.
+        let v = r.reward(&[3, 3]);
+        assert!((v - (1e-3 + 0.5 + 2.0)).abs() < 1e-12, "{v}");
+    }
+
+    #[test]
+    fn mixed_dims_break_products() {
+        let r = HypergridReward::standard(20);
+        // One coordinate in the center kills both products.
+        assert!((r.reward(&[0, 10]) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_reward_is_ln() {
+        let r = HypergridReward::standard(20);
+        let c = vec![0, 0];
+        assert!((RewardModule::log_reward(&r, &c) - r.reward(&c).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_mass_matches_bruteforce_2d() {
+        // Sanity: enumerate a 2-d grid and check the number of R2 cells is
+        // symmetric and positive for H=20.
+        let r = HypergridReward::standard(20);
+        let mut n2 = 0;
+        for a in 0..20 {
+            for b in 0..20 {
+                let v = r.reward(&[a, b]);
+                if v > 2.0 {
+                    n2 += 1;
+                }
+            }
+        }
+        // 0.3 < |s/19-0.5| < 0.4 holds for s ∈ {2,3,16,17} → 4 per dim → 16 cells.
+        assert_eq!(n2, 16);
+    }
+}

@@ -1,0 +1,132 @@
+//! Ising energy reward (Zhang et al. 2022 EB-GFN setting; gfnx env #8):
+//!
+//!   E_J(x) = −xᵀ J x,   log R(x) = −E_J(x) = xᵀ J x
+//!
+//! with J ∈ R^{D×D} symmetric (the paper uses J = σ·A_N for a toroidal
+//! lattice adjacency A_N). The module also exposes the energy on its own
+//! for the EB-GFN trainer, which learns J.
+
+use super::RewardModule;
+use crate::util::linalg::Mat;
+
+/// Toroidal N×N lattice adjacency matrix (D = N² sites; each site has 4
+/// neighbours; for N = 2 parallel edges collapse, matching the paper's
+/// definition of A_N as a 0/1 adjacency matrix).
+pub fn torus_adjacency(n: usize) -> Mat {
+    let d = n * n;
+    let mut a = Mat::zeros(d, d);
+    let idx = |r: usize, c: usize| (r % n) * n + (c % n);
+    for r in 0..n {
+        for c in 0..n {
+            let i = idx(r, c);
+            for (dr, dc) in [(0usize, 1usize), (1, 0)] {
+                let j = idx(r + dr, c + dc);
+                if i != j {
+                    a.set(i, j, 1.0);
+                    a.set(j, i, 1.0);
+                }
+            }
+        }
+    }
+    a
+}
+
+/// Energy E_J(x) = −xᵀJx for spins x ∈ {−1,+1}^D.
+pub fn ising_energy(j: &Mat, x: &[i8]) -> f64 {
+    debug_assert_eq!(j.rows, x.len());
+    let mut s = 0.0;
+    for r in 0..j.rows {
+        let xr = x[r] as f64;
+        if xr == 0.0 {
+            continue;
+        }
+        let row = j.row(r);
+        let mut acc = 0.0;
+        for c in 0..j.cols {
+            acc += row[c] * x[c] as f64;
+        }
+        s += xr * acc;
+    }
+    -s
+}
+
+/// Fixed-J Ising reward over full spin configurations.
+#[derive(Clone, Debug)]
+pub struct IsingReward {
+    pub j: Mat,
+}
+
+impl IsingReward {
+    /// J = σ·A_N on the N×N torus.
+    pub fn torus(n: usize, sigma: f64) -> Self {
+        let mut j = torus_adjacency(n);
+        j.scale(sigma);
+        IsingReward { j }
+    }
+
+    pub fn energy(&self, x: &[i8]) -> f64 {
+        ising_energy(&self.j, x)
+    }
+}
+
+impl RewardModule<Vec<i8>> for IsingReward {
+    fn log_reward(&self, obj: &Vec<i8>) -> f64 {
+        -self.energy(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn torus_has_degree_four() {
+        for n in [3usize, 4, 5] {
+            let a = torus_adjacency(n);
+            for i in 0..n * n {
+                let deg: f64 = a.row(i).iter().sum();
+                assert_eq!(deg, 4.0, "site {i} of {n}x{n}");
+            }
+            // Symmetric.
+            for i in 0..n * n {
+                for j in 0..n * n {
+                    assert_eq!(a.get(i, j), a.get(j, i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn energy_hand_case() {
+        // 3x3 torus, all spins +1: E = -Σ_ij J_ij = -(#directed neighbor
+        // pairs) = -(9 sites × 4 neighbors) = -36σ with σ=1.
+        let r = IsingReward::torus(3, 1.0);
+        let x = vec![1i8; 9];
+        assert_eq!(r.energy(&x), -36.0);
+        // Flipping all spins leaves the energy invariant (Z2 symmetry).
+        let y = vec![-1i8; 9];
+        assert_eq!(r.energy(&y), -36.0);
+    }
+
+    #[test]
+    fn antiferro_prefers_alternating() {
+        // On a 4x4 torus with σ < 0, the checkerboard beats all-up.
+        let r = IsingReward::torus(4, -0.5);
+        let all_up = vec![1i8; 16];
+        let mut check = vec![0i8; 16];
+        for row in 0..4 {
+            for c in 0..4 {
+                check[row * 4 + c] = if (row + c) % 2 == 0 { 1 } else { -1 };
+            }
+        }
+        assert!(r.energy(&check) < r.energy(&all_up));
+    }
+
+    #[test]
+    fn log_reward_is_negative_energy() {
+        use crate::reward::RewardModule;
+        let r = IsingReward::torus(3, 0.3);
+        let x: Vec<i8> = (0..9).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        assert_eq!(RewardModule::log_reward(&r, &x), -r.energy(&x));
+    }
+}

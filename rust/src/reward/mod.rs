@@ -1,0 +1,35 @@
+//! Reward modules, decoupled from environment dynamics (gfnx §2).
+//!
+//! A reward module scores *completed objects* (the `Obj` type of a
+//! [`crate::envs::VecEnv`]) in log-space. Decoupling rewards from dynamics
+//! lets callers swap reward families — or learn the reward online, as the
+//! EB-GFN trainer does for the Ising model — without touching env logic.
+
+pub mod hypergrid;
+pub mod hamming;
+pub mod proxy;
+pub mod parsimony;
+pub mod bge;
+pub mod lingauss;
+pub mod ising;
+
+/// Scores completed objects in log-space.
+pub trait RewardModule<O>: Send + Sync {
+    /// log R(x) of a completed object. Must be finite (gfnx rewards are
+    /// strictly positive; use an `r_min` floor where the source reward can
+    /// reach zero).
+    fn log_reward(&self, obj: &O) -> f64;
+}
+
+/// Blanket impl so `&R` and boxes can be passed around freely.
+impl<O, R: RewardModule<O> + ?Sized> RewardModule<O> for &R {
+    fn log_reward(&self, obj: &O) -> f64 {
+        (**self).log_reward(obj)
+    }
+}
+
+impl<O, R: RewardModule<O> + ?Sized> RewardModule<O> for Box<R> {
+    fn log_reward(&self, obj: &O) -> f64 {
+        (**self).log_reward(obj)
+    }
+}

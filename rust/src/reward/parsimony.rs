@@ -1,0 +1,209 @@
+//! Fitch small-parsimony scoring for phylogenetic trees (gfnx env #6,
+//! PhyloGFN setting): M(x) = minimum number of mutations needed to explain
+//! the observed species sequences under tree topology x, computed by the
+//! Fitch algorithm. The reward is the Gibbs form R(x) = exp((C − M(x))/α).
+
+use super::RewardModule;
+
+/// A rooted binary tree over species indices, with children canonically
+/// ordered by minimum leaf index (so equal topologies compare equal).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum PhyloTree {
+    Leaf(u16),
+    Node(Box<PhyloTree>, Box<PhyloTree>),
+}
+
+impl PhyloTree {
+    /// Canonicalizing constructor: orders children by min leaf.
+    pub fn node(a: PhyloTree, b: PhyloTree) -> PhyloTree {
+        if a.min_leaf() <= b.min_leaf() {
+            PhyloTree::Node(Box::new(a), Box::new(b))
+        } else {
+            PhyloTree::Node(Box::new(b), Box::new(a))
+        }
+    }
+
+    pub fn min_leaf(&self) -> u16 {
+        match self {
+            PhyloTree::Leaf(i) => *i,
+            PhyloTree::Node(a, b) => a.min_leaf().min(b.min_leaf()),
+        }
+    }
+
+    pub fn leaf_count(&self) -> usize {
+        match self {
+            PhyloTree::Leaf(_) => 1,
+            PhyloTree::Node(a, b) => a.leaf_count() + b.leaf_count(),
+        }
+    }
+
+    /// Bitmask of leaves under this tree (≤ 64 species).
+    pub fn leaf_set(&self) -> u64 {
+        match self {
+            PhyloTree::Leaf(i) => 1u64 << i,
+            PhyloTree::Node(a, b) => a.leaf_set() | b.leaf_set(),
+        }
+    }
+}
+
+/// Species alignment: `seqs[s][site] ∈ 0..4` (nucleotides).
+#[derive(Clone, Debug)]
+pub struct Alignment {
+    pub seqs: Vec<Vec<u8>>,
+    pub n_sites: usize,
+}
+
+impl Alignment {
+    pub fn new(seqs: Vec<Vec<u8>>) -> Self {
+        let n_sites = seqs.first().map_or(0, |s| s.len());
+        assert!(seqs.iter().all(|s| s.len() == n_sites));
+        assert!(seqs.iter().all(|s| s.iter().all(|&c| c < 4)));
+        Alignment { seqs, n_sites }
+    }
+
+    pub fn n_species(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Fitch state set (4-bit mask) of species `s` at `site`.
+    #[inline]
+    pub fn leaf_mask(&self, s: usize, site: usize) -> u8 {
+        1u8 << self.seqs[s][site]
+    }
+}
+
+/// Fitch pass over one tree: returns (per-site state masks, mutations).
+pub fn fitch(tree: &PhyloTree, aln: &Alignment) -> (Vec<u8>, u32) {
+    match tree {
+        PhyloTree::Leaf(i) => {
+            let masks = (0..aln.n_sites).map(|s| aln.leaf_mask(*i as usize, s)).collect();
+            (masks, 0)
+        }
+        PhyloTree::Node(a, b) => {
+            let (ma, ca) = fitch(a, aln);
+            let (mb, cb) = fitch(b, aln);
+            let mut muts = ca + cb;
+            let mut masks = Vec::with_capacity(aln.n_sites);
+            for s in 0..aln.n_sites {
+                let inter = ma[s] & mb[s];
+                if inter == 0 {
+                    masks.push(ma[s] | mb[s]);
+                    muts += 1;
+                } else {
+                    masks.push(inter);
+                }
+            }
+            (masks, muts)
+        }
+    }
+}
+
+/// Parsimony score M(x) of a complete tree.
+pub fn parsimony_score(tree: &PhyloTree, aln: &Alignment) -> u32 {
+    fitch(tree, aln).1
+}
+
+/// Gibbs parsimony reward: log R(x) = (C − M(x)) / α (paper §B.3).
+#[derive(Clone, Debug)]
+pub struct ParsimonyReward {
+    pub alignment: Alignment,
+    /// Stabilizing constant C.
+    pub c: f64,
+    /// Temperature α.
+    pub alpha: f64,
+}
+
+impl RewardModule<PhyloTree> for ParsimonyReward {
+    fn log_reward(&self, obj: &PhyloTree) -> f64 {
+        (self.c - parsimony_score(obj, &self.alignment) as f64) / self.alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn aln3() -> Alignment {
+        // Species 0: AAAA, 1: AACC, 2: CCCC (A=0, C=1).
+        Alignment::new(vec![
+            vec![0, 0, 0, 0],
+            vec![0, 0, 1, 1],
+            vec![1, 1, 1, 1],
+        ])
+    }
+
+    #[test]
+    fn fitch_hand_case() {
+        let aln = aln3();
+        // ((0,1),2): join 0,1 → sites 2,3 disagree (2 muts), then with 2 →
+        // sites 0,1 disagree (2 muts) but sites 2,3 intersect ⇒ total 4.
+        let t = PhyloTree::node(
+            PhyloTree::node(PhyloTree::Leaf(0), PhyloTree::Leaf(1)),
+            PhyloTree::Leaf(2),
+        );
+        assert_eq!(parsimony_score(&t, &aln), 4);
+        // ((1,2),0): join 1,2 → sites 0,1 disagree (2), with 0 → sites 2,3
+        // disagree (2) ⇒ also 4.
+        let t2 = PhyloTree::node(
+            PhyloTree::node(PhyloTree::Leaf(1), PhyloTree::Leaf(2)),
+            PhyloTree::Leaf(0),
+        );
+        assert_eq!(parsimony_score(&t2, &aln), 4);
+    }
+
+    #[test]
+    fn identical_leaves_need_no_mutations() {
+        let aln = Alignment::new(vec![vec![2, 3, 1], vec![2, 3, 1], vec![2, 3, 1]]);
+        let t = PhyloTree::node(
+            PhyloTree::node(PhyloTree::Leaf(0), PhyloTree::Leaf(1)),
+            PhyloTree::Leaf(2),
+        );
+        assert_eq!(parsimony_score(&t, &aln), 0);
+    }
+
+    #[test]
+    fn canonical_ordering_makes_topologies_equal() {
+        let a = PhyloTree::node(PhyloTree::Leaf(1), PhyloTree::Leaf(0));
+        let b = PhyloTree::node(PhyloTree::Leaf(0), PhyloTree::Leaf(1));
+        assert_eq!(a, b);
+        let t1 = PhyloTree::node(a, PhyloTree::Leaf(2));
+        let t2 = PhyloTree::node(PhyloTree::Leaf(2), b);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn parsimony_invariant_under_child_order() {
+        let aln = aln3();
+        let t1 = PhyloTree::node(
+            PhyloTree::node(PhyloTree::Leaf(0), PhyloTree::Leaf(2)),
+            PhyloTree::Leaf(1),
+        );
+        let t2 = PhyloTree::node(
+            PhyloTree::Leaf(1),
+            PhyloTree::node(PhyloTree::Leaf(2), PhyloTree::Leaf(0)),
+        );
+        assert_eq!(parsimony_score(&t1, &aln), parsimony_score(&t2, &aln));
+    }
+
+    #[test]
+    fn reward_is_gibbs_form() {
+        let r = ParsimonyReward { alignment: aln3(), c: 10.0, alpha: 4.0 };
+        let t = PhyloTree::node(
+            PhyloTree::node(PhyloTree::Leaf(0), PhyloTree::Leaf(1)),
+            PhyloTree::Leaf(2),
+        );
+        let lr = RewardModule::log_reward(&r, &t);
+        assert!((lr - (10.0 - 4.0) / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn leaf_set_and_min_leaf() {
+        let t = PhyloTree::node(
+            PhyloTree::node(PhyloTree::Leaf(3), PhyloTree::Leaf(1)),
+            PhyloTree::Leaf(5),
+        );
+        assert_eq!(t.leaf_set(), 0b101010);
+        assert_eq!(t.min_leaf(), 1);
+        assert_eq!(t.leaf_count(), 3);
+    }
+}

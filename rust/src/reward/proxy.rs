@@ -1,0 +1,342 @@
+//! Frozen proxy reward models.
+//!
+//! The paper's TFBind8 / QM9 / AMP environments score sequences with
+//! pretrained proxy models (wet-lab landscape tables and neural proxies
+//! trained on QM9 / DBAASP data). Those assets are not available here, so we
+//! substitute *deterministic synthetic proxies with the same functional
+//! form* (DESIGN.md §3): a fixed landscape table for TFBind8 and frozen
+//! random-but-seeded MLPs for QM9 and AMP. All compute paths (terminal-state
+//! proxy forward, reward exponents, r_min floors) match the originals.
+
+use super::RewardModule;
+use crate::util::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// A frozen multi-layer perceptron with tanh hidden activations, used as a
+/// synthetic stand-in for pretrained proxy networks.
+#[derive(Clone, Debug)]
+pub struct FrozenMlp {
+    layers: Vec<(Mat, Vec<f64>)>,
+}
+
+impl FrozenMlp {
+    /// Build from a seed with the given layer sizes (e.g. `[in, 64, 64, 1]`).
+    pub fn seeded(seed: u64, sizes: &[usize]) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        for w in sizes.windows(2) {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let std = (2.0 / (fan_in + fan_out) as f64).sqrt();
+            let mut m = Mat::zeros(fan_out, fan_in);
+            for v in m.data.iter_mut() {
+                *v = rng.normal() * std;
+            }
+            let b: Vec<f64> = (0..fan_out).map(|_| rng.normal() * 0.1).collect();
+            layers.push((m, b));
+        }
+        FrozenMlp { layers }
+    }
+
+    /// Forward pass; tanh on hidden layers, identity on the output layer.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        let mut h = x.to_vec();
+        let last = self.layers.len() - 1;
+        for (li, (w, b)) in self.layers.iter().enumerate() {
+            assert_eq!(w.cols, h.len(), "proxy input dim mismatch");
+            let mut out = b.clone();
+            for i in 0..w.rows {
+                let mut s = 0.0;
+                let row = w.row(i);
+                for (j, &hj) in h.iter().enumerate() {
+                    s += row[j] * hj;
+                }
+                out[i] += s;
+            }
+            if li != last {
+                out.iter_mut().for_each(|v| *v = v.tanh());
+            }
+            h = out;
+        }
+        h
+    }
+
+    /// Scalar output helper.
+    pub fn forward_scalar(&self, x: &[f64]) -> f64 {
+        let out = self.forward(x);
+        debug_assert_eq!(out.len(), 1);
+        out[0]
+    }
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// One-hot encode a token sequence (padded with an empty class when
+/// `tokens.len() < max_len`).
+fn one_hot_seq(tokens: &[i16], vocab: usize, max_len: usize) -> Vec<f64> {
+    let w = vocab + 1;
+    let mut x = vec![0.0; max_len * w];
+    for p in 0..max_len {
+        let cls = match tokens.get(p) {
+            Some(&t) if t >= 0 => t as usize,
+            _ => vocab,
+        };
+        x[p * w + cls] = 1.0;
+    }
+    x
+}
+
+// ---------------------------------------------------------------------------
+// TFBind8: synthetic binding landscape over all 4^8 sequences.
+// ---------------------------------------------------------------------------
+
+/// Synthetic TFBind8 landscape: motif-match score plus a smooth epistatic
+/// term, squashed into (0, 1), with reward exponent β (Shen et al. 2023 use
+/// R(x) = r(x)^β; log R = β·ln r).
+#[derive(Clone, Debug)]
+pub struct TfBindReward {
+    /// r(x) ∈ (0, 1] for every flattened sequence index.
+    table: Vec<f32>,
+    pub beta: f64,
+}
+
+impl TfBindReward {
+    pub const LEN: usize = 8;
+    pub const VOCAB: usize = 4;
+    pub const SPACE: usize = 65_536; // 4^8
+
+    pub fn synthetic(seed: u64, beta: f64) -> Self {
+        let mut rng = Rng::new(seed);
+        // Hidden motifs with per-position weights.
+        let n_motifs = 4;
+        let motifs: Vec<(Vec<i16>, f64)> = (0..n_motifs)
+            .map(|_| {
+                let m: Vec<i16> = (0..Self::LEN).map(|_| rng.below(Self::VOCAB) as i16).collect();
+                (m, 0.5 + rng.uniform())
+            })
+            .collect();
+        // Pairwise epistatic couplings.
+        let mut pair = vec![0.0f64; Self::LEN * Self::LEN * Self::VOCAB * Self::VOCAB];
+        for v in pair.iter_mut() {
+            *v = rng.normal() * 0.15;
+        }
+        let mut table = Vec::with_capacity(Self::SPACE);
+        let mut raw = Vec::with_capacity(Self::SPACE);
+        for idx in 0..Self::SPACE {
+            let seq = Self::unflatten(idx);
+            let mut s = 0.0;
+            for (m, w) in &motifs {
+                let matches = seq.iter().zip(m).filter(|(a, b)| a == b).count();
+                s += w * matches as f64 / Self::LEN as f64;
+            }
+            for i in 0..Self::LEN {
+                for j in (i + 1)..Self::LEN {
+                    s += pair[((i * Self::LEN + j) * Self::VOCAB + seq[i] as usize) * Self::VOCAB
+                        + seq[j] as usize];
+                }
+            }
+            raw.push(s);
+        }
+        // Normalize to (0, 1] with a sigmoid around the mean.
+        let mean = raw.iter().sum::<f64>() / raw.len() as f64;
+        let std = (raw.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>()
+            / raw.len() as f64)
+            .sqrt()
+            .max(1e-9);
+        for &x in &raw {
+            table.push(sigmoid((x - mean) / std) as f32);
+        }
+        TfBindReward { table, beta }
+    }
+
+    pub fn flatten(seq: &[i16]) -> usize {
+        let mut idx = 0usize;
+        for &t in seq {
+            idx = idx * Self::VOCAB + t as usize;
+        }
+        idx
+    }
+
+    pub fn unflatten(mut idx: usize) -> Vec<i16> {
+        let mut seq = vec![0i16; Self::LEN];
+        for p in (0..Self::LEN).rev() {
+            seq[p] = (idx % Self::VOCAB) as i16;
+            idx /= Self::VOCAB;
+        }
+        seq
+    }
+
+    /// Raw proxy value r(x) ∈ (0, 1].
+    pub fn raw(&self, seq: &[i16]) -> f64 {
+        self.table[Self::flatten(seq)] as f64
+    }
+}
+
+impl RewardModule<Vec<i16>> for TfBindReward {
+    fn log_reward(&self, obj: &Vec<i16>) -> f64 {
+        self.beta * self.raw(obj).max(1e-9).ln()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QM9: frozen MLP proxy over block one-hots (prepend/append formulation).
+// ---------------------------------------------------------------------------
+
+/// Synthetic QM9 HOMO-LUMO-gap proxy: frozen MLP → sigmoid → r ∈ (0,1),
+/// with reward exponent β.
+#[derive(Clone, Debug)]
+pub struct Qm9Reward {
+    mlp: FrozenMlp,
+    pub beta: f64,
+}
+
+impl Qm9Reward {
+    pub const LEN: usize = 5;
+    pub const VOCAB: usize = 11; // building blocks
+
+    pub fn synthetic(seed: u64, beta: f64) -> Self {
+        let in_dim = Self::LEN * (Self::VOCAB + 1);
+        Qm9Reward { mlp: FrozenMlp::seeded(seed, &[in_dim, 32, 32, 1]), beta }
+    }
+
+    /// Raw proxy value r(x) ∈ (0, 1).
+    pub fn raw(&self, tokens: &[i16]) -> f64 {
+        let x = one_hot_seq(tokens, Self::VOCAB, Self::LEN);
+        sigmoid(self.mlp.forward_scalar(&x))
+    }
+}
+
+impl RewardModule<Vec<i16>> for Qm9Reward {
+    fn log_reward(&self, obj: &Vec<i16>) -> f64 {
+        self.beta * self.raw(obj).max(1e-9).ln()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AMP: frozen classifier over variable-length peptides.
+// ---------------------------------------------------------------------------
+
+/// Synthetic antimicrobial-peptide classifier: R(x) = max(σ(f(x)), r_min)
+/// with f a frozen MLP over sequence composition features (Jain et al. 2022
+/// functional form).
+#[derive(Clone, Debug)]
+pub struct AmpReward {
+    mlp: FrozenMlp,
+    pub r_min: f64,
+    pub max_len: usize,
+    pub vocab: usize,
+}
+
+impl AmpReward {
+    pub fn synthetic(seed: u64, max_len: usize, vocab: usize, r_min: f64) -> Self {
+        // Features: per-amino-acid frequencies, bigram class features,
+        // normalized length → vocab + vocab + 1 inputs.
+        let in_dim = 2 * vocab + 1;
+        AmpReward {
+            mlp: FrozenMlp::seeded(seed, &[in_dim, 48, 48, 1]),
+            r_min,
+            max_len,
+            vocab,
+        }
+    }
+
+    fn features(&self, tokens: &[i16]) -> Vec<f64> {
+        let mut x = vec![0.0; 2 * self.vocab + 1];
+        let len = tokens.len().max(1);
+        for &t in tokens {
+            x[t as usize] += 1.0 / len as f64;
+        }
+        // "Bigram class": frequency of same-class consecutive pairs per class.
+        for w in tokens.windows(2) {
+            if w[0] == w[1] {
+                x[self.vocab + w[0] as usize] += 1.0 / len as f64;
+            }
+        }
+        x[2 * self.vocab] = tokens.len() as f64 / self.max_len as f64;
+        x
+    }
+
+    /// Classifier probability σ(f(x)).
+    pub fn prob(&self, tokens: &[i16]) -> f64 {
+        sigmoid(self.mlp.forward_scalar(&self.features(tokens)) * 4.0)
+    }
+}
+
+impl RewardModule<Vec<i16>> for AmpReward {
+    fn log_reward(&self, obj: &Vec<i16>) -> f64 {
+        self.prob(obj).max(self.r_min).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reward::RewardModule;
+
+    #[test]
+    fn frozen_mlp_deterministic() {
+        let a = FrozenMlp::seeded(42, &[4, 8, 1]);
+        let b = FrozenMlp::seeded(42, &[4, 8, 1]);
+        let x = [0.5, -1.0, 2.0, 0.0];
+        assert_eq!(a.forward_scalar(&x), b.forward_scalar(&x));
+        let c = FrozenMlp::seeded(43, &[4, 8, 1]);
+        assert_ne!(a.forward_scalar(&x), c.forward_scalar(&x));
+    }
+
+    #[test]
+    fn tfbind_flatten_roundtrip() {
+        for idx in [0usize, 1, 255, 65_535, 12_345] {
+            assert_eq!(TfBindReward::flatten(&TfBindReward::unflatten(idx)), idx);
+        }
+    }
+
+    #[test]
+    fn tfbind_table_in_unit_interval() {
+        let r = TfBindReward::synthetic(0, 10.0);
+        assert_eq!(r.table.len(), 65_536);
+        assert!(r.table.iter().all(|&v| v > 0.0 && v < 1.0));
+        // Landscape is non-degenerate.
+        let lo = r.table.iter().cloned().fold(f32::MAX, f32::min);
+        let hi = r.table.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(hi - lo > 0.2, "landscape too flat: {lo}..{hi}");
+    }
+
+    #[test]
+    fn tfbind_beta_scales_log_reward() {
+        let r1 = TfBindReward::synthetic(0, 1.0);
+        let r10 = TfBindReward::synthetic(0, 10.0);
+        let seq = vec![0i16, 1, 2, 3, 0, 1, 2, 3];
+        let a = RewardModule::log_reward(&r1, &seq);
+        let b = RewardModule::log_reward(&r10, &seq);
+        assert!((b - 10.0 * a).abs() < 1e-9);
+    }
+
+    #[test]
+    fn qm9_raw_in_unit_interval() {
+        let r = Qm9Reward::synthetic(7, 10.0);
+        for seq in [[0i16, 1, 2, 3, 4], [10, 10, 10, 10, 10], [5, 0, 9, 2, 7]] {
+            let v = r.raw(&seq);
+            assert!(v > 0.0 && v < 1.0);
+        }
+    }
+
+    #[test]
+    fn amp_floor_applies() {
+        let r = AmpReward::synthetic(3, 60, 20, 1e-3);
+        // log reward is always ≥ ln(r_min).
+        for seq in [vec![0i16], vec![1i16; 60], (0..20).map(|i| i as i16).collect()] {
+            let lr = RewardModule::log_reward(&r, &seq);
+            assert!(lr >= (1e-3f64).ln() - 1e-12);
+            assert!(lr <= 0.0);
+        }
+    }
+
+    #[test]
+    fn amp_varies_with_sequence() {
+        let r = AmpReward::synthetic(3, 60, 20, 1e-6);
+        let a = r.prob(&[0, 1, 2, 3, 4, 5]);
+        let b = r.prob(&[19, 19, 19, 19]);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,99 @@
+//! Artifact loading: HLO text → PJRT executables, plus literal helpers.
+
+use super::manifest::{Dtype, Manifest, TensorSpec};
+use super::state::TrainState;
+use std::path::Path;
+use xla::{ElementType, Literal, PjRtLoadedExecutable, XlaComputation};
+
+/// A fully loaded artifact: manifest + compiled policy & train executables.
+pub struct Artifact {
+    pub manifest: Manifest,
+    pub client: xla::PjRtClient,
+    pub policy_exe: PjRtLoadedExecutable,
+    pub train_exe: PjRtLoadedExecutable,
+    init_blob: Vec<u8>,
+}
+
+fn err(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e:?}")
+}
+
+fn compile(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    file: &str,
+) -> anyhow::Result<PjRtLoadedExecutable> {
+    let path = dir.join(file);
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+    )
+    .map_err(err)?;
+    let comp = XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(err)
+}
+
+impl Artifact {
+    /// Load `<dir>/<name>.{policy,train}.hlo.txt` + manifest + init blob and
+    /// compile both graphs on the global PJRT CPU client.
+    pub fn load(dir: &Path, name: &str) -> anyhow::Result<Artifact> {
+        let manifest = Manifest::load(dir, name)?;
+        let client = super::global_client()?;
+        let policy_exe = compile(&client, dir, &manifest.policy_file)?;
+        let train_exe = compile(&client, dir, &manifest.train_file)?;
+        let init_blob = std::fs::read(dir.join(&manifest.blob_file))?;
+        Ok(Artifact { manifest, client, policy_exe, train_exe, init_blob })
+    }
+
+    /// Fresh training state from the artifact's init blob.
+    pub fn init_state(&self) -> anyhow::Result<TrainState> {
+        TrainState::from_blob(&self.manifest, &self.init_blob, self.client.clone())
+    }
+
+    /// Batch size baked into the artifact graphs.
+    pub fn batch(&self) -> usize {
+        self.manifest.config.batch
+    }
+}
+
+/// Build an f32 literal with the given dims from a slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> anyhow::Result<Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let lit = Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).map_err(err)
+}
+
+/// Build an i32 literal with the given dims from a slice.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> anyhow::Result<Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+    let lit = Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).map_err(err)
+}
+
+/// Build a zero-filled literal matching a tensor spec.
+pub fn literal_zeros(spec: &TensorSpec) -> anyhow::Result<Literal> {
+    match spec.dtype {
+        Dtype::F32 => literal_f32(&vec![0.0; spec.element_count()], &spec.shape),
+        Dtype::I32 => literal_i32(&vec![0; spec.element_count()], &spec.shape),
+    }
+}
+
+/// Scalar-or-vector literal → f32 (loss/logZ outputs).
+pub fn literal_scalar_f32(lit: &Literal) -> anyhow::Result<f32> {
+    lit.get_first_element::<f32>().map_err(err)
+}
+
+/// Literal → Vec<f32>.
+pub fn literal_to_vec_f32(lit: &Literal) -> anyhow::Result<Vec<f32>> {
+    match lit.ty().map_err(err)? {
+        ElementType::F32 => lit.to_vec::<f32>().map_err(err),
+        other => anyhow::bail!("expected f32 literal, got {other:?}"),
+    }
+}

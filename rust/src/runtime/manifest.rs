@@ -1,0 +1,201 @@
+//! Artifact manifest parsing (the JSON contract written by `aot.py`).
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Element type of a manifest tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> anyhow::Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => anyhow::bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// Shape + dtype + name of one graph input/output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    fn parse(j: &Json) -> anyhow::Result<TensorSpec> {
+        let shape = j
+            .req_arr("shape")?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape entry")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: j.req_str("name")?.to_string(),
+            shape,
+            dtype: Dtype::parse(j.req_str("dtype")?)?,
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One entry of the init-blob layout.
+#[derive(Clone, Debug)]
+pub struct BlobEntry {
+    pub group: String,
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Static configuration captured at AOT time (mirrors `configs.py`).
+#[derive(Clone, Debug)]
+pub struct ArtifactConfig {
+    pub config_name: String,
+    pub loss: String,
+    pub obs_dim: usize,
+    pub n_actions: usize,
+    pub n_bwd_actions: usize,
+    pub t_max: usize,
+    pub batch: usize,
+    pub uniform_pb: bool,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub config: ArtifactConfig,
+    pub params: Vec<TensorSpec>,
+    pub policy_file: String,
+    pub policy_inputs: Vec<TensorSpec>,
+    pub policy_outputs: Vec<TensorSpec>,
+    pub train_file: String,
+    pub train_state: Vec<TensorSpec>,
+    pub train_batch: Vec<TensorSpec>,
+    pub blob_file: String,
+    pub blob_layout: Vec<BlobEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let cfg = j.req("config")?;
+        let config = ArtifactConfig {
+            config_name: cfg.req_str("config_name")?.to_string(),
+            loss: cfg.req_str("loss")?.to_string(),
+            obs_dim: cfg.req_usize("obs_dim")?,
+            n_actions: cfg.req_usize("n_actions")?,
+            n_bwd_actions: cfg.req_usize("n_bwd_actions")?,
+            t_max: cfg.req_usize("t_max")?,
+            batch: cfg.req_usize("batch")?,
+            uniform_pb: cfg.req("uniform_pb")?.as_bool().unwrap_or(true),
+        };
+        let specs = |key: &str, sub: &str| -> anyhow::Result<Vec<TensorSpec>> {
+            j.req(key)?
+                .req_arr(sub)?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect()
+        };
+        let blob = j.req("init_blob")?;
+        let blob_layout = blob
+            .req_arr("layout")?
+            .iter()
+            .map(|e| {
+                Ok(BlobEntry {
+                    group: e.req_str("group")?.to_string(),
+                    name: e.req_str("name")?.to_string(),
+                    offset: e.req_usize("offset")?,
+                    shape: e
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect(),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Manifest {
+            name: j.req_str("name")?.to_string(),
+            config,
+            params: j
+                .req_arr("params")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            policy_file: j.req("policy")?.req_str("file")?.to_string(),
+            policy_inputs: specs("policy", "inputs")?,
+            policy_outputs: specs("policy", "outputs")?,
+            train_file: j.req("train")?.req_str("file")?.to_string(),
+            train_state: specs("train", "state")?,
+            train_batch: specs("train", "batch")?,
+            blob_file: blob.req_str("file")?.to_string(),
+            blob_layout,
+        })
+    }
+
+    pub fn load(dir: &Path, name: &str) -> anyhow::Result<Manifest> {
+        let path = dir.join(format!("{name}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// Number of parameter leaves P (train state = 3P + 1).
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "x.tb",
+      "config": {"config_name":"x","loss":"tb","obs_dim":16,"n_actions":3,
+                 "n_bwd_actions":2,"t_max":5,"batch":4,"uniform_pb":true,"seed":0},
+      "params": [{"name":"w0","shape":[16,8],"dtype":"f32"},
+                 {"name":"logZ","shape":[1],"dtype":"f32"}],
+      "policy": {"file":"x.tb.policy.hlo.txt",
+        "inputs":[{"name":"w0","shape":[16,8],"dtype":"f32"},
+                  {"name":"logZ","shape":[1],"dtype":"f32"},
+                  {"name":"obs","shape":[4,16],"dtype":"f32"},
+                  {"name":"fwd_mask","shape":[4,3],"dtype":"f32"},
+                  {"name":"bwd_mask","shape":[4,2],"dtype":"f32"}],
+        "outputs":[{"name":"fwd_logp","shape":[4,3],"dtype":"f32"}]},
+      "train": {"file":"x.tb.train.hlo.txt",
+        "state":[{"name":"w0","shape":[16,8],"dtype":"f32"}],
+        "batch":[{"name":"obs","shape":[4,6,16],"dtype":"f32"},
+                 {"name":"length","shape":[4],"dtype":"i32"}],
+        "extra_outputs":[{"name":"loss","shape":[],"dtype":"f32"}]},
+      "init_blob": {"file":"x.tb.params.bin",
+        "layout":[{"group":"param","name":"w0","offset":0,"shape":[16,8]}]}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "x.tb");
+        assert_eq!(m.config.obs_dim, 16);
+        assert_eq!(m.n_params(), 2);
+        assert_eq!(m.policy_inputs.len(), 5);
+        assert_eq!(m.train_batch[1].dtype, Dtype::I32);
+        assert_eq!(m.blob_layout[0].shape, vec![16, 8]);
+        assert_eq!(m.params[0].element_count(), 128);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from the coordinator hot path. Python never runs here —
+//! the HLO text + manifest + init blob are the entire interface.
+
+pub mod manifest;
+pub mod artifact;
+pub mod state;
+
+pub use artifact::Artifact;
+pub use manifest::{Manifest, TensorSpec};
+pub use state::TrainState;
+
+use std::cell::OnceCell;
+
+thread_local! {
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// Thread-local PJRT CPU client (the `xla` crate's client is `Rc`-based and
+/// not `Send`; all device work happens on the coordinator thread, so one
+/// client per thread is both safe and cheap — clones share the `Rc`).
+pub fn global_client() -> anyhow::Result<xla::PjRtClient> {
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let c = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+            // Never destroy the client: TfrtCpuClient teardown races with
+            // its own worker threads when the owning thread exits mid-run
+            // (observed as flaky SIGSEGV in the test harness).
+            std::mem::forget(c.clone());
+            let _ = cell.set(c);
+        }
+        Ok(cell.get().unwrap().clone())
+    })
+}

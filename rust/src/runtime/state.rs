@@ -1,0 +1,171 @@
+//! Training state management: parameter / optimizer leaves as host literals
+//! (round-tripped through the fused train step) plus device-resident
+//! parameter buffers for the policy graph.
+//!
+//! PJRT's `ExecuteOptions` in xla_extension 0.5.1 returns a single tuple
+//! buffer (no untupling), so the train step's outputs come back as one tuple
+//! literal that we decompose and keep as the next step's inputs. The policy
+//! graph's parameter inputs, in contrast, are uploaded to the device **once
+//! per train step** (not once per env step) — the rollout then reuses the
+//! same buffers for every env step, which is the main L3 perf lever (see
+//! EXPERIMENTS.md §Perf).
+
+use super::artifact::{literal_f32, literal_scalar_f32, Artifact};
+use super::manifest::Manifest;
+use xla::{Literal, PjRtBuffer};
+
+/// Mutable training state bound to one artifact's manifest layout.
+pub struct TrainState {
+    pub client: xla::PjRtClient,
+    /// params + m + v + t literals, in manifest (train_state) order.
+    pub state: Vec<Literal>,
+    /// Device buffers of the first P leaves (the params), for policy calls.
+    pub param_bufs: Vec<PjRtBuffer>,
+    /// Dims of each parameter leaf (for synchronous re-upload).
+    param_dims: Vec<Vec<usize>>,
+    /// Host staging scratch for parameter re-upload.
+    upload_scratch: Vec<f32>,
+    pub n_params: usize,
+    pub steps: u64,
+}
+
+fn err(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e:?}")
+}
+
+impl TrainState {
+    /// Deserialize the init blob (f32 little-endian, manifest layout).
+    pub fn from_blob(
+        manifest: &Manifest,
+        blob: &[u8],
+        client: xla::PjRtClient,
+    ) -> anyhow::Result<TrainState> {
+        let mut state = Vec::with_capacity(manifest.blob_layout.len());
+        for entry in &manifest.blob_layout {
+            let n: usize = entry.shape.iter().product::<usize>().max(1);
+            let bytes = &blob[entry.offset..entry.offset + 4 * n];
+            let mut data = vec![0f32; n];
+            for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            let dims: Vec<usize> = if entry.shape.is_empty() {
+                vec![1]
+            } else {
+                entry.shape.clone()
+            };
+            state.push(literal_f32(&data, &dims)?);
+        }
+        let n_params = manifest.n_params();
+        let param_dims: Vec<Vec<usize>> = manifest
+            .params
+            .iter()
+            .map(|p| if p.shape.is_empty() { vec![1] } else { p.shape.clone() })
+            .collect();
+        let max_len = param_dims
+            .iter()
+            .map(|d| d.iter().product::<usize>())
+            .max()
+            .unwrap_or(0);
+        let mut ts = TrainState {
+            client,
+            state,
+            param_bufs: Vec::new(),
+            param_dims,
+            upload_scratch: vec![0.0; max_len],
+            n_params,
+            steps: 0,
+        };
+        ts.refresh_param_bufs()?;
+        Ok(ts)
+    }
+
+    /// Re-upload the parameter leaves as device buffers (after a train step).
+    ///
+    /// Uses `buffer_from_host_buffer` (synchronous `kImmutableOnlyDuringCall`
+    /// semantics) rather than `buffer_from_host_literal`, whose copy runs
+    /// asynchronously on the client's worker pool and would read the literal
+    /// after we drop it on the next train step (observed as a crash in
+    /// `AbstractTfrtCpuBuffer::CopyFromLiteral`).
+    pub fn refresh_param_bufs(&mut self) -> anyhow::Result<()> {
+        self.param_bufs.clear();
+        for (lit, dims) in self.state[..self.n_params].iter().zip(&self.param_dims) {
+            let n: usize = dims.iter().product();
+            let dst = &mut self.upload_scratch[..n];
+            lit.copy_raw_to::<f32>(dst).map_err(err)?;
+            self.param_bufs
+                .push(self.client.buffer_from_host_buffer(dst, dims, None).map_err(err)?);
+        }
+        Ok(())
+    }
+
+    /// Run one fused train step. `batch` are the 8 batch literals in
+    /// manifest order. Returns (loss, logZ).
+    pub fn train_step(&mut self, art: &Artifact, batch: &[Literal]) -> anyhow::Result<(f32, f32)> {
+        debug_assert_eq!(batch.len(), art.manifest.train_batch.len());
+        let mut inputs: Vec<&Literal> = self.state.iter().collect();
+        inputs.extend(batch.iter());
+        let result = art.train_exe.execute::<&Literal>(&inputs).map_err(err)?;
+        let tuple = result[0][0].to_literal_sync().map_err(err)?;
+        let mut outs = tuple.to_tuple().map_err(err)?;
+        // Layout: 3P+1 state leaves, then loss, logZ.
+        let logz = literal_scalar_f32(&outs.pop().ok_or_else(|| anyhow::anyhow!("missing logZ"))?)?;
+        let loss = literal_scalar_f32(&outs.pop().ok_or_else(|| anyhow::anyhow!("missing loss"))?)?;
+        anyhow::ensure!(
+            outs.len() == self.state.len(),
+            "train step returned {} state leaves, expected {}",
+            outs.len(),
+            self.state.len()
+        );
+        self.state = outs;
+        self.refresh_param_bufs()?;
+        self.steps += 1;
+        Ok((loss, logz))
+    }
+
+    /// Run the policy graph on host-side obs/mask batches.
+    /// Returns (fwd_logp, bwd_logp, log_flow) as flat f32 vectors.
+    pub fn policy(
+        &self,
+        art: &Artifact,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let cfg = &art.manifest.config;
+        let b = cfg.batch;
+        debug_assert_eq!(obs.len(), b * cfg.obs_dim);
+        debug_assert_eq!(fwd_mask.len(), b * cfg.n_actions);
+        debug_assert_eq!(bwd_mask.len(), b * cfg.n_bwd_actions);
+        let obs_buf = self
+            .client
+            .buffer_from_host_buffer(obs, &[b, cfg.obs_dim], None)
+            .map_err(err)?;
+        let fwd_buf = self
+            .client
+            .buffer_from_host_buffer(fwd_mask, &[b, cfg.n_actions], None)
+            .map_err(err)?;
+        let bwd_buf = self
+            .client
+            .buffer_from_host_buffer(bwd_mask, &[b, cfg.n_bwd_actions], None)
+            .map_err(err)?;
+        let mut inputs: Vec<&PjRtBuffer> = self.param_bufs.iter().collect();
+        inputs.push(&obs_buf);
+        inputs.push(&fwd_buf);
+        inputs.push(&bwd_buf);
+        let result = art.policy_exe.execute_b::<&PjRtBuffer>(&inputs).map_err(err)?;
+        let tuple = result[0][0].to_literal_sync().map_err(err)?;
+        let outs = tuple.to_tuple().map_err(err)?;
+        anyhow::ensure!(outs.len() == 3, "policy returned {} outputs", outs.len());
+        Ok((
+            outs[0].to_vec::<f32>().map_err(err)?,
+            outs[1].to_vec::<f32>().map_err(err)?,
+            outs[2].to_vec::<f32>().map_err(err)?,
+        ))
+    }
+
+    /// Fetch a named parameter leaf back to the host (eval/debug).
+    pub fn param_by_name(&self, manifest: &Manifest, name: &str) -> Option<Vec<f32>> {
+        let idx = manifest.params.iter().position(|p| p.name == name)?;
+        self.state[idx].to_vec::<f32>().ok()
+    }
+}

@@ -1,0 +1,127 @@
+//! Mini property-testing harness (the image has no `proptest`).
+//!
+//! Provides seeded random-input generation with failure-seed reporting so a
+//! failing case can be replayed deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libxla rpath set for normal targets)
+//! use gfnx::testing::forall;
+//! forall("sorted idempotent", 100, |rng| {
+//!     let mut v: Vec<u32> = (0..rng.below(20)).map(|_| rng.next_u64() as u32).collect();
+//!     v.sort();
+//!     let w = { let mut w = v.clone(); w.sort(); w };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+//!
+//! Each case runs with an independent RNG derived from a base seed. On
+//! panic, the harness re-raises with the case index and seed embedded so the
+//! exact input can be regenerated with [`case_rng`].
+
+use crate::util::rng::Rng;
+
+/// Base seed for all property tests; override with `GFNX_PROPTEST_SEED`.
+pub fn base_seed() -> u64 {
+    std::env::var("GFNX_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// The RNG used for case `i` of property `name`.
+pub fn case_rng(name: &str, i: usize) -> Rng {
+    // Mix the property name into the stream so different properties in the
+    // same test binary explore different inputs.
+    let mut h: u64 = 1469598103934665603; // FNV offset
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(1099511628211);
+    }
+    Rng::new(base_seed() ^ h ^ ((i as u64) << 32))
+}
+
+/// Run `prop` against `cases` independently seeded RNGs. Panics with a
+/// replay message naming the failing case.
+pub fn forall<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) + std::panic::RefUnwindSafe,
+{
+    for i in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = case_rng(name, i);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {i} (seed base {:#x}): {msg}\n\
+                 replay: testing::case_rng(\"{name}\", {i})",
+                base_seed()
+            );
+        }
+    }
+}
+
+/// Generate a random f32 vector of length `n` in [lo, hi).
+pub fn gen_vec_f32(rng: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n).map(|_| lo + (hi - lo) * rng.uniform_f32()).collect()
+}
+
+/// Generate a random boolean mask of length `n` with at least one `true`.
+pub fn gen_mask(rng: &mut Rng, n: usize) -> Vec<bool> {
+    assert!(n > 0);
+    let mut m: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.5)).collect();
+    if !m.iter().any(|&b| b) {
+        let i = rng.below(n);
+        m[i] = true;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u64 xor self is zero", 50, |rng| {
+            let x = rng.next_u64();
+            assert_eq!(x ^ x, 0);
+        });
+    }
+
+    #[test]
+    fn forall_reports_failure_with_case() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always fails", 3, |_rng| panic!("boom"));
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("always fails"), "{msg}");
+        assert!(msg.contains("case 0"), "{msg}");
+    }
+
+    #[test]
+    fn case_rng_is_deterministic() {
+        let mut a = case_rng("p", 3);
+        let mut b = case_rng("p", 3);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = case_rng("p", 4);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn gen_mask_never_empty() {
+        forall("mask nonempty", 100, |rng| {
+            let n = 1 + rng.below(16);
+            let m = gen_mask(rng, n);
+            assert!(m.iter().any(|&b| b));
+        });
+    }
+}

@@ -1,0 +1,262 @@
+//! Tiny declarative command-line flag parser (the image has no `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// One declared flag.
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative CLI: declare flags, then parse `std::env::args`.
+pub struct Cli {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+    positional: Vec<(String, String)>, // (name, help)
+}
+
+/// Parsed argument values.
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare a valued flag with a default.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a required valued flag.
+    pub fn required(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean switch (default false).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Declare a positional argument (for documentation only).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positional.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [flags]\n\nFLAGS:\n");
+        for f in &self.flags {
+            let kind = if f.is_bool {
+                String::new()
+            } else if let Some(d) = &f.default {
+                format!(" <value> (default: {d})")
+            } else {
+                " <value> (required)".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", f.name, kind, f.help));
+        }
+        s.push_str("  --help\n      print this message\n");
+        s
+    }
+
+    /// Parse an explicit argv (without the program name).
+    pub fn parse_from(&self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut bools = BTreeMap::new();
+        for f in &self.flags {
+            if f.is_bool {
+                bools.insert(f.name.clone(), false);
+            } else if let Some(d) = &f.default {
+                values.insert(f.name.clone(), d.clone());
+            }
+        }
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if spec.is_bool {
+                    let v = match inline.as_deref() {
+                        None => true,
+                        Some("true") => true,
+                        Some("false") => false,
+                        Some(other) => anyhow::bail!("bad bool for --{name}: {other}"),
+                    };
+                    bools.insert(name, v);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if !f.is_bool && !values.contains_key(&f.name) {
+                anyhow::bail!("missing required flag --{}\n\n{}", f.name, self.usage());
+            }
+        }
+        Ok(Args { values, bools, positional })
+    }
+
+    /// Parse the process arguments; print usage and exit on `--help`/error.
+    pub fn parse(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&argv) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        *self
+            .bools
+            .get(name)
+            .unwrap_or_else(|| panic!("switch --{name} not declared"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .flag("steps", "100", "steps")
+            .flag("lr", "0.001", "learning rate")
+            .switch("verbose", "chatty")
+            .required("config", "config name")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli()
+            .parse_from(&sv(&["--config", "hg", "--steps=250", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_usize("steps"), 250);
+        assert_eq!(a.get("config"), "hg");
+        assert!((a.get_f64("lr") - 0.001).abs() < 1e-12);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse_from(&sv(&["--steps", "5"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cli().parse_from(&sv(&["--config", "x", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse_from(&sv(&["run", "--config", "x"])).unwrap();
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn bool_with_inline_value() {
+        let a = cli()
+            .parse_from(&sv(&["--config", "x", "--verbose=false"]))
+            .unwrap();
+        assert!(!a.get_bool("verbose"));
+    }
+}

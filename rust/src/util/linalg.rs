@@ -1,0 +1,308 @@
+//! Small dense linear algebra over f64: matrix type, matmul, Cholesky
+//! factorization, log-determinant, and triangular/posdef solves.
+//!
+//! Used by the Bayesian-network reward modules (BGe and linear-Gaussian
+//! marginal likelihoods), by dataset generation, and by the host-side
+//! reference networks in the baseline comparator. Matrices here are tiny
+//! (d ≤ ~20 nodes, N ≤ a few hundred samples), so clarity beats blocking.
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] += v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.set(j, i, self.get(i, j));
+            }
+        }
+        t
+    }
+
+    /// Matrix product self · other.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.add_at(i, j, a * other.get(k, j));
+                }
+            }
+        }
+        out
+    }
+
+    /// Extract the square submatrix indexed by `idx` (rows and cols).
+    pub fn submatrix(&self, idx: &[usize]) -> Mat {
+        let n = idx.len();
+        let mut s = Mat::zeros(n, n);
+        for (a, &i) in idx.iter().enumerate() {
+            for (b, &j) in idx.iter().enumerate() {
+                s.set(a, b, self.get(i, j));
+            }
+        }
+        s
+    }
+
+    /// Scale all entries in place.
+    pub fn scale(&mut self, s: f64) {
+        self.data.iter_mut().for_each(|x| *x *= s);
+    }
+
+    /// Element-wise add another matrix in place.
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+}
+
+/// Cholesky factorization A = L·Lᵀ for a symmetric positive-definite matrix.
+/// Returns the lower-triangular factor, or None if A is not PD.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j);
+            for k in 0..j {
+                sum -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 || !sum.is_finite() {
+                    return None;
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Some(l)
+}
+
+/// log det(A) for symmetric positive-definite A (via Cholesky).
+/// The log-determinant of the empty (0×0) matrix is 0.
+pub fn logdet_pd(a: &Mat) -> Option<f64> {
+    if a.rows == 0 {
+        return Some(0.0);
+    }
+    let l = cholesky(a)?;
+    let mut s = 0.0;
+    for i in 0..a.rows {
+        s += l.get(i, i).ln();
+    }
+    Some(2.0 * s)
+}
+
+/// Solve L·x = b with L lower-triangular (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.get(i, k) * x[k];
+        }
+        x[i] = s / l.get(i, i);
+    }
+    x
+}
+
+/// Solve Lᵀ·x = b with L lower-triangular (back substitution).
+pub fn solve_lower_t(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= l.get(k, i) * x[k];
+        }
+        x[i] = s / l.get(i, i);
+    }
+    x
+}
+
+/// Solve A·x = b for symmetric positive-definite A via Cholesky.
+pub fn solve_pd(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let l = cholesky(a)?;
+    let y = solve_lower(&l, b);
+    Some(solve_lower_t(&l, &y))
+}
+
+/// Quadratic form bᵀ·A⁻¹·b for PD A.
+pub fn quad_form_inv(a: &Mat, b: &[f64]) -> Option<f64> {
+    let l = cholesky(a)?;
+    let y = solve_lower(&l, b);
+    Some(y.iter().map(|v| v * v).sum())
+}
+
+/// log Γ(x) via the Lanczos approximation (|error| < 1e-10 for x > 0).
+pub fn ln_gamma(x: f64) -> f64 {
+    // Lanczos coefficients (g=7, n=9).
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn matmul_hand_case() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        // A = M·Mᵀ + I is PD.
+        let m = Mat::from_rows(&[&[1.0, 2.0, 0.5], &[0.0, 1.0, -1.0], &[2.0, 0.3, 1.0]]);
+        let mut a = m.matmul(&m.transpose());
+        a.add_assign(&Mat::eye(3));
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_close(rec.get(i, j), a.get(i, j), 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_pd() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn logdet_diag() {
+        let mut a = Mat::eye(3);
+        a.set(0, 0, 2.0);
+        a.set(1, 1, 4.0);
+        a.set(2, 2, 0.5);
+        assert_close(logdet_pd(&a).unwrap(), (2.0f64 * 4.0 * 0.5).ln(), 1e-12);
+        assert_eq!(logdet_pd(&Mat::zeros(0, 0)).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn solve_pd_matches_direct() {
+        let a = Mat::from_rows(&[&[4.0, 1.0], &[1.0, 3.0]]);
+        let x = solve_pd(&a, &[1.0, 2.0]).unwrap();
+        // Verify A x = b.
+        assert_close(4.0 * x[0] + x[1], 1.0, 1e-12);
+        assert_close(x[0] + 3.0 * x[1], 2.0, 1e-12);
+    }
+
+    #[test]
+    fn quad_form_matches_solve() {
+        let a = Mat::from_rows(&[&[4.0, 1.0], &[1.0, 3.0]]);
+        let b = [1.0, 2.0];
+        let x = solve_pd(&a, &b).unwrap();
+        let direct: f64 = b.iter().zip(&x).map(|(u, v)| u * v).sum();
+        assert_close(quad_form_inv(&a, &b).unwrap(), direct, 1e-12);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert_close(ln_gamma(1.0), 0.0, 1e-10);
+        assert_close(ln_gamma(2.0), 0.0, 1e-10);
+        assert_close(ln_gamma(5.0), (24.0f64).ln(), 1e-10);
+        assert_close(ln_gamma(0.5), 0.5 * std::f64::consts::PI.ln(), 1e-10);
+        // Recurrence Γ(x+1) = x Γ(x).
+        for &x in &[0.3, 1.7, 3.14, 10.5] {
+            assert_close(ln_gamma(x + 1.0), (x as f64).ln() + ln_gamma(x), 1e-9);
+        }
+    }
+
+    #[test]
+    fn submatrix_extracts() {
+        let a = Mat::from_rows(&[&[1., 2., 3.], &[4., 5., 6.], &[7., 8., 9.]]);
+        let s = a.submatrix(&[0, 2]);
+        assert_eq!(s.data, vec![1., 3., 7., 9.]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Metrics logging: JSONL run logs plus lightweight stdout progress.
+//!
+//! Every trainer/bench run appends one JSON object per logging step to a
+//! `.jsonl` file, mirroring the experiment-tracking discipline of the paper's
+//! single-file baselines (step, wall-clock seconds, named scalar metrics).
+
+use crate::util::json::Json;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+/// A JSONL metrics writer bound to one run.
+pub struct MetricsLog {
+    out: Option<BufWriter<File>>,
+    start: Instant,
+    run: String,
+}
+
+impl MetricsLog {
+    /// Create a log writing to `path` (append mode). Parent dirs are created.
+    pub fn to_file(run: &str, path: &Path) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(MetricsLog {
+            out: Some(BufWriter::new(f)),
+            start: Instant::now(),
+            run: run.to_string(),
+        })
+    }
+
+    /// A no-file logger (keeps timing, prints only).
+    pub fn stdout_only(run: &str) -> Self {
+        MetricsLog { out: None, start: Instant::now(), run: run.to_string() }
+    }
+
+    /// Seconds since this log was created.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Record one step of named scalar metrics.
+    pub fn log(&mut self, step: u64, metrics: &[(&str, f64)]) {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("run", Json::Str(self.run.clone())),
+            ("step", Json::Num(step as f64)),
+            ("t", Json::Num(self.elapsed_s())),
+        ];
+        for (k, v) in metrics {
+            pairs.push((k, Json::Num(*v)));
+        }
+        let line = Json::obj(pairs).to_string();
+        if let Some(out) = &mut self.out {
+            let _ = writeln!(out, "{line}");
+            let _ = out.flush();
+        }
+    }
+
+    /// Print a human-readable progress line.
+    pub fn progress(&self, step: u64, total: u64, metrics: &[(&str, f64)]) {
+        let mut s = format!(
+            "[{}] step {step}/{total} t={:.1}s",
+            self.run,
+            self.elapsed_s()
+        );
+        for (k, v) in metrics {
+            s.push_str(&format!(" {k}={v:.4}"));
+        }
+        eprintln!("{s}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_valid_jsonl() {
+        let dir = std::env::temp_dir().join("gfnx_log_test");
+        let path = dir.join("run.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut log = MetricsLog::to_file("unit", &path).unwrap();
+            log.log(1, &[("loss", 0.5), ("tv", 0.25)]);
+            log.log(2, &[("loss", 0.4)]);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let j = Json::parse(lines[0]).unwrap();
+        assert_eq!(j.get("run").unwrap().as_str(), Some("unit"));
+        assert_eq!(j.get("step").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("loss").unwrap().as_f64(), Some(0.5));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stdout_only_does_not_crash() {
+        let mut log = MetricsLog::stdout_only("x");
+        log.log(0, &[("a", 1.0)]);
+        assert!(log.elapsed_s() >= 0.0);
+    }
+}

@@ -1,0 +1,352 @@
+//! Deterministic, splittable pseudo-random number generation.
+//!
+//! The build image has no `rand` crate, so this module is the project's RNG
+//! substrate: a SplitMix64 seeder feeding a xoshiro256++ core, plus the
+//! distributions the coordinator needs (uniforms, normals, categorical from
+//! logits, Gumbel noise, Fisher–Yates shuffles).
+//!
+//! Streams are reproducible: the same seed always yields the same sequence,
+//! and [`Rng::split`] derives statistically independent child streams, which
+//! mirrors how `jax.random.split` is used in the reference gfnx library.
+
+/// SplitMix64 step — used for seeding and for stream splitting.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG with SplitMix64 seeding.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box–Muller normal.
+    cached_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, cached_normal: None }
+    }
+
+    /// Derive an independent child stream (à la `jax.random.split`).
+    pub fn split(&mut self) -> Rng {
+        let mut sm = self.next_u64() ^ 0xA5A5_A5A5_DEAD_BEEF;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, cached_normal: None }
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n). Panics if n == 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0, "Rng::below(0)");
+        // Lemire-style rejection-free-enough multiply-shift; bias is
+        // negligible for n << 2^64 (we never exceed ~2^32 categories).
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Standard normal via Box–Muller (with caching of the pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.cached_normal = Some(r * s);
+        r * c
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Fill a slice with i.i.d. N(0, std²) f32 values.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal() as f32 * std;
+        }
+    }
+
+    /// Gumbel(0,1) sample: -ln(-ln U).
+    #[inline]
+    pub fn gumbel(&mut self) -> f64 {
+        let u = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        -(-u.ln()).ln()
+    }
+
+    /// Sample an index from unnormalized log-probabilities restricted to the
+    /// positions where `mask[i]` is true, via the Gumbel-max trick.
+    ///
+    /// Returns the sampled index. Panics (debug) if no action is legal.
+    pub fn categorical_masked(&mut self, logits: &[f32], mask: &[bool]) -> usize {
+        debug_assert_eq!(logits.len(), mask.len());
+        let mut best = usize::MAX;
+        let mut best_v = f64::NEG_INFINITY;
+        for i in 0..logits.len() {
+            if !mask[i] {
+                continue;
+            }
+            let v = logits[i] as f64 + self.gumbel();
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        debug_assert!(best != usize::MAX, "categorical_masked: empty mask");
+        best
+    }
+
+    /// Sample an index proportional to (non-negative) weights.
+    pub fn categorical_weights(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0, "categorical_weights: zero total");
+        let mut x = self.uniform() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Sample uniformly among indices where `mask[i]` is true.
+    pub fn uniform_masked(&mut self, mask: &[bool]) -> usize {
+        let n = mask.iter().filter(|&&m| m).count();
+        debug_assert!(n > 0, "uniform_masked: empty mask");
+        let mut k = self.below(n);
+        for (i, &m) in mask.iter().enumerate() {
+            if m {
+                if k == 0 {
+                    return i;
+                }
+                k -= 1;
+            }
+        }
+        unreachable!()
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = self.range(i, n);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproducible_streams() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn split_streams_diverge() {
+        let mut a = Rng::new(7);
+        let mut c = a.split();
+        let xs: Vec<u64> = (0..50).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..50).map(|_| c.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(2);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let i = r.below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            sum += z;
+            sq += z * z;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn categorical_masked_respects_mask() {
+        let mut r = Rng::new(4);
+        let logits = [0.0f32, 5.0, -3.0, 2.0];
+        let mask = [true, false, true, false];
+        for _ in 0..1_000 {
+            let i = r.categorical_masked(&logits, &mask);
+            assert!(mask[i]);
+        }
+    }
+
+    #[test]
+    fn categorical_masked_matches_softmax() {
+        // χ²-style check: empirical frequencies ≈ softmax over legal entries.
+        let mut r = Rng::new(5);
+        let logits = [1.0f32, 0.0, 2.0, -1.0];
+        let mask = [true, true, true, true];
+        let n = 200_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[r.categorical_masked(&logits, &mask)] += 1;
+        }
+        let z: f64 = logits.iter().map(|&l| (l as f64).exp()).sum();
+        for i in 0..4 {
+            let p = (logits[i] as f64).exp() / z;
+            let phat = counts[i] as f64 / n as f64;
+            assert!((p - phat).abs() < 0.01, "i={i} p={p} phat={phat}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(6);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut r = Rng::new(8);
+        for _ in 0..100 {
+            let ks = r.choose_k(20, 7);
+            assert_eq!(ks.len(), 7);
+            let mut s = ks.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 7);
+        }
+    }
+
+    #[test]
+    fn uniform_masked_uniformity() {
+        let mut r = Rng::new(9);
+        let mask = [false, true, true, false, true];
+        let mut counts = [0usize; 5];
+        let n = 90_000;
+        for _ in 0..n {
+            counts[r.uniform_masked(&mask)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[3], 0);
+        for &i in &[1usize, 2, 4] {
+            let p = counts[i] as f64 / n as f64;
+            assert!((p - 1.0 / 3.0).abs() < 0.01);
+        }
+    }
+}

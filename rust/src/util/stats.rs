@@ -1,0 +1,212 @@
+//! Statistics helpers used across metrics and the benchmark harness:
+//! streaming mean/variance (Welford), Pearson correlation, moving averages,
+//! and iterations-per-second summaries with 3σ standard-error intervals
+//! (matching how the paper reports Table 1).
+
+/// Streaming mean/variance accumulator (Welford's algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+/// Pearson correlation coefficient between two equal-length slices.
+/// Returns 0.0 for degenerate (constant) inputs.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for i in 0..xs.len() {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Simple moving average smoother (window `w`, same-length output).
+pub fn moving_average(xs: &[f64], w: usize) -> Vec<f64> {
+    if xs.is_empty() || w <= 1 {
+        return xs.to_vec();
+    }
+    let mut out = Vec::with_capacity(xs.len());
+    let mut sum = 0.0;
+    for i in 0..xs.len() {
+        sum += xs[i];
+        if i >= w {
+            sum -= xs[i - w];
+        }
+        let denom = (i + 1).min(w) as f64;
+        out.push(sum / denom);
+    }
+    out
+}
+
+/// log-sum-exp over a slice (stable).
+pub fn logsumexp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !m.is_finite() {
+        return m;
+    }
+    m + xs.iter().map(|&x| (x - m).exp()).sum::<f64>().ln()
+}
+
+/// Normalize log-weights into a probability vector.
+pub fn softmax_from_logs(xs: &[f64]) -> Vec<f64> {
+    let lse = logsumexp(xs);
+    xs.iter().map(|&x| (x - lse).exp()).collect()
+}
+
+/// An iterations-per-second measurement summary: mean ± 3·SEM across repeats,
+/// the format the paper uses in Tables 1–2.
+#[derive(Clone, Copy, Debug)]
+pub struct ItPerSec {
+    pub mean: f64,
+    pub sem3: f64,
+}
+
+impl ItPerSec {
+    /// Summarize per-repeat it/s samples.
+    pub fn from_samples(samples: &[f64]) -> Self {
+        let mut w = Welford::new();
+        for &s in samples {
+            w.push(s);
+        }
+        ItPerSec { mean: w.mean(), sem3: 3.0 * w.sem() }
+    }
+}
+
+impl std::fmt::Display for ItPerSec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.1}±{:.1} it/s", self.mean, self.sem3)
+    }
+}
+
+/// RMSE between two equal-length slices.
+pub fn rmse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = a.iter().zip(b).map(|(&x, &y)| (x - y) * (x - y)).sum();
+    (s / a.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.5, -3.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.var() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let zs = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &zs) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&xs, &[1.0, 1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn logsumexp_stable() {
+        let xs = [1000.0, 1000.0];
+        assert!((logsumexp(&xs) - (1000.0 + 2f64.ln())).abs() < 1e-9);
+        assert_eq!(logsumexp(&[f64::NEG_INFINITY]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax_from_logs(&[0.0, 1.0, -2.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[1] > p[0] && p[0] > p[2]);
+    }
+
+    #[test]
+    fn moving_average_basics() {
+        let xs = [1.0, 1.0, 4.0, 4.0];
+        let m = moving_average(&xs, 2);
+        assert_eq!(m.len(), 4);
+        assert!((m[2] - 2.5).abs() < 1e-12);
+        assert_eq!(moving_average(&xs, 1), xs.to_vec());
+    }
+
+    #[test]
+    fn itps_display() {
+        let s = ItPerSec::from_samples(&[100.0, 102.0, 98.0]);
+        assert!((s.mean - 100.0).abs() < 1e-9);
+        assert!(s.sem3 > 0.0);
+    }
+
+    #[test]
+    fn rmse_zero_for_equal() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+}

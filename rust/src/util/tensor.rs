@@ -1,0 +1,193 @@
+//! Row-major host tensors used to assemble observation / trajectory batches
+//! before they are shipped to the PJRT device, plus small typed views.
+//!
+//! This is deliberately minimal: dense f32/i32 storage with shape metadata
+//! and the indexing patterns the coordinator hot path needs (batch rows,
+//! fill, copy-into-slot). Heavy math lives on the device (L2/L1) or in
+//! `util::linalg` for the tiny score computations.
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        TensorF32 { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        TensorF32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// Size of one "row" = product of all dims after the first.
+    pub fn row_len(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    /// Immutable view of row `i` along the leading dimension.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let r = self.row_len();
+        &self.data[i * r..(i + 1) * r]
+    }
+
+    /// Mutable view of row `i` along the leading dimension.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let r = self.row_len();
+        &mut self.data[i * r..(i + 1) * r]
+    }
+
+    /// 2-D indexed get (debug-checked).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(&mut self, shape: &[usize]) {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+    }
+
+    /// Shape as i64 (what `xla::Literal::reshape` wants).
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// Dense row-major i32 tensor (action ids, masks as 0/1, token ids).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        TensorI32 { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorI32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    pub fn row_len(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    pub fn row(&self, i: usize) -> &[i32] {
+        let r = self.row_len();
+        &self.data[i * r..(i + 1) * r]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [i32] {
+        let r = self.row_len();
+        &mut self.data[i * r..(i + 1) * r]
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// One-hot encode `idx` into `out[offset..offset+n]` (clears the span first).
+#[inline]
+pub fn one_hot_into(out: &mut [f32], offset: usize, n: usize, idx: usize) {
+    debug_assert!(idx < n);
+    out[offset..offset + n].iter_mut().for_each(|x| *x = 0.0);
+    out[offset + idx] = 1.0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_views() {
+        let mut t = TensorF32::zeros(&[3, 4]);
+        t.row_mut(1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.row(0), &[0.0; 4]);
+        assert_eq!(t.row(1), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.at2(1, 2), 3.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let mut t = TensorF32::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        t.reshape(&[3, 2]);
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.row(2), &[5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_shape() {
+        TensorF32::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn one_hot_clears_span() {
+        let mut buf = vec![9.0f32; 8];
+        one_hot_into(&mut buf, 2, 4, 1);
+        assert_eq!(&buf[2..6], &[0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(buf[0], 9.0);
+        assert_eq!(buf[6], 9.0);
+    }
+
+    #[test]
+    fn i32_tensor_rows() {
+        let mut t = TensorI32::zeros(&[2, 2]);
+        t.row_mut(0)[1] = 7;
+        assert_eq!(t.data(), &[0, 7, 0, 0]);
+        assert_eq!(t.dims_i64(), vec![2, 2]);
+    }
+}

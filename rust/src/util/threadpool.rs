@@ -1,0 +1,106 @@
+//! A minimal scoped thread pool (the image has no `rayon`/`tokio`).
+//!
+//! Used for parallel evaluation work that is independent across items
+//! (exact-posterior enumeration chunks, MCMC chains, baseline sweeps).
+//! The device hot path stays single-threaded by design — PJRT CPU already
+//! parallelizes inside a computation.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Run `f(i)` for every `i in 0..n` across `workers` OS threads and collect
+/// results in index order.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = Arc::new(AtomicUsize::new(0));
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots_ptr = SlotsPtr(slots.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = Arc::clone(&next);
+            let f = &f;
+            let slots_ptr = slots_ptr;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY: each index i is claimed by exactly one worker via
+                // the atomic counter, so writes to slots[i] never alias.
+                unsafe { slots_ptr.write(i, v) }
+            });
+        }
+    });
+
+    slots.into_iter().map(|s| s.expect("worker missed slot")).collect()
+}
+
+/// Raw-pointer wrapper so the pointer can be captured by worker threads.
+/// Accessed via a method so closures capture the whole (Send) wrapper
+/// rather than the raw-pointer field (RFC 2229 precise capture).
+struct SlotsPtr<T>(*mut Option<T>);
+
+// Manual Copy/Clone: the derive would wrongly require `T: Copy`.
+impl<T> Clone for SlotsPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SlotsPtr<T> {}
+
+impl<T> SlotsPtr<T> {
+    /// SAFETY: caller must guarantee exclusive access to slot `i`.
+    unsafe fn write(&self, i: usize, v: T) {
+        *self.0.add(i) = Some(v);
+    }
+}
+
+unsafe impl<T: Send> Send for SlotsPtr<T> {}
+unsafe impl<T: Send> Sync for SlotsPtr<T> {}
+
+/// Default worker count: available parallelism minus one (leave a core for
+/// the PJRT runtime), at least 1.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let out = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn heavier_than_workers() {
+        let out = parallel_map(1000, 8, |i| i % 7);
+        assert_eq!(out.len(), 1000);
+        assert_eq!(out[999], 999 % 7);
+    }
+}

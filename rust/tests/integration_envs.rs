@@ -1,0 +1,168 @@
+//! Cross-module integration: every default artifact's manifest must agree
+//! with the corresponding Rust environment spec (the shapes are defined
+//! twice — configs.py and rust envs — and this test is the contract check),
+//! and each (env, artifact) pair must run a full training iteration.
+
+use gfnx::coordinator::explore::EpsSchedule;
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::envs::VecEnv;
+use gfnx::runtime::{Artifact, Manifest};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("hypergrid_small.tb.manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    dir
+}
+
+fn check_spec<E: VecEnv>(env: &E, manifest: &Manifest) {
+    let spec = env.spec();
+    let cfg = &manifest.config;
+    assert_eq!(spec.obs_dim, cfg.obs_dim, "{}: obs_dim", manifest.name);
+    assert_eq!(spec.n_actions, cfg.n_actions, "{}: n_actions", manifest.name);
+    assert_eq!(
+        spec.n_bwd_actions, cfg.n_bwd_actions,
+        "{}: n_bwd_actions",
+        manifest.name
+    );
+    assert_eq!(spec.t_max, cfg.t_max, "{}: t_max", manifest.name);
+}
+
+#[test]
+fn hypergrid_manifests_match_env_specs() {
+    use gfnx::envs::hypergrid::HypergridEnv;
+    use gfnx::reward::hypergrid::HypergridReward;
+    for (name, d, h) in [
+        ("hypergrid_small.tb", 2usize, 8usize),
+        ("hypergrid_2d_20.tb", 2, 20),
+        ("hypergrid_4d_20.tb", 4, 20),
+        ("hypergrid_8d_10.tb", 8, 10),
+    ] {
+        let m = Manifest::load(&artifacts_dir(), name).unwrap();
+        let env = HypergridEnv::new(d, h, HypergridReward::standard(h));
+        check_spec(&env, &m);
+    }
+}
+
+#[test]
+fn bitseq_manifest_matches_and_trains() {
+    use gfnx::envs::bitseq::{bitseq_env, BitSeqConfig};
+    let (env, _modes) = bitseq_env(BitSeqConfig::small());
+    let art = Artifact::load(&artifacts_dir(), "bitseq_small.tb").unwrap();
+    check_spec(&env, &art.manifest);
+    let mut trainer = Trainer::new(&env, &art, 1, EpsSchedule::Constant(1e-3)).unwrap();
+    let (stats, objs) = trainer.train_iter(&ExtraSource::None).unwrap();
+    assert!(stats.loss.is_finite());
+    assert_eq!(objs.len(), art.batch());
+    // Non-autoregressive: every object is fully filled.
+    for o in &objs {
+        assert!(o.iter().all(|&t| t >= 0));
+    }
+}
+
+#[test]
+fn tfbind8_manifest_matches_and_trains() {
+    use gfnx::envs::tfbind8::tfbind8_env;
+    let env = tfbind8_env(0, 10.0);
+    let art = Artifact::load(&artifacts_dir(), "tfbind8.tb").unwrap();
+    check_spec(&env, &art.manifest);
+    let mut trainer = Trainer::new(&env, &art, 2, EpsSchedule::Constant(0.5)).unwrap();
+    let (stats, _) = trainer.train_iter(&ExtraSource::None).unwrap();
+    assert!(stats.loss.is_finite());
+    assert_eq!(stats.mean_length, 8.0); // fixed length
+}
+
+#[test]
+fn qm9_manifest_matches_and_trains() {
+    use gfnx::envs::qm9::qm9_env;
+    let env = qm9_env(0, 10.0);
+    let art = Artifact::load(&artifacts_dir(), "qm9.tb").unwrap();
+    check_spec(&env, &art.manifest);
+    let mut trainer = Trainer::new(&env, &art, 3, EpsSchedule::Constant(0.5)).unwrap();
+    let (stats, _) = trainer.train_iter(&ExtraSource::None).unwrap();
+    assert!(stats.loss.is_finite());
+    assert_eq!(stats.mean_length, 5.0);
+}
+
+#[test]
+fn amp_manifest_matches_and_trains() {
+    use gfnx::envs::amp::amp_env_sized;
+    let env = amp_env_sized(0, 1e-3, 8);
+    let art = Artifact::load(&artifacts_dir(), "amp_small.tb").unwrap();
+    check_spec(&env, &art.manifest);
+    let mut trainer = Trainer::new(&env, &art, 4, EpsSchedule::Constant(1e-2)).unwrap();
+    let (stats, objs) = trainer.train_iter(&ExtraSource::None).unwrap();
+    assert!(stats.loss.is_finite());
+    // Variable length objects.
+    assert!(objs.iter().any(|o| o.len() < 8) || objs.iter().any(|o| o.len() == 8));
+}
+
+#[test]
+fn phylo_manifest_matches_and_trains_fldb() {
+    use gfnx::data::phylo_data::synthetic_alignment;
+    use gfnx::envs::phylo::PhyloEnv;
+    use gfnx::util::rng::Rng;
+    let mut rng = Rng::new(7);
+    let aln = synthetic_alignment(6, 8, 0.15, &mut rng);
+    let env = PhyloEnv::new(aln, 16.0, 4.0);
+    let art = Artifact::load(&artifacts_dir(), "phylo_small.fldb").unwrap();
+    check_spec(&env, &art.manifest);
+    let mut trainer = Trainer::new(&env, &art, 5, EpsSchedule::Constant(0.5)).unwrap();
+    let energy = |s: &<PhyloEnv as VecEnv>::State, i: usize| trainer.env.energy(s, i);
+    // Borrow rules: build the closure from a fresh env reference instead.
+    let env_ref = trainer.env;
+    let extra = ExtraSource::Energy(&move |s, i| env_ref.energy(s, i));
+    let (stats, objs) = trainer.train_iter(&extra).unwrap();
+    assert!(stats.loss.is_finite());
+    assert_eq!(stats.mean_length, 5.0); // n − 1 merges
+    for o in objs {
+        assert_eq!(o.leaf_count(), 6);
+    }
+    let _ = energy;
+}
+
+#[test]
+fn bayesnet_manifest_matches_and_trains_mdb() {
+    use gfnx::data::ancestral::ancestral_sample;
+    use gfnx::data::erdos_renyi::sample_er_dag;
+    use gfnx::envs::bayesnet::BayesNetEnv;
+    use gfnx::reward::lingauss::lingauss_table;
+    use gfnx::util::rng::Rng;
+    let mut rng = Rng::new(8);
+    let g = sample_er_dag(5, 1.0, &mut rng);
+    let data = ancestral_sample(&g, 100, 0.1, &mut rng);
+    let table = lingauss_table(&data, 0.1, 1.0);
+    let env = BayesNetEnv::new(5, table.clone());
+    let art = Artifact::load(&artifacts_dir(), "bayesnet_d5.mdb").unwrap();
+    check_spec(&env, &art.manifest);
+    let mut trainer = Trainer::new(&env, &art, 6, EpsSchedule::Constant(0.5)).unwrap();
+    let table_ref = &table;
+    let extra = ExtraSource::StateLogReward(&move |s: &gfnx::envs::bayesnet::BayesNetState, i: usize| {
+        table_ref.log_score(s.adj[i])
+    });
+    let (stats, objs) = trainer.train_iter(&extra).unwrap();
+    assert!(stats.loss.is_finite());
+    for o in objs {
+        assert!(gfnx::envs::bayesnet::is_acyclic(o, 5));
+    }
+}
+
+#[test]
+fn ising_manifest_matches_and_trains() {
+    use gfnx::envs::ising::IsingEnv;
+    use gfnx::reward::ising::IsingReward;
+    let env = IsingEnv::lattice(3, IsingReward::torus(3, 0.2));
+    let art = Artifact::load(&artifacts_dir(), "ising_small.tb").unwrap();
+    check_spec(&env, &art.manifest);
+    let mut trainer = Trainer::new(&env, &art, 7, EpsSchedule::none()).unwrap();
+    let (stats, objs) = trainer.train_iter(&ExtraSource::None).unwrap();
+    assert!(stats.loss.is_finite());
+    assert_eq!(stats.mean_length, 9.0);
+    for o in objs {
+        assert!(o.iter().all(|&s| s == 1 || s == -1));
+    }
+}

@@ -1,0 +1,221 @@
+//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//!
+//! These exercise the full L3→L2→L1 stack: rust envs staging observations,
+//! the PJRT-compiled policy graph (with the Pallas masked-softmax inside),
+//! and the fused train step.
+
+use gfnx::coordinator::eval::log_p_theta_hat;
+use gfnx::coordinator::explore::EpsSchedule;
+use gfnx::coordinator::rollout::{
+    backward_rollout_score, forward_rollout, ExtraSource, RolloutCtx,
+};
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::envs::hypergrid::HypergridEnv;
+use gfnx::envs::VecEnv;
+use gfnx::metrics::tv::tv_from_counts;
+use gfnx::reward::hypergrid::HypergridReward;
+use gfnx::runtime::Artifact;
+use gfnx::util::rng::Rng;
+use gfnx::util::stats::softmax_from_logs;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("hypergrid_small.tb.manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    dir
+}
+
+fn small_env() -> HypergridEnv<HypergridReward> {
+    HypergridEnv::new(2, 8, HypergridReward::standard(8))
+}
+
+#[test]
+fn policy_outputs_valid_distributions() {
+    let env = small_env();
+    let art = Artifact::load(&artifacts_dir(), "hypergrid_small.tb").unwrap();
+    let ts = art.init_state().unwrap();
+    let spec = env.spec();
+    let b = art.batch();
+    let state = env.reset(b);
+    let mut ctx = RolloutCtx::for_artifact(&art);
+    // Stage initial states manually via a zero-eps rollout context.
+    let mut obs = vec![0f32; b * spec.obs_dim];
+    let mut fwd_mask = vec![0f32; b * spec.n_actions];
+    let mut bwd_mask = vec![0f32; b * spec.n_bwd_actions];
+    let mut scratch = vec![false; spec.n_actions];
+    let mut bscratch = vec![false; spec.n_bwd_actions];
+    for i in 0..b {
+        env.obs_into(&state, i, &mut obs[i * spec.obs_dim..(i + 1) * spec.obs_dim]);
+        env.fwd_mask_into(&state, i, &mut scratch);
+        for (j, &m) in scratch.iter().enumerate() {
+            fwd_mask[i * spec.n_actions + j] = if m { 1.0 } else { 0.0 };
+        }
+        env.bwd_mask_into(&state, i, &mut bscratch);
+        bwd_mask[i * spec.n_bwd_actions] = 1.0; // s0: sentinel
+    }
+    let (fwd_logp, bwd_logp, flow) = ts.policy(&art, &obs, &fwd_mask, &bwd_mask).unwrap();
+    assert_eq!(fwd_logp.len(), b * spec.n_actions);
+    assert_eq!(bwd_logp.len(), b * spec.n_bwd_actions);
+    assert_eq!(flow.len(), b);
+    for i in 0..b {
+        let mut p = 0.0f64;
+        for j in 0..spec.n_actions {
+            let lp = fwd_logp[i * spec.n_actions + j] as f64;
+            if fwd_mask[i * spec.n_actions + j] != 0.0 {
+                p += lp.exp();
+            } else {
+                assert!(lp < -1e20, "illegal action got finite logp");
+            }
+        }
+        assert!((p - 1.0).abs() < 1e-4, "row {i} sums to {p}");
+    }
+    let _ = ctx.obs.len();
+}
+
+#[test]
+fn forward_rollout_produces_consistent_batches() {
+    let env = small_env();
+    let art = Artifact::load(&artifacts_dir(), "hypergrid_small.tb").unwrap();
+    let ts = art.init_state().unwrap();
+    let mut ctx = RolloutCtx::for_artifact(&art);
+    let mut rng = Rng::new(0);
+    let (batch, objs) =
+        forward_rollout(&env, &art, &ts, &mut ctx, &mut rng, 0.1, &ExtraSource::None).unwrap();
+    let spec = env.spec();
+    assert_eq!(objs.len(), art.batch());
+    for i in 0..art.batch() {
+        let len = batch.length[i] as usize;
+        assert!(len >= 1 && len <= spec.t_max);
+        // log_reward matches the extracted object's reward.
+        let want = env.log_reward_obj(&objs[i]) as f32;
+        assert!((batch.log_reward[i] - want).abs() < 1e-4);
+        // Actions within range; padded entries zeroed.
+        for t in 0..len {
+            let a = batch.fwd_actions[i * spec.t_max + t];
+            assert!(a >= 0 && (a as usize) < spec.n_actions);
+        }
+        assert!(batch.log_pf[i] <= 0.0);
+        assert!(batch.log_pb[i] <= 1e-9);
+    }
+}
+
+#[test]
+fn train_step_runs_and_loss_decreases_with_training() {
+    let env = small_env();
+    let art = Artifact::load(&artifacts_dir(), "hypergrid_small.tb").unwrap();
+    let mut trainer = Trainer::new(&env, &art, 7, EpsSchedule::Constant(0.05)).unwrap();
+    let mut first = Vec::new();
+    let mut last = Vec::new();
+    for i in 0..120 {
+        let (stats, _) = trainer.train_iter(&ExtraSource::None).unwrap();
+        assert!(stats.loss.is_finite());
+        if i < 20 {
+            first.push(stats.loss as f64);
+        }
+        if i >= 100 {
+            last.push(stats.loss as f64);
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    assert!(
+        mean(&last) < mean(&first),
+        "TB loss should trend down: {} -> {}",
+        mean(&first),
+        mean(&last)
+    );
+}
+
+#[test]
+fn training_improves_tv_against_exact_target() {
+    let env = small_env();
+    let art = Artifact::load(&artifacts_dir(), "hypergrid_small.tb").unwrap();
+    // Exact target over the 64 terminal states.
+    let n_states = env.num_terminal_states();
+    let logs: Vec<f64> = (0..n_states)
+        .map(|idx| env.log_reward_obj(&env.unflatten(idx)))
+        .collect();
+    let exact = softmax_from_logs(&logs);
+
+    let mut trainer = Trainer::new(&env, &art, 3, EpsSchedule::none()).unwrap();
+    let sample_tv = |tr: &mut Trainer<HypergridEnv<HypergridReward>>| -> f64 {
+        let mut counts = vec![0u64; n_states];
+        for _ in 0..40 {
+            for obj in tr.sample_objs().unwrap() {
+                counts[tr.env.flat_index(&obj)] += 1;
+            }
+        }
+        tv_from_counts(&exact, &counts)
+    };
+    let tv_before = sample_tv(&mut trainer);
+    for _ in 0..400 {
+        trainer.train_iter(&ExtraSource::None).unwrap();
+    }
+    let tv_after = sample_tv(&mut trainer);
+    assert!(
+        tv_after < tv_before - 0.05,
+        "training should reduce TV: {tv_before:.3} -> {tv_after:.3}"
+    );
+}
+
+#[test]
+fn db_and_subtb_artifacts_train() {
+    let env = small_env();
+    for loss in ["db", "subtb"] {
+        let art = Artifact::load(&artifacts_dir(), &format!("hypergrid_small.{loss}")).unwrap();
+        let mut trainer = Trainer::new(&env, &art, 11, EpsSchedule::none()).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..40 {
+            let (stats, _) = trainer.train_iter(&ExtraSource::None).unwrap();
+            assert!(stats.loss.is_finite(), "{loss} loss not finite");
+            losses.push(stats.loss as f64);
+        }
+        let head = losses[..10].iter().sum::<f64>() / 10.0;
+        let tail = losses[30..].iter().sum::<f64>() / 10.0;
+        assert!(tail < head, "{loss}: {head} -> {tail}");
+    }
+}
+
+#[test]
+fn backward_rollouts_score_finite_and_invert() {
+    let env = small_env();
+    let art = Artifact::load(&artifacts_dir(), "hypergrid_small.tb").unwrap();
+    let ts = art.init_state().unwrap();
+    let mut ctx = RolloutCtx::for_artifact(&art);
+    let mut rng = Rng::new(5);
+    // Build some terminal objects.
+    let objs: Vec<Vec<i32>> = vec![vec![0, 0], vec![3, 7], vec![7, 7], vec![2, 5]];
+    let scores = backward_rollout_score(&env, &art, &ts, &mut ctx, &mut rng, &objs).unwrap();
+    assert_eq!(scores.len(), objs.len());
+    for (i, (log_pf, log_pb, len)) in scores.iter().enumerate() {
+        assert!(log_pf.is_finite() && *log_pf <= 0.0);
+        assert!(log_pb.is_finite() && *log_pb <= 1e-9);
+        // Trajectory length = |coords|₁ + 1 (the stop-undo).
+        let want = objs[i].iter().map(|&c| c as usize).sum::<usize>() + 1;
+        assert_eq!(*len, want, "obj {i}");
+    }
+}
+
+#[test]
+fn log_p_theta_hat_normalizes_for_tiny_grid() {
+    // For an *untrained* policy P̂_θ is still a distribution in expectation;
+    // check Σ_x exp(log P̂_θ(x)) ≈ 1 over the full 64-state space with
+    // enough samples (MC noise bounded).
+    let env = small_env();
+    let art = Artifact::load(&artifacts_dir(), "hypergrid_small.tb").unwrap();
+    let ts = art.init_state().unwrap();
+    let mut ctx = RolloutCtx::for_artifact(&art);
+    let mut rng = Rng::new(6);
+    let mut total = 0.0f64;
+    for idx in 0..env.num_terminal_states() {
+        let obj = env.unflatten(idx);
+        let lp = log_p_theta_hat(&env, &art, &ts, &mut ctx, &mut rng, &obj, 16).unwrap();
+        total += lp.exp();
+    }
+    assert!(
+        (total - 1.0).abs() < 0.25,
+        "Σ P̂_θ = {total} (should be ≈ 1)"
+    );
+}
