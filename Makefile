@@ -1,0 +1,20 @@
+# Convenience targets. `cargo build --release && cargo test -q` is the
+# tier-1 gate and needs no artifacts; `make artifacts` requires the JAX
+# toolchain (see python/compile) and enables the artifact-backed
+# integration tests and training benches.
+
+ARTIFACTS_DIR := rust/artifacts
+
+.PHONY: artifacts test bench-serve clean-artifacts
+
+artifacts:
+	cd python && python -m compile.aot --preset default --out ../$(ARTIFACTS_DIR)
+
+test:
+	cargo build --release && cargo test -q
+
+bench-serve:
+	cargo bench --bench serve_qps
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS_DIR)

@@ -16,6 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 M_BLOCK = 128
 N_BLOCK = 128
@@ -78,7 +79,7 @@ def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, act: str = "relu") -> 
         ],
         out_specs=pl.BlockSpec((M_BLOCK, N_BLOCK), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
-        scratch_shapes=[pl.MemorySpace.ANY((M_BLOCK, N_BLOCK), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((M_BLOCK, N_BLOCK), jnp.float32)],
         interpret=True,
     )(x_p, w_p, b_p)
     return out[:m, :n]

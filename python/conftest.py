@@ -1,0 +1,29 @@
+"""Pytest bootstrap for the L2 (JAX/Pallas) test suite.
+
+Living at ``python/``, this file puts the ``compile`` package on ``sys.path``
+for ``python -m pytest python/tests`` invocations from the repository root,
+and degrades gracefully in environments missing parts of the toolchain
+(the Rust tier-1 gate runs in offline images): without JAX/numpy the whole
+suite is skipped; without ``hypothesis`` only the property-based kernel
+tests are.
+"""
+
+import importlib.util
+import warnings
+
+
+def _missing(*mods):
+    return [m for m in mods if importlib.util.find_spec(m) is None]
+
+
+collect_ignore_glob = []
+
+_core = _missing("jax", "numpy")
+if _core:
+    warnings.warn(
+        "skipping python/tests collection: missing dependencies: " + ", ".join(_core)
+    )
+    collect_ignore_glob = ["tests/test_*.py"]
+elif _missing("hypothesis"):
+    warnings.warn("skipping tests/test_kernels.py: hypothesis not installed")
+    collect_ignore_glob = ["tests/test_kernels.py"]

@@ -1,0 +1,211 @@
+//! serve_qps — sampling throughput (objects/second) of the continuous-
+//! batching serve engine vs the padded `forward_rollout` baseline, on a
+//! mixed-length workload: hypergrid with t_max ≫ typical trajectory length,
+//! so a padded batch spends most of its dispatches dragging finished rows
+//! along while the slowest trajectory drains.
+//!
+//! Both paths share the same host-side [`UniformPolicy`] with an identical
+//! synthetic fixed-shape dispatch cost (the cost of one dispatch does not
+//! depend on how many rows are live — the defining property of an
+//! accelerator dispatch), so the measured ratio isolates the *scheduling*
+//! effect: slot refill vs padding. No AOT artifacts required.
+//!
+//! Run:   cargo bench --bench serve_qps
+//! Env:   GFNX_SERVE_B        slot-table width / batch (default 64)
+//!        GFNX_SERVE_H        hypergrid side (default 48 → t_max 95)
+//!        GFNX_SERVE_OBJS     objects per timed window (default 4096)
+//!        GFNX_SERVE_SYNTH    synthetic dispatch-work rounds (default 8)
+//!        GFNX_BENCH_REPEATS  timed windows (default 5)
+//!
+//! Emits `BENCH_serve.json` (see `bench::harness::BenchJson`).
+
+use gfnx::bench::harness::{itps_json, measure_items_per_sec, BenchJson, BenchTable};
+use gfnx::coordinator::rollout::{forward_rollout_with_policy, ExtraSource, RolloutCtx};
+use gfnx::envs::hypergrid::HypergridEnv;
+use gfnx::envs::VecEnv;
+use gfnx::reward::hypergrid::HypergridReward;
+use gfnx::runtime::policy::{BatchPolicy, PolicyShape, UniformPolicy};
+use gfnx::serve::{sample_stream, SampleRequest, SamplerService, TrajJob};
+use gfnx::util::json::Json;
+use gfnx::util::rng::Rng;
+use gfnx::util::stats::ItPerSec;
+
+fn envv(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env(h: usize) -> HypergridEnv<HypergridReward> {
+    HypergridEnv::new(2, h, HypergridReward::standard(h))
+}
+
+fn main() {
+    let b = envv("GFNX_SERVE_B", 64);
+    let h = envv("GFNX_SERVE_H", 48);
+    let objs_per_window = envv("GFNX_SERVE_OBJS", 4096);
+    let synth = envv("GFNX_SERVE_SYNTH", 8);
+    let repeats = envv("GFNX_BENCH_REPEATS", 5);
+
+    let e = env(h);
+    let spec = e.spec();
+    let shape = PolicyShape::of_env(&e, b);
+    println!(
+        "workload: hypergrid 2d side={h} (t_max={}), B={b}, {} objs/window, synth={synth}",
+        spec.t_max, objs_per_window
+    );
+
+    // --- Padded baseline: forward_rollout, B objects per drain. ----------
+    let mut padded_dispatch_note = 0u64;
+    let padded = {
+        let mut policy = UniformPolicy::with_work(shape, synth);
+        let mut ctx = RolloutCtx::for_shape(&shape);
+        let mut rng = Rng::new(1);
+        measure_items_per_sec(1, repeats, || {
+            let mut produced = 0usize;
+            while produced < objs_per_window {
+                let (batch, objs) = forward_rollout_with_policy(
+                    &e,
+                    &mut policy,
+                    &mut ctx,
+                    &mut rng,
+                    0.0,
+                    &ExtraSource::None,
+                )
+                .unwrap();
+                // Dispatches in a padded drain = the slowest row's length.
+                padded_dispatch_note += batch.length.iter().copied().max().unwrap_or(0) as u64;
+                produced += objs.len();
+            }
+            produced
+        })
+    };
+
+    // --- Continuous batching: same thread, same policy economics. --------
+    let mut refill_stats = gfnx::serve::StreamStats::default();
+    let refill = {
+        let mut policy = UniformPolicy::with_work(shape, synth);
+        let mut window = 0u64;
+        measure_items_per_sec(1, repeats, || {
+            let seed_base = 10_000 * window;
+            window += 1;
+            let mut next = 0usize;
+            let mut produced = 0usize;
+            let stats = sample_stream(
+                &e,
+                &mut policy,
+                || {
+                    if next < objs_per_window {
+                        let j = TrajJob {
+                            request: 0,
+                            traj_index: next,
+                            seed: gfnx::serve::traj_seed(seed_base, next as u64),
+                        };
+                        next += 1;
+                        Some(j)
+                    } else {
+                        None
+                    }
+                },
+                |_r| produced += 1,
+            )
+            .unwrap();
+            refill_stats.merge(&stats);
+            produced
+        })
+    };
+
+    // --- Full service (worker thread + queue + tickets). ------------------
+    let service = {
+        let svc: SamplerService<Vec<i32>> = SamplerService::spawn(env(h), move || {
+            Ok(Box::new(UniformPolicy::with_work(shape, synth)) as Box<dyn BatchPolicy>)
+        });
+        let n_requests = 8;
+        let per_request = objs_per_window / n_requests;
+        let mut window = 0u64;
+        let r = measure_items_per_sec(1, repeats, || {
+            window += 1;
+            let tickets: Vec<_> = (0..n_requests)
+                .map(|k| {
+                    svc.submit(SampleRequest {
+                        n_samples: per_request,
+                        seed: window * 1000 + k as u64,
+                    })
+                })
+                .collect();
+            tickets.into_iter().map(|t| t.wait().unwrap().len()).sum()
+        });
+        let snap = svc.stats();
+        svc.shutdown();
+        (r, snap)
+    };
+
+    let speedup = refill.mean / padded.mean;
+    let occupancy = refill_stats.occupancy();
+
+    let mut table = BenchTable::new(
+        "serve_qps — objects/second, padded rollout vs continuous batching",
+        &["Mode", "objs/s", "Occupancy", "Speedup"],
+    );
+    table.row(&[
+        "padded forward_rollout".to_string(),
+        padded.to_string(),
+        "—".to_string(),
+        "1.0x".to_string(),
+    ]);
+    table.row(&[
+        "slot-refill engine".to_string(),
+        refill.to_string(),
+        format!("{:.1}%", 100.0 * occupancy),
+        format!("{speedup:.2}x"),
+    ]);
+    table.row(&[
+        "service (thread+queue)".to_string(),
+        service.0.to_string(),
+        format!("{:.1}%", 100.0 * service.1.occupancy()),
+        format!("{:.2}x", service.0.mean / padded.mean),
+    ]);
+    table.print();
+
+    let mut bj = BenchJson::new("serve");
+    bj.meta("env", Json::Str(format!("hypergrid_2d_{h}")));
+    bj.meta("t_max", Json::Num(spec.t_max as f64));
+    bj.meta("batch", Json::Num(b as f64));
+    bj.meta("objs_per_window", Json::Num(objs_per_window as f64));
+    bj.meta("synth_work", Json::Num(synth as f64));
+    bj.meta("repeats", Json::Num(repeats as f64));
+    bj.meta("padded_dispatches_total", Json::Num(padded_dispatch_note as f64));
+    bj.meta("refill_dispatches_total", Json::Num(refill_stats.dispatches as f64));
+    bj.row(row_json("padded_forward_rollout", &padded, None, 1.0));
+    bj.row(row_json("slot_refill_engine", &refill, Some(occupancy), speedup));
+    bj.row(row_json(
+        "sampler_service",
+        &service.0,
+        Some(service.1.occupancy()),
+        service.0.mean / padded.mean,
+    ));
+    match bj.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_serve.json write failed: {e}"),
+    }
+
+    println!(
+        "\ncontinuous batching speedup over padded rollout: {speedup:.2}x \
+         (target ≥ 1.3x; slot occupancy {:.1}%)",
+        100.0 * occupancy
+    );
+    if speedup < 1.3 {
+        eprintln!("WARNING: speedup below the 1.3x acceptance bar");
+    }
+}
+
+fn row_json(mode: &str, qps: &ItPerSec, occupancy: Option<f64>, speedup: f64) -> Json {
+    let mut fields = vec![
+        ("mode", Json::Str(mode.to_string())),
+        ("objs_per_sec", itps_json(qps)),
+        ("speedup_vs_padded", Json::Num(speedup)),
+    ];
+    fields.push((
+        "occupancy",
+        occupancy.map(Json::Num).unwrap_or(Json::Null),
+    ));
+    Json::obj(fields)
+}

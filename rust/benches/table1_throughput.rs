@@ -10,7 +10,7 @@
 //! Run: `cargo bench --bench table1_throughput`
 //! Env: GFNX_BENCH_REPEATS / GFNX_BENCH_ITERS override the measurement size.
 
-use gfnx::bench::harness::{measure_it_per_sec, BenchTable};
+use gfnx::bench::harness::{itps_json, measure_it_per_sec, BenchJson, BenchTable};
 use gfnx::coordinator::baseline::BaselineTrainer;
 use gfnx::coordinator::config::{artifacts_dir, run_config};
 use gfnx::coordinator::rollout::ExtraSource;
@@ -21,6 +21,12 @@ use gfnx::util::stats::ItPerSec;
 
 fn envv(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Single source of the measurement knobs: (repeats, iters). Used by both
+/// the measurement loop and the JSON meta emission so they cannot diverge.
+fn bench_params() -> (usize, usize) {
+    (envv("GFNX_BENCH_REPEATS", 3), envv("GFNX_BENCH_ITERS", 8))
 }
 
 struct Row {
@@ -36,8 +42,7 @@ fn bench_pair<E: VecEnv>(
     extra: &ExtraSource<'_, E>,
     with_baseline: bool,
 ) -> (Option<ItPerSec>, ItPerSec) {
-    let repeats = envv("GFNX_BENCH_REPEATS", 3);
-    let iters = envv("GFNX_BENCH_ITERS", 8);
+    let (repeats, iters) = bench_params();
     let art = Artifact::load(&artifacts_dir(), artifact).expect("artifact (run `make artifacts`)");
     let (cfg_name, loss) = artifact.split_once('.').unwrap();
     let rc = run_config(cfg_name, loss);
@@ -170,4 +175,32 @@ fn main() {
         ]);
     }
     table.print();
+
+    // --- Machine-readable emission (perf trajectory). ----------------------
+    use gfnx::util::json::Json;
+    let mut bj = BenchJson::new("table1");
+    let (repeats, iters) = bench_params();
+    bj.meta("repeats", Json::Num(repeats as f64));
+    bj.meta("iters", Json::Num(iters as f64));
+    for r in &rows {
+        bj.row(Json::obj(vec![
+            ("env", Json::Str(r.env.to_string())),
+            ("objective", Json::Str(r.objective.to_string())),
+            (
+                "baseline_it_per_sec",
+                r.baseline.as_ref().map(itps_json).unwrap_or(Json::Null),
+            ),
+            ("fast_it_per_sec", itps_json(&r.fast)),
+            (
+                "speedup",
+                r.baseline
+                    .map(|b| Json::Num(r.fast.mean / b.mean))
+                    .unwrap_or(Json::Null),
+            ),
+        ]));
+    }
+    match bj.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_table1.json write failed: {e}"),
+    }
 }

@@ -1,9 +1,12 @@
 //! Measurement harness for the `cargo bench` targets (no `criterion` in the
 //! image, so we implement the part we need: warmup, repeated timed windows,
-//! it/s mean ± 3·SEM, and a markdown table printer shaped like the paper's
-//! Tables 1–2).
+//! it/s mean ± 3·SEM, a markdown table printer shaped like the paper's
+//! Tables 1–2, and machine-readable `BENCH_<name>.json` emission feeding
+//! the perf trajectory).
 
+use crate::util::json::Json;
 use crate::util::stats::ItPerSec;
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// Measure iterations/second of `step` (one call = one training iteration).
@@ -37,6 +40,107 @@ pub fn time_once<F: FnOnce()>(f: F) -> f64 {
     let t0 = Instant::now();
     f();
     t0.elapsed().as_secs_f64()
+}
+
+/// Measure items/second of a closure that returns how many items it
+/// produced per call (QPS mode: one call = one sampling drain, the return
+/// value = objects sampled). Same windowing discipline as
+/// [`measure_it_per_sec`]: `warmup` untimed calls, then `repeats` timed
+/// windows of one call each, summarized as mean ± 3·SEM.
+pub fn measure_items_per_sec<F: FnMut() -> usize>(
+    warmup: usize,
+    repeats: usize,
+    mut run: F,
+) -> ItPerSec {
+    for _ in 0..warmup {
+        run();
+    }
+    let mut samples = Vec::with_capacity(repeats);
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        let items = run();
+        let dt = t0.elapsed().as_secs_f64();
+        samples.push(items as f64 / dt.max(1e-12));
+    }
+    ItPerSec::from_samples(&samples)
+}
+
+/// JSON form of an [`ItPerSec`] summary.
+pub fn itps_json(v: &ItPerSec) -> Json {
+    Json::obj(vec![("mean", Json::Num(v.mean)), ("sem3", Json::Num(v.sem3))])
+}
+
+/// Machine-readable bench emission: one JSON document per bench binary,
+/// written to `BENCH_<name>.json` (in `GFNX_BENCH_JSON_DIR`, defaulting to
+/// the working directory). The document is
+/// `{"bench": <name>, "meta": {...}, "rows": [...]}` with caller-defined
+/// row objects, so downstream tooling can track the perf trajectory across
+/// commits without parsing markdown tables.
+pub struct BenchJson {
+    name: String,
+    meta: Vec<(String, Json)>,
+    rows: Vec<Json>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> BenchJson {
+        BenchJson { name: name.to_string(), meta: Vec::new(), rows: Vec::new() }
+    }
+
+    /// Attach a top-level metadata field (workload knobs, host info, …).
+    pub fn meta(&mut self, key: &str, value: Json) {
+        self.meta.push((key.to_string(), value));
+    }
+
+    /// Append one result row.
+    pub fn row(&mut self, row: Json) {
+        self.rows.push(row);
+    }
+
+    /// Output path: `$GFNX_BENCH_JSON_DIR/BENCH_<name>.json` (dir defaults
+    /// to `.`). The env var is read here, in bench binaries only — tests
+    /// use [`BenchJson::write_to`] and never touch process env.
+    pub fn path(&self) -> PathBuf {
+        let dir = std::env::var("GFNX_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        PathBuf::from(dir).join(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Render the document.
+    pub fn render(&self) -> String {
+        let meta = Json::Obj(
+            self.meta.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+        );
+        Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("meta", meta),
+            ("rows", Json::Arr(self.rows.clone())),
+        ])
+        .to_string()
+    }
+
+    /// Write the document to the default location; returns the path.
+    pub fn write(&self) -> anyhow::Result<PathBuf> {
+        let path = self.path();
+        self.write_at(&path)?;
+        Ok(path)
+    }
+
+    /// Write the document into an explicit directory.
+    pub fn write_to(&self, dir: &std::path::Path) -> anyhow::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        self.write_at(&path)?;
+        Ok(path)
+    }
+
+    fn write_at(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.render())?;
+        Ok(())
+    }
 }
 
 /// A markdown results table, printed at the end of every bench binary.
@@ -128,5 +232,36 @@ mod tests {
     fn table_checks_arity() {
         let mut t = BenchTable::new("x", &["a", "b"]);
         t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn items_per_sec_counts_items() {
+        let mut calls = 0usize;
+        let r = measure_items_per_sec(1, 3, || {
+            calls += 1;
+            128
+        });
+        assert_eq!(calls, 4);
+        assert!(r.mean > 0.0);
+    }
+
+    #[test]
+    fn bench_json_renders_and_writes() {
+        let dir = std::env::temp_dir().join("gfnx_bench_json_test");
+        let mut bj = BenchJson::new("unit");
+        bj.meta("batch", Json::Num(64.0));
+        bj.row(Json::obj(vec![
+            ("mode", Json::Str("padded".into())),
+            ("qps", itps_json(&ItPerSec { mean: 100.0, sem3: 1.5 })),
+        ]));
+        let text = bj.render();
+        assert!(text.contains("\"bench\":\"unit\""));
+        assert!(text.contains("\"mode\":\"padded\""));
+        let path = bj.write_to(&dir).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&back).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("unit"));
+        assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -1,12 +1,19 @@
-//! Vectorized rollouts driven by the AOT policy graph.
+//! Vectorized rollouts driven by one fixed-shape policy dispatch per step.
 //!
 //! Forward rollouts sample trajectories from ε-perturbed P_F; backward
 //! rollouts start from injected terminal objects and walk P_B (used for the
 //! Monte-Carlo P̂_θ estimator and EB-GFN's data-driven trajectories). Both
-//! produce a [`TrajBatch`] padded to the artifact's fixed [B, T+1] layout.
+//! produce a [`TrajBatch`] padded to the fixed [B, T+1] layout.
+//!
+//! All rollouts are generic over [`BatchPolicy`] (`*_with_policy` variants);
+//! the original artifact-bound entry points are thin adapters over
+//! [`ArtifactPolicy`], so the training hot path is unchanged while tests,
+//! benches and the serve subsystem can drive the same code with host-side
+//! policies and no AOT artifacts.
 
 use crate::envs::{VecEnv, NOOP};
 use crate::runtime::artifact::{literal_f32, literal_i32, Artifact};
+use crate::runtime::policy::{ArtifactPolicy, BatchPolicy, PolicyShape};
 use crate::runtime::state::TrainState;
 use crate::util::rng::Rng;
 use xla::Literal;
@@ -127,34 +134,47 @@ pub struct RolloutCtx {
 }
 
 impl RolloutCtx {
-    pub fn for_artifact(art: &Artifact) -> Self {
-        let c = &art.manifest.config;
+    /// Buffers sized for an explicit dispatch shape.
+    pub fn new(b: usize, obs_dim: usize, n_actions: usize, n_bwd_actions: usize) -> Self {
         RolloutCtx {
-            obs: vec![0.0; c.batch * c.obs_dim],
-            fwd_mask: vec![0.0; c.batch * c.n_actions],
-            bwd_mask: vec![0.0; c.batch * c.n_bwd_actions],
-            mask_scratch: vec![false; c.n_actions],
-            bwd_scratch: vec![false; c.n_bwd_actions],
+            obs: vec![0.0; b * obs_dim],
+            fwd_mask: vec![0.0; b * n_actions],
+            bwd_mask: vec![0.0; b * n_bwd_actions],
+            mask_scratch: vec![false; n_actions],
+            bwd_scratch: vec![false; n_bwd_actions],
         }
     }
 
+    pub fn for_artifact(art: &Artifact) -> Self {
+        let c = &art.manifest.config;
+        Self::new(c.batch, c.obs_dim, c.n_actions, c.n_bwd_actions)
+    }
+
+    pub fn for_shape(shape: &PolicyShape) -> Self {
+        Self::new(shape.batch, shape.obs_dim, shape.n_actions, shape.n_bwd_actions)
+    }
+
     /// Stage obs + masks of the current env states into the policy-call
-    /// buffers; rows that are `skip` get a sentinel (obs zeros kept from the
-    /// last write, action-0-legal masks) so the masked softmax stays finite.
-    fn stage<E: VecEnv>(&mut self, env: &E, state: &E::State, skip: &[bool]) {
+    /// buffers; rows that are `skip` get a sentinel (zeroed obs,
+    /// action-0-legal masks) so the masked softmax stays finite without
+    /// staging stale or terminal-state values into dead rows. This is the
+    /// single definition of the dead-row convention — the serve slot engine
+    /// reuses it for idle slots.
+    pub(crate) fn stage<E: VecEnv>(&mut self, env: &E, state: &E::State, skip: &[bool]) {
         let spec = env.spec();
         let b = skip.len();
         for i in 0..b {
             let obs_row = &mut self.obs[i * spec.obs_dim..(i + 1) * spec.obs_dim];
-            env.obs_into(state, i, obs_row);
             let fm = &mut self.fwd_mask[i * spec.n_actions..(i + 1) * spec.n_actions];
             let bm = &mut self.bwd_mask[i * spec.n_bwd_actions..(i + 1) * spec.n_bwd_actions];
             if skip[i] {
+                obs_row.iter_mut().for_each(|x| *x = 0.0);
                 fm.iter_mut().for_each(|x| *x = 0.0);
                 bm.iter_mut().for_each(|x| *x = 0.0);
                 fm[0] = 1.0;
                 bm[0] = 1.0;
             } else {
+                env.obs_into(state, i, obs_row);
                 env.fwd_mask_into(state, i, &mut self.mask_scratch);
                 for (dst, &m) in fm.iter_mut().zip(&self.mask_scratch) {
                     *dst = if m { 1.0 } else { 0.0 };
@@ -192,23 +212,21 @@ fn fill_extra<E: VecEnv>(
 /// `eps` is the ε-uniform exploration rate; `log_pf` records the *policy's*
 /// log-probabilities of the chosen actions (not the ε-mixture), as the
 /// objectives require.
-#[allow(clippy::too_many_arguments)]
-pub fn forward_rollout<E: VecEnv>(
+pub fn forward_rollout_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>(
     env: &E,
-    art: &Artifact,
-    ts: &TrainState,
+    policy: &mut P,
     ctx: &mut RolloutCtx,
     rng: &mut Rng,
     eps: f64,
     extra: &ExtraSource<'_, E>,
 ) -> anyhow::Result<(TrajBatch, Vec<E::Obj>)> {
     let spec = env.spec();
-    let cfg = &art.manifest.config;
-    let b = cfg.batch;
-    debug_assert_eq!(spec.obs_dim, cfg.obs_dim, "env/artifact obs_dim mismatch");
-    debug_assert_eq!(spec.n_actions, cfg.n_actions);
-    debug_assert_eq!(spec.t_max, cfg.t_max);
-    let t1 = cfg.t_max + 1;
+    let shape = policy.shape();
+    let b = shape.batch;
+    debug_assert_eq!(spec.obs_dim, shape.obs_dim, "env/policy obs_dim mismatch");
+    debug_assert_eq!(spec.n_actions, shape.n_actions);
+    debug_assert_eq!(spec.t_max, shape.t_max);
+    let t1 = shape.t_max + 1;
     let mut batch = TrajBatch::new(b, t1, spec.obs_dim, spec.n_actions, spec.n_bwd_actions);
     let mut state = env.reset(b);
     let mut done = vec![false; b];
@@ -218,7 +236,6 @@ pub fn forward_rollout<E: VecEnv>(
         if done.iter().all(|&d| d) {
             break; // padding slots are filled from the terminal staging below
         }
-        let _ = t;
         ctx.stage(env, &state, &done);
         // Copy staged rows into the batch at slot t (no intermediate
         // allocations — this runs once per env step).
@@ -235,7 +252,7 @@ pub fn forward_rollout<E: VecEnv>(
         let active: Vec<bool> = done.iter().map(|&d| !d).collect();
         fill_extra(extra, &state, &mut batch, t, &active);
 
-        let (fwd_logp, _bwd_logp, _flow) = ts.policy(art, &ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
+        let (fwd_logp, _bwd_logp, _flow) = policy.eval(&ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
         for i in 0..b {
             if done[i] {
                 actions[i] = NOOP;
@@ -315,22 +332,36 @@ pub fn forward_rollout<E: VecEnv>(
     Ok((batch, objs))
 }
 
-/// Walk backward from terminal objects and assemble a **forward-oriented**
-/// trajectory batch (EB-GFN trains the GFlowNet on backward walks from data
-/// samples; paper §B.5). Also fills `log_pf` / `log_pb` of the walks.
-pub fn backward_rollout_to_batch<E: VecEnv>(
+/// Artifact-bound forward rollout (the training hot path).
+#[allow(clippy::too_many_arguments)]
+pub fn forward_rollout<E: VecEnv>(
     env: &E,
     art: &Artifact,
     ts: &TrainState,
     ctx: &mut RolloutCtx,
     rng: &mut Rng,
+    eps: f64,
+    extra: &ExtraSource<'_, E>,
+) -> anyhow::Result<(TrajBatch, Vec<E::Obj>)> {
+    let mut policy = ArtifactPolicy { art, ts };
+    forward_rollout_with_policy(env, &mut policy, ctx, rng, eps, extra)
+}
+
+/// Walk backward from terminal objects and assemble a **forward-oriented**
+/// trajectory batch (EB-GFN trains the GFlowNet on backward walks from data
+/// samples; paper §B.5). Also fills `log_pf` / `log_pb` of the walks.
+pub fn backward_rollout_to_batch_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>(
+    env: &E,
+    policy: &mut P,
+    ctx: &mut RolloutCtx,
+    rng: &mut Rng,
     objs: &[E::Obj],
 ) -> anyhow::Result<(TrajBatch, Vec<E::Obj>)> {
     let spec = env.spec();
-    let cfg = &art.manifest.config;
-    let b = cfg.batch;
-    assert_eq!(objs.len(), b, "backward batch must fill the artifact batch");
-    let t1 = cfg.t_max + 1;
+    let shape = policy.shape();
+    let b = shape.batch;
+    assert_eq!(objs.len(), b, "backward batch must fill the policy batch");
+    let t1 = shape.t_max + 1;
 
     struct RowRec {
         obs: Vec<Vec<f32>>,
@@ -359,7 +390,7 @@ pub fn backward_rollout_to_batch<E: VecEnv>(
 
     for _t in 0..spec.t_max + 1 {
         ctx.stage(env, &state, &vec![false; b]);
-        let (fwd_logp, bwd_logp, _flow) = ts.policy(art, &ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
+        let (fwd_logp, bwd_logp, _flow) = policy.eval(&ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
         for i in 0..b {
             if pending[i] != NOOP {
                 recs[i].log_pf += fwd_logp[i * spec.n_actions + pending[i] as usize] as f64;
@@ -390,14 +421,14 @@ pub fn backward_rollout_to_batch<E: VecEnv>(
                 continue;
             }
             env.bwd_mask_into(&state, i, &mut ctx.bwd_scratch);
-            let ba = if cfg.uniform_pb {
+            let ba = if shape.uniform_pb {
                 rng.uniform_masked(&ctx.bwd_scratch) as i32
             } else {
                 let row = &bwd_logp[i * spec.n_bwd_actions..(i + 1) * spec.n_bwd_actions];
                 rng.categorical_masked(row, &ctx.bwd_scratch) as i32
             };
             actions[i] = ba;
-            recs[i].log_pb += if cfg.uniform_pb {
+            recs[i].log_pb += if shape.uniform_pb {
                 -((ctx.bwd_scratch.iter().filter(|&&m| m).count() as f64).ln())
             } else {
                 bwd_logp[i * spec.n_bwd_actions + ba as usize] as f64
@@ -416,7 +447,7 @@ pub fn backward_rollout_to_batch<E: VecEnv>(
     }
     if pending.iter().any(|&p| p != NOOP) {
         ctx.stage(env, &state, &vec![false; b]);
-        let (fwd_logp, _b, _f) = ts.policy(art, &ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
+        let (fwd_logp, _b, _f) = policy.eval(&ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
         for i in 0..b {
             if pending[i] != NOOP {
                 recs[i].log_pf += fwd_logp[i * spec.n_actions + pending[i] as usize] as f64;
@@ -478,21 +509,33 @@ pub fn backward_rollout_to_batch<E: VecEnv>(
     Ok((batch, objs.to_vec()))
 }
 
-/// Walk backward from terminal objects under P_B (uniform over legal
-/// parents), scoring Σ log P_B and Σ log P_F of the reversed trajectory.
-/// Returns per-row (log_pf, log_pb, length).
-pub fn backward_rollout_score<E: VecEnv>(
+/// Artifact-bound variant of [`backward_rollout_to_batch_with_policy`].
+pub fn backward_rollout_to_batch<E: VecEnv>(
     env: &E,
     art: &Artifact,
     ts: &TrainState,
     ctx: &mut RolloutCtx,
     rng: &mut Rng,
     objs: &[E::Obj],
+) -> anyhow::Result<(TrajBatch, Vec<E::Obj>)> {
+    let mut policy = ArtifactPolicy { art, ts };
+    backward_rollout_to_batch_with_policy(env, &mut policy, ctx, rng, objs)
+}
+
+/// Walk backward from terminal objects under P_B (uniform over legal
+/// parents), scoring Σ log P_B and Σ log P_F of the reversed trajectory.
+/// Returns per-row (log_pf, log_pb, length).
+pub fn backward_rollout_score_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>(
+    env: &E,
+    policy: &mut P,
+    ctx: &mut RolloutCtx,
+    rng: &mut Rng,
+    objs: &[E::Obj],
 ) -> anyhow::Result<Vec<(f64, f64, usize)>> {
     let spec = env.spec();
-    let cfg = &art.manifest.config;
-    let b = cfg.batch;
-    assert!(objs.len() <= b, "too many objects for artifact batch");
+    let shape = policy.shape();
+    let b = shape.batch;
+    assert!(objs.len() <= b, "too many objects for policy batch");
     // Pad with clones of the first object.
     let mut padded: Vec<E::Obj> = objs.to_vec();
     while padded.len() < b {
@@ -507,7 +550,7 @@ pub fn backward_rollout_score<E: VecEnv>(
 
     for _t in 0..spec.t_max + 1 {
         ctx.stage(env, &state, &vec![false; b]);
-        let (fwd_logp, bwd_logp, _flow) = ts.policy(art, &ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
+        let (fwd_logp, bwd_logp, _flow) = policy.eval(&ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
         // Score pending forward actions from the previous backward step.
         for i in 0..b {
             if pending[i] != NOOP {
@@ -525,14 +568,14 @@ pub fn backward_rollout_score<E: VecEnv>(
                 continue;
             }
             env.bwd_mask_into(&state, i, &mut ctx.bwd_scratch);
-            let ba = if cfg.uniform_pb {
+            let ba = if shape.uniform_pb {
                 rng.uniform_masked(&ctx.bwd_scratch) as i32
             } else {
                 let row = &bwd_logp[i * spec.n_bwd_actions..(i + 1) * spec.n_bwd_actions];
                 rng.categorical_masked(row, &ctx.bwd_scratch) as i32
             };
             actions[i] = ba;
-            scores[i].1 += if cfg.uniform_pb {
+            scores[i].1 += if shape.uniform_pb {
                 let cnt = ctx.bwd_scratch.iter().filter(|&&m| m).count() as f64;
                 -(cnt.ln())
             } else {
@@ -552,7 +595,7 @@ pub fn backward_rollout_score<E: VecEnv>(
     // scored with one more policy call.
     if pending.iter().any(|&p| p != NOOP) {
         ctx.stage(env, &state, &vec![false; b]);
-        let (fwd_logp, _b, _f) = ts.policy(art, &ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
+        let (fwd_logp, _b, _f) = policy.eval(&ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
         for i in 0..b {
             if pending[i] != NOOP {
                 scores[i].0 += fwd_logp[i * spec.n_actions + pending[i] as usize] as f64;
@@ -561,4 +604,183 @@ pub fn backward_rollout_score<E: VecEnv>(
     }
     scores.truncate(objs.len());
     Ok(scores)
+}
+
+/// Artifact-bound variant of [`backward_rollout_score_with_policy`].
+pub fn backward_rollout_score<E: VecEnv>(
+    env: &E,
+    art: &Artifact,
+    ts: &TrainState,
+    ctx: &mut RolloutCtx,
+    rng: &mut Rng,
+    objs: &[E::Obj],
+) -> anyhow::Result<Vec<(f64, f64, usize)>> {
+    let mut policy = ArtifactPolicy { art, ts };
+    backward_rollout_score_with_policy(env, &mut policy, ctx, rng, objs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::hypergrid::HypergridEnv;
+    use crate::reward::hypergrid::HypergridReward;
+    use crate::runtime::policy::UniformPolicy;
+
+    fn env() -> HypergridEnv<HypergridReward> {
+        HypergridEnv::new(2, 6, HypergridReward::standard(6))
+    }
+
+    fn rollout_batch(b: usize, seed: u64) -> (TrajBatch, Vec<Vec<i32>>) {
+        let e = env();
+        let shape = PolicyShape::of_env(&e, b);
+        let mut policy = UniformPolicy::new(shape);
+        let mut ctx = RolloutCtx::for_shape(&shape);
+        let mut rng = Rng::new(seed);
+        forward_rollout_with_policy(&e, &mut policy, &mut ctx, &mut rng, 0.0, &ExtraSource::None)
+            .unwrap()
+    }
+
+    #[test]
+    fn padding_slots_have_sentinel_masks() {
+        let (batch, objs) = rollout_batch(16, 3);
+        let e = env();
+        let spec = e.spec();
+        assert_eq!(objs.len(), 16);
+        for i in 0..batch.b {
+            let len = batch.length[i] as usize;
+            assert!(len >= 1 && len <= spec.t_max);
+            for t in len..batch.t1 {
+                let fm = &batch.fwd_masks
+                    [(i * batch.t1 + t) * spec.n_actions..(i * batch.t1 + t + 1) * spec.n_actions];
+                assert_eq!(fm[0], 1.0, "row {i} slot {t}: fm[0] sentinel");
+                assert_eq!(fm.iter().sum::<f32>(), 1.0, "row {i} slot {t}: single legal");
+                let bm = &batch.bwd_masks[(i * batch.t1 + t) * spec.n_bwd_actions
+                    ..(i * batch.t1 + t + 1) * spec.n_bwd_actions];
+                assert!(
+                    bm.iter().sum::<f32>() >= 1.0,
+                    "row {i} slot {t}: bwd mask must admit at least one action"
+                );
+                // Padding obs repeats the terminal observation.
+                let o_t = &batch.obs
+                    [(i * batch.t1 + t) * spec.obs_dim..(i * batch.t1 + t + 1) * spec.obs_dim];
+                let o_len = &batch.obs[(i * batch.t1 + len) * spec.obs_dim
+                    ..(i * batch.t1 + len + 1) * spec.obs_dim];
+                assert_eq!(o_t, o_len, "row {i} slot {t}: padded obs");
+            }
+            // log_pf of a uniform policy is the sum of -ln(legal counts) —
+            // strictly negative for any nonempty trajectory.
+            assert!(batch.log_pf[i] < 0.0);
+            assert!(batch.log_pb[i] <= 1e-9);
+        }
+    }
+
+    #[test]
+    fn skip_rows_are_staged_as_zeroed_sentinels() {
+        let e = env();
+        let spec = e.spec();
+        let mut ctx = RolloutCtx::new(2, spec.obs_dim, spec.n_actions, spec.n_bwd_actions);
+        let mut state = e.reset(2);
+        // Walk row 1 somewhere non-initial so stale values would be visible.
+        e.step(&mut state, &[crate::envs::NOOP, 0]);
+        ctx.stage(&e, &state, &[false, true]);
+        let row1_obs = &ctx.obs[spec.obs_dim..2 * spec.obs_dim];
+        assert!(row1_obs.iter().all(|&x| x == 0.0), "skip row obs must be zeroed");
+        let row1_fm = &ctx.fwd_mask[spec.n_actions..2 * spec.n_actions];
+        assert_eq!(row1_fm[0], 1.0);
+        assert_eq!(row1_fm.iter().sum::<f32>(), 1.0);
+        // The active row is staged normally (one-hot obs is non-zero).
+        assert!(ctx.obs[..spec.obs_dim].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn extra_to_deltas_telescopes() {
+        let mut batch = TrajBatch::new(2, 5, 1, 2, 1);
+        // Row 0: E(s_t) = t^2; row 1: constant.
+        for t in 0..5 {
+            batch.extra[t] = (t * t) as f32;
+            batch.extra[5 + t] = 7.0;
+        }
+        let before: Vec<f32> = batch.extra.clone();
+        batch.extra_to_deltas();
+        for t in 0..4 {
+            assert_eq!(batch.extra[t], before[t + 1] - before[t]);
+            assert_eq!(batch.extra[5 + t], 0.0);
+        }
+        assert_eq!(batch.extra[4], 0.0);
+        assert_eq!(batch.extra[9], 0.0);
+        // Telescoping: Σ deltas = E(s_T) − E(s_0).
+        let sum: f32 = batch.extra[..4].iter().sum();
+        assert_eq!(sum, before[4] - before[0]);
+    }
+
+    #[test]
+    fn backward_rollout_to_batch_is_forward_consistent() {
+        let e = env();
+        let spec = e.spec();
+        let b = 8;
+        let shape = PolicyShape::of_env(&e, b);
+        let mut policy = UniformPolicy::new(shape);
+        let mut ctx = RolloutCtx::for_shape(&shape);
+        let mut rng = Rng::new(11);
+        let objs: Vec<Vec<i32>> = (0..b as i32).map(|k| vec![k % 6, (k * 3) % 6]).collect();
+        let (batch, _) =
+            backward_rollout_to_batch_with_policy(&e, &mut policy, &mut ctx, &mut rng, &objs)
+                .unwrap();
+        // Replaying the recorded forward actions from s0 must retrace the
+        // recorded per-slot observations and terminate in the object.
+        let mut state = e.reset(b);
+        let mut obs = vec![0f32; spec.obs_dim];
+        let mut mask = vec![false; spec.n_actions];
+        for t in 0..spec.t_max {
+            for i in 0..b {
+                let len = batch.length[i] as usize;
+                if t > len {
+                    continue;
+                }
+                e.obs_into(&state, i, &mut obs);
+                let slot = &batch.obs
+                    [(i * batch.t1 + t) * spec.obs_dim..(i * batch.t1 + t + 1) * spec.obs_dim];
+                assert_eq!(obs.as_slice(), slot, "row {i} slot {t}: replayed obs");
+            }
+            let mut actions = vec![NOOP; b];
+            let mut any = false;
+            for i in 0..b {
+                let len = batch.length[i] as usize;
+                if t < len {
+                    let a = batch.fwd_actions[i * (batch.t1 - 1) + t];
+                    e.fwd_mask_into(&state, i, &mut mask);
+                    assert!(mask[a as usize], "row {i} slot {t}: recorded action illegal");
+                    // The recorded backward action must invert this step.
+                    assert_eq!(
+                        batch.bwd_actions[i * (batch.t1 - 1) + t],
+                        e.get_backward_action(&state, i, a),
+                        "row {i} slot {t}: bwd/fwd action pairing"
+                    );
+                    actions[i] = a;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+            e.step(&mut state, &actions);
+        }
+        for i in 0..b {
+            assert!(e.is_terminal(&state, i), "row {i}: replay must terminate");
+            assert_eq!(e.extract(&state, i), objs[i], "row {i}: replay object");
+            let want = e.log_reward_obj(&objs[i]) as f32;
+            assert!((batch.log_reward[i] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn forward_rollout_is_deterministic_in_seed() {
+        let (a, objs_a) = rollout_batch(8, 42);
+        let (b, objs_b) = rollout_batch(8, 42);
+        assert_eq!(objs_a, objs_b);
+        assert_eq!(a.fwd_actions, b.fwd_actions);
+        assert_eq!(a.log_pf, b.log_pf);
+        let (c, objs_c) = rollout_batch(8, 43);
+        assert!(objs_a != objs_c || a.fwd_actions != c.fwd_actions);
+    }
 }

@@ -8,7 +8,9 @@
 use super::explore::EpsSchedule;
 use super::rollout::{forward_rollout, ExtraSource, RolloutCtx};
 use crate::envs::VecEnv;
+use crate::runtime::policy::ArtifactPolicy;
 use crate::runtime::{Artifact, TrainState};
+use crate::serve::{sample_stream, traj_seed, TrajJob};
 use crate::util::rng::Rng;
 
 /// Per-iteration statistics.
@@ -86,7 +88,9 @@ impl<'a, E: VecEnv> Trainer<'a, E> {
     }
 
     /// Sample terminal objects from the current policy without training
-    /// (ε = 0). Used by evaluation loops.
+    /// (ε = 0). Used by evaluation loops. Always returns exactly one
+    /// artifact batch (`B` objects), padding dispatches until the slowest
+    /// trajectory terminates.
     pub fn sample_objs(&mut self) -> anyhow::Result<Vec<E::Obj>> {
         let (_batch, objs) = forward_rollout(
             self.env,
@@ -98,5 +102,39 @@ impl<'a, E: VecEnv> Trainer<'a, E> {
             &ExtraSource::None,
         )?;
         Ok(objs)
+    }
+
+    /// [`Trainer::sample_objs`]-compatible eval sampling through the
+    /// continuous-batching slot engine (see [`crate::serve`]): draws exactly
+    /// `n` objects (any `n`, not just multiples of `B`) while keeping every
+    /// policy dispatch saturated via slot refill. Deterministic in `seed` —
+    /// trajectory `i` always uses the RNG stream `traj_seed(seed, i)`,
+    /// independent of batch composition.
+    pub fn sample_objs_served(&mut self, n: usize, seed: u64) -> anyhow::Result<Vec<E::Obj>> {
+        let mut policy = ArtifactPolicy { art: self.art, ts: &self.state };
+        let mut next = 0usize;
+        let mut outs: Vec<Option<E::Obj>> = (0..n).map(|_| None).collect();
+        sample_stream(
+            self.env,
+            &mut policy,
+            || {
+                if next < n {
+                    let job = TrajJob {
+                        request: 0,
+                        traj_index: next,
+                        seed: traj_seed(seed, next as u64),
+                    };
+                    next += 1;
+                    Some(job)
+                } else {
+                    None
+                }
+            },
+            |r| outs[r.traj_index] = Some(r.obj),
+        )?;
+        Ok(outs
+            .into_iter()
+            .map(|o| o.expect("serve engine dropped a trajectory"))
+            .collect())
     }
 }

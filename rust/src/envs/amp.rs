@@ -61,4 +61,9 @@ mod tests {
         testkit::check_inject_extract_roundtrip(&e, 8, 73);
         testkit::check_backward_rollout_reaches_s0(&e, 8, 74);
     }
+
+    #[test]
+    fn reset_row_matches_fresh() {
+        testkit::check_reset_row(&amp_env_sized(0, 1e-3, 8), 8, 75);
+    }
 }

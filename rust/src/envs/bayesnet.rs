@@ -115,6 +115,12 @@ impl<R: RewardModule<u64>> VecEnv for BayesNetEnv<R> {
         }
     }
 
+    fn reset_row(&self, state: &mut BayesNetState, idx: usize) {
+        state.adj[idx] = 0;
+        state.reach[idx] = reach_identity(self.d);
+        state.terminal[idx] = false;
+    }
+
     fn batch_len(&self, state: &BayesNetState) -> usize {
         state.terminal.len()
     }
@@ -375,6 +381,21 @@ mod tests {
         testkit::check_masks_and_obs(&e, 8, 82);
         testkit::check_inject_extract_roundtrip(&e, 8, 83);
         testkit::check_backward_rollout_reaches_s0(&e, 8, 84);
+    }
+
+    #[test]
+    fn reset_row_matches_fresh() {
+        testkit::check_reset_row(&env(4), 8, 85);
+        // Refill must restore the identity reachability, not just clear adj.
+        let e = env(3);
+        let mut st = e.reset(1);
+        e.step(&mut st, &[1]); // 0→1
+        e.step(&mut st, &[5]); // 1→2
+        e.reset_row(&mut st, 0);
+        let fresh = e.reset(1);
+        assert_eq!(st.adj[0], fresh.adj[0]);
+        assert_eq!(st.reach[0], fresh.reach[0]);
+        assert!(e.is_initial(&st, 0));
     }
 
     #[test]

@@ -88,4 +88,10 @@ mod tests {
         testkit::check_inject_extract_roundtrip(&env, 6, 43);
         testkit::check_backward_rollout_reaches_s0(&env, 6, 44);
     }
+
+    #[test]
+    fn reset_row_matches_fresh() {
+        let (env, _) = bitseq_env(BitSeqConfig::small());
+        testkit::check_reset_row(&env, 6, 45);
+    }
 }

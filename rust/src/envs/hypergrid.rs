@@ -94,6 +94,11 @@ impl<R: RewardModule<Vec<i32>>> VecEnv for HypergridEnv<R> {
         }
     }
 
+    fn reset_row(&self, state: &mut HypergridState, idx: usize) {
+        state.coords_of_mut(idx).iter_mut().for_each(|c| *c = 0);
+        state.terminal[idx] = false;
+    }
+
     fn batch_len(&self, state: &HypergridState) -> usize {
         state.terminal.len()
     }
@@ -303,6 +308,20 @@ mod tests {
         testkit::check_masks_and_obs(&e, 8, 12);
         testkit::check_inject_extract_roundtrip(&e, 8, 13);
         testkit::check_backward_rollout_reaches_s0(&e, 8, 14);
+    }
+
+    #[test]
+    fn reset_row_matches_fresh() {
+        testkit::check_reset_row(&env(3, 4), 8, 15);
+        // Also explicitly: a terminal row refilled in place is initial again
+        // while its neighbours keep their state.
+        let e = env(2, 4);
+        let mut st = e.reset(2);
+        e.step(&mut st, &[e.stop_action(), 0]);
+        assert!(e.is_terminal(&st, 0));
+        e.reset_row(&mut st, 0);
+        assert!(e.is_initial(&st, 0) && !e.is_terminal(&st, 0));
+        assert_eq!(st.coords_of(1), &[1, 0], "neighbour row must be untouched");
     }
 
     #[test]

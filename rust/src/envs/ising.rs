@@ -65,6 +65,11 @@ impl<R: RewardModule<Vec<i8>>> VecEnv for IsingEnv<R> {
         IsingState { spins: vec![0; n * self.d], n_assigned: vec![0; n], d: self.d }
     }
 
+    fn reset_row(&self, state: &mut IsingState, idx: usize) {
+        state.row_mut(idx).iter_mut().for_each(|s| *s = 0);
+        state.n_assigned[idx] = 0;
+    }
+
     fn batch_len(&self, state: &IsingState) -> usize {
         state.n_assigned.len()
     }
@@ -207,5 +212,16 @@ mod tests {
         testkit::check_masks_and_obs(&e, 6, 102);
         testkit::check_inject_extract_roundtrip(&e, 6, 103);
         testkit::check_backward_rollout_reaches_s0(&e, 6, 104);
+    }
+
+    #[test]
+    fn reset_row_matches_fresh() {
+        testkit::check_reset_row(&env(2, 0.5), 6, 105);
+        let e = env(2, 0.5);
+        let mut st = e.reset(2);
+        e.step(&mut st, &[1, 3]);
+        e.reset_row(&mut st, 0);
+        assert!(e.is_initial(&st, 0));
+        assert_eq!(st.row(1), &[0, -1, 0, 0], "neighbour row must be untouched");
     }
 }

@@ -79,6 +79,14 @@ pub trait VecEnv {
     /// Fresh batch of `n` initial states.
     fn reset(&self, n: usize) -> Self::State;
 
+    /// Reset row `idx` of an existing batch to the initial state, leaving
+    /// every other row untouched. A refilled row must be indistinguishable
+    /// from the corresponding row of a fresh [`VecEnv::reset`]: same
+    /// observation encoding, same masks, `is_initial` true, `is_terminal`
+    /// false. This is the primitive behind continuous-batching slot refill
+    /// (see [`crate::serve`]).
+    fn reset_row(&self, state: &mut Self::State, idx: usize);
+
     /// Number of env instances in a state batch.
     fn batch_len(&self, state: &Self::State) -> usize;
 
@@ -280,6 +288,72 @@ pub(crate) mod testkit {
             env.obs_into(&state, i, &mut a);
             env.obs_into(&injected, i, &mut b);
             assert_eq!(a, b, "injected obs mismatch at env {i}");
+        }
+    }
+
+    /// [`VecEnv::reset_row`] must make a row indistinguishable from the same
+    /// row of a fresh [`VecEnv::reset`] batch: drive rows an uneven number of
+    /// steps (row `i` takes up to `i + 1`), refill every row, compare obs +
+    /// masks + flags against a fresh batch, then roll the refilled batch to
+    /// termination to prove it still functions.
+    pub fn check_reset_row<E: VecEnv>(env: &E, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let spec = env.spec();
+        let fresh = env.reset(n);
+        let mut state = env.reset(n);
+        for t in 0..spec.t_max {
+            let mut actions = vec![NOOP; n];
+            let mut any = false;
+            for i in 0..n {
+                if t < i + 1 && !env.is_terminal(&state, i) {
+                    actions[i] = env.random_fwd_action(&state, i, &mut rng);
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+            env.step(&mut state, &actions);
+        }
+        for i in 0..n {
+            env.reset_row(&mut state, i);
+        }
+        let mut obs_a = vec![0f32; spec.obs_dim];
+        let mut obs_b = vec![0f32; spec.obs_dim];
+        let mut fm_a = vec![false; spec.n_actions];
+        let mut fm_b = vec![false; spec.n_actions];
+        let mut bm_a = vec![false; spec.n_bwd_actions];
+        let mut bm_b = vec![false; spec.n_bwd_actions];
+        for i in 0..n {
+            assert!(env.is_initial(&state, i), "refilled row {i} not initial");
+            assert!(!env.is_terminal(&state, i), "refilled row {i} terminal");
+            env.obs_into(&state, i, &mut obs_a);
+            env.obs_into(&fresh, i, &mut obs_b);
+            assert_eq!(obs_a, obs_b, "refilled obs differs from fresh at row {i}");
+            env.fwd_mask_into(&state, i, &mut fm_a);
+            env.fwd_mask_into(&fresh, i, &mut fm_b);
+            assert_eq!(fm_a, fm_b, "refilled fwd mask differs at row {i}");
+            env.bwd_mask_into(&state, i, &mut bm_a);
+            env.bwd_mask_into(&fresh, i, &mut bm_b);
+            assert_eq!(bm_a, bm_b, "refilled bwd mask differs at row {i}");
+        }
+        // The refilled batch must behave exactly like a fresh one.
+        for _ in 0..spec.t_max + 1 {
+            if (0..n).all(|i| env.is_terminal(&state, i)) {
+                break;
+            }
+            let mut actions = vec![NOOP; n];
+            for i in 0..n {
+                if !env.is_terminal(&state, i) {
+                    actions[i] = env.random_fwd_action(&state, i, &mut rng);
+                }
+            }
+            env.step(&mut state, &actions);
+        }
+        for i in 0..n {
+            assert!(env.is_terminal(&state, i), "refilled row {i} did not terminate");
+            let lr = env.log_reward_obj(&env.extract(&state, i));
+            assert!(lr.is_finite(), "refilled row {i} has non-finite reward");
         }
     }
 

@@ -156,6 +156,16 @@ impl PhyloEnv {
         }
     }
 
+    /// A fresh forest of `n_species` singleton trees (the initial state of
+    /// one environment instance; shared by `reset` and `reset_row`).
+    fn fresh_forest(&self) -> Forest {
+        Forest {
+            slots: (0..self.n_species).map(Some).collect(),
+            nodes: (0..self.n_species).map(|s| self.leaf_node(s as u16)).collect(),
+            n_active: self.n_species,
+        }
+    }
+
     fn insert_tree(&self, f: &mut Forest, tree: &PhyloTree) -> usize {
         match tree {
             PhyloTree::Leaf(l) => {
@@ -187,18 +197,11 @@ impl VecEnv for PhyloEnv {
     }
 
     fn reset(&self, n: usize) -> PhyloState {
-        let forests = (0..n)
-            .map(|_| {
-                let nodes: Vec<Node> =
-                    (0..self.n_species).map(|s| self.leaf_node(s as u16)).collect();
-                Forest {
-                    slots: (0..self.n_species).map(Some).collect(),
-                    nodes,
-                    n_active: self.n_species,
-                }
-            })
-            .collect();
-        PhyloState { forests }
+        PhyloState { forests: (0..n).map(|_| self.fresh_forest()).collect() }
+    }
+
+    fn reset_row(&self, state: &mut PhyloState, idx: usize) {
+        state.forests[idx] = self.fresh_forest();
     }
 
     fn batch_len(&self, state: &PhyloState) -> usize {
@@ -437,5 +440,19 @@ mod tests {
         testkit::check_masks_and_obs(&e, 6, 92);
         testkit::check_inject_extract_roundtrip(&e, 6, 93);
         testkit::check_backward_rollout_reaches_s0(&e, 6, 94);
+    }
+
+    #[test]
+    fn reset_row_matches_fresh() {
+        testkit::check_reset_row(&env(5, 4), 6, 95);
+        // A refilled forest drops merged arena nodes entirely.
+        let e = env(4, 4);
+        let mut st = e.reset(1);
+        e.step(&mut st, &[e.pair_to_action(0, 1)]);
+        assert!(st.forests[0].nodes.len() > 4);
+        e.reset_row(&mut st, 0);
+        assert_eq!(st.forests[0].nodes.len(), 4);
+        assert!(e.is_initial(&st, 0));
+        assert_eq!(e.energy(&st, 0), 0.0);
     }
 }

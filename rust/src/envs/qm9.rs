@@ -86,4 +86,9 @@ mod tests {
         testkit::check_inject_extract_roundtrip(&e, 8, 63);
         testkit::check_backward_rollout_reaches_s0(&e, 8, 64);
     }
+
+    #[test]
+    fn reset_row_matches_fresh() {
+        testkit::check_reset_row(&qm9_env(0, 10.0), 8, 65);
+    }
 }

@@ -107,6 +107,12 @@ impl<R: RewardModule<Vec<i16>>> VecEnv for SeqEnv<R> {
         }
     }
 
+    fn reset_row(&self, state: &mut SeqState, idx: usize) {
+        state.row_mut(idx).iter_mut().for_each(|t| *t = EMPTY);
+        state.len[idx] = 0;
+        state.terminal[idx] = false;
+    }
+
     fn batch_len(&self, state: &SeqState) -> usize {
         state.terminal.len()
     }
@@ -463,6 +469,30 @@ mod tests {
             testkit::check_inject_extract_roundtrip(&e, 8, 33);
             testkit::check_backward_rollout_reaches_s0(&e, 8, 34);
         }
+    }
+
+    #[test]
+    fn reset_row_matches_fresh_all_schemes() {
+        for (scheme, vocab, max_len) in [
+            (SeqScheme::AutoregFixed, 4, 6),
+            (SeqScheme::AutoregVar, 5, 7),
+            (SeqScheme::PrependAppend, 6, 5),
+            (SeqScheme::NonAutoreg, 3, 5),
+        ] {
+            let e = env(scheme, vocab, max_len);
+            testkit::check_reset_row(&e, 8, 35);
+        }
+    }
+
+    #[test]
+    fn reset_row_leaves_neighbours_alone() {
+        let e = env(SeqScheme::AutoregFixed, 4, 3);
+        let mut st = e.reset(2);
+        e.step(&mut st, &[1, 2]);
+        e.reset_row(&mut st, 0);
+        assert!(e.is_initial(&st, 0));
+        assert_eq!(st.row(1)[0], 2);
+        assert_eq!(st.len[1], 1);
     }
 
     #[test]

@@ -65,4 +65,9 @@ mod tests {
         testkit::check_inject_extract_roundtrip(&e, 8, 53);
         testkit::check_backward_rollout_reaches_s0(&e, 8, 54);
     }
+
+    #[test]
+    fn reset_row_matches_fresh() {
+        testkit::check_reset_row(&tfbind8_env(0, 10.0), 8, 55);
+    }
 }

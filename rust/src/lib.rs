@@ -7,7 +7,8 @@
 //!
 //! - **L3 (this crate)** — the coordinator: vectorized GFlowNet environments,
 //!   decoupled reward modules, dataset generators, success metrics, rollout /
-//!   training orchestration, and the throughput benchmark harness.
+//!   training orchestration, the continuous-batching sampling service
+//!   ([`serve`]), and the throughput benchmark harness.
 //! - **L2 (`python/compile`, build-time only)** — policy networks and the
 //!   TB/DB/SubTB/FLDB/MDB objectives in pure JAX, AOT-lowered to HLO text.
 //! - **L1 (`python/compile/kernels`)** — Pallas kernels for the per-step
@@ -16,6 +17,15 @@
 //! At run time the `runtime` module loads the AOT artifacts through the PJRT
 //! CPU client (`xla` crate) and the coordinator drives everything from Rust;
 //! Python never executes on the training path.
+//!
+//! Policy evaluation is abstracted behind
+//! [`runtime::policy::BatchPolicy`] — one *fixed-shape* batched dispatch.
+//! Training uses padded `[B, T+1]` rollouts
+//! ([`coordinator::rollout::forward_rollout`]); sampling-as-a-service uses
+//! the [`serve`] subsystem, which keeps the same fixed-shape dispatch
+//! saturated by refilling a slot with the next queued trajectory the moment
+//! its current one terminates (see `serve`'s module docs for the API and
+//! determinism guarantees).
 
 pub mod util {
     pub mod cli;
@@ -36,6 +46,7 @@ pub mod data;
 pub mod metrics;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod bench;
 
 /// Convenience prelude for examples and benches.

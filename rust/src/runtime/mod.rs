@@ -5,9 +5,11 @@
 pub mod manifest;
 pub mod artifact;
 pub mod state;
+pub mod policy;
 
 pub use artifact::Artifact;
 pub use manifest::{Manifest, TensorSpec};
+pub use policy::{ArtifactPolicy, BatchPolicy, OwnedArtifactPolicy, PolicyShape, UniformPolicy};
 pub use state::TrainState;
 
 use std::cell::OnceCell;

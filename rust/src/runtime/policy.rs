@@ -1,0 +1,277 @@
+//! The policy-dispatch abstraction: one **fixed-shape** batched evaluation
+//! of the forward/backward policy heads.
+//!
+//! Everything downstream of the policy network — padded rollouts
+//! ([`crate::coordinator::rollout`]) and the continuous-batching sampler
+//! ([`crate::serve`]) — talks to the network through [`BatchPolicy`], which
+//! models exactly what a PJRT dispatch of the AOT policy graph provides:
+//! `[B, obs_dim]` observations plus `[B, A]` / `[B, A']` masks in, masked
+//! log-probabilities and log-flows out, with `B` baked in at compile time.
+//!
+//! Implementations:
+//! - [`ArtifactPolicy`] / [`OwnedArtifactPolicy`] — the real AOT graphs via
+//!   [`TrainState::policy`];
+//! - [`UniformPolicy`] — a host-side masked-uniform policy with an optional
+//!   synthetic per-dispatch cost. Because its cost is a function of the
+//!   *batch shape* (not of how many rows are meaningful), it reproduces the
+//!   economics of a fixed-shape accelerator dispatch, which is what the
+//!   serve benchmarks need; it also lets rollout/serve code be exercised in
+//!   environments without AOT artifacts.
+//!
+//! All built-in policies are **row-wise**: row `i` of the output depends
+//! only on row `i` of the inputs. The serve subsystem's determinism
+//! guarantee (per-trajectory results independent of batch composition)
+//! holds for any row-wise policy.
+
+use super::{Artifact, TrainState};
+use crate::envs::VecEnv;
+
+/// Static shape contract of one policy dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PolicyShape {
+    /// Fixed batch width B of every dispatch.
+    pub batch: usize,
+    pub obs_dim: usize,
+    pub n_actions: usize,
+    pub n_bwd_actions: usize,
+    /// Maximum trajectory length (rollout buffers pad to `t_max + 1`).
+    pub t_max: usize,
+    /// Whether the backward policy is fixed uniform over legal parents.
+    pub uniform_pb: bool,
+}
+
+impl PolicyShape {
+    /// The shape baked into an AOT artifact.
+    pub fn of_artifact(art: &Artifact) -> PolicyShape {
+        let c = &art.manifest.config;
+        PolicyShape {
+            batch: c.batch,
+            obs_dim: c.obs_dim,
+            n_actions: c.n_actions,
+            n_bwd_actions: c.n_bwd_actions,
+            t_max: c.t_max,
+            uniform_pb: c.uniform_pb,
+        }
+    }
+
+    /// A shape derived from an environment spec with a chosen batch width
+    /// (host-side policies; artifact-free tests and benches).
+    pub fn of_env<E: VecEnv>(env: &E, batch: usize) -> PolicyShape {
+        let s = env.spec();
+        PolicyShape {
+            batch,
+            obs_dim: s.obs_dim,
+            n_actions: s.n_actions,
+            n_bwd_actions: s.n_bwd_actions,
+            t_max: s.t_max,
+            uniform_pb: true,
+        }
+    }
+}
+
+/// One fixed-shape policy dispatch.
+pub trait BatchPolicy {
+    /// The dispatch shape (constant over the policy's lifetime).
+    fn shape(&self) -> PolicyShape;
+
+    /// Evaluate the policy on a full batch. Inputs are row-major
+    /// `[B, obs_dim]`, `[B, n_actions]`, `[B, n_bwd_actions]`; returns
+    /// `(fwd_logp, bwd_logp, log_flow)` as `[B*A]`, `[B*A']`, `[B]` flats.
+    /// Illegal entries (mask 0) carry large-negative log-probabilities.
+    fn eval(
+        &mut self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
+}
+
+/// Borrowed adapter over the AOT artifact graphs (the training hot path).
+pub struct ArtifactPolicy<'a> {
+    pub art: &'a Artifact,
+    pub ts: &'a TrainState,
+}
+
+impl BatchPolicy for ArtifactPolicy<'_> {
+    fn shape(&self) -> PolicyShape {
+        PolicyShape::of_artifact(self.art)
+    }
+
+    fn eval(
+        &mut self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.ts.policy(self.art, obs, fwd_mask, bwd_mask)
+    }
+}
+
+/// Owning adapter for dedicated threads (the PJRT client is thread-local
+/// and not `Send`, so serve workers construct artifact + state on-thread
+/// and hold them here).
+pub struct OwnedArtifactPolicy {
+    pub art: Artifact,
+    pub ts: TrainState,
+}
+
+impl OwnedArtifactPolicy {
+    /// Load an artifact from disk and initialize a fresh train state.
+    pub fn load(dir: &std::path::Path, name: &str) -> anyhow::Result<OwnedArtifactPolicy> {
+        let art = Artifact::load(dir, name)?;
+        let ts = art.init_state()?;
+        Ok(OwnedArtifactPolicy { art, ts })
+    }
+}
+
+impl BatchPolicy for OwnedArtifactPolicy {
+    fn shape(&self) -> PolicyShape {
+        PolicyShape::of_artifact(&self.art)
+    }
+
+    fn eval(
+        &mut self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.ts.policy(&self.art, obs, fwd_mask, bwd_mask)
+    }
+}
+
+/// Log-probability assigned to masked-out actions (same convention as the
+/// masked log-softmax kernel).
+pub const MASKED_NEG: f32 = -1e30;
+
+/// Host-side masked-uniform policy with an optional synthetic per-dispatch
+/// cost. `synth_work` rounds of dense arithmetic over the full `[B, obs]`
+/// input run on every call, *independent of how many rows are active* —
+/// the fixed-shape-dispatch property that continuous batching exploits.
+pub struct UniformPolicy {
+    shape: PolicyShape,
+    /// Rounds of synthetic dense work per dispatch (0 = none).
+    pub synth_work: usize,
+    sink: f32,
+}
+
+impl UniformPolicy {
+    pub fn new(shape: PolicyShape) -> UniformPolicy {
+        UniformPolicy { shape, synth_work: 0, sink: 0.0 }
+    }
+
+    pub fn with_work(shape: PolicyShape, synth_work: usize) -> UniformPolicy {
+        UniformPolicy { shape, synth_work, sink: 0.0 }
+    }
+
+    fn masked_uniform_rows(mask: &[f32], b: usize, width: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(b * width);
+        for i in 0..b {
+            let row = &mask[i * width..(i + 1) * width];
+            let cnt: f32 = row.iter().sum();
+            let lp = if cnt > 0.0 { -cnt.ln() } else { MASKED_NEG };
+            for &m in row {
+                out.push(if m != 0.0 { lp } else { MASKED_NEG });
+            }
+        }
+    }
+}
+
+impl BatchPolicy for UniformPolicy {
+    fn shape(&self) -> PolicyShape {
+        self.shape
+    }
+
+    fn eval(
+        &mut self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let s = self.shape;
+        anyhow::ensure!(
+            obs.len() == s.batch * s.obs_dim
+                && fwd_mask.len() == s.batch * s.n_actions
+                && bwd_mask.len() == s.batch * s.n_bwd_actions,
+            "UniformPolicy: input shape mismatch"
+        );
+        // Synthetic fixed-shape dispatch cost (burns time proportional to
+        // B × obs_dim × synth_work regardless of active-row count).
+        if self.synth_work > 0 {
+            let mut acc = 0f32;
+            for _ in 0..self.synth_work {
+                for (k, &x) in obs.iter().enumerate() {
+                    acc += x * (((k & 7) as f32) - 3.5);
+                }
+                acc *= 0.999;
+            }
+            self.sink += std::hint::black_box(acc);
+        }
+        let mut fwd = Vec::new();
+        let mut bwd = Vec::new();
+        Self::masked_uniform_rows(fwd_mask, s.batch, s.n_actions, &mut fwd);
+        Self::masked_uniform_rows(bwd_mask, s.batch, s.n_bwd_actions, &mut bwd);
+        Ok((fwd, bwd, vec![0.0; s.batch]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(b: usize, a: usize) -> PolicyShape {
+        PolicyShape {
+            batch: b,
+            obs_dim: 3,
+            n_actions: a,
+            n_bwd_actions: 2,
+            t_max: 5,
+            uniform_pb: true,
+        }
+    }
+
+    #[test]
+    fn uniform_policy_matches_mask_counts() {
+        let s = shape(2, 4);
+        let mut p = UniformPolicy::new(s);
+        let obs = vec![0.0; 2 * 3];
+        let fwd_mask = vec![1.0, 1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0];
+        let bwd_mask = vec![1.0, 0.0, 1.0, 1.0];
+        let (f, b, flow) = p.eval(&obs, &fwd_mask, &bwd_mask).unwrap();
+        assert_eq!(f.len(), 8);
+        assert!((f[0] - (-(2f32).ln())).abs() < 1e-6);
+        assert_eq!(f[2], MASKED_NEG);
+        assert!((f[4] - (-(4f32).ln())).abs() < 1e-6);
+        assert!((b[0] - 0.0).abs() < 1e-6); // single legal parent: log 1
+        assert_eq!(b[1], MASKED_NEG);
+        assert_eq!(flow, vec![0.0, 0.0]);
+        // Legal entries of each row exponentiate-sum to 1.
+        for i in 0..2 {
+            let p_sum: f32 = (0..4)
+                .filter(|&j| fwd_mask[i * 4 + j] != 0.0)
+                .map(|j| f[i * 4 + j].exp())
+                .sum();
+            assert!((p_sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn uniform_policy_rejects_bad_shapes() {
+        let mut p = UniformPolicy::new(shape(2, 4));
+        assert!(p.eval(&[0.0; 5], &[0.0; 8], &[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn synth_work_is_deterministic_in_outputs() {
+        let s = shape(2, 4);
+        let obs = vec![0.5; 2 * 3];
+        let fwd_mask = vec![1.0; 8];
+        let bwd_mask = vec![1.0; 4];
+        let mut a = UniformPolicy::new(s);
+        let mut b = UniformPolicy::with_work(s, 16);
+        let ra = a.eval(&obs, &fwd_mask, &bwd_mask).unwrap();
+        let rb = b.eval(&obs, &fwd_mask, &bwd_mask).unwrap();
+        assert_eq!(ra.0, rb.0);
+        assert_eq!(ra.1, rb.1);
+    }
+}

@@ -1,0 +1,90 @@
+//! `serve` — a continuous-batching trajectory-sampling service.
+//!
+//! The training loop's [`forward_rollout`] pays the classic padded-batch
+//! tax: every policy dispatch carries all `B` rows until the *slowest*
+//! trajectory in the batch terminates, so short trajectories ride along as
+//! no-op padding. That is the right trade for training (the train graph
+//! wants one rectangular batch), but it is the wrong trade for *serving*
+//! samples, where the unit of work is a trajectory, not a batch.
+//!
+//! This module implements the standard inference-server fix — **continuous
+//! batching with slot refill**: a fixed-`B` slot table rides on top of the
+//! same fixed-shape policy dispatch, and the moment a slot's trajectory
+//! terminates it is refilled (via [`VecEnv::reset_row`]) with the next
+//! queued trajectory. Dispatch occupancy stays near 100% under load
+//! regardless of trajectory-length heterogeneity.
+//!
+//! Layering, bottom-up:
+//!
+//! - [`sampler::sample_stream`] — the synchronous slot engine: pulls
+//!   trajectory jobs from a callback, steps all active slots with one
+//!   [`BatchPolicy::eval`] per env step, emits finished trajectories to a
+//!   sink. Usable inline (no threads) — this is what
+//!   `Trainer::sample_objs_served` and the benches use.
+//! - [`queue::Queue`] — a std-only MPSC queue with close semantics (the
+//!   image has no tokio/rayon; mirrors `util::threadpool`'s philosophy).
+//! - [`worker::SamplerService`] — the service: a dedicated worker thread
+//!   owning the environment and the policy, fed by the queue, answering
+//!   [`SampleRequest`]s through [`SampleTicket`]s.
+//! - [`stats::ServeStats`] — atomic counters (dispatches, occupancy,
+//!   trajectories/sec) readable from any thread.
+//!
+//! ## Determinism
+//!
+//! Trajectory `i` of a request with seed `s` draws its actions from the
+//! dedicated RNG stream `Rng::new(traj_seed(s, i))`. Because every built-in
+//! policy is row-wise (row `i` of a dispatch depends only on row `i` of the
+//! inputs), a trajectory's result is independent of which slot it ran in
+//! and of whatever else shared its dispatches. Consequently a request's
+//! output is **bit-reproducible** for a fixed seed and a single worker —
+//! and invariant even to the slot-table width `B` (covered by tests).
+//!
+//! ## When to prefer this over `forward_rollout`
+//!
+//! Use the service (or `sample_objs_served`) for evaluation-time and
+//! serving-time sampling: heterogeneous trajectory lengths, exact sample
+//! counts (`n` need not be a multiple of `B`), many concurrent requesters.
+//! Keep `forward_rollout` for training, which needs the padded `[B, T+1]`
+//! batch layout the train graph consumes.
+//!
+//! [`forward_rollout`]: crate::coordinator::rollout::forward_rollout
+//! [`VecEnv::reset_row`]: crate::envs::VecEnv::reset_row
+//! [`BatchPolicy::eval`]: crate::runtime::policy::BatchPolicy::eval
+
+pub mod queue;
+pub mod request;
+pub mod sampler;
+pub mod stats;
+pub mod worker;
+
+pub use request::{SampleOutput, SampleRequest, SampleTicket};
+pub use sampler::{sample_stream, StreamStats, TrajJob, TrajResult};
+pub use stats::{ServeSnapshot, ServeStats};
+pub use worker::SamplerService;
+
+/// Derive the RNG seed of trajectory `traj_index` within a request seeded
+/// with `request_seed` (SplitMix64-style mixing, matching how
+/// `util::rng::Rng` seeds its streams).
+pub fn traj_seed(request_seed: u64, traj_index: u64) -> u64 {
+    let mut z = request_seed
+        .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(traj_index.wrapping_add(1)));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traj_seeds_are_distinct_and_stable() {
+        let mut seen = std::collections::HashSet::new();
+        for req in 0..4u64 {
+            for i in 0..256u64 {
+                assert_eq!(traj_seed(req, i), traj_seed(req, i));
+                assert!(seen.insert(traj_seed(req, i)), "seed collision at {req}/{i}");
+            }
+        }
+    }
+}

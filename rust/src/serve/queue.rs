@@ -1,0 +1,168 @@
+//! A std-only MPSC queue with close semantics.
+//!
+//! `std::sync::mpsc` lacks the two things the serve worker needs — a
+//! non-blocking `try_pop` usable alongside blocking pops from the same
+//! consumer, and an observable close state that immediately wakes blocked
+//! consumers — so, in the spirit of `util::threadpool` (no rayon/tokio in
+//! the image), this is a small `Mutex` + `Condvar` queue.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+struct Inner<T> {
+    state: Mutex<QueueState<T>>,
+    cv: Condvar,
+}
+
+/// A multi-producer queue; clones share the same underlying channel.
+pub struct Queue<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Queue<T> {
+    fn clone(&self) -> Self {
+        Queue { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Default for Queue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Queue<T> {
+    pub fn new() -> Queue<T> {
+        Queue {
+            inner: Arc::new(Inner {
+                state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Enqueue an item. Returns `false` (dropping the item) if the queue is
+    /// closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.state.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        g.items.push_back(item);
+        self.inner.cv.notify_one();
+        true
+    }
+
+    /// Dequeue, blocking until an item arrives or the queue is closed *and*
+    /// drained (`None`).
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut g = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.inner.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Dequeue without blocking.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.state.lock().unwrap().items.pop_front()
+    }
+
+    /// Close the queue: future pushes fail, blocked consumers drain the
+    /// backlog and then observe `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.state.lock().unwrap();
+        g.closed = true;
+        self.inner.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.state.lock().unwrap().closed
+    }
+
+    /// Current backlog depth.
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_len() {
+        let q = Queue::new();
+        assert!(q.is_empty());
+        for i in 0..5 {
+            assert!(q.push(i));
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.try_pop(), Some(i));
+        }
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = Queue::new();
+        q.push(1);
+        q.push(2);
+        q.close();
+        assert!(!q.push(3), "push after close must fail");
+        assert_eq!(q.pop_blocking(), Some(1));
+        assert_eq!(q.pop_blocking(), Some(2));
+        assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q: Queue<u32> = Queue::new();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop_blocking());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(t.join().unwrap(), None);
+    }
+
+    #[test]
+    fn multi_producer_single_consumer() {
+        let q: Queue<usize> = Queue::new();
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        assert!(q.push(p * 100 + i));
+                    }
+                })
+            })
+            .collect();
+        let mut got = Vec::new();
+        while got.len() < 400 {
+            if let Some(v) = q.pop_blocking() {
+                got.push(v);
+            }
+        }
+        for t in producers {
+            t.join().unwrap();
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..400).collect::<Vec<_>>());
+    }
+}

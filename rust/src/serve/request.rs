@@ -1,0 +1,124 @@
+//! Request/ticket types: how callers talk to the sampling service.
+//!
+//! A [`SampleRequest`] asks for `n_samples` terminal objects; the service
+//! answers immediately with a [`SampleTicket`], a waitable handle fulfilled
+//! by the worker thread once every trajectory of the request has finished.
+//! Tickets are plain `Mutex` + `Condvar` (no async runtime in the image).
+
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A sampling request.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleRequest {
+    /// Number of terminal objects to sample (0 is answered immediately).
+    pub n_samples: usize,
+    /// Base seed. Trajectory `i` uses the stream
+    /// [`traj_seed(seed, i)`](crate::serve::traj_seed), making results
+    /// independent of slot assignment and batch composition.
+    pub seed: u64,
+}
+
+/// One sampled trajectory, as returned to the requester.
+#[derive(Clone, Debug)]
+pub struct SampleOutput<Obj> {
+    /// The terminal object.
+    pub obj: Obj,
+    /// Σ_t log P_F of the sampled actions under the serving policy.
+    pub log_pf: f64,
+    /// Terminal log-reward.
+    pub log_reward: f64,
+    /// Trajectory length (number of forward transitions).
+    pub length: usize,
+    /// Index of this trajectory within its request (outputs are returned
+    /// sorted by this index).
+    pub traj_index: usize,
+}
+
+/// Internal ticket cell state.
+pub(crate) enum TicketCell<Obj> {
+    Pending,
+    Ready(anyhow::Result<Vec<SampleOutput<Obj>>>),
+    Taken,
+}
+
+pub(crate) struct TicketShared<Obj> {
+    pub(crate) cell: Mutex<TicketCell<Obj>>,
+    pub(crate) cv: Condvar,
+}
+
+impl<Obj> TicketShared<Obj> {
+    pub(crate) fn new() -> Arc<TicketShared<Obj>> {
+        Arc::new(TicketShared { cell: Mutex::new(TicketCell::Pending), cv: Condvar::new() })
+    }
+
+    /// Complete the ticket (first fulfillment wins; later calls are no-ops).
+    pub(crate) fn fulfill(&self, result: anyhow::Result<Vec<SampleOutput<Obj>>>) {
+        let mut g = self.cell.lock().unwrap();
+        if matches!(*g, TicketCell::Pending) {
+            *g = TicketCell::Ready(result);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// A waitable handle for one [`SampleRequest`].
+pub struct SampleTicket<Obj> {
+    pub(crate) shared: Arc<TicketShared<Obj>>,
+}
+
+impl<Obj> SampleTicket<Obj> {
+    /// Block until the service answers, consuming the ticket. Outputs are
+    /// sorted by `traj_index`.
+    pub fn wait(self) -> anyhow::Result<Vec<SampleOutput<Obj>>> {
+        let mut g = self.shared.cell.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *g, TicketCell::Taken) {
+                TicketCell::Ready(r) => return r,
+                TicketCell::Pending => {
+                    *g = TicketCell::Pending;
+                    g = self.shared.cv.wait(g).unwrap();
+                }
+                TicketCell::Taken => unreachable!("ticket consumed twice"),
+            }
+        }
+    }
+
+    /// Has the service answered yet? (Non-blocking.)
+    pub fn is_ready(&self) -> bool {
+        matches!(*self.shared.cell.lock().unwrap(), TicketCell::Ready(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticket_wait_sees_fulfillment_across_threads() {
+        let shared = TicketShared::<u32>::new();
+        let ticket = SampleTicket { shared: shared.clone() };
+        assert!(!ticket.is_ready());
+        let t = std::thread::spawn(move || {
+            shared.fulfill(Ok(vec![SampleOutput {
+                obj: 7,
+                log_pf: -1.0,
+                log_reward: 0.5,
+                length: 3,
+                traj_index: 0,
+            }]));
+        });
+        let out = ticket.wait().unwrap();
+        t.join().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].obj, 7);
+    }
+
+    #[test]
+    fn first_fulfillment_wins() {
+        let shared = TicketShared::<u32>::new();
+        shared.fulfill(Err(anyhow::anyhow!("first")));
+        shared.fulfill(Ok(vec![]));
+        let ticket = SampleTicket { shared };
+        assert_eq!(ticket.wait().unwrap_err().to_string(), "first");
+    }
+}

@@ -1,0 +1,359 @@
+//! The continuous-batching slot engine.
+//!
+//! A fixed-`B` slot table rides on one fixed-shape policy dispatch per env
+//! step. Idle slots are refilled from a lazy job source *before every
+//! dispatch*, so a slot is empty for at most zero dispatches while work is
+//! available — the defining property of continuous batching. Idle slots are
+//! staged as zeroed-obs / action-0-legal sentinels (the same convention as
+//! `RolloutCtx::stage`) so the masked softmax stays finite.
+//!
+//! The engine is synchronous and thread-free; the service layer
+//! ([`crate::serve::worker`]) runs it on a dedicated thread, and
+//! `Trainer::sample_objs_served` runs it inline.
+
+use crate::coordinator::rollout::RolloutCtx;
+use crate::envs::{VecEnv, NOOP};
+use crate::runtime::policy::BatchPolicy;
+use crate::util::rng::Rng;
+
+/// One trajectory of work for the slot engine.
+#[derive(Clone, Copy, Debug)]
+pub struct TrajJob {
+    /// Caller-side request tag (opaque to the engine; echoed in results).
+    pub request: u64,
+    /// Trajectory index within the request.
+    pub traj_index: usize,
+    /// Seed of this trajectory's dedicated RNG stream.
+    pub seed: u64,
+}
+
+/// One finished trajectory.
+#[derive(Clone, Debug)]
+pub struct TrajResult<Obj> {
+    pub request: u64,
+    pub traj_index: usize,
+    pub obj: Obj,
+    /// Σ_t log P_F of the sampled actions under the serving policy.
+    pub log_pf: f64,
+    /// Terminal log-reward (from the env's terminal transition).
+    pub log_reward: f64,
+    /// Number of forward transitions.
+    pub length: usize,
+}
+
+/// Aggregate statistics of one engine run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    /// Fixed-shape policy dispatches executed.
+    pub dispatches: u64,
+    /// Slot-steps that carried a live trajectory.
+    pub active_row_steps: u64,
+    /// Total slot-steps (`dispatches × B`).
+    pub total_row_steps: u64,
+    /// Trajectories completed.
+    pub completed: u64,
+}
+
+impl StreamStats {
+    /// Fraction of slot-steps that did useful work (1.0 = perfectly packed).
+    pub fn occupancy(&self) -> f64 {
+        if self.total_row_steps == 0 {
+            1.0
+        } else {
+            self.active_row_steps as f64 / self.total_row_steps as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &StreamStats) {
+        self.dispatches += other.dispatches;
+        self.active_row_steps += other.active_row_steps;
+        self.total_row_steps += other.total_row_steps;
+        self.completed += other.completed;
+    }
+}
+
+/// Per-slot bookkeeping for an in-flight trajectory.
+struct SlotJob {
+    request: u64,
+    traj_index: usize,
+    rng: Rng,
+    log_pf: f64,
+    steps: usize,
+}
+
+/// Drive trajectories through the slot table until the job source is dry
+/// and every in-flight trajectory has finished.
+///
+/// `next_job` is polled once per idle slot per step; it may return `None`
+/// now and `Some` on a later poll (the service layer uses this to merge
+/// late-arriving requests into the running batch). `sink` is invoked once
+/// per finished trajectory, in completion order.
+///
+/// Determinism: each trajectory's actions are drawn from its own
+/// `Rng::new(job.seed)` stream, so for row-wise policies the result of a
+/// trajectory does not depend on slot assignment, on `B`, or on what else
+/// shared its dispatches.
+pub fn sample_stream<E, P, F, S>(
+    env: &E,
+    policy: &mut P,
+    mut next_job: F,
+    mut sink: S,
+) -> anyhow::Result<StreamStats>
+where
+    E: VecEnv,
+    P: BatchPolicy + ?Sized,
+    F: FnMut() -> Option<TrajJob>,
+    S: FnMut(TrajResult<E::Obj>),
+{
+    let spec = env.spec();
+    let shape = policy.shape();
+    anyhow::ensure!(
+        shape.obs_dim == spec.obs_dim
+            && shape.n_actions == spec.n_actions
+            && shape.n_bwd_actions == spec.n_bwd_actions,
+        "env spec {:?} does not match policy shape {:?}",
+        spec,
+        shape
+    );
+    let b = shape.batch;
+    anyhow::ensure!(b > 0, "policy batch must be positive");
+    let mut state = env.reset(b);
+    let mut slots: Vec<Option<SlotJob>> = (0..b).map(|_| None).collect();
+    let mut stats = StreamStats::default();
+
+    let mut ctx = RolloutCtx::for_shape(&shape);
+    let mut skip = vec![true; b];
+    let mut mask_scratch = vec![false; spec.n_actions];
+    let mut actions = vec![NOOP; b];
+
+    loop {
+        // Refill idle slots from the job source (the "continuous" part:
+        // this happens before every dispatch, not per batch drain).
+        for i in 0..b {
+            if slots[i].is_none() {
+                if let Some(job) = next_job() {
+                    env.reset_row(&mut state, i);
+                    slots[i] = Some(SlotJob {
+                        request: job.request,
+                        traj_index: job.traj_index,
+                        rng: Rng::new(job.seed),
+                        log_pf: 0.0,
+                        steps: 0,
+                    });
+                }
+            }
+        }
+        if slots.iter().all(|s| s.is_none()) {
+            break; // source dry and table drained
+        }
+
+        // Stage the dispatch: live rows get real obs/masks; idle slots get
+        // the shared dead-row sentinel convention (RolloutCtx::stage).
+        for i in 0..b {
+            skip[i] = slots[i].is_none();
+        }
+        ctx.stage(env, &state, &skip);
+
+        // One fixed-shape dispatch for the whole table.
+        let (fwd_logp, _bwd_logp, _flow) = policy.eval(&ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask)?;
+        stats.dispatches += 1;
+        stats.total_row_steps += b as u64;
+
+        // Sample actions for live slots from their private RNG streams.
+        for i in 0..b {
+            actions[i] = NOOP;
+            if let Some(job) = slots[i].as_mut() {
+                env.fwd_mask_into(&state, i, &mut mask_scratch);
+                let row = &fwd_logp[i * spec.n_actions..(i + 1) * spec.n_actions];
+                let a = job.rng.categorical_masked(row, &mask_scratch) as i32;
+                actions[i] = a;
+                job.log_pf += row[a as usize] as f64;
+                job.steps += 1;
+                stats.active_row_steps += 1;
+            }
+        }
+
+        let out = env.step(&mut state, &actions);
+
+        // Emit finished trajectories; their slots refill on the next pass.
+        for i in 0..b {
+            if slots[i].is_some() && out.done[i] {
+                let job = slots[i].take().unwrap();
+                let obj = env.extract(&state, i);
+                stats.completed += 1;
+                sink(TrajResult {
+                    request: job.request,
+                    traj_index: job.traj_index,
+                    obj,
+                    log_pf: job.log_pf,
+                    log_reward: out.log_reward[i],
+                    length: job.steps,
+                });
+            } else if let Some(job) = slots[i].as_ref() {
+                anyhow::ensure!(
+                    job.steps < spec.t_max,
+                    "slot {i}: trajectory exceeded t_max={} without terminating",
+                    spec.t_max
+                );
+            }
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::hypergrid::HypergridEnv;
+    use crate::reward::hypergrid::HypergridReward;
+    use crate::runtime::policy::{PolicyShape, UniformPolicy};
+    use crate::serve::traj_seed;
+
+    fn env(h: usize) -> HypergridEnv<HypergridReward> {
+        HypergridEnv::new(2, h, HypergridReward::standard(h))
+    }
+
+    fn run_n(
+        e: &HypergridEnv<HypergridReward>,
+        b: usize,
+        n: usize,
+        seed: u64,
+    ) -> (Vec<TrajResult<Vec<i32>>>, StreamStats) {
+        let shape = PolicyShape::of_env(e, b);
+        let mut policy = UniformPolicy::new(shape);
+        let mut next = 0usize;
+        let mut results = Vec::new();
+        let stats = sample_stream(
+            e,
+            &mut policy,
+            || {
+                if next < n {
+                    let j = TrajJob {
+                        request: 0,
+                        traj_index: next,
+                        seed: traj_seed(seed, next as u64),
+                    };
+                    next += 1;
+                    Some(j)
+                } else {
+                    None
+                }
+            },
+            |r| results.push(r),
+        )
+        .unwrap();
+        results.sort_by_key(|r| r.traj_index);
+        (results, stats)
+    }
+
+    #[test]
+    fn produces_exactly_n_trajectories() {
+        let e = env(8);
+        let (results, stats) = run_n(&e, 4, 37, 5);
+        assert_eq!(results.len(), 37);
+        assert_eq!(stats.completed, 37);
+        for (k, r) in results.iter().enumerate() {
+            assert_eq!(r.traj_index, k);
+            assert!(r.length >= 1 && r.length <= e.spec().t_max);
+            assert!(r.log_pf < 0.0);
+            assert!(r.log_reward.is_finite());
+            assert_eq!(
+                r.log_reward,
+                e.log_reward_obj(&r.obj),
+                "terminal reward must match the extracted object"
+            );
+        }
+    }
+
+    #[test]
+    fn results_are_invariant_to_slot_table_width() {
+        // The per-trajectory RNG streams + a row-wise policy make results
+        // independent of B (and therefore of batch composition).
+        let e = env(8);
+        let (r4, _) = run_n(&e, 4, 25, 11);
+        let (r16, _) = run_n(&e, 16, 25, 11);
+        let (r1, _) = run_n(&e, 1, 25, 11);
+        for ((a, b), c) in r4.iter().zip(&r16).zip(&r1) {
+            assert_eq!(a.obj, b.obj);
+            assert_eq!(a.obj, c.obj);
+            assert_eq!(a.log_pf.to_bits(), b.log_pf.to_bits(), "bitwise log_pf");
+            assert_eq!(a.log_reward.to_bits(), b.log_reward.to_bits());
+            assert_eq!(a.length, b.length);
+            assert_eq!(a.length, c.length);
+        }
+    }
+
+    #[test]
+    fn refill_keeps_dispatches_near_optimal() {
+        // With heterogeneous lengths the padded rollout would run every
+        // batch until its slowest row; slot refill keeps occupancy high.
+        let e = env(32); // t_max = 63, typical uniform-policy length ~3
+        let (results, stats) = run_n(&e, 8, 200, 3);
+        let total_steps: usize = results.iter().map(|r| r.length).sum();
+        assert_eq!(stats.active_row_steps as usize, total_steps);
+        assert!(
+            stats.occupancy() > 0.8,
+            "slot refill should keep occupancy high, got {}",
+            stats.occupancy()
+        );
+        // Dispatch count is within a small factor of the information-
+        // theoretic floor ⌈total_steps / B⌉ (the drain tail costs a little).
+        let floor = ((total_steps + 7) / 8) as u64;
+        assert!(
+            stats.dispatches <= floor + e.spec().t_max as u64,
+            "dispatches {} vs floor {floor}",
+            stats.dispatches
+        );
+    }
+
+    #[test]
+    fn late_arriving_jobs_join_the_running_batch() {
+        // The source returns None for a while, then yields more work; the
+        // engine must pick it up as long as any slot is still live.
+        let e = env(6);
+        let shape = PolicyShape::of_env(&e, 4);
+        let mut policy = UniformPolicy::new(shape);
+        let mut polls = 0usize;
+        let mut issued = 0usize;
+        let mut results = Vec::new();
+        let stats = sample_stream(
+            &e,
+            &mut policy,
+            || {
+                polls += 1;
+                // Job 0 immediately; job 1 only after a few polls (while job
+                // 0 may still be running); nothing after that.
+                if issued == 0 {
+                    issued = 1;
+                    return Some(TrajJob { request: 0, traj_index: 0, seed: traj_seed(9, 0) });
+                }
+                if issued == 1 && polls > 6 {
+                    issued = 2;
+                    return Some(TrajJob { request: 0, traj_index: 1, seed: traj_seed(9, 1) });
+                }
+                None
+            },
+            |r: TrajResult<Vec<i32>>| results.push(r),
+        )
+        .unwrap();
+        // Both jobs completed in one engine run iff job 0 was still in
+        // flight when job 1 appeared; otherwise only job 0 completes.
+        assert!(!results.is_empty());
+        assert_eq!(stats.completed as usize, results.len());
+        assert!(results.iter().any(|r| r.traj_index == 0));
+    }
+
+    #[test]
+    fn zero_jobs_returns_empty_stats() {
+        let e = env(4);
+        let shape = PolicyShape::of_env(&e, 4);
+        let mut policy = UniformPolicy::new(shape);
+        let stats = sample_stream(&e, &mut policy, || None, |_r: TrajResult<Vec<i32>>| {
+            panic!("no results expected")
+        })
+        .unwrap();
+        assert_eq!(stats.dispatches, 0);
+        assert_eq!(stats.completed, 0);
+        assert_eq!(stats.occupancy(), 1.0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Service counters: lock-free, written by the worker thread, snapshot-read
+//! from any thread (the monitoring side of the QPS story).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Shared atomic counters of one [`SamplerService`].
+///
+/// [`SamplerService`]: crate::serve::SamplerService
+pub struct ServeStats {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    /// Requests answered with an error (shutdown, policy failure). Together
+    /// with `requests_completed` this accounts for every submitted request,
+    /// so "pending = submitted − completed − failed" stays meaningful for
+    /// monitors after a failure.
+    pub requests_failed: AtomicU64,
+    pub trajectories_completed: AtomicU64,
+    pub policy_dispatches: AtomicU64,
+    pub active_row_steps: AtomicU64,
+    pub total_row_steps: AtomicU64,
+    started: Instant,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats {
+            requests_submitted: AtomicU64::new(0),
+            requests_completed: AtomicU64::new(0),
+            requests_failed: AtomicU64::new(0),
+            trajectories_completed: AtomicU64::new(0),
+            policy_dispatches: AtomicU64::new(0),
+            active_row_steps: AtomicU64::new(0),
+            total_row_steps: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn snapshot(&self) -> ServeSnapshot {
+        ServeSnapshot {
+            requests_submitted: self.requests_submitted.load(Ordering::Relaxed),
+            requests_completed: self.requests_completed.load(Ordering::Relaxed),
+            requests_failed: self.requests_failed.load(Ordering::Relaxed),
+            trajectories_completed: self.trajectories_completed.load(Ordering::Relaxed),
+            policy_dispatches: self.policy_dispatches.load(Ordering::Relaxed),
+            active_row_steps: self.active_row_steps.load(Ordering::Relaxed),
+            total_row_steps: self.total_row_steps.load(Ordering::Relaxed),
+            elapsed_s: self.started.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// A point-in-time copy of [`ServeStats`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeSnapshot {
+    pub requests_submitted: u64,
+    pub requests_completed: u64,
+    pub requests_failed: u64,
+    pub trajectories_completed: u64,
+    pub policy_dispatches: u64,
+    pub active_row_steps: u64,
+    pub total_row_steps: u64,
+    pub elapsed_s: f64,
+}
+
+impl ServeSnapshot {
+    /// Fraction of dispatched slot-steps that carried a live trajectory.
+    pub fn occupancy(&self) -> f64 {
+        if self.total_row_steps == 0 {
+            1.0
+        } else {
+            self.active_row_steps as f64 / self.total_row_steps as f64
+        }
+    }
+
+    /// Completed trajectories per second of service lifetime.
+    pub fn objs_per_sec(&self) -> f64 {
+        if self.elapsed_s <= 0.0 {
+            0.0
+        } else {
+            self.trajectories_completed as f64 / self.elapsed_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let s = ServeStats::new();
+        s.trajectories_completed.fetch_add(10, Ordering::Relaxed);
+        s.active_row_steps.fetch_add(30, Ordering::Relaxed);
+        s.total_row_steps.fetch_add(40, Ordering::Relaxed);
+        let snap = s.snapshot();
+        assert_eq!(snap.trajectories_completed, 10);
+        assert!((snap.occupancy() - 0.75).abs() < 1e-12);
+        assert!(snap.elapsed_s >= 0.0);
+        let empty = ServeStats::new().snapshot();
+        assert_eq!(empty.occupancy(), 1.0);
+    }
+}

@@ -1,0 +1,287 @@
+//! The service layer: a dedicated worker thread wrapping the slot engine.
+//!
+//! One worker owns the environment and the policy. Requests arrive through
+//! the MPSC [`Queue`]; the worker admits them into an in-flight table and
+//! feeds their trajectories to [`sample_stream`], which merges trajectories
+//! from *all* admitted requests into the same slot table — a late request
+//! starts filling slots the moment one frees, without waiting for earlier
+//! requests to drain. Tickets complete per request as soon as that
+//! request's last trajectory finishes.
+//!
+//! The policy is built *on* the worker thread by a `Send` factory closure:
+//! PJRT clients are `Rc`-based thread-locals, so an `OwnedArtifactPolicy`
+//! must be constructed where it will run.
+
+use super::queue::Queue;
+use super::request::{SampleOutput, SampleRequest, SampleTicket, TicketShared};
+use super::sampler::{sample_stream, TrajJob, TrajResult};
+use super::stats::{ServeSnapshot, ServeStats};
+use super::traj_seed;
+use crate::envs::VecEnv;
+use crate::runtime::policy::BatchPolicy;
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+struct WorkItem<Obj> {
+    req: SampleRequest,
+    ticket: Arc<TicketShared<Obj>>,
+}
+
+/// An in-flight request inside one worker drain.
+struct InFlight<Obj> {
+    ticket: Arc<TicketShared<Obj>>,
+    seed: u64,
+    n: usize,
+    issued: usize,
+    done: usize,
+    outputs: Vec<Option<SampleOutput<Obj>>>,
+}
+
+/// Bookkeeping of one worker drain. A drain can run indefinitely under
+/// sustained traffic, so this must not grow with the number of requests
+/// served: completed requests are pruned from `inflight`, and the job
+/// source only ever looks at the front of `pending` (requests that still
+/// have unissued trajectories) instead of scanning history.
+struct DrainState<Obj> {
+    next_id: u64,
+    inflight: HashMap<u64, InFlight<Obj>>,
+    /// FIFO of request ids with `issued < n`.
+    pending: VecDeque<u64>,
+}
+
+impl<Obj> DrainState<Obj> {
+    fn new() -> DrainState<Obj> {
+        DrainState { next_id: 0, inflight: HashMap::new(), pending: VecDeque::new() }
+    }
+}
+
+/// A continuous-batching sampling service over one environment + policy.
+pub struct SamplerService<Obj> {
+    queue: Queue<WorkItem<Obj>>,
+    stats: Arc<ServeStats>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl<Obj: Send + 'static> SamplerService<Obj> {
+    /// Stand up the service. `policy_factory` runs once on the worker
+    /// thread and builds the policy (e.g. `OwnedArtifactPolicy::load` for
+    /// the AOT graphs, or a `UniformPolicy` for artifact-free serving).
+    pub fn spawn<E, F>(env: E, policy_factory: F) -> SamplerService<Obj>
+    where
+        E: VecEnv<Obj = Obj> + Send + 'static,
+        F: FnOnce() -> anyhow::Result<Box<dyn BatchPolicy>> + Send + 'static,
+    {
+        let queue: Queue<WorkItem<Obj>> = Queue::new();
+        let stats = Arc::new(ServeStats::new());
+        let worker_queue = queue.clone();
+        let worker_stats = Arc::clone(&stats);
+        let handle = std::thread::Builder::new()
+            .name("gfnx-serve-worker".to_string())
+            .spawn(move || worker_loop(env, policy_factory, worker_queue, worker_stats))
+            .expect("failed to spawn serve worker thread");
+        SamplerService { queue, stats, handle: Some(handle) }
+    }
+
+    /// Enqueue a request; returns immediately with a waitable ticket.
+    pub fn submit(&self, req: SampleRequest) -> SampleTicket<Obj> {
+        let shared = TicketShared::new();
+        self.stats.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        let item = WorkItem { req, ticket: Arc::clone(&shared) };
+        if !self.queue.push(item) {
+            shared.fulfill(Err(anyhow::anyhow!(
+                "sampler service is shut down (queue closed)"
+            )));
+            self.stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+        }
+        SampleTicket { shared }
+    }
+
+    /// Convenience: submit and block for the result.
+    pub fn sample(&self, n_samples: usize, seed: u64) -> anyhow::Result<Vec<SampleOutput<Obj>>> {
+        self.submit(SampleRequest { n_samples, seed }).wait()
+    }
+
+    /// Current request backlog (excluding in-flight work).
+    pub fn backlog(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Point-in-time service counters.
+    pub fn stats(&self) -> ServeSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Stop accepting requests, finish queued + in-flight work, join the
+    /// worker.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<Obj> Drop for SamplerService<Obj> {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Admit a work item: zero-sample requests complete immediately; others
+/// enter the in-flight table under a fresh stable id.
+fn admit<Obj>(
+    drain: &RefCell<DrainState<Obj>>,
+    item: WorkItem<Obj>,
+    stats: &ServeStats,
+) {
+    if item.req.n_samples == 0 {
+        item.ticket.fulfill(Ok(Vec::new()));
+        stats.requests_completed.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    let n = item.req.n_samples;
+    let mut s = drain.borrow_mut();
+    let id = s.next_id;
+    s.next_id += 1;
+    s.inflight.insert(
+        id,
+        InFlight {
+            ticket: item.ticket,
+            seed: item.req.seed,
+            n,
+            issued: 0,
+            done: 0,
+            outputs: (0..n).map(|_| None).collect(),
+        },
+    );
+    s.pending.push_back(id);
+}
+
+fn worker_loop<E, F>(
+    env: E,
+    policy_factory: F,
+    queue: Queue<WorkItem<E::Obj>>,
+    stats: Arc<ServeStats>,
+) where
+    E: VecEnv,
+    F: FnOnce() -> anyhow::Result<Box<dyn BatchPolicy>>,
+{
+    let mut policy = match policy_factory() {
+        Ok(p) => p,
+        Err(e) => {
+            // Refuse service: fail the backlog and all future submissions.
+            queue.close();
+            while let Some(item) = queue.try_pop() {
+                item.ticket.fulfill(Err(anyhow::anyhow!("policy init failed: {e}")));
+                stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+            }
+            return;
+        }
+    };
+
+    loop {
+        // Block for work (or shutdown once the queue is closed and drained).
+        let first = match queue.pop_blocking() {
+            Some(item) => item,
+            None => return,
+        };
+        let drain: RefCell<DrainState<E::Obj>> = RefCell::new(DrainState::new());
+        admit(&drain, first, &stats);
+
+        // Drain: the engine pulls trajectories lazily; the job source keeps
+        // admitting newly queued requests so they join the running batch.
+        let result = sample_stream(
+            &env,
+            policy.as_mut(),
+            || loop {
+                {
+                    let mut guard = drain.borrow_mut();
+                    let s = &mut *guard;
+                    while let Some(&id) = s.pending.front() {
+                        let f = s
+                            .inflight
+                            .get_mut(&id)
+                            .expect("pending id without in-flight entry");
+                        if f.issued < f.n {
+                            let i = f.issued;
+                            f.issued += 1;
+                            let seed = traj_seed(f.seed, i as u64);
+                            if f.issued == f.n {
+                                s.pending.pop_front();
+                            }
+                            return Some(TrajJob { request: id, traj_index: i, seed });
+                        }
+                        s.pending.pop_front();
+                    }
+                }
+                match queue.try_pop() {
+                    Some(item) => admit(&drain, item, &stats),
+                    None => return None,
+                }
+            },
+            |r: TrajResult<E::Obj>| {
+                stats.trajectories_completed.fetch_add(1, Ordering::Relaxed);
+                let mut guard = drain.borrow_mut();
+                let f = guard
+                    .inflight
+                    .get_mut(&r.request)
+                    .expect("trajectory for unknown request");
+                debug_assert!(f.outputs[r.traj_index].is_none(), "duplicate trajectory");
+                f.outputs[r.traj_index] = Some(SampleOutput {
+                    obj: r.obj,
+                    log_pf: r.log_pf,
+                    log_reward: r.log_reward,
+                    length: r.length,
+                    traj_index: r.traj_index,
+                });
+                f.done += 1;
+                if f.done == f.n {
+                    // Prune the completed request so a long-lived drain does
+                    // not accumulate history.
+                    let f = guard.inflight.remove(&r.request).unwrap();
+                    let outs: Vec<SampleOutput<E::Obj>> = f
+                        .outputs
+                        .into_iter()
+                        .map(|o| o.expect("missing trajectory"))
+                        .collect();
+                    f.ticket.fulfill(Ok(outs));
+                    stats.requests_completed.fetch_add(1, Ordering::Relaxed);
+                }
+            },
+        );
+
+        match result {
+            Ok(s) => {
+                stats.policy_dispatches.fetch_add(s.dispatches, Ordering::Relaxed);
+                stats.active_row_steps.fetch_add(s.active_row_steps, Ordering::Relaxed);
+                stats.total_row_steps.fetch_add(s.total_row_steps, Ordering::Relaxed);
+            }
+            Err(e) => {
+                // The engine is wedged (policy failure or env invariant
+                // breach): fail everything in flight and queued, then stop
+                // serving — later submissions error immediately.
+                let msg = format!("serve worker failed: {e}");
+                for f in drain.borrow_mut().inflight.values() {
+                    f.ticket.fulfill(Err(anyhow::anyhow!("{msg}")));
+                    stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+                }
+                queue.close();
+                while let Some(item) = queue.try_pop() {
+                    item.ticket.fulfill(Err(anyhow::anyhow!("{msg}")));
+                    stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+                }
+                return;
+            }
+        }
+    }
+}

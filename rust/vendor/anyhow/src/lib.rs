@@ -1,0 +1,136 @@
+//! Minimal work-alike of the `anyhow` crate (vendored for offline builds).
+//!
+//! Covers the API surface gfnx uses: [`Result`], [`Error`], and the
+//! [`anyhow!`], [`bail!`], [`ensure!`] macros. The semantics mirror the real
+//! crate where it matters:
+//!
+//! - `Error` wraps any `std::error::Error + Send + Sync + 'static` via a
+//!   blanket `From`, so `?` works on `std::io::Error` and friends;
+//! - `Error` deliberately does **not** implement `std::error::Error` itself
+//!   (that is what makes the blanket conversion coherent);
+//! - `anyhow!` accepts either a format string or a single displayable value.
+
+use std::fmt;
+
+/// A type-erased error: a display message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// The underlying source error, if this `Error` wrapped one.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn std::error::Error + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = self.source();
+        while let Some(e) = src {
+            write!(f, "\n\nCaused by:\n    {e}")?;
+            src = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 3;
+        let e = anyhow!("x = {x} and {}", 4);
+        assert_eq!(e.to_string(), "x = 3 and 4");
+        assert!(fails(true).is_ok());
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        let e = read().unwrap_err();
+        assert!(e.source().is_some());
+        let dbg = format!("{e:?}");
+        assert!(!dbg.is_empty());
+    }
+
+    #[test]
+    fn bail_short_circuits() {
+        fn f() -> Result<()> {
+            bail!("stop {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop 1");
+    }
+}

@@ -1,0 +1,338 @@
+//! API stub of [xla-rs] 0.5.x (vendored for offline builds).
+//!
+//! The build image has neither crates.io access nor `libxla_extension`, so
+//! this crate mirrors the subset of the xla-rs surface that gfnx's `runtime`
+//! module uses. Host-side plumbing ([`Literal`], [`PjRtBuffer`], reshape,
+//! tuple decomposition) is fully functional; only
+//! [`PjRtLoadedExecutable::execute`] / [`PjRtLoadedExecutable::execute_b`]
+//! are unimplemented, returning [`Error::Unimplemented`] — there is no XLA
+//! runtime here. Everything that does not execute a compiled HLO graph
+//! (environments, host-policy rollouts, the serve subsystem, benches over
+//! `UniformPolicy`) works unchanged against this stub, and the signatures
+//! match xla-rs so swapping in the real crate requires no call-site edits.
+//!
+//! [xla-rs]: https://github.com/LaurentMazare/xla-rs
+
+use std::rc::Rc;
+
+/// Errors surfaced by the (stub) XLA runtime.
+#[derive(Clone, Debug)]
+pub enum Error {
+    /// The operation needs the real XLA runtime, which this stub lacks.
+    Unimplemented(&'static str),
+    /// Shape/dtype mismatch in host-side literal plumbing.
+    Shape(String),
+    /// Filesystem-level failure loading an HLO artifact.
+    Io(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unimplemented(what) => write!(
+                f,
+                "{what}: unavailable in the vendored xla stub (install the real \
+                 xla-rs crate + libxla_extension to execute AOT artifacts)"
+            ),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+type XlaResult<T> = std::result::Result<T, Error>;
+
+/// Element types gfnx's manifests can reference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    F32,
+    F64,
+}
+
+/// Typed literal payload (public only because [`ArrayElement`] mentions it).
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    F64(Vec<f64>),
+    Tuple(Vec<Literal>),
+}
+
+/// Native element types storable in a [`Literal`] (mirror of xla-rs's
+/// `NativeType`/`ArrayElement`).
+pub trait ArrayElement: Copy + Sized + 'static {
+    const TY: ElementType;
+    fn wrap(data: Vec<Self>) -> Payload;
+    fn unwrap(p: &Payload) -> Option<&[Self]>;
+}
+
+impl ArrayElement for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(data: Vec<f32>) -> Payload {
+        Payload::F32(data)
+    }
+    fn unwrap(p: &Payload) -> Option<&[f32]> {
+        match p {
+            Payload::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl ArrayElement for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(data: Vec<i32>) -> Payload {
+        Payload::I32(data)
+    }
+    fn unwrap(p: &Payload) -> Option<&[i32]> {
+        match p {
+            Payload::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl ArrayElement for f64 {
+    const TY: ElementType = ElementType::F64;
+    fn wrap(data: Vec<f64>) -> Payload {
+        Payload::F64(data)
+    }
+    fn unwrap(p: &Payload) -> Option<&[f64]> {
+        match p {
+            Payload::F64(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side typed tensor (or tuple of tensors).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: ArrayElement>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], payload: T::wrap(data.to_vec()) }
+    }
+
+    /// Tuple literal from parts.
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: vec![parts.len() as i64], payload: Payload::Tuple(parts) }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::F64(v) => v.len(),
+            Payload::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> XlaResult<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() || matches!(self.payload, Payload::Tuple(_)) {
+            return Err(Error::Shape(format!(
+                "cannot reshape {} elements to {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    /// Element type of this literal.
+    pub fn ty(&self) -> XlaResult<ElementType> {
+        match &self.payload {
+            Payload::F32(_) => Ok(ElementType::F32),
+            Payload::I32(_) => Ok(ElementType::S32),
+            Payload::F64(_) => Ok(ElementType::F64),
+            Payload::Tuple(_) => Err(Error::Shape("ty() on tuple literal".into())),
+        }
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: ArrayElement>(&self) -> XlaResult<Vec<T>> {
+        T::unwrap(&self.payload)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error::Shape(format!("literal is not {:?}", T::TY)))
+    }
+
+    /// First element (scalar reads).
+    pub fn get_first_element<T: ArrayElement>(&self) -> XlaResult<T> {
+        T::unwrap(&self.payload)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error::Shape("empty or mistyped literal".into()))
+    }
+
+    /// Copy raw elements into a destination slice (lengths must match).
+    pub fn copy_raw_to<T: ArrayElement>(&self, dst: &mut [T]) -> XlaResult<()> {
+        let src = T::unwrap(&self.payload)
+            .ok_or_else(|| Error::Shape(format!("literal is not {:?}", T::TY)))?;
+        if src.len() != dst.len() {
+            return Err(Error::Shape(format!(
+                "copy_raw_to length mismatch: {} vs {}",
+                src.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(src);
+        Ok(())
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> XlaResult<Vec<Literal>> {
+        match &self.payload {
+            Payload::Tuple(v) => Ok(v.clone()),
+            _ => Err(Error::Shape("to_tuple() on non-tuple literal".into())),
+        }
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module (stub: retains only the source path).
+pub struct HloModuleProto {
+    _path: String,
+}
+
+impl HloModuleProto {
+    /// Load an HLO text file. Succeeds when the file is readable; the text
+    /// is not interpreted by the stub.
+    pub fn from_text_file(path: &str) -> XlaResult<HloModuleProto> {
+        std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{path}: {e}")))?;
+        Ok(HloModuleProto { _path: path.to_string() })
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client handle. `Rc`-based (not `Send`), matching xla-rs's CPU client
+/// threading model: one client per thread, clones share the underlying
+/// runtime.
+#[derive(Clone)]
+pub struct PjRtClient {
+    _rc: Rc<()>,
+}
+
+impl PjRtClient {
+    /// The CPU client. Always constructible in the stub.
+    pub fn cpu() -> XlaResult<PjRtClient> {
+        Ok(PjRtClient { _rc: Rc::new(()) })
+    }
+
+    /// "Compile" a computation. The stub returns a handle whose `execute*`
+    /// methods report [`Error::Unimplemented`].
+    pub fn compile(&self, _comp: &XlaComputation) -> XlaResult<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { _priv: () })
+    }
+
+    /// Upload a host buffer as a device buffer (host-side copy in the stub).
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> XlaResult<PjRtBuffer> {
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let lit = Literal::vec1(data).reshape(&dims_i64)?;
+        Ok(PjRtBuffer { lit })
+    }
+}
+
+/// A device-resident buffer (host-side in the stub).
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+impl AsRef<PjRtBuffer> for PjRtBuffer {
+    fn as_ref(&self) -> &PjRtBuffer {
+        self
+    }
+}
+
+/// A compiled executable handle. Execution needs the real XLA runtime.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments. Unimplemented in the stub.
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T]) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unimplemented("PjRtLoadedExecutable::execute"))
+    }
+
+    /// Execute with device-buffer arguments. Unimplemented in the stub.
+    pub fn execute_b<T: AsRef<PjRtBuffer>>(&self, _args: &[T]) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unimplemented("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.ty().unwrap(), ElementType::F32);
+        assert!(lit.reshape(&[3, 3]).is_err());
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+        let mut dst = [0f32; 4];
+        lit.copy_raw_to::<f32>(&mut dst).unwrap();
+        assert_eq!(dst, [1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn tuple_decomposition() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<i32>().unwrap(), vec![1]);
+        assert!(parts[1].to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_plumbs_buffers_but_not_execution() {
+        let c = PjRtClient::cpu().unwrap();
+        let buf = c.buffer_from_host_buffer(&[1.0f32, 2.0], &[2, 1], None).unwrap();
+        let lit = buf.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        let exe = c.compile(&XlaComputation::from_proto(
+            &HloModuleProto { _path: String::new() },
+        )).unwrap();
+        assert!(exe.execute::<Literal>(&[]).is_err());
+    }
+}
