@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         }
         if i % (iters / 8).max(1) == 0 {
             let corr = reward_correlation(
-                &env, &art, &trainer.state, &mut trainer.ctx, &mut trainer.rng, &test, 4,
+                &env, &trainer.backend, &mut trainer.ctx, &mut trainer.rng, &test, 4,
             )?;
             println!(
                 "iter {i:5}  loss {:9.3}  corr {corr:+.3}  modes found {}/{}",

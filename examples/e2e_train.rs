@@ -1,17 +1,18 @@
 //! End-to-end system driver (DESIGN.md §End-to-end validation).
 //!
-//! Trains the transformer policy on the bit-sequence environment — the full
-//! three-layer stack under real load:
+//! Trains a policy on the bit-sequence environment — the full stack under
+//! real load:
 //!
 //!   L3 rust: vectorized non-autoregressive env, mode-set reward, ε-explore,
 //!            FIFO metrics, Pearson-correlation eval with MC backward P̂_θ;
-//!   L2 jax : transformer encoder + TB objective + Adam, one fused HLO;
-//!   L1     : fused masked log-softmax over the position×token action space.
+//!   backend: `--backend xla` replays the AOT transformer graph
+//!            (`make artifacts` + real xla-rs); `--backend native` trains
+//!            the pure-Rust MLP policy with no artifacts at all;
+//!            `--backend auto` (default) prefers xla and falls back.
 //!
-//! Logs the loss curve and the reward-correlation metric; the run recorded
-//! in EXPERIMENTS.md §E2E comes from this binary.
+//! Logs the loss curve and the reward-correlation metric.
 //!
-//! Run: `cargo run --release --example e2e_train -- [--iters N]`
+//! Run: `cargo run --release --example e2e_train -- [--iters N] [--backend native]`
 
 use gfnx::coordinator::config::artifacts_dir;
 use gfnx::coordinator::eval::reward_correlation;
@@ -21,7 +22,7 @@ use gfnx::coordinator::trainer::Trainer;
 use gfnx::data::modes::generate_test_set;
 use gfnx::envs::bitseq::{bitseq_env, test_set_tokens, BitSeqConfig};
 use gfnx::envs::VecEnv;
-use gfnx::runtime::Artifact;
+use gfnx::runtime::{Artifact, Backend, NativeBackend, NativeConfig};
 use gfnx::util::cli::Cli;
 use gfnx::util::logging::MetricsLog;
 use gfnx::util::rng::Rng;
@@ -30,6 +31,7 @@ fn main() -> anyhow::Result<()> {
     let args = Cli::new("e2e_train", "end-to-end bitseq training driver")
         .flag("iters", "600", "training iterations")
         .flag("seed", "0", "rng seed")
+        .flag("backend", "auto", "auto | xla | native")
         .flag("log", "runs/e2e_train.jsonl", "JSONL metrics path")
         .parse();
     let iters = args.get_u64("iters");
@@ -43,10 +45,6 @@ fn main() -> anyhow::Result<()> {
         cfg.n_bits, cfg.k, spec.obs_dim, spec.n_actions, spec.t_max, modes.len()
     );
 
-    let art = Artifact::load(&artifacts_dir(), "bitseq_small.tb")?;
-    let n_params: usize = art.manifest.params.iter().map(|p| p.element_count()).sum();
-    println!("transformer parameters: {n_params}");
-
     // Evaluation test set: per paper §B.2 — every mode with 0..n bit flips.
     let mut rng = Rng::new(seed ^ 0xEE);
     let test_bits = generate_test_set(&modes, &mut rng);
@@ -55,9 +53,73 @@ fn main() -> anyhow::Result<()> {
     let test: Vec<_> = test.into_iter().step_by(3).collect();
     println!("correlation test set: {} sequences", test.len());
 
-    let mut trainer = Trainer::new(&env, &art, seed, EpsSchedule::Constant(1e-3))?;
-    let mut log = MetricsLog::to_file("e2e_train", std::path::Path::new(args.get("log")))?;
+    let explore = EpsSchedule::Constant(1e-3);
+    match args.get("backend") {
+        "xla" => run_xla(&env, &test, iters, seed, explore, args.get("log"), cfg),
+        "native" => run_native(&env, &test, iters, seed, explore, args.get("log"), cfg),
+        "auto" => {
+            // Prefer the AOT transformer, but fall back to native if the
+            // artifact is missing OR the xla path cannot execute (e.g. the
+            // vendored stub is linked instead of real xla-rs — that fails
+            // at the first policy dispatch, not at load time).
+            if artifacts_dir().join("bitseq_small.tb.manifest.json").exists() {
+                match run_xla(&env, &test, iters, seed, explore, args.get("log"), cfg) {
+                    Ok(()) => return Ok(()),
+                    Err(e) => println!("xla backend unavailable ({e}); falling back to native"),
+                }
+            } else {
+                println!("no AOT artifacts; using the native backend");
+            }
+            run_native(&env, &test, iters, seed, explore, args.get("log"), cfg)
+        }
+        other => anyhow::bail!("unknown backend {other:?} (auto | xla | native)"),
+    }
+}
 
+fn run_xla(
+    env: &gfnx::envs::bitseq::BitSeqEnv,
+    test: &[Vec<i16>],
+    iters: u64,
+    seed: u64,
+    explore: EpsSchedule,
+    log_path: &str,
+    cfg: BitSeqConfig,
+) -> anyhow::Result<()> {
+    let art = Artifact::load(&artifacts_dir(), "bitseq_small.tb")?;
+    let n_params: usize = art.manifest.params.iter().map(|p| p.element_count()).sum();
+    println!("xla backend: transformer parameters: {n_params}");
+    let trainer = Trainer::new(env, &art, seed, explore)?;
+    run(trainer, env, test, iters, log_path, cfg)
+}
+
+fn run_native(
+    env: &gfnx::envs::bitseq::BitSeqEnv,
+    test: &[Vec<i16>],
+    iters: u64,
+    seed: u64,
+    explore: EpsSchedule,
+    log_path: &str,
+    cfg: BitSeqConfig,
+) -> anyhow::Result<()> {
+    // Native path: MLP policy over the token one-hots (the transformer
+    // stays xla-only), batch 16 as in the bitseq presets.
+    let ncfg = NativeConfig::for_env(env, 16, "tb")
+        .with_workers(gfnx::util::threadpool::default_workers());
+    let backend = NativeBackend::new(ncfg, seed)?;
+    println!("native backend: pure-Rust MLP, no artifacts needed");
+    let trainer = Trainer::with_backend(env, backend, seed, explore)?;
+    run(trainer, env, test, iters, log_path, cfg)
+}
+
+fn run<B: Backend>(
+    mut trainer: Trainer<'_, gfnx::envs::bitseq::BitSeqEnv, B>,
+    env: &gfnx::envs::bitseq::BitSeqEnv,
+    test: &[Vec<i16>],
+    iters: u64,
+    log_path: &str,
+    cfg: BitSeqConfig,
+) -> anyhow::Result<()> {
+    let mut log = MetricsLog::to_file("e2e_train", std::path::Path::new(log_path))?;
     let eval_every = (iters / 6).max(1);
     for i in 0..=iters {
         let (stats, _objs) = trainer.train_iter(&ExtraSource::None)?;
@@ -70,12 +132,11 @@ fn main() -> anyhow::Result<()> {
         }
         if i % eval_every == 0 {
             let corr = reward_correlation(
-                &env,
-                &art,
-                &trainer.state,
+                env,
+                &trainer.backend,
                 &mut trainer.ctx,
                 &mut trainer.rng,
-                &test,
+                test,
                 4,
             )?;
             log.log(i, &[("pearson_corr", corr)]);

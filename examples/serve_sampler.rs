@@ -1,34 +1,89 @@
 //! serve_sampler — stand up the continuous-batching sampling service on
 //! hypergrid and bitseq and stream sampled objects.
 //!
-//! The demo prefers the AOT policy artifact when one is available
-//! (`make artifacts`), and falls back to the host-side masked-uniform
-//! policy otherwise, so it runs out of the box in artifact-less builds.
+//! The hypergrid demo **trains** a policy first and then serves the trained
+//! snapshot through the slot-refill engine, so the sampled states
+//! concentrate on the high-reward corner regions:
 //!
-//! Run: `cargo run --release --example serve_sampler`
+//! - `--backend native` (default): train the pure-Rust MLP backend in
+//!   process (no artifacts), then serve its [`NativePolicy`] snapshot.
+//! - `--backend xla`: serve the AOT policy artifact (needs `make artifacts`
+//!   and the real xla-rs crate).
+//! - `--backend uniform`: skip training, serve the masked-uniform policy.
+//!
+//! Run: `cargo run --release --example serve_sampler -- [--backend native] [--train-iters N]`
 
 use gfnx::coordinator::config::artifacts_dir;
+use gfnx::coordinator::explore::EpsSchedule;
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
 use gfnx::envs::bitseq::{bitseq_env, BitSeqConfig};
 use gfnx::envs::hypergrid::HypergridEnv;
 use gfnx::reward::hypergrid::HypergridReward;
 use gfnx::runtime::policy::{BatchPolicy, OwnedArtifactPolicy, PolicyShape, UniformPolicy};
+use gfnx::runtime::{NativeBackend, NativeConfig};
 use gfnx::serve::{SampleRequest, SamplerService};
+use gfnx::util::cli::Cli;
+use gfnx::util::threadpool::default_workers;
 use std::collections::HashMap;
 
 fn main() -> anyhow::Result<()> {
+    let args = Cli::new("serve_sampler", "continuous-batching sampling service demo")
+        .flag("backend", "native", "policy backend: native | xla | uniform")
+        .flag("train-iters", "400", "native-backend training iterations before serving")
+        .flag("seed", "0", "rng seed")
+        .parse();
+    let backend = args.get("backend").to_string();
+    anyhow::ensure!(
+        matches!(backend.as_str(), "native" | "xla" | "uniform"),
+        "unknown backend {backend:?} (native | xla | uniform)"
+    );
+    let train_iters = args.get_u64("train-iters");
+    let seed = args.get_u64("seed");
+
     // ---- Hypergrid: heterogeneous trajectory lengths. --------------------
     let env = HypergridEnv::new(2, 8, HypergridReward::standard(8));
     let shape = PolicyShape::of_env(&env, 32);
+
+    // Build the serving policy. The native path trains first — the point of
+    // the demo: a policy trained entirely in Rust feeding the slot-refill
+    // sampler.
+    let trained_native = if backend == "native" {
+        let cfg = NativeConfig::for_env(&env, 32, "tb")
+            .with_hidden(64)
+            .with_workers(default_workers());
+        let nb = NativeBackend::new(cfg, seed)?;
+        let mut trainer = Trainer::with_backend(&env, nb, seed, EpsSchedule::none())?;
+        let mut last_loss = f32::NAN;
+        for i in 0..train_iters {
+            let (stats, _) = trainer.train_iter(&ExtraSource::None)?;
+            last_loss = stats.loss;
+            if i % 100 == 0 {
+                println!("train iter {i:4}  TB loss {:8.4}  logZ {:6.3}", stats.loss, stats.log_z);
+            }
+        }
+        println!("trained native policy for {train_iters} iters (final loss {last_loss:.4})");
+        Some(trainer.backend.to_policy())
+    } else {
+        None
+    };
+
+    let backend_for_worker = backend.clone();
     let svc: SamplerService<Vec<i32>> = SamplerService::spawn(env, move || {
-        // Build the policy on the worker thread (PJRT clients are
-        // thread-local); fall back to the uniform policy without artifacts.
-        match OwnedArtifactPolicy::load(&artifacts_dir(), "hypergrid_small.tb") {
-            Ok(p) => {
+        // Built on the worker thread (PJRT clients are thread-local; the
+        // native snapshot is Send and just moves in).
+        match backend_for_worker.as_str() {
+            "native" => {
+                println!("hypergrid worker: serving the trained NativePolicy snapshot");
+                Ok(Box::new(trained_native.expect("trained policy")) as Box<dyn BatchPolicy>)
+            }
+            "xla" => {
+                let p = OwnedArtifactPolicy::load(&artifacts_dir(), "hypergrid_small.tb")?;
                 println!("hypergrid worker: serving the AOT policy artifact");
                 Ok(Box::new(p) as Box<dyn BatchPolicy>)
             }
-            Err(e) => {
-                println!("hypergrid worker: artifacts unavailable ({e}); serving UniformPolicy");
+            _ => {
+                println!("hypergrid worker: serving the masked-uniform policy");
                 Ok(Box::new(UniformPolicy::new(shape)) as Box<dyn BatchPolicy>)
             }
         }
@@ -40,39 +95,53 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let mut counts: HashMap<Vec<i32>, usize> = HashMap::new();
     let mut total_len = 0usize;
+    let mut mean_log_r = 0.0f64;
     let mut n = 0usize;
     for t in tickets {
         for out in t.wait()? {
             *counts.entry(out.obj).or_insert(0) += 1;
             total_len += out.length;
+            mean_log_r += out.log_reward;
             n += 1;
         }
     }
     let stats = svc.stats();
     println!(
-        "hypergrid: {} objects over {} dispatches, occupancy {:.1}%, mean length {:.2}, {:.0} objs/s",
+        "hypergrid: {} objects over {} dispatches, occupancy {:.1}%, mean length {:.2}, \
+         mean log R {:.3}, {:.0} objs/s",
         n,
         stats.policy_dispatches,
         100.0 * stats.occupancy(),
         total_len as f64 / n as f64,
+        mean_log_r / n as f64,
         stats.objs_per_sec()
     );
     let mut top: Vec<_> = counts.into_iter().collect();
     top.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-    println!("hypergrid: top sampled states:");
+    println!("hypergrid: top sampled states (trained policies concentrate near corners):");
     for (coords, c) in top.iter().take(5) {
         println!("  {coords:?}  ×{c}");
     }
     svc.shutdown();
 
     // ---- Bitseq: fixed-length sequences, mode hunting. -------------------
+    // This half demonstrates raw serve throughput and is independent of
+    // `--backend`: it serves the AOT artifact when present, else the
+    // masked-uniform policy (untrained — the mode stats below are a
+    // baseline, not a trained-policy result).
     let cfg = BitSeqConfig::small();
     let (benv, modes) = bitseq_env(cfg);
     let bshape = PolicyShape::of_env(&benv, 32);
     let bsvc: SamplerService<Vec<i16>> = SamplerService::spawn(benv, move || {
         match OwnedArtifactPolicy::load(&artifacts_dir(), "bitseq_small.tb") {
-            Ok(p) => Ok(Box::new(p) as Box<dyn BatchPolicy>),
-            Err(_) => Ok(Box::new(UniformPolicy::new(bshape)) as Box<dyn BatchPolicy>),
+            Ok(p) => {
+                println!("bitseq worker: serving the AOT policy artifact");
+                Ok(Box::new(p) as Box<dyn BatchPolicy>)
+            }
+            Err(_) => {
+                println!("bitseq worker: serving the untrained masked-uniform policy");
+                Ok(Box::new(UniformPolicy::new(bshape)) as Box<dyn BatchPolicy>)
+            }
         }
     });
     let outs = bsvc.sample(500, 42)?;

@@ -42,8 +42,7 @@ fn main() {
             if i % (iters / 6).max(1) == 0 {
                 let corr = reward_correlation(
                     &env,
-                    &art,
-                    &trainer.state,
+                    &trainer.backend,
                     &mut trainer.ctx,
                     &mut trainer.rng,
                     &test,

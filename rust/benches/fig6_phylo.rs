@@ -50,8 +50,7 @@ fn bench_dataset(table: &mut BenchTable, label: &str, env: &PhyloEnv, artifact: 
             trees.dedup();
             let corr = reward_correlation(
                 env,
-                &art,
-                &trainer.state,
+                &trainer.backend,
                 &mut trainer.ctx,
                 &mut trainer.rng,
                 &trees,

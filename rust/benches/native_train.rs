@@ -1,0 +1,105 @@
+//! native_train — end-to-end training throughput (iterations/second) of the
+//! pure-Rust [`NativeBackend`]: one iteration = on-policy rollout + fused
+//! loss/grad/Adam step, the paper's Table 1 unit of work — with **no AOT
+//! artifacts and no XLA**.
+//!
+//! Measures TB on hypergrid and bitseq at batch 16 and 256 (the paper's
+//! small/large batch regimes).
+//!
+//! Run:   cargo bench --bench native_train
+//! Env:   GFNX_NATIVE_HIDDEN    MLP trunk width (default 128)
+//!        GFNX_NATIVE_WORKERS   dispatch worker threads (default: all cores)
+//!        GFNX_NATIVE_ITERS     iters per timed window at batch 16
+//!                              (default 10; batch-256 runs use max(it/4, 2))
+//!        GFNX_BENCH_REPEATS    timed windows (default 3)
+//!
+//! Emits `BENCH_native.json` via the `BenchJson` harness.
+
+use gfnx::bench::harness::{itps_json, measure_it_per_sec, BenchJson, BenchTable};
+use gfnx::coordinator::explore::EpsSchedule;
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::envs::bitseq::{bitseq_env, BitSeqConfig};
+use gfnx::envs::hypergrid::HypergridEnv;
+use gfnx::envs::VecEnv;
+use gfnx::reward::hypergrid::HypergridReward;
+use gfnx::runtime::{NativeBackend, NativeConfig};
+use gfnx::util::json::Json;
+use gfnx::util::stats::ItPerSec;
+use gfnx::util::threadpool::default_workers;
+
+fn envv(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn bench_env<E: VecEnv>(
+    env: &E,
+    label: &str,
+    batch: usize,
+    hidden: usize,
+    workers: usize,
+    iters: usize,
+    repeats: usize,
+) -> ItPerSec {
+    let cfg = NativeConfig::for_env(env, batch, "tb")
+        .with_hidden(hidden)
+        .with_workers(workers);
+    let backend = NativeBackend::new(cfg, 0).expect("native backend");
+    let mut trainer =
+        Trainer::with_backend(env, backend, 0, EpsSchedule::none()).expect("trainer");
+    let r = measure_it_per_sec(1, repeats, iters, || {
+        let (stats, _objs) = trainer.train_iter(&ExtraSource::None).unwrap();
+        assert!(stats.loss.is_finite(), "{label}: loss diverged");
+    });
+    println!("  {label:<24} batch {batch:>3}: {r}");
+    r
+}
+
+fn main() {
+    let hidden = envv("GFNX_NATIVE_HIDDEN", 128);
+    let workers = envv("GFNX_NATIVE_WORKERS", default_workers());
+    let iters16 = envv("GFNX_NATIVE_ITERS", 10);
+    let iters256 = (iters16 / 4).max(2);
+    let repeats = envv("GFNX_BENCH_REPEATS", 3);
+    println!(
+        "native TB training throughput (hidden {hidden}, {workers} workers, \
+         {repeats} windows)"
+    );
+
+    let hg = HypergridEnv::new(2, 8, HypergridReward::standard(8));
+    let (bs, _modes) = bitseq_env(BitSeqConfig::small());
+
+    let rows: Vec<(&str, usize, ItPerSec)> = vec![
+        ("hypergrid_small", 16, bench_env(&hg, "hypergrid_small", 16, hidden, workers, iters16, repeats)),
+        ("hypergrid_small", 256, bench_env(&hg, "hypergrid_small", 256, hidden, workers, iters256, repeats)),
+        ("bitseq_small", 16, bench_env(&bs, "bitseq_small", 16, hidden, workers, iters16, repeats)),
+        ("bitseq_small", 256, bench_env(&bs, "bitseq_small", 256, hidden, workers, iters256, repeats)),
+    ];
+
+    let mut table = BenchTable::new(
+        "native_train — TB training it/s, pure-Rust backend (no artifacts)",
+        &["Env", "Batch", "it/s"],
+    );
+    for (env, batch, r) in &rows {
+        table.row(&[env.to_string(), batch.to_string(), r.to_string()]);
+    }
+    table.print();
+
+    let mut bj = BenchJson::new("native");
+    bj.meta("backend", Json::Str("native".to_string()));
+    bj.meta("loss", Json::Str("tb".to_string()));
+    bj.meta("hidden", Json::Num(hidden as f64));
+    bj.meta("workers", Json::Num(workers as f64));
+    bj.meta("repeats", Json::Num(repeats as f64));
+    for (env, batch, r) in &rows {
+        bj.row(Json::obj(vec![
+            ("env", Json::Str(env.to_string())),
+            ("batch", Json::Num(*batch as f64)),
+            ("it_per_sec", itps_json(r)),
+        ]));
+    }
+    match bj.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_native.json write failed: {e}"),
+    }
+}

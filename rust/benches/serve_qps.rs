@@ -15,6 +15,8 @@
 //!        GFNX_SERVE_H        hypergrid side (default 48 → t_max 95)
 //!        GFNX_SERVE_OBJS     objects per timed window (default 4096)
 //!        GFNX_SERVE_SYNTH    synthetic dispatch-work rounds (default 8)
+//!        GFNX_SERVE_POLICY   dispatch backend: uniform (synthetic cost) or
+//!                            native (real MLP dispatch; default uniform)
 //!        GFNX_BENCH_REPEATS  timed windows (default 5)
 //!
 //! Emits `BENCH_serve.json` (see `bench::harness::BenchJson`).
@@ -25,6 +27,7 @@ use gfnx::envs::hypergrid::HypergridEnv;
 use gfnx::envs::VecEnv;
 use gfnx::reward::hypergrid::HypergridReward;
 use gfnx::runtime::policy::{BatchPolicy, PolicyShape, UniformPolicy};
+use gfnx::runtime::{NativeBackend, NativeConfig};
 use gfnx::serve::{sample_stream, SampleRequest, SamplerService, TrajJob};
 use gfnx::util::json::Json;
 use gfnx::util::rng::Rng;
@@ -38,25 +41,55 @@ fn env(h: usize) -> HypergridEnv<HypergridReward> {
     HypergridEnv::new(2, h, HypergridReward::standard(h))
 }
 
+/// Dispatch-policy factory for the selected backend.
+///
+/// `uniform` (the default) burns a synthetic cost that is strictly a
+/// function of the batch *shape* — the cleanest isolation of the
+/// scheduling effect, and what the acceptance bar is stated against.
+/// `native` dispatches the real MLP; its cost is *mostly* shape-fixed, but
+/// dead-slot rows are staged with zeroed observations and the dense
+/// kernels skip zero input columns, so padding rows run cheaper than live
+/// ones — treat native-mode speedups as an end-to-end measurement, not a
+/// pure scheduling comparison.
+fn make_policy(
+    e: &HypergridEnv<HypergridReward>,
+    shape: PolicyShape,
+    backend: &str,
+    synth: usize,
+) -> Box<dyn BatchPolicy> {
+    match backend {
+        "native" => {
+            let cfg = NativeConfig::for_env(e, shape.batch, "tb").with_hidden(64);
+            Box::new(NativeBackend::new(cfg, 0).expect("native backend").to_policy())
+        }
+        _ => Box::new(UniformPolicy::with_work(shape, synth)),
+    }
+}
+
 fn main() {
     let b = envv("GFNX_SERVE_B", 64);
     let h = envv("GFNX_SERVE_H", 48);
     let objs_per_window = envv("GFNX_SERVE_OBJS", 4096);
     let synth = envv("GFNX_SERVE_SYNTH", 8);
     let repeats = envv("GFNX_BENCH_REPEATS", 5);
+    let backend = std::env::var("GFNX_SERVE_POLICY").unwrap_or_else(|_| "uniform".to_string());
+    if !matches!(backend.as_str(), "uniform" | "native") {
+        eprintln!("error: GFNX_SERVE_POLICY={backend:?} (expected uniform | native)");
+        std::process::exit(2);
+    }
 
     let e = env(h);
     let spec = e.spec();
     let shape = PolicyShape::of_env(&e, b);
     println!(
-        "workload: hypergrid 2d side={h} (t_max={}), B={b}, {} objs/window, synth={synth}",
+        "workload: hypergrid 2d side={h} (t_max={}), B={b}, {} objs/window, synth={synth}, policy={backend}",
         spec.t_max, objs_per_window
     );
 
     // --- Padded baseline: forward_rollout, B objects per drain. ----------
     let mut padded_dispatch_note = 0u64;
     let padded = {
-        let mut policy = UniformPolicy::with_work(shape, synth);
+        let mut policy = make_policy(&e, shape, &backend, synth);
         let mut ctx = RolloutCtx::for_shape(&shape);
         let mut rng = Rng::new(1);
         measure_items_per_sec(1, repeats, || {
@@ -64,7 +97,7 @@ fn main() {
             while produced < objs_per_window {
                 let (batch, objs) = forward_rollout_with_policy(
                     &e,
-                    &mut policy,
+                    policy.as_mut(),
                     &mut ctx,
                     &mut rng,
                     0.0,
@@ -82,7 +115,7 @@ fn main() {
     // --- Continuous batching: same thread, same policy economics. --------
     let mut refill_stats = gfnx::serve::StreamStats::default();
     let refill = {
-        let mut policy = UniformPolicy::with_work(shape, synth);
+        let mut policy = make_policy(&e, shape, &backend, synth);
         let mut window = 0u64;
         measure_items_per_sec(1, repeats, || {
             let seed_base = 10_000 * window;
@@ -91,7 +124,7 @@ fn main() {
             let mut produced = 0usize;
             let stats = sample_stream(
                 &e,
-                &mut policy,
+                policy.as_mut(),
                 || {
                     if next < objs_per_window {
                         let j = TrajJob {
@@ -115,8 +148,10 @@ fn main() {
 
     // --- Full service (worker thread + queue + tickets). ------------------
     let service = {
+        let backend_name = backend.clone();
         let svc: SamplerService<Vec<i32>> = SamplerService::spawn(env(h), move || {
-            Ok(Box::new(UniformPolicy::with_work(shape, synth)) as Box<dyn BatchPolicy>)
+            let e = env(h);
+            Ok(make_policy(&e, shape, &backend_name, synth))
         });
         let n_requests = 8;
         let per_request = objs_per_window / n_requests;
@@ -166,6 +201,7 @@ fn main() {
     table.print();
 
     let mut bj = BenchJson::new("serve");
+    bj.meta("policy_backend", Json::Str(backend.clone()));
     bj.meta("env", Json::Str(format!("hypergrid_2d_{h}")));
     bj.meta("t_max", Json::Num(spec.t_max as f64));
     bj.meta("batch", Json::Num(b as f64));

@@ -1,9 +1,13 @@
 //! Evaluation protocols (paper §B): the Monte-Carlo P̂_θ estimator behind
 //! the Pearson-correlation metric, and the exact-distribution TV/JSD hooks.
+//!
+//! All estimators are generic over [`Backend`] — they score trajectories
+//! through one fixed-shape policy dispatch per step, so they run unchanged
+//! against the AOT artifacts or the native backend.
 
-use super::rollout::{backward_rollout_score, RolloutCtx};
+use super::rollout::{backward_rollout_score_with_policy, RolloutCtx};
 use crate::envs::VecEnv;
-use crate::runtime::{Artifact, TrainState};
+use crate::runtime::backend::{Backend, BackendPolicy};
 use crate::util::rng::Rng;
 use crate::util::stats::{logsumexp, pearson};
 
@@ -12,22 +16,22 @@ use crate::util::stats::{logsumexp, pearson};
 ///   P̂_θ(x) = (1/N) Σ_i P_F(τⁱ)/P_B(τⁱ|x),  τⁱ ~ P_B(·|x)
 ///
 /// computed in log space with logsumexp over `n_samples` backward rollouts.
-pub fn log_p_theta_hat<E: VecEnv>(
+pub fn log_p_theta_hat<E: VecEnv, B: Backend + ?Sized>(
     env: &E,
-    art: &Artifact,
-    ts: &TrainState,
+    backend: &B,
     ctx: &mut RolloutCtx,
     rng: &mut Rng,
     obj: &E::Obj,
     n_samples: usize,
 ) -> anyhow::Result<f64> {
-    let b = art.manifest.config.batch;
+    let b = backend.shape().batch;
+    let mut policy = BackendPolicy { backend };
     let mut ratios = Vec::with_capacity(n_samples);
     let mut remaining = n_samples;
     while remaining > 0 {
         let chunk = remaining.min(b);
         let objs: Vec<E::Obj> = (0..chunk).map(|_| obj.clone()).collect();
-        let scores = backward_rollout_score(env, art, ts, ctx, rng, &objs)?;
+        let scores = backward_rollout_score_with_policy(env, &mut policy, ctx, rng, &objs)?;
         for (log_pf, log_pb, _len) in scores {
             ratios.push(log_pf - log_pb);
         }
@@ -37,22 +41,22 @@ pub fn log_p_theta_hat<E: VecEnv>(
 }
 
 /// Batched variant: estimates log P̂_θ for a set of distinct objects, using
-/// the artifact's full batch width per backward pass (`n_samples` passes).
-pub fn log_p_theta_hat_batch<E: VecEnv>(
+/// the backend's full batch width per backward pass (`n_samples` passes).
+pub fn log_p_theta_hat_batch<E: VecEnv, B: Backend + ?Sized>(
     env: &E,
-    art: &Artifact,
-    ts: &TrainState,
+    backend: &B,
     ctx: &mut RolloutCtx,
     rng: &mut Rng,
     objs: &[E::Obj],
     n_samples: usize,
 ) -> anyhow::Result<Vec<f64>> {
-    let b = art.manifest.config.batch;
+    let b = backend.shape().batch;
+    let mut policy = BackendPolicy { backend };
     let mut per_obj: Vec<Vec<f64>> = vec![Vec::with_capacity(n_samples); objs.len()];
     for chunk_start in (0..objs.len()).step_by(b) {
         let chunk = &objs[chunk_start..objs.len().min(chunk_start + b)];
         for _ in 0..n_samples {
-            let scores = backward_rollout_score(env, art, ts, ctx, rng, chunk)?;
+            let scores = backward_rollout_score_with_policy(env, &mut policy, ctx, rng, chunk)?;
             for (i, (log_pf, log_pb, _)) in scores.into_iter().enumerate() {
                 per_obj[chunk_start + i].push(log_pf - log_pb);
             }
@@ -66,16 +70,15 @@ pub fn log_p_theta_hat_batch<E: VecEnv>(
 
 /// The paper's correlation metric: Pearson between log R(x) and log P̂_θ(x)
 /// over a test set (Figs. 3 & 6 report this curve).
-pub fn reward_correlation<E: VecEnv>(
+pub fn reward_correlation<E: VecEnv, B: Backend + ?Sized>(
     env: &E,
-    art: &Artifact,
-    ts: &TrainState,
+    backend: &B,
     ctx: &mut RolloutCtx,
     rng: &mut Rng,
     test_set: &[E::Obj],
     n_samples: usize,
 ) -> anyhow::Result<f64> {
-    let log_p = log_p_theta_hat_batch(env, art, ts, ctx, rng, test_set, n_samples)?;
+    let log_p = log_p_theta_hat_batch(env, backend, ctx, rng, test_set, n_samples)?;
     let log_r: Vec<f64> = test_set.iter().map(|o| env.log_reward_obj(o)).collect();
     Ok(pearson(&log_r, &log_p))
 }

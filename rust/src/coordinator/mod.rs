@@ -3,10 +3,14 @@
 //! the host-synchronized baseline comparator.
 //!
 //! The coordinator owns everything outside the neural network: it drives the
-//! vectorized Rust environments, samples actions from the AOT policy graph's
+//! vectorized Rust environments, samples actions from the policy's
 //! log-probabilities, assembles padded trajectory batches in the exact
-//! layout the train-step artifact expects, and invokes the fused
-//! rollout-loss-grad-Adam step — one PJRT dispatch per training iteration.
+//! layout the train step expects, and invokes the fused
+//! rollout-loss-grad-Adam step — one [`Backend::train_step`] per training
+//! iteration, where the backend is either the AOT/PJRT graphs or the
+//! pure-Rust native network.
+//!
+//! [`Backend::train_step`]: crate::runtime::Backend::train_step
 
 pub mod config;
 pub mod rollout;

@@ -2,14 +2,20 @@
 //!
 //! One [`Trainer::train_iter`] = one paper "iteration" (the unit of the
 //! Table 1/2 it/s numbers): sample a batch of trajectories from the current
-//! policy with ε-exploration, assemble the padded batch, and execute the
-//! AOT rollout-loss-grad-Adam graph once.
+//! policy with ε-exploration, assemble the padded batch, and run the
+//! backend's fused rollout-loss-grad-Adam step once.
+//!
+//! The trainer is generic over [`Backend`]: the same loop drives the AOT
+//! artifact graphs ([`XlaBackend`], the default type parameter — construct
+//! via [`Trainer::new`]) and the pure-Rust
+//! [`NativeBackend`](crate::runtime::NativeBackend) (construct via
+//! [`Trainer::with_backend`]).
 
 use super::explore::EpsSchedule;
-use super::rollout::{forward_rollout, ExtraSource, RolloutCtx};
+use super::rollout::{forward_rollout_with_policy, ExtraSource, RolloutCtx};
 use crate::envs::VecEnv;
-use crate::runtime::policy::ArtifactPolicy;
-use crate::runtime::{Artifact, TrainState};
+use crate::runtime::backend::{Backend, BackendPolicy, XlaBackend};
+use crate::runtime::Artifact;
 use crate::serve::{sample_stream, traj_seed, TrajJob};
 use crate::util::rng::Rng;
 
@@ -22,42 +28,61 @@ pub struct IterStats {
     pub mean_length: f64,
 }
 
-/// Generic trainer binding an environment to an artifact.
-pub struct Trainer<'a, E: VecEnv> {
+/// Generic trainer binding an environment to a training backend.
+pub struct Trainer<'a, E: VecEnv, B: Backend = XlaBackend<'a>> {
     pub env: &'a E,
-    pub art: &'a Artifact,
-    pub state: TrainState,
+    pub backend: B,
     pub ctx: RolloutCtx,
     pub rng: Rng,
     pub explore: EpsSchedule,
     pub step: u64,
     /// Whether the batch's per-state `extra` should be converted to deltas
-    /// (MDB) before hitting the graph.
+    /// (MDB) before hitting the train step.
     mdb_deltas: bool,
 }
 
-impl<'a, E: VecEnv> Trainer<'a, E> {
-    pub fn new(env: &'a E, art: &'a Artifact, seed: u64, explore: EpsSchedule) -> anyhow::Result<Self> {
+impl<'a, E: VecEnv> Trainer<'a, E, XlaBackend<'a>> {
+    /// Artifact-backed trainer (the original construction path): binds the
+    /// env to the AOT graphs with a fresh init-blob state.
+    pub fn new(
+        env: &'a E,
+        art: &'a Artifact,
+        seed: u64,
+        explore: EpsSchedule,
+    ) -> anyhow::Result<Self> {
+        Self::with_backend(env, XlaBackend::new(art)?, seed, explore)
+    }
+}
+
+impl<'a, E: VecEnv, B: Backend> Trainer<'a, E, B> {
+    /// Bind an environment to any [`Backend`] (xla or native). Validates
+    /// that the backend's dispatch shape matches the env spec.
+    pub fn with_backend(
+        env: &'a E,
+        backend: B,
+        seed: u64,
+        explore: EpsSchedule,
+    ) -> anyhow::Result<Self> {
         let spec = env.spec();
-        let cfg = &art.manifest.config;
+        let shape = backend.shape();
         anyhow::ensure!(
-            spec.obs_dim == cfg.obs_dim
-                && spec.n_actions == cfg.n_actions
-                && spec.n_bwd_actions == cfg.n_bwd_actions
-                && spec.t_max == cfg.t_max,
-            "env spec {:?} does not match artifact config {:?}",
+            spec.obs_dim == shape.obs_dim
+                && spec.n_actions == shape.n_actions
+                && spec.n_bwd_actions == shape.n_bwd_actions
+                && spec.t_max == shape.t_max,
+            "env spec {:?} does not match backend shape {:?}",
             spec,
-            cfg
+            shape
         );
+        let mdb_deltas = backend.loss_name() == "mdb";
         Ok(Trainer {
             env,
-            art,
-            state: art.init_state()?,
-            ctx: RolloutCtx::for_artifact(art),
+            ctx: RolloutCtx::for_shape(&shape),
+            backend,
             rng: Rng::new(seed),
             explore,
             step: 0,
-            mdb_deltas: cfg.loss == "mdb",
+            mdb_deltas,
         })
     }
 
@@ -68,14 +93,16 @@ impl<'a, E: VecEnv> Trainer<'a, E> {
         extra: &ExtraSource<'_, E>,
     ) -> anyhow::Result<(IterStats, Vec<E::Obj>)> {
         let eps = self.explore.at(self.step);
-        let (mut batch, objs) = forward_rollout(
-            self.env, self.art, &self.state, &mut self.ctx, &mut self.rng, eps, extra,
-        )?;
+        let (mut batch, objs) = {
+            let mut policy = BackendPolicy { backend: &self.backend };
+            forward_rollout_with_policy(
+                self.env, &mut policy, &mut self.ctx, &mut self.rng, eps, extra,
+            )?
+        };
         if self.mdb_deltas {
             batch.extra_to_deltas();
         }
-        let literals = batch.to_literals()?;
-        let (loss, log_z) = self.state.train_step(self.art, &literals)?;
+        let (loss, log_z) = self.backend.train_step(&batch)?;
         self.step += 1;
         let b = batch.b as f64;
         let stats = IterStats {
@@ -89,13 +116,13 @@ impl<'a, E: VecEnv> Trainer<'a, E> {
 
     /// Sample terminal objects from the current policy without training
     /// (ε = 0). Used by evaluation loops. Always returns exactly one
-    /// artifact batch (`B` objects), padding dispatches until the slowest
+    /// dispatch batch (`B` objects), padding dispatches until the slowest
     /// trajectory terminates.
     pub fn sample_objs(&mut self) -> anyhow::Result<Vec<E::Obj>> {
-        let (_batch, objs) = forward_rollout(
+        let mut policy = BackendPolicy { backend: &self.backend };
+        let (_batch, objs) = forward_rollout_with_policy(
             self.env,
-            self.art,
-            &self.state,
+            &mut policy,
             &mut self.ctx,
             &mut self.rng,
             0.0,
@@ -111,7 +138,7 @@ impl<'a, E: VecEnv> Trainer<'a, E> {
     /// trajectory `i` always uses the RNG stream `traj_seed(seed, i)`,
     /// independent of batch composition.
     pub fn sample_objs_served(&mut self, n: usize, seed: u64) -> anyhow::Result<Vec<E::Obj>> {
-        let mut policy = ArtifactPolicy { art: self.art, ts: &self.state };
+        let mut policy = BackendPolicy { backend: &self.backend };
         let mut next = 0usize;
         let mut outs: Vec<Option<E::Obj>> = (0..n).map(|_| None).collect();
         sample_stream(

@@ -9,14 +9,19 @@
 //!   decoupled reward modules, dataset generators, success metrics, rollout /
 //!   training orchestration, the continuous-batching sampling service
 //!   ([`serve`]), and the throughput benchmark harness.
-//! - **L2 (`python/compile`, build-time only)** — policy networks and the
-//!   TB/DB/SubTB/FLDB/MDB objectives in pure JAX, AOT-lowered to HLO text.
+//! - **L2 (`python/compile`, build-time only, xla backend)** — policy
+//!   networks and the TB/DB/SubTB/FLDB/MDB objectives in pure JAX,
+//!   AOT-lowered to HLO text.
 //! - **L1 (`python/compile/kernels`)** — Pallas kernels for the per-step
 //!   hot-spot (fused masked log-softmax, fused dense layers).
 //!
-//! At run time the `runtime` module loads the AOT artifacts through the PJRT
-//! CPU client (`xla` crate) and the coordinator drives everything from Rust;
-//! Python never executes on the training path.
+//! Training runs through the [`runtime::Backend`] abstraction: the
+//! **native** backend ([`runtime::NativeBackend`]) is a pure-Rust MLP with
+//! manual backward, TB/DB/MDB objectives and Adam — the full
+//! train → sample → metric loop with no artifacts — while the **xla**
+//! backend ([`runtime::XlaBackend`]) replays the AOT artifacts through the
+//! PJRT CPU client (`xla` crate). Either way the coordinator drives
+//! everything from Rust; Python never executes on the training path.
 //!
 //! Policy evaluation is abstracted behind
 //! [`runtime::policy::BatchPolicy`] — one *fixed-shape* batched dispatch.

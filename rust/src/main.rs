@@ -1,19 +1,28 @@
-//! `gfnx` CLI — train, evaluate and benchmark GFlowNets against the AOT
-//! artifacts (see README.md for the full workflow).
+//! `gfnx` CLI — train, evaluate and benchmark GFlowNets (see README.md for
+//! the full workflow).
 //!
 //! Subcommands:
-//!   train        --config <name> --loss <tb|db|subtb|fldb|mdb> [--iters N]
+//!   train        --env hypergrid | --config <name>
+//!                --loss <tb|db|subtb|fldb|mdb>
+//!                --backend <native|xla>  [--iters N] [--hidden H]
+//!                [--layers L] [--workers W]
 //!   list-configs
 //!   info         --config <name> --loss <l>   (print the artifact manifest)
+//!
+//! The default `--backend native` trains end-to-end in pure Rust with no
+//! AOT artifacts; `--backend xla` replays the fused AOT graphs (requires
+//! `make artifacts` + the real xla-rs crate).
 
 use gfnx::coordinator::config::{artifacts_dir, run_config};
 use gfnx::coordinator::rollout::ExtraSource;
 use gfnx::coordinator::trainer::Trainer;
+use gfnx::envs::hypergrid::HypergridEnv;
 use gfnx::envs::VecEnv;
 use gfnx::reward::hypergrid::HypergridReward;
-use gfnx::runtime::Artifact;
+use gfnx::runtime::{Artifact, Backend, NativeBackend, NativeConfig};
 use gfnx::util::cli::Cli;
 use gfnx::util::logging::MetricsLog;
+use gfnx::util::threadpool::default_workers;
 
 fn main() {
     let cli = Cli::new(
@@ -22,9 +31,15 @@ fn main() {
     )
     .positional("command", "train | list-configs | info")
     .flag("config", "hypergrid_small", "experiment config name")
+    .flag("env", "", "environment family shorthand (hypergrid → hypergrid_small)")
     .flag("loss", "tb", "objective: tb | db | subtb | fldb | mdb")
+    .flag("backend", "native", "training backend: native | xla")
     .flag("iters", "0", "iteration count (0 = preset default)")
     .flag("seed", "0", "rng seed")
+    .flag("batch", "16", "batch width (native backend)")
+    .flag("hidden", "256", "MLP trunk width (native backend)")
+    .flag("layers", "2", "MLP trunk depth (native backend)")
+    .flag("workers", "0", "dispatch worker threads, 0 = all cores (native backend)")
     .flag("log", "", "JSONL metrics path (empty = stdout only)")
     .switch("quiet", "suppress progress lines");
     let args = cli.parse();
@@ -36,7 +51,7 @@ fn main() {
 
     let result = match command.as_str() {
         "list-configs" => {
-            println!("configs (build artifacts via `make artifacts`):");
+            println!("configs (xla backend needs `make artifacts`; native needs nothing):");
             for name in [
                 "hypergrid_small",
                 "hypergrid_2d_20",
@@ -60,14 +75,7 @@ fn main() {
             Ok(())
         }
         "info" => info(args.get("config"), args.get("loss")),
-        "train" => train(
-            args.get("config"),
-            args.get("loss"),
-            args.get_u64("iters"),
-            args.get_u64("seed"),
-            args.get("log"),
-            args.get_bool("quiet"),
-        ),
+        "train" => train(&args),
         other => Err(anyhow::anyhow!("unknown command {other:?}")),
     };
     if let Err(e) = result {
@@ -92,40 +100,113 @@ fn info(config: &str, loss: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Resolve `--env`/`--config` into a concrete config name.
+fn resolve_config(args: &gfnx::util::cli::Args) -> anyhow::Result<String> {
+    let env = args.get("env");
+    if env.is_empty() {
+        return Ok(args.get("config").to_string());
+    }
+    Ok(match env {
+        "hypergrid" => "hypergrid_small".to_string(),
+        other if other.starts_with("hypergrid") => other.to_string(),
+        other => anyhow::bail!(
+            "the CLI trainer covers the hypergrid family (got --env {other:?}); \
+             other environments have dedicated example binaries (see examples/)"
+        ),
+    })
+}
+
 /// Train the hypergrid family from the CLI (other families are exposed via
 /// the examples and benches, which own their dataset generation).
-fn train(
-    config: &str,
-    loss: &str,
-    iters: u64,
-    seed: u64,
-    log_path: &str,
-    quiet: bool,
-) -> anyhow::Result<()> {
+fn train(args: &gfnx::util::cli::Args) -> anyhow::Result<()> {
+    let config = resolve_config(args)?;
+    let loss = args.get("loss");
     anyhow::ensure!(
         config.starts_with("hypergrid"),
         "the CLI trainer covers the hypergrid family; other environments \
          have dedicated example binaries (see examples/)"
     );
-    let (d, h) = match config {
+    let (d, h) = match config.as_str() {
         "hypergrid_small" => (2, 8),
         "hypergrid_2d_20" => (2, 20),
         "hypergrid_4d_20" => (4, 20),
         "hypergrid_8d_10" => (8, 10),
         other => anyhow::bail!("unknown hypergrid config {other:?}"),
     };
-    let env = gfnx::envs::hypergrid::HypergridEnv::new(d, h, HypergridReward::standard(h));
-    let art = Artifact::load(&artifacts_dir(), &format!("{config}.{loss}"))?;
-    let rc = run_config(config, loss);
-    let iters = if iters == 0 { rc.iters } else { iters };
-    let mut trainer = Trainer::new(&env, &art, seed, rc.explore)?;
-    let mut log = if log_path.is_empty() {
-        MetricsLog::stdout_only(&art.manifest.name)
-    } else {
-        MetricsLog::to_file(&art.manifest.name, std::path::Path::new(log_path))?
+    let env = HypergridEnv::new(d, h, HypergridReward::standard(h));
+    let rc = run_config(&config, loss);
+    let iters = match args.get_u64("iters") {
+        0 => rc.iters,
+        n => n,
     };
+    let seed = args.get_u64("seed");
+
+    match args.get("backend") {
+        "native" => {
+            let workers = match args.get_usize("workers") {
+                0 => default_workers(),
+                w => w,
+            };
+            let cfg = NativeConfig::for_env(&env, args.get_usize("batch"), loss)
+                .with_hidden(args.get_usize("hidden"))
+                .with_layers(args.get_usize("layers"))
+                .with_workers(workers);
+            let backend = NativeBackend::new(cfg, seed)?;
+            let trainer = Trainer::with_backend(&env, backend, seed, rc.explore)?;
+            run_train(trainer, &config, loss, iters, args)
+        }
+        "xla" => {
+            // The artifact manifest dictates batch/architecture; flag the
+            // native-only knobs so a user doesn't misread the run.
+            if args.get_usize("batch") != 16
+                || args.get_usize("hidden") != 256
+                || args.get_usize("layers") != 2
+                || args.get_usize("workers") != 0
+            {
+                eprintln!(
+                    "note: --batch/--hidden/--layers/--workers apply to the native \
+                     backend only; the xla backend uses the artifact's baked-in shapes"
+                );
+            }
+            let art = Artifact::load(&artifacts_dir(), &format!("{config}.{loss}"))?;
+            let trainer = Trainer::new(&env, &art, seed, rc.explore)?;
+            run_train(trainer, &config, loss, iters, args)
+        }
+        other => anyhow::bail!("unknown backend {other:?} (native | xla)"),
+    }
+}
+
+fn run_train<E: VecEnv, B: Backend>(
+    mut trainer: Trainer<'_, E, B>,
+    config: &str,
+    loss: &str,
+    iters: u64,
+    args: &gfnx::util::cli::Args,
+) -> anyhow::Result<()> {
+    let quiet = args.get_bool("quiet");
+    let log_path = args.get("log");
+    let name = format!("{config}.{loss}");
+    let mut log = if log_path.is_empty() {
+        MetricsLog::stdout_only(&name)
+    } else {
+        MetricsLog::to_file(&name, std::path::Path::new(log_path))?
+    };
+    println!(
+        "training {name} on the {} backend ({} iters, batch {})",
+        trainer.backend.backend_name(),
+        iters,
+        trainer.backend.shape().batch
+    );
+    let (mut first_window, mut last_window) = (Vec::new(), Vec::new());
     for i in 0..iters {
         let (stats, _objs) = trainer.train_iter(&ExtraSource::None)?;
+        anyhow::ensure!(stats.loss.is_finite(), "loss diverged at iter {i}");
+        if i < 10 {
+            first_window.push(stats.loss as f64);
+        }
+        if i + 10 >= iters {
+            last_window.push(stats.loss as f64);
+        }
         if i % 100 == 0 {
             log.log(i, &[("loss", stats.loss as f64), ("logZ", stats.log_z as f64)]);
             if !quiet {
@@ -137,7 +218,12 @@ fn train(
             }
         }
     }
-    println!("trained {} for {} iterations", art.manifest.name, iters);
-    let _ = env.spec();
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!(
+        "trained {name} for {iters} iterations on {}: loss {:.4} (first 10 iters) -> {:.4} (last 10)",
+        trainer.backend.backend_name(),
+        mean(&first_window),
+        mean(&last_window)
+    );
     Ok(())
 }

@@ -1,0 +1,147 @@
+//! The training-backend abstraction: what the coordinator needs from "the
+//! thing that owns the network" — one fixed-shape policy dispatch, one fused
+//! train step over a padded trajectory batch, and parameter readback.
+//!
+//! Two implementations ship in-tree:
+//!
+//! - [`XlaBackend`] — the original AOT path: a mechanical extraction of the
+//!   `Artifact` + [`TrainState`] coupling that used to live inside
+//!   `coordinator::Trainer`. Executes the PJRT-compiled policy and
+//!   rollout-loss-grad-Adam graphs (requires `make artifacts` and the real
+//!   xla-rs crate).
+//! - [`NativeBackend`](super::native::NativeBackend) — a pure-Rust MLP with
+//!   a manual backward pass, TB/DB/MDB objectives and an Adam step, sharing
+//!   the artifact init-blob layout ([`Manifest`](super::Manifest)
+//!   `blob_layout`) so the two backends are initialization-compatible.
+//!   Needs no artifacts and no XLA: the full train → sample → metric loop
+//!   runs in-repo.
+//!
+//! Everything above this trait — [`Trainer`](crate::coordinator::Trainer),
+//! the eval protocols, the benches, the `--backend` CLI selector — is
+//! generic over [`Backend`], and rollout/serve code reaches the network
+//! through the [`BackendPolicy`] adapter (a
+//! [`BatchPolicy`](crate::runtime::policy::BatchPolicy) view of a backend's
+//! policy dispatch).
+
+use super::artifact::Artifact;
+use super::policy::{BatchPolicy, PolicyShape};
+use super::state::TrainState;
+use crate::coordinator::rollout::TrajBatch;
+
+/// A training backend: policy dispatch + fused train step + param readback.
+///
+/// The contract mirrors what the PJRT artifact path provides, so host-side
+/// implementations reproduce the same economics: `policy_dispatch` is one
+/// **fixed-shape** batched evaluation (row-wise — row `i` of the output
+/// depends only on row `i` of the inputs, which is what the serve
+/// subsystem's determinism guarantee relies on), and `train_step` consumes
+/// one padded `[B, T+1]` trajectory batch and returns `(loss, logZ)` with
+/// the loss evaluated *before* and logZ read *after* the optimizer step
+/// (matching the AOT train graph's outputs).
+pub trait Backend {
+    /// Short identifier for logs and bench tables ("xla" / "native").
+    fn backend_name(&self) -> &'static str;
+
+    /// The fixed dispatch shape (constant over the backend's lifetime).
+    fn shape(&self) -> PolicyShape;
+
+    /// The objective this backend trains ("tb" | "db" | "subtb" | "fldb" |
+    /// "mdb").
+    fn loss_name(&self) -> &str;
+
+    /// One fixed-shape policy evaluation. Inputs are row-major
+    /// `[B, obs_dim]`, `[B, n_actions]`, `[B, n_bwd_actions]`; returns
+    /// `(fwd_logp, bwd_logp, log_flow)` as flats. Illegal entries carry
+    /// large-negative log-probabilities.
+    fn policy_dispatch(
+        &self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
+
+    /// One fused train step over a padded trajectory batch; returns
+    /// `(loss, logZ)`.
+    fn train_step(&mut self, batch: &TrajBatch) -> anyhow::Result<(f32, f32)>;
+
+    /// Number of train steps taken.
+    fn steps(&self) -> u64;
+
+    /// Read a parameter leaf back to the host by manifest name
+    /// (eval/debug/checkpointing).
+    fn param_by_name(&self, name: &str) -> Option<Vec<f32>>;
+}
+
+/// [`BatchPolicy`] view of a backend's policy dispatch, so rollouts, eval
+/// protocols and the serve slot engine drive any backend through the same
+/// code paths as host-side policies.
+pub struct BackendPolicy<'a, B: Backend + ?Sized> {
+    pub backend: &'a B,
+}
+
+impl<B: Backend + ?Sized> BatchPolicy for BackendPolicy<'_, B> {
+    fn shape(&self) -> PolicyShape {
+        self.backend.shape()
+    }
+
+    fn eval(
+        &mut self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.backend.policy_dispatch(obs, fwd_mask, bwd_mask)
+    }
+}
+
+/// The AOT/PJRT backend: artifact graphs + device-resident train state.
+///
+/// This is exactly the pairing `Trainer` used to hard-code; extracting it
+/// behind [`Backend`] lets every layer above run against either backend.
+pub struct XlaBackend<'a> {
+    pub art: &'a Artifact,
+    pub state: TrainState,
+}
+
+impl<'a> XlaBackend<'a> {
+    /// Fresh training state from the artifact's init blob.
+    pub fn new(art: &'a Artifact) -> anyhow::Result<XlaBackend<'a>> {
+        Ok(XlaBackend { state: art.init_state()?, art })
+    }
+}
+
+impl Backend for XlaBackend<'_> {
+    fn backend_name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn shape(&self) -> PolicyShape {
+        PolicyShape::of_artifact(self.art)
+    }
+
+    fn loss_name(&self) -> &str {
+        &self.art.manifest.config.loss
+    }
+
+    fn policy_dispatch(
+        &self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.state.policy(self.art, obs, fwd_mask, bwd_mask)
+    }
+
+    fn train_step(&mut self, batch: &TrajBatch) -> anyhow::Result<(f32, f32)> {
+        let literals = batch.to_literals()?;
+        self.state.train_step(self.art, &literals)
+    }
+
+    fn steps(&self) -> u64 {
+        self.state.steps
+    }
+
+    fn param_by_name(&self, name: &str) -> Option<Vec<f32>> {
+        self.state.param_by_name(&self.art.manifest, name)
+    }
+}

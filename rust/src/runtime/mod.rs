@@ -1,14 +1,27 @@
-//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
-//! and executes them from the coordinator hot path. Python never runs here —
-//! the HLO text + manifest + init blob are the entire interface.
+//! Policy/training runtime behind the [`Backend`] abstraction.
+//!
+//! Two backends:
+//! - **xla** ([`XlaBackend`]) — loads the AOT artifacts produced by
+//!   `python/compile/aot.py` and executes them through the PJRT CPU client
+//!   (requires `make artifacts` + the real xla-rs crate; Python never runs
+//!   at runtime — HLO text + manifest + init blob are the entire
+//!   interface).
+//! - **native** ([`NativeBackend`]) — a pure-Rust MLP with manual backward,
+//!   TB/DB/MDB objectives and Adam; shares the artifact init-blob layout so
+//!   the two backends are initialization-compatible, and needs no
+//!   artifacts at all.
 
 pub mod manifest;
 pub mod artifact;
+pub mod backend;
+pub mod native;
 pub mod state;
 pub mod policy;
 
 pub use artifact::Artifact;
+pub use backend::{Backend, BackendPolicy, XlaBackend};
 pub use manifest::{Manifest, TensorSpec};
+pub use native::{NativeBackend, NativeConfig, NativePolicy};
 pub use policy::{ArtifactPolicy, BatchPolicy, OwnedArtifactPolicy, PolicyShape, UniformPolicy};
 pub use state::TrainState;
 

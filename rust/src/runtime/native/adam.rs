@@ -1,0 +1,115 @@
+//! Adam(W) optimizer step over the native parameter leaves, mirroring
+//! `python/compile/optim.py`: bias-corrected moments, a dedicated `z_lr`
+//! for the `logZ` leaf, and decoupled weight decay applied only to ≥ 2-d
+//! leaves (and never to `logZ`), using the *pre-update* parameter value.
+
+use super::net::Leaf;
+
+const B1: f64 = 0.9;
+const B2: f64 = 0.999;
+const EPS: f64 = 1e-8;
+
+/// Learning-rate hyperparameters (a subset of `NativeConfig`, passed by
+/// value so the optimizer never borrows the config).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct AdamHyper {
+    pub lr: f32,
+    pub z_lr: f32,
+    pub weight_decay: f32,
+}
+
+/// One in-place Adam step. `m`/`v` are the per-leaf first/second moments,
+/// `t` the step counter (stored as f32, like the artifact's `t` leaf);
+/// `grads` is index-aligned with `leaves`.
+pub(crate) fn adam_step(
+    leaves: &mut [Leaf],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    t: &mut f32,
+    grads: &[Vec<f32>],
+    logz_idx: usize,
+    h: AdamHyper,
+) {
+    debug_assert_eq!(leaves.len(), grads.len());
+    debug_assert_eq!(leaves.len(), m.len());
+    debug_assert_eq!(leaves.len(), v.len());
+    *t += 1.0;
+    let tc = *t as f64;
+    let c1 = 1.0 - B1.powf(tc);
+    let c2 = 1.0 - B2.powf(tc);
+    for (idx, leaf) in leaves.iter_mut().enumerate() {
+        let is_logz = idx == logz_idx;
+        let lr = if is_logz { h.z_lr } else { h.lr } as f64;
+        let wd = h.weight_decay as f64;
+        let decay = wd > 0.0 && !is_logz && leaf.tensor.shape().len() >= 2;
+        let g = &grads[idx];
+        let mk = &mut m[idx];
+        let vk = &mut v[idx];
+        let data = leaf.tensor.data_mut();
+        debug_assert_eq!(data.len(), g.len());
+        for i in 0..data.len() {
+            let gi = g[i] as f64;
+            let mi = B1 * mk[i] as f64 + (1.0 - B1) * gi;
+            let vi = B2 * vk[i] as f64 + (1.0 - B2) * gi * gi;
+            mk[i] = mi as f32;
+            vk[i] = vi as f32;
+            let m_hat = mi / c1;
+            let v_hat = vi / c2;
+            let p_old = data[i] as f64;
+            let mut p = p_old - lr * m_hat / (v_hat.sqrt() + EPS);
+            if decay {
+                p -= lr * wd * p_old;
+            }
+            data[i] = p as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::TensorF32;
+
+    fn leaf(name: &str, shape: &[usize], v: f32) -> Leaf {
+        let n: usize = shape.iter().product();
+        Leaf { name: name.to_string(), tensor: TensorF32::from_vec(shape, vec![v; n]) }
+    }
+
+    #[test]
+    fn first_step_moves_by_learning_rate() {
+        // With bias correction, the first Adam step is ≈ lr·sign(g).
+        let mut leaves = vec![leaf("w0", &[2, 2], 1.0), leaf("logZ", &[1], 0.0)];
+        let mut m = vec![vec![0.0; 4], vec![0.0; 1]];
+        let mut v = vec![vec![0.0; 4], vec![0.0; 1]];
+        let mut t = 0.0f32;
+        let grads = vec![vec![0.5; 4], vec![-2.0; 1]];
+        adam_step(&mut leaves, &mut m, &mut v, &mut t, &grads, 1,
+                  AdamHyper { lr: 1e-2, z_lr: 0.1, weight_decay: 0.0 });
+        assert_eq!(t, 1.0);
+        for &p in leaves[0].tensor.data() {
+            assert!((p - (1.0 - 1e-2)).abs() < 1e-5, "w step ≈ lr, got {p}");
+        }
+        // logZ uses z_lr and moves against the gradient sign.
+        let z = leaves[1].tensor.data()[0];
+        assert!((z - 0.1).abs() < 1e-5, "logZ step ≈ z_lr, got {z}");
+    }
+
+    #[test]
+    fn weight_decay_applies_to_matrices_only() {
+        let mut leaves = vec![
+            leaf("w0", &[2, 2], 1.0),
+            leaf("b0", &[4], 1.0),
+            leaf("logZ", &[1], 1.0),
+        ];
+        let mut m = vec![vec![0.0; 4], vec![0.0; 4], vec![0.0; 1]];
+        let mut v = vec![vec![0.0; 4], vec![0.0; 4], vec![0.0; 1]];
+        let mut t = 0.0f32;
+        let grads = vec![vec![0.0; 4], vec![0.0; 4], vec![0.0; 1]];
+        adam_step(&mut leaves, &mut m, &mut v, &mut t, &grads, 2,
+                  AdamHyper { lr: 0.1, z_lr: 0.1, weight_decay: 0.5 });
+        // Zero grads: only decay moves parameters, and only the matrix leaf.
+        assert!((leaves[0].tensor.data()[0] - (1.0 - 0.1 * 0.5)).abs() < 1e-6);
+        assert_eq!(leaves[1].tensor.data()[0], 1.0);
+        assert_eq!(leaves[2].tensor.data()[0], 1.0);
+    }
+}

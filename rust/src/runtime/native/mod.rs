@@ -1,0 +1,792 @@
+//! The native training backend: a pure-Rust MLP policy with a manual
+//! backward pass, TB/DB/MDB objectives and an Adam step — the whole
+//! train → sample → metric loop with **no artifacts and no XLA**.
+//!
+//! Structure:
+//! - [`net`] — the MLP ([`NativeNet`]): forward, masked log-softmax heads,
+//!   hand-written backward, threadpool-parallel batched matmuls.
+//! - [`loss`] — TB/DB/MDB losses + gradients over a padded `TrajBatch`
+//!   (mirrors `python/compile/losses.py`; FD- and JAX-cross-validated).
+//! - [`adam`] — Adam(W) mirroring `python/compile/optim.py`.
+//!
+//! Parameter leaves use the artifact init-blob layout, so
+//! [`NativeBackend::from_blob`] can start from the exact initialization an
+//! XLA artifact ships ([`Manifest::blob_layout`]), and
+//! [`NativeBackend::new`] He-initializes the same leaf structure from a
+//! seed when no artifact exists.
+
+pub mod adam;
+pub mod loss;
+pub mod net;
+
+pub use net::{ForwardCache, Grads, Leaf, NativeNet};
+
+use super::backend::Backend;
+use super::manifest::Manifest;
+use super::policy::{BatchPolicy, PolicyShape};
+use crate::coordinator::rollout::TrajBatch;
+use crate::envs::VecEnv;
+
+/// Static configuration of a native backend (shapes + architecture +
+/// optimizer hyperparameters).
+#[derive(Clone, Debug)]
+pub struct NativeConfig {
+    pub obs_dim: usize,
+    pub n_actions: usize,
+    pub n_bwd_actions: usize,
+    pub t_max: usize,
+    /// Fixed dispatch batch width B.
+    pub batch: usize,
+    /// Trunk width.
+    pub hidden: usize,
+    /// Trunk depth (ReLU layers).
+    pub n_layers: usize,
+    /// Uniform backward policy over legal parents (the only mode the
+    /// native *trainer* supports; matches every MLP preset).
+    pub uniform_pb: bool,
+    /// Objective: "tb" | "db" | "mdb".
+    pub loss: String,
+    pub lr: f32,
+    /// Dedicated logZ learning rate (paper Tables 3–5).
+    pub z_lr: f32,
+    pub weight_decay: f32,
+    /// Worker threads for batched dispatch matmuls (1 = single-threaded;
+    /// results are bitwise identical for every worker count).
+    pub workers: usize,
+}
+
+impl NativeConfig {
+    /// Defaults matching the paper's MLP presets (2×256 trunk, lr 1e-3,
+    /// z_lr 1e-1), shaped for `env` at batch width `batch`.
+    pub fn for_env<E: VecEnv>(env: &E, batch: usize, loss: &str) -> NativeConfig {
+        let s = env.spec();
+        NativeConfig {
+            obs_dim: s.obs_dim,
+            n_actions: s.n_actions,
+            n_bwd_actions: s.n_bwd_actions,
+            t_max: s.t_max,
+            batch,
+            hidden: 256,
+            n_layers: 2,
+            uniform_pb: true,
+            loss: loss.to_string(),
+            lr: 1e-3,
+            z_lr: 1e-1,
+            weight_decay: 0.0,
+            workers: 1,
+        }
+    }
+
+    pub fn with_hidden(mut self, hidden: usize) -> NativeConfig {
+        self.hidden = hidden;
+        self
+    }
+
+    pub fn with_layers(mut self, n_layers: usize) -> NativeConfig {
+        self.n_layers = n_layers;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> NativeConfig {
+        self.workers = workers;
+        self
+    }
+
+    pub fn with_lr(mut self, lr: f32, z_lr: f32) -> NativeConfig {
+        self.lr = lr;
+        self.z_lr = z_lr;
+        self
+    }
+
+    /// The fixed dispatch shape this config produces.
+    pub fn shape(&self) -> PolicyShape {
+        PolicyShape {
+            batch: self.batch,
+            obs_dim: self.obs_dim,
+            n_actions: self.n_actions,
+            n_bwd_actions: self.n_bwd_actions,
+            t_max: self.t_max,
+            uniform_pb: self.uniform_pb,
+        }
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            matches!(self.loss.as_str(), "tb" | "db" | "mdb"),
+            "native backend supports tb|db|mdb (got {:?}); subtb/fldb stay on the xla backend",
+            self.loss
+        );
+        anyhow::ensure!(
+            self.uniform_pb,
+            "native backend trains uniform-P_B configs only (learned P_B is xla-only)"
+        );
+        anyhow::ensure!(
+            self.batch > 0 && self.obs_dim > 0 && self.n_actions > 0 && self.t_max > 0,
+            "degenerate native config {self:?}"
+        );
+        anyhow::ensure!(
+            self.n_layers == 0 || self.hidden > 0,
+            "native config: hidden must be positive when n_layers > 0"
+        );
+        Ok(())
+    }
+}
+
+/// The pure-Rust training backend: network + Adam state.
+pub struct NativeBackend {
+    net: NativeNet,
+    /// Adam first moments, index-aligned with `net.leaves()`.
+    m: Vec<Vec<f32>>,
+    /// Adam second moments.
+    v: Vec<Vec<f32>>,
+    /// Step counter (f32, like the artifact's `t` leaf).
+    t: f32,
+    steps: u64,
+}
+
+impl NativeBackend {
+    /// Fresh He-initialized backend.
+    pub fn new(cfg: NativeConfig, seed: u64) -> anyhow::Result<NativeBackend> {
+        cfg.validate()?;
+        Ok(Self::from_net(NativeNet::init(cfg, seed)))
+    }
+
+    fn from_net(net: NativeNet) -> NativeBackend {
+        let m = net.leaves().iter().map(|l| vec![0f32; l.tensor.len()]).collect();
+        let v = net.leaves().iter().map(|l| vec![0f32; l.tensor.len()]).collect();
+        NativeBackend { net, m, v, t: 0.0, steps: 0 }
+    }
+
+    /// Initialize from an artifact's manifest + init blob, so native and
+    /// XLA runs share the exact same starting parameters (and Adam state).
+    /// Only the MLP leaf layout is understood; transformer artifacts stay
+    /// on the xla backend.
+    pub fn from_blob(manifest: &Manifest, blob: &[u8]) -> anyhow::Result<NativeBackend> {
+        let c = &manifest.config;
+        let read = |offset: usize, shape: &[usize], name: &str| -> anyhow::Result<Vec<f32>> {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let end = offset + 4 * n;
+            anyhow::ensure!(end <= blob.len(), "init blob truncated at leaf {name:?}");
+            Ok(blob[offset..end]
+                .chunks_exact(4)
+                .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+                .collect())
+        };
+        let norm = |shape: &[usize]| -> Vec<usize> {
+            if shape.is_empty() {
+                vec![1]
+            } else {
+                shape.to_vec()
+            }
+        };
+        let params: Vec<_> =
+            manifest.blob_layout.iter().filter(|e| e.group == "param").collect();
+        anyhow::ensure!(
+            params.len() >= 7 && (params.len() - 7) % 2 == 0,
+            "unexpected param leaf count {} — the native backend understands the MLP layout only",
+            params.len()
+        );
+        let n_layers = (params.len() - 7) / 2;
+        let mut expect: Vec<String> = Vec::new();
+        for i in 0..n_layers {
+            expect.push(format!("w{i}"));
+            expect.push(format!("b{i}"));
+        }
+        for nm in [
+            "head_fwd_w", "head_fwd_b", "head_bwd_w", "head_bwd_b",
+            "head_flow_w", "head_flow_b", "logZ",
+        ] {
+            expect.push(nm.to_string());
+        }
+        for (e, want) in params.iter().zip(&expect) {
+            anyhow::ensure!(
+                &e.name == want,
+                "init blob leaf {:?} where {want:?} expected (non-MLP artifacts are xla-only)",
+                e.name
+            );
+        }
+        let hidden = if n_layers > 0 {
+            anyhow::ensure!(
+                params[0].shape.len() == 2 && params[0].shape[0] == c.obs_dim,
+                "w0 shape {:?} does not match obs_dim {}",
+                params[0].shape,
+                c.obs_dim
+            );
+            params[0].shape[1]
+        } else {
+            c.obs_dim
+        };
+        // Every leaf's shape must match the MLP layout the config implies —
+        // forward() indexes the flat weight data with these dims and the
+        // per-element asserts compile out in release.
+        let mut expect_shapes: Vec<Vec<usize>> = Vec::new();
+        let mut fan_in = c.obs_dim;
+        for _ in 0..n_layers {
+            expect_shapes.push(vec![fan_in, hidden]);
+            expect_shapes.push(vec![hidden]);
+            fan_in = hidden;
+        }
+        let h_out = fan_in;
+        expect_shapes.push(vec![h_out, c.n_actions]);
+        expect_shapes.push(vec![c.n_actions]);
+        expect_shapes.push(vec![h_out, c.n_bwd_actions]);
+        expect_shapes.push(vec![c.n_bwd_actions]);
+        expect_shapes.push(vec![h_out, 1]);
+        expect_shapes.push(vec![1]);
+        expect_shapes.push(vec![1]);
+        for ((e, want_shape), want_name) in params.iter().zip(&expect_shapes).zip(&expect) {
+            anyhow::ensure!(
+                norm(&e.shape) == *want_shape,
+                "init blob leaf {want_name:?} has shape {:?}, expected {want_shape:?}",
+                e.shape
+            );
+        }
+        let cfg = NativeConfig {
+            obs_dim: c.obs_dim,
+            n_actions: c.n_actions,
+            n_bwd_actions: c.n_bwd_actions,
+            t_max: c.t_max,
+            batch: c.batch,
+            hidden,
+            n_layers,
+            uniform_pb: c.uniform_pb,
+            loss: c.loss.clone(),
+            lr: 1e-3,
+            z_lr: 1e-1,
+            weight_decay: 0.0,
+            workers: 1,
+        };
+        cfg.validate()?;
+        let leaves: Vec<Leaf> = params
+            .iter()
+            .map(|e| {
+                Ok(Leaf {
+                    name: e.name.clone(),
+                    tensor: crate::util::tensor::TensorF32::from_vec(
+                        &norm(&e.shape),
+                        read(e.offset, &e.shape, &e.name)?,
+                    ),
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let mut backend = Self::from_net(NativeNet::from_leaves(cfg, leaves));
+        // Adam moments + step counter, when the blob carries them.
+        for (group, dst) in [("m", &mut backend.m), ("v", &mut backend.v)] {
+            let entries: Vec<_> =
+                manifest.blob_layout.iter().filter(|e| e.group == group).collect();
+            if entries.len() == backend.net.leaves().len() {
+                for (i, e) in entries.iter().enumerate() {
+                    dst[i] = read(e.offset, &e.shape, &e.name)?;
+                }
+            }
+        }
+        if let Some(e) = manifest.blob_layout.iter().find(|e| e.group == "t") {
+            backend.t = read(e.offset, &e.shape, &e.name)?[0];
+        }
+        Ok(backend)
+    }
+
+    /// Load manifest + init blob from an artifact directory **without**
+    /// touching the HLO files (no XLA involved).
+    pub fn from_artifact_files(
+        dir: &std::path::Path,
+        name: &str,
+    ) -> anyhow::Result<NativeBackend> {
+        let manifest = Manifest::load(dir, name)?;
+        let blob = std::fs::read(dir.join(&manifest.blob_file))
+            .map_err(|e| anyhow::anyhow!("reading {:?}: {e}", manifest.blob_file))?;
+        Self::from_blob(&manifest, &blob)
+    }
+
+    /// The network (read access; use [`NativeNet::leaves`] for checkpoint
+    /// readout).
+    pub fn net(&self) -> &NativeNet {
+        &self.net
+    }
+
+    /// Mutable config access (tune lr/workers after construction or blob
+    /// load).
+    pub fn config_mut(&mut self) -> &mut NativeConfig {
+        &mut self.net.cfg
+    }
+
+    /// Snapshot the current parameters as an owned, `Send` serving policy
+    /// for the serve subsystem's worker threads.
+    pub fn to_policy(&self) -> NativePolicy {
+        NativePolicy { net: self.net.clone() }
+    }
+
+    /// Release-mode shape guard shared by every batch entry point (the
+    /// per-element asserts inside the matmuls compile out in release).
+    fn check_batch(&self, batch: &TrajBatch) -> anyhow::Result<()> {
+        let c = &self.net.cfg;
+        anyhow::ensure!(
+            batch.b == c.batch
+                && batch.t1 == c.t_max + 1
+                && batch.obs_dim == c.obs_dim
+                && batch.n_actions == c.n_actions
+                && batch.n_bwd == c.n_bwd_actions,
+            "batch shape ({}, {}, {}, {}, {}) does not match native config ({}, {}, {}, {}, {})",
+            batch.b, batch.t1, batch.obs_dim, batch.n_actions, batch.n_bwd,
+            c.batch, c.t_max + 1, c.obs_dim, c.n_actions, c.n_bwd_actions
+        );
+        Ok(())
+    }
+
+    /// Loss of one batch at the current parameters (no update) — the
+    /// backbone of the finite-difference tests.
+    pub fn loss_only(&self, batch: &TrajBatch) -> anyhow::Result<f64> {
+        self.check_batch(batch)?;
+        let n = batch.b * batch.t1;
+        let cache = self.net.forward(&batch.obs, &batch.fwd_masks, &batch.bwd_masks, n, false);
+        Ok(loss::loss_grads(&self.net.cfg.loss, batch, &cache.fwd_logp, &cache.flow, self.net.log_z())?.loss)
+    }
+
+    /// Loss + full parameter gradients (no update).
+    fn compute(&self, batch: &TrajBatch) -> anyhow::Result<(f64, Grads)> {
+        self.check_batch(batch)?;
+        let c = &self.net.cfg;
+        let n = batch.b * batch.t1;
+        let cache = self.net.forward(&batch.obs, &batch.fwd_masks, &batch.bwd_masks, n, false);
+        let lg = loss::loss_grads(&c.loss, batch, &cache.fwd_logp, &cache.flow, self.net.log_z())?;
+        let mut grads = self.net.backward(&batch.obs, &cache, &lg.d_fwd_logp, &lg.d_flow);
+        grads.leaves[self.net.idx_logz()][0] += lg.d_logz;
+        Ok((lg.loss, grads))
+    }
+}
+
+impl Backend for NativeBackend {
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn shape(&self) -> PolicyShape {
+        self.net.cfg.shape()
+    }
+
+    fn loss_name(&self) -> &str {
+        &self.net.cfg.loss
+    }
+
+    fn policy_dispatch(
+        &self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.net.eval(obs, fwd_mask, bwd_mask)
+    }
+
+    fn train_step(&mut self, batch: &TrajBatch) -> anyhow::Result<(f32, f32)> {
+        let (loss, grads) = self.compute(batch)?;
+        let hyper = adam::AdamHyper {
+            lr: self.net.cfg.lr,
+            z_lr: self.net.cfg.z_lr,
+            weight_decay: self.net.cfg.weight_decay,
+        };
+        let logz_idx = self.net.idx_logz();
+        adam::adam_step(
+            self.net.leaves_mut(),
+            &mut self.m,
+            &mut self.v,
+            &mut self.t,
+            &grads.leaves,
+            logz_idx,
+            hyper,
+        );
+        self.steps += 1;
+        Ok((loss as f32, self.net.log_z() as f32))
+    }
+
+    fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    fn param_by_name(&self, name: &str) -> Option<Vec<f32>> {
+        self.net
+            .leaves()
+            .iter()
+            .find(|l| l.name == name)
+            .map(|l| l.tensor.data().to_vec())
+    }
+}
+
+/// Owned, `Send` + row-wise serving policy over a [`NativeNet`] snapshot.
+/// Because every dispatch computes all `B` rows independently of how many
+/// are live, it has fixed-shape dispatch economics (like an accelerator
+/// graph), and the serve subsystem's per-trajectory determinism guarantee
+/// carries over.
+#[derive(Clone, Debug)]
+pub struct NativePolicy {
+    pub net: NativeNet,
+}
+
+impl BatchPolicy for NativePolicy {
+    fn shape(&self) -> PolicyShape {
+        self.net.cfg.shape()
+    }
+
+    fn eval(
+        &mut self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.net.eval(obs, fwd_mask, bwd_mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::explore::EpsSchedule;
+    use crate::coordinator::rollout::{forward_rollout_with_policy, ExtraSource, RolloutCtx};
+    use crate::coordinator::trainer::Trainer;
+    use crate::envs::hypergrid::HypergridEnv;
+    use crate::reward::hypergrid::HypergridReward;
+    use crate::runtime::manifest::{ArtifactConfig, BlobEntry, Manifest};
+    use crate::runtime::policy::{UniformPolicy, MASKED_NEG};
+    use crate::util::rng::Rng;
+
+    fn env(h: usize) -> HypergridEnv<HypergridReward> {
+        HypergridEnv::new(2, h, HypergridReward::standard(h))
+    }
+
+    /// A rollout batch whose contents do not depend on the net under test
+    /// (sampled from the masked-uniform policy).
+    fn uniform_batch(
+        e: &HypergridEnv<HypergridReward>,
+        b: usize,
+        seed: u64,
+    ) -> crate::coordinator::rollout::TrajBatch {
+        let shape = crate::runtime::policy::PolicyShape::of_env(e, b);
+        let mut policy = UniformPolicy::new(shape);
+        let mut ctx = RolloutCtx::for_shape(&shape);
+        let mut rng = Rng::new(seed);
+        forward_rollout_with_policy(e, &mut policy, &mut ctx, &mut rng, 0.0, &ExtraSource::None)
+            .unwrap()
+            .0
+    }
+
+    /// ReLU on/off pattern of the trunk for the gradient-check batch; FD is
+    /// only valid for parameters whose perturbation does not flip any unit.
+    fn relu_signature(be: &NativeBackend, batch: &crate::coordinator::rollout::TrajBatch) -> Vec<bool> {
+        let n = batch.b * batch.t1;
+        let cache = be.net.forward(&batch.obs, &batch.fwd_masks, &batch.bwd_masks, n, false);
+        cache.acts.iter().flat_map(|a| a.iter().map(|&v| v > 0.0)).collect()
+    }
+
+    #[test]
+    fn finite_difference_gradient_check() {
+        let e = env(4);
+        for loss in ["tb", "db", "mdb"] {
+            let cfg = NativeConfig::for_env(&e, 4, loss).with_hidden(8).with_layers(2);
+            let mut backend = NativeBackend::new(cfg, 123).unwrap();
+            // Nudge logZ off its zero init so the TB residual is generic.
+            let lz = backend.net.idx_logz();
+            backend.net.leaves_mut()[lz].tensor.data_mut()[0] = 0.3;
+            let mut batch = uniform_batch(&e, 4, 7);
+            if loss == "mdb" {
+                // Synthetic per-transition delta scores so the objective is
+                // non-degenerate on this env.
+                for (i, x) in batch.extra.iter_mut().enumerate() {
+                    *x = ((i % 7) as f32 - 3.0) * 0.1;
+                }
+            }
+            let (_, grads) = backend.compute(&batch).unwrap();
+            let h = 1e-3f32;
+            let (mut checked, mut skipped) = (0usize, 0usize);
+            let n_leaves = backend.net.leaves().len();
+            for li in 0..n_leaves {
+                for pi in 0..backend.net.leaves()[li].tensor.len() {
+                    let orig = backend.net.leaves()[li].tensor.data()[pi];
+                    backend.net.leaves_mut()[li].tensor.data_mut()[pi] = orig + h;
+                    let lp = backend.loss_only(&batch).unwrap();
+                    let sig_p = relu_signature(&backend, &batch);
+                    backend.net.leaves_mut()[li].tensor.data_mut()[pi] = orig - h;
+                    let lm = backend.loss_only(&batch).unwrap();
+                    let sig_m = relu_signature(&backend, &batch);
+                    backend.net.leaves_mut()[li].tensor.data_mut()[pi] = orig;
+                    if sig_p != sig_m {
+                        skipped += 1; // central difference spans a ReLU kink
+                        continue;
+                    }
+                    let fd = (lp - lm) / (2.0 * h as f64);
+                    let an = grads.leaves[li][pi] as f64;
+                    let tol = 1e-3 * fd.abs().max(an.abs()).max(1.0);
+                    assert!(
+                        (fd - an).abs() <= tol,
+                        "{loss} leaf {} [{pi}]: fd {fd:.6e} vs analytic {an:.6e}",
+                        backend.net.leaves()[li].name
+                    );
+                    checked += 1;
+                }
+            }
+            assert!(checked > 50, "{loss}: only {checked} params checked ({skipped} skipped)");
+            assert!(skipped * 5 <= checked, "{loss}: too many kink-skipped params ({skipped})");
+        }
+    }
+
+    #[test]
+    fn native_tb_training_decreases_loss_on_hypergrid() {
+        let e = env(8);
+        let cfg = NativeConfig::for_env(&e, 16, "tb").with_hidden(64);
+        let backend = NativeBackend::new(cfg, 5).unwrap();
+        let mut trainer = Trainer::with_backend(&e, backend, 5, EpsSchedule::none()).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..200 {
+            let (stats, _) = trainer.train_iter(&ExtraSource::None).unwrap();
+            assert!(stats.loss.is_finite());
+            losses.push(stats.loss as f64);
+        }
+        let head = losses[..10].iter().sum::<f64>() / 10.0;
+        let tail = losses[190..].iter().sum::<f64>() / 10.0;
+        assert!(
+            tail < head,
+            "native TB loss should trend down over 200 iters: {head:.3} -> {tail:.3}"
+        );
+    }
+
+    #[test]
+    fn native_db_training_is_finite_and_improves() {
+        let e = env(8);
+        let cfg = NativeConfig::for_env(&e, 16, "db").with_hidden(64);
+        let backend = NativeBackend::new(cfg, 11).unwrap();
+        let mut trainer = Trainer::with_backend(&e, backend, 11, EpsSchedule::none()).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..300 {
+            let (stats, _) = trainer.train_iter(&ExtraSource::None).unwrap();
+            assert!(stats.loss.is_finite(), "db loss not finite");
+            losses.push(stats.loss as f64);
+        }
+        let head = losses[..30].iter().sum::<f64>() / 30.0;
+        let tail = losses[270..].iter().sum::<f64>() / 30.0;
+        assert!(tail < head, "native DB loss should trend down: {head:.3} -> {tail:.3}");
+    }
+
+    #[test]
+    fn native_mdb_step_is_finite() {
+        let e = env(4);
+        let cfg = NativeConfig::for_env(&e, 4, "mdb").with_hidden(8);
+        let mut backend = NativeBackend::new(cfg, 3).unwrap();
+        let mut batch = uniform_batch(&e, 4, 19);
+        for (i, x) in batch.extra.iter_mut().enumerate() {
+            *x = ((i % 5) as f32 - 2.0) * 0.2;
+        }
+        batch.extra_to_deltas();
+        let (loss, logz) = backend.train_step(&batch).unwrap();
+        assert!(loss.is_finite() && logz.is_finite());
+        assert_eq!(backend.steps(), 1);
+    }
+
+    #[test]
+    fn dispatch_is_invariant_to_worker_count() {
+        let e = env(8);
+        // Batch × hidden large enough that effective_workers grants the
+        // trunk matmuls more than one worker (really multi-threaded).
+        let b = 128;
+        let mk = |workers: usize| {
+            NativeBackend::new(
+                NativeConfig::for_env(&e, b, "tb").with_hidden(64).with_workers(workers),
+                42,
+            )
+            .unwrap()
+        };
+        let b1 = mk(1);
+        let b4 = mk(4);
+        let mut rng = Rng::new(1);
+        let mut obs = vec![0f32; b * e.spec().obs_dim];
+        rng.fill_normal_f32(&mut obs, 1.0);
+        let fm = vec![1f32; b * e.spec().n_actions];
+        let bm = vec![1f32; b * e.spec().n_bwd_actions];
+        let (f1, p1, l1) = b1.policy_dispatch(&obs, &fm, &bm).unwrap();
+        let (f4, p4, l4) = b4.policy_dispatch(&obs, &fm, &bm).unwrap();
+        // Bitwise identity: worker count must not perturb results.
+        assert_eq!(f1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   f4.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        assert_eq!(p1, p4);
+        assert_eq!(l1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   l4.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn policy_dispatch_outputs_valid_distributions() {
+        let e = env(8);
+        let backend =
+            NativeBackend::new(NativeConfig::for_env(&e, 4, "tb").with_hidden(16), 0).unwrap();
+        let spec = e.spec();
+        let state = e.reset(4);
+        let mut ctx = RolloutCtx::new(4, spec.obs_dim, spec.n_actions, spec.n_bwd_actions);
+        ctx.stage(&e, &state, &[false; 4]);
+        let (f, _b, flow) = backend.policy_dispatch(&ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask).unwrap();
+        for i in 0..4 {
+            let mut p = 0f64;
+            for j in 0..spec.n_actions {
+                let lp = f[i * spec.n_actions + j] as f64;
+                if ctx.fwd_mask[i * spec.n_actions + j] != 0.0 {
+                    p += lp.exp();
+                } else {
+                    assert!(lp < -1e20);
+                }
+            }
+            assert!((p - 1.0).abs() < 1e-5, "row {i} sums to {p}");
+            assert!(flow[i].is_finite());
+        }
+    }
+
+    /// Synthetic manifest + blob in the aot.py layout: native runs can share
+    /// an artifact's init blob bit-for-bit.
+    #[test]
+    fn from_blob_reads_the_manifest_layout() {
+        let (o, h, a, ab) = (4usize, 3usize, 3usize, 2usize);
+        let shapes: Vec<(&str, Vec<usize>)> = vec![
+            ("w0", vec![o, h]),
+            ("b0", vec![h]),
+            ("head_fwd_w", vec![h, a]),
+            ("head_fwd_b", vec![a]),
+            ("head_bwd_w", vec![h, ab]),
+            ("head_bwd_b", vec![ab]),
+            ("head_flow_w", vec![h, 1]),
+            ("head_flow_b", vec![1]),
+            ("logZ", vec![1]),
+        ];
+        let mut blob: Vec<u8> = Vec::new();
+        let mut layout: Vec<BlobEntry> = Vec::new();
+        let mut next = 0f32;
+        for group in ["param", "m", "v"] {
+            for (name, shape) in &shapes {
+                layout.push(BlobEntry {
+                    group: group.to_string(),
+                    name: name.to_string(),
+                    offset: blob.len(),
+                    shape: shape.clone(),
+                });
+                for _ in 0..shape.iter().product::<usize>() {
+                    blob.extend_from_slice(&next.to_le_bytes());
+                    next += 0.25;
+                }
+            }
+        }
+        layout.push(BlobEntry {
+            group: "t".to_string(),
+            name: "t".to_string(),
+            offset: blob.len(),
+            shape: vec![1],
+        });
+        blob.extend_from_slice(&7.0f32.to_le_bytes());
+        let manifest = Manifest {
+            name: "tiny.tb".to_string(),
+            config: ArtifactConfig {
+                config_name: "tiny".to_string(),
+                loss: "tb".to_string(),
+                obs_dim: o,
+                n_actions: a,
+                n_bwd_actions: ab,
+                t_max: 3,
+                batch: 2,
+                uniform_pb: true,
+            },
+            params: Vec::new(),
+            policy_file: String::new(),
+            policy_inputs: Vec::new(),
+            policy_outputs: Vec::new(),
+            train_file: String::new(),
+            train_state: Vec::new(),
+            train_batch: Vec::new(),
+            blob_file: "tiny.tb.params.bin".to_string(),
+            blob_layout: layout,
+        };
+
+        let backend = NativeBackend::from_blob(&manifest, &blob).unwrap();
+        assert_eq!(backend.shape().batch, 2);
+        assert_eq!(backend.net().cfg.hidden, h);
+        assert_eq!(backend.net().cfg.n_layers, 1);
+        // First param leaf starts at 0.0 with 0.25 strides.
+        assert_eq!(backend.param_by_name("w0").unwrap()[..3], [0.0, 0.25, 0.5]);
+        // logZ is the last param value before the m group starts.
+        let n_params: usize = shapes.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        let expect_logz = (n_params - 1) as f32 * 0.25;
+        assert_eq!(backend.param_by_name("logZ").unwrap()[0], expect_logz);
+        assert_eq!(backend.t, 7.0);
+        // Adam moments were loaded (m group continues the 0.25 sequence).
+        assert_eq!(backend.m[0][0], n_params as f32 * 0.25);
+        // A dispatch over staged inputs stays finite and masked.
+        let obs = vec![0.5f32; 2 * o];
+        let fm = vec![1f32; 2 * a];
+        let bm = vec![1.0f32, 0.0, 1.0, 1.0];
+        let (f, b, flow) = backend.policy_dispatch(&obs, &fm, &bm).unwrap();
+        assert!(f.iter().all(|v| v.is_finite()));
+        assert_eq!(b[1], MASKED_NEG);
+        assert!((b[0] - 0.0).abs() < 1e-6); // single legal parent
+        assert_eq!(flow.len(), 2);
+    }
+
+    #[test]
+    fn from_blob_rejects_non_mlp_layouts() {
+        let manifest = Manifest {
+            name: "x".into(),
+            config: ArtifactConfig {
+                config_name: "x".into(),
+                loss: "tb".into(),
+                obs_dim: 4,
+                n_actions: 3,
+                n_bwd_actions: 2,
+                t_max: 3,
+                batch: 2,
+                uniform_pb: true,
+            },
+            params: Vec::new(),
+            policy_file: String::new(),
+            policy_inputs: Vec::new(),
+            policy_outputs: Vec::new(),
+            train_file: String::new(),
+            train_state: Vec::new(),
+            train_batch: Vec::new(),
+            blob_file: String::new(),
+            blob_layout: vec![BlobEntry {
+                group: "param".into(),
+                name: "attn_qkv".into(),
+                offset: 0,
+                shape: vec![4],
+            }],
+        };
+        assert!(NativeBackend::from_blob(&manifest, &[0u8; 64]).is_err());
+    }
+
+    #[test]
+    fn native_backend_snapshot_policy_is_row_wise_deterministic() {
+        // Serve-style check: the same trajectory seed yields the same result
+        // regardless of slot-table width, with a NativePolicy backing the
+        // slot engine.
+        use crate::serve::{sample_stream, traj_seed, TrajJob};
+        let e = env(8);
+        let run = |b: usize| {
+            let backend = NativeBackend::new(
+                NativeConfig::for_env(&e, b, "tb").with_hidden(16),
+                9,
+            )
+            .unwrap();
+            let mut policy = backend.to_policy();
+            let mut next = 0usize;
+            let mut objs: Vec<Vec<i32>> = Vec::new();
+            sample_stream(
+                &e,
+                &mut policy,
+                || {
+                    if next < 12 {
+                        let j = TrajJob { request: 0, traj_index: next, seed: traj_seed(4, next as u64) };
+                        next += 1;
+                        Some(j)
+                    } else {
+                        None
+                    }
+                },
+                |r| objs.push(r.obj),
+            )
+            .unwrap();
+            objs.sort();
+            objs
+        };
+        assert_eq!(run(3), run(8));
+    }
+}

@@ -1,0 +1,636 @@
+//! The native policy network: an MLP trunk with forward / backward / flow
+//! heads, a hand-written backward pass, and masked log-softmax heads — the
+//! pure-Rust counterpart of `python/compile/models/mlp.py` +
+//! `kernels/masked_softmax.py`.
+//!
+//! Parameter leaves follow the exact artifact init-blob layout
+//! (`w0, b0, …, head_fwd_w, head_fwd_b, head_bwd_w, head_bwd_b,
+//! head_flow_w, head_flow_b, logZ`), so a [`NativeNet`] can be initialized
+//! from the same `Manifest` + blob an XLA artifact uses.
+//!
+//! All batched matmuls run through [`parallel_map`] over row blocks with
+//! per-row `f64` accumulation, so results are **bitwise independent of the
+//! worker count** (and of how rows are chunked) — the property that keeps
+//! the serve subsystem's determinism guarantee intact when a `NativePolicy`
+//! backs the slot engine.
+
+use super::NativeConfig;
+use crate::runtime::policy::{masked_uniform_rows, MASKED_NEG};
+use crate::util::tensor::TensorF32;
+use crate::util::threadpool::parallel_map;
+
+/// One named parameter leaf (weights `[in, out]`, biases `[out]`, `logZ`
+/// `[1]`), stored in the manifest blob layout order.
+#[derive(Clone, Debug)]
+pub struct Leaf {
+    pub name: String,
+    pub tensor: TensorF32,
+}
+
+impl Leaf {
+    fn zeros(name: &str, shape: &[usize]) -> Leaf {
+        Leaf { name: name.to_string(), tensor: TensorF32::zeros(shape) }
+    }
+
+    fn normal(name: &str, shape: &[usize], rng: &mut crate::util::rng::Rng, std: f32) -> Leaf {
+        let mut t = TensorF32::zeros(shape);
+        rng.fill_normal_f32(t.data_mut(), std);
+        Leaf { name: name.to_string(), tensor: t }
+    }
+}
+
+/// Per-leaf gradients, index-aligned with [`NativeNet::leaves`].
+pub struct Grads {
+    pub leaves: Vec<Vec<f32>>,
+}
+
+/// Intermediate activations of one forward pass, kept for the backward
+/// pass.
+pub struct ForwardCache {
+    /// Number of rows evaluated.
+    pub n: usize,
+    /// Post-ReLU trunk activations per layer, each `[n, hidden]`.
+    pub acts: Vec<Vec<f32>>,
+    /// Masked forward log-probabilities `[n, n_actions]`.
+    pub fwd_logp: Vec<f32>,
+    /// Backward log-probabilities `[n, n_bwd_actions]` (uniform over legal
+    /// parents). Empty when the forward pass ran with `with_bwd = false`
+    /// (the training path, whose losses read the batch masks directly).
+    pub bwd_logp: Vec<f32>,
+    /// Log-flow head `[n]`.
+    pub flow: Vec<f32>,
+}
+
+/// The pure forward part of the native backend: parameter leaves + config.
+/// `Clone + Send`, so a snapshot can be shipped to serve worker threads.
+#[derive(Clone, Debug)]
+pub struct NativeNet {
+    pub cfg: NativeConfig,
+    leaves: Vec<Leaf>,
+}
+
+impl NativeNet {
+    /// He-initialized network (mirrors `init_mlp`: He for the trunk,
+    /// `1/√h` for the heads, zero biases and logZ).
+    pub fn init(cfg: NativeConfig, seed: u64) -> NativeNet {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut leaves = Vec::with_capacity(Self::n_leaves(cfg.n_layers));
+        let mut fan_in = cfg.obs_dim;
+        for i in 0..cfg.n_layers {
+            let std = (2.0 / fan_in as f64).sqrt() as f32;
+            leaves.push(Leaf::normal(&format!("w{i}"), &[fan_in, cfg.hidden], &mut rng, std));
+            leaves.push(Leaf::zeros(&format!("b{i}"), &[cfg.hidden]));
+            fan_in = cfg.hidden;
+        }
+        let h = fan_in;
+        let hs = (1.0 / h as f64).sqrt() as f32;
+        leaves.push(Leaf::normal("head_fwd_w", &[h, cfg.n_actions], &mut rng, hs));
+        leaves.push(Leaf::zeros("head_fwd_b", &[cfg.n_actions]));
+        leaves.push(Leaf::normal("head_bwd_w", &[h, cfg.n_bwd_actions], &mut rng, hs));
+        leaves.push(Leaf::zeros("head_bwd_b", &[cfg.n_bwd_actions]));
+        leaves.push(Leaf::normal("head_flow_w", &[h, 1], &mut rng, hs));
+        leaves.push(Leaf::zeros("head_flow_b", &[1]));
+        leaves.push(Leaf::zeros("logZ", &[1]));
+        NativeNet { cfg, leaves }
+    }
+
+    /// Build from externally loaded leaves (the manifest-blob path).
+    pub(super) fn from_leaves(cfg: NativeConfig, leaves: Vec<Leaf>) -> NativeNet {
+        debug_assert_eq!(leaves.len(), Self::n_leaves(cfg.n_layers));
+        NativeNet { cfg, leaves }
+    }
+
+    /// Leaf count of the MLP layout for a given trunk depth.
+    pub fn n_leaves(n_layers: usize) -> usize {
+        2 * n_layers + 7
+    }
+
+    /// Parameter leaves in manifest blob order (read access).
+    pub fn leaves(&self) -> &[Leaf] {
+        &self.leaves
+    }
+
+    /// Mutable parameter leaves (optimizer step, checkpoint restore).
+    pub fn leaves_mut(&mut self) -> &mut [Leaf] {
+        &mut self.leaves
+    }
+
+    #[inline]
+    fn idx_w(&self, i: usize) -> usize {
+        2 * i
+    }
+
+    #[inline]
+    fn idx_b(&self, i: usize) -> usize {
+        2 * i + 1
+    }
+
+    #[inline]
+    fn idx_head_fwd_w(&self) -> usize {
+        2 * self.cfg.n_layers
+    }
+
+    #[inline]
+    fn idx_head_fwd_b(&self) -> usize {
+        2 * self.cfg.n_layers + 1
+    }
+
+    #[inline]
+    fn idx_head_flow_w(&self) -> usize {
+        2 * self.cfg.n_layers + 4
+    }
+
+    #[inline]
+    fn idx_head_flow_b(&self) -> usize {
+        2 * self.cfg.n_layers + 5
+    }
+
+    /// Index of the `logZ` leaf.
+    #[inline]
+    pub fn idx_logz(&self) -> usize {
+        2 * self.cfg.n_layers + 6
+    }
+
+    /// Current `logZ` value.
+    pub fn log_z(&self) -> f64 {
+        self.leaves[self.idx_logz()].tensor.data()[0] as f64
+    }
+
+    /// Forward pass over `n` rows of `[n, obs_dim]` observations with
+    /// `[n, A]` / `[n, A']` masks, keeping trunk activations for backward.
+    ///
+    /// `with_bwd` controls whether the backward-policy log-probabilities
+    /// are produced (the dispatch contract needs them; the training loss
+    /// derives its uniform P_B directly from the batch masks, so the
+    /// train-step path skips the work and leaves `bwd_logp` empty).
+    pub fn forward(
+        &self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+        n: usize,
+        with_bwd: bool,
+    ) -> ForwardCache {
+        let c = &self.cfg;
+        // `NativeConfig::validate` rejects learned-P_B configs on every
+        // construction path; a net that reaches here without uniform_pb is
+        // a bug, not an input error (the bwd head has no backward pass).
+        assert!(c.uniform_pb, "native net supports uniform P_B only");
+        debug_assert_eq!(obs.len(), n * c.obs_dim);
+        debug_assert_eq!(fwd_mask.len(), n * c.n_actions);
+        debug_assert_eq!(bwd_mask.len(), n * c.n_bwd_actions);
+        let workers = c.workers.max(1);
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(c.n_layers);
+        for i in 0..c.n_layers {
+            let (x, k): (&[f32], usize) = if i == 0 {
+                (obs, c.obs_dim)
+            } else {
+                (&acts[i - 1], c.hidden)
+            };
+            let w = self.leaves[self.idx_w(i)].tensor.data();
+            let b = self.leaves[self.idx_b(i)].tensor.data();
+            let h = dense_rows(x, n, k, w, b, c.hidden, true, workers);
+            acts.push(h);
+        }
+        let (h_last, hk): (&[f32], usize) = if c.n_layers == 0 {
+            (obs, c.obs_dim)
+        } else {
+            (&acts[c.n_layers - 1], c.hidden)
+        };
+        let fwd_logits = dense_rows(
+            h_last,
+            n,
+            hk,
+            self.leaves[self.idx_head_fwd_w()].tensor.data(),
+            self.leaves[self.idx_head_fwd_b()].tensor.data(),
+            c.n_actions,
+            false,
+            workers,
+        );
+        let flow = dense_rows(
+            h_last,
+            n,
+            hk,
+            self.leaves[self.idx_head_flow_w()].tensor.data(),
+            self.leaves[self.idx_head_flow_b()].tensor.data(),
+            1,
+            false,
+            workers,
+        );
+        let fwd_logp = masked_log_softmax_rows(&fwd_logits, fwd_mask, n, c.n_actions);
+        let bwd_logp = if with_bwd {
+            let mut out = Vec::new();
+            masked_uniform_rows(bwd_mask, n, c.n_bwd_actions, &mut out);
+            out
+        } else {
+            Vec::new()
+        };
+        ForwardCache { n, acts, fwd_logp, bwd_logp, flow }
+    }
+
+    /// One fixed-shape policy dispatch (`n = cfg.batch` rows).
+    pub fn eval(
+        &self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let c = &self.cfg;
+        anyhow::ensure!(
+            obs.len() == c.batch * c.obs_dim
+                && fwd_mask.len() == c.batch * c.n_actions
+                && bwd_mask.len() == c.batch * c.n_bwd_actions,
+            "native policy: input shape mismatch"
+        );
+        let cache = self.forward(obs, fwd_mask, bwd_mask, c.batch, true);
+        Ok((cache.fwd_logp, cache.bwd_logp, cache.flow))
+    }
+
+    /// Backward pass: upstream gradients on the masked forward
+    /// log-probabilities (`[n, A]`) and the flow head (`[n]`) → per-leaf
+    /// parameter gradients. The backward-head leaves stay zero under
+    /// `uniform_pb` (the head is dead, exactly as in the AOT graph).
+    pub fn backward(
+        &self,
+        obs: &[f32],
+        cache: &ForwardCache,
+        d_fwd_logp: &[f32],
+        d_flow: &[f32],
+    ) -> Grads {
+        let c = &self.cfg;
+        let n = cache.n;
+        let a = c.n_actions;
+        let workers = c.workers.max(1);
+        debug_assert_eq!(d_fwd_logp.len(), n * a);
+        debug_assert_eq!(d_flow.len(), n);
+
+        // Masked log-softmax backward: dlogit_j = dlogp_j − p_j · Σ dlogp.
+        let mut d_logits = vec![0f32; n * a];
+        for r in 0..n {
+            let dl = &d_fwd_logp[r * a..(r + 1) * a];
+            let mut s = 0f64;
+            for &v in dl {
+                s += v as f64;
+            }
+            if s == 0.0 && dl.iter().all(|&v| v == 0.0) {
+                continue;
+            }
+            let lp = &cache.fwd_logp[r * a..(r + 1) * a];
+            let drow = &mut d_logits[r * a..(r + 1) * a];
+            for j in 0..a {
+                if lp[j] > MASKED_NEG / 2.0 {
+                    drow[j] = (dl[j] as f64 - (lp[j] as f64).exp() * s) as f32;
+                }
+            }
+        }
+
+        let mut grads: Vec<Vec<f32>> =
+            self.leaves.iter().map(|l| vec![0f32; l.tensor.len()]).collect();
+        let (h_last, hk): (&[f32], usize) = if c.n_layers == 0 {
+            (obs, c.obs_dim)
+        } else {
+            (&cache.acts[c.n_layers - 1], c.hidden)
+        };
+
+        grads[self.idx_head_fwd_w()] = matmul_tn(h_last, n, hk, &d_logits, a, workers);
+        grads[self.idx_head_fwd_b()] = col_sum(&d_logits, n, a);
+        grads[self.idx_head_flow_w()] = matmul_tn(h_last, n, hk, d_flow, 1, workers);
+        grads[self.idx_head_flow_b()] =
+            vec![d_flow.iter().map(|&v| v as f64).sum::<f64>() as f32];
+
+        let mut dh = matmul_nt(
+            &d_logits,
+            n,
+            a,
+            self.leaves[self.idx_head_fwd_w()].tensor.data(),
+            hk,
+            workers,
+        );
+        let dflow_h = matmul_nt(
+            d_flow,
+            n,
+            1,
+            self.leaves[self.idx_head_flow_w()].tensor.data(),
+            hk,
+            workers,
+        );
+        for (x, y) in dh.iter_mut().zip(&dflow_h) {
+            *x += *y;
+        }
+
+        for i in (0..c.n_layers).rev() {
+            // ReLU backward: zero where the activation was clamped.
+            for (d, &av) in dh.iter_mut().zip(cache.acts[i].iter()) {
+                if av <= 0.0 {
+                    *d = 0.0;
+                }
+            }
+            let (input, k): (&[f32], usize) = if i == 0 {
+                (obs, c.obs_dim)
+            } else {
+                (&cache.acts[i - 1], c.hidden)
+            };
+            grads[self.idx_w(i)] = matmul_tn(input, n, k, &dh, c.hidden, workers);
+            grads[self.idx_b(i)] = col_sum(&dh, n, c.hidden);
+            if i > 0 {
+                dh = matmul_nt(
+                    &dh,
+                    n,
+                    c.hidden,
+                    self.leaves[self.idx_w(i)].tensor.data(),
+                    k,
+                    workers,
+                );
+            }
+        }
+        Grads { leaves: grads }
+    }
+}
+
+/// Per-worker work quantum: spawn one worker per this many fused
+/// multiply-adds. [`parallel_map`] is scoped-thread based (spawn/join per
+/// call, not a persistent pool), so the thread cost must be amortized by
+/// enough work — small-batch rollout dispatches stay single-threaded and a
+/// many-core default cannot oversubscribe a just-parallel matmul; the big
+/// `[B·T1, hidden]` train-step matmuls go wide.
+const PAR_FLOP_QUANTUM: usize = 1 << 18;
+
+/// Effective worker count: at least 1, at most `rows`, at most the
+/// requested count, and at most one worker per [`PAR_FLOP_QUANTUM`] of
+/// total work.
+#[inline]
+fn effective_workers(workers: usize, rows: usize, flops: usize) -> usize {
+    (flops / PAR_FLOP_QUANTUM).max(1).min(workers.max(1)).min(rows.max(1))
+}
+
+/// `out = act(x · w + bias)` over `n` rows, parallelized over row blocks.
+/// Per-row accumulation is `f64` in a fixed order, so the result is bitwise
+/// identical for every worker count.
+pub(crate) fn dense_rows(
+    x: &[f32],
+    n: usize,
+    k: usize,
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    relu: bool,
+    workers: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(w.len(), k * m);
+    debug_assert_eq!(bias.len(), m);
+    let workers = effective_workers(workers, n, n * k * m);
+    let rows_per = ((n + workers - 1) / workers).max(1);
+    let n_chunks = (n + rows_per - 1) / rows_per;
+    let blocks = parallel_map(n_chunks, workers, |c| {
+        let lo = c * rows_per;
+        let hi = ((c + 1) * rows_per).min(n);
+        let mut out = vec![0f32; (hi - lo) * m];
+        let mut acc = vec![0f64; m];
+        for r in lo..hi {
+            for (j, a) in acc.iter_mut().enumerate() {
+                *a = bias[j] as f64;
+            }
+            let xrow = &x[r * k..(r + 1) * k];
+            for (t, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue; // one-hot-heavy observations: skip zero columns
+                }
+                let xv = xv as f64;
+                let wrow = &w[t * m..(t + 1) * m];
+                for j in 0..m {
+                    acc[j] += xv * wrow[j] as f64;
+                }
+            }
+            let orow = &mut out[(r - lo) * m..(r - lo + 1) * m];
+            for j in 0..m {
+                let v = acc[j];
+                orow[j] = if relu && v < 0.0 { 0.0 } else { v as f32 };
+            }
+        }
+        out
+    });
+    concat_blocks(blocks, n * m)
+}
+
+/// `out = xᵀ · g` (`[k, m]` from `x [n, k]`, `g [n, m]`): the weight-grad
+/// matmul, parallelized over output rows.
+pub(crate) fn matmul_tn(
+    x: &[f32],
+    n: usize,
+    k: usize,
+    g: &[f32],
+    m: usize,
+    workers: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(g.len(), n * m);
+    let workers = effective_workers(workers, k, n * k * m);
+    let rows_per = ((k + workers - 1) / workers).max(1);
+    let n_chunks = (k + rows_per - 1) / rows_per;
+    let blocks = parallel_map(n_chunks, workers, |c| {
+        let lo = c * rows_per;
+        let hi = ((c + 1) * rows_per).min(k);
+        let mut out = vec![0f32; (hi - lo) * m];
+        let mut acc = vec![0f64; m];
+        for t in lo..hi {
+            for a in acc.iter_mut() {
+                *a = 0.0;
+            }
+            for r in 0..n {
+                let xv = x[r * k + t];
+                if xv == 0.0 {
+                    continue;
+                }
+                let xv = xv as f64;
+                let grow = &g[r * m..(r + 1) * m];
+                for j in 0..m {
+                    acc[j] += xv * grow[j] as f64;
+                }
+            }
+            let orow = &mut out[(t - lo) * m..(t - lo + 1) * m];
+            for j in 0..m {
+                orow[j] = acc[j] as f32;
+            }
+        }
+        out
+    });
+    concat_blocks(blocks, k * m)
+}
+
+/// `out = g · wᵀ` (`[n, k]` from `g [n, m]`, `w [k, m]`): the input-grad
+/// matmul, parallelized over rows.
+pub(crate) fn matmul_nt(
+    g: &[f32],
+    n: usize,
+    m: usize,
+    w: &[f32],
+    k: usize,
+    workers: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(g.len(), n * m);
+    debug_assert_eq!(w.len(), k * m);
+    let workers = effective_workers(workers, n, n * m * k);
+    let rows_per = ((n + workers - 1) / workers).max(1);
+    let n_chunks = (n + rows_per - 1) / rows_per;
+    let blocks = parallel_map(n_chunks, workers, |c| {
+        let lo = c * rows_per;
+        let hi = ((c + 1) * rows_per).min(n);
+        let mut out = vec![0f32; (hi - lo) * k];
+        for r in lo..hi {
+            let grow = &g[r * m..(r + 1) * m];
+            let orow = &mut out[(r - lo) * k..(r - lo + 1) * k];
+            for t in 0..k {
+                let wrow = &w[t * m..(t + 1) * m];
+                let mut acc = 0f64;
+                for j in 0..m {
+                    acc += grow[j] as f64 * wrow[j] as f64;
+                }
+                orow[t] = acc as f32;
+            }
+        }
+        out
+    });
+    concat_blocks(blocks, n * k)
+}
+
+/// Column sums of `g [n, m]` (bias gradients), `f64`-accumulated.
+pub(crate) fn col_sum(g: &[f32], n: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), n * m);
+    let mut acc = vec![0f64; m];
+    for r in 0..n {
+        let grow = &g[r * m..(r + 1) * m];
+        for j in 0..m {
+            acc[j] += grow[j] as f64;
+        }
+    }
+    acc.iter().map(|&v| v as f32).collect()
+}
+
+fn concat_blocks(blocks: Vec<Vec<f32>>, total: usize) -> Vec<f32> {
+    if blocks.len() == 1 {
+        return blocks.into_iter().next().unwrap();
+    }
+    let mut out = Vec::with_capacity(total);
+    for b in blocks {
+        out.extend_from_slice(&b);
+    }
+    out
+}
+
+/// Row-wise masked log-softmax with the kernel's `-1e30` convention:
+/// legal entries normalize to probability 1, illegal entries get
+/// [`MASKED_NEG`]. Mirrors `masked_log_softmax_ref` in
+/// `python/compile/kernels/ref.py`.
+pub(crate) fn masked_log_softmax_rows(
+    logits: &[f32],
+    mask: &[f32],
+    n: usize,
+    a: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(logits.len(), n * a);
+    debug_assert_eq!(mask.len(), n * a);
+    let mut out = vec![0f32; n * a];
+    for r in 0..n {
+        let lrow = &logits[r * a..(r + 1) * a];
+        let mrow = &mask[r * a..(r + 1) * a];
+        let mut mx = f64::NEG_INFINITY;
+        for j in 0..a {
+            if mrow[j] != 0.0 {
+                mx = mx.max(lrow[j] as f64);
+            }
+        }
+        let orow = &mut out[r * a..(r + 1) * a];
+        if !mx.is_finite() {
+            for o in orow.iter_mut() {
+                *o = MASKED_NEG;
+            }
+            continue;
+        }
+        let mut sum = 0f64;
+        for j in 0..a {
+            if mrow[j] != 0.0 {
+                sum += (lrow[j] as f64 - mx).exp();
+            }
+        }
+        let lse = sum.ln();
+        for j in 0..a {
+            orow[j] = if mrow[j] != 0.0 {
+                (lrow[j] as f64 - mx - lse) as f32
+            } else {
+                MASKED_NEG
+            };
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_rows_matches_hand_case() {
+        // x = [[1, 2], [0, 3]], w = [[1, 0], [2, 1]], b = [10, 20]
+        let x = [1.0, 2.0, 0.0, 3.0];
+        let w = [1.0, 0.0, 2.0, 1.0];
+        let b = [10.0, 20.0];
+        let y = dense_rows(&x, 2, 2, &w, &b, 2, false, 1);
+        assert_eq!(y, vec![15.0, 22.0, 16.0, 23.0]);
+        // ReLU clamps negatives.
+        let y = dense_rows(&x, 2, 2, &w, &[-20.0, -30.0], 2, true, 1);
+        assert_eq!(y, vec![0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn matmuls_are_worker_invariant() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        // Large enough that effective_workers grants several workers and
+        // the parallel path really runs.
+        let (n, k, m) = (256, 128, 128);
+        assert!(effective_workers(4, n, n * k * m) == 4);
+        let mut x = vec![0f32; n * k];
+        let mut g = vec![0f32; n * m];
+        let mut w = vec![0f32; k * m];
+        rng.fill_normal_f32(&mut x, 1.0);
+        rng.fill_normal_f32(&mut g, 1.0);
+        rng.fill_normal_f32(&mut w, 1.0);
+        let b = vec![0.5f32; m];
+        for workers in [2usize, 4, 16] {
+            assert_eq!(dense_rows(&x, n, k, &w, &b, m, false, 1),
+                       dense_rows(&x, n, k, &w, &b, m, false, workers));
+            assert_eq!(matmul_tn(&x, n, k, &g, m, 1), matmul_tn(&x, n, k, &g, m, workers));
+            assert_eq!(matmul_nt(&g, n, m, &w, k, 1), matmul_nt(&g, n, m, &w, k, workers));
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_transpose_product() {
+        // x [2,3], g [2,2]: out[t][j] = Σ_r x[r][t]·g[r][j]
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let g = [1.0, 0.0, 0.0, 2.0];
+        let out = matmul_tn(&x, 2, 3, &g, 2, 1);
+        assert_eq!(out, vec![1.0, 8.0, 2.0, 10.0, 3.0, 12.0]);
+    }
+
+    #[test]
+    fn matmul_nt_matches_hand_case() {
+        // g [1,2] · wᵀ with w [3,2]
+        let g = [1.0, 2.0];
+        let w = [1.0, 0.0, 0.0, 1.0, 2.0, 2.0];
+        let out = matmul_nt(&g, 1, 2, &w, 3, 1);
+        assert_eq!(out, vec![1.0, 2.0, 6.0]);
+    }
+
+    #[test]
+    fn masked_log_softmax_normalizes_legal_entries() {
+        let logits = [1.0f32, 2.0, 3.0, 0.0, 0.0, 0.0];
+        let mask = [1.0f32, 0.0, 1.0, 0.0, 0.0, 0.0];
+        let lp = masked_log_softmax_rows(&logits, &mask, 2, 3);
+        assert_eq!(lp[1], MASKED_NEG);
+        let p: f64 = [(lp[0] as f64).exp(), (lp[2] as f64).exp()].iter().sum();
+        assert!((p - 1.0).abs() < 1e-6);
+        // Row with no legal entries is fully masked.
+        assert!(lp[3..6].iter().all(|&v| v == MASKED_NEG));
+    }
+}

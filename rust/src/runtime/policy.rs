@@ -11,6 +11,11 @@
 //! Implementations:
 //! - [`ArtifactPolicy`] / [`OwnedArtifactPolicy`] — the real AOT graphs via
 //!   [`TrainState::policy`];
+//! - [`NativePolicy`](crate::runtime::NativePolicy) — an owned snapshot of
+//!   the pure-Rust native network (trained in-process, `Send`, serve-ready);
+//! - [`BackendPolicy`](crate::runtime::BackendPolicy) — a borrowed view of
+//!   any training [`Backend`](crate::runtime::Backend) (what rollouts and
+//!   the eval protocols use);
 //! - [`UniformPolicy`] — a host-side masked-uniform policy with an optional
 //!   synthetic per-dispatch cost. Because its cost is a function of the
 //!   *batch shape* (not of how many rows are meaningful), it reproduces the
@@ -143,6 +148,25 @@ impl BatchPolicy for OwnedArtifactPolicy {
 /// masked log-softmax kernel).
 pub const MASKED_NEG: f32 = -1e30;
 
+/// Row-wise uniform-over-legal log-probabilities from a 0/1 mask:
+/// `-ln(count)` on legal entries, [`MASKED_NEG`] elsewhere (all-masked rows
+/// are fully [`MASKED_NEG`]). This is the single definition of the
+/// `uniform_pb` convention — [`UniformPolicy`], the native backend's
+/// dispatch, and the native losses' `b_lp` all follow it.
+pub(crate) fn masked_uniform_rows(mask: &[f32], rows: usize, width: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(mask.len(), rows * width);
+    out.clear();
+    out.reserve(rows * width);
+    for i in 0..rows {
+        let row = &mask[i * width..(i + 1) * width];
+        let cnt: f32 = row.iter().sum();
+        let lp = if cnt > 0.0 { -cnt.ln() } else { MASKED_NEG };
+        for &m in row {
+            out.push(if m != 0.0 { lp } else { MASKED_NEG });
+        }
+    }
+}
+
 /// Host-side masked-uniform policy with an optional synthetic per-dispatch
 /// cost. `synth_work` rounds of dense arithmetic over the full `[B, obs]`
 /// input run on every call, *independent of how many rows are active* —
@@ -161,19 +185,6 @@ impl UniformPolicy {
 
     pub fn with_work(shape: PolicyShape, synth_work: usize) -> UniformPolicy {
         UniformPolicy { shape, synth_work, sink: 0.0 }
-    }
-
-    fn masked_uniform_rows(mask: &[f32], b: usize, width: usize, out: &mut Vec<f32>) {
-        out.clear();
-        out.reserve(b * width);
-        for i in 0..b {
-            let row = &mask[i * width..(i + 1) * width];
-            let cnt: f32 = row.iter().sum();
-            let lp = if cnt > 0.0 { -cnt.ln() } else { MASKED_NEG };
-            for &m in row {
-                out.push(if m != 0.0 { lp } else { MASKED_NEG });
-            }
-        }
     }
 }
 
@@ -209,8 +220,8 @@ impl BatchPolicy for UniformPolicy {
         }
         let mut fwd = Vec::new();
         let mut bwd = Vec::new();
-        Self::masked_uniform_rows(fwd_mask, s.batch, s.n_actions, &mut fwd);
-        Self::masked_uniform_rows(bwd_mask, s.batch, s.n_bwd_actions, &mut bwd);
+        masked_uniform_rows(fwd_mask, s.batch, s.n_actions, &mut fwd);
+        masked_uniform_rows(bwd_mask, s.batch, s.n_bwd_actions, &mut bwd);
         Ok((fwd, bwd, vec![0.0; s.batch]))
     }
 }

@@ -1,36 +1,40 @@
-//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//! Integration tests over the full train→sample→metric stack, generic over
+//! the training [`Backend`].
 //!
-//! These exercise the full L3→L2→L1 stack: rust envs staging observations,
-//! the PJRT-compiled policy graph (with the Pallas masked-softmax inside),
-//! and the fused train step.
+//! With AOT artifacts present (`make artifacts` + real xla-rs) they
+//! exercise the PJRT-compiled graphs; without artifacts they run the same
+//! assertions against the pure-Rust [`NativeBackend`], so the suite no
+//! longer skips in artifact-less environments. Only the xla-specific
+//! assertions (artifact loading, subtb — which the native backend does not
+//! implement) keep the skip.
 
 use gfnx::coordinator::eval::log_p_theta_hat;
 use gfnx::coordinator::explore::EpsSchedule;
 use gfnx::coordinator::rollout::{
-    backward_rollout_score, forward_rollout, ExtraSource, RolloutCtx,
+    backward_rollout_score_with_policy, forward_rollout_with_policy, ExtraSource, RolloutCtx,
 };
 use gfnx::coordinator::trainer::Trainer;
 use gfnx::envs::hypergrid::HypergridEnv;
 use gfnx::envs::VecEnv;
 use gfnx::metrics::tv::tv_from_counts;
 use gfnx::reward::hypergrid::HypergridReward;
-use gfnx::runtime::Artifact;
+use gfnx::runtime::{Artifact, Backend, BackendPolicy, NativeBackend, NativeConfig, XlaBackend};
 use gfnx::util::rng::Rng;
 use gfnx::util::stats::softmax_from_logs;
 use std::path::PathBuf;
 
 /// Artifacts are produced by `make artifacts` (JAX AOT lowering) and are
-/// not checked in; these tests skip gracefully when they are absent so the
-/// suite stays green in artifact-less environments. Every test starts with
-/// `let Some(dir) = artifacts_dir() else { return };`.
+/// not checked in. When absent, the backend-generic tests fall back to the
+/// native backend instead of skipping.
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("hypergrid_small.tb.manifest.json").exists() {
         Some(dir)
     } else {
         eprintln!(
-            "skipping: AOT artifacts missing — run `make artifacts` AND build \
-             against the real xla-rs crate (see rust/vendor/README.md) to enable"
+            "AOT artifacts missing — running against the native backend \
+             (xla-specific assertions skip; run `make artifacts` + real \
+             xla-rs to cover the artifact path too)"
         );
         None
     }
@@ -40,17 +44,39 @@ fn small_env() -> HypergridEnv<HypergridReward> {
     HypergridEnv::new(2, 8, HypergridReward::standard(8))
 }
 
+fn native_backend(env: &HypergridEnv<HypergridReward>, loss: &str, seed: u64) -> NativeBackend {
+    // Batch 16 mirrors the hypergrid_small artifact config.
+    NativeBackend::new(NativeConfig::for_env(env, 16, loss).with_hidden(64), seed).unwrap()
+}
+
+/// Run `f` on the xla "tb" backend when artifacts exist, else on the native
+/// backend — the single definition of the fallback for the borrowed-backend
+/// tests (tests that own a `Trainer` dispatch explicitly, since `Trainer`
+/// takes its backend by value).
+fn with_any_backend(seed: u64, f: impl Fn(&HypergridEnv<HypergridReward>, &dyn Backend)) {
+    let env = small_env();
+    match artifacts_dir() {
+        Some(dir) => {
+            let art = Artifact::load(&dir, "hypergrid_small.tb").unwrap();
+            let backend = XlaBackend::new(&art).unwrap();
+            f(&env, &backend);
+        }
+        None => f(&env, &native_backend(&env, "tb", seed)),
+    }
+}
+
 #[test]
 fn policy_outputs_valid_distributions() {
-    let Some(dir) = artifacts_dir() else { return };
-    let env = small_env();
-    let art = Artifact::load(&dir, "hypergrid_small.tb").unwrap();
-    let ts = art.init_state().unwrap();
+    with_any_backend(1, |env, backend| check_policy_distributions(env, backend));
+}
+
+fn check_policy_distributions<B: Backend + ?Sized>(
+    env: &HypergridEnv<HypergridReward>,
+    backend: &B,
+) {
     let spec = env.spec();
-    let b = art.batch();
+    let b = backend.shape().batch;
     let state = env.reset(b);
-    let mut ctx = RolloutCtx::for_artifact(&art);
-    // Stage initial states manually via a zero-eps rollout context.
     let mut obs = vec![0f32; b * spec.obs_dim];
     let mut fwd_mask = vec![0f32; b * spec.n_actions];
     let mut bwd_mask = vec![0f32; b * spec.n_bwd_actions];
@@ -65,7 +91,7 @@ fn policy_outputs_valid_distributions() {
         env.bwd_mask_into(&state, i, &mut bscratch);
         bwd_mask[i * spec.n_bwd_actions] = 1.0; // s0: sentinel
     }
-    let (fwd_logp, bwd_logp, flow) = ts.policy(&art, &obs, &fwd_mask, &bwd_mask).unwrap();
+    let (fwd_logp, bwd_logp, flow) = backend.policy_dispatch(&obs, &fwd_mask, &bwd_mask).unwrap();
     assert_eq!(fwd_logp.len(), b * spec.n_actions);
     assert_eq!(bwd_logp.len(), b * spec.n_bwd_actions);
     assert_eq!(flow.len(), b);
@@ -81,22 +107,24 @@ fn policy_outputs_valid_distributions() {
         }
         assert!((p - 1.0).abs() < 1e-4, "row {i} sums to {p}");
     }
-    let _ = ctx.obs.len();
 }
 
 #[test]
 fn forward_rollout_produces_consistent_batches() {
-    let Some(dir) = artifacts_dir() else { return };
-    let env = small_env();
-    let art = Artifact::load(&dir, "hypergrid_small.tb").unwrap();
-    let ts = art.init_state().unwrap();
-    let mut ctx = RolloutCtx::for_artifact(&art);
+    with_any_backend(2, |env, backend| check_forward_rollout(env, backend));
+}
+
+fn check_forward_rollout<B: Backend + ?Sized>(env: &HypergridEnv<HypergridReward>, backend: &B) {
+    let shape = backend.shape();
+    let mut ctx = RolloutCtx::for_shape(&shape);
     let mut rng = Rng::new(0);
+    let mut policy = BackendPolicy { backend };
     let (batch, objs) =
-        forward_rollout(&env, &art, &ts, &mut ctx, &mut rng, 0.1, &ExtraSource::None).unwrap();
+        forward_rollout_with_policy(env, &mut policy, &mut ctx, &mut rng, 0.1, &ExtraSource::None)
+            .unwrap();
     let spec = env.spec();
-    assert_eq!(objs.len(), art.batch());
-    for i in 0..art.batch() {
+    assert_eq!(objs.len(), shape.batch);
+    for i in 0..shape.batch {
         let len = batch.length[i] as usize;
         assert!(len >= 1 && len <= spec.t_max);
         // log_reward matches the extracted object's reward.
@@ -114,10 +142,27 @@ fn forward_rollout_produces_consistent_batches() {
 
 #[test]
 fn train_step_runs_and_loss_decreases_with_training() {
-    let Some(dir) = artifacts_dir() else { return };
     let env = small_env();
-    let art = Artifact::load(&dir, "hypergrid_small.tb").unwrap();
-    let mut trainer = Trainer::new(&env, &art, 7, EpsSchedule::Constant(0.05)).unwrap();
+    match artifacts_dir() {
+        Some(dir) => {
+            let art = Artifact::load(&dir, "hypergrid_small.tb").unwrap();
+            let trainer = Trainer::new(&env, &art, 7, EpsSchedule::Constant(0.05)).unwrap();
+            check_loss_decreases(trainer);
+        }
+        None => {
+            let trainer = Trainer::with_backend(
+                &env,
+                native_backend(&env, "tb", 7),
+                7,
+                EpsSchedule::Constant(0.05),
+            )
+            .unwrap();
+            check_loss_decreases(trainer);
+        }
+    }
+}
+
+fn check_loss_decreases<B: Backend>(mut trainer: Trainer<'_, HypergridEnv<HypergridReward>, B>) {
     let mut first = Vec::new();
     let mut last = Vec::new();
     for i in 0..120 {
@@ -141,18 +186,37 @@ fn train_step_runs_and_loss_decreases_with_training() {
 
 #[test]
 fn training_improves_tv_against_exact_target() {
-    let Some(dir) = artifacts_dir() else { return };
     let env = small_env();
-    let art = Artifact::load(&dir, "hypergrid_small.tb").unwrap();
+    match artifacts_dir() {
+        Some(dir) => {
+            let art = Artifact::load(&dir, "hypergrid_small.tb").unwrap();
+            let trainer = Trainer::new(&env, &art, 3, EpsSchedule::none()).unwrap();
+            check_tv_improves(&env, trainer);
+        }
+        None => {
+            let trainer = Trainer::with_backend(
+                &env,
+                native_backend(&env, "tb", 3),
+                3,
+                EpsSchedule::none(),
+            )
+            .unwrap();
+            check_tv_improves(&env, trainer);
+        }
+    }
+}
+
+fn check_tv_improves<B: Backend>(
+    env: &HypergridEnv<HypergridReward>,
+    mut trainer: Trainer<'_, HypergridEnv<HypergridReward>, B>,
+) {
     // Exact target over the 64 terminal states.
     let n_states = env.num_terminal_states();
     let logs: Vec<f64> = (0..n_states)
         .map(|idx| env.log_reward_obj(&env.unflatten(idx)))
         .collect();
     let exact = softmax_from_logs(&logs);
-
-    let mut trainer = Trainer::new(&env, &art, 3, EpsSchedule::none()).unwrap();
-    let sample_tv = |tr: &mut Trainer<HypergridEnv<HypergridReward>>| -> f64 {
+    let mut sample_tv = |tr: &mut Trainer<'_, HypergridEnv<HypergridReward>, B>| -> f64 {
         let mut counts = vec![0u64; n_states];
         for _ in 0..40 {
             for obj in tr.sample_objs().unwrap() {
@@ -173,35 +237,60 @@ fn training_improves_tv_against_exact_target() {
 }
 
 #[test]
-fn db_and_subtb_artifacts_train() {
-    let Some(dir) = artifacts_dir() else { return };
+fn db_objective_trains() {
     let env = small_env();
-    for loss in ["db", "subtb"] {
-        let art = Artifact::load(&dir, &format!("hypergrid_small.{loss}")).unwrap();
-        let mut trainer = Trainer::new(&env, &art, 11, EpsSchedule::none()).unwrap();
-        let mut losses = Vec::new();
-        for _ in 0..40 {
-            let (stats, _) = trainer.train_iter(&ExtraSource::None).unwrap();
-            assert!(stats.loss.is_finite(), "{loss} loss not finite");
-            losses.push(stats.loss as f64);
+    match artifacts_dir() {
+        Some(dir) => {
+            // xla covers subtb too (native does not implement it).
+            for loss in ["db", "subtb"] {
+                let art = Artifact::load(&dir, &format!("hypergrid_small.{loss}")).unwrap();
+                let trainer = Trainer::new(&env, &art, 11, EpsSchedule::none()).unwrap();
+                check_db_style_trains(trainer, loss, 40);
+            }
         }
-        let head = losses[..10].iter().sum::<f64>() / 10.0;
-        let tail = losses[30..].iter().sum::<f64>() / 10.0;
-        assert!(tail < head, "{loss}: {head} -> {tail}");
+        None => {
+            let trainer = Trainer::with_backend(
+                &env,
+                native_backend(&env, "db", 11),
+                11,
+                EpsSchedule::none(),
+            )
+            .unwrap();
+            check_db_style_trains(trainer, "db", 300);
+        }
     }
+}
+
+fn check_db_style_trains<B: Backend>(
+    mut trainer: Trainer<'_, HypergridEnv<HypergridReward>, B>,
+    loss: &str,
+    iters: usize,
+) {
+    let mut losses = Vec::new();
+    for _ in 0..iters {
+        let (stats, _) = trainer.train_iter(&ExtraSource::None).unwrap();
+        assert!(stats.loss.is_finite(), "{loss} loss not finite");
+        losses.push(stats.loss as f64);
+    }
+    let w = (iters / 4).max(1);
+    let head = losses[..w].iter().sum::<f64>() / w as f64;
+    let tail = losses[iters - w..].iter().sum::<f64>() / w as f64;
+    assert!(tail < head, "{loss}: {head} -> {tail}");
 }
 
 #[test]
 fn backward_rollouts_score_finite_and_invert() {
-    let Some(dir) = artifacts_dir() else { return };
-    let env = small_env();
-    let art = Artifact::load(&dir, "hypergrid_small.tb").unwrap();
-    let ts = art.init_state().unwrap();
-    let mut ctx = RolloutCtx::for_artifact(&art);
+    with_any_backend(5, |env, backend| check_backward_scores(env, backend));
+}
+
+fn check_backward_scores<B: Backend + ?Sized>(env: &HypergridEnv<HypergridReward>, backend: &B) {
+    let mut ctx = RolloutCtx::for_shape(&backend.shape());
     let mut rng = Rng::new(5);
+    let mut policy = BackendPolicy { backend };
     // Build some terminal objects.
     let objs: Vec<Vec<i32>> = vec![vec![0, 0], vec![3, 7], vec![7, 7], vec![2, 5]];
-    let scores = backward_rollout_score(&env, &art, &ts, &mut ctx, &mut rng, &objs).unwrap();
+    let scores =
+        backward_rollout_score_with_policy(env, &mut policy, &mut ctx, &mut rng, &objs).unwrap();
     assert_eq!(scores.len(), objs.len());
     for (i, (log_pf, log_pb, len)) in scores.iter().enumerate() {
         assert!(log_pf.is_finite() && *log_pf <= 0.0);
@@ -217,20 +306,37 @@ fn log_p_theta_hat_normalizes_for_tiny_grid() {
     // For an *untrained* policy P̂_θ is still a distribution in expectation;
     // check Σ_x exp(log P̂_θ(x)) ≈ 1 over the full 64-state space with
     // enough samples (MC noise bounded).
-    let Some(dir) = artifacts_dir() else { return };
-    let env = small_env();
-    let art = Artifact::load(&dir, "hypergrid_small.tb").unwrap();
-    let ts = art.init_state().unwrap();
-    let mut ctx = RolloutCtx::for_artifact(&art);
+    with_any_backend(6, |env, backend| check_p_theta_normalizes(env, backend));
+}
+
+fn check_p_theta_normalizes<B: Backend + ?Sized>(
+    env: &HypergridEnv<HypergridReward>,
+    backend: &B,
+) {
+    let mut ctx = RolloutCtx::for_shape(&backend.shape());
     let mut rng = Rng::new(6);
     let mut total = 0.0f64;
     for idx in 0..env.num_terminal_states() {
         let obj = env.unflatten(idx);
-        let lp = log_p_theta_hat(&env, &art, &ts, &mut ctx, &mut rng, &obj, 16).unwrap();
+        let lp = log_p_theta_hat(env, backend, &mut ctx, &mut rng, &obj, 16).unwrap();
         total += lp.exp();
     }
     assert!(
         (total - 1.0).abs() < 0.25,
         "Σ P̂_θ = {total} (should be ≈ 1)"
     );
+}
+
+/// The init-blob contract: when artifacts exist, the native backend must be
+/// able to start from the artifact's manifest + blob without touching any
+/// HLO (the initialization-compatibility half of the backend abstraction).
+#[test]
+fn native_backend_loads_artifact_init_blobs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let env = small_env();
+    let backend = NativeBackend::from_artifact_files(&dir, "hypergrid_small.tb").unwrap();
+    assert_eq!(backend.shape().batch, 16);
+    assert_eq!(backend.loss_name(), "tb");
+    // The loaded params drive a valid dispatch.
+    check_policy_distributions(&env, &backend);
 }
