@@ -4,18 +4,23 @@
 //! artifacts and no XLA**.
 //!
 //! Measures TB on hypergrid and bitseq at batch 16 and 256 (the paper's
-//! small/large batch regimes).
+//! small/large batch regimes), plus the host-synchronized
+//! [`BaselineTrainer`] at batch 16 — the per-sample-dispatch +
+//! per-call-parameter-upload comparator of Tables 1–2 — so the it/s ratio
+//! is measurable without artifacts.
 //!
 //! Run:   cargo bench --bench native_train
 //! Env:   GFNX_NATIVE_HIDDEN    MLP trunk width (default 128)
 //!        GFNX_NATIVE_WORKERS   dispatch worker threads (default: all cores)
 //!        GFNX_NATIVE_ITERS     iters per timed window at batch 16
-//!                              (default 10; batch-256 runs use max(it/4, 2))
+//!                              (default 10; batch-256 runs use max(it/4, 2),
+//!                              baseline runs max(it/8, 1))
 //!        GFNX_BENCH_REPEATS    timed windows (default 3)
 //!
 //! Emits `BENCH_native.json` via the `BenchJson` harness.
 
-use gfnx::bench::harness::{itps_json, measure_it_per_sec, BenchJson, BenchTable};
+use gfnx::bench::harness::{env_usize, itps_json, measure_it_per_sec, BenchJson, BenchTable};
+use gfnx::coordinator::baseline::BaselineTrainer;
 use gfnx::coordinator::explore::EpsSchedule;
 use gfnx::coordinator::rollout::ExtraSource;
 use gfnx::coordinator::trainer::Trainer;
@@ -28,13 +33,11 @@ use gfnx::util::json::Json;
 use gfnx::util::stats::ItPerSec;
 use gfnx::util::threadpool::default_workers;
 
-fn envv(name: &str, default: usize) -> usize {
-    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
-
+#[allow(clippy::too_many_arguments)]
 fn bench_env<E: VecEnv>(
     env: &E,
     label: &str,
+    mode: &str, // "fast" | "baseline"
     batch: usize,
     hidden: usize,
     workers: usize,
@@ -45,22 +48,36 @@ fn bench_env<E: VecEnv>(
         .with_hidden(hidden)
         .with_workers(workers);
     let backend = NativeBackend::new(cfg, 0).expect("native backend");
-    let mut trainer =
-        Trainer::with_backend(env, backend, 0, EpsSchedule::none()).expect("trainer");
-    let r = measure_it_per_sec(1, repeats, iters, || {
-        let (stats, _objs) = trainer.train_iter(&ExtraSource::None).unwrap();
-        assert!(stats.loss.is_finite(), "{label}: loss diverged");
-    });
-    println!("  {label:<24} batch {batch:>3}: {r}");
+    let r = match mode {
+        "fast" => {
+            let mut trainer =
+                Trainer::with_backend(env, backend, 0, EpsSchedule::none()).expect("trainer");
+            measure_it_per_sec(1, repeats, iters, || {
+                let (stats, _objs) = trainer.train_iter(&ExtraSource::None).unwrap();
+                assert!(stats.loss.is_finite(), "{label}: loss diverged");
+            })
+        }
+        "baseline" => {
+            let mut trainer = BaselineTrainer::with_backend(env, backend, 0, EpsSchedule::none())
+                .expect("baseline trainer");
+            measure_it_per_sec(1, repeats, iters, || {
+                let (stats, _objs) = trainer.train_iter(&ExtraSource::None).unwrap();
+                assert!(stats.loss.is_finite(), "{label}: baseline loss diverged");
+            })
+        }
+        other => panic!("mode {other:?}"),
+    };
+    println!("  {label:<24} {mode:<8} batch {batch:>3}: {r}");
     r
 }
 
 fn main() {
-    let hidden = envv("GFNX_NATIVE_HIDDEN", 128);
-    let workers = envv("GFNX_NATIVE_WORKERS", default_workers());
-    let iters16 = envv("GFNX_NATIVE_ITERS", 10);
+    let hidden = env_usize("GFNX_NATIVE_HIDDEN", 128);
+    let workers = env_usize("GFNX_NATIVE_WORKERS", default_workers());
+    let iters16 = env_usize("GFNX_NATIVE_ITERS", 10);
     let iters256 = (iters16 / 4).max(2);
-    let repeats = envv("GFNX_BENCH_REPEATS", 3);
+    let iters_base = (iters16 / 8).max(1);
+    let repeats = env_usize("GFNX_BENCH_REPEATS", 3);
     println!(
         "native TB training throughput (hidden {hidden}, {workers} workers, \
          {repeats} windows)"
@@ -69,19 +86,38 @@ fn main() {
     let hg = HypergridEnv::new(2, 8, HypergridReward::standard(8));
     let (bs, _modes) = bitseq_env(BitSeqConfig::small());
 
-    let rows: Vec<(&str, usize, ItPerSec)> = vec![
-        ("hypergrid_small", 16, bench_env(&hg, "hypergrid_small", 16, hidden, workers, iters16, repeats)),
-        ("hypergrid_small", 256, bench_env(&hg, "hypergrid_small", 256, hidden, workers, iters256, repeats)),
-        ("bitseq_small", 16, bench_env(&bs, "bitseq_small", 16, hidden, workers, iters16, repeats)),
-        ("bitseq_small", 256, bench_env(&bs, "bitseq_small", 256, hidden, workers, iters256, repeats)),
+    let rows: Vec<(&str, &str, usize, ItPerSec)> = vec![
+        ("hypergrid_small", "fast", 16,
+         bench_env(&hg, "hypergrid_small", "fast", 16, hidden, workers, iters16, repeats)),
+        ("hypergrid_small", "fast", 256,
+         bench_env(&hg, "hypergrid_small", "fast", 256, hidden, workers, iters256, repeats)),
+        ("hypergrid_small", "baseline", 16,
+         bench_env(&hg, "hypergrid_small", "baseline", 16, hidden, workers, iters_base, repeats)),
+        ("bitseq_small", "fast", 16,
+         bench_env(&bs, "bitseq_small", "fast", 16, hidden, workers, iters16, repeats)),
+        ("bitseq_small", "fast", 256,
+         bench_env(&bs, "bitseq_small", "fast", 256, hidden, workers, iters256, repeats)),
+        ("bitseq_small", "baseline", 16,
+         bench_env(&bs, "bitseq_small", "baseline", 16, hidden, workers, iters_base, repeats)),
     ];
+    // Tables 1–2 ratio, artifact-free: fast vs baseline at the same batch.
+    let speedup = |env_name: &str| -> Option<f64> {
+        let fast = rows.iter().find(|r| r.0 == env_name && r.1 == "fast" && r.2 == 16)?;
+        let base = rows.iter().find(|r| r.0 == env_name && r.1 == "baseline")?;
+        Some(fast.3.mean / base.3.mean)
+    };
 
     let mut table = BenchTable::new(
         "native_train — TB training it/s, pure-Rust backend (no artifacts)",
-        &["Env", "Batch", "it/s"],
+        &["Env", "Mode", "Batch", "it/s", "Speedup vs baseline"],
     );
-    for (env, batch, r) in &rows {
-        table.row(&[env.to_string(), batch.to_string(), r.to_string()]);
+    for (env, mode, batch, r) in &rows {
+        let sp = if *mode == "fast" && *batch == 16 {
+            speedup(env).map(|s| format!("{s:.1}x")).unwrap_or_default()
+        } else {
+            String::new()
+        };
+        table.row(&[env.to_string(), mode.to_string(), batch.to_string(), r.to_string(), sp]);
     }
     table.print();
 
@@ -91,12 +127,18 @@ fn main() {
     bj.meta("hidden", Json::Num(hidden as f64));
     bj.meta("workers", Json::Num(workers as f64));
     bj.meta("repeats", Json::Num(repeats as f64));
-    for (env, batch, r) in &rows {
+    for (env, mode, batch, r) in &rows {
         bj.row(Json::obj(vec![
             ("env", Json::Str(env.to_string())),
+            ("mode", Json::Str(mode.to_string())),
             ("batch", Json::Num(*batch as f64)),
             ("it_per_sec", itps_json(r)),
         ]));
+    }
+    for env_name in ["hypergrid_small", "bitseq_small"] {
+        if let Some(s) = speedup(env_name) {
+            bj.meta(&format!("speedup_{env_name}"), Json::Num(s));
+        }
     }
     match bj.write() {
         Ok(path) => println!("wrote {}", path.display()),

@@ -2,60 +2,106 @@
 //! coupling matrix J_φ and the data-generating J = σ·A_N, across coupling
 //! strengths σ (higher is better).
 //!
-//! Budget default: 3×3 torus (the `ising_small` artifact) over the paper's σ
-//! grid; `make artifacts-paper` + GFNX_BENCH_PAPER=1 adds N = 9/10.
+//! Runs **artifact-free** on the native backend by default
+//! (GFNX_BENCH_BACKEND=xla switches to the AOT graphs, which need
+//! `make artifacts` + real xla-rs). Budget default: 3×3 torus over the
+//! paper's σ grid; GFNX_BENCH_PAPER=1 adds N = 9/10.
 //!
-//! Run: `cargo bench --bench table8_ising`
+//! Run:   cargo bench --bench table8_ising
+//! Env:   GFNX_BENCH_BACKEND      native (default) | xla
+//!        GFNX_BENCH_TRAIN_ITERS  EB-GFN iterations per (σ, seed) (default 300)
+//!        GFNX_BENCH_SAMPLES      MCMC dataset size (default 2000)
+//!        GFNX_NATIVE_HIDDEN      MLP trunk width, native backend (default 64)
+//!
+//! Emits `BENCH_ebgfn.json` via the `BenchJson` harness.
 
-use gfnx::bench::harness::BenchTable;
+use gfnx::bench::harness::{env_usize, BenchJson, BenchTable};
 use gfnx::coordinator::config::artifacts_dir;
 use gfnx::coordinator::ebgfn::{EbGfnTrainer, SharedIsingReward};
 use gfnx::data::ising_mcmc::generate_ising_dataset;
 use gfnx::envs::ising::IsingEnv;
 use gfnx::reward::ising::torus_adjacency;
-use gfnx::runtime::Artifact;
+use gfnx::runtime::{Artifact, Backend, NativeBackend, NativeConfig};
+use gfnx::util::json::Json;
 use gfnx::util::rng::Rng;
 use gfnx::util::stats::Welford;
 
-fn run_sigma(n: usize, artifact: &str, sigma: f64, iters: u64, seeds: u64) -> (f64, f64) {
+struct Knobs {
+    backend: String,
+    iters: u64,
+    samples: usize,
+    hidden: usize,
+}
+
+fn knobs() -> Knobs {
+    Knobs {
+        backend: std::env::var("GFNX_BENCH_BACKEND").unwrap_or_else(|_| "native".to_string()),
+        iters: env_usize("GFNX_BENCH_TRAIN_ITERS", 300) as u64,
+        samples: env_usize("GFNX_BENCH_SAMPLES", 2000),
+        hidden: env_usize("GFNX_NATIVE_HIDDEN", 64),
+    }
+}
+
+/// One EB-GFN run; returns the best −log RMSE(J_φ, J_true) (paper protocol:
+/// stop at the best J error, §B.5).
+fn run_once<B: Backend>(
+    mut trainer: EbGfnTrainer<'_, B>,
+    j_true: &gfnx::util::linalg::Mat,
+    iters: u64,
+) -> f64 {
+    let mut best = f64::NEG_INFINITY;
+    for _ in 0..iters {
+        trainer.train_iter().unwrap();
+        best = best.max(trainer.neg_log_rmse(j_true));
+    }
+    best
+}
+
+fn run_sigma(n: usize, artifact: &str, sigma: f64, seeds: u64, k: &Knobs) -> (f64, f64) {
     let mut w = Welford::new();
     for seed in 0..seeds {
         let mut j_true = torus_adjacency(n);
         j_true.scale(sigma);
         let mut rng = Rng::new(seed * 31 + 7);
-        let dataset = generate_ising_dataset(n, sigma, 2000, &mut rng);
+        let dataset = generate_ising_dataset(n, sigma, k.samples, &mut rng);
         let reward = SharedIsingReward::zeros(n * n);
         let env = IsingEnv::lattice(n, reward.clone());
-        let art = Artifact::load(&artifacts_dir(), artifact).expect("artifact");
-        let mut trainer = EbGfnTrainer::new(&env, &art, reward, dataset, seed).unwrap();
-        let mut best = f64::NEG_INFINITY;
-        for _ in 0..iters {
-            trainer.train_iter().unwrap();
-            // Paper protocol: stop at the best J error (§B.5).
-            best = best.max(trainer.neg_log_rmse(&j_true));
-        }
+        let best = match k.backend.as_str() {
+            "native" => {
+                let cfg = NativeConfig::for_env(&env, 16, "tb").with_hidden(k.hidden);
+                let backend = NativeBackend::new(cfg, seed).unwrap();
+                let trainer =
+                    EbGfnTrainer::with_backend(&env, backend, reward, dataset, seed).unwrap();
+                run_once(trainer, &j_true, k.iters)
+            }
+            "xla" => {
+                let art = Artifact::load(&artifacts_dir(), artifact)
+                    .expect("artifact (run `make artifacts`, or use GFNX_BENCH_BACKEND=native)");
+                let trainer = EbGfnTrainer::new(&env, &art, reward, dataset, seed).unwrap();
+                run_once(trainer, &j_true, k.iters)
+            }
+            other => panic!("GFNX_BENCH_BACKEND={other:?} (native | xla)"),
+        };
         w.push(best);
     }
     (w.mean(), w.std())
 }
 
 fn main() {
-    let iters: u64 = std::env::var("GFNX_BENCH_TRAIN_ITERS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(300);
+    let k = knobs();
     let seeds = 2u64;
+    println!(
+        "EB-GFN Table 8 on the {} backend ({} iters, {} samples)",
+        k.backend, k.iters, k.samples
+    );
     let mut table = BenchTable::new(
         "Table 8 — EB-GFN mean −log RMSE(J_φ, J) per coupling σ (higher better)",
         &["Lattice", "sigma", "-log RMSE (mean±std)"],
     );
+    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
     for sigma in [0.1, 0.2, 0.3, 0.4, 0.5, -0.1, -0.2] {
-        let (mean, std) = run_sigma(3, "ising_small.tb", sigma, iters, seeds);
-        table.row(&[
-            "3x3".to_string(),
-            format!("{sigma:+.1}"),
-            format!("{mean:.2} ± {std:.2}"),
-        ]);
+        let (mean, std) = run_sigma(3, "ising_small.tb", sigma, seeds, &k);
+        rows.push(("3x3".to_string(), sigma, mean, std));
     }
     if std::env::var("GFNX_BENCH_PAPER").is_ok() {
         for (n, art, sigmas) in [
@@ -63,14 +109,35 @@ fn main() {
             (10, "ising_n10.tb", vec![0.1, 0.2, 0.3, 0.4, 0.5]),
         ] {
             for sigma in sigmas {
-                let (mean, std) = run_sigma(n, art, sigma, iters, 1);
-                table.row(&[
-                    format!("{n}x{n}"),
-                    format!("{sigma:+.1}"),
-                    format!("{mean:.2} ± {std:.2}"),
-                ]);
+                let (mean, std) = run_sigma(n, art, sigma, 1, &k);
+                rows.push((format!("{n}x{n}"), sigma, mean, std));
             }
         }
     }
+    for (lattice, sigma, mean, std) in &rows {
+        table.row(&[
+            lattice.clone(),
+            format!("{sigma:+.1}"),
+            format!("{mean:.2} ± {std:.2}"),
+        ]);
+    }
     table.print();
+
+    let mut bj = BenchJson::new("ebgfn");
+    bj.meta("backend", Json::Str(k.backend.clone()));
+    bj.meta("iters", Json::Num(k.iters as f64));
+    bj.meta("samples", Json::Num(k.samples as f64));
+    bj.meta("seeds", Json::Num(seeds as f64));
+    for (lattice, sigma, mean, std) in &rows {
+        bj.row(Json::obj(vec![
+            ("lattice", Json::Str(lattice.clone())),
+            ("sigma", Json::Num(*sigma)),
+            ("neg_log_rmse_mean", Json::Num(*mean)),
+            ("neg_log_rmse_std", Json::Num(*std)),
+        ]));
+    }
+    match bj.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_ebgfn.json write failed: {e}"),
+    }
 }

@@ -70,6 +70,13 @@ pub fn itps_json(v: &ItPerSec) -> Json {
     Json::obj(vec![("mean", Json::Num(v.mean)), ("sem3", Json::Num(v.sem3))])
 }
 
+/// Workload knob from the environment: parse `name` as usize, falling back
+/// to `default` when unset or unparsable (the shared definition for the
+/// bench binaries' `GFNX_*` overrides).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 /// Machine-readable bench emission: one JSON document per bench binary,
 /// written to `BENCH_<name>.json` (in `GFNX_BENCH_JSON_DIR`, defaulting to
 /// the working directory). The document is

@@ -5,27 +5,38 @@
 //! host-side GFlowNet stacks:
 //!
 //! 1. **per-sample dispatch** — each env instance is rolled out with its own
-//!    policy calls (batch-of-one semantics padded into the artifact's fixed
+//!    policy calls (batch-of-one semantics padded into the backend's fixed
 //!    batch), instead of one vectorized call per step;
-//! 2. **per-call parameter transfer** — the policy parameters are re-uploaded
-//!    to the device for every call, modelling the CPU↔device churn of a
-//!    host-side training loop that does not keep state device-resident.
+//! 2. **per-call parameter transfer** — the policy parameters are re-staged
+//!    for every call ([`Backend::refresh_params`]), modelling the CPU↔device
+//!    churn of a host-side training loop that does not keep state
+//!    device-resident.
 //!
-//! Everything else (env logic, objective, optimizer) is identical, so the
-//! it/s ratio isolates exactly the effect the paper measures in Tables 1–2.
+//! Everything else (env logic, objective, optimizer) is identical — the
+//! assembled [`TrajBatch`] follows the exact staging conventions of
+//! [`forward_rollout_with_policy`](super::rollout::forward_rollout_with_policy),
+//! so at batch width 1 the two paths produce bitwise-identical batches from
+//! the same seed — and the it/s ratio therefore isolates exactly the effect
+//! the paper measures in Tables 1–2.
+//!
+//! Like [`Trainer`](super::trainer::Trainer), the baseline is generic over
+//! [`Backend`]: [`BaselineTrainer::new`] keeps the AOT artifact path, and
+//! [`BaselineTrainer::with_backend`] measures the same host-synchronized
+//! economics against the pure-Rust
+//! [`NativeBackend`](crate::runtime::NativeBackend) with no artifacts.
 
 use super::explore::EpsSchedule;
 use super::rollout::{ExtraSource, RolloutCtx, TrajBatch};
 use super::trainer::IterStats;
-use crate::envs::{VecEnv, NOOP};
-use crate::runtime::{Artifact, TrainState};
+use crate::envs::VecEnv;
+use crate::runtime::backend::{Backend, XlaBackend};
+use crate::runtime::Artifact;
 use crate::util::rng::Rng;
 
-/// Baseline trainer: same artifact, host-synchronized execution.
-pub struct BaselineTrainer<'a, E: VecEnv> {
+/// Baseline trainer: same backend, host-synchronized execution.
+pub struct BaselineTrainer<'a, E: VecEnv, B: Backend = XlaBackend<'a>> {
     pub env: &'a E,
-    pub art: &'a Artifact,
-    pub state: TrainState,
+    pub backend: B,
     pub ctx: RolloutCtx,
     pub rng: Rng,
     pub explore: EpsSchedule,
@@ -33,36 +44,62 @@ pub struct BaselineTrainer<'a, E: VecEnv> {
     mdb_deltas: bool,
 }
 
-impl<'a, E: VecEnv> BaselineTrainer<'a, E> {
+impl<'a, E: VecEnv> BaselineTrainer<'a, E, XlaBackend<'a>> {
+    /// Artifact-backed baseline (the original construction path).
     pub fn new(
         env: &'a E,
         art: &'a Artifact,
         seed: u64,
         explore: EpsSchedule,
     ) -> anyhow::Result<Self> {
+        Self::with_backend(env, XlaBackend::new(art)?, seed, explore)
+    }
+}
+
+impl<'a, E: VecEnv, B: Backend> BaselineTrainer<'a, E, B> {
+    /// Bind an environment to any [`Backend`] (xla or native).
+    pub fn with_backend(
+        env: &'a E,
+        backend: B,
+        seed: u64,
+        explore: EpsSchedule,
+    ) -> anyhow::Result<Self> {
+        let spec = env.spec();
+        let shape = backend.shape();
+        anyhow::ensure!(
+            spec.obs_dim == shape.obs_dim
+                && spec.n_actions == shape.n_actions
+                && spec.n_bwd_actions == shape.n_bwd_actions
+                && spec.t_max == shape.t_max,
+            "env spec {:?} does not match backend shape {:?}",
+            spec,
+            shape
+        );
+        let mdb_deltas = backend.loss_name() == "mdb";
         Ok(BaselineTrainer {
             env,
-            art,
-            state: art.init_state()?,
-            ctx: RolloutCtx::for_artifact(art),
+            ctx: RolloutCtx::for_shape(&shape),
+            backend,
             rng: Rng::new(seed),
             explore,
             step: 0,
-            mdb_deltas: art.manifest.config.loss == "mdb",
+            mdb_deltas,
         })
     }
 
-    /// One baseline iteration: roll each of the batch's trajectories
-    /// *sequentially*, with a fresh parameter upload before every policy
-    /// call (the host-synchronized pattern), then run the same train step.
-    pub fn train_iter(
+    /// Roll each of the batch's trajectories *sequentially*, with a fresh
+    /// parameter upload before every policy call (the host-synchronized
+    /// pattern). The assembled batch follows the staging conventions of
+    /// `forward_rollout_with_policy` exactly (raw visit-slot masks,
+    /// sentinel-padded final-state slots, uniform-count `log_pb`).
+    pub fn rollout(
         &mut self,
         extra: &ExtraSource<'_, E>,
-    ) -> anyhow::Result<(IterStats, Vec<E::Obj>)> {
+    ) -> anyhow::Result<(TrajBatch, Vec<E::Obj>)> {
         let spec = self.env.spec();
-        let cfg = &self.art.manifest.config;
-        let b = cfg.batch;
-        let t1 = cfg.t_max + 1;
+        let shape = self.backend.shape();
+        let b = shape.batch;
+        let t1 = shape.t_max + 1;
         let eps = self.explore.at(self.step);
         let mut batch = TrajBatch::new(b, t1, spec.obs_dim, spec.n_actions, spec.n_bwd_actions);
         let mut objs: Vec<E::Obj> = Vec::with_capacity(b);
@@ -75,9 +112,8 @@ impl<'a, E: VecEnv> BaselineTrainer<'a, E> {
             let mut bmask = vec![false; spec.n_bwd_actions];
             let mut obs_row = vec![0.0f32; spec.obs_dim];
             loop {
-                // Stage this single sample into row 0 of the policy batch
-                // (the rest of the rows are wasted work, exactly like
-                // running a batch-1 model on padded kernels).
+                // Stage this single sample into the batch at slot t (raw
+                // masks, like RolloutCtx::stage for an active row).
                 self.env.obs_into(&state, 0, &mut obs_row);
                 self.env.fwd_mask_into(&state, 0, &mut mask);
                 self.env.bwd_mask_into(&state, 0, &mut bmask);
@@ -87,10 +123,9 @@ impl<'a, E: VecEnv> BaselineTrainer<'a, E> {
                 for (j, &m) in mask.iter().enumerate() {
                     batch.fwd_masks[base_o * spec.n_actions + j] = if m { 1.0 } else { 0.0 };
                 }
-                let any_b = bmask.iter().any(|&m| m);
                 for (j, &m) in bmask.iter().enumerate() {
                     batch.bwd_masks[base_o * spec.n_bwd_actions + j] =
-                        if m || (!any_b && j == 0) { 1.0 } else { 0.0 };
+                        if m { 1.0 } else { 0.0 };
                 }
                 if let ExtraSource::Energy(f) | ExtraSource::StateLogReward(f) = extra {
                     batch.extra[row * t1 + t] = f(&state, 0) as f32;
@@ -100,8 +135,10 @@ impl<'a, E: VecEnv> BaselineTrainer<'a, E> {
                 }
 
                 // Host-synchronized policy call: re-upload params, stage a
-                // batch with only row 0 populated, fetch everything back.
-                self.state.refresh_param_bufs()?;
+                // batch with only row 0 populated (the rest of the rows are
+                // wasted work, exactly like running a batch-1 model on
+                // padded kernels), fetch everything back.
+                self.backend.refresh_params()?;
                 self.ctx.obs[..spec.obs_dim].copy_from_slice(&obs_row);
                 for j in 0..spec.n_actions {
                     self.ctx.fwd_mask[j] = if mask[j] { 1.0 } else { 0.0 };
@@ -114,9 +151,11 @@ impl<'a, E: VecEnv> BaselineTrainer<'a, E> {
                     self.ctx.fwd_mask[i * spec.n_actions] = 1.0;
                     self.ctx.bwd_mask[i * spec.n_bwd_actions] = 1.0;
                 }
-                let (fwd_logp, _bwd, _f) =
-                    self.state
-                        .policy(self.art, &self.ctx.obs, &self.ctx.fwd_mask, &self.ctx.bwd_mask)?;
+                let (fwd_logp, _bwd, _f) = self.backend.policy_dispatch(
+                    &self.ctx.obs,
+                    &self.ctx.fwd_mask,
+                    &self.ctx.bwd_mask,
+                )?;
 
                 let a = if eps > 0.0 && self.rng.bernoulli(eps) {
                     self.rng.uniform_masked(&mask) as i32
@@ -124,9 +163,9 @@ impl<'a, E: VecEnv> BaselineTrainer<'a, E> {
                     self.rng.categorical_masked(&fwd_logp[..spec.n_actions], &mask) as i32
                 };
                 batch.fwd_actions[row * (t1 - 1) + t] = a;
+                batch.log_pf[row] += fwd_logp[a as usize] as f64;
                 batch.bwd_actions[row * (t1 - 1) + t] =
                     self.env.get_backward_action(&state, 0, a);
-                batch.log_pf[row] += fwd_logp[a as usize] as f64;
                 let out = self.env.step(&mut state, &[a]);
                 t += 1;
                 if out.done[0] {
@@ -134,38 +173,59 @@ impl<'a, E: VecEnv> BaselineTrainer<'a, E> {
                     batch.log_reward[row] = out.log_reward[0] as f32;
                 }
             }
-            // Pad the remaining slots with the terminal observation.
+            // Final-state slots len..t1: terminal obs, single-legal fwd
+            // sentinel, raw terminal bwd mask (sentinel if empty) — exactly
+            // the forward_rollout padding convention. obs_row/mask/bmask
+            // still hold the terminal staging from the break above.
             let len = batch.length[row] as usize;
-            for tt in len + 1..t1 {
-                let src = (row * t1 + len) * spec.obs_dim;
+            let bm_empty = bmask.iter().all(|&m| !m);
+            for tt in len..t1 {
                 let dst = (row * t1 + tt) * spec.obs_dim;
-                batch.obs.copy_within(src..src + spec.obs_dim, dst);
-                batch.fwd_masks[(row * t1 + tt) * spec.n_actions] = 1.0;
-                let bsrc = (row * t1 + len) * spec.n_bwd_actions;
-                let bdst = (row * t1 + tt) * spec.n_bwd_actions;
-                batch.bwd_masks.copy_within(bsrc..bsrc + spec.n_bwd_actions, bdst);
+                batch.obs[dst..dst + spec.obs_dim].copy_from_slice(&obs_row);
+                let fbase = (row * t1 + tt) * spec.n_actions;
+                for j in 0..spec.n_actions {
+                    batch.fwd_masks[fbase + j] = if j == 0 { 1.0 } else { 0.0 };
+                }
+                let bbase = (row * t1 + tt) * spec.n_bwd_actions;
+                for (j, &m) in bmask.iter().enumerate() {
+                    batch.bwd_masks[bbase + j] =
+                        if m || (bm_empty && j == 0) { 1.0 } else { 0.0 };
+                }
                 batch.extra[row * t1 + tt] = batch.extra[row * t1 + len];
             }
-            // Terminal slot needs a legal fwd sentinel too.
-            if batch.fwd_masks[(row * t1 + len) * spec.n_actions..]
-                .iter()
-                .take(spec.n_actions)
-                .all(|&x| x == 0.0)
-            {
-                batch.fwd_masks[(row * t1 + len) * spec.n_actions] = 1.0;
-            }
             objs.push(self.env.extract(&state, 0));
-            let _ = NOOP;
         }
 
+        // Uniform-count log P_B from the staged masks, as in
+        // forward_rollout (eval protocols pass uniform_pb configs).
+        for i in 0..b {
+            let len = batch.length[i] as usize;
+            let mut lp = 0.0f64;
+            for t in 0..len {
+                let bm = &batch.bwd_masks[(i * t1 + t + 1) * spec.n_bwd_actions
+                    ..(i * t1 + t + 2) * spec.n_bwd_actions];
+                let cnt: f32 = bm.iter().sum();
+                lp -= (cnt.max(1.0) as f64).ln();
+            }
+            batch.log_pb[i] = lp;
+        }
+        Ok((batch, objs))
+    }
+
+    /// One baseline iteration: sequential host-synchronized rollout, then
+    /// the same fused train step the fast path runs.
+    pub fn train_iter(
+        &mut self,
+        extra: &ExtraSource<'_, E>,
+    ) -> anyhow::Result<(IterStats, Vec<E::Obj>)> {
+        let (mut batch, objs) = self.rollout(extra)?;
         if self.mdb_deltas {
             batch.extra_to_deltas();
         }
-        self.state.refresh_param_bufs()?; // model the extra sync before update
-        let literals = batch.to_literals()?;
-        let (loss, log_z) = self.state.train_step(self.art, &literals)?;
+        self.backend.refresh_params()?; // model the extra sync before update
+        let (loss, log_z) = self.backend.train_step(&batch)?;
         self.step += 1;
-        let bf = b as f64;
+        let bf = batch.b as f64;
         Ok((
             IterStats {
                 loss,
@@ -175,5 +235,88 @@ impl<'a, E: VecEnv> BaselineTrainer<'a, E> {
             },
             objs,
         ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::rollout::forward_rollout_with_policy;
+    use crate::envs::hypergrid::HypergridEnv;
+    use crate::reward::hypergrid::HypergridReward;
+    use crate::runtime::backend::BackendPolicy;
+    use crate::runtime::{NativeBackend, NativeConfig};
+
+    fn env() -> HypergridEnv<HypergridReward> {
+        HypergridEnv::new(2, 6, HypergridReward::standard(6))
+    }
+
+    /// The baseline differs from the fast path only in dispatch economics:
+    /// at batch width 1 (where per-sample and vectorized rollouts coincide)
+    /// the same seed must assemble a bitwise-identical `TrajBatch` and take
+    /// the identical fused train step.
+    #[test]
+    fn baseline_matches_trainer_at_batch_one() {
+        let e = env();
+        let cfg = NativeConfig::for_env(&e, 1, "tb").with_hidden(16);
+        let mut base = BaselineTrainer::with_backend(
+            &e,
+            NativeBackend::new(cfg.clone(), 5).unwrap(),
+            21,
+            EpsSchedule::none(),
+        )
+        .unwrap();
+        let mut bk = NativeBackend::new(cfg, 5).unwrap();
+        let mut ctx = RolloutCtx::for_shape(&bk.shape());
+        let mut rng = Rng::new(21);
+        let (tb, objs_t) = {
+            let mut policy = BackendPolicy { backend: &bk };
+            forward_rollout_with_policy(&e, &mut policy, &mut ctx, &mut rng, 0.0, &ExtraSource::None)
+                .unwrap()
+        };
+        let (bb, objs_b) = base.rollout(&ExtraSource::None).unwrap();
+
+        assert_eq!(objs_t, objs_b, "terminal objects");
+        assert_eq!(tb.length, bb.length);
+        assert_eq!(tb.fwd_actions, bb.fwd_actions);
+        assert_eq!(tb.bwd_actions, bb.bwd_actions);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let bits64 = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&tb.obs), bits(&bb.obs), "obs");
+        assert_eq!(bits(&tb.fwd_masks), bits(&bb.fwd_masks), "fwd_masks");
+        assert_eq!(bits(&tb.bwd_masks), bits(&bb.bwd_masks), "bwd_masks");
+        assert_eq!(bits(&tb.log_reward), bits(&bb.log_reward), "log_reward");
+        assert_eq!(bits(&tb.extra), bits(&bb.extra), "extra");
+        assert_eq!(bits64(&tb.log_pf), bits64(&bb.log_pf), "log_pf");
+        assert_eq!(bits64(&tb.log_pb), bits64(&bb.log_pb), "log_pb");
+
+        // Identical batch + identical parameters ⇒ identical fused step.
+        let (l_t, z_t) = bk.train_step(&tb).unwrap();
+        let (l_b, z_b) = base.backend.train_step(&bb).unwrap();
+        assert_eq!(l_t.to_bits(), l_b.to_bits(), "loss");
+        assert_eq!(z_t.to_bits(), z_b.to_bits(), "logZ");
+    }
+
+    /// Artifact-free baseline smoke at a real batch width: finite losses
+    /// and a populated batch on the native backend.
+    #[test]
+    fn baseline_trains_on_native_backend() {
+        let e = env();
+        let cfg = NativeConfig::for_env(&e, 4, "tb").with_hidden(16);
+        let mut base = BaselineTrainer::with_backend(
+            &e,
+            NativeBackend::new(cfg, 1).unwrap(),
+            2,
+            EpsSchedule::Constant(0.05),
+        )
+        .unwrap();
+        for _ in 0..3 {
+            let (stats, objs) = base.train_iter(&ExtraSource::None).unwrap();
+            assert!(stats.loss.is_finite());
+            assert_eq!(objs.len(), 4);
+            assert!(stats.mean_length >= 1.0);
+        }
+        assert_eq!(base.backend.steps(), 3);
+        assert_eq!(base.step, 3);
     }
 }

@@ -21,6 +21,16 @@ impl TerminalCounter {
     }
 
     pub fn push(&mut self, idx: usize) {
+        // Validate up front: the raw slice index used to panic with an
+        // opaque `index out of bounds` deep in the count update, which hid
+        // the actual mistake (a flat index from the wrong env/state space).
+        assert!(
+            idx < self.counts.len(),
+            "TerminalCounter::push: flat state index {idx} is out of range \
+             for a terminal state space of {} states — was this index \
+             flattened by a different env?",
+            self.counts.len()
+        );
         if self.window.len() == self.cap {
             let old = self.window.pop_front().unwrap();
             self.counts[old] -= 1;
@@ -109,6 +119,16 @@ mod tests {
         assert_eq!(c.len(), 100);
         let total: u64 = c.counts().iter().sum();
         assert_eq!(total, 100);
+    }
+
+    /// Regression: an out-of-range flat index must fail with a message
+    /// naming the state-space size, not a bare slice-index panic.
+    #[test]
+    #[should_panic(expected = "out of range for a terminal state space of 4 states")]
+    fn counter_push_rejects_out_of_range_index() {
+        let mut c = TerminalCounter::new(4, 8);
+        c.push(3); // in range: fine
+        c.push(4); // one past the end: must name the space
     }
 
     #[test]

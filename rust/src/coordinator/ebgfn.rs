@@ -6,14 +6,24 @@
 //! samples, and (2) a contrastive-divergence update of the Ising coupling
 //! matrix J_φ, with negative samples drawn from the GFlowNet and filtered by
 //! the MH acceptance test of eq. (20) (K = D, so q_K(x'|x) = P_θ(x')).
+//!
+//! The trainer is generic over [`Backend`], like
+//! [`Trainer`](super::trainer::Trainer): the default type parameter keeps
+//! the AOT artifact path ([`EbGfnTrainer::new`]), and
+//! [`EbGfnTrainer::with_backend`] runs the whole alternating loop
+//! artifact-free on the pure-Rust
+//! [`NativeBackend`](crate::runtime::NativeBackend).
 
 use super::rollout::{
-    backward_rollout_score, backward_rollout_to_batch, forward_rollout, ExtraSource, RolloutCtx,
+    backward_rollout_score_with_policy, backward_rollout_to_batch_with_policy,
+    forward_rollout_with_policy, ExtraSource, RolloutCtx,
 };
 use super::trainer::IterStats;
 use crate::envs::ising::IsingEnv;
+use crate::envs::VecEnv;
 use crate::reward::RewardModule;
-use crate::runtime::{Artifact, TrainState};
+use crate::runtime::backend::{Backend, BackendPolicy, XlaBackend};
+use crate::runtime::Artifact;
 use crate::util::linalg::Mat;
 use crate::util::rng::Rng;
 use crate::util::stats::rmse;
@@ -42,11 +52,10 @@ impl RewardModule<Vec<i8>> for SharedIsingReward {
     }
 }
 
-/// The alternating EB-GFN trainer.
-pub struct EbGfnTrainer<'a> {
+/// The alternating EB-GFN trainer, generic over the training [`Backend`].
+pub struct EbGfnTrainer<'a, B: Backend = XlaBackend<'a>> {
     pub env: &'a IsingEnv<SharedIsingReward>,
-    pub art: &'a Artifact,
-    pub state: TrainState,
+    pub backend: B,
     pub ctx: RolloutCtx,
     pub rng: Rng,
     /// Probability of drawing GFN training trajectories from P_F (vs from
@@ -57,9 +66,13 @@ pub struct EbGfnTrainer<'a> {
     pub dataset: Vec<Vec<i8>>,
     pub reward: SharedIsingReward,
     pub step: u64,
+    /// MH acceptance rate of the last iteration's CD negative phase
+    /// (in [0, 1]).
+    pub accept_rate: f64,
 }
 
-impl<'a> EbGfnTrainer<'a> {
+impl<'a> EbGfnTrainer<'a, XlaBackend<'a>> {
+    /// Artifact-backed EB-GFN trainer (the original construction path).
     pub fn new(
         env: &'a IsingEnv<SharedIsingReward>,
         art: &'a Artifact,
@@ -67,43 +80,79 @@ impl<'a> EbGfnTrainer<'a> {
         dataset: Vec<Vec<i8>>,
         seed: u64,
     ) -> anyhow::Result<Self> {
+        Self::with_backend(env, XlaBackend::new(art)?, reward, dataset, seed)
+    }
+}
+
+impl<'a, B: Backend> EbGfnTrainer<'a, B> {
+    /// Bind the Ising environment to any [`Backend`] (xla or native).
+    pub fn with_backend(
+        env: &'a IsingEnv<SharedIsingReward>,
+        backend: B,
+        reward: SharedIsingReward,
+        dataset: Vec<Vec<i8>>,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
         anyhow::ensure!(!dataset.is_empty(), "EB-GFN needs a dataset");
+        anyhow::ensure!(
+            backend.loss_name() == "tb",
+            "EB-GFN trains the GFlowNet with TB (paper §B.5); got loss {:?}",
+            backend.loss_name()
+        );
+        let spec = env.spec();
+        let shape = backend.shape();
+        anyhow::ensure!(
+            spec.obs_dim == shape.obs_dim
+                && spec.n_actions == shape.n_actions
+                && spec.n_bwd_actions == shape.n_bwd_actions
+                && spec.t_max == shape.t_max,
+            "Ising env spec {:?} does not match backend shape {:?}",
+            spec,
+            shape
+        );
+        anyhow::ensure!(
+            dataset.iter().all(|x| x.len() == env.d),
+            "dataset objects must have D = {} spins",
+            env.d
+        );
         Ok(EbGfnTrainer {
             env,
-            art,
-            state: art.init_state()?,
-            ctx: RolloutCtx::for_artifact(art),
+            ctx: RolloutCtx::for_shape(&shape),
+            backend,
             rng: Rng::new(seed),
             alpha: 0.5,
             j_lr: 0.02,
             dataset,
             reward,
             step: 0,
+            accept_rate: 0.0,
         })
     }
 
     /// One EB-GFN iteration: GFN TB step + CD update of J.
     pub fn train_iter(&mut self) -> anyhow::Result<IterStats> {
-        let b = self.art.manifest.config.batch;
+        let b = self.backend.shape().batch;
 
         // ---- (1) GFlowNet update. ------------------------------------
         let use_forward = self.rng.bernoulli(self.alpha);
-        let (batch, objs) = if use_forward {
-            forward_rollout(
-                self.env, self.art, &self.state, &mut self.ctx, &mut self.rng, 0.0,
-                &ExtraSource::None,
-            )?
-        } else {
-            // Backward trajectories from data samples.
-            let data: Vec<Vec<i8>> = (0..b)
-                .map(|_| self.dataset[self.rng.below(self.dataset.len())].clone())
-                .collect();
-            backward_rollout_to_batch(
-                self.env, self.art, &self.state, &mut self.ctx, &mut self.rng, &data,
-            )?
+        let (batch, objs) = {
+            let mut policy = BackendPolicy { backend: &self.backend };
+            if use_forward {
+                forward_rollout_with_policy(
+                    self.env, &mut policy, &mut self.ctx, &mut self.rng, 0.0,
+                    &ExtraSource::None,
+                )?
+            } else {
+                // Backward trajectories from data samples.
+                let data: Vec<Vec<i8>> = (0..b)
+                    .map(|_| self.dataset[self.rng.below(self.dataset.len())].clone())
+                    .collect();
+                backward_rollout_to_batch_with_policy(
+                    self.env, &mut policy, &mut self.ctx, &mut self.rng, &data,
+                )?
+            }
         };
-        let literals = batch.to_literals()?;
-        let (loss, log_z) = self.state.train_step(self.art, &literals)?;
+        let (loss, log_z) = self.backend.train_step(&batch)?;
 
         // ---- (2) Contrastive-divergence update of J. -------------------
         // Positive phase: dataset samples.
@@ -122,22 +171,25 @@ impl<'a> EbGfnTrainer<'a> {
         let (neg_batch, neg_objs) = if use_forward {
             (batch, objs)
         } else {
-            forward_rollout(
-                self.env, self.art, &self.state, &mut self.ctx, &mut self.rng, 0.0,
+            let mut policy = BackendPolicy { backend: &self.backend };
+            forward_rollout_with_policy(
+                self.env, &mut policy, &mut self.ctx, &mut self.rng, 0.0,
                 &ExtraSource::None,
             )?
         };
         let mut neg = Mat::zeros(d, d);
         let mut accepted = 0usize;
         // Score the data side of the MH ratio with backward rollouts.
-        let data_scores = backward_rollout_score(
-            self.env,
-            self.art,
-            &self.state,
-            &mut self.ctx,
-            &mut self.rng,
-            &pos_batch.iter().map(|x| (*x).clone()).collect::<Vec<_>>(),
-        )?;
+        let data_scores = {
+            let mut policy = BackendPolicy { backend: &self.backend };
+            backward_rollout_score_with_policy(
+                self.env,
+                &mut policy,
+                &mut self.ctx,
+                &mut self.rng,
+                &pos_batch.iter().map(|x| (*x).clone()).collect::<Vec<_>>(),
+            )?
+        };
         for i in 0..b {
             let x = pos_batch[i];
             let xp = &neg_objs[i];
@@ -170,11 +222,12 @@ impl<'a> EbGfnTrainer<'a> {
             }
         }
         self.step += 1;
-        let _ = accepted;
+        self.accept_rate = accepted as f64 / b as f64;
         Ok(IterStats {
             loss,
             log_z,
-            mean_log_reward: 0.0,
+            mean_log_reward: neg_batch.log_reward.iter().map(|&x| x as f64).sum::<f64>()
+                / b as f64,
             mean_length: d as f64,
         })
     }
@@ -205,5 +258,106 @@ fn accumulate_outer(m: &mut Mat, x: &[i8]) {
         for c in 0..d {
             m.add_at(r, c, xr * x[c] as f64);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ising_mcmc::generate_ising_dataset;
+    use crate::reward::ising::torus_adjacency;
+    use crate::runtime::{NativeBackend, NativeConfig};
+
+    fn native_trainer<'a>(
+        env: &'a IsingEnv<SharedIsingReward>,
+        reward: SharedIsingReward,
+        dataset: Vec<Vec<i8>>,
+        seed: u64,
+    ) -> EbGfnTrainer<'a, NativeBackend> {
+        let cfg = NativeConfig::for_env(env, 16, "tb").with_hidden(64);
+        let backend = NativeBackend::new(cfg, seed).unwrap();
+        EbGfnTrainer::with_backend(env, backend, reward, dataset, seed).unwrap()
+    }
+
+    /// The revived Table 8 path end-to-end on the native backend: the GFN
+    /// TB loss trends down and J_φ moves toward the data-generating J
+    /// (−log RMSE rises above its J = 0 starting point; assertion margins
+    /// pre-validated by simulating the CD + MH dynamics under both a
+    /// uniform and an exact sampler, which bracket the trained GFN).
+    #[test]
+    fn ebgfn_native_loss_decreases_and_j_recovers() {
+        let (n, sigma) = (3usize, 0.2f64);
+        let mut j_true = torus_adjacency(n);
+        j_true.scale(sigma);
+        let mut data_rng = Rng::new(0);
+        let dataset = generate_ising_dataset(n, sigma, 600, &mut data_rng);
+        let reward = SharedIsingReward::zeros(n * n);
+        let env = IsingEnv::lattice(n, reward.clone());
+        let mut tr = native_trainer(&env, reward, dataset, 0);
+
+        let init_nlr = tr.neg_log_rmse(&j_true);
+        let (mut losses, mut best_nlr) = (Vec::new(), f64::NEG_INFINITY);
+        for _ in 0..150 {
+            let stats = tr.train_iter().unwrap();
+            assert!(stats.loss.is_finite(), "EB-GFN TB loss diverged");
+            losses.push(stats.loss as f64);
+            best_nlr = best_nlr.max(tr.neg_log_rmse(&j_true));
+        }
+        let head = losses[..10].iter().sum::<f64>() / 10.0;
+        let tail = losses[140..].iter().sum::<f64>() / 10.0;
+        assert!(tail < head, "GFN loss should trend down: {head:.3} -> {tail:.3}");
+        assert!(
+            best_nlr > init_nlr + 0.2,
+            "J recovery: best -log RMSE {best_nlr:.3} vs init {init_nlr:.3}"
+        );
+    }
+
+    /// MH acceptance-rate bounds: a probability every iteration, and not
+    /// degenerate-zero across the run (the simulated dynamics accept ≥ 10%
+    /// even with an untrained sampler).
+    #[test]
+    fn ebgfn_mh_acceptance_stays_in_bounds() {
+        let n = 3usize;
+        let mut data_rng = Rng::new(7);
+        let dataset = generate_ising_dataset(n, 0.2, 200, &mut data_rng);
+        let reward = SharedIsingReward::zeros(n * n);
+        let env = IsingEnv::lattice(n, reward.clone());
+        let mut tr = native_trainer(&env, reward, dataset, 7);
+
+        let mut acc_sum = 0.0;
+        for _ in 0..40 {
+            tr.train_iter().unwrap();
+            assert!(
+                (0.0..=1.0).contains(&tr.accept_rate),
+                "accept_rate {} outside [0, 1]",
+                tr.accept_rate
+            );
+            acc_sum += tr.accept_rate;
+        }
+        assert!(acc_sum / 40.0 > 0.02, "MH chain never accepts ({acc_sum})");
+    }
+
+    /// EB-GFN is deterministic in its seed (dataset, rollouts, MH draws and
+    /// the J updates all flow from explicit RNG streams).
+    #[test]
+    fn ebgfn_native_is_deterministic_in_seed() {
+        let n = 3usize;
+        let run = |seed: u64| -> (Vec<u32>, Vec<u64>) {
+            let mut data_rng = Rng::new(seed);
+            let dataset = generate_ising_dataset(n, 0.2, 100, &mut data_rng);
+            let reward = SharedIsingReward::zeros(n * n);
+            let env = IsingEnv::lattice(n, reward.clone());
+            let mut tr = native_trainer(&env, reward.clone(), dataset, seed);
+            let mut losses = Vec::new();
+            for _ in 0..5 {
+                losses.push(tr.train_iter().unwrap().loss.to_bits());
+            }
+            let j = reward.j.read().unwrap();
+            let j_bits: Vec<u64> =
+                (0..n * n).flat_map(|r| j.row(r).iter().map(|v| v.to_bits()).collect::<Vec<_>>()).collect();
+            (losses, j_bits)
+        };
+        assert_eq!(run(3), run(3), "same seed must reproduce bitwise");
+        assert_ne!(run(3), run(4), "different seeds should diverge");
     }
 }

@@ -22,4 +22,4 @@ pub mod baseline;
 pub mod ebgfn;
 
 pub use rollout::{RolloutCtx, TrajBatch};
-pub use trainer::{IterStats, Trainer};
+pub use trainer::{IterStats, ReplayConfig, Trainer};

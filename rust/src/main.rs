@@ -2,10 +2,13 @@
 //! the full workflow).
 //!
 //! Subcommands:
-//!   train        --env hypergrid | --config <name>
-//!                --loss <tb|db|subtb|fldb|mdb>
+//!   train        --env hypergrid|bitseq|ising | --config <name>
+//!                --loss <tb|db|subtb>  (fldb/mdb need per-state extras;
+//!                                       their workloads live in examples/)
 //!                --backend <native|xla>  [--iters N] [--hidden H]
 //!                [--layers L] [--workers W]
+//!                [--replay-cap N --replay-frac P]   off-policy replay
+//!                [--ebgfn [--sigma S] [--samples N]]   EB-GFN (ising only)
 //!   list-configs
 //!   info         --config <name> --loss <l>   (print the artifact manifest)
 //!
@@ -14,15 +17,27 @@
 //! `make artifacts` + the real xla-rs crate).
 
 use gfnx::coordinator::config::{artifacts_dir, run_config};
+use gfnx::coordinator::ebgfn::{EbGfnTrainer, SharedIsingReward};
 use gfnx::coordinator::rollout::ExtraSource;
-use gfnx::coordinator::trainer::Trainer;
+use gfnx::coordinator::trainer::{ReplayConfig, Trainer};
+use gfnx::data::ising_mcmc::generate_ising_dataset;
+use gfnx::envs::bitseq::{bitseq_env, BitSeqConfig};
 use gfnx::envs::hypergrid::HypergridEnv;
+use gfnx::envs::ising::IsingEnv;
 use gfnx::envs::VecEnv;
 use gfnx::reward::hypergrid::HypergridReward;
+use gfnx::reward::ising::{torus_adjacency, IsingReward};
 use gfnx::runtime::{Artifact, Backend, NativeBackend, NativeConfig};
-use gfnx::util::cli::Cli;
+use gfnx::util::cli::{Args, Cli};
+use gfnx::util::linalg::Mat;
 use gfnx::util::logging::MetricsLog;
+use gfnx::util::rng::Rng;
 use gfnx::util::threadpool::default_workers;
+
+/// The env families (and their sized configs) the CLI trainer covers.
+const CLI_FAMILIES: &str = "hypergrid | bitseq | ising (sized configs: \
+hypergrid_small, hypergrid_2d_20, hypergrid_4d_20, hypergrid_8d_10, \
+bitseq_small, bitseq_120_8, ising_small, ising_n9, ising_n10)";
 
 fn main() {
     let cli = Cli::new(
@@ -31,8 +46,8 @@ fn main() {
     )
     .positional("command", "train | list-configs | info")
     .flag("config", "hypergrid_small", "experiment config name")
-    .flag("env", "", "environment family shorthand (hypergrid → hypergrid_small)")
-    .flag("loss", "tb", "objective: tb | db | subtb | fldb | mdb")
+    .flag("env", "", "environment family shorthand (hypergrid | bitseq | ising)")
+    .flag("loss", "tb", "objective: tb | db | subtb (fldb/mdb: see examples/)")
     .flag("backend", "native", "training backend: native | xla")
     .flag("iters", "0", "iteration count (0 = preset default)")
     .flag("seed", "0", "rng seed")
@@ -40,6 +55,11 @@ fn main() {
     .flag("hidden", "256", "MLP trunk width (native backend)")
     .flag("layers", "2", "MLP trunk depth (native backend)")
     .flag("workers", "0", "dispatch worker threads, 0 = all cores (native backend)")
+    .flag("replay-cap", "0", "off-policy replay buffer capacity (0 = on-policy only)")
+    .flag("replay-frac", "0.5", "probability an iteration trains on replay batches")
+    .switch("ebgfn", "EB-GFN joint EBM+GFN training (ising only; paper Table 8)")
+    .flag("sigma", "0.2", "true Ising coupling strength (ebgfn / ising reward)")
+    .flag("samples", "2000", "EB-GFN dataset size (paper Table 9)")
     .flag("log", "", "JSONL metrics path (empty = stdout only)")
     .switch("quiet", "suppress progress lines");
     let args = cli.parse();
@@ -101,59 +121,106 @@ fn info(config: &str, loss: &str) -> anyhow::Result<()> {
 }
 
 /// Resolve `--env`/`--config` into a concrete config name.
-fn resolve_config(args: &gfnx::util::cli::Args) -> anyhow::Result<String> {
+fn resolve_config(args: &Args) -> anyhow::Result<String> {
     let env = args.get("env");
     if env.is_empty() {
         return Ok(args.get("config").to_string());
     }
     Ok(match env {
         "hypergrid" => "hypergrid_small".to_string(),
-        other if other.starts_with("hypergrid") => other.to_string(),
+        "bitseq" => "bitseq_small".to_string(),
+        "ising" => "ising_small".to_string(),
+        other
+            if other.starts_with("hypergrid")
+                || other.starts_with("bitseq")
+                || other.starts_with("ising") =>
+        {
+            other.to_string()
+        }
         other => anyhow::bail!(
-            "the CLI trainer covers the hypergrid family (got --env {other:?}); \
+            "unsupported --env {other:?}: the CLI trainer covers {CLI_FAMILIES}; \
              other environments have dedicated example binaries (see examples/)"
         ),
     })
 }
 
-/// Train the hypergrid family from the CLI (other families are exposed via
-/// the examples and benches, which own their dataset generation).
-fn train(args: &gfnx::util::cli::Args) -> anyhow::Result<()> {
+/// The N×N lattice side behind an ising config name.
+fn ising_side(config: &str) -> anyhow::Result<usize> {
+    Ok(match config {
+        "ising_small" => 3,
+        "ising_n9" => 9,
+        "ising_n10" => 10,
+        other => anyhow::bail!("unknown ising config {other:?} (ising_small | ising_n9 | ising_n10)"),
+    })
+}
+
+/// Train any CLI-covered family; dispatches on the resolved config name.
+fn train(args: &Args) -> anyhow::Result<()> {
     let config = resolve_config(args)?;
     let loss = args.get("loss");
+    if args.get_bool("ebgfn") && !config.starts_with("ising") {
+        anyhow::bail!("--ebgfn is the Ising Table 8 workload; pass --env ising");
+    }
+    if config.starts_with("hypergrid") {
+        let (d, h) = match config.as_str() {
+            "hypergrid_small" => (2, 8),
+            "hypergrid_2d_20" => (2, 20),
+            "hypergrid_4d_20" => (4, 20),
+            "hypergrid_8d_10" => (8, 10),
+            other => anyhow::bail!("unknown hypergrid config {other:?}"),
+        };
+        let env = HypergridEnv::new(d, h, HypergridReward::standard(h));
+        train_env(args, &config, loss, &env)
+    } else if config.starts_with("bitseq") {
+        let cfg = match config.as_str() {
+            "bitseq_small" => BitSeqConfig::small(),
+            "bitseq_120_8" => BitSeqConfig::paper(),
+            other => anyhow::bail!("unknown bitseq config {other:?} (bitseq_small | bitseq_120_8)"),
+        };
+        let (env, _modes) = bitseq_env(cfg);
+        train_env(args, &config, loss, &env)
+    } else if config.starts_with("ising") {
+        let n = ising_side(&config)?;
+        if args.get_bool("ebgfn") {
+            return train_ebgfn(args, &config, n);
+        }
+        let env = IsingEnv::lattice(n, IsingReward::torus(n, args.get_f64("sigma")));
+        train_env(args, &config, loss, &env)
+    } else {
+        anyhow::bail!(
+            "config {config:?} is outside the CLI families ({CLI_FAMILIES}); \
+             other environments have dedicated example binaries (see examples/)"
+        )
+    }
+}
+
+/// Backend selection + optional replay wiring for one environment.
+fn train_env<E: VecEnv>(args: &Args, config: &str, loss: &str, env: &E) -> anyhow::Result<()> {
+    // The CLI rollout supplies no per-state extras; FLDB/MDB would silently
+    // train on zero-filled `extra` channels. Their workloads live in the
+    // example binaries that own the extra sources (bayes_structure, the
+    // phylo benches).
     anyhow::ensure!(
-        config.starts_with("hypergrid"),
-        "the CLI trainer covers the hypergrid family; other environments \
-         have dedicated example binaries (see examples/)"
+        !matches!(loss, "mdb" | "fldb"),
+        "--loss {loss} needs per-state extras the CLI rollout does not \
+         supply; use the dedicated example binaries (see examples/)"
     );
-    let (d, h) = match config.as_str() {
-        "hypergrid_small" => (2, 8),
-        "hypergrid_2d_20" => (2, 20),
-        "hypergrid_4d_20" => (4, 20),
-        "hypergrid_8d_10" => (8, 10),
-        other => anyhow::bail!("unknown hypergrid config {other:?}"),
-    };
-    let env = HypergridEnv::new(d, h, HypergridReward::standard(h));
-    let rc = run_config(&config, loss);
+    let rc = run_config(config, loss);
     let iters = match args.get_u64("iters") {
         0 => rc.iters,
         n => n,
     };
     let seed = args.get_u64("seed");
+    let replay = replay_config(args)?;
 
     match args.get("backend") {
         "native" => {
-            let workers = match args.get_usize("workers") {
-                0 => default_workers(),
-                w => w,
-            };
-            let cfg = NativeConfig::for_env(&env, args.get_usize("batch"), loss)
-                .with_hidden(args.get_usize("hidden"))
-                .with_layers(args.get_usize("layers"))
-                .with_workers(workers);
-            let backend = NativeBackend::new(cfg, seed)?;
-            let trainer = Trainer::with_backend(&env, backend, seed, rc.explore)?;
-            run_train(trainer, &config, loss, iters, args)
+            let backend = NativeBackend::new(native_config(args, env, loss), seed)?;
+            let mut trainer = Trainer::with_backend(env, backend, seed, rc.explore)?;
+            if let Some(cfg) = replay {
+                trainer = trainer.with_replay(cfg)?;
+            }
+            run_train(trainer, config, loss, iters, args)
         }
         "xla" => {
             // The artifact manifest dictates batch/architecture; flag the
@@ -169,11 +236,151 @@ fn train(args: &gfnx::util::cli::Args) -> anyhow::Result<()> {
                 );
             }
             let art = Artifact::load(&artifacts_dir(), &format!("{config}.{loss}"))?;
-            let trainer = Trainer::new(&env, &art, seed, rc.explore)?;
-            run_train(trainer, &config, loss, iters, args)
+            let mut trainer = Trainer::new(env, &art, seed, rc.explore)?;
+            if let Some(cfg) = replay {
+                trainer = trainer.with_replay(cfg)?;
+            }
+            run_train(trainer, config, loss, iters, args)
         }
         other => anyhow::bail!("unknown backend {other:?} (native | xla)"),
     }
+}
+
+fn native_config<E: VecEnv>(args: &Args, env: &E, loss: &str) -> NativeConfig {
+    let workers = match args.get_usize("workers") {
+        0 => default_workers(),
+        w => w,
+    };
+    NativeConfig::for_env(env, args.get_usize("batch"), loss)
+        .with_hidden(args.get_usize("hidden"))
+        .with_layers(args.get_usize("layers"))
+        .with_workers(workers)
+}
+
+fn replay_config(args: &Args) -> anyhow::Result<Option<ReplayConfig>> {
+    let cap = args.get_usize("replay-cap");
+    if cap == 0 {
+        return Ok(None);
+    }
+    let frac = args.get_f64("replay-frac");
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&frac),
+        "--replay-frac {frac} outside [0, 1]"
+    );
+    Ok(Some(ReplayConfig::new(cap, frac)))
+}
+
+/// The EB-GFN workload (paper §B.5, Table 8): joint CD learning of the
+/// coupling matrix J_φ and TB training of the GFlowNet sampler, from an
+/// MCMC dataset of the true model. Artifact-free on the native backend.
+fn train_ebgfn(args: &Args, config: &str, n: usize) -> anyhow::Result<()> {
+    let loss = args.get("loss");
+    anyhow::ensure!(loss == "tb", "EB-GFN trains the GFlowNet with TB (got --loss {loss})");
+    let sigma = args.get_f64("sigma");
+    let seed = args.get_u64("seed");
+    let iters = match args.get_u64("iters") {
+        0 => run_config(config, "tb").iters,
+        k => k,
+    };
+    let mut j_true = torus_adjacency(n);
+    j_true.scale(sigma);
+    let mut data_rng = Rng::new(seed);
+    let dataset = generate_ising_dataset(n, sigma, args.get_usize("samples"), &mut data_rng);
+    println!(
+        "EB-GFN: {} MCMC samples from the {n}x{n} torus, sigma = {sigma}",
+        dataset.len()
+    );
+    let reward = SharedIsingReward::zeros(n * n);
+    let env = IsingEnv::lattice(n, reward.clone());
+
+    match args.get("backend") {
+        "native" => {
+            let backend = NativeBackend::new(native_config(args, &env, "tb"), seed)?;
+            let trainer = EbGfnTrainer::with_backend(&env, backend, reward, dataset, seed)?;
+            run_ebgfn(trainer, config, iters, &j_true, args)
+        }
+        "xla" => {
+            let art = Artifact::load(&artifacts_dir(), &format!("{config}.tb"))?;
+            let trainer = EbGfnTrainer::new(&env, &art, reward, dataset, seed)?;
+            run_ebgfn(trainer, config, iters, &j_true, args)
+        }
+        other => anyhow::bail!("unknown backend {other:?} (native | xla)"),
+    }
+}
+
+fn run_ebgfn<B: Backend>(
+    mut trainer: EbGfnTrainer<'_, B>,
+    config: &str,
+    iters: u64,
+    j_true: &Mat,
+    args: &Args,
+) -> anyhow::Result<()> {
+    let quiet = args.get_bool("quiet");
+    let log_path = args.get("log");
+    let name = format!("{config}.ebgfn");
+    let mut log = if log_path.is_empty() {
+        MetricsLog::stdout_only(&name)
+    } else {
+        MetricsLog::to_file(&name, std::path::Path::new(log_path))?
+    };
+    println!(
+        "training {name} on the {} backend ({} iters, batch {})",
+        trainer.backend.backend_name(),
+        iters,
+        trainer.backend.shape().batch
+    );
+    let init_nlr = trainer.neg_log_rmse(j_true);
+    // Disjoint head/tail windows (≤ 10 iters each) so the loss-decrease
+    // check below compares distinct phases even on short smoke runs.
+    let w = (iters / 2).min(10);
+    let (mut first_loss, mut last_loss) = (Vec::new(), Vec::new());
+    let mut best_nlr = f64::NEG_INFINITY;
+    for i in 0..iters {
+        let stats = trainer.train_iter()?;
+        anyhow::ensure!(stats.loss.is_finite(), "GFN loss diverged at iter {i}");
+        let nlr = trainer.neg_log_rmse(j_true);
+        best_nlr = best_nlr.max(nlr);
+        if i < w {
+            first_loss.push(stats.loss as f64);
+        }
+        if i + w >= iters {
+            last_loss.push(stats.loss as f64);
+        }
+        if i % (iters / 8).max(1) == 0 {
+            log.log(
+                i,
+                &[
+                    ("loss", stats.loss as f64),
+                    ("neg_log_rmse", nlr),
+                    ("mh_accept", trainer.accept_rate),
+                ],
+            );
+            if !quiet {
+                log.progress(i, iters, &[("loss", stats.loss as f64), ("-logRMSE(J)", nlr)]);
+            }
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!(
+        "trained {name} for {iters} iters on {}: GFN loss {:.3} (first {w}) -> {:.3} (last {w}); \
+         -log RMSE(J) {init_nlr:.3} (init) -> {best_nlr:.3} (best)",
+        trainer.backend.backend_name(),
+        mean(&first_loss),
+        mean(&last_loss)
+    );
+    if w >= 1 && iters >= 2 * w {
+        anyhow::ensure!(
+            mean(&last_loss) < mean(&first_loss),
+            "GFN loss did not decrease"
+        );
+    }
+    if iters > 0 {
+        anyhow::ensure!(
+            best_nlr > init_nlr,
+            "J error did not decrease below its J = 0 starting point"
+        );
+    }
+    Ok(())
 }
 
 fn run_train<E: VecEnv, B: Backend>(
@@ -181,7 +388,7 @@ fn run_train<E: VecEnv, B: Backend>(
     config: &str,
     loss: &str,
     iters: u64,
-    args: &gfnx::util::cli::Args,
+    args: &Args,
 ) -> anyhow::Result<()> {
     let quiet = args.get_bool("quiet");
     let log_path = args.get("log");
@@ -225,5 +432,8 @@ fn run_train<E: VecEnv, B: Backend>(
         mean(&first_window),
         mean(&last_window)
     );
+    if trainer.replay_len() > 0 {
+        println!("replay buffer holds {} high-reward objects", trainer.replay_len());
+    }
     Ok(())
 }

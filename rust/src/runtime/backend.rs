@@ -64,6 +64,14 @@ pub trait Backend {
     /// `(loss, logZ)`.
     fn train_step(&mut self, batch: &TrajBatch) -> anyhow::Result<(f32, f32)>;
 
+    /// Re-stage every parameter into the dispatch buffers, modelling the
+    /// per-call parameter upload of a host-synchronized training loop (the
+    /// [`BaselineTrainer`](crate::coordinator::baseline::BaselineTrainer)
+    /// calls this before every policy dispatch). Parameter *values* are
+    /// unchanged; implementations must pay the O(|θ|) copy that a loop
+    /// without device-resident state pays on every call.
+    fn refresh_params(&mut self) -> anyhow::Result<()>;
+
     /// Number of train steps taken.
     fn steps(&self) -> u64;
 
@@ -135,6 +143,10 @@ impl Backend for XlaBackend<'_> {
     fn train_step(&mut self, batch: &TrajBatch) -> anyhow::Result<(f32, f32)> {
         let literals = batch.to_literals()?;
         self.state.train_step(self.art, &literals)
+    }
+
+    fn refresh_params(&mut self) -> anyhow::Result<()> {
+        self.state.refresh_param_bufs()
     }
 
     fn steps(&self) -> u64 {

@@ -19,13 +19,19 @@ pub(crate) struct AdamHyper {
 }
 
 /// One in-place Adam step. `m`/`v` are the per-leaf first/second moments,
-/// `t` the step counter (stored as f32, like the artifact's `t` leaf);
-/// `grads` is index-aligned with `leaves`.
+/// `t` the step counter; `grads` is index-aligned with `leaves`.
+///
+/// `t` is tracked as `u64`: an f32 counter stops incrementing at 2²⁴
+/// (f32 + 1.0 == f32 there) and its bias-correction terms drift long before
+/// that. The artifact blob still stores `t` as an f32 leaf — the conversion
+/// happens only at blob load/save
+/// ([`NativeBackend::from_blob`](super::NativeBackend::from_blob)), never
+/// inside the step.
 pub(crate) fn adam_step(
     leaves: &mut [Leaf],
     m: &mut [Vec<f32>],
     v: &mut [Vec<f32>],
-    t: &mut f32,
+    t: &mut u64,
     grads: &[Vec<f32>],
     logz_idx: usize,
     h: AdamHyper,
@@ -33,7 +39,7 @@ pub(crate) fn adam_step(
     debug_assert_eq!(leaves.len(), grads.len());
     debug_assert_eq!(leaves.len(), m.len());
     debug_assert_eq!(leaves.len(), v.len());
-    *t += 1.0;
+    *t += 1;
     let tc = *t as f64;
     let c1 = 1.0 - B1.powf(tc);
     let c2 = 1.0 - B2.powf(tc);
@@ -81,17 +87,36 @@ mod tests {
         let mut leaves = vec![leaf("w0", &[2, 2], 1.0), leaf("logZ", &[1], 0.0)];
         let mut m = vec![vec![0.0; 4], vec![0.0; 1]];
         let mut v = vec![vec![0.0; 4], vec![0.0; 1]];
-        let mut t = 0.0f32;
+        let mut t = 0u64;
         let grads = vec![vec![0.5; 4], vec![-2.0; 1]];
         adam_step(&mut leaves, &mut m, &mut v, &mut t, &grads, 1,
                   AdamHyper { lr: 1e-2, z_lr: 0.1, weight_decay: 0.0 });
-        assert_eq!(t, 1.0);
+        assert_eq!(t, 1);
         for &p in leaves[0].tensor.data() {
             assert!((p - (1.0 - 1e-2)).abs() < 1e-5, "w step ≈ lr, got {p}");
         }
         // logZ uses z_lr and moves against the gradient sign.
         let z = leaves[1].tensor.data()[0];
         assert!((z - 0.1).abs() < 1e-5, "logZ step ≈ z_lr, got {z}");
+    }
+
+    #[test]
+    fn step_counter_advances_past_f32_precision() {
+        // Regression: with an f32 counter, t + 1.0 == t at 2²⁴ — the step
+        // count silently freezes and bias correction with it. The u64
+        // counter keeps counting.
+        let mut leaves = vec![leaf("w0", &[1], 0.0)];
+        let (mut m, mut v) = (vec![vec![0.0; 1]], vec![vec![0.0; 1]]);
+        let mut t = (1u64 << 24) - 1;
+        assert_eq!((t as f32 + 1.0) as u64, t + 1); // 2²⁴ itself is exact…
+        let grads = vec![vec![1.0; 1]];
+        let h = AdamHyper { lr: 1e-3, z_lr: 1e-3, weight_decay: 0.0 };
+        adam_step(&mut leaves, &mut m, &mut v, &mut t, &grads, usize::MAX, h);
+        assert_eq!(t, 1 << 24);
+        let frozen = (t as f32 + 1.0) as u64;
+        assert_eq!(frozen, t, "…but f32 increments stop here");
+        adam_step(&mut leaves, &mut m, &mut v, &mut t, &grads, usize::MAX, h);
+        assert_eq!(t, (1 << 24) + 1, "u64 counter must not freeze");
     }
 
     #[test]
@@ -103,7 +128,7 @@ mod tests {
         ];
         let mut m = vec![vec![0.0; 4], vec![0.0; 4], vec![0.0; 1]];
         let mut v = vec![vec![0.0; 4], vec![0.0; 4], vec![0.0; 1]];
-        let mut t = 0.0f32;
+        let mut t = 0u64;
         let grads = vec![vec![0.0; 4], vec![0.0; 4], vec![0.0; 1]];
         adam_step(&mut leaves, &mut m, &mut v, &mut t, &grads, 2,
                   AdamHyper { lr: 0.1, z_lr: 0.1, weight_decay: 0.5 });

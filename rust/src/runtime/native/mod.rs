@@ -139,9 +139,14 @@ pub struct NativeBackend {
     m: Vec<Vec<f32>>,
     /// Adam second moments.
     v: Vec<Vec<f32>>,
-    /// Step counter (f32, like the artifact's `t` leaf).
-    t: f32,
+    /// Step counter. Tracked as `u64` internally (an f32 counter freezes at
+    /// 2²⁴ and drifts bias correction long before); the artifact's f32 `t`
+    /// leaf is converted only at blob load/save.
+    t: u64,
     steps: u64,
+    /// Scratch for [`Backend::refresh_params`] (the host-synchronized
+    /// baseline's per-call parameter upload model).
+    upload_scratch: Vec<f32>,
 }
 
 impl NativeBackend {
@@ -154,7 +159,7 @@ impl NativeBackend {
     fn from_net(net: NativeNet) -> NativeBackend {
         let m = net.leaves().iter().map(|l| vec![0f32; l.tensor.len()]).collect();
         let v = net.leaves().iter().map(|l| vec![0f32; l.tensor.len()]).collect();
-        NativeBackend { net, m, v, t: 0.0, steps: 0 }
+        NativeBackend { net, m, v, t: 0, steps: 0, upload_scratch: Vec::new() }
     }
 
     /// Initialize from an artifact's manifest + init blob, so native and
@@ -281,7 +286,9 @@ impl NativeBackend {
             }
         }
         if let Some(e) = manifest.blob_layout.iter().find(|e| e.group == "t") {
-            backend.t = read(e.offset, &e.shape, &e.name)?[0];
+            // The blob's `t` leaf is f32 by format; the round-trip to the
+            // internal u64 counter happens only here (and at save).
+            backend.t = read(e.offset, &e.shape, &e.name)?[0].max(0.0) as u64;
         }
         Ok(backend)
     }
@@ -314,6 +321,12 @@ impl NativeBackend {
     /// for the serve subsystem's worker threads.
     pub fn to_policy(&self) -> NativePolicy {
         NativePolicy { net: self.net.clone() }
+    }
+
+    /// The Adam step count (u64 internally; `as f32` only when written back
+    /// to an artifact blob's `t` leaf).
+    pub fn adam_t(&self) -> u64 {
+        self.t
     }
 
     /// Release-mode shape guard shared by every batch entry point (the
@@ -400,6 +413,20 @@ impl Backend for NativeBackend {
 
     fn steps(&self) -> u64 {
         self.steps
+    }
+
+    fn refresh_params(&mut self) -> anyhow::Result<()> {
+        // Pay the full O(|θ|) copy a non-resident loop pays per call: every
+        // leaf is materialized into the upload scratch, and the result is
+        // observed through `black_box` so the copy cannot be elided.
+        self.upload_scratch.clear();
+        let total: usize = self.net.leaves().iter().map(|l| l.tensor.len()).sum();
+        self.upload_scratch.reserve(total);
+        for leaf in self.net.leaves() {
+            self.upload_scratch.extend_from_slice(leaf.tensor.data());
+        }
+        std::hint::black_box(&self.upload_scratch);
+        Ok(())
     }
 
     fn param_by_name(&self, name: &str) -> Option<Vec<f32>> {
@@ -707,7 +734,7 @@ mod tests {
         let n_params: usize = shapes.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
         let expect_logz = (n_params - 1) as f32 * 0.25;
         assert_eq!(backend.param_by_name("logZ").unwrap()[0], expect_logz);
-        assert_eq!(backend.t, 7.0);
+        assert_eq!(backend.adam_t(), 7);
         // Adam moments were loaded (m group continues the 0.25 sequence).
         assert_eq!(backend.m[0][0], n_params as f32 * 0.25);
         // A dispatch over staged inputs stays finite and masked.
