@@ -3,6 +3,9 @@
 //! report the Jensen–Shannon divergence to the **exact** posterior over all
 //! 29 281 DAGs, plus edge/path/Markov-blanket marginal correlations.
 //!
+//! Artifact-free by default (`--backend native`); pass `--backend xla` to
+//! replay the AOT graphs (needs `make artifacts` + real xla-rs).
+//!
 //! Run: `cargo run --release --example bayes_structure -- [--iters N]`
 
 use gfnx::coordinator::config::{artifacts_dir, run_config};
@@ -18,8 +21,8 @@ use gfnx::metrics::marginals::{
     edge_marginals, marginal_correlation, markov_blanket_marginals, path_marginals,
 };
 use gfnx::reward::bge::{bge_table, BgeParams};
-use gfnx::reward::lingauss::lingauss_table;
-use gfnx::runtime::Artifact;
+use gfnx::reward::lingauss::{lingauss_table, DagScoreTable};
+use gfnx::runtime::{Artifact, Backend, NativeBackend, NativeConfig};
 use gfnx::util::cli::Cli;
 use gfnx::util::rng::Rng;
 
@@ -28,6 +31,8 @@ fn main() -> anyhow::Result<()> {
         .flag("iters", "1200", "training iterations")
         .flag("seed", "0", "dataset seed")
         .flag("score", "bge", "score family: bge | lingauss")
+        .flag("backend", "native", "training backend: native | xla")
+        .flag("hidden", "256", "MLP trunk width (native backend)")
         .parse();
     let d = 5usize;
 
@@ -53,26 +58,49 @@ fn main() -> anyhow::Result<()> {
     }
 
     let env = BayesNetEnv::new(d, table.clone());
-    let art = Artifact::load(&artifacts_dir(), "bayesnet_d5.mdb")?;
+    let seed = args.get_u64("seed");
     let rc = run_config("bayesnet_d5", "mdb");
-    let mut trainer = Trainer::new(&env, &art, args.get_u64("seed"), rc.explore)?;
+    match args.get("backend") {
+        "native" => {
+            let cfg = NativeConfig::for_env(&env, 16, "mdb")
+                .with_hidden(args.get_usize("hidden"));
+            let backend = NativeBackend::new(cfg, seed)?;
+            let trainer = Trainer::with_backend(&env, backend, seed, rc.explore)?;
+            run(trainer, &table, &dags, &posterior, d, args.get_u64("iters"), rc.fifo_window)
+        }
+        "xla" => {
+            let art = Artifact::load(&artifacts_dir(), "bayesnet_d5.mdb")?;
+            let trainer = Trainer::new(&env, &art, seed, rc.explore)?;
+            run(trainer, &table, &dags, &posterior, d, args.get_u64("iters"), rc.fifo_window)
+        }
+        other => anyhow::bail!("unknown backend {other:?} (native | xla)"),
+    }
+}
 
-    let table_ref = &table;
+#[allow(clippy::too_many_arguments)]
+fn run<B: Backend>(
+    mut trainer: Trainer<'_, BayesNetEnv<DagScoreTable>, B>,
+    table: &DagScoreTable,
+    dags: &[u64],
+    posterior: &[f64],
+    d: usize,
+    iters: u64,
+    fifo_window: usize,
+) -> anyhow::Result<()> {
     let extra = ExtraSource::StateLogReward(&move |s: &BayesNetState, i: usize| {
-        table_ref.log_score(s.adj[i])
+        table.log_score(s.adj[i])
     });
 
-    let mut counter = TerminalCounter::new(dags.len(), rc.fifo_window);
-    let iters = args.get_u64("iters");
+    let mut counter = TerminalCounter::new(dags.len(), fifo_window);
     for i in 0..=iters {
         let (stats, objs) = trainer.train_iter(&extra)?;
         for o in &objs {
-            if let Some(idx) = dag_index(&dags, *o) {
+            if let Some(idx) = dag_index(dags, *o) {
                 counter.push(idx);
             }
         }
         if i % (iters / 6).max(1) == 0 {
-            let jsd = jsd_from_counts(&posterior, counter.counts());
+            let jsd = jsd_from_counts(posterior, counter.counts());
             println!("iter {i:5}  mdb-loss {:9.4}  JSD {jsd:.4}", stats.loss);
         }
     }
@@ -85,8 +113,8 @@ fn main() -> anyhow::Result<()> {
         ("path", path_marginals),
         ("markov-blanket", markov_blanket_marginals),
     ] {
-        let m_exact = f(&dags, &posterior, d);
-        let m_emp = f(&dags, &emp, d);
+        let m_exact = f(dags, posterior, d);
+        let m_emp = f(dags, &emp, d);
         println!(
             "{name:15} marginal correlation: {:.4}",
             marginal_correlation(&m_exact, &m_emp, d)

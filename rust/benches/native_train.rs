@@ -22,6 +22,7 @@
 use gfnx::bench::harness::{env_usize, itps_json, measure_it_per_sec, BenchJson, BenchTable};
 use gfnx::coordinator::baseline::BaselineTrainer;
 use gfnx::coordinator::explore::EpsSchedule;
+use gfnx::coordinator::registry::{self, EnvDriver, EnvFamily, EnvParams};
 use gfnx::coordinator::rollout::ExtraSource;
 use gfnx::coordinator::trainer::Trainer;
 use gfnx::envs::bitseq::{bitseq_env, BitSeqConfig};
@@ -69,6 +70,47 @@ fn bench_env<E: VecEnv>(
     };
     println!("  {label:<24} {mode:<8} batch {batch:>3}: {r}");
     r
+}
+
+/// Registry-driven bench row: build `config` through the env registry and
+/// time `loss` training iterations (extras — phylo's energies, bayesnet's
+/// log-scores — are supplied by the registry, so fldb/mdb run for real).
+struct RegistryBench {
+    loss: &'static str,
+    batch: usize,
+    hidden: usize,
+    workers: usize,
+    iters: usize,
+    repeats: usize,
+}
+
+impl EnvDriver for RegistryBench {
+    type Out = ItPerSec;
+
+    fn drive<E>(
+        self,
+        env: &E,
+        extra: &ExtraSource<'_, E>,
+        _fam: &'static EnvFamily,
+        config: &str,
+    ) -> anyhow::Result<ItPerSec>
+    where
+        E: VecEnv,
+        E::State: Clone,
+        E::Obj: PartialEq + std::fmt::Debug,
+    {
+        let cfg = NativeConfig::for_env(env, self.batch, self.loss)
+            .with_hidden(self.hidden)
+            .with_workers(self.workers);
+        let backend = NativeBackend::new(cfg, 0)?;
+        let mut trainer = Trainer::with_backend(env, backend, 0, EpsSchedule::none())?;
+        let r = measure_it_per_sec(1, self.repeats, self.iters, || {
+            let (stats, _objs) = trainer.train_iter(extra).unwrap();
+            assert!(stats.loss.is_finite(), "{config}: loss diverged");
+        });
+        println!("  {config:<24} {:<8} batch {:>3}: {r}", self.loss, self.batch);
+        Ok(r)
+    }
 }
 
 fn main() {
@@ -121,6 +163,41 @@ fn main() {
     }
     table.print();
 
+    // Registry rows: one per newly CLI-trainable family (tb everywhere,
+    // plus the extras-dependent objectives on their home envs).
+    println!("registry envs (native backend, batch 16):");
+    let reg_rows: Vec<(&str, &str, ItPerSec)> = [
+        ("seq_small", "tb"),
+        ("tfbind8", "tb"),
+        ("qm9", "tb"),
+        ("amp_small", "tb"),
+        ("phylo_small", "fldb"),
+        ("bayesnet_d5", "mdb"),
+    ]
+    .into_iter()
+    .map(|(config, loss)| {
+        let bench = RegistryBench {
+            loss,
+            batch: 16,
+            hidden,
+            workers,
+            iters: iters16,
+            repeats,
+        };
+        let r = registry::with_env(config, EnvParams::default(), bench)
+            .unwrap_or_else(|e| panic!("{config}.{loss}: {e}"));
+        (config, loss, r)
+    })
+    .collect();
+    let mut reg_table = BenchTable::new(
+        "native_train — registry envs (one row per newly-trainable family)",
+        &["Config", "Loss", "Batch", "it/s"],
+    );
+    for (config, loss, r) in &reg_rows {
+        reg_table.row(&[config.to_string(), loss.to_string(), "16".to_string(), r.to_string()]);
+    }
+    reg_table.print();
+
     let mut bj = BenchJson::new("native");
     bj.meta("backend", Json::Str("native".to_string()));
     bj.meta("loss", Json::Str("tb".to_string()));
@@ -132,6 +209,14 @@ fn main() {
             ("env", Json::Str(env.to_string())),
             ("mode", Json::Str(mode.to_string())),
             ("batch", Json::Num(*batch as f64)),
+            ("it_per_sec", itps_json(r)),
+        ]));
+    }
+    for (config, loss, r) in &reg_rows {
+        bj.row(Json::obj(vec![
+            ("env", Json::Str(config.to_string())),
+            ("mode", Json::Str(format!("registry:{loss}"))),
+            ("batch", Json::Num(16.0)),
             ("it_per_sec", itps_json(r)),
         ]));
     }

@@ -26,6 +26,8 @@ pub fn run_config(config_name: &str, loss: &str) -> RunConfig {
         c if c.starts_with("hypergrid") => EpsSchedule::none(),
         // Bit sequences: constant ε = 1e-3 (Table 4).
         c if c.starts_with("bitseq") => EpsSchedule::Constant(1e-3),
+        // Generic sequence machinery demo: same light exploration.
+        c if c.starts_with("seq_") => EpsSchedule::Constant(1e-3),
         // TFBind8/QM9: ε from 1.0 → 0.0 over 5·10⁴ steps (Table 4).
         "tfbind8" | "qm9" => EpsSchedule::Linear { start: 1.0, end: 0.0, steps: 50_000 },
         // AMP: constant ε = 1e-2 (§B.2.2).
@@ -44,6 +46,7 @@ pub fn run_config(config_name: &str, loss: &str) -> RunConfig {
         c if c.starts_with("hypergrid_small") => 2_000,
         c if c.starts_with("hypergrid") => 10_000,
         c if c.starts_with("bitseq") => 2_000,
+        c if c.starts_with("seq_") => 2_000,
         "tfbind8" | "qm9" => 10_000,
         c if c.starts_with("amp") => 1_000,
         c if c.starts_with("phylo") => 2_000,

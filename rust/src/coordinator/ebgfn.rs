@@ -149,6 +149,7 @@ impl<'a, B: Backend> EbGfnTrainer<'a, B> {
                     .collect();
                 backward_rollout_to_batch_with_policy(
                     self.env, &mut policy, &mut self.ctx, &mut self.rng, &data,
+                    &ExtraSource::None,
                 )?
             }
         };

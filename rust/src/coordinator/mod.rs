@@ -13,6 +13,7 @@
 //! [`Backend::train_step`]: crate::runtime::Backend::train_step
 
 pub mod config;
+pub mod registry;
 pub mod rollout;
 pub mod buffer;
 pub mod explore;
@@ -21,5 +22,6 @@ pub mod eval;
 pub mod baseline;
 pub mod ebgfn;
 
+pub use registry::{EnvDriver, EnvFamily, EnvParams};
 pub use rollout::{RolloutCtx, TrajBatch};
 pub use trainer::{IterStats, ReplayConfig, Trainer};

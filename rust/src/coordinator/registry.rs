@@ -1,0 +1,535 @@
+//! The environment registry: one table mapping every CLI-trainable
+//! environment family to its named configs, supported objectives and
+//! per-state extra source — and a type-erased dispatcher ([`with_env`])
+//! that builds the concrete env (plus any dataset/reward it needs) and
+//! hands it to a generic driver.
+//!
+//! This is the single source of truth the CLI derives its `--env`/`--loss`
+//! help strings, `list-configs` output and unknown-name errors from, so
+//! adding a family here automatically updates every user-facing surface
+//! (the drift the old hard-coded `CLI_FAMILIES` string suffered from).
+//! `tests/integration_envs.rs` walks the same table to run the
+//! [`check_vec_env`](crate::testing::check_vec_env) conformance suite over
+//! all nine families.
+//!
+//! Extras-dependent objectives: a family lists `fldb`/`mdb` in
+//! [`EnvFamily::losses`] exactly when [`with_env`] supplies the matching
+//! [`ExtraSource`] (phylo: accumulated-parsimony energies for FLDB;
+//! bayesnet: modular log-scores for MDB's delta-score trick). All other
+//! families get `ExtraSource::None`.
+
+use super::rollout::ExtraSource;
+use crate::data::ancestral::ancestral_sample;
+use crate::data::erdos_renyi::sample_er_dag;
+use crate::data::phylo_data::{ds_config, ds_reward_c, synthetic_alignment};
+use crate::envs::amp::{amp_env, amp_env_sized};
+use crate::envs::bayesnet::{BayesNetEnv, BayesNetState};
+use crate::envs::bitseq::{bitseq_env, BitSeqConfig};
+use crate::envs::hypergrid::HypergridEnv;
+use crate::envs::ising::IsingEnv;
+use crate::envs::phylo::PhyloEnv;
+use crate::envs::qm9::qm9_env;
+use crate::envs::seq::{SeqEnv, SeqScheme};
+use crate::envs::tfbind8::tfbind8_env;
+use crate::envs::VecEnv;
+use crate::reward::hamming::HammingReward;
+use crate::reward::hypergrid::HypergridReward;
+use crate::reward::ising::IsingReward;
+use crate::reward::lingauss::lingauss_table;
+use crate::util::rng::Rng;
+
+/// Objectives every family trains (no per-state extras required).
+pub const BASE_LOSSES: &[&str] = &["tb", "db", "subtb"];
+
+/// Static description of one registered environment family.
+pub struct EnvFamily {
+    /// `--env` shorthand ("hypergrid", "phylo", …).
+    pub name: &'static str,
+    /// Config the bare shorthand resolves to.
+    pub default_config: &'static str,
+    /// Every named sized config of the family.
+    pub configs: &'static [&'static str],
+    /// Objectives trainable through the CLI for this family.
+    pub losses: &'static [&'static str],
+    /// One-line description for `list-configs`.
+    pub about: &'static str,
+}
+
+/// The nine families, in paper order.
+static REGISTRY: &[EnvFamily] = &[
+    EnvFamily {
+        name: "hypergrid",
+        default_config: "hypergrid_small",
+        configs: &["hypergrid_small", "hypergrid_2d_20", "hypergrid_4d_20", "hypergrid_8d_10"],
+        losses: BASE_LOSSES,
+        about: "D-dimensional grid walk with corner-mode reward (Table 2)",
+    },
+    EnvFamily {
+        name: "seq",
+        default_config: "seq_small",
+        configs: &["seq_small"],
+        losses: BASE_LOSSES,
+        about: "generic sequence machinery demo: fixed-length autoregressive + Hamming modes",
+    },
+    EnvFamily {
+        name: "bitseq",
+        default_config: "bitseq_small",
+        configs: &["bitseq_small", "bitseq_120_8"],
+        losses: BASE_LOSSES,
+        about: "non-autoregressive bit sequences, hidden Hamming modes (Fig. 3)",
+    },
+    EnvFamily {
+        name: "tfbind8",
+        default_config: "tfbind8",
+        configs: &["tfbind8"],
+        losses: BASE_LOSSES,
+        about: "length-8 DNA sequences over a binding landscape (Fig. 4)",
+    },
+    EnvFamily {
+        name: "qm9",
+        default_config: "qm9",
+        configs: &["qm9"],
+        losses: BASE_LOSSES,
+        about: "prepend/append molecule fragments, HOMO-LUMO proxy (Fig. 4)",
+    },
+    EnvFamily {
+        name: "amp",
+        default_config: "amp_small",
+        configs: &["amp_small", "amp"],
+        losses: BASE_LOSSES,
+        about: "variable-length peptides with a classifier reward (Fig. 5)",
+    },
+    EnvFamily {
+        name: "phylo",
+        default_config: "phylo_small",
+        configs: &[
+            "phylo_small", "phylo_ds1", "phylo_ds2", "phylo_ds3", "phylo_ds4",
+            "phylo_ds5", "phylo_ds6", "phylo_ds7", "phylo_ds8",
+        ],
+        losses: &["tb", "db", "subtb", "fldb"],
+        about: "phylogenetic tree assembly; FLDB uses Fitch parsimony energies (Fig. 6)",
+    },
+    EnvFamily {
+        name: "bayesnet",
+        default_config: "bayesnet_d5",
+        configs: &["bayesnet_d5"],
+        losses: &["tb", "db", "subtb", "mdb"],
+        about: "DAG structure learning; MDB uses modular log-score deltas (Fig. 7)",
+    },
+    EnvFamily {
+        name: "ising",
+        default_config: "ising_small",
+        configs: &["ising_small", "ising_n9", "ising_n10"],
+        losses: BASE_LOSSES,
+        about: "spin-by-spin Ising sampling; --ebgfn for the Table 8 workload",
+    },
+];
+
+/// All registered families, in paper order.
+pub fn families() -> &'static [EnvFamily] {
+    REGISTRY
+}
+
+/// Look up a family by its `--env` shorthand.
+pub fn family(name: &str) -> Option<&'static EnvFamily> {
+    REGISTRY.iter().find(|f| f.name == name)
+}
+
+/// The family owning a named config.
+pub fn family_of_config(config: &str) -> Option<&'static EnvFamily> {
+    REGISTRY.iter().find(|f| f.configs.contains(&config))
+}
+
+/// `--env` help string, generated from the registry.
+pub fn env_usage() -> String {
+    let names: Vec<&str> = REGISTRY.iter().map(|f| f.name).collect();
+    format!("environment family ({})", names.join(" | "))
+}
+
+/// Every objective some family registers, in first-seen order (the
+/// source for `--loss` help and unknown-loss errors).
+pub fn all_losses() -> Vec<&'static str> {
+    let mut out: Vec<&'static str> = Vec::new();
+    for f in REGISTRY {
+        for l in f.losses {
+            if !out.contains(l) {
+                out.push(l);
+            }
+        }
+    }
+    out
+}
+
+/// `--loss` help string, generated from the registry.
+pub fn loss_usage() -> String {
+    format!(
+        "objective: {} ({} everywhere; the rest where the env supplies \
+         extras — see list-configs)",
+        all_losses().join(" | "),
+        BASE_LOSSES.join(" | ")
+    )
+}
+
+/// The families supporting objective `loss`, for error messages.
+pub fn families_with_loss(loss: &str) -> Vec<&'static str> {
+    REGISTRY.iter().filter(|f| f.losses.contains(&loss)).map(|f| f.name).collect()
+}
+
+fn known_envs_and_configs() -> String {
+    let mut lines = Vec::new();
+    for f in REGISTRY {
+        lines.push(format!("  {} -> {}", f.name, f.configs.join(" | ")));
+    }
+    lines.join("\n")
+}
+
+/// Resolve `--env` / `--config` flags into a family + concrete config.
+///
+/// A non-empty `--env` may be a family shorthand or a full config name.
+/// When it names a family, an empty `--config` selects the family
+/// default; a `--config` belonging to that family selects the sized
+/// config (`--env phylo --config phylo_ds3`); anything else — a typo or a
+/// config of a *different* family — is rejected rather than silently
+/// trained over. (The CLI passes `--config` with an empty default so an
+/// explicit value is always distinguishable.) Unknown names error with
+/// the full registry enumerated.
+pub fn resolve(env: &str, config: &str) -> anyhow::Result<(&'static EnvFamily, String)> {
+    let name = if env.is_empty() { config } else { env };
+    if let Some(f) = family(name) {
+        if config.is_empty() || config == name {
+            return Ok((f, f.default_config.to_string()));
+        }
+        if let Some(fc) = family_of_config(config) {
+            if fc.name == f.name {
+                return Ok((f, config.to_string()));
+            }
+            anyhow::bail!(
+                "--config {config:?} belongs to env {}, not env {} (its configs: {})",
+                fc.name,
+                f.name,
+                f.configs.join(" | ")
+            );
+        }
+        anyhow::bail!(
+            "unknown --config {config:?} for env {}; its configs: {}",
+            f.name,
+            f.configs.join(" | ")
+        );
+    }
+    if let Some(f) = family_of_config(name) {
+        // `--env` was given a full config name; a different explicit
+        // `--config` alongside it is a conflict, not a fallback.
+        anyhow::ensure!(
+            config.is_empty() || config == name,
+            "--env {name:?} is a config name and conflicts with --config \
+             {config:?}; pass one or the other"
+        );
+        return Ok((f, name.to_string()));
+    }
+    anyhow::bail!(
+        "unknown environment or config {name:?}; the registry covers:\n{}",
+        known_envs_and_configs()
+    )
+}
+
+/// Check that `loss` is trainable for `fam`, with a registry-generated
+/// error naming the families that do support it.
+pub fn check_loss(fam: &EnvFamily, loss: &str) -> anyhow::Result<()> {
+    if fam.losses.contains(&loss) {
+        return Ok(());
+    }
+    let supported = families_with_loss(loss);
+    if supported.is_empty() {
+        anyhow::bail!(
+            "unknown --loss {loss:?} ({}; env {} trains {})",
+            all_losses().join(" | "),
+            fam.name,
+            fam.losses.join(" | ")
+        );
+    }
+    anyhow::bail!(
+        "--loss {loss} needs per-state extras that env {} does not supply; \
+         envs supporting {loss}: {} (env {} trains {})",
+        fam.name,
+        supported.join(" | "),
+        fam.name,
+        fam.losses.join(" | ")
+    )
+}
+
+/// The N×N lattice side behind an ising config name (shared by the
+/// standard trainer path and the EB-GFN workload, which builds its own
+/// shared-reward env). Derived from the name (`ising_n<N>`), so adding a
+/// sized config to the registry needs no second table.
+pub fn ising_side(config: &str) -> anyhow::Result<usize> {
+    if config == "ising_small" {
+        return Ok(3);
+    }
+    if let Some(n) = config.strip_prefix("ising_n").and_then(|s| s.parse().ok()) {
+        return Ok(n);
+    }
+    anyhow::bail!(
+        "unknown ising config {config:?} ({})",
+        family("ising").map(|f| f.configs.join(" | ")).unwrap_or_default()
+    )
+}
+
+/// Knobs that parameterize env construction (dataset seeds, reward
+/// hyperparameters surfaced on the CLI).
+#[derive(Clone, Copy, Debug)]
+pub struct EnvParams {
+    /// Seed for generated datasets / synthetic landscapes (tfbind8, qm9,
+    /// amp, seq modes, phylo alignments, bayesnet data).
+    pub seed: u64,
+    /// Ising coupling strength σ.
+    pub sigma: f64,
+}
+
+impl Default for EnvParams {
+    fn default() -> Self {
+        EnvParams { seed: 0, sigma: 0.2 }
+    }
+}
+
+/// A generic consumer of a registry-built environment: implemented by the
+/// CLI trainer, benches and the conformance tests. `drive` receives the
+/// concrete env, the family's canonical [`ExtraSource`] (filled for
+/// phylo/bayesnet, `None` elsewhere), and the resolved names.
+pub trait EnvDriver {
+    type Out;
+    fn drive<E>(
+        self,
+        env: &E,
+        extra: &ExtraSource<'_, E>,
+        fam: &'static EnvFamily,
+        config: &str,
+    ) -> anyhow::Result<Self::Out>
+    where
+        E: VecEnv,
+        E::State: Clone,
+        E::Obj: PartialEq + std::fmt::Debug;
+}
+
+/// Build the concrete environment for `config` (generating any dataset it
+/// needs from `params.seed`) and run `driver` on it. The single dispatch
+/// point behind `train --env <any-of-9>`.
+pub fn with_env<D: EnvDriver>(
+    config: &str,
+    params: EnvParams,
+    driver: D,
+) -> anyhow::Result<D::Out> {
+    let (fam, config) = resolve("", config)?;
+    match fam.name {
+        "hypergrid" => {
+            let (d, h) = match config.as_str() {
+                "hypergrid_small" => (2, 8),
+                "hypergrid_2d_20" => (2, 20),
+                "hypergrid_4d_20" => (4, 20),
+                "hypergrid_8d_10" => (8, 10),
+                other => anyhow::bail!("unknown hypergrid config {other:?}"),
+            };
+            let env = HypergridEnv::new(d, h, HypergridReward::standard(h));
+            driver.drive(&env, &ExtraSource::None, fam, &config)
+        }
+        "seq" => {
+            // Generic machinery demo: fixed-length autoregressive tokens
+            // (vocab 4 = 2 bits each) against seeded Hamming modes.
+            let (vocab, k, max_len, n_modes) = (4usize, 2usize, 8usize, 4usize);
+            let mut rng = Rng::new(params.seed);
+            let modes: Vec<Vec<u8>> = (0..n_modes)
+                .map(|_| (0..max_len * k).map(|_| rng.bernoulli(0.5) as u8).collect())
+                .collect();
+            let env = SeqEnv::new(
+                SeqScheme::AutoregFixed,
+                vocab,
+                max_len,
+                HammingReward::new(&modes, k, 3.0),
+            );
+            driver.drive(&env, &ExtraSource::None, fam, &config)
+        }
+        "bitseq" => {
+            let cfg = match config.as_str() {
+                "bitseq_small" => BitSeqConfig::small(),
+                "bitseq_120_8" => BitSeqConfig::paper(),
+                other => anyhow::bail!("unknown bitseq config {other:?}"),
+            };
+            let (env, _modes) = bitseq_env(cfg);
+            driver.drive(&env, &ExtraSource::None, fam, &config)
+        }
+        "tfbind8" => {
+            let env = tfbind8_env(params.seed, 10.0);
+            driver.drive(&env, &ExtraSource::None, fam, &config)
+        }
+        "qm9" => {
+            let env = qm9_env(params.seed, 10.0);
+            driver.drive(&env, &ExtraSource::None, fam, &config)
+        }
+        "amp" => {
+            let env = match config.as_str() {
+                "amp_small" => amp_env_sized(params.seed, 1e-3, 8),
+                "amp" => amp_env(params.seed, 1e-3),
+                other => anyhow::bail!("unknown amp config {other:?}"),
+            };
+            driver.drive(&env, &ExtraSource::None, fam, &config)
+        }
+        "phylo" => {
+            let (n_species, n_sites, c) = match config.as_str() {
+                "phylo_small" => (6, 8, 16.0),
+                other => {
+                    let ds: usize = other
+                        .strip_prefix("phylo_ds")
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| anyhow::anyhow!("unknown phylo config {other:?}"))?;
+                    anyhow::ensure!((1..=8).contains(&ds), "phylo_ds index must be 1..=8");
+                    let (n, m) = ds_config(ds);
+                    (n, m, ds_reward_c(ds))
+                }
+            };
+            let mut rng = Rng::new(params.seed);
+            let aln = synthetic_alignment(n_species, n_sites, 0.15, &mut rng);
+            let env = PhyloEnv::new(aln, c, 4.0);
+            // FLDB's forward-looking energy: accumulated Fitch parsimony.
+            let energy =
+                |s: &<PhyloEnv as VecEnv>::State, i: usize| env.energy(s, i);
+            driver.drive(&env, &ExtraSource::Energy(&energy), fam, &config)
+        }
+        "bayesnet" => {
+            anyhow::ensure!(config == "bayesnet_d5", "unknown bayesnet config {config:?}");
+            let d = 5usize;
+            // Linear-Gaussian dataset from a seeded ER ground truth (the
+            // bayes_structure example's setup).
+            let mut rng = Rng::new(params.seed);
+            let g = sample_er_dag(d, 1.0, &mut rng);
+            let data = ancestral_sample(&g, 100, 0.1, &mut rng);
+            let table = lingauss_table(&data, 0.1, 1.0);
+            let env = BayesNetEnv::new(d, table.clone());
+            // MDB's delta-score extras: per-state modular log-score.
+            let score = |s: &BayesNetState, i: usize| table.log_score(s.adj[i]);
+            driver.drive(&env, &ExtraSource::StateLogReward(&score), fam, &config)
+        }
+        "ising" => {
+            let n = ising_side(&config)?;
+            let env = IsingEnv::lattice(n, IsingReward::torus(n, params.sigma));
+            driver.drive(&env, &ExtraSource::None, fam, &config)
+        }
+        other => unreachable!("family {other:?} registered without a constructor"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_family_resolves_its_shorthand_and_configs() {
+        for f in families() {
+            let (fam, config) = resolve(f.name, "").unwrap();
+            assert_eq!(fam.name, f.name);
+            assert_eq!(config, f.default_config);
+            assert!(f.configs.contains(&f.default_config), "{}: default in configs", f.name);
+            for c in f.configs {
+                let (fam2, config2) = resolve("", c).unwrap();
+                assert_eq!(fam2.name, f.name, "{c} resolves to its family");
+                assert_eq!(&config2, c);
+            }
+        }
+    }
+
+    /// `--env <family> --config <sized config of that family>` combines;
+    /// cross-family or unregistered `--config` values are rejected (the
+    /// CLI's `--config` default is empty, so any value is explicit).
+    #[test]
+    fn env_plus_config_selects_sized_configs() {
+        let (fam, config) = resolve("phylo", "phylo_ds3").unwrap();
+        assert_eq!(fam.name, "phylo");
+        assert_eq!(config, "phylo_ds3");
+        let (fam, config) = resolve("hypergrid", "hypergrid_4d_20").unwrap();
+        assert_eq!(fam.name, "hypergrid");
+        assert_eq!(config, "hypergrid_4d_20");
+        // An explicit cross-family --config is a mistake, not a fallback.
+        let err = resolve("phylo", "hypergrid_small").unwrap_err().to_string();
+        assert!(err.contains("hypergrid"), "mismatch error names the owning env: {err}");
+        // A config registered nowhere is an explicit typo: reject it.
+        let err = resolve("phylo", "phylo_ds9").unwrap_err().to_string();
+        assert!(err.contains("phylo_ds8"), "typo error lists the family configs: {err}");
+    }
+
+    #[test]
+    fn registry_has_all_nine_families() {
+        let names: Vec<&str> = families().iter().map(|f| f.name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "hypergrid", "seq", "bitseq", "tfbind8", "qm9", "amp", "phylo",
+                "bayesnet", "ising"
+            ]
+        );
+    }
+
+    #[test]
+    fn unknown_names_enumerate_the_registry() {
+        let err = resolve("warpdrive", "").unwrap_err().to_string();
+        for f in families() {
+            assert!(err.contains(f.name), "error must list {}: {err}", f.name);
+        }
+        let err = resolve("", "hypergrid_3d_9").unwrap_err().to_string();
+        assert!(err.contains("hypergrid_small"), "{err}");
+    }
+
+    #[test]
+    fn loss_support_is_registry_driven() {
+        let hg = family("hypergrid").unwrap();
+        assert!(check_loss(hg, "tb").is_ok());
+        assert!(check_loss(hg, "subtb").is_ok());
+        let err = check_loss(hg, "fldb").unwrap_err().to_string();
+        assert!(err.contains("phylo"), "fldb error names the supporting env: {err}");
+        let err = check_loss(hg, "mdb").unwrap_err().to_string();
+        assert!(err.contains("bayesnet"), "mdb error names the supporting env: {err}");
+        assert!(check_loss(family("phylo").unwrap(), "fldb").is_ok());
+        assert!(check_loss(family("bayesnet").unwrap(), "mdb").is_ok());
+        let err = check_loss(hg, "qb").unwrap_err().to_string();
+        assert!(err.contains("tb | db | subtb"), "{err}");
+    }
+
+    /// The dispatcher builds **every registered config** (not just the
+    /// family defaults) and hands the driver an env whose spec passes
+    /// basic sanity — so a config added to the table without a matching
+    /// constructor arm fails here instead of at a user's command line
+    /// (full conformance runs in tests/integration_envs.rs).
+    #[test]
+    fn with_env_builds_every_registered_config() {
+        struct SpecProbe;
+        impl EnvDriver for SpecProbe {
+            type Out = (&'static str, usize);
+            fn drive<E>(
+                self,
+                env: &E,
+                extra: &ExtraSource<'_, E>,
+                fam: &'static EnvFamily,
+                _config: &str,
+            ) -> anyhow::Result<(&'static str, usize)>
+            where
+                E: VecEnv,
+                E::State: Clone,
+                E::Obj: PartialEq + std::fmt::Debug,
+            {
+                let spec = env.spec();
+                assert!(spec.obs_dim > 0 && spec.n_actions > 0 && spec.t_max > 0);
+                // Families listing extras-dependent losses must supply the
+                // matching source kind.
+                let has_extras = !matches!(extra, ExtraSource::None);
+                let needs_extras =
+                    fam.losses.contains(&"fldb") || fam.losses.contains(&"mdb");
+                assert_eq!(has_extras, needs_extras, "{}: extra source", fam.name);
+                Ok((fam.name, spec.n_actions))
+            }
+        }
+        for f in families() {
+            for c in f.configs {
+                let (name, _) = with_env(c, EnvParams::default(), SpecProbe)
+                    .unwrap_or_else(|e| panic!("{c}: {e}"));
+                assert_eq!(name, f.name);
+            }
+        }
+    }
+}

@@ -188,6 +188,19 @@ impl RolloutCtx {
     }
 }
 
+/// Evaluate an extra source for one row (`None` when the batch's `extra`
+/// channel stays zero) — the single dispatch point over [`ExtraSource`].
+fn extra_value<E: VecEnv>(
+    extra: &ExtraSource<'_, E>,
+    state: &E::State,
+    i: usize,
+) -> Option<f32> {
+    match extra {
+        ExtraSource::None => None,
+        ExtraSource::Energy(f) | ExtraSource::StateLogReward(f) => Some(f(state, i) as f32),
+    }
+}
+
 fn fill_extra<E: VecEnv>(
     extra: &ExtraSource<'_, E>,
     state: &E::State,
@@ -195,13 +208,10 @@ fn fill_extra<E: VecEnv>(
     t: usize,
     active: &[bool],
 ) {
-    match extra {
-        ExtraSource::None => {}
-        ExtraSource::Energy(f) | ExtraSource::StateLogReward(f) => {
-            for (i, &a) in active.iter().enumerate() {
-                if a {
-                    batch.extra[i * batch.t1 + t] = f(state, i) as f32;
-                }
+    for (i, &a) in active.iter().enumerate() {
+        if a {
+            if let Some(v) = extra_value(extra, state, i) {
+                batch.extra[i * batch.t1 + t] = v;
             }
         }
     }
@@ -301,14 +311,10 @@ pub fn forward_rollout_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>(
     }
     // extra at the terminal slot (index = length; fill every t ≥ len too so
     // FLDB's E(s_{len}) is present).
-    match extra {
-        ExtraSource::None => {}
-        ExtraSource::Energy(f) | ExtraSource::StateLogReward(f) => {
-            for i in 0..b {
-                let v = f(&state, i) as f32;
-                for tt in batch.length[i] as usize..t1 {
-                    batch.extra[i * t1 + tt] = v;
-                }
+    for i in 0..b {
+        if let Some(v) = extra_value(extra, &state, i) {
+            for tt in batch.length[i] as usize..t1 {
+                batch.extra[i * t1 + tt] = v;
             }
         }
     }
@@ -349,13 +355,18 @@ pub fn forward_rollout<E: VecEnv>(
 
 /// Walk backward from terminal objects and assemble a **forward-oriented**
 /// trajectory batch (EB-GFN trains the GFlowNet on backward walks from data
-/// samples; paper §B.5). Also fills `log_pf` / `log_pb` of the walks.
+/// samples; paper §B.5, and the replay path of
+/// [`Trainer`](super::trainer::Trainer)). Also fills `log_pf` / `log_pb`
+/// of the walks, and — given a non-`None` [`ExtraSource`] — the per-state
+/// `extra` channel, so extras-dependent objectives (FLDB/MDB) can train on
+/// replayed trajectories too.
 pub fn backward_rollout_to_batch_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>(
     env: &E,
     policy: &mut P,
     ctx: &mut RolloutCtx,
     rng: &mut Rng,
     objs: &[E::Obj],
+    extra: &ExtraSource<'_, E>,
 ) -> anyhow::Result<(TrajBatch, Vec<E::Obj>)> {
     let spec = env.spec();
     let shape = policy.shape();
@@ -367,6 +378,9 @@ pub fn backward_rollout_to_batch_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>
         obs: Vec<Vec<f32>>,
         fmask: Vec<Vec<f32>>,
         bmask: Vec<Vec<f32>>,
+        /// Extra-source value per visited state (index-aligned with `obs`;
+        /// empty for `ExtraSource::None`).
+        extra: Vec<f32>,
         fwd_a: Vec<i32>,
         bwd_a: Vec<i32>,
         log_pf: f64,
@@ -377,6 +391,7 @@ pub fn backward_rollout_to_batch_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>
             obs: Vec::new(),
             fmask: Vec::new(),
             bmask: Vec::new(),
+            extra: Vec::new(),
             fwd_a: Vec::new(),
             bwd_a: Vec::new(),
             log_pf: 0.0,
@@ -410,6 +425,9 @@ pub fn backward_rollout_to_batch_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>
                 recs[i].bmask.push(
                     ctx.bwd_mask[i * spec.n_bwd_actions..(i + 1) * spec.n_bwd_actions].to_vec(),
                 );
+                if let Some(v) = extra_value(extra, &state, i) {
+                    recs[i].extra.push(v);
+                }
             }
         }
         if done.iter().all(|&d| d) {
@@ -466,6 +484,9 @@ pub fn backward_rollout_to_batch_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>
                 recs[i].bmask.push(
                     ctx.bwd_mask[i * spec.n_bwd_actions..(i + 1) * spec.n_bwd_actions].to_vec(),
                 );
+                if let Some(v) = extra_value(extra, &state, i) {
+                    recs[i].extra.push(v);
+                }
             }
         }
     }
@@ -476,6 +497,10 @@ pub fn backward_rollout_to_batch_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>
         let rec = &recs[i];
         let len = rec.fwd_a.len();
         debug_assert_eq!(rec.obs.len(), len + 1, "row {i}: visits vs transitions");
+        debug_assert!(
+            rec.extra.is_empty() || rec.extra.len() == len + 1,
+            "row {i}: extra snapshots vs visits"
+        );
         batch.length[i] = len as i32;
         batch.log_reward[i] = env.log_reward_obj(&objs[i]) as f32;
         batch.log_pf[i] = rec.log_pf;
@@ -485,6 +510,9 @@ pub fn backward_rollout_to_batch_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>
             batch.obs_slot(i, t).copy_from_slice(&rec.obs[visit]);
             batch.fwd_mask_slot(i, t).copy_from_slice(&rec.fmask[visit]);
             batch.bwd_mask_slot(i, t).copy_from_slice(&rec.bmask[visit]);
+            if !rec.extra.is_empty() {
+                batch.extra[i * t1 + t] = rec.extra[visit];
+            }
         }
         for t in 0..len {
             // Transition s_t → s_{t+1} was recorded when stepping back from
@@ -492,7 +520,8 @@ pub fn backward_rollout_to_batch_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>
             batch.fwd_actions[i * (t1 - 1) + t] = rec.fwd_a[len - 1 - t];
             batch.bwd_actions[i * (t1 - 1) + t] = rec.bwd_a[len - 1 - t];
         }
-        // Padding slots: terminal obs + sentinel masks.
+        // Padding slots: terminal obs + sentinel masks + terminal extra
+        // (the same terminal-fill convention as the forward rollout).
         for tt in len + 1..t1 {
             let term = rec.obs[0].clone();
             batch.obs_slot(i, tt).copy_from_slice(&term);
@@ -503,6 +532,9 @@ pub fn backward_rollout_to_batch_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>
             batch.bwd_mask_slot(i, tt).copy_from_slice(&bsrc);
             if bsrc.iter().all(|&x| x == 0.0) {
                 batch.bwd_mask_slot(i, tt)[0] = 1.0;
+            }
+            if !rec.extra.is_empty() {
+                batch.extra[i * t1 + tt] = rec.extra[0];
             }
         }
     }
@@ -517,9 +549,10 @@ pub fn backward_rollout_to_batch<E: VecEnv>(
     ctx: &mut RolloutCtx,
     rng: &mut Rng,
     objs: &[E::Obj],
+    extra: &ExtraSource<'_, E>,
 ) -> anyhow::Result<(TrajBatch, Vec<E::Obj>)> {
     let mut policy = ArtifactPolicy { art, ts };
-    backward_rollout_to_batch_with_policy(env, &mut policy, ctx, rng, objs)
+    backward_rollout_to_batch_with_policy(env, &mut policy, ctx, rng, objs, extra)
 }
 
 /// Walk backward from terminal objects under P_B (uniform over legal
@@ -723,9 +756,10 @@ mod tests {
         let mut ctx = RolloutCtx::for_shape(&shape);
         let mut rng = Rng::new(11);
         let objs: Vec<Vec<i32>> = (0..b as i32).map(|k| vec![k % 6, (k * 3) % 6]).collect();
-        let (batch, _) =
-            backward_rollout_to_batch_with_policy(&e, &mut policy, &mut ctx, &mut rng, &objs)
-                .unwrap();
+        let (batch, _) = backward_rollout_to_batch_with_policy(
+            &e, &mut policy, &mut ctx, &mut rng, &objs, &ExtraSource::None,
+        )
+        .unwrap();
         // Replaying the recorded forward actions from s0 must retrace the
         // recorded per-slot observations and terminate in the object.
         let mut state = e.reset(b);
@@ -770,6 +804,48 @@ mod tests {
             assert_eq!(e.extract(&state, i), objs[i], "row {i}: replay object");
             let want = e.log_reward_obj(&objs[i]) as f32;
             assert!((batch.log_reward[i] - want).abs() < 1e-5);
+        }
+    }
+
+    /// Backward rollouts fill the `extra` channel with the per-state
+    /// values in *forward* orientation: slot t holds f(s_t) of the state
+    /// the forward replay visits at t, and padding slots carry the
+    /// terminal value (the forward rollout's terminal-fill convention).
+    #[test]
+    fn backward_rollout_fills_extras_in_forward_orientation() {
+        let e = env();
+        let b = 6;
+        let shape = PolicyShape::of_env(&e, b);
+        let mut policy = UniformPolicy::new(shape);
+        let mut ctx = RolloutCtx::for_shape(&shape);
+        let mut rng = Rng::new(23);
+        let objs: Vec<Vec<i32>> = (0..b as i32).map(|k| vec![(k * 2) % 6, k % 6]).collect();
+        // Energy = 0.5·Σ coords (0 at s0, monotone along any trajectory).
+        let energy = |s: &crate::envs::hypergrid::HypergridState, i: usize| {
+            0.5 * s.coords_of(i).iter().map(|&c| c as f64).sum::<f64>()
+        };
+        let (batch, _) = backward_rollout_to_batch_with_policy(
+            &e, &mut policy, &mut ctx, &mut rng, &objs, &ExtraSource::Energy(&energy),
+        )
+        .unwrap();
+        for i in 0..b {
+            let len = batch.length[i] as usize;
+            let terminal = 0.5 * objs[i].iter().map(|&c| c as f32).sum::<f32>();
+            // s0 has energy 0; the terminal state (and every padding slot
+            // after it) carries the object's energy.
+            assert_eq!(batch.extra[i * batch.t1], 0.0, "row {i}: E(s0)");
+            for tt in len..batch.t1 {
+                assert!(
+                    (batch.extra[i * batch.t1 + tt] - terminal).abs() < 1e-6,
+                    "row {i} slot {tt}: terminal extra"
+                );
+            }
+            // Energies are per-state sums of coords, so each transition
+            // changes E by +0.5 except the final stop (ΔE = 0).
+            for t in 0..len.saturating_sub(1) {
+                let de = batch.extra[i * batch.t1 + t + 1] - batch.extra[i * batch.t1 + t];
+                assert!((de - 0.5).abs() < 1e-6, "row {i} t {t}: ΔE = {de}");
+            }
         }
     }
 

@@ -23,7 +23,9 @@
 //! next batch is assembled by walking P_B backward from buffered objects
 //! instead. The mixing is per-iteration and only touches batch *assembly* —
 //! the fused train step, the eval protocols and the serve path are
-//! unchanged.
+//! unchanged. Replay batches fill the per-state `extra` channel from the
+//! caller's [`ExtraSource`] during the backward walk, so extras-dependent
+//! objectives (FLDB/MDB) mix replay like any other loss.
 
 use super::buffer::RingBuffer;
 use super::explore::EpsSchedule;
@@ -138,15 +140,6 @@ impl<'a, E: VecEnv, B: Backend> Trainer<'a, E, B> {
             "replay fraction {} outside [0, 1]",
             cfg.frac
         );
-        // Fail fast instead of aborting at a random later iteration: replay
-        // batches carry no per-state extras, so extras-dependent objectives
-        // cannot mix in replay iterations.
-        anyhow::ensure!(
-            !(matches!(self.backend.loss_name(), "mdb" | "fldb") && cfg.frac > 0.0),
-            "loss {:?} needs per-state extras that replay batches cannot \
-             carry; train on-policy (frac = 0) instead",
-            self.backend.loss_name()
-        );
         self.replay = Some((cfg, RingBuffer::new(cfg.cap)));
         Ok(self)
     }
@@ -190,11 +183,6 @@ impl<'a, E: VecEnv, B: Backend> Trainer<'a, E, B> {
             _ => false,
         };
         if use_replay {
-            anyhow::ensure!(
-                matches!(extra, ExtraSource::None),
-                "replay batches carry no per-state extras: FLDB/MDB \
-                 objectives must train on-policy (set frac = 0)"
-            );
             let b = self.backend.shape().batch;
             let mut drawn: Vec<E::Obj> = Vec::with_capacity(b);
             {
@@ -206,7 +194,7 @@ impl<'a, E: VecEnv, B: Backend> Trainer<'a, E, B> {
             }
             let mut policy = BackendPolicy { backend: &self.backend };
             let (batch, objs) = backward_rollout_to_batch_with_policy(
-                self.env, &mut policy, &mut self.ctx, &mut self.rng, &drawn,
+                self.env, &mut policy, &mut self.ctx, &mut self.rng, &drawn, extra,
             )?;
             Ok((batch, objs, true))
         } else {
@@ -404,16 +392,75 @@ mod tests {
         assert!(tail < head, "mixed replay TB loss should trend down: {head:.3} -> {tail:.3}");
     }
 
-    /// The FLDB/MDB guard: replay cannot assemble per-state extras, so a
-    /// replay-destined iteration with an extra source must error rather
-    /// than silently train on zeros.
+    /// Replay batches accept extras-dependent objectives: a frac = 1.0
+    /// replay batch fills the `extra` channel from the source during the
+    /// backward walk (real per-state values, not zeros), and stays
+    /// bitwise-deterministic in seed + buffer.
     #[test]
-    fn replay_rejects_extra_sources() {
+    fn replay_fills_extra_sources_deterministically() {
         let e = env();
-        let mut tr = replay_trainer(&e, 1.0, 8);
-        tr.seed_replay([vec![1, 1]]).unwrap();
-        let f = |_: &crate::envs::hypergrid::HypergridState, _: usize| 0.0;
-        let err = tr.assemble_batch(&ExtraSource::Energy(&f));
-        assert!(err.is_err(), "replay with an extra source must error");
+        let energy = |s: &crate::envs::hypergrid::HypergridState, i: usize| {
+            0.25 * s.coords_of(i).iter().map(|&c| c as f64).sum::<f64>()
+        };
+        let pool: Vec<Vec<i32>> = vec![vec![2, 3], vec![4, 1], vec![5, 5]];
+        let run = |seed: u64| {
+            let mut tr = replay_trainer(&e, 1.0, seed);
+            tr.seed_replay(pool.iter().cloned()).unwrap();
+            tr.assemble_batch(&ExtraSource::Energy(&energy)).unwrap()
+        };
+        let (a, objs_a, rep_a) = run(42);
+        assert!(rep_a, "frac = 1.0 with a warm buffer must replay");
+        // The extra channel carries the real energies: E(s0) = 0 at slot 0,
+        // E(obj) at the terminal and padding slots.
+        for (i, obj) in objs_a.iter().enumerate() {
+            let len = a.length[i] as usize;
+            let term = 0.25 * obj.iter().map(|&c| c as f32).sum::<f32>();
+            assert_eq!(a.extra[i * a.t1], 0.0, "row {i}: E(s0)");
+            assert!(term > 0.0, "row {i}: pool objects have positive energy");
+            for tt in len..a.t1 {
+                assert!(
+                    (a.extra[i * a.t1 + tt] - term).abs() < 1e-6,
+                    "row {i} slot {tt}: terminal extra"
+                );
+            }
+        }
+        // Bitwise determinism in seed + buffer, extras included.
+        let (b, objs_b, rep_b) = run(42);
+        assert!(rep_b);
+        assert_eq!(objs_a, objs_b);
+        assert_eq!(a.fwd_actions, b.fwd_actions);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.extra), bits(&b.extra));
+        assert_eq!(bits(&a.obs), bits(&b.obs));
+    }
+
+    /// An FLDB trainer with replay mixing trains end-to-end: both batch
+    /// kinds occur, extras flow through replay assembly, and the loss
+    /// stays finite and trends down (margins pre-validated like the
+    /// on-policy FLDB test; replay only changes which trajectories are
+    /// scored, not the loss math).
+    #[test]
+    fn fldb_replay_training_stays_finite_and_improves() {
+        let e = env();
+        let cfg = NativeConfig::for_env(&e, 8, "fldb").with_hidden(16);
+        let backend = NativeBackend::new(cfg, 19).unwrap();
+        let mut tr = Trainer::with_backend(&e, backend, 19, EpsSchedule::none())
+            .unwrap()
+            .with_replay(ReplayConfig::new(32, 0.5))
+            .unwrap();
+        let energy = |s: &crate::envs::hypergrid::HypergridState, i: usize| {
+            0.25 * s.coords_of(i).iter().map(|&c| c as f64).sum::<f64>()
+        };
+        let extra = ExtraSource::Energy(&energy);
+        let mut losses = Vec::new();
+        for _ in 0..300 {
+            let (stats, _) = tr.train_iter(&extra).unwrap();
+            assert!(stats.loss.is_finite(), "fldb replay loss not finite");
+            losses.push(stats.loss as f64);
+        }
+        assert!(tr.replay_len() > 0, "on-policy iterations must feed the buffer");
+        let head = losses[..30].iter().sum::<f64>() / 30.0;
+        let tail = losses[270..].iter().sum::<f64>() / 30.0;
+        assert!(tail < head, "fldb replay loss should trend down: {head:.3} -> {tail:.3}");
     }
 }

@@ -17,8 +17,9 @@
 //!
 //! Training runs through the [`runtime::Backend`] abstraction: the
 //! **native** backend ([`runtime::NativeBackend`]) is a pure-Rust MLP with
-//! manual backward, TB/DB/MDB objectives and Adam — the full
-//! train → sample → metric loop with no artifacts — while the **xla**
+//! manual backward, the full TB/DB/SubTB/FLDB/MDB objective set and Adam —
+//! the whole train → sample → metric loop with no artifacts — while the
+//! **xla**
 //! backend ([`runtime::XlaBackend`]) replays the AOT artifacts through the
 //! PJRT CPU client (`xla` crate). Either way the coordinator drives
 //! everything from Rust; Python never executes on the training path.

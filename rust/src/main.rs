@@ -2,9 +2,10 @@
 //! the full workflow).
 //!
 //! Subcommands:
-//!   train        --env hypergrid|bitseq|ising | --config <name>
-//!                --loss <tb|db|subtb>  (fldb/mdb need per-state extras;
-//!                                       their workloads live in examples/)
+//!   train        --env <family> | --config <name>   (all nine families —
+//!                see `list-configs`, generated from the env registry)
+//!                --loss <tb|db|subtb|fldb|mdb>   (fldb/mdb on the envs
+//!                                                 that supply extras)
 //!                --backend <native|xla>  [--iters N] [--hidden H]
 //!                [--layers L] [--workers W]
 //!                [--replay-cap N --replay-frac P]   off-policy replay
@@ -14,19 +15,20 @@
 //!
 //! The default `--backend native` trains end-to-end in pure Rust with no
 //! AOT artifacts; `--backend xla` replays the fused AOT graphs (requires
-//! `make artifacts` + the real xla-rs crate).
+//! `make artifacts` + the real xla-rs crate). `--env`/`--loss` coverage,
+//! help strings and error messages all derive from
+//! `coordinator::registry`, so adding an environment there updates every
+//! CLI surface at once.
 
 use gfnx::coordinator::config::{artifacts_dir, run_config};
 use gfnx::coordinator::ebgfn::{EbGfnTrainer, SharedIsingReward};
+use gfnx::coordinator::registry::{self, EnvDriver, EnvFamily, EnvParams};
 use gfnx::coordinator::rollout::ExtraSource;
 use gfnx::coordinator::trainer::{ReplayConfig, Trainer};
 use gfnx::data::ising_mcmc::generate_ising_dataset;
-use gfnx::envs::bitseq::{bitseq_env, BitSeqConfig};
-use gfnx::envs::hypergrid::HypergridEnv;
 use gfnx::envs::ising::IsingEnv;
 use gfnx::envs::VecEnv;
-use gfnx::reward::hypergrid::HypergridReward;
-use gfnx::reward::ising::{torus_adjacency, IsingReward};
+use gfnx::reward::ising::torus_adjacency;
 use gfnx::runtime::{Artifact, Backend, NativeBackend, NativeConfig};
 use gfnx::util::cli::{Args, Cli};
 use gfnx::util::linalg::Mat;
@@ -34,23 +36,25 @@ use gfnx::util::logging::MetricsLog;
 use gfnx::util::rng::Rng;
 use gfnx::util::threadpool::default_workers;
 
-/// The env families (and their sized configs) the CLI trainer covers.
-const CLI_FAMILIES: &str = "hypergrid | bitseq | ising (sized configs: \
-hypergrid_small, hypergrid_2d_20, hypergrid_4d_20, hypergrid_8d_10, \
-bitseq_small, bitseq_120_8, ising_small, ising_n9, ising_n10)";
-
 fn main() {
+    let env_help = registry::env_usage();
+    let loss_help = registry::loss_usage();
     let cli = Cli::new(
         "gfnx",
         "Rust+JAX+Pallas GFlowNet benchmark infrastructure (gfnx reproduction)",
     )
     .positional("command", "train | list-configs | info")
-    .flag("config", "hypergrid_small", "experiment config name")
-    .flag("env", "", "environment family shorthand (hypergrid | bitseq | ising)")
-    .flag("loss", "tb", "objective: tb | db | subtb (fldb/mdb: see examples/)")
+    .flag(
+        "config",
+        "",
+        "experiment config name (empty = the --env family's default, or \
+         hypergrid_small; see list-configs)",
+    )
+    .flag("env", "", &env_help)
+    .flag("loss", "tb", &loss_help)
     .flag("backend", "native", "training backend: native | xla")
     .flag("iters", "0", "iteration count (0 = preset default)")
-    .flag("seed", "0", "rng seed")
+    .flag("seed", "0", "rng seed (also seeds generated datasets)")
     .flag("batch", "16", "batch width (native backend)")
     .flag("hidden", "256", "MLP trunk width (native backend)")
     .flag("layers", "2", "MLP trunk depth (native backend)")
@@ -71,36 +75,32 @@ fn main() {
 
     let result = match command.as_str() {
         "list-configs" => {
-            println!("configs (xla backend needs `make artifacts`; native needs nothing):");
-            for name in [
-                "hypergrid_small",
-                "hypergrid_2d_20",
-                "hypergrid_4d_20",
-                "hypergrid_8d_10",
-                "bitseq_small",
-                "bitseq_120_8",
-                "tfbind8",
-                "qm9",
-                "amp_small",
-                "amp",
-                "phylo_small",
-                "phylo_ds1..phylo_ds8",
-                "bayesnet_d5",
-                "ising_small",
-                "ising_n9",
-                "ising_n10",
-            ] {
-                println!("  {name}");
-            }
+            list_configs();
             Ok(())
         }
-        "info" => info(args.get("config"), args.get("loss")),
+        "info" => {
+            let config = match args.get("config") {
+                "" => "hypergrid_small",
+                c => c,
+            };
+            info(config, args.get("loss"))
+        }
         "train" => train(&args),
         other => Err(anyhow::anyhow!("unknown command {other:?}")),
     };
     if let Err(e) = result {
         eprintln!("error: {e}");
         std::process::exit(1);
+    }
+}
+
+/// Registry-generated config listing: families, sized configs, losses.
+fn list_configs() {
+    println!("environment registry (native backend needs nothing; xla needs `make artifacts`):");
+    for f in registry::families() {
+        println!("  {} — {}", f.name, f.about);
+        println!("      configs: {}", f.configs.join(" | "));
+        println!("      losses:  {}", f.losses.join(" | "));
     }
 }
 
@@ -120,91 +120,60 @@ fn info(config: &str, loss: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Resolve `--env`/`--config` into a concrete config name.
-fn resolve_config(args: &Args) -> anyhow::Result<String> {
-    let env = args.get("env");
-    if env.is_empty() {
-        return Ok(args.get("config").to_string());
-    }
-    Ok(match env {
-        "hypergrid" => "hypergrid_small".to_string(),
-        "bitseq" => "bitseq_small".to_string(),
-        "ising" => "ising_small".to_string(),
-        other
-            if other.starts_with("hypergrid")
-                || other.starts_with("bitseq")
-                || other.starts_with("ising") =>
-        {
-            other.to_string()
-        }
-        other => anyhow::bail!(
-            "unsupported --env {other:?}: the CLI trainer covers {CLI_FAMILIES}; \
-             other environments have dedicated example binaries (see examples/)"
-        ),
-    })
-}
-
-/// The N×N lattice side behind an ising config name.
-fn ising_side(config: &str) -> anyhow::Result<usize> {
-    Ok(match config {
-        "ising_small" => 3,
-        "ising_n9" => 9,
-        "ising_n10" => 10,
-        other => anyhow::bail!("unknown ising config {other:?} (ising_small | ising_n9 | ising_n10)"),
-    })
-}
-
-/// Train any CLI-covered family; dispatches on the resolved config name.
+/// Train any registered family; env construction and loss gating are
+/// registry-driven.
 fn train(args: &Args) -> anyhow::Result<()> {
-    let config = resolve_config(args)?;
-    let loss = args.get("loss");
-    if args.get_bool("ebgfn") && !config.starts_with("ising") {
-        anyhow::bail!("--ebgfn is the Ising Table 8 workload; pass --env ising");
+    let (env_flag, mut config_flag) = (args.get("env"), args.get("config"));
+    if env_flag.is_empty() && config_flag.is_empty() {
+        config_flag = "hypergrid_small"; // bare `train` keeps its old default
     }
-    if config.starts_with("hypergrid") {
-        let (d, h) = match config.as_str() {
-            "hypergrid_small" => (2, 8),
-            "hypergrid_2d_20" => (2, 20),
-            "hypergrid_4d_20" => (4, 20),
-            "hypergrid_8d_10" => (8, 10),
-            other => anyhow::bail!("unknown hypergrid config {other:?}"),
-        };
-        let env = HypergridEnv::new(d, h, HypergridReward::standard(h));
-        train_env(args, &config, loss, &env)
-    } else if config.starts_with("bitseq") {
-        let cfg = match config.as_str() {
-            "bitseq_small" => BitSeqConfig::small(),
-            "bitseq_120_8" => BitSeqConfig::paper(),
-            other => anyhow::bail!("unknown bitseq config {other:?} (bitseq_small | bitseq_120_8)"),
-        };
-        let (env, _modes) = bitseq_env(cfg);
-        train_env(args, &config, loss, &env)
-    } else if config.starts_with("ising") {
-        let n = ising_side(&config)?;
-        if args.get_bool("ebgfn") {
-            return train_ebgfn(args, &config, n);
-        }
-        let env = IsingEnv::lattice(n, IsingReward::torus(n, args.get_f64("sigma")));
-        train_env(args, &config, loss, &env)
-    } else {
-        anyhow::bail!(
-            "config {config:?} is outside the CLI families ({CLI_FAMILIES}); \
-             other environments have dedicated example binaries (see examples/)"
-        )
+    let (fam, config) = registry::resolve(env_flag, config_flag)?;
+    let loss = args.get("loss");
+    if args.get_bool("ebgfn") {
+        anyhow::ensure!(
+            fam.name == "ising",
+            "--ebgfn is the Ising Table 8 workload; pass --env ising"
+        );
+        return train_ebgfn(args, &config, registry::ising_side(&config)?);
+    }
+    registry::check_loss(fam, loss)?;
+    let params = EnvParams { seed: args.get_u64("seed"), sigma: args.get_f64("sigma") };
+    registry::with_env(&config, params, TrainDriver { args })
+}
+
+/// The CLI's [`EnvDriver`]: backend selection + replay wiring + the train
+/// loop, generic over whatever env the registry built.
+struct TrainDriver<'a> {
+    args: &'a Args,
+}
+
+impl EnvDriver for TrainDriver<'_> {
+    type Out = ();
+
+    fn drive<E>(
+        self,
+        env: &E,
+        extra: &ExtraSource<'_, E>,
+        _fam: &'static EnvFamily,
+        config: &str,
+    ) -> anyhow::Result<()>
+    where
+        E: VecEnv,
+        E::State: Clone,
+        E::Obj: PartialEq + std::fmt::Debug,
+    {
+        train_env(self.args, config, self.args.get("loss"), env, extra)
     }
 }
 
 /// Backend selection + optional replay wiring for one environment.
-fn train_env<E: VecEnv>(args: &Args, config: &str, loss: &str, env: &E) -> anyhow::Result<()> {
-    // The CLI rollout supplies no per-state extras; FLDB/MDB would silently
-    // train on zero-filled `extra` channels. Their workloads live in the
-    // example binaries that own the extra sources (bayes_structure, the
-    // phylo benches).
-    anyhow::ensure!(
-        !matches!(loss, "mdb" | "fldb"),
-        "--loss {loss} needs per-state extras the CLI rollout does not \
-         supply; use the dedicated example binaries (see examples/)"
-    );
+fn train_env<E: VecEnv>(
+    args: &Args,
+    config: &str,
+    loss: &str,
+    env: &E,
+    extra: &ExtraSource<'_, E>,
+) -> anyhow::Result<()> {
     let rc = run_config(config, loss);
     let iters = match args.get_u64("iters") {
         0 => rc.iters,
@@ -220,7 +189,7 @@ fn train_env<E: VecEnv>(args: &Args, config: &str, loss: &str, env: &E) -> anyho
             if let Some(cfg) = replay {
                 trainer = trainer.with_replay(cfg)?;
             }
-            run_train(trainer, config, loss, iters, args)
+            run_train(trainer, config, loss, iters, args, extra)
         }
         "xla" => {
             // The artifact manifest dictates batch/architecture; flag the
@@ -240,7 +209,7 @@ fn train_env<E: VecEnv>(args: &Args, config: &str, loss: &str, env: &E) -> anyho
             if let Some(cfg) = replay {
                 trainer = trainer.with_replay(cfg)?;
             }
-            run_train(trainer, config, loss, iters, args)
+            run_train(trainer, config, loss, iters, args, extra)
         }
         other => anyhow::bail!("unknown backend {other:?} (native | xla)"),
     }
@@ -389,6 +358,7 @@ fn run_train<E: VecEnv, B: Backend>(
     loss: &str,
     iters: u64,
     args: &Args,
+    extra: &ExtraSource<'_, E>,
 ) -> anyhow::Result<()> {
     let quiet = args.get_bool("quiet");
     let log_path = args.get("log");
@@ -406,7 +376,7 @@ fn run_train<E: VecEnv, B: Backend>(
     );
     let (mut first_window, mut last_window) = (Vec::new(), Vec::new());
     for i in 0..iters {
-        let (stats, _objs) = trainer.train_iter(&ExtraSource::None)?;
+        let (stats, _objs) = trainer.train_iter(extra)?;
         anyhow::ensure!(stats.loss.is_finite(), "loss diverged at iter {i}");
         if i < 10 {
             first_window.push(stats.loss as f64);

@@ -1,6 +1,6 @@
-//! Native objectives over a padded [`TrajBatch`]: TB, DB and MDB losses
-//! with analytic gradients w.r.t. the masked forward log-probabilities, the
-//! log-flow head, and `logZ`.
+//! Native objectives over a padded [`TrajBatch`]: TB, DB, SubTB, FLDB and
+//! MDB losses with analytic gradients w.r.t. the masked forward
+//! log-probabilities, the log-flow head, and `logZ`.
 //!
 //! Formulas mirror `python/compile/losses.py` exactly (same masks, same
 //! terminal-flow substitution, same normalizations); the gradients were
@@ -9,6 +9,11 @@
 //! uniform-over-legal-parents values recomputed from the staged
 //! `bwd_masks` — the same quantity the AOT graph gathers under
 //! `uniform_pb`.
+//!
+//! Extras conventions (the `extra` channel of the batch): FLDB reads
+//! per-state energies E(s_t) (terminal-padded, so `extra[len]` carries
+//! E(s_len)); MDB reads per-transition delta-scores in `extra[.., t < T]`
+//! (see [`TrajBatch::extra_to_deltas`]).
 
 use crate::coordinator::rollout::TrajBatch;
 
@@ -29,12 +34,15 @@ pub(crate) struct LossGrads {
 ///
 /// `fwd_logp` is `[B·T1, A]` (row `b·T1 + t`), `flow` is `[B·T1]`, both as
 /// produced by one forward pass over the batch's flattened states.
+/// `subtb_lambda` is the λ of the SubTB pair weights (ignored by the other
+/// objectives).
 pub(crate) fn loss_grads(
     loss: &str,
     batch: &TrajBatch,
     fwd_logp: &[f32],
     flow: &[f32],
     log_z: f64,
+    subtb_lambda: f64,
 ) -> anyhow::Result<LossGrads> {
     let b = batch.b;
     let t1 = batch.t1;
@@ -110,6 +118,89 @@ pub(crate) fn loss_grads(
             }
             loss_acc /= mm;
         }
+        // Sub-Trajectory Balance (eq. 5): λ^{k−j}-weighted residuals over
+        // every sub-trajectory j < k ≤ len, weights normalized per
+        // trajectory, F(s_len) ≡ R. The pair residual is
+        //   A[j,k] = f_j − f_k + Σ_{j≤t<k} (logP_F − logP_B),
+        // so d/d(transition t) accumulates over all pairs spanning t —
+        // implemented with a difference array + prefix sum.
+        "subtb" => {
+            for rb in 0..b {
+                let len = batch.length[rb] as usize;
+                // f[k] with terminal substitution, cum[k] prefix sums.
+                let mut f = vec![0f64; len + 1];
+                let mut cum = vec![0f64; len + 1];
+                for k in 0..=len {
+                    f[k] = if k == len { batch.log_reward[rb] as f64 } else { flow[rb * t1 + k] as f64 };
+                    if k < len {
+                        cum[k + 1] = cum[k] + f_lp(rb, k) - b_lp(rb, k);
+                    }
+                }
+                // λ^d table once per row (the pair loop below is the hot
+                // path; powi per pair would cost O(len²) pow calls).
+                let mut pow = vec![1f64; len + 1];
+                for d in 1..=len {
+                    pow[d] = pow[d - 1] * subtb_lambda;
+                }
+                // Σ_{j<k≤len} λ^{k−j} = Σ_d (len+1−d)·λ^d.
+                let mut wsum = 0f64;
+                for d in 1..=len {
+                    wsum += (len + 1 - d) as f64 * pow[d];
+                }
+                let wnorm = wsum.max(1e-9);
+                let mut dtrans = vec![0f64; len + 1];
+                for j in 0..len {
+                    for k in j + 1..=len {
+                        let w = pow[k - j] / wnorm;
+                        let a_jk = f[j] - f[k] + cum[k] - cum[j];
+                        loss_acc += w * a_jk * a_jk;
+                        let g = 2.0 * w * a_jk / b as f64;
+                        // j < k ≤ len, so f[j] is always a flow-head value;
+                        // f[len] is the (constant) log-reward.
+                        d_flow[rb * t1 + j] += g as f32;
+                        if k < len {
+                            d_flow[rb * t1 + k] -= g as f32;
+                        }
+                        dtrans[j] += g;
+                        dtrans[k] -= g;
+                    }
+                }
+                let mut run = 0f64;
+                for t in 0..len {
+                    run += dtrans[t];
+                    d_fwd[lp_idx(rb, t, f_act(rb, t))] += run as f32;
+                }
+            }
+            loss_acc /= b as f64;
+        }
+        // Forward-Looking DB (eq. 7): residual
+        //   log F̃(s_t) + logP_F − log F̃(s_{t+1}) − logP_B + E(s_{t+1}) − E(s_t)
+        // with F̃(terminal) ≡ 1 (log F̃ = 0); `extra` holds per-state
+        // energies, terminal-padded. Normalized like DB.
+        "fldb" => {
+            let mut m_count = 0usize;
+            for rb in 0..b {
+                m_count += batch.length[rb] as usize;
+            }
+            let mm = m_count.max(1) as f64;
+            for rb in 0..b {
+                let len = batch.length[rb] as usize;
+                for t in 0..len {
+                    let f_t = flow[rb * t1 + t] as f64;
+                    let f_next = if t + 1 == len { 0.0 } else { flow[rb * t1 + t + 1] as f64 };
+                    let de = batch.extra[rb * t1 + t + 1] as f64 - batch.extra[rb * t1 + t] as f64;
+                    let r = f_t + f_lp(rb, t) - f_next - b_lp(rb, t) + de;
+                    loss_acc += r * r;
+                    let g = (2.0 * r / mm) as f32;
+                    d_fwd[lp_idx(rb, t, f_act(rb, t))] += g;
+                    d_flow[rb * t1 + t] += g;
+                    if t + 1 != len {
+                        d_flow[rb * t1 + t + 1] -= g;
+                    }
+                }
+            }
+            loss_acc /= mm;
+        }
         // Modified DB (Deleu et al. 2022, delta-score form): over non-stop
         // transitions t < len − 1, with `extra` holding per-transition
         // Δscore values (see `TrajBatch::extra_to_deltas`).
@@ -138,8 +229,7 @@ pub(crate) fn loss_grads(
             loss_acc /= mm;
         }
         other => anyhow::bail!(
-            "native backend does not implement loss {other:?} (tb|db|mdb; \
-             subtb/fldb stay on the xla backend)"
+            "native backend does not implement loss {other:?} (tb|db|subtb|fldb|mdb)"
         ),
     }
     Ok(LossGrads { loss: loss_acc, d_fwd_logp: d_fwd, d_flow, d_logz: d_logz as f32 })

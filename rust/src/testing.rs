@@ -1,7 +1,12 @@
-//! Mini property-testing harness (the image has no `proptest`).
+//! Mini property-testing harness (the image has no `proptest`) and the
+//! [`check_vec_env`] conformance suite every [`VecEnv`] implementation must
+//! pass (instantiated for all nine environments in
+//! `tests/integration_envs.rs`; per-env unit tests reuse the same checks
+//! through `envs::testkit`).
 //!
-//! Provides seeded random-input generation with failure-seed reporting so a
-//! failing case can be replayed deterministically:
+//! The property harness provides seeded random-input generation with
+//! failure-seed reporting so a failing case can be replayed
+//! deterministically:
 //!
 //! ```no_run
 //! // (no_run: doctest binaries miss the libxla rpath set for normal targets)
@@ -69,6 +74,419 @@ where
 /// Generate a random f32 vector of length `n` in [lo, hi).
 pub fn gen_vec_f32(rng: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
     (0..n).map(|_| lo + (hi - lo) * rng.uniform_f32()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// VecEnv conformance suite
+// ---------------------------------------------------------------------------
+
+use crate::coordinator::rollout::{
+    backward_rollout_to_batch_with_policy, forward_rollout_with_policy, ExtraSource, RolloutCtx,
+};
+use crate::envs::{mask_count, VecEnv, NOOP};
+use crate::runtime::policy::{PolicyShape, UniformPolicy};
+
+/// The full [`VecEnv`] conformance suite: every invariant the rollout,
+/// replay and serve layers rely on, checked with `n` parallel instances
+/// from one base `seed`. Panics (with the failing env index) on violation.
+///
+/// Covers: EnvSpec shape agreement, step-mask consistency, exact
+/// forward/backward inversion, reset/reset_row equivalence,
+/// inject/extract round-trips, backward reachability of s0, the padded
+/// `TrajBatch` sentinel conventions after termination (including zeroed
+/// `extra` on skip/padded rows), and the forward→backward replay
+/// round-trip through [`backward_rollout_to_batch_with_policy`].
+pub fn check_vec_env<E>(env: &E, n: usize, seed: u64)
+where
+    E: VecEnv,
+    E::State: Clone,
+    E::Obj: PartialEq + std::fmt::Debug,
+{
+    check_spec_sanity(env);
+    check_forward_backward_inversion(env, n, seed);
+    check_masks_and_obs(env, n, seed.wrapping_add(1));
+    check_inject_extract_roundtrip(env, n, seed.wrapping_add(2));
+    check_backward_rollout_reaches_s0(env, n, seed.wrapping_add(3));
+    check_reset_row(env, n, seed.wrapping_add(4));
+    check_traj_padding_and_extras(env, n, seed.wrapping_add(5));
+    check_backward_replay_roundtrip(env, n, seed.wrapping_add(6));
+}
+
+/// EnvSpec shape agreement: all dimensions positive and within the fixed
+/// dispatch layout's assumptions.
+pub fn check_spec_sanity<E: VecEnv>(env: &E) {
+    let s = env.spec();
+    assert!(s.obs_dim > 0, "obs_dim must be positive");
+    assert!(s.n_actions > 0, "n_actions must be positive");
+    assert!(s.n_bwd_actions > 0, "n_bwd_actions must be positive");
+    assert!(s.t_max > 0, "t_max must be positive");
+}
+
+/// Roll random legal forward actions until all terminal; at every step
+/// check mask consistency and forward/backward inversion via snapshots.
+pub fn check_forward_backward_inversion<E>(env: &E, n: usize, seed: u64)
+where
+    E: VecEnv,
+    E::State: Clone,
+{
+    let mut rng = Rng::new(seed);
+    let spec = env.spec();
+    let mut state = env.reset(n);
+    for i in 0..n {
+        assert!(env.is_initial(&state, i), "reset not initial at {i}");
+        assert!(!env.is_terminal(&state, i), "reset terminal at {i}");
+    }
+    let mut steps = 0usize;
+    loop {
+        let all_done = (0..n).all(|i| env.is_terminal(&state, i));
+        if all_done {
+            break;
+        }
+        assert!(steps <= spec.t_max, "trajectory exceeded t_max={}", spec.t_max);
+        // Pick random legal actions (NOOP for terminal rows).
+        let mut actions = vec![NOOP; n];
+        for i in 0..n {
+            if !env.is_terminal(&state, i) {
+                actions[i] = env.random_fwd_action(&state, i, &mut rng);
+            }
+        }
+        let prev = state.clone();
+        let out = env.step(&mut state, &actions);
+        assert_eq!(out.done.len(), n);
+        // Inversion: applying the matching backward action must restore
+        // the previous state exactly.
+        let mut undone = state.clone();
+        let mut bwd = vec![NOOP; n];
+        for i in 0..n {
+            if !env.is_terminal(&prev, i) {
+                bwd[i] = env.get_backward_action(&prev, i, actions[i]);
+                let fwd_again = env.forward_action_of(&state, i, bwd[i]);
+                assert_eq!(
+                    fwd_again, actions[i],
+                    "forward_action_of does not invert get_backward_action at env {i}"
+                );
+            }
+        }
+        env.backward_step(&mut undone, &bwd);
+        for i in 0..n {
+            if !env.is_terminal(&prev, i) {
+                // Compare via obs encoding + flags (state types may
+                // carry caches that are allowed to differ).
+                let mut a = vec![0f32; spec.obs_dim];
+                let mut b = vec![0f32; spec.obs_dim];
+                env.obs_into(&prev, i, &mut a);
+                env.obs_into(&undone, i, &mut b);
+                assert_eq!(a, b, "backward_step did not invert step at env {i}");
+                assert_eq!(
+                    env.is_terminal(&prev, i),
+                    env.is_terminal(&undone, i),
+                    "terminal flag mismatch after inversion at env {i}"
+                );
+            }
+        }
+        steps += 1;
+    }
+    // Terminal rewards are finite.
+    for i in 0..n {
+        let obj = env.extract(&state, i);
+        let lr = env.log_reward_obj(&obj);
+        assert!(lr.is_finite(), "non-finite log reward at env {i}");
+    }
+}
+
+/// Masks must always admit at least one action for non-terminal states,
+/// and the obs encoding must have the declared length with finite values.
+pub fn check_masks_and_obs<E: VecEnv>(env: &E, n: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let spec = env.spec();
+    let mut state = env.reset(n);
+    let mut obs = vec![0f32; spec.obs_dim];
+    let mut mask = vec![false; spec.n_actions];
+    for _ in 0..spec.t_max {
+        let mut actions = vec![NOOP; n];
+        for i in 0..n {
+            env.obs_into(&state, i, &mut obs);
+            assert!(obs.iter().all(|v| v.is_finite()));
+            if !env.is_terminal(&state, i) {
+                env.fwd_mask_into(&state, i, &mut mask);
+                assert!(
+                    mask_count(&mask) > 0,
+                    "non-terminal state with empty action mask"
+                );
+                actions[i] = rng.uniform_masked(&mask) as i32;
+            }
+        }
+        env.step(&mut state, &actions);
+        if (0..n).all(|i| env.is_terminal(&state, i)) {
+            break;
+        }
+    }
+}
+
+/// inject_terminal(extract(s)) must be terminal, decode to the same
+/// object, and encode to the same observation.
+pub fn check_inject_extract_roundtrip<E>(env: &E, n: usize, seed: u64)
+where
+    E: VecEnv,
+    E::Obj: PartialEq + std::fmt::Debug,
+{
+    let mut rng = Rng::new(seed);
+    let mut state = env.reset(n);
+    for _ in 0..env.spec().t_max + 1 {
+        if (0..n).all(|i| env.is_terminal(&state, i)) {
+            break;
+        }
+        let mut actions = vec![NOOP; n];
+        for i in 0..n {
+            if !env.is_terminal(&state, i) {
+                actions[i] = env.random_fwd_action(&state, i, &mut rng);
+            }
+        }
+        env.step(&mut state, &actions);
+    }
+    let objs: Vec<E::Obj> = (0..n).map(|i| env.extract(&state, i)).collect();
+    let injected = env.inject_terminal(&objs);
+    for i in 0..n {
+        assert!(env.is_terminal(&injected, i), "injected state not terminal");
+        assert_eq!(env.extract(&injected, i), objs[i], "inject/extract mismatch");
+        let mut a = vec![0f32; env.spec().obs_dim];
+        let mut b = vec![0f32; env.spec().obs_dim];
+        env.obs_into(&state, i, &mut a);
+        env.obs_into(&injected, i, &mut b);
+        assert_eq!(a, b, "injected obs mismatch at env {i}");
+    }
+}
+
+/// [`VecEnv::reset_row`] must make a row indistinguishable from the same
+/// row of a fresh [`VecEnv::reset`] batch: drive rows an uneven number of
+/// steps (row `i` takes up to `i + 1`), refill every row, compare obs +
+/// masks + flags against a fresh batch, then roll the refilled batch to
+/// termination to prove it still functions.
+pub fn check_reset_row<E: VecEnv>(env: &E, n: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let spec = env.spec();
+    let fresh = env.reset(n);
+    let mut state = env.reset(n);
+    for t in 0..spec.t_max {
+        let mut actions = vec![NOOP; n];
+        let mut any = false;
+        for i in 0..n {
+            if t < i + 1 && !env.is_terminal(&state, i) {
+                actions[i] = env.random_fwd_action(&state, i, &mut rng);
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+        env.step(&mut state, &actions);
+    }
+    for i in 0..n {
+        env.reset_row(&mut state, i);
+    }
+    let mut obs_a = vec![0f32; spec.obs_dim];
+    let mut obs_b = vec![0f32; spec.obs_dim];
+    let mut fm_a = vec![false; spec.n_actions];
+    let mut fm_b = vec![false; spec.n_actions];
+    let mut bm_a = vec![false; spec.n_bwd_actions];
+    let mut bm_b = vec![false; spec.n_bwd_actions];
+    for i in 0..n {
+        assert!(env.is_initial(&state, i), "refilled row {i} not initial");
+        assert!(!env.is_terminal(&state, i), "refilled row {i} terminal");
+        env.obs_into(&state, i, &mut obs_a);
+        env.obs_into(&fresh, i, &mut obs_b);
+        assert_eq!(obs_a, obs_b, "refilled obs differs from fresh at row {i}");
+        env.fwd_mask_into(&state, i, &mut fm_a);
+        env.fwd_mask_into(&fresh, i, &mut fm_b);
+        assert_eq!(fm_a, fm_b, "refilled fwd mask differs at row {i}");
+        env.bwd_mask_into(&state, i, &mut bm_a);
+        env.bwd_mask_into(&fresh, i, &mut bm_b);
+        assert_eq!(bm_a, bm_b, "refilled bwd mask differs at row {i}");
+    }
+    // The refilled batch must behave exactly like a fresh one.
+    for _ in 0..spec.t_max + 1 {
+        if (0..n).all(|i| env.is_terminal(&state, i)) {
+            break;
+        }
+        let mut actions = vec![NOOP; n];
+        for i in 0..n {
+            if !env.is_terminal(&state, i) {
+                actions[i] = env.random_fwd_action(&state, i, &mut rng);
+            }
+        }
+        env.step(&mut state, &actions);
+    }
+    for i in 0..n {
+        assert!(env.is_terminal(&state, i), "refilled row {i} did not terminate");
+        let lr = env.log_reward_obj(&env.extract(&state, i));
+        assert!(lr.is_finite(), "refilled row {i} has non-finite reward");
+    }
+}
+
+/// Backward rollout from terminal states reaches the initial state in at
+/// most t_max steps, with legal backward actions throughout.
+pub fn check_backward_rollout_reaches_s0<E>(env: &E, n: usize, seed: u64)
+where
+    E: VecEnv,
+{
+    let mut rng = Rng::new(seed);
+    // Forward to terminal first.
+    let mut state = env.reset(n);
+    for _ in 0..env.spec().t_max + 1 {
+        if (0..n).all(|i| env.is_terminal(&state, i)) {
+            break;
+        }
+        let mut actions = vec![NOOP; n];
+        for i in 0..n {
+            if !env.is_terminal(&state, i) {
+                actions[i] = env.random_fwd_action(&state, i, &mut rng);
+            }
+        }
+        env.step(&mut state, &actions);
+    }
+    // Now walk backward.
+    let spec = env.spec();
+    let mut bmask = vec![false; spec.n_bwd_actions];
+    for _ in 0..2 * (spec.t_max + 1) {
+        if (0..n).all(|i| env.is_initial(&state, i)) {
+            break;
+        }
+        let mut actions = vec![NOOP; n];
+        for i in 0..n {
+            if !env.is_initial(&state, i) {
+                env.bwd_mask_into(&state, i, &mut bmask);
+                assert!(
+                    mask_count(&bmask) > 0,
+                    "non-initial state with empty backward mask"
+                );
+                actions[i] = rng.uniform_masked(&bmask) as i32;
+            }
+        }
+        env.backward_step(&mut state, &actions);
+    }
+    for i in 0..n {
+        assert!(
+            env.is_initial(&state, i),
+            "backward rollout did not reach s0 at env {i}"
+        );
+    }
+}
+
+/// Forward-rollout a [`TrajBatch`](crate::coordinator::rollout::TrajBatch)
+/// under the masked-uniform policy and check the padded-slot sentinel
+/// conventions every loss relies on: single-legal fwd masks, nonempty bwd
+/// masks, terminal-obs repetition — and that the `extra` channel stays
+/// **zero** everywhere when no [`ExtraSource`] is given (the stale-staging
+/// bug class: skip rows and padding slots must never carry leftover
+/// values).
+pub fn check_traj_padding_and_extras<E: VecEnv>(env: &E, n: usize, seed: u64) {
+    let spec = env.spec();
+    let shape = PolicyShape::of_env(env, n);
+    let mut policy = UniformPolicy::new(shape);
+    let mut ctx = RolloutCtx::for_shape(&shape);
+    let mut rng = Rng::new(seed);
+    let (batch, objs) = forward_rollout_with_policy(
+        env, &mut policy, &mut ctx, &mut rng, 0.1, &ExtraSource::None,
+    )
+    .expect("forward rollout");
+    assert_eq!(objs.len(), n);
+    assert!(batch.extra.iter().all(|&x| x == 0.0), "extra must stay zero without a source");
+    for i in 0..n {
+        let len = batch.length[i] as usize;
+        assert!(len >= 1 && len <= spec.t_max, "row {i}: length {len}");
+        let want = env.log_reward_obj(&objs[i]) as f32;
+        assert!(
+            (batch.log_reward[i] - want).abs() < 1e-4,
+            "row {i}: batch log_reward vs object"
+        );
+        for t in len..batch.t1 {
+            let fm = &batch.fwd_masks
+                [(i * batch.t1 + t) * spec.n_actions..(i * batch.t1 + t + 1) * spec.n_actions];
+            assert_eq!(fm[0], 1.0, "row {i} slot {t}: fm[0] sentinel");
+            assert_eq!(fm.iter().sum::<f32>(), 1.0, "row {i} slot {t}: single legal");
+            let bm = &batch.bwd_masks[(i * batch.t1 + t) * spec.n_bwd_actions
+                ..(i * batch.t1 + t + 1) * spec.n_bwd_actions];
+            assert!(
+                bm.iter().sum::<f32>() >= 1.0,
+                "row {i} slot {t}: bwd mask must admit at least one action"
+            );
+            let o_t = &batch.obs
+                [(i * batch.t1 + t) * spec.obs_dim..(i * batch.t1 + t + 1) * spec.obs_dim];
+            let o_len = &batch.obs
+                [(i * batch.t1 + len) * spec.obs_dim..(i * batch.t1 + len + 1) * spec.obs_dim];
+            assert_eq!(o_t, o_len, "row {i} slot {t}: padded obs repeats terminal");
+        }
+    }
+}
+
+/// Forward→backward replay round-trip: walk forward to terminal objects,
+/// assemble a backward-rollout batch from them, then replay the recorded
+/// forward actions from s0 — every recorded observation, action legality,
+/// fwd/bwd action pairing and the final object must match.
+pub fn check_backward_replay_roundtrip<E>(env: &E, n: usize, seed: u64)
+where
+    E: VecEnv,
+    E::Obj: PartialEq + std::fmt::Debug,
+{
+    let spec = env.spec();
+    let shape = PolicyShape::of_env(env, n);
+    let mut policy = UniformPolicy::new(shape);
+    let mut ctx = RolloutCtx::for_shape(&shape);
+    let mut rng = Rng::new(seed);
+    // Terminal objects from a forward rollout.
+    let (_fwd, objs) = forward_rollout_with_policy(
+        env, &mut policy, &mut ctx, &mut rng, 0.0, &ExtraSource::None,
+    )
+    .expect("forward rollout");
+    let (batch, _) = backward_rollout_to_batch_with_policy(
+        env, &mut policy, &mut ctx, &mut rng, &objs, &ExtraSource::None,
+    )
+    .expect("backward rollout");
+    let mut state = env.reset(n);
+    let mut obs = vec![0f32; spec.obs_dim];
+    let mut mask = vec![false; spec.n_actions];
+    for t in 0..spec.t_max {
+        for i in 0..n {
+            let len = batch.length[i] as usize;
+            if t > len {
+                continue;
+            }
+            env.obs_into(&state, i, &mut obs);
+            let slot = &batch.obs
+                [(i * batch.t1 + t) * spec.obs_dim..(i * batch.t1 + t + 1) * spec.obs_dim];
+            assert_eq!(obs.as_slice(), slot, "row {i} slot {t}: replayed obs");
+        }
+        let mut actions = vec![NOOP; n];
+        let mut any = false;
+        for i in 0..n {
+            let len = batch.length[i] as usize;
+            if t < len {
+                let a = batch.fwd_actions[i * (batch.t1 - 1) + t];
+                env.fwd_mask_into(&state, i, &mut mask);
+                assert!(mask[a as usize], "row {i} slot {t}: recorded action illegal");
+                assert_eq!(
+                    batch.bwd_actions[i * (batch.t1 - 1) + t],
+                    env.get_backward_action(&state, i, a),
+                    "row {i} slot {t}: bwd/fwd action pairing"
+                );
+                actions[i] = a;
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+        env.step(&mut state, &actions);
+    }
+    for i in 0..n {
+        assert!(env.is_terminal(&state, i), "row {i}: replay must terminate");
+        assert_eq!(env.extract(&state, i), objs[i], "row {i}: replay object");
+        let want = env.log_reward_obj(&objs[i]) as f32;
+        assert!(
+            (batch.log_reward[i] - want).abs() < 1e-4,
+            "row {i}: replayed log_reward"
+        );
+    }
 }
 
 /// Generate a random boolean mask of length `n` with at least one `true`.

@@ -180,3 +180,221 @@ fn ising_manifest_matches_and_trains() {
         assert!(o.iter().all(|&s| s == 1 || s == -1));
     }
 }
+
+// ---------------------------------------------------------------------------
+// Registry-driven, artifact-free suites (no `make artifacts` needed)
+// ---------------------------------------------------------------------------
+
+use gfnx::coordinator::registry::{self, EnvDriver, EnvFamily, EnvParams};
+use gfnx::coordinator::rollout::{forward_rollout_with_policy, RolloutCtx};
+use gfnx::runtime::policy::{PolicyShape, UniformPolicy};
+use gfnx::runtime::{NativeBackend, NativeConfig};
+use gfnx::util::rng::Rng;
+
+/// The VecEnv conformance suite (reset/reset_row equivalence, step-mask
+/// consistency, forward/backward inversion, inject/extract round-trips,
+/// TrajBatch sentinel padding + zero extras, forward→backward replay
+/// round-trip) over the default config of **all nine** registered
+/// environment families.
+#[test]
+fn conformance_suite_covers_all_nine_envs() {
+    struct Conformance;
+    impl EnvDriver for Conformance {
+        type Out = ();
+        fn drive<E>(
+            self,
+            env: &E,
+            _extra: &ExtraSource<'_, E>,
+            fam: &'static EnvFamily,
+            _config: &str,
+        ) -> anyhow::Result<()>
+        where
+            E: VecEnv,
+            E::State: Clone,
+            E::Obj: PartialEq + std::fmt::Debug,
+        {
+            // Name-hashed seed so every family's suite explores distinct
+            // walks (a length-based offset collides across families).
+            let seed = fam
+                .name
+                .bytes()
+                .fold(1000u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));
+            gfnx::testing::check_vec_env(env, 8, seed);
+            Ok(())
+        }
+    }
+    let fams = registry::families();
+    assert_eq!(fams.len(), 9, "the registry must cover all nine environments");
+    for f in fams {
+        registry::with_env(f.default_config, EnvParams::default(), Conformance)
+            .unwrap_or_else(|e| panic!("{}: {e}", f.name));
+    }
+}
+
+/// Every registered family trains artifact-free on the native backend with
+/// every objective the registry lists for it — the in-test form of
+/// `cargo run -- train --env <E> --loss <L> --backend native` (extras
+/// included: phylo trains fldb, bayesnet trains mdb).
+#[test]
+fn every_family_trains_every_registered_loss_natively() {
+    struct TrainProbe;
+    impl EnvDriver for TrainProbe {
+        type Out = ();
+        fn drive<E>(
+            self,
+            env: &E,
+            extra: &ExtraSource<'_, E>,
+            fam: &'static EnvFamily,
+            config: &str,
+        ) -> anyhow::Result<()>
+        where
+            E: VecEnv,
+            E::State: Clone,
+            E::Obj: PartialEq + std::fmt::Debug,
+        {
+            use gfnx::coordinator::explore::EpsSchedule;
+            for loss in fam.losses {
+                let cfg = NativeConfig::for_env(env, 4, loss).with_hidden(16);
+                let backend = NativeBackend::new(cfg, 5).unwrap();
+                let mut trainer =
+                    Trainer::with_backend(env, backend, 5, EpsSchedule::Constant(0.1))
+                        .unwrap();
+                for _ in 0..2 {
+                    let (stats, objs) = trainer
+                        .train_iter(extra)
+                        .unwrap_or_else(|e| panic!("{config}.{loss}: {e}"));
+                    assert!(stats.loss.is_finite(), "{config}.{loss}: loss not finite");
+                    assert_eq!(objs.len(), 4);
+                }
+            }
+            Ok(())
+        }
+    }
+    for f in registry::families() {
+        registry::with_env(f.default_config, EnvParams::default(), TrainProbe)
+            .unwrap_or_else(|e| panic!("{}: {e}", f.name));
+    }
+}
+
+/// Regression for the PR 1 stale-staging bug class, extras edition: with a
+/// live `ExtraSource`, rows that finish early must end with the
+/// *terminal* value in every padding slot (never a stale value from a
+/// later staging of other rows), and every real slot must hold exactly
+/// E(s_t) of the replayed trajectory.
+#[test]
+fn extra_channels_hold_exact_per_state_values_and_terminal_padding() {
+    use gfnx::envs::hypergrid::HypergridEnv;
+    use gfnx::reward::hypergrid::HypergridReward;
+    let env = HypergridEnv::new(2, 6, HypergridReward::standard(6));
+    let spec = env.spec();
+    let b = 16; // heterogeneous lengths across the batch
+    let shape = PolicyShape::of_env(&env, b);
+    let mut policy = UniformPolicy::new(shape);
+    let mut ctx = RolloutCtx::for_shape(&shape);
+    let mut rng = Rng::new(31);
+    let energy = |s: &<HypergridEnv<HypergridReward> as VecEnv>::State, i: usize| {
+        1.0 + 0.5 * s.coords_of(i).iter().map(|&c| c as f64).sum::<f64>()
+    };
+    let (batch, objs) = forward_rollout_with_policy(
+        &env, &mut policy, &mut ctx, &mut rng, 0.3, &ExtraSource::Energy(&energy),
+    )
+    .unwrap();
+    assert!(
+        batch.length.iter().any(|&l| (l as usize) < spec.t_max),
+        "need at least one early-terminating row for the padding check"
+    );
+    for i in 0..b {
+        let len = batch.length[i] as usize;
+        // Replay the recorded actions to recover E(s_t) at every slot.
+        let mut st = env.reset(1);
+        for t in 0..=len {
+            let want = energy(&st, 0) as f32;
+            assert!(
+                (batch.extra[i * batch.t1 + t] - want).abs() < 1e-6,
+                "row {i} slot {t}: extra {} != E(s_t) {want}",
+                batch.extra[i * batch.t1 + t]
+            );
+            if t < len {
+                env.step(&mut st, &[batch.fwd_actions[i * (batch.t1 - 1) + t]]);
+            }
+        }
+        // Padding slots repeat the terminal energy exactly.
+        let term = 1.0 + 0.5 * objs[i].iter().map(|&c| c as f32).sum::<f32>();
+        for t in len..batch.t1 {
+            assert!(
+                (batch.extra[i * batch.t1 + t] - term).abs() < 1e-6,
+                "row {i} slot {t}: padded extra must be the terminal value"
+            );
+        }
+    }
+}
+
+/// Replay batches accept MDB on its real environment: a frac = 1.0
+/// bayesnet replay batch carries per-state log-scores in `extra` and is
+/// bitwise-deterministic in seed + buffer (the fldb twin lives in
+/// `coordinator::trainer`'s unit tests).
+#[test]
+fn bayesnet_mdb_replay_is_deterministic_with_real_extras() {
+    struct MdbReplay;
+    impl EnvDriver for MdbReplay {
+        type Out = ();
+        fn drive<E>(
+            self,
+            env: &E,
+            extra: &ExtraSource<'_, E>,
+            _fam: &'static EnvFamily,
+            _config: &str,
+        ) -> anyhow::Result<()>
+        where
+            E: VecEnv,
+            E::State: Clone,
+            E::Obj: PartialEq + std::fmt::Debug,
+        {
+            use gfnx::coordinator::explore::EpsSchedule;
+            use gfnx::coordinator::trainer::ReplayConfig;
+            // Bank terminal objects from an on-policy warmup trainer, then
+            // compare two frac = 1.0 replay assemblies at the same seed.
+            let assemble = |seed: u64| {
+                let mk = || {
+                    let cfg = NativeConfig::for_env(env, 4, "mdb").with_hidden(16);
+                    NativeBackend::new(cfg, seed).unwrap()
+                };
+                let mut warm =
+                    Trainer::with_backend(env, mk(), seed, EpsSchedule::none()).unwrap();
+                let (_, warm_objs, _) = warm.assemble_batch(extra).unwrap();
+                let mut tr = Trainer::with_backend(env, mk(), seed, EpsSchedule::none())
+                    .unwrap()
+                    .with_replay(ReplayConfig::new(16, 1.0))
+                    .unwrap();
+                tr.seed_replay(warm_objs).unwrap();
+                let (batch, objs, replayed) = tr.assemble_batch(extra).unwrap();
+                assert!(replayed, "frac = 1.0 with a warm buffer must replay");
+                (batch, objs)
+            };
+            let (a, objs_a) = assemble(7);
+            let (b, objs_b) = assemble(7);
+            assert_eq!(objs_a, objs_b);
+            assert_eq!(a.fwd_actions, b.fwd_actions);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a.extra), bits(&b.extra));
+            assert_eq!(bits(&a.obs), bits(&b.obs));
+            // Real extras: the per-state log-scores are not all zero.
+            assert!(
+                a.extra.iter().any(|&x| x != 0.0),
+                "mdb replay batch must carry real log-score extras"
+            );
+            // And MDB trains on a replayed batch end-to-end.
+            let cfg = NativeConfig::for_env(env, 4, "mdb").with_hidden(16);
+            let backend = NativeBackend::new(cfg, 7).unwrap();
+            let mut tr = Trainer::with_backend(env, backend, 7, EpsSchedule::none())
+                .unwrap()
+                .with_replay(ReplayConfig::new(16, 1.0))
+                .unwrap();
+            tr.seed_replay(objs_a).unwrap();
+            let (stats, _) = tr.train_iter(extra).unwrap();
+            assert!(stats.loss.is_finite(), "mdb replay train step not finite");
+            Ok(())
+        }
+    }
+    registry::with_env("bayesnet_d5", EnvParams::default(), MdbReplay).unwrap();
+}

@@ -5,8 +5,7 @@
 //! exercise the PJRT-compiled graphs; without artifacts they run the same
 //! assertions against the pure-Rust [`NativeBackend`], so the suite no
 //! longer skips in artifact-less environments. Only the xla-specific
-//! assertions (artifact loading, subtb — which the native backend does not
-//! implement) keep the skip.
+//! assertions (artifact loading) keep the skip.
 
 use gfnx::coordinator::eval::log_p_theta_hat;
 use gfnx::coordinator::explore::EpsSchedule;
@@ -241,7 +240,7 @@ fn db_objective_trains() {
     let env = small_env();
     match artifacts_dir() {
         Some(dir) => {
-            // xla covers subtb too (native does not implement it).
+            // xla covers subtb through the artifact graphs.
             for loss in ["db", "subtb"] {
                 let art = Artifact::load(&dir, &format!("hypergrid_small.{loss}")).unwrap();
                 let trainer = Trainer::new(&env, &art, 11, EpsSchedule::none()).unwrap();
@@ -249,14 +248,18 @@ fn db_objective_trains() {
             }
         }
         None => {
-            let trainer = Trainer::with_backend(
-                &env,
-                native_backend(&env, "db", 11),
-                11,
-                EpsSchedule::none(),
-            )
-            .unwrap();
-            check_db_style_trains(trainer, "db", 300);
+            // Native covers subtb too (margins pre-validated by numpy
+            // simulation of the exact math, like the db case).
+            for loss in ["db", "subtb"] {
+                let trainer = Trainer::with_backend(
+                    &env,
+                    native_backend(&env, loss, 11),
+                    11,
+                    EpsSchedule::none(),
+                )
+                .unwrap();
+                check_db_style_trains(trainer, loss, 300);
+            }
         }
     }
 }
