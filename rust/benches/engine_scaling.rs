@@ -1,0 +1,197 @@
+//! engine_scaling — rollout throughput of the asynchronous actor–learner
+//! engine vs actor count, plus the serial `Trainer` comparator.
+//!
+//! One unit of work = one trajectory batch consumed by the learner (a
+//! fused train step's worth of rollouts), so `batches/s × B` is
+//! trajectories (rollouts) per second. The workload is deliberately
+//! **rollout-heavy** (long hypergrid_2d_20 trajectories, narrow trunk,
+//! single-threaded dispatch matmuls): rollouts cost `t_max` sequential
+//! dispatches + env stepping + RNG per batch while the fused step is one
+//! pass, so actor threads — not the learner — are the bottleneck the
+//! engine parallelizes away.
+//!
+//! Run:   cargo bench --bench engine_scaling
+//! Env:   GFNX_ENGINE_ITERS     learner steps per timed run (default 240)
+//!        GFNX_ENGINE_HIDDEN    MLP trunk width (default 16)
+//!        GFNX_ENGINE_BATCH     batch width B (default 16)
+//!        GFNX_ENGINE_PUBLISH   publish every K steps (default 4)
+//!        GFNX_BENCH_REPEATS    timed runs per row (default 3)
+//!
+//! Emits `BENCH_engine.json` (workspace root by default) via `BenchJson`.
+
+use gfnx::bench::harness::{env_usize, itps_json, BenchJson, BenchTable};
+use gfnx::coordinator::explore::EpsSchedule;
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::engine::{self, EngineConfig, EngineStats};
+use gfnx::envs::hypergrid::HypergridEnv;
+use gfnx::reward::hypergrid::HypergridReward;
+use gfnx::runtime::{NativeBackend, NativeConfig};
+use gfnx::util::json::Json;
+use gfnx::util::stats::ItPerSec;
+
+struct Work {
+    iters: u64,
+    hidden: usize,
+    batch: usize,
+    publish: u64,
+    repeats: usize,
+}
+
+fn bench_env() -> HypergridEnv<HypergridReward> {
+    HypergridEnv::new(2, 20, HypergridReward::standard(20))
+}
+
+fn backend(w: &Work, env: &HypergridEnv<HypergridReward>) -> NativeBackend {
+    // workers = 1: the engine's parallelism is actor threads, not matmul
+    // row blocks — nested pools would fight over the cores.
+    let cfg = NativeConfig::for_env(env, w.batch, "tb")
+        .with_hidden(w.hidden)
+        .with_workers(1);
+    NativeBackend::new(cfg, 0).expect("native backend")
+}
+
+/// One engine run; returns its stats (timing included).
+fn engine_run(w: &Work, actors: usize, iters: u64) -> EngineStats {
+    let env = bench_env();
+    let mut be = backend(w, &env);
+    let mut cfg = EngineConfig::new(actors, w.publish, 0);
+    cfg.queue_depth = 2 * actors;
+    engine::train(
+        &env,
+        &mut be,
+        EpsSchedule::none(),
+        &ExtraSource::None,
+        &cfg,
+        iters,
+        |_| Ok(()),
+    )
+    .expect("engine run")
+}
+
+/// Serial-`Trainer` comparator: same backend, same batch count, one thread.
+fn serial_run(w: &Work, iters: u64) -> f64 {
+    let env = bench_env();
+    let be = backend(w, &env);
+    let mut tr = Trainer::with_backend(&env, be, 0, EpsSchedule::none()).expect("trainer");
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let (s, _) = tr.train_iter(&ExtraSource::None).unwrap();
+        assert!(s.loss.is_finite());
+    }
+    iters as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let w = Work {
+        iters: env_usize("GFNX_ENGINE_ITERS", 240) as u64,
+        hidden: env_usize("GFNX_ENGINE_HIDDEN", 16),
+        batch: env_usize("GFNX_ENGINE_BATCH", 16),
+        publish: env_usize("GFNX_ENGINE_PUBLISH", 4) as u64,
+        repeats: env_usize("GFNX_BENCH_REPEATS", 3),
+    };
+    println!(
+        "engine_scaling: hypergrid_2d_20 / tb, hidden {}, batch {}, publish every {}, \
+         {} steps x {} runs",
+        w.hidden, w.batch, w.publish, w.iters, w.repeats
+    );
+
+    let actor_counts = [1usize, 2, 4];
+    let warmup = (w.iters / 4).max(20);
+
+    // Serial comparator.
+    serial_run(&w, warmup);
+    let serial_samples: Vec<f64> = (0..w.repeats).map(|_| serial_run(&w, w.iters)).collect();
+    let serial = ItPerSec::from_samples(&serial_samples);
+    println!("  serial trainer          : {serial} batches/s");
+
+    struct Row {
+        actors: usize,
+        rate: ItPerSec,
+        staleness_mean: f64,
+        staleness_max: u64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    for &actors in &actor_counts {
+        engine_run(&w, actors, warmup);
+        let mut samples = Vec::with_capacity(w.repeats);
+        let mut last: Option<EngineStats> = None;
+        for _ in 0..w.repeats {
+            let stats = engine_run(&w, actors, w.iters);
+            samples.push(stats.batches_per_sec());
+            last = Some(stats);
+        }
+        let stats = last.unwrap();
+        let rate = ItPerSec::from_samples(&samples);
+        println!(
+            "  engine {actors} actor(s)       : {rate} batches/s \
+             (staleness mean {:.2}, max {})",
+            stats.mean_staleness(),
+            stats.max_staleness()
+        );
+        rows.push(Row {
+            actors,
+            rate,
+            staleness_mean: stats.mean_staleness(),
+            staleness_max: stats.max_staleness(),
+        });
+    }
+
+    let base = rows[0].rate.mean;
+    let speedup_4v1 = rows.last().map(|r| r.rate.mean / base.max(1e-12)).unwrap_or(0.0);
+
+    let mut table = BenchTable::new(
+        "engine_scaling — actor-learner rollout throughput (hypergrid_2d_20 / tb)",
+        &["Mode", "Actors", "Batches/s", "Trajectories/s", "Speedup vs 1 actor", "Staleness (mean/max)"],
+    );
+    table.row(&[
+        "serial".to_string(),
+        "-".to_string(),
+        format!("{serial}"),
+        format!("{:.1}", serial.mean * w.batch as f64),
+        String::new(),
+        "-".to_string(),
+    ]);
+    for r in &rows {
+        table.row(&[
+            "engine".to_string(),
+            r.actors.to_string(),
+            format!("{}", r.rate),
+            format!("{:.1}", r.rate.mean * w.batch as f64),
+            format!("{:.2}x", r.rate.mean / base.max(1e-12)),
+            format!("{:.2}/{}", r.staleness_mean, r.staleness_max),
+        ]);
+    }
+    table.print();
+    println!("4-actor vs 1-actor rollout throughput: {speedup_4v1:.2}x");
+
+    let mut bj = BenchJson::new("engine");
+    bj.meta("env", Json::Str("hypergrid_2d_20".to_string()));
+    bj.meta("loss", Json::Str("tb".to_string()));
+    bj.meta("hidden", Json::Num(w.hidden as f64));
+    bj.meta("batch", Json::Num(w.batch as f64));
+    bj.meta("iters", Json::Num(w.iters as f64));
+    bj.meta("publish_every", Json::Num(w.publish as f64));
+    bj.meta("repeats", Json::Num(w.repeats as f64));
+    bj.meta("speedup_4v1", Json::Num(speedup_4v1));
+    bj.row(Json::obj(vec![
+        ("mode", Json::Str("serial".to_string())),
+        ("actors", Json::Num(0.0)),
+        ("batches_per_sec", itps_json(&serial)),
+        ("rollouts_per_sec", Json::Num(serial.mean * w.batch as f64)),
+    ]));
+    for r in &rows {
+        bj.row(Json::obj(vec![
+            ("mode", Json::Str("engine".to_string())),
+            ("actors", Json::Num(r.actors as f64)),
+            ("batches_per_sec", itps_json(&r.rate)),
+            ("rollouts_per_sec", Json::Num(r.rate.mean * w.batch as f64)),
+            ("staleness_mean", Json::Num(r.staleness_mean)),
+            ("staleness_max", Json::Num(r.staleness_max as f64)),
+        ]));
+    }
+    match bj.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_engine.json write failed: {e}"),
+    }
+}

@@ -104,11 +104,15 @@ impl BenchJson {
         self.rows.push(row);
     }
 
-    /// Output path: `$GFNX_BENCH_JSON_DIR/BENCH_<name>.json` (dir defaults
-    /// to `.`). The env var is read here, in bench binaries only — tests
-    /// use [`BenchJson::write_to`] and never touch process env.
+    /// Output path: `$GFNX_BENCH_JSON_DIR/BENCH_<name>.json`, defaulting to
+    /// the **workspace root** ([`workspace_root`]) rather than the process
+    /// CWD — `cargo bench` runs bench binaries with CWD = the package dir
+    /// (`rust/`), which used to scatter the JSONs there and leave the
+    /// repo-root perf trajectory empty. The env var is read here, in bench
+    /// binaries only — tests use [`BenchJson::write_to`] and never touch
+    /// process env.
     pub fn path(&self) -> PathBuf {
-        let dir = std::env::var("GFNX_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        let dir = std::env::var("GFNX_BENCH_JSON_DIR").unwrap_or_else(|_| workspace_root());
         PathBuf::from(dir).join(format!("BENCH_{}.json", self.name))
     }
 
@@ -148,6 +152,55 @@ impl BenchJson {
         std::fs::write(path, self.render())?;
         Ok(())
     }
+}
+
+/// The workspace root, where bench JSONs land by default so the perf
+/// trajectory accumulates at the repo root no matter what CWD cargo hands
+/// the bench binary. Resolution: the compile-time `CARGO_MANIFEST_DIR`
+/// parent when it still exists (the normal build-and-run-in-place case);
+/// for a relocated binary, the **outermost** directory above the CWD that
+/// holds a `Cargo.toml` (the workspace manifest when run from anywhere
+/// inside the checkout); `"."` as the last resort — results are never
+/// dropped on the floor for want of a directory.
+pub fn workspace_root() -> String {
+    let baked = concat!(env!("CARGO_MANIFEST_DIR"), "/..");
+    if std::path::Path::new(baked).is_dir() {
+        return baked.to_string();
+    }
+    let mut best: Option<PathBuf> = None;
+    let mut cur = std::env::current_dir().ok();
+    while let Some(d) = cur {
+        if d.join("Cargo.toml").exists() {
+            best = Some(d.clone());
+        }
+        cur = d.parent().map(|p| p.to_path_buf());
+    }
+    best.map(|b| b.to_string_lossy().into_owned()).unwrap_or_else(|| ".".to_string())
+}
+
+/// Validate one emitted `BENCH_*.json` document against the harness schema:
+/// parses as JSON and carries a string `"bench"`, an object `"meta"`, and a
+/// non-empty `"rows"` array of objects. Returns the bench name. The CLI's
+/// `check-bench` subcommand runs this over every artifact CI uploads, so a
+/// harness regression (or a bench emitting by hand) fails the build instead
+/// of silently corrupting the perf trajectory.
+pub fn check_bench_json(text: &str) -> anyhow::Result<String> {
+    let j = Json::parse(text).map_err(|e| anyhow::anyhow!("not valid JSON: {e}"))?;
+    let name = j.req_str("bench")?.to_string();
+    anyhow::ensure!(!name.is_empty(), "empty \"bench\" name");
+    anyhow::ensure!(
+        j.req("meta")?.as_obj().is_some(),
+        "\"meta\" must be an object"
+    );
+    let rows = j.req_arr("rows")?;
+    anyhow::ensure!(!rows.is_empty(), "\"rows\" is empty — the bench emitted no results");
+    for (i, row) in rows.iter().enumerate() {
+        anyhow::ensure!(
+            row.as_obj().map(|o| !o.is_empty()).unwrap_or(false),
+            "row {i} is not a non-empty object"
+        );
+    }
+    Ok(name)
 }
 
 /// A markdown results table, printed at the end of every bench binary.
@@ -250,6 +303,38 @@ mod tests {
         });
         assert_eq!(calls, 4);
         assert!(r.mean > 0.0);
+    }
+
+    #[test]
+    fn check_bench_json_accepts_harness_output_and_rejects_garbage() {
+        let mut bj = BenchJson::new("schema");
+        bj.meta("k", Json::Num(1.0));
+        bj.row(Json::obj(vec![("actors", Json::Num(4.0))]));
+        assert_eq!(check_bench_json(&bj.render()).unwrap(), "schema");
+        // Defects the schema check must catch.
+        assert!(check_bench_json("not json").is_err());
+        assert!(check_bench_json("{}").is_err(), "missing keys");
+        assert!(
+            check_bench_json(r#"{"bench":"x","meta":{},"rows":[]}"#).is_err(),
+            "empty rows"
+        );
+        assert!(
+            check_bench_json(r#"{"bench":"x","meta":{},"rows":[1]}"#).is_err(),
+            "non-object row"
+        );
+        assert!(
+            check_bench_json(r#"{"bench":"x","meta":1,"rows":[{"a":1}]}"#).is_err(),
+            "meta not an object"
+        );
+    }
+
+    #[test]
+    fn default_bench_path_is_the_workspace_root() {
+        // No GFNX_BENCH_JSON_DIR in the test env: the default must resolve
+        // to <repo>/BENCH_x.json, not the package CWD.
+        let root = std::path::PathBuf::from(workspace_root());
+        assert!(root.join("Cargo.toml").exists(), "workspace root has the root manifest");
+        assert!(root.join("rust").is_dir(), "workspace root contains the crate dir");
     }
 
     #[test]

@@ -16,13 +16,14 @@
 
 use super::rollout::{
     backward_rollout_score_with_policy, backward_rollout_to_batch_with_policy,
-    forward_rollout_with_policy, ExtraSource, RolloutCtx,
+    forward_rollout_with_policy, ExtraSource, RolloutCtx, TrajBatch,
 };
 use super::trainer::IterStats;
+use crate::engine::{EngineLearner, TaggedBatch};
 use crate::envs::ising::IsingEnv;
 use crate::envs::VecEnv;
 use crate::reward::RewardModule;
-use crate::runtime::backend::{Backend, BackendPolicy, XlaBackend};
+use crate::runtime::backend::{Backend, BackendPolicy, SnapshotBackend, XlaBackend};
 use crate::runtime::Artifact;
 use crate::util::linalg::Mat;
 use crate::util::rng::Rng;
@@ -99,17 +100,8 @@ impl<'a, B: Backend> EbGfnTrainer<'a, B> {
             "EB-GFN trains the GFlowNet with TB (paper §B.5); got loss {:?}",
             backend.loss_name()
         );
-        let spec = env.spec();
         let shape = backend.shape();
-        anyhow::ensure!(
-            spec.obs_dim == shape.obs_dim
-                && spec.n_actions == shape.n_actions
-                && spec.n_bwd_actions == shape.n_bwd_actions
-                && spec.t_max == shape.t_max,
-            "Ising env spec {:?} does not match backend shape {:?}",
-            spec,
-            shape
-        );
+        crate::runtime::policy::check_env_shape(&env.spec(), &shape)?;
         anyhow::ensure!(
             dataset.iter().all(|x| x.len() == env.d),
             "dataset objects must have D = {} spins",
@@ -129,70 +121,108 @@ impl<'a, B: Backend> EbGfnTrainer<'a, B> {
         })
     }
 
+    /// One fixed-shape forward rollout from the current policy.
+    fn forward_batch(&mut self) -> anyhow::Result<(TrajBatch, Vec<Vec<i8>>)> {
+        let mut policy = BackendPolicy { backend: &self.backend };
+        forward_rollout_with_policy(
+            self.env, &mut policy, &mut self.ctx, &mut self.rng, 0.0, &ExtraSource::None,
+        )
+    }
+
+    /// Backward trajectories from dataset samples (the (1 − α) GFN branch).
+    fn data_backward_batch(&mut self) -> anyhow::Result<(TrajBatch, Vec<Vec<i8>>)> {
+        let b = self.backend.shape().batch;
+        let data: Vec<Vec<i8>> = (0..b)
+            .map(|_| {
+                let k = self.rng.below(self.dataset.len());
+                self.dataset[k].clone()
+            })
+            .collect();
+        let mut policy = BackendPolicy { backend: &self.backend };
+        backward_rollout_to_batch_with_policy(
+            self.env, &mut policy, &mut self.ctx, &mut self.rng, &data, &ExtraSource::None,
+        )
+    }
+
     /// One EB-GFN iteration: GFN TB step + CD update of J.
     pub fn train_iter(&mut self) -> anyhow::Result<IterStats> {
-        let b = self.backend.shape().batch;
-
         // ---- (1) GFlowNet update. ------------------------------------
         let use_forward = self.rng.bernoulli(self.alpha);
-        let (batch, objs) = {
-            let mut policy = BackendPolicy { backend: &self.backend };
-            if use_forward {
-                forward_rollout_with_policy(
-                    self.env, &mut policy, &mut self.ctx, &mut self.rng, 0.0,
-                    &ExtraSource::None,
-                )?
-            } else {
-                // Backward trajectories from data samples.
-                let data: Vec<Vec<i8>> = (0..b)
-                    .map(|_| self.dataset[self.rng.below(self.dataset.len())].clone())
-                    .collect();
-                backward_rollout_to_batch_with_policy(
-                    self.env, &mut policy, &mut self.ctx, &mut self.rng, &data,
-                    &ExtraSource::None,
-                )?
-            }
-        };
+        let (batch, objs) =
+            if use_forward { self.forward_batch()? } else { self.data_backward_batch()? };
         let (loss, log_z) = self.backend.train_step(&batch)?;
 
+        // Negative phase: fresh P_θ samples (K = D ⇒ full regeneration);
+        // the forward GFN batch doubles as the negative batch.
+        let (neg_batch, neg_objs) =
+            if use_forward { (batch, objs) } else { self.forward_batch()? };
+        self.finish_iter(loss, log_z, neg_batch, neg_objs)
+    }
+
+    /// One EB-GFN iteration whose **forward samples are supplied by the
+    /// caller** — the asynchronous-engine entry point
+    /// ([`EbGfnLearner`]): actor threads stream forward rollouts sampled
+    /// from possibly-stale policy snapshots, and this method uses them both
+    /// for the α GFN branch and as the CD negative phase. Staleness only
+    /// makes the negative samples more off-policy, which the MH filter of
+    /// eq. (20) already corrects through the `log_pf`/`log_pb` the batch
+    /// carries from its sampling-time policy.
+    pub fn train_iter_from(
+        &mut self,
+        fwd_batch: TrajBatch,
+        fwd_objs: Vec<Vec<i8>>,
+    ) -> anyhow::Result<IterStats> {
+        let use_forward = self.rng.bernoulli(self.alpha);
+        let (loss, log_z) = if use_forward {
+            self.backend.train_step(&fwd_batch)?
+        } else {
+            let (batch, _objs) = self.data_backward_batch()?;
+            self.backend.train_step(&batch)?
+        };
+        self.finish_iter(loss, log_z, fwd_batch, fwd_objs)
+    }
+
+    /// The shared tail of an iteration: CD update of J against the given
+    /// negative batch, MH-filtered per eq. (20).
+    fn finish_iter(
+        &mut self,
+        loss: f32,
+        log_z: f32,
+        neg_batch: TrajBatch,
+        neg_objs: Vec<Vec<i8>>,
+    ) -> anyhow::Result<IterStats> {
+        let b = self.backend.shape().batch;
+        anyhow::ensure!(
+            neg_objs.len() == b,
+            "negative batch carries {} objects for batch width {b}",
+            neg_objs.len()
+        );
         // ---- (2) Contrastive-divergence update of J. -------------------
         // Positive phase: dataset samples.
         let d = self.env.d;
         let mut pos = Mat::zeros(d, d);
-        let pos_batch: Vec<&Vec<i8>> = (0..b)
-            .map(|_| &self.dataset[self.rng.below(self.dataset.len())])
+        let pos_batch: Vec<Vec<i8>> = (0..b)
+            .map(|_| {
+                let k = self.rng.below(self.dataset.len());
+                self.dataset[k].clone()
+            })
             .collect();
         for x in &pos_batch {
             accumulate_outer(&mut pos, x);
         }
         pos.scale(1.0 / b as f64);
 
-        // Negative phase: fresh P_θ samples (K = D ⇒ full regeneration),
-        // MH-filtered against the paired positive samples (eq. 20).
-        let (neg_batch, neg_objs) = if use_forward {
-            (batch, objs)
-        } else {
-            let mut policy = BackendPolicy { backend: &self.backend };
-            forward_rollout_with_policy(
-                self.env, &mut policy, &mut self.ctx, &mut self.rng, 0.0,
-                &ExtraSource::None,
-            )?
-        };
         let mut neg = Mat::zeros(d, d);
         let mut accepted = 0usize;
         // Score the data side of the MH ratio with backward rollouts.
         let data_scores = {
             let mut policy = BackendPolicy { backend: &self.backend };
             backward_rollout_score_with_policy(
-                self.env,
-                &mut policy,
-                &mut self.ctx,
-                &mut self.rng,
-                &pos_batch.iter().map(|x| (*x).clone()).collect::<Vec<_>>(),
+                self.env, &mut policy, &mut self.ctx, &mut self.rng, &pos_batch,
             )?
         };
         for i in 0..b {
-            let x = pos_batch[i];
+            let x = &pos_batch[i];
             let xp = &neg_objs[i];
             let (log_pf_x, log_pb_x, _) = data_scores[i];
             let log_pf_xp = neg_batch.log_pf[i];
@@ -236,19 +266,70 @@ impl<'a, B: Backend> EbGfnTrainer<'a, B> {
     /// Paper Table 8 metric: −log RMSE(J_φ, J_true) over off-diagonal
     /// entries.
     pub fn neg_log_rmse(&self, j_true: &Mat) -> f64 {
-        let j = self.reward.j.read().unwrap();
-        let d = j.rows;
-        let mut a = Vec::with_capacity(d * d - d);
-        let mut b = Vec::with_capacity(d * d - d);
-        for r in 0..d {
-            for c in 0..d {
-                if r != c {
-                    a.push(j.get(r, c));
-                    b.push(j_true.get(r, c));
-                }
+        neg_log_rmse_of(&self.reward, j_true)
+    }
+}
+
+/// −log RMSE(J_φ, J_true) through a shared reward handle — lets the engine's
+/// publish hook probe J recovery while the learner owns the trainer.
+pub fn neg_log_rmse_of(reward: &SharedIsingReward, j_true: &Mat) -> f64 {
+    let j = reward.j.read().unwrap();
+    let d = j.rows;
+    let mut a = Vec::with_capacity(d * d - d);
+    let mut b = Vec::with_capacity(d * d - d);
+    for r in 0..d {
+        for c in 0..d {
+            if r != c {
+                a.push(j.get(r, c));
+                b.push(j_true.get(r, c));
             }
         }
-        -rmse(&a, &b).max(1e-12).ln()
+    }
+    -rmse(&a, &b).max(1e-12).ln()
+}
+
+/// [`EngineLearner`] adapter over an [`EbGfnTrainer`]: the engine's actor
+/// threads supply the forward-sample stream ([`EbGfnTrainer::train_iter_from`])
+/// while the CD phase, the J update and the backward-from-data GFN branch
+/// stay on the learner thread. `train --env ising --ebgfn --actors N` runs
+/// through this.
+pub struct EbGfnLearner<'a, 'b, B: SnapshotBackend> {
+    pub tr: &'b mut EbGfnTrainer<'a, B>,
+}
+
+impl<B: SnapshotBackend> EngineLearner<IsingEnv<SharedIsingReward>>
+    for EbGfnLearner<'_, '_, B>
+{
+    type Snap = B::Snapshot;
+
+    fn snapshot(&self) -> B::Snapshot {
+        self.tr.backend.snapshot_policy()
+    }
+
+    fn steps(&self) -> u64 {
+        self.tr.backend.steps()
+    }
+
+    fn learn(&mut self, tagged: &mut TaggedBatch<Vec<i8>>) -> anyhow::Result<IterStats> {
+        anyhow::ensure!(
+            !tagged.replayed,
+            "EB-GFN actors must run on-policy (engine replay is not part of the \
+             Table 8 dynamics)"
+        );
+        // The iteration consumes the batch (it doubles as the CD negative
+        // phase); leave an empty husk behind.
+        let batch = std::mem::replace(&mut tagged.batch, TrajBatch::new(1, 1, 1, 1, 1));
+        let objs = std::mem::take(&mut tagged.objs);
+        self.tr.train_iter_from(batch, objs)
+    }
+
+    fn checkpoint(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        // A checkpoint would capture the GFN but silently lose J_φ; refuse
+        // rather than resume into a half-restored model.
+        anyhow::bail!(
+            "EB-GFN checkpointing is not supported (J_φ is not serialized); \
+             cannot save to {path:?}"
+        )
     }
 }
 

@@ -82,3 +82,108 @@ pub fn reward_correlation<E: VecEnv, B: Backend + ?Sized>(
     let log_r: Vec<f64> = test_set.iter().map(|o| env.log_reward_obj(o)).collect();
     Ok(pearson(&log_r, &log_p))
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::hypergrid::HypergridEnv;
+    use crate::envs::{VecEnv, NOOP};
+    use crate::reward::hypergrid::HypergridReward;
+    use crate::runtime::{Backend, NativeBackend, NativeConfig};
+
+    /// 1-D hypergrid: exactly one trajectory reaches each object ([c] via
+    /// c increments then stop), which turns the Monte-Carlo estimator into
+    /// an exact quantity we can hand-compute.
+    fn env() -> HypergridEnv<HypergridReward> {
+        HypergridEnv::new(1, 4, HypergridReward::standard(4))
+    }
+
+    fn backend(e: &HypergridEnv<HypergridReward>, seed: u64) -> NativeBackend {
+        NativeBackend::new(NativeConfig::for_env(e, 4, "tb").with_hidden(8), seed).unwrap()
+    }
+
+    /// log P_θ([c]) computed by hand: walk the unique path s₀ → [c] → stop
+    /// and sum the dispatched policy's log-probabilities of the forced
+    /// actions (action 0 = increment, action 1 = stop for d = 1).
+    fn exact_log_p(
+        e: &HypergridEnv<HypergridReward>,
+        be: &NativeBackend,
+        c: usize,
+    ) -> f64 {
+        let spec = e.spec();
+        let mut state = e.reset(4);
+        let mut ctx = RolloutCtx::new(4, spec.obs_dim, spec.n_actions, spec.n_bwd_actions);
+        let mut lp = 0f64;
+        for step in 0..=c {
+            ctx.stage(e, &state, &[false; 4]);
+            let (f, _b, _fl) =
+                be.policy_dispatch(&ctx.obs, &ctx.fwd_mask, &ctx.bwd_mask).unwrap();
+            let a: i32 = if step < c { 0 } else { e.stop_action() };
+            lp += f[a as usize] as f64; // row 0
+            if a == e.stop_action() {
+                break;
+            }
+            let mut actions = vec![NOOP; 4];
+            actions[0] = a;
+            e.step(&mut state, &actions);
+        }
+        lp
+    }
+
+    /// On a single-path env every backward sample is the same trajectory
+    /// with log P_B = 0, so P̂_θ(x) = P_F(τ(x)) exactly — for any number
+    /// of samples — and must match the hand-walked policy product.
+    #[test]
+    fn log_p_theta_hat_is_exact_on_single_path_env() {
+        let e = env();
+        let be = backend(&e, 3);
+        let mut ctx = RolloutCtx::for_shape(&be.shape());
+        for c in 0..4usize {
+            let want = exact_log_p(&e, &be, c);
+            for n_samples in [1usize, 3, 8] {
+                let mut rng = Rng::new(7 + n_samples as u64);
+                let got =
+                    log_p_theta_hat(&e, &be, &mut ctx, &mut rng, &vec![c as i32], n_samples)
+                        .unwrap();
+                assert!(
+                    (got - want).abs() < 1e-5,
+                    "c = {c}, n = {n_samples}: {got} vs hand-computed {want}"
+                );
+            }
+        }
+    }
+
+    /// The batched estimator agrees with the per-object one (same exact
+    /// values on the single-path env, so no Monte-Carlo slack needed).
+    #[test]
+    fn batched_estimator_matches_per_object_calls() {
+        let e = env();
+        let be = backend(&e, 11);
+        let mut ctx = RolloutCtx::for_shape(&be.shape());
+        let objs: Vec<Vec<i32>> = (0..4).map(|c| vec![c]).collect();
+        let mut rng = Rng::new(5);
+        let batch = log_p_theta_hat_batch(&e, &be, &mut ctx, &mut rng, &objs, 2).unwrap();
+        assert_eq!(batch.len(), 4);
+        for (c, got) in batch.iter().enumerate() {
+            let want = exact_log_p(&e, &be, c);
+            assert!((got - want).abs() < 1e-5, "obj [{c}]: {got} vs {want}");
+        }
+    }
+
+    /// The correlation metric reduces to a hand-computable Pearson on the
+    /// single-path env: ρ(log R, log P̂) with both vectors known exactly.
+    #[test]
+    fn reward_correlation_matches_hand_computed_pearson() {
+        let e = env();
+        let be = backend(&e, 19);
+        let mut ctx = RolloutCtx::for_shape(&be.shape());
+        let objs: Vec<Vec<i32>> = (0..4).map(|c| vec![c]).collect();
+        let log_r: Vec<f64> = objs.iter().map(|o| e.log_reward_obj(o)).collect();
+        let log_p: Vec<f64> = (0..4).map(|c| exact_log_p(&e, &be, c)).collect();
+        let want = pearson(&log_r, &log_p);
+        let mut rng = Rng::new(23);
+        let got = reward_correlation(&e, &be, &mut ctx, &mut rng, &objs, 3).unwrap();
+        assert!(got.is_finite() && (-1.0..=1.0).contains(&got));
+        assert!((got - want).abs() < 1e-6, "{got} vs hand-computed {want}");
+    }
+}

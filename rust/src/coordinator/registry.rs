@@ -295,6 +295,14 @@ impl Default for EnvParams {
 /// CLI trainer, benches and the conformance tests. `drive` receives the
 /// concrete env, the family's canonical [`ExtraSource`] (filled for
 /// phylo/bayesnet, `None` elsewhere), and the resolved names.
+///
+/// The bounds are the superset the CLI's engine/serve paths need: every
+/// registered env is an owned-data value (`Clone + Send + Sync + 'static`),
+/// so drivers can clone one into a [`SamplerService`] worker or share it
+/// across the engine's actor threads; implementors that need less may
+/// declare weaker bounds on their `drive`.
+///
+/// [`SamplerService`]: crate::serve::SamplerService
 pub trait EnvDriver {
     type Out;
     fn drive<E>(
@@ -305,9 +313,9 @@ pub trait EnvDriver {
         config: &str,
     ) -> anyhow::Result<Self::Out>
     where
-        E: VecEnv,
+        E: VecEnv + Clone + Send + Sync + 'static,
         E::State: Clone,
-        E::Obj: PartialEq + std::fmt::Debug;
+        E::Obj: PartialEq + std::fmt::Debug + Send + 'static;
 }
 
 /// Build the concrete environment for `config` (generating any dataset it

@@ -19,14 +19,19 @@ use crate::util::rng::Rng;
 use xla::Literal;
 
 /// Per-state scalar injected into the batch's `extra` channel.
+///
+/// The closures are `Sync` so one source can be shared by the engine's
+/// actor threads ([`crate::engine`]), which evaluate extras concurrently
+/// during rollouts; plain single-threaded callers are unaffected (a closure
+/// capturing only `&T` of `Sync` data is itself `Sync`).
 pub enum ExtraSource<'a, E: VecEnv> {
     /// Fill with zeros (TB/DB/SubTB).
     None,
     /// Per-state energy E(s) (FLDB; e.g. accumulated parsimony).
-    Energy(&'a dyn Fn(&E::State, usize) -> f64),
+    Energy(&'a (dyn Fn(&E::State, usize) -> f64 + Sync)),
     /// Per-state log R(s) for every-state-terminal envs (MDB); the batch
     /// assembly converts consecutive differences into delta-scores.
-    StateLogReward(&'a dyn Fn(&E::State, usize) -> f64),
+    StateLogReward(&'a (dyn Fn(&E::State, usize) -> f64 + Sync)),
 }
 
 /// A padded trajectory batch in the artifact's train-step layout.

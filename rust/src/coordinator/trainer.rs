@@ -35,6 +35,7 @@ use super::rollout::{
 };
 use crate::envs::VecEnv;
 use crate::runtime::backend::{Backend, BackendPolicy, XlaBackend};
+use crate::runtime::policy::BatchPolicy;
 use crate::runtime::Artifact;
 use crate::serve::{sample_stream, traj_seed, TrajJob};
 use crate::util::rng::Rng;
@@ -67,6 +68,58 @@ impl ReplayConfig {
     /// starting as soon as anything is buffered.
     pub fn new(cap: usize, frac: f64) -> ReplayConfig {
         ReplayConfig { cap, frac, min_fill: 1 }
+    }
+}
+
+/// One iteration's batch assembly against an arbitrary policy and an
+/// optional replay shard: an on-policy forward rollout, or — with
+/// probability `frac` once the buffer holds `min_fill` objects — backward
+/// rollouts from buffered high-reward objects. This is the exact logic
+/// behind [`Trainer::assemble_batch`], factored out so the asynchronous
+/// engine's actor threads ([`crate::engine`]) execute the *same* code path
+/// and RNG-draw order — the engine's bitwise sync-mode parity guarantee
+/// depends on both callers sharing this function.
+pub fn assemble_batch_with_policy<E: VecEnv, P: BatchPolicy + ?Sized>(
+    env: &E,
+    policy: &mut P,
+    ctx: &mut RolloutCtx,
+    rng: &mut Rng,
+    eps: f64,
+    replay: Option<(&ReplayConfig, &mut RingBuffer<E::Obj>)>,
+    extra: &ExtraSource<'_, E>,
+) -> anyhow::Result<(TrajBatch, Vec<E::Obj>, bool)> {
+    let use_replay = match &replay {
+        Some((cfg, buf)) if buf.len() >= cfg.min_fill.max(1) => rng.bernoulli(cfg.frac),
+        _ => false,
+    };
+    if use_replay {
+        let (_, buf) = replay.unwrap();
+        let b = policy.shape().batch;
+        let mut drawn: Vec<E::Obj> = Vec::with_capacity(b);
+        for _ in 0..b {
+            // Warm buffer (checked above); sample with replacement.
+            drawn.push(buf.sample(rng).unwrap().clone());
+        }
+        let (batch, objs) =
+            backward_rollout_to_batch_with_policy(env, policy, ctx, rng, &drawn, extra)?;
+        Ok((batch, objs, true))
+    } else {
+        let (batch, objs) = forward_rollout_with_policy(env, policy, ctx, rng, eps, extra)?;
+        Ok((batch, objs, false))
+    }
+}
+
+/// Bank the high-reward half of an on-policy batch into a replay buffer
+/// (descending log-reward, index-stable tie-break). Shared by
+/// [`Trainer::train_iter`] and the engine's actors; uses no RNG, so it
+/// never perturbs the assembly stream above.
+pub fn bank_top_half<Obj: Clone>(buf: &mut RingBuffer<Obj>, batch: &TrajBatch, objs: &[Obj]) {
+    let mut idx: Vec<usize> = (0..objs.len()).collect();
+    idx.sort_by(|&x, &y| {
+        batch.log_reward[y].total_cmp(&batch.log_reward[x]).then(x.cmp(&y))
+    });
+    for &i in idx.iter().take(objs.len().div_ceil(2)) {
+        buf.push(objs[i].clone());
     }
 }
 
@@ -108,17 +161,8 @@ impl<'a, E: VecEnv, B: Backend> Trainer<'a, E, B> {
         seed: u64,
         explore: EpsSchedule,
     ) -> anyhow::Result<Self> {
-        let spec = env.spec();
         let shape = backend.shape();
-        anyhow::ensure!(
-            spec.obs_dim == shape.obs_dim
-                && spec.n_actions == shape.n_actions
-                && spec.n_bwd_actions == shape.n_bwd_actions
-                && spec.t_max == shape.t_max,
-            "env spec {:?} does not match backend shape {:?}",
-            spec,
-            shape
-        );
+        crate::runtime::policy::check_env_shape(&env.spec(), &shape)?;
         let mdb_deltas = backend.loss_name() == "mdb";
         Ok(Trainer {
             env,
@@ -176,47 +220,23 @@ impl<'a, E: VecEnv, B: Backend> Trainer<'a, E, B> {
         extra: &ExtraSource<'_, E>,
     ) -> anyhow::Result<(TrajBatch, Vec<E::Obj>, bool)> {
         let eps = self.explore.at(self.step);
-        let use_replay = match &self.replay {
-            Some((cfg, buf)) if buf.len() >= cfg.min_fill.max(1) => {
-                self.rng.bernoulli(cfg.frac)
-            }
-            _ => false,
-        };
-        if use_replay {
-            let b = self.backend.shape().batch;
-            let mut drawn: Vec<E::Obj> = Vec::with_capacity(b);
-            {
-                let (_, buf) = self.replay.as_ref().unwrap();
-                for _ in 0..b {
-                    // Warm buffer (checked above); sample with replacement.
-                    drawn.push(buf.sample(&mut self.rng).unwrap().clone());
-                }
-            }
-            let mut policy = BackendPolicy { backend: &self.backend };
-            let (batch, objs) = backward_rollout_to_batch_with_policy(
-                self.env, &mut policy, &mut self.ctx, &mut self.rng, &drawn, extra,
-            )?;
-            Ok((batch, objs, true))
-        } else {
-            let mut policy = BackendPolicy { backend: &self.backend };
-            let (batch, objs) = forward_rollout_with_policy(
-                self.env, &mut policy, &mut self.ctx, &mut self.rng, eps, extra,
-            )?;
-            Ok((batch, objs, false))
-        }
+        let mut policy = BackendPolicy { backend: &self.backend };
+        assemble_batch_with_policy(
+            self.env,
+            &mut policy,
+            &mut self.ctx,
+            &mut self.rng,
+            eps,
+            self.replay.as_mut().map(|(cfg, buf)| (&*cfg, buf)),
+            extra,
+        )
     }
 
     /// Bank the high-reward half of an on-policy batch into the replay
-    /// buffer (descending log-reward, index-stable tie-break).
+    /// buffer (see [`bank_top_half`]).
     fn replay_push(&mut self, batch: &TrajBatch, objs: &[E::Obj]) {
         let Some((_, buf)) = self.replay.as_mut() else { return };
-        let mut idx: Vec<usize> = (0..objs.len()).collect();
-        idx.sort_by(|&x, &y| {
-            batch.log_reward[y].total_cmp(&batch.log_reward[x]).then(x.cmp(&y))
-        });
-        for &i in idx.iter().take(objs.len().div_ceil(2)) {
-            buf.push(objs[i].clone());
-        }
+        bank_top_half(buf, batch, objs);
     }
 
     /// One training iteration; returns stats and the sampled terminal

@@ -1,0 +1,187 @@
+//! A std-only **bounded** MPSC channel with close semantics — the
+//! actor → learner trajectory pipe.
+//!
+//! The serve queue ([`crate::serve::queue::Queue`]) is unbounded because a
+//! service must absorb bursts; the engine wants the opposite: a bounded
+//! channel is the engine's **backpressure**. Actors that outrun the
+//! learner block in [`Bounded::push_blocking`] instead of piling up
+//! batches sampled from ever-older policy versions, which keeps the
+//! staleness of consumed batches near `queue_depth / publish_every + 1`
+//! publishes (queue residency; a descheduled actor mid-rollout can add a
+//! little more, which the learner's staleness histogram makes visible).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct State<T> {
+    items: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+}
+
+struct Inner<T> {
+    state: Mutex<State<T>>,
+    /// Signaled when space frees up (producers wait here).
+    space: Condvar,
+    /// Signaled when an item arrives or the channel closes (consumer waits
+    /// here).
+    items: Condvar,
+}
+
+/// A bounded multi-producer channel; clones share the same channel.
+pub struct Bounded<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Bounded<T> {
+    fn clone(&self) -> Self {
+        Bounded { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Bounded<T> {
+    /// A channel holding at most `cap` in-flight items (`cap` ≥ 1).
+    pub fn new(cap: usize) -> Bounded<T> {
+        assert!(cap >= 1, "bounded channel needs capacity ≥ 1");
+        Bounded {
+            inner: Arc::new(Inner {
+                state: Mutex::new(State { items: VecDeque::new(), cap, closed: false }),
+                space: Condvar::new(),
+                items: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Enqueue, blocking while the channel is full. Returns `false`
+    /// (dropping the item) once the channel is closed — the producers'
+    /// shutdown signal.
+    pub fn push_blocking(&self, item: T) -> bool {
+        let mut g = self.inner.state.lock().unwrap();
+        loop {
+            if g.closed {
+                return false;
+            }
+            if g.items.len() < g.cap {
+                g.items.push_back(item);
+                self.inner.items.notify_one();
+                return true;
+            }
+            g = self.inner.space.wait(g).unwrap();
+        }
+    }
+
+    /// Dequeue, blocking until an item arrives or the channel is closed
+    /// *and* drained (`None`).
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut g = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.inner.space.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.inner.items.wait(g).unwrap();
+        }
+    }
+
+    /// Close the channel: future pushes fail, blocked producers and the
+    /// consumer wake immediately.
+    pub fn close(&self) {
+        let mut g = self.inner.state.lock().unwrap();
+        g.closed = true;
+        self.inner.space.notify_all();
+        self.inner.items.notify_all();
+    }
+
+    /// Current backlog depth.
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_within_capacity() {
+        let c = Bounded::new(4);
+        for i in 0..4 {
+            assert!(c.push_blocking(i));
+        }
+        assert_eq!(c.len(), 4);
+        for i in 0..4 {
+            assert_eq!(c.pop_blocking(), Some(i));
+        }
+    }
+
+    #[test]
+    fn push_blocks_at_capacity_until_pop() {
+        let c = Bounded::new(1);
+        assert!(c.push_blocking(0));
+        let pushed = Arc::new(AtomicUsize::new(0));
+        let (c2, p2) = (c.clone(), Arc::clone(&pushed));
+        let t = std::thread::spawn(move || {
+            assert!(c2.push_blocking(1));
+            p2.store(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(pushed.load(Ordering::SeqCst), 0, "push must block while full");
+        assert_eq!(c.pop_blocking(), Some(0));
+        t.join().unwrap();
+        assert_eq!(pushed.load(Ordering::SeqCst), 1);
+        assert_eq!(c.pop_blocking(), Some(1));
+    }
+
+    #[test]
+    fn close_wakes_blocked_producer_and_consumer() {
+        let c: Bounded<u32> = Bounded::new(1);
+        assert!(c.push_blocking(7));
+        let c2 = c.clone();
+        let producer = std::thread::spawn(move || c2.push_blocking(8));
+        let c3 = c.clone();
+        let closer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            c3.close();
+        });
+        // The blocked producer must observe the close and give up.
+        assert!(!producer.join().unwrap());
+        closer.join().unwrap();
+        // The backlog drains, then the consumer sees the end.
+        assert_eq!(c.pop_blocking(), Some(7));
+        assert_eq!(c.pop_blocking(), None);
+        assert!(!c.push_blocking(9), "push after close must fail");
+    }
+
+    #[test]
+    fn multi_producer_items_all_arrive() {
+        let c: Bounded<usize> = Bounded::new(2);
+        let producers: Vec<_> = (0..3)
+            .map(|p| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for i in 0..50 {
+                        assert!(c.push_blocking(p * 50 + i));
+                    }
+                })
+            })
+            .collect();
+        let mut got = Vec::new();
+        while got.len() < 150 {
+            got.push(c.pop_blocking().unwrap());
+        }
+        for t in producers {
+            t.join().unwrap();
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..150).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,135 @@
+//! The versioned policy hub: the single-writer, many-reader publication
+//! point between the learner and its actors (and any serve hot-swap
+//! subscribers).
+//!
+//! The learner publishes an owned policy snapshot under a monotonically
+//! increasing version tag; actors poll [`PolicyHub::latest`] (one mutex
+//! lock + `Arc` clone — O(1), no parameter copy) and re-clone the network
+//! only when the version actually moved. The deterministic synchronous
+//! mode rides on [`PolicyHub::wait_for_version`], a condvar rendezvous that
+//! blocks an actor until the learner's publish catches up.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One published policy: parameters frozen at `steps` learner steps.
+pub struct Snapshot<P> {
+    /// Publish counter (0 = the pre-training initial snapshot).
+    pub version: u64,
+    /// Learner train steps taken when this snapshot was captured. Actors
+    /// use it as the exploration-schedule position, so ε anneals by
+    /// *training progress*, not by per-actor rollout counts.
+    pub steps: u64,
+    pub policy: P,
+}
+
+struct HubState<P> {
+    snap: Arc<Snapshot<P>>,
+    closed: bool,
+}
+
+/// The publication slot (see the module docs).
+pub struct PolicyHub<P> {
+    state: Mutex<HubState<P>>,
+    cv: Condvar,
+}
+
+impl<P> PolicyHub<P> {
+    /// A hub holding the initial snapshot (version 0, captured at `steps`
+    /// learner steps — nonzero when resuming from a checkpoint).
+    pub fn new(policy: P, steps: u64) -> PolicyHub<P> {
+        PolicyHub {
+            state: Mutex::new(HubState {
+                snap: Arc::new(Snapshot { version: 0, steps, policy }),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Publish a new snapshot. `version` must be strictly greater than the
+    /// current one (the learner is the only writer).
+    pub fn publish(&self, snap: Arc<Snapshot<P>>) {
+        let mut g = self.state.lock().unwrap();
+        debug_assert!(snap.version > g.snap.version, "hub versions must increase");
+        g.snap = snap;
+        self.cv.notify_all();
+    }
+
+    /// The latest snapshot (cheap: lock + `Arc` clone).
+    pub fn latest(&self) -> Arc<Snapshot<P>> {
+        Arc::clone(&self.state.lock().unwrap().snap)
+    }
+
+    /// Current version without cloning the snapshot.
+    pub fn version(&self) -> u64 {
+        self.state.lock().unwrap().snap.version
+    }
+
+    /// Block until the published version reaches `version` (the sync-mode
+    /// rendezvous). Returns `None` once the hub closes before (or while)
+    /// waiting — the actor's shutdown signal.
+    pub fn wait_for_version(&self, version: u64) -> Option<Arc<Snapshot<P>>> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if g.snap.version >= version {
+                return Some(Arc::clone(&g.snap));
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Close the hub: wakes every waiter; `wait_for_version` returns
+    /// `None` for unreached versions from now on.
+    pub fn close(&self) {
+        let mut g = self.state.lock().unwrap();
+        g.closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latest_tracks_publishes() {
+        let hub = PolicyHub::new(10u32, 0);
+        assert_eq!(hub.version(), 0);
+        assert_eq!(hub.latest().policy, 10);
+        hub.publish(Arc::new(Snapshot { version: 1, steps: 5, policy: 20 }));
+        let s = hub.latest();
+        assert_eq!((s.version, s.steps, s.policy), (1, 5, 20));
+    }
+
+    #[test]
+    fn wait_for_version_rendezvous() {
+        let hub = Arc::new(PolicyHub::new(0u32, 0));
+        // Already-reached versions return immediately.
+        assert_eq!(hub.wait_for_version(0).unwrap().policy, 0);
+        let h2 = Arc::clone(&hub);
+        let t = std::thread::spawn(move || h2.wait_for_version(2).map(|s| s.policy));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        hub.publish(Arc::new(Snapshot { version: 1, steps: 1, policy: 1 }));
+        hub.publish(Arc::new(Snapshot { version: 2, steps: 2, policy: 2 }));
+        assert_eq!(t.join().unwrap(), Some(2));
+    }
+
+    #[test]
+    fn close_releases_waiters() {
+        let hub: Arc<PolicyHub<u32>> = Arc::new(PolicyHub::new(0, 0));
+        let h2 = Arc::clone(&hub);
+        let t = std::thread::spawn(move || h2.wait_for_version(99));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        hub.close();
+        assert!(t.join().unwrap().is_none());
+        // Reached versions still resolve after close.
+        assert!(hub.wait_for_version(0).is_some());
+    }
+}

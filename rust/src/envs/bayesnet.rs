@@ -30,6 +30,7 @@ pub struct BayesNetState {
 }
 
 /// The DAG environment; `R` scores adjacency bitmasks.
+#[derive(Clone, Debug)]
 pub struct BayesNetEnv<R> {
     pub d: usize,
     pub reward: R,

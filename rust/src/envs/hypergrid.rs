@@ -30,6 +30,7 @@ impl HypergridState {
 }
 
 /// The hypergrid environment. `R` scores terminal coordinate vectors.
+#[derive(Clone, Debug)]
 pub struct HypergridEnv<R> {
     pub dim: usize,
     pub side: usize,

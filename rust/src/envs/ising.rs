@@ -30,6 +30,7 @@ impl IsingState {
 }
 
 /// The Ising environment; `R` scores full configurations.
+#[derive(Clone)]
 pub struct IsingEnv<R> {
     /// Number of sites D = N².
     pub d: usize,

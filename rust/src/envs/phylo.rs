@@ -47,6 +47,7 @@ pub struct PhyloState {
 }
 
 /// The phylogenetics environment.
+#[derive(Clone, Debug)]
 pub struct PhyloEnv {
     pub n_species: usize,
     pub alignment: Arc<Alignment>,

@@ -53,6 +53,7 @@ impl SeqState {
 }
 
 /// The generic sequence environment. `R` scores completed token vectors.
+#[derive(Clone, Debug)]
 pub struct SeqEnv<R> {
     pub scheme: SeqScheme,
     /// Vocabulary size m (symbols are `0..m`).

@@ -7,8 +7,11 @@
 //!
 //! - **L3 (this crate)** — the coordinator: vectorized GFlowNet environments,
 //!   decoupled reward modules, dataset generators, success metrics, rollout /
-//!   training orchestration, the continuous-batching sampling service
-//!   ([`serve`]), and the throughput benchmark harness.
+//!   training orchestration, the asynchronous actor–learner engine
+//!   ([`engine`]: versioned policy snapshots, bounded actor→learner
+//!   channel, live serve hot-swap, checkpointed resume), the
+//!   continuous-batching sampling service ([`serve`]), and the throughput
+//!   benchmark harness.
 //! - **L2 (`python/compile`, build-time only, xla backend)** — policy
 //!   networks and the TB/DB/SubTB/FLDB/MDB objectives in pure JAX,
 //!   AOT-lowered to HLO text.
@@ -52,6 +55,7 @@ pub mod data;
 pub mod metrics;
 pub mod runtime;
 pub mod coordinator;
+pub mod engine;
 pub mod serve;
 pub mod bench;
 

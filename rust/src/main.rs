@@ -9,9 +9,13 @@
 //!                --backend <native|xla>  [--iters N] [--hidden H]
 //!                [--layers L] [--workers W]
 //!                [--replay-cap N --replay-frac P]   off-policy replay
+//!                [--actors N --publish-every K | --sync]   async engine
+//!                [--serve [--serve-samples N]]   live hot-swapped serving
+//!                [--save <ckpt> --resume <ckpt>]   checkpointed resume
 //!                [--ebgfn [--sigma S] [--samples N]]   EB-GFN (ising only)
 //!   list-configs
 //!   info         --config <name> --loss <l>   (print the artifact manifest)
+//!   check-bench  <BENCH_*.json...>   (validate emitted bench documents)
 //!
 //! The default `--backend native` trains end-to-end in pure Rust with no
 //! AOT artifacts; `--backend xla` replays the fused AOT graphs (requires
@@ -20,16 +24,19 @@
 //! `coordinator::registry`, so adding an environment there updates every
 //! CLI surface at once.
 
+use gfnx::bench::harness::check_bench_json;
 use gfnx::coordinator::config::{artifacts_dir, run_config};
-use gfnx::coordinator::ebgfn::{EbGfnTrainer, SharedIsingReward};
+use gfnx::coordinator::ebgfn::{EbGfnLearner, EbGfnTrainer, SharedIsingReward};
 use gfnx::coordinator::registry::{self, EnvDriver, EnvFamily, EnvParams};
 use gfnx::coordinator::rollout::ExtraSource;
 use gfnx::coordinator::trainer::{ReplayConfig, Trainer};
 use gfnx::data::ising_mcmc::generate_ising_dataset;
+use gfnx::engine::{self, EngineConfig, EngineStats};
 use gfnx::envs::ising::IsingEnv;
 use gfnx::envs::VecEnv;
 use gfnx::reward::ising::torus_adjacency;
-use gfnx::runtime::{Artifact, Backend, NativeBackend, NativeConfig};
+use gfnx::runtime::{Artifact, Backend, NativeBackend, NativeConfig, NativePolicy};
+use gfnx::serve::SamplerService;
 use gfnx::util::cli::{Args, Cli};
 use gfnx::util::linalg::Mat;
 use gfnx::util::logging::MetricsLog;
@@ -43,7 +50,7 @@ fn main() {
         "gfnx",
         "Rust+JAX+Pallas GFlowNet benchmark infrastructure (gfnx reproduction)",
     )
-    .positional("command", "train | list-configs | info")
+    .positional("command", "train | list-configs | info | check-bench <BENCH_*.json...>")
     .flag(
         "config",
         "",
@@ -61,6 +68,23 @@ fn main() {
     .flag("workers", "0", "dispatch worker threads, 0 = all cores (native backend)")
     .flag("replay-cap", "0", "off-policy replay buffer capacity (0 = on-policy only)")
     .flag("replay-frac", "0.5", "probability an iteration trains on replay batches")
+    .flag(
+        "actors",
+        "0",
+        "actor threads for async actor-learner training (0 = serial loop; \
+         native backend only)",
+    )
+    .flag("publish-every", "1", "learner steps between policy snapshot publishes (engine)")
+    .flag("queue-depth", "0", "bounded actor->learner channel depth (0 = 2x actors)")
+    .switch(
+        "sync",
+        "deterministic synchronous engine mode (1 actor, publish-every-step, \
+         bitwise-identical to the serial loop)",
+    )
+    .switch("serve", "serve the improving policy while training (engine hot-swap)")
+    .flag("serve-samples", "64", "objects sampled from the served policy after training")
+    .flag("save", "", "checkpoint path (engine: saved on every publish; serial: at end)")
+    .flag("resume", "", "resume training from a checkpoint file (native backend)")
     .switch("ebgfn", "EB-GFN joint EBM+GFN training (ising only; paper Table 8)")
     .flag("sigma", "0.2", "true Ising coupling strength (ebgfn / ising reward)")
     .flag("samples", "2000", "EB-GFN dataset size (paper Table 9)")
@@ -86,6 +110,7 @@ fn main() {
             info(config, args.get("loss"))
         }
         "train" => train(&args),
+        "check-bench" => check_bench(&args),
         other => Err(anyhow::anyhow!("unknown command {other:?}")),
     };
     if let Err(e) = result {
@@ -158,40 +183,131 @@ impl EnvDriver for TrainDriver<'_> {
         config: &str,
     ) -> anyhow::Result<()>
     where
-        E: VecEnv,
+        E: VecEnv + Clone + Send + Sync + 'static,
         E::State: Clone,
-        E::Obj: PartialEq + std::fmt::Debug,
+        E::Obj: PartialEq + std::fmt::Debug + Send + 'static,
     {
         train_env(self.args, config, self.args.get("loss"), env, extra)
     }
 }
 
-/// Backend selection + optional replay wiring for one environment.
-fn train_env<E: VecEnv>(
+/// Engine topology from the CLI flags. `None` = the serial training loop
+/// (`--actors 0`, the default, without `--sync`).
+fn engine_config(args: &Args) -> anyhow::Result<Option<EngineConfig>> {
+    let actors = args.get_usize("actors");
+    let sync = args.get_bool("sync");
+    if actors == 0 && !sync {
+        return Ok(None);
+    }
+    let mut cfg = EngineConfig::new(
+        if actors == 0 { 1 } else { actors },
+        args.get_u64("publish-every"),
+        args.get_u64("seed"),
+    );
+    cfg.queue_depth = args.get_usize("queue-depth");
+    cfg.sync = sync;
+    cfg.replay = replay_config(args)?;
+    let save = args.get("save");
+    if !save.is_empty() {
+        cfg.checkpoint = Some(std::path::PathBuf::from(save));
+    }
+    Ok(Some(cfg))
+}
+
+/// Fresh (or `--resume`d) native backend shaped for `env`.
+fn native_backend_for<E: VecEnv>(
+    args: &Args,
+    env: &E,
+    loss: &str,
+) -> anyhow::Result<NativeBackend> {
+    let resume = args.get("resume");
+    if resume.is_empty() {
+        return NativeBackend::new(native_config(args, env, loss), args.get_u64("seed"));
+    }
+    let backend = NativeBackend::load_checkpoint(std::path::Path::new(resume))?;
+    let shape = backend.shape();
+    gfnx::runtime::policy::check_env_shape(&env.spec(), &shape)
+        .map_err(|e| anyhow::anyhow!("checkpoint {resume:?} was trained on a different env: {e}"))?;
+    anyhow::ensure!(
+        backend.loss_name() == loss,
+        "checkpoint {resume:?} trains loss {:?}, but --loss {loss} was requested",
+        backend.loss_name()
+    );
+    let mut backend = backend;
+    // Worker count is a property of the resuming host, not of the model:
+    // a checkpoint from a 32-core box must not oversubscribe a 2-core one.
+    // Model-state knobs (batch/hidden/lr/...) stay with the checkpoint.
+    backend.config_mut().workers = match args.get_usize("workers") {
+        0 => default_workers(),
+        w => w,
+    };
+    println!(
+        "resumed from {resume} at {} steps (Adam t = {}, batch {}, hidden {})",
+        backend.steps(),
+        backend.adam_t(),
+        shape.batch,
+        backend.net().cfg.hidden
+    );
+    Ok(backend)
+}
+
+/// Backend selection + optional replay/engine wiring for one environment.
+fn train_env<E>(
     args: &Args,
     config: &str,
     loss: &str,
     env: &E,
     extra: &ExtraSource<'_, E>,
-) -> anyhow::Result<()> {
+) -> anyhow::Result<()>
+where
+    E: VecEnv + Clone + Send + Sync + 'static,
+    E::Obj: Send + 'static,
+{
     let rc = run_config(config, loss);
     let iters = match args.get_u64("iters") {
         0 => rc.iters,
         n => n,
     };
     let seed = args.get_u64("seed");
-    let replay = replay_config(args)?;
 
     match args.get("backend") {
         "native" => {
-            let backend = NativeBackend::new(native_config(args, env, loss), seed)?;
+            let backend = native_backend_for(args, env, loss)?;
+            if let Some(ecfg) = engine_config(args)? {
+                return run_engine(args, config, loss, env, extra, backend, rc.explore, iters, ecfg);
+            }
+            anyhow::ensure!(
+                !args.get_bool("serve"),
+                "--serve rides on the engine's snapshot publishes; pass --actors N (or --sync)"
+            );
             let mut trainer = Trainer::with_backend(env, backend, seed, rc.explore)?;
-            if let Some(cfg) = replay {
+            // Resume continues the exploration schedule where the
+            // checkpoint stopped (a fresh backend reports 0 steps, so this
+            // is a no-op for new runs); the engine path gets the same via
+            // the hub's snapshot step counter.
+            trainer.step = trainer.backend.steps();
+            if let Some(cfg) = replay_config(args)? {
                 trainer = trainer.with_replay(cfg)?;
             }
-            run_train(trainer, config, loss, iters, args, extra)
+            run_train(&mut trainer, config, loss, iters, args, extra)?;
+            let save = args.get("save");
+            if !save.is_empty() {
+                trainer.backend.save_checkpoint(std::path::Path::new(save))?;
+                println!("saved checkpoint to {save}");
+            }
+            Ok(())
         }
         "xla" => {
+            anyhow::ensure!(
+                engine_config(args)?.is_none(),
+                "--actors/--sync need owned policy snapshots; the xla backend's PJRT \
+                 state is thread-local — use --backend native"
+            );
+            anyhow::ensure!(
+                args.get("save").is_empty() && args.get("resume").is_empty(),
+                "--save/--resume are native-backend checkpoints"
+            );
+            anyhow::ensure!(!args.get_bool("serve"), "--serve requires --backend native");
             // The artifact manifest dictates batch/architecture; flag the
             // native-only knobs so a user doesn't misread the run.
             if args.get_usize("batch") != 16
@@ -206,13 +322,151 @@ fn train_env<E: VecEnv>(
             }
             let art = Artifact::load(&artifacts_dir(), &format!("{config}.{loss}"))?;
             let mut trainer = Trainer::new(env, &art, seed, rc.explore)?;
-            if let Some(cfg) = replay {
+            if let Some(cfg) = replay_config(args)? {
                 trainer = trainer.with_replay(cfg)?;
             }
-            run_train(trainer, config, loss, iters, args, extra)
+            run_train(&mut trainer, config, loss, iters, args, extra)
         }
         other => anyhow::bail!("unknown backend {other:?} (native | xla)"),
     }
+}
+
+/// Asynchronous actor–learner training (CLI `--actors N [--serve] [--save]`).
+#[allow(clippy::too_many_arguments)]
+fn run_engine<E>(
+    args: &Args,
+    config: &str,
+    loss: &str,
+    env: &E,
+    extra: &ExtraSource<'_, E>,
+    mut backend: NativeBackend,
+    explore: gfnx::coordinator::explore::EpsSchedule,
+    iters: u64,
+    cfg: EngineConfig,
+) -> anyhow::Result<()>
+where
+    E: VecEnv + Clone + Send + Sync + 'static,
+    E::Obj: Send + 'static,
+{
+    let name = format!("{config}.{loss}");
+    let svc = spawn_serve::<E>(args, env, backend.to_policy());
+    println!(
+        "training {name} on the async engine: {} actor(s), publish every {}, {}{}",
+        cfg.actors,
+        cfg.publish_every,
+        if cfg.sync { "sync (deterministic)" } else { "async" },
+        if svc.is_some() { ", serving live" } else { "" }
+    );
+    let stats = engine::train(env, &mut backend, explore, extra, &cfg, iters, |snap| {
+        if let Some(svc) = &svc {
+            svc.hot_swap(Box::new(snap.policy.clone()));
+        }
+        Ok(())
+    })?;
+    report_engine(&name, &stats, args)?;
+    finish_serve(args, svc)
+}
+
+/// Spawn the live sampling service when `--serve` is set (the worker's env
+/// is an owned clone; shared-reward envs share their `Arc`s, so EB-GFN's
+/// improving J is visible to served rewards too).
+fn spawn_serve<E>(
+    args: &Args,
+    env: &E,
+    initial: NativePolicy,
+) -> Option<SamplerService<E::Obj>>
+where
+    E: VecEnv + Clone + Send + Sync + 'static,
+    E::Obj: Send + 'static,
+{
+    if !args.get_bool("serve") {
+        return None;
+    }
+    Some(SamplerService::spawn(env.clone(), move || {
+        Ok(Box::new(initial) as Box<dyn gfnx::runtime::BatchPolicy>)
+    }))
+}
+
+/// Post-training serve probe: draw `--serve-samples` objects from the live
+/// (hot-swapped) policy and print the service counters.
+fn finish_serve<Obj: Send + 'static>(
+    args: &Args,
+    svc: Option<SamplerService<Obj>>,
+) -> anyhow::Result<()> {
+    let Some(svc) = svc else { return Ok(()) };
+    let n = args.get_usize("serve-samples");
+    let outs = svc.sample(n, args.get_u64("seed") ^ 0x5EED_CAFE)?;
+    let mean_lr =
+        outs.iter().map(|o| o.log_reward).sum::<f64>() / outs.len().max(1) as f64;
+    let snap = svc.stats();
+    println!(
+        "served {} objects from the final policy: mean log-reward {mean_lr:.3}; \
+         {} hot-swap(s) applied, {} rejected, occupancy {:.2}",
+        outs.len(),
+        snap.policy_swaps,
+        snap.swaps_rejected,
+        snap.occupancy()
+    );
+    // Swaps only apply at a policy dispatch, so a zero-sample probe cannot
+    // have applied one — only treat "no swap" as a failure when the probe
+    // actually dispatched.
+    anyhow::ensure!(
+        n == 0 || snap.policy_swaps > 0,
+        "--serve ran but no snapshot was ever hot-swapped into the service"
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+/// Engine run summary: loss trajectory, staleness accounting, throughput.
+fn report_engine(name: &str, stats: &EngineStats, args: &Args) -> anyhow::Result<()> {
+    let mean = |v: &[f32]| {
+        v.iter().map(|&x| x as f64).sum::<f64>() / v.len().max(1) as f64
+    };
+    let w = stats.losses.len().min(10);
+    let head = mean(&stats.losses[..w]);
+    let tail = mean(&stats.losses[stats.losses.len() - w..]);
+    println!(
+        "trained {name} for {} steps / {} publishes: loss {head:.4} (first {w}) -> \
+         {tail:.4} (last {w}), logZ {:.3}",
+        stats.iters, stats.publishes, stats.final_log_z
+    );
+    println!(
+        "  throughput {:.1} batches/s; staleness mean {:.2} / max {} publishes; \
+         batches per actor {:?}; {} replay batches",
+        stats.batches_per_sec(),
+        stats.mean_staleness(),
+        stats.max_staleness(),
+        stats.batches_per_actor,
+        stats.replay_batches
+    );
+    if !args.get_bool("quiet") {
+        let hist: Vec<String> = stats
+            .staleness_hist
+            .iter()
+            .map(|(s, c)| format!("{s}:{c}"))
+            .collect();
+        println!("  staleness histogram [{}]", hist.join(" "));
+    }
+    Ok(())
+}
+
+/// Validate `BENCH_*.json` documents (CLI `check-bench f1.json f2.json …`;
+/// CI runs this over every emitted bench file).
+fn check_bench(args: &Args) -> anyhow::Result<()> {
+    let pos = args.positional();
+    let files = &pos[1..];
+    anyhow::ensure!(
+        !files.is_empty(),
+        "usage: gfnx check-bench <BENCH_*.json> [more.json ...]"
+    );
+    for f in files {
+        let text = std::fs::read_to_string(f)
+            .map_err(|e| anyhow::anyhow!("reading {f}: {e}"))?;
+        let name = check_bench_json(&text).map_err(|e| anyhow::anyhow!("{f}: {e}"))?;
+        println!("ok {f} (bench {name:?}: parses, carries bench/meta/rows)");
+    }
+    Ok(())
 }
 
 fn native_config<E: VecEnv>(args: &Args, env: &E, loss: &str) -> NativeConfig {
@@ -262,19 +516,114 @@ fn train_ebgfn(args: &Args, config: &str, n: usize) -> anyhow::Result<()> {
     let reward = SharedIsingReward::zeros(n * n);
     let env = IsingEnv::lattice(n, reward.clone());
 
+    anyhow::ensure!(
+        args.get("save").is_empty() && args.get("resume").is_empty(),
+        "--save/--resume are not supported with --ebgfn (J_φ is not serialized)"
+    );
     match args.get("backend") {
         "native" => {
             let backend = NativeBackend::new(native_config(args, &env, "tb"), seed)?;
-            let trainer = EbGfnTrainer::with_backend(&env, backend, reward, dataset, seed)?;
+            let mut trainer = EbGfnTrainer::with_backend(&env, backend, reward.clone(), dataset, seed)?;
+            if let Some(ecfg) = engine_config(args)? {
+                anyhow::ensure!(
+                    ecfg.replay.is_none(),
+                    "--replay-cap is not part of the EB-GFN Table 8 dynamics"
+                );
+                return run_ebgfn_engine(args, config, iters, &j_true, &env, reward, &mut trainer, ecfg);
+            }
+            anyhow::ensure!(
+                !args.get_bool("serve"),
+                "--serve rides on the engine's snapshot publishes; pass --actors N"
+            );
             run_ebgfn(trainer, config, iters, &j_true, args)
         }
         "xla" => {
+            anyhow::ensure!(
+                engine_config(args)?.is_none() && !args.get_bool("serve"),
+                "--actors/--sync/--serve require --backend native"
+            );
             let art = Artifact::load(&artifacts_dir(), &format!("{config}.tb"))?;
             let trainer = EbGfnTrainer::new(&env, &art, reward, dataset, seed)?;
             run_ebgfn(trainer, config, iters, &j_true, args)
         }
         other => anyhow::bail!("unknown backend {other:?} (native | xla)"),
     }
+}
+
+/// Asynchronous EB-GFN: actors stream forward rollouts from GFN snapshots;
+/// the learner runs the alternating TB + CD update
+/// ([`EbGfnLearner`]) and republishes. The J-recovery probe runs per
+/// publish through the shared reward handle.
+#[allow(clippy::too_many_arguments)]
+fn run_ebgfn_engine(
+    args: &Args,
+    config: &str,
+    iters: u64,
+    j_true: &Mat,
+    env: &IsingEnv<SharedIsingReward>,
+    reward: SharedIsingReward,
+    trainer: &mut EbGfnTrainer<'_, NativeBackend>,
+    cfg: EngineConfig,
+) -> anyhow::Result<()> {
+    use gfnx::coordinator::ebgfn::neg_log_rmse_of;
+    use gfnx::coordinator::explore::EpsSchedule;
+    let name = format!("{config}.ebgfn");
+    let init_nlr = neg_log_rmse_of(&reward, j_true);
+    let svc = spawn_serve::<IsingEnv<SharedIsingReward>>(
+        args,
+        env,
+        trainer.backend.to_policy(),
+    );
+    println!(
+        "training {name} on the async engine: {} actor(s), publish every {}{}",
+        cfg.actors,
+        cfg.publish_every,
+        if svc.is_some() { ", serving live" } else { "" }
+    );
+    // The engine seeds actor 0 with `seed` verbatim, and the trainer was
+    // built with Rng::new(seed) too — split the learner onto an
+    // independent stream so the CD positive draws and MH uniforms are not
+    // the very sequence that generated the actor's rollouts.
+    trainer.rng = Rng::new(cfg.seed).split();
+    let mut best_nlr = f64::NEG_INFINITY;
+    let stats = {
+        let mut learner = EbGfnLearner { tr: trainer };
+        engine::run(
+            env,
+            &mut learner,
+            EpsSchedule::none(),
+            &ExtraSource::None,
+            &cfg,
+            iters,
+            |snap| {
+                best_nlr = best_nlr.max(neg_log_rmse_of(&reward, j_true));
+                if let Some(svc) = &svc {
+                    svc.hot_swap(Box::new(snap.policy.clone()));
+                }
+                Ok(())
+            },
+        )?
+    };
+    report_engine(&name, &stats, args)?;
+    println!(
+        "  -log RMSE(J) {init_nlr:.3} (init) -> {best_nlr:.3} (best); MH accept {:.2}",
+        trainer.accept_rate
+    );
+    let w = (iters / 2).min(10) as usize;
+    if w >= 1 && stats.losses.len() >= 2 * w {
+        let mean = |v: &[f32]| v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        anyhow::ensure!(
+            mean(&stats.losses[stats.losses.len() - w..]) < mean(&stats.losses[..w]),
+            "GFN loss did not decrease"
+        );
+    }
+    if iters > 0 {
+        anyhow::ensure!(
+            best_nlr > init_nlr,
+            "J error did not decrease below its J = 0 starting point"
+        );
+    }
+    finish_serve(args, svc)
 }
 
 fn run_ebgfn<B: Backend>(
@@ -353,7 +702,7 @@ fn run_ebgfn<B: Backend>(
 }
 
 fn run_train<E: VecEnv, B: Backend>(
-    mut trainer: Trainer<'_, E, B>,
+    trainer: &mut Trainer<'_, E, B>,
     config: &str,
     loss: &str,
     iters: u64,

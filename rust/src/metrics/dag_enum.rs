@@ -61,6 +61,18 @@ mod tests {
         assert_eq!(enumerate_dags(5).len(), 29_281);
     }
 
+    /// d = 2 enumerates exactly the hand-listable set {∅, 0→1, 1→0}
+    /// (sorted ascending by bitmask).
+    #[test]
+    fn d2_enumeration_matches_hand_listing() {
+        let d = 2;
+        let g01 = 1u64 << (0 * d + 1);
+        let g10 = 1u64 << (1 * d + 0);
+        let mut want = vec![0u64, g01, g10];
+        want.sort_unstable();
+        assert_eq!(enumerate_dags(2), want);
+    }
+
     #[test]
     fn posterior_normalizes() {
         use crate::data::ancestral::ancestral_sample;

@@ -103,6 +103,18 @@ mod tests {
         assert_eq!(edit_distance(&[1, 2, 3], &[1, 9, 3]), 1); // substitution
     }
 
+    /// The classic hand-computed case: kitten → sitting needs exactly 3
+    /// edits (two substitutions + one insertion), encoded as a–z indices.
+    #[test]
+    fn edit_distance_kitten_sitting() {
+        let enc = |s: &str| -> Vec<i16> {
+            s.bytes().map(|b| (b - b'a') as i16).collect()
+        };
+        assert_eq!(edit_distance(&enc("kitten"), &enc("sitting")), 3);
+        assert_eq!(edit_distance(&enc("sitting"), &enc("kitten")), 3, "symmetric");
+        assert_eq!(edit_distance(&enc("flaw"), &enc("lawn")), 2);
+    }
+
     #[test]
     fn topk_keeps_best_distinct() {
         let mut t = TopK::new(2);

@@ -62,6 +62,18 @@ mod tests {
         assert!((kl(&p, &q) - expect).abs() < 1e-12);
     }
 
+    /// Hand-computed non-degenerate value: P = [1, 0], Q = [½, ½] ⇒
+    /// M = [¾, ¼], JSD = ½·ln(4/3) + ½·(½·ln(2/3) + ½·ln 2)
+    ///               = 0.21576155433883568…
+    #[test]
+    fn jsd_hand_computed_value() {
+        let got = jsd(&[1.0, 0.0], &[0.5, 0.5]);
+        let want = 0.5 * (4f64 / 3.0).ln()
+            + 0.5 * (0.5 * (2f64 / 3.0).ln() + 0.5 * (2f64).ln());
+        assert!((want - 0.215_761_554_338_835_68).abs() < 1e-15, "formula sanity");
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
     #[test]
     fn counts_version() {
         let exact = [0.5, 0.5];

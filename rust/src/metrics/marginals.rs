@@ -134,6 +134,16 @@ mod tests {
         assert!((m[1 * d + 0] - 0.75).abs() < 1e-12);
     }
 
+    /// Opposed point masses give perfectly anti-correlated off-diagonal
+    /// marginals: ρ = −1 by hand.
+    #[test]
+    fn correlation_of_opposed_marginals_is_minus_one() {
+        let d = 2;
+        let a = edge_marginals(&[1u64 << 1], &[1.0], d); // 0→1
+        let b = edge_marginals(&[1u64 << d], &[1.0], d); // 1→0
+        assert!((marginal_correlation(&a, &b, d) + 1.0).abs() < 1e-12);
+    }
+
     #[test]
     fn correlation_of_identical_marginals_is_one() {
         let d = 3;

@@ -70,6 +70,17 @@ mod tests {
         assert_eq!(tv_from_counts(&exact, &[0, 0, 0]), 1.0);
     }
 
+    /// Hand-computed mid-range values (not just the 0/1 extremes).
+    #[test]
+    fn tv_hand_computed_values() {
+        // ½(|0.7−0.4| + |0.3−0.6|) = 0.3
+        assert!((tv_dist(&[0.7, 0.3], &[0.4, 0.6]) - 0.3).abs() < 1e-12);
+        // counts [3, 1] ⇒ empirical [0.75, 0.25]; ½(0.25 + 0.25) = 0.25
+        assert!((tv_from_counts(&[0.5, 0.5], &[3, 1]) - 0.25).abs() < 1e-12);
+        // TV is symmetric.
+        assert_eq!(tv_dist(&[0.7, 0.3], &[0.4, 0.6]), tv_dist(&[0.4, 0.6], &[0.7, 0.3]));
+    }
+
     #[test]
     fn perfect_sampler_floor_shrinks_with_samples() {
         let mut rng = Rng::new(0);

@@ -80,6 +80,35 @@ pub trait Backend {
     fn param_by_name(&self, name: &str) -> Option<Vec<f32>>;
 }
 
+/// A backend whose current parameters can be snapshotted into an owned,
+/// `Send` serving policy — the capability the asynchronous actor–learner
+/// engine ([`crate::engine`]) and the serve hot-swap hook are built on.
+///
+/// The snapshot must be **row-wise and frozen**: evaluating it never
+/// observes later training steps, so a version tag attached at snapshot
+/// time stays meaningful for staleness accounting. `NativeBackend`
+/// implements this (an owned [`NativePolicy`](super::NativePolicy) clone);
+/// the xla backend cannot — PJRT buffers are thread-local and not `Send` —
+/// which is why `train --actors N` is native-only.
+pub trait SnapshotBackend: Backend {
+    type Snapshot: BatchPolicy + Clone + Send + Sync + 'static;
+
+    /// Clone the current parameters into an owned serving policy
+    /// (O(|θ|) — the engine pays this once per publish, not per dispatch).
+    fn snapshot_policy(&self) -> Self::Snapshot;
+
+    /// Persist the full training state (parameters, optimizer moments,
+    /// step counters) to `path`. The engine calls this on every publish
+    /// when checkpointing is enabled; backends without a serialization
+    /// story keep the default error.
+    fn checkpoint(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        anyhow::bail!(
+            "the {} backend does not support checkpointing to {path:?}",
+            self.backend_name()
+        )
+    }
+}
+
 /// [`BatchPolicy`] view of a backend's policy dispatch, so rollouts, eval
 /// protocols and the serve slot engine drive any backend through the same
 /// code paths as host-side policies.

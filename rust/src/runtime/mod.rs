@@ -19,7 +19,7 @@ pub mod state;
 pub mod policy;
 
 pub use artifact::Artifact;
-pub use backend::{Backend, BackendPolicy, XlaBackend};
+pub use backend::{Backend, BackendPolicy, SnapshotBackend, XlaBackend};
 pub use manifest::{Manifest, TensorSpec};
 pub use native::{NativeBackend, NativeConfig, NativePolicy};
 pub use policy::{ArtifactPolicy, BatchPolicy, OwnedArtifactPolicy, PolicyShape, UniformPolicy};

@@ -23,11 +23,12 @@ pub mod net;
 
 pub use net::{ForwardCache, Grads, Leaf, NativeNet};
 
-use super::backend::Backend;
-use super::manifest::Manifest;
+use super::backend::{Backend, SnapshotBackend};
+use super::manifest::{ArtifactConfig, BlobEntry, Manifest};
 use super::policy::{BatchPolicy, PolicyShape};
 use crate::coordinator::rollout::TrajBatch;
 use crate::envs::VecEnv;
+use crate::util::json::Json;
 
 /// Static configuration of a native backend (shapes + architecture +
 /// optimizer hyperparameters).
@@ -142,6 +143,10 @@ impl NativeConfig {
         Ok(())
     }
 }
+
+/// File-format constants of [`NativeBackend::save_checkpoint`].
+const CKPT_MAGIC: &[u8] = b"GFNXCKPT1\n";
+const CKPT_KIND: &str = "native-checkpoint";
 
 /// The pure-Rust training backend: network + Adam state.
 pub struct NativeBackend {
@@ -305,6 +310,207 @@ impl NativeBackend {
         Ok(backend)
     }
 
+    /// Serialize the full training state — parameters, Adam moments, and
+    /// the step counter — into the artifact init-blob layout. The exact
+    /// inverse of [`NativeBackend::from_blob`]: `from_blob(&m, &b)` on the
+    /// returned pair reproduces this backend bitwise (parameters and Adam
+    /// moments; the `t` leaf is f32 by blob format, so counters above 2²⁴
+    /// need the checkpoint header — see [`NativeBackend::save_checkpoint`]).
+    pub fn to_blob(&self) -> (Manifest, Vec<u8>) {
+        let mut blob: Vec<u8> = Vec::new();
+        let mut layout: Vec<BlobEntry> = Vec::new();
+        let mut push = |group: &str, name: &str, shape: &[usize], data: &[f32]| {
+            layout.push(BlobEntry {
+                group: group.to_string(),
+                name: name.to_string(),
+                offset: blob.len(),
+                shape: shape.to_vec(),
+            });
+            for v in data {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+        };
+        for leaf in self.net.leaves() {
+            push("param", &leaf.name, leaf.tensor.shape(), leaf.tensor.data());
+        }
+        for (group, moments) in [("m", &self.m), ("v", &self.v)] {
+            for (leaf, mom) in self.net.leaves().iter().zip(moments) {
+                push(group, &leaf.name, leaf.tensor.shape(), mom);
+            }
+        }
+        push("t", "t", &[1], &[self.t as f32]);
+        let c = &self.net.cfg;
+        let manifest = Manifest {
+            name: format!("native.{}", c.loss),
+            config: ArtifactConfig {
+                config_name: "native".to_string(),
+                loss: c.loss.clone(),
+                obs_dim: c.obs_dim,
+                n_actions: c.n_actions,
+                n_bwd_actions: c.n_bwd_actions,
+                t_max: c.t_max,
+                batch: c.batch,
+                uniform_pb: c.uniform_pb,
+            },
+            params: Vec::new(),
+            policy_file: String::new(),
+            policy_inputs: Vec::new(),
+            policy_outputs: Vec::new(),
+            train_file: String::new(),
+            train_state: Vec::new(),
+            train_batch: Vec::new(),
+            blob_file: String::new(),
+            blob_layout: layout,
+        };
+        (manifest, blob)
+    }
+
+    /// Write a self-contained checkpoint file: a JSON header carrying the
+    /// **full** [`NativeConfig`] (including the optimizer hyperparameters
+    /// `from_blob` cannot recover from a bare blob), the exact u64 step and
+    /// Adam counters, and the blob layout — followed by the
+    /// [`NativeBackend::to_blob`] bytes. The write goes through a `.tmp`
+    /// sibling + rename so a crash mid-checkpoint (the engine saves on
+    /// every publish) never leaves a torn file at `path`.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let (manifest, blob) = self.to_blob();
+        let c = &self.net.cfg;
+        let layout = Json::Arr(
+            manifest
+                .blob_layout
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("group", Json::Str(e.group.clone())),
+                        ("name", Json::Str(e.name.clone())),
+                        ("offset", Json::Num(e.offset as f64)),
+                        ("shape", Json::arr_usize(&e.shape)),
+                    ])
+                })
+                .collect(),
+        );
+        let header = Json::obj(vec![
+            ("kind", Json::Str(CKPT_KIND.to_string())),
+            ("loss", Json::Str(c.loss.clone())),
+            ("obs_dim", Json::Num(c.obs_dim as f64)),
+            ("n_actions", Json::Num(c.n_actions as f64)),
+            ("n_bwd_actions", Json::Num(c.n_bwd_actions as f64)),
+            ("t_max", Json::Num(c.t_max as f64)),
+            ("batch", Json::Num(c.batch as f64)),
+            ("hidden", Json::Num(c.hidden as f64)),
+            ("n_layers", Json::Num(c.n_layers as f64)),
+            ("subtb_lambda", Json::Num(c.subtb_lambda)),
+            ("lr", Json::Num(c.lr as f64)),
+            ("z_lr", Json::Num(c.z_lr as f64)),
+            ("weight_decay", Json::Num(c.weight_decay as f64)),
+            ("workers", Json::Num(c.workers as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("adam_t", Json::Num(self.t as f64)),
+            ("layout", layout),
+        ])
+        .to_string();
+        let mut bytes: Vec<u8> =
+            Vec::with_capacity(CKPT_MAGIC.len() + 8 + header.len() + blob.len());
+        bytes.extend_from_slice(CKPT_MAGIC);
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&blob);
+        let tmp = path.with_extension("ckpt.tmp");
+        std::fs::write(&tmp, &bytes)
+            .map_err(|e| anyhow::anyhow!("writing checkpoint {tmp:?}: {e}"))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("renaming checkpoint into {path:?}: {e}"))?;
+        Ok(())
+    }
+
+    /// Load a [`NativeBackend::save_checkpoint`] file: bitwise-restores the
+    /// parameters and Adam moments through [`NativeBackend::from_blob`],
+    /// then overlays the header's exact counters and optimizer
+    /// hyperparameters, so `save → load → train` continues the interrupted
+    /// run bitwise-identically (given the same batch stream).
+    pub fn load_checkpoint(path: &std::path::Path) -> anyhow::Result<NativeBackend> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading checkpoint {path:?}: {e}"))?;
+        anyhow::ensure!(
+            bytes.len() > CKPT_MAGIC.len() + 8 && bytes.starts_with(CKPT_MAGIC),
+            "{path:?} is not a gfnx native checkpoint (bad magic)"
+        );
+        let off = CKPT_MAGIC.len();
+        let hlen =
+            u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+        anyhow::ensure!(
+            off + 8 + hlen <= bytes.len(),
+            "checkpoint {path:?} truncated inside the header"
+        );
+        let header = std::str::from_utf8(&bytes[off + 8..off + 8 + hlen])
+            .map_err(|e| anyhow::anyhow!("checkpoint header is not UTF-8: {e}"))?;
+        let j = Json::parse(header)
+            .map_err(|e| anyhow::anyhow!("checkpoint header json: {e}"))?;
+        anyhow::ensure!(
+            j.req_str("kind")? == CKPT_KIND,
+            "checkpoint kind {:?} (expected {CKPT_KIND:?})",
+            j.req_str("kind")?
+        );
+        let blob = &bytes[off + 8 + hlen..];
+        let layout = j
+            .req_arr("layout")?
+            .iter()
+            .map(|e| {
+                Ok(BlobEntry {
+                    group: e.req_str("group")?.to_string(),
+                    name: e.req_str("name")?.to_string(),
+                    offset: e.req_usize("offset")?,
+                    shape: e
+                        .req_arr("shape")?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect(),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let manifest = Manifest {
+            name: "native-checkpoint".to_string(),
+            config: ArtifactConfig {
+                config_name: "native".to_string(),
+                loss: j.req_str("loss")?.to_string(),
+                obs_dim: j.req_usize("obs_dim")?,
+                n_actions: j.req_usize("n_actions")?,
+                n_bwd_actions: j.req_usize("n_bwd_actions")?,
+                t_max: j.req_usize("t_max")?,
+                batch: j.req_usize("batch")?,
+                uniform_pb: true,
+            },
+            params: Vec::new(),
+            policy_file: String::new(),
+            policy_inputs: Vec::new(),
+            policy_outputs: Vec::new(),
+            train_file: String::new(),
+            train_state: Vec::new(),
+            train_batch: Vec::new(),
+            blob_file: String::new(),
+            blob_layout: layout,
+        };
+        let mut backend = Self::from_blob(&manifest, blob)?;
+        // The header's optimizer hyperparameters and exact u64 counters
+        // override from_blob's defaults (and the blob's f32 `t` leaf).
+        let num = |key: &str| -> anyhow::Result<f64> {
+            j.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("checkpoint header {key:?} is not a number"))
+        };
+        {
+            let cfg = backend.config_mut();
+            cfg.subtb_lambda = num("subtb_lambda")?;
+            cfg.lr = num("lr")? as f32;
+            cfg.z_lr = num("z_lr")? as f32;
+            cfg.weight_decay = num("weight_decay")? as f32;
+            cfg.workers = j.req_usize("workers")?.max(1);
+        }
+        backend.t = num("adam_t")? as u64;
+        backend.steps = num("steps")? as u64;
+        Ok(backend)
+    }
+
     /// Load manifest + init blob from an artifact directory **without**
     /// touching the HLO files (no XLA involved).
     pub fn from_artifact_files(
@@ -462,6 +668,18 @@ impl Backend for NativeBackend {
             .iter()
             .find(|l| l.name == name)
             .map(|l| l.tensor.data().to_vec())
+    }
+}
+
+impl SnapshotBackend for NativeBackend {
+    type Snapshot = NativePolicy;
+
+    fn snapshot_policy(&self) -> NativePolicy {
+        self.to_policy()
+    }
+
+    fn checkpoint(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        self.save_checkpoint(path)
     }
 }
 
@@ -905,6 +1123,96 @@ mod tests {
             }],
         };
         assert!(NativeBackend::from_blob(&manifest, &[0u8; 64]).is_err());
+    }
+
+    /// `to_blob` is the exact inverse of `from_blob`: parameters, Adam
+    /// moments and the step counter all survive a round trip bitwise, and
+    /// the restored backend's next train step is bit-identical.
+    #[test]
+    fn to_blob_is_the_inverse_of_from_blob() {
+        let e = env(4);
+        let cfg = NativeConfig::for_env(&e, 4, "tb").with_hidden(8);
+        let mut be = NativeBackend::new(cfg, 42).unwrap();
+        for s in 0..5 {
+            let batch = uniform_batch(&e, 4, 100 + s);
+            be.train_step(&batch).unwrap();
+        }
+        let (manifest, blob) = be.to_blob();
+        assert_eq!(manifest.config.loss, "tb");
+        let mut loaded = NativeBackend::from_blob(&manifest, &blob).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for (a, b) in be.net.leaves().iter().zip(loaded.net.leaves()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(bits(a.tensor.data()), bits(b.tensor.data()), "leaf {}", a.name);
+        }
+        for i in 0..be.m.len() {
+            assert_eq!(bits(&be.m[i]), bits(&loaded.m[i]), "m[{i}]");
+            assert_eq!(bits(&be.v[i]), bits(&loaded.v[i]), "v[{i}]");
+        }
+        assert_eq!(loaded.adam_t(), 5);
+        let batch = uniform_batch(&e, 4, 999);
+        let (l1, z1) = be.train_step(&batch).unwrap();
+        let (l2, z2) = loaded.train_step(&batch).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits(), "post-round-trip loss");
+        assert_eq!(z1.to_bits(), z2.to_bits(), "post-round-trip logZ");
+    }
+
+    /// The save → load → train round trip (the `--save`/`--resume` CLI
+    /// path): optimizer hyperparameters and the exact u64 counters come
+    /// back from the header, and continued training on the same batch
+    /// stream is bitwise-identical to the uninterrupted run.
+    #[test]
+    fn checkpoint_save_load_train_roundtrip_is_bitwise() {
+        let e = env(8);
+        let mut cfg =
+            NativeConfig::for_env(&e, 8, "subtb").with_hidden(16).with_lr(2e-3, 0.05);
+        cfg.weight_decay = 1e-4;
+        cfg.subtb_lambda = 0.8;
+        let mut a = NativeBackend::new(cfg, 7).unwrap();
+        for s in 0..7 {
+            a.train_step(&uniform_batch(&e, 8, 50 + s)).unwrap();
+        }
+        let dir = std::env::temp_dir().join("gfnx_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.ckpt");
+        a.save_checkpoint(&path).unwrap();
+
+        let mut b = NativeBackend::load_checkpoint(&path).unwrap();
+        assert_eq!(b.steps(), 7, "step counter restored");
+        assert_eq!(b.adam_t(), 7, "Adam counter restored");
+        assert_eq!(b.net.cfg.loss, "subtb");
+        assert_eq!(b.net.cfg.lr, 2e-3);
+        assert_eq!(b.net.cfg.z_lr, 0.05);
+        assert_eq!(b.net.cfg.weight_decay, 1e-4);
+        assert_eq!(b.net.cfg.subtb_lambda, 0.8);
+        assert_eq!(b.net.cfg.hidden, 16);
+
+        for s in 0..6 {
+            let batch = uniform_batch(&e, 8, 300 + s);
+            let (la, za) = a.train_step(&batch).unwrap();
+            let (lb, zb) = b.train_step(&batch).unwrap();
+            assert_eq!(la.to_bits(), lb.to_bits(), "continued loss at step {s}");
+            assert_eq!(za.to_bits(), zb.to_bits(), "continued logZ at step {s}");
+        }
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for (la, lb) in a.net.leaves().iter().zip(b.net.leaves()) {
+            assert_eq!(bits(la.tensor.data()), bits(lb.tensor.data()), "leaf {}", la.name);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Corrupt or foreign files are rejected with a clear error, not
+    /// misparsed.
+    #[test]
+    fn load_checkpoint_rejects_garbage() {
+        let dir = std::env::temp_dir().join("gfnx_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        let err = NativeBackend::load_checkpoint(&path).unwrap_err().to_string();
+        assert!(err.contains("magic"), "error names the bad magic: {err}");
+        let _ = std::fs::remove_file(&path);
+        assert!(NativeBackend::load_checkpoint(&dir.join("missing.ckpt")).is_err());
     }
 
     #[test]

@@ -74,6 +74,27 @@ impl PolicyShape {
     }
 }
 
+/// Validate that a dispatch shape matches an environment spec — the single
+/// guard shared by every env ⇄ backend/policy binding site
+/// (`Trainer::with_backend`, `EbGfnTrainer::with_backend`, `engine::train`,
+/// the CLI's checkpoint-resume path), so the compatibility rule cannot
+/// drift between entry points.
+pub fn check_env_shape(
+    spec: &crate::envs::EnvSpec,
+    shape: &PolicyShape,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        spec.obs_dim == shape.obs_dim
+            && spec.n_actions == shape.n_actions
+            && spec.n_bwd_actions == shape.n_bwd_actions
+            && spec.t_max == shape.t_max,
+        "env spec {:?} does not match policy/backend shape {:?}",
+        spec,
+        shape
+    );
+    Ok(())
+}
+
 /// One fixed-shape policy dispatch.
 pub trait BatchPolicy {
     /// The dispatch shape (constant over the policy's lifetime).

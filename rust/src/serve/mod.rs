@@ -25,7 +25,11 @@
 //!   image has no tokio/rayon; mirrors `util::threadpool`'s philosophy).
 //! - [`worker::SamplerService`] — the service: a dedicated worker thread
 //!   owning the environment and the policy, fed by the queue, answering
-//!   [`SampleRequest`]s through [`SampleTicket`]s.
+//!   [`SampleRequest`]s through [`SampleTicket`]s. The serving policy is
+//!   **hot-swappable** ([`SamplerService::hot_swap`]): a new snapshot
+//!   takes effect at the next dispatch, mid-drain included, which is how
+//!   the training engine's `train --serve` keeps live requests on the
+//!   improving policy (see [`crate::engine`]).
 //! - [`stats::ServeStats`] — atomic counters (dispatches, occupancy,
 //!   trajectories/sec) readable from any thread.
 //!

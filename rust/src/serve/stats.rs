@@ -19,6 +19,11 @@ pub struct ServeStats {
     pub policy_dispatches: AtomicU64,
     pub active_row_steps: AtomicU64,
     pub total_row_steps: AtomicU64,
+    /// Hot-swaps applied by the worker (see `SamplerService::hot_swap`).
+    pub policy_swaps: AtomicU64,
+    /// Hot-swaps dropped because the incoming policy's dispatch shape did
+    /// not match the serving one.
+    pub swaps_rejected: AtomicU64,
     started: Instant,
 }
 
@@ -38,6 +43,8 @@ impl ServeStats {
             policy_dispatches: AtomicU64::new(0),
             active_row_steps: AtomicU64::new(0),
             total_row_steps: AtomicU64::new(0),
+            policy_swaps: AtomicU64::new(0),
+            swaps_rejected: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -51,6 +58,8 @@ impl ServeStats {
             policy_dispatches: self.policy_dispatches.load(Ordering::Relaxed),
             active_row_steps: self.active_row_steps.load(Ordering::Relaxed),
             total_row_steps: self.total_row_steps.load(Ordering::Relaxed),
+            policy_swaps: self.policy_swaps.load(Ordering::Relaxed),
+            swaps_rejected: self.swaps_rejected.load(Ordering::Relaxed),
             elapsed_s: self.started.elapsed().as_secs_f64(),
         }
     }
@@ -66,6 +75,8 @@ pub struct ServeSnapshot {
     pub policy_dispatches: u64,
     pub active_row_steps: u64,
     pub total_row_steps: u64,
+    pub policy_swaps: u64,
+    pub swaps_rejected: u64,
     pub elapsed_s: f64,
 }
 

@@ -18,12 +18,62 @@ use super::sampler::{sample_stream, TrajJob, TrajResult};
 use super::stats::{ServeSnapshot, ServeStats};
 use super::traj_seed;
 use crate::envs::VecEnv;
-use crate::runtime::policy::BatchPolicy;
+use crate::runtime::policy::{BatchPolicy, PolicyShape};
 use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+/// The hot-swap mailbox: latest-wins slot holding the next policy to serve
+/// (see [`SamplerService::hot_swap`]).
+type SwapSlot = Arc<Mutex<Option<Box<dyn BatchPolicy + Send>>>>;
+
+/// The worker's serving policy: the current policy plus the swap mailbox.
+/// Each [`BatchPolicy::eval`] first applies a pending swap (via `try_lock`,
+/// so a contended mailbox never stalls the dispatch hot path — the swap
+/// just lands on the next dispatch), which is what makes swaps **live**:
+/// they take effect mid-drain, between two dispatches of the same running
+/// batch, without disturbing in-flight trajectories (their remaining
+/// actions simply come from the newer policy).
+struct SwappablePolicy {
+    current: Box<dyn BatchPolicy>,
+    slot: SwapSlot,
+    stats: Arc<ServeStats>,
+}
+
+impl SwappablePolicy {
+    fn apply_pending(&mut self) {
+        let Ok(mut slot) = self.slot.try_lock() else { return };
+        let Some(next) = slot.take() else { return };
+        drop(slot);
+        if next.shape() == self.current.shape() {
+            self.current = next;
+            self.stats.policy_swaps.fetch_add(1, Ordering::Relaxed);
+        } else {
+            // A mis-shaped policy would corrupt the running slot table;
+            // drop it and count the rejection instead of poisoning the
+            // service.
+            self.stats.swaps_rejected.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+impl BatchPolicy for SwappablePolicy {
+    fn shape(&self) -> PolicyShape {
+        self.current.shape()
+    }
+
+    fn eval(
+        &mut self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.apply_pending();
+        self.current.eval(obs, fwd_mask, bwd_mask)
+    }
+}
 
 struct WorkItem<Obj> {
     req: SampleRequest,
@@ -62,6 +112,7 @@ impl<Obj> DrainState<Obj> {
 pub struct SamplerService<Obj> {
     queue: Queue<WorkItem<Obj>>,
     stats: Arc<ServeStats>,
+    swap: SwapSlot,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -76,13 +127,28 @@ impl<Obj: Send + 'static> SamplerService<Obj> {
     {
         let queue: Queue<WorkItem<Obj>> = Queue::new();
         let stats = Arc::new(ServeStats::new());
+        let swap: SwapSlot = Arc::new(Mutex::new(None));
         let worker_queue = queue.clone();
         let worker_stats = Arc::clone(&stats);
+        let worker_swap = Arc::clone(&swap);
         let handle = std::thread::Builder::new()
             .name("gfnx-serve-worker".to_string())
-            .spawn(move || worker_loop(env, policy_factory, worker_queue, worker_stats))
+            .spawn(move || {
+                worker_loop(env, policy_factory, worker_queue, worker_stats, worker_swap)
+            })
             .expect("failed to spawn serve worker thread");
-        SamplerService { queue, stats, handle: Some(handle) }
+        SamplerService { queue, stats, swap, handle: Some(handle) }
+    }
+
+    /// Install a new serving policy **live**: the worker picks it up at its
+    /// next policy dispatch — mid-drain included — so a training loop can
+    /// publish improving snapshots while requests stream (the engine's
+    /// `train --serve` path calls this from its publish hook). Latest wins:
+    /// an unapplied pending swap is replaced, not queued. The incoming
+    /// policy must match the serving dispatch shape; mismatches are dropped
+    /// and counted in [`ServeSnapshot::swaps_rejected`].
+    pub fn hot_swap(&self, policy: Box<dyn BatchPolicy + Send>) {
+        *self.swap.lock().unwrap() = Some(policy);
     }
 
     /// Enqueue a request; returns immediately with a waitable ticket.
@@ -174,12 +240,13 @@ fn worker_loop<E, F>(
     policy_factory: F,
     queue: Queue<WorkItem<E::Obj>>,
     stats: Arc<ServeStats>,
+    swap: SwapSlot,
 ) where
     E: VecEnv,
     F: FnOnce() -> anyhow::Result<Box<dyn BatchPolicy>>,
 {
     let mut policy = match policy_factory() {
-        Ok(p) => p,
+        Ok(p) => SwappablePolicy { current: p, slot: swap, stats: Arc::clone(&stats) },
         Err(e) => {
             // Refuse service: fail the backlog and all future submissions.
             queue.close();
@@ -204,7 +271,7 @@ fn worker_loop<E, F>(
         // admitting newly queued requests so they join the running batch.
         let result = sample_stream(
             &env,
-            policy.as_mut(),
+            &mut policy,
             || loop {
                 {
                     let mut guard = drain.borrow_mut();
@@ -351,6 +418,78 @@ mod tests {
         let outs = svc.sample(0, 1).unwrap();
         assert!(outs.is_empty());
         assert_eq!(svc.stats().requests_completed, 1);
+        svc.shutdown();
+    }
+
+    /// Live hot-swap: after swapping a trained `NativePolicy` over the
+    /// uniform one, the service's samples are exactly what a service
+    /// spawned with that policy directly would produce (the per-trajectory
+    /// seed streams make this a bitwise statement, not a distributional
+    /// one), and the swap is counted.
+    #[test]
+    fn hot_swap_switches_the_serving_policy() {
+        use crate::runtime::{NativeBackend, NativeConfig};
+        let env = HypergridEnv::new(2, 6, HypergridReward::standard(6));
+        let native = NativeBackend::new(NativeConfig::for_env(&env, 4, "tb").with_hidden(16), 21)
+            .unwrap()
+            .to_policy();
+
+        // Reference: a service born with the native policy.
+        let reference = {
+            let env = HypergridEnv::new(2, 6, HypergridReward::standard(6));
+            let p = native.clone();
+            let svc = SamplerService::spawn(env, move || {
+                Ok(Box::new(p) as Box<dyn BatchPolicy>)
+            });
+            let mut objs: Vec<Vec<i32>> =
+                svc.sample(15, 33).unwrap().into_iter().map(|o| o.obj).collect();
+            svc.shutdown();
+            objs.sort();
+            objs
+        };
+
+        // A uniform-policy service, swapped live.
+        let svc = service(4);
+        let _ = svc.sample(5, 1).unwrap(); // pre-swap traffic
+        svc.hot_swap(Box::new(native));
+        let mut objs: Vec<Vec<i32>> =
+            svc.sample(15, 33).unwrap().into_iter().map(|o| o.obj).collect();
+        objs.sort();
+        assert_eq!(objs, reference, "post-swap samples must come from the new policy");
+        let snap = svc.stats();
+        assert_eq!(snap.policy_swaps, 1);
+        assert_eq!(snap.swaps_rejected, 0);
+        svc.shutdown();
+    }
+
+    /// A mis-shaped swap is dropped (counted, service unharmed) instead of
+    /// corrupting the slot table.
+    #[test]
+    fn hot_swap_rejects_shape_mismatch() {
+        let env = HypergridEnv::new(2, 6, HypergridReward::standard(6));
+        let svc = service(4);
+        // Wrong batch width.
+        let bad = UniformPolicy::new(PolicyShape::of_env(&env, 9));
+        svc.hot_swap(Box::new(bad));
+        let outs = svc.sample(8, 3).unwrap();
+        assert_eq!(outs.len(), 8, "service keeps serving after a rejected swap");
+        let snap = svc.stats();
+        assert_eq!(snap.swaps_rejected, 1);
+        assert_eq!(snap.policy_swaps, 0);
+        svc.shutdown();
+    }
+
+    /// Latest-wins mailbox: two swaps before any dispatch apply only the
+    /// second.
+    #[test]
+    fn hot_swap_latest_wins() {
+        let env = HypergridEnv::new(2, 6, HypergridReward::standard(6));
+        let shape = PolicyShape::of_env(&env, 4);
+        let svc = service(4);
+        svc.hot_swap(Box::new(UniformPolicy::new(shape)));
+        svc.hot_swap(Box::new(UniformPolicy::new(shape)));
+        let _ = svc.sample(4, 0).unwrap();
+        assert_eq!(svc.stats().policy_swaps, 1, "only the latest pending swap applies");
         svc.shutdown();
     }
 }

@@ -276,6 +276,64 @@ fn every_family_trains_every_registered_loss_natively() {
     }
 }
 
+/// Every registered family also trains through the **asynchronous
+/// actor–learner engine** with every objective the registry lists — the
+/// in-test form of `train --env <E> --loss <L> --actors 2`, covering the
+/// actor-side snapshot dispatch, the Sync extra sources (phylo fldb,
+/// bayesnet mdb) and the learner-side MDB delta conversion for all nine
+/// families.
+#[test]
+fn every_family_trains_every_registered_loss_through_the_engine() {
+    struct EngineProbe;
+    impl EnvDriver for EngineProbe {
+        type Out = ();
+        fn drive<E>(
+            self,
+            env: &E,
+            extra: &ExtraSource<'_, E>,
+            fam: &'static EnvFamily,
+            config: &str,
+        ) -> anyhow::Result<()>
+        where
+            E: VecEnv + Clone + Send + Sync + 'static,
+            E::State: Clone,
+            E::Obj: PartialEq + std::fmt::Debug + Send + 'static,
+        {
+            use gfnx::coordinator::explore::EpsSchedule;
+            use gfnx::engine::{self, EngineConfig};
+            for loss in fam.losses {
+                let cfg = NativeConfig::for_env(env, 4, loss).with_hidden(16);
+                let mut backend = NativeBackend::new(cfg, 7).unwrap();
+                let stats = engine::train(
+                    env,
+                    &mut backend,
+                    EpsSchedule::Constant(0.1),
+                    extra,
+                    &EngineConfig::new(2, 2, 7),
+                    6,
+                    |_| Ok(()),
+                )
+                .unwrap_or_else(|e| panic!("{config}.{loss} (engine): {e}"));
+                assert_eq!(stats.iters, 6, "{config}.{loss}: engine step count");
+                assert!(
+                    stats.losses.iter().all(|l| l.is_finite()),
+                    "{config}.{loss}: engine loss not finite"
+                );
+                assert_eq!(
+                    stats.batches_per_actor.iter().sum::<u64>(),
+                    6,
+                    "{config}.{loss}: batch accounting"
+                );
+            }
+            Ok(())
+        }
+    }
+    for f in registry::families() {
+        registry::with_env(f.default_config, EnvParams::default(), EngineProbe)
+            .unwrap_or_else(|e| panic!("{}: {e}", f.name));
+    }
+}
+
 /// Regression for the PR 1 stale-staging bug class, extras edition: with a
 /// live `ExtraSource`, rows that finish early must end with the
 /// *terminal* value in every padding slot (never a stale value from a
