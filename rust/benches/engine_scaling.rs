@@ -19,7 +19,7 @@
 //!
 //! Emits `BENCH_engine.json` (workspace root by default) via `BenchJson`.
 
-use gfnx::bench::harness::{env_usize, itps_json, BenchJson, BenchTable};
+use gfnx::bench::harness::{env_usize, itps_json, telemetry_phases, BenchJson, BenchTable};
 use gfnx::coordinator::explore::EpsSchedule;
 use gfnx::coordinator::rollout::ExtraSource;
 use gfnx::coordinator::trainer::Trainer;
@@ -165,6 +165,19 @@ fn main() {
     table.print();
     println!("4-actor vs 1-actor rollout throughput: {speedup_4v1:.2}x");
 
+    // Phase-timing breakdowns: short *instrumented* passes run after every
+    // timed window, so the throughput numbers above stay uninstrumented.
+    // Attached as `telemetry` sub-objects to the serial row and the
+    // largest-actor engine row.
+    let tel_iters = (w.iters / 4).max(20);
+    let serial_phases = telemetry_phases(|| {
+        serial_run(&w, tel_iters);
+    });
+    let max_actors = *actor_counts.last().unwrap();
+    let engine_phases = telemetry_phases(|| {
+        engine_run(&w, max_actors, tel_iters);
+    });
+
     let mut bj = BenchJson::new("engine");
     bj.meta("env", Json::Str("hypergrid_2d_20".to_string()));
     bj.meta("loss", Json::Str("tb".to_string()));
@@ -179,16 +192,21 @@ fn main() {
         ("actors", Json::Num(0.0)),
         ("batches_per_sec", itps_json(&serial)),
         ("rollouts_per_sec", Json::Num(serial.mean * w.batch as f64)),
+        ("telemetry", serial_phases),
     ]));
     for r in &rows {
-        bj.row(Json::obj(vec![
+        let mut fields = vec![
             ("mode", Json::Str("engine".to_string())),
             ("actors", Json::Num(r.actors as f64)),
             ("batches_per_sec", itps_json(&r.rate)),
             ("rollouts_per_sec", Json::Num(r.rate.mean * w.batch as f64)),
             ("staleness_mean", Json::Num(r.staleness_mean)),
             ("staleness_max", Json::Num(r.staleness_max as f64)),
-        ]));
+        ];
+        if r.actors == max_actors {
+            fields.push(("telemetry", engine_phases.clone()));
+        }
+        bj.row(Json::obj(fields));
     }
     match bj.write() {
         Ok(path) => println!("wrote {}", path.display()),

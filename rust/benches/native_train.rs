@@ -19,7 +19,9 @@
 //!
 //! Emits `BENCH_native.json` via the `BenchJson` harness.
 
-use gfnx::bench::harness::{env_usize, itps_json, measure_it_per_sec, BenchJson, BenchTable};
+use gfnx::bench::harness::{
+    env_usize, itps_json, measure_it_per_sec, telemetry_phases, BenchJson, BenchTable,
+};
 use gfnx::coordinator::baseline::BaselineTrainer;
 use gfnx::coordinator::explore::EpsSchedule;
 use gfnx::coordinator::registry::{self, EnvDriver, EnvFamily, EnvParams};
@@ -198,6 +200,22 @@ fn main() {
     }
     reg_table.print();
 
+    // Phase-timing breakdown: one short *instrumented* pass, run after all
+    // timed windows so the it/s numbers above stay uninstrumented-mode.
+    // Attached to the hypergrid fast/16 row as a `telemetry` sub-object.
+    let phases = telemetry_phases(|| {
+        let cfg = NativeConfig::for_env(&hg, 16, "tb")
+            .with_hidden(hidden)
+            .with_workers(workers);
+        let backend = NativeBackend::new(cfg, 0).expect("native backend");
+        let mut tr =
+            Trainer::with_backend(&hg, backend, 0, EpsSchedule::none()).expect("trainer");
+        for _ in 0..iters16 {
+            let (stats, _objs) = tr.train_iter(&ExtraSource::None).unwrap();
+            assert!(stats.loss.is_finite());
+        }
+    });
+
     let mut bj = BenchJson::new("native");
     bj.meta("backend", Json::Str("native".to_string()));
     bj.meta("loss", Json::Str("tb".to_string()));
@@ -205,12 +223,16 @@ fn main() {
     bj.meta("workers", Json::Num(workers as f64));
     bj.meta("repeats", Json::Num(repeats as f64));
     for (env, mode, batch, r) in &rows {
-        bj.row(Json::obj(vec![
+        let mut fields = vec![
             ("env", Json::Str(env.to_string())),
             ("mode", Json::Str(mode.to_string())),
             ("batch", Json::Num(*batch as f64)),
             ("it_per_sec", itps_json(r)),
-        ]));
+        ];
+        if *env == "hypergrid_small" && *mode == "fast" && *batch == 16 {
+            fields.push(("telemetry", phases.clone()));
+        }
+        bj.row(Json::obj(fields));
     }
     for (config, loss, r) in &reg_rows {
         bj.row(Json::obj(vec![

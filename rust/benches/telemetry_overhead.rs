@@ -1,0 +1,162 @@
+//! telemetry_overhead — proves the telemetry hot path is near-free when
+//! disabled, and quantifies its cost when enabled.
+//!
+//! Three measurements:
+//!
+//! 1. **Disabled span cost** (the claim that matters): ns per `span!` call
+//!    site when telemetry is off — one `Relaxed` atomic load + branch.
+//!    Measured against an identical loop without the macro.
+//! 2. **Enabled span cost**: ns per `span!` when on (two `Instant::now()`
+//!    calls + a few `fetch_add`s).
+//! 3. **End-to-end**: native TB training it/s with telemetry off vs on,
+//!    plus spans-per-iteration counted from the instrumented run's registry
+//!    — giving a *predicted* disabled-mode overhead
+//!    (`spans/iter x disabled-span-ns / iter-ns`), which is asserted to be
+//!    under a few percent. This is the invariant CI enforces: shipping the
+//!    instrumented binary costs (nearly) nothing unless `--telemetry` is on.
+//!
+//! Run:   cargo bench --bench telemetry_overhead
+//! Env:   GFNX_TELEMETRY_PROBE   span-probe loop count (default 2_000_000)
+//!        GFNX_TELEMETRY_ITERS   train iters per timed window (default 20)
+//!        GFNX_BENCH_REPEATS     timed windows (default 3)
+//!
+//! Emits `BENCH_telemetry.json` via the `BenchJson` harness.
+
+use gfnx::bench::harness::{env_usize, itps_json, measure_it_per_sec, BenchJson, BenchTable};
+use gfnx::coordinator::explore::EpsSchedule;
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::coordinator::trainer::Trainer;
+use gfnx::envs::hypergrid::HypergridEnv;
+use gfnx::reward::hypergrid::HypergridReward;
+use gfnx::runtime::{NativeBackend, NativeConfig};
+use gfnx::util::json::Json;
+use std::time::Instant;
+
+/// ns/op of `body` over `n` iterations.
+fn ns_per_op<F: FnMut(usize)>(n: usize, mut body: F) -> f64 {
+    let t0 = Instant::now();
+    for i in 0..n {
+        body(i);
+    }
+    t0.elapsed().as_nanos() as f64 / n as f64
+}
+
+fn trainer(env: &HypergridEnv<HypergridReward>) -> Trainer<'_, HypergridEnv<HypergridReward>, NativeBackend> {
+    let cfg = NativeConfig::for_env(env, 16, "tb").with_hidden(64).with_workers(1);
+    let backend = NativeBackend::new(cfg, 0).expect("native backend");
+    Trainer::with_backend(env, backend, 0, EpsSchedule::none()).expect("trainer")
+}
+
+/// Total span events recorded across all histograms of the global registry.
+fn total_span_events() -> u64 {
+    let j = gfnx::telemetry::global().to_json();
+    let Some(h) = j.get("histograms").and_then(Json::as_obj) else { return 0 };
+    h.values()
+        .map(|v| v.get("count").and_then(Json::as_f64).unwrap_or(0.0) as u64)
+        .sum()
+}
+
+fn main() {
+    let probe_n = env_usize("GFNX_TELEMETRY_PROBE", 2_000_000);
+    let iters = env_usize("GFNX_TELEMETRY_ITERS", 20);
+    let repeats = env_usize("GFNX_BENCH_REPEATS", 3);
+    gfnx::telemetry::set_enabled(false);
+    println!(
+        "telemetry_overhead: {probe_n} span probes, {iters} train iters x {repeats} windows"
+    );
+
+    // 1) The disabled fast path vs an identical macro-free loop.
+    let baseline_ns = ns_per_op(probe_n, |i| {
+        std::hint::black_box(i);
+    });
+    let disabled_ns = ns_per_op(probe_n, |i| {
+        let _t = gfnx::span!("overhead.probe");
+        std::hint::black_box(i);
+    });
+    let per_span_off = (disabled_ns - baseline_ns).max(0.0);
+
+    // 2) The enabled path at the same call-site shape.
+    gfnx::telemetry::set_enabled(true);
+    let enabled_ns = ns_per_op(probe_n, |i| {
+        let _t = gfnx::span!("overhead.probe.on");
+        std::hint::black_box(i);
+    });
+    gfnx::telemetry::set_enabled(false);
+    let per_span_on = (enabled_ns - baseline_ns).max(0.0);
+    println!(
+        "  span! cost: disabled {per_span_off:.2} ns (loop {baseline_ns:.2} -> {disabled_ns:.2}), \
+         enabled {per_span_on:.1} ns"
+    );
+
+    // 3) End-to-end training, telemetry off vs on.
+    let env = HypergridEnv::new(2, 8, HypergridReward::standard(8));
+    let mut tr = trainer(&env);
+    let off = measure_it_per_sec(2, repeats, iters, || {
+        let (s, _) = tr.train_iter(&ExtraSource::None).unwrap();
+        assert!(s.loss.is_finite());
+    });
+    gfnx::telemetry::global().reset();
+    gfnx::telemetry::set_enabled(true);
+    let mut tr = trainer(&env);
+    // The closure runs for warmup calls too; count every instrumented call.
+    let mut instrumented_iters = 0usize;
+    let on = measure_it_per_sec(2, repeats, iters, || {
+        let (s, _) = tr.train_iter(&ExtraSource::None).unwrap();
+        assert!(s.loss.is_finite());
+        instrumented_iters += 1;
+    });
+    gfnx::telemetry::set_enabled(false);
+    let spans_per_iter = total_span_events() as f64 / instrumented_iters.max(1) as f64;
+
+    // Predicted disabled-mode overhead: every span the instrumented run
+    // recorded costs `per_span_off` ns when telemetry is off.
+    let iter_ns_off = 1e9 / off.mean.max(1e-12);
+    let predicted_pct = 100.0 * spans_per_iter * per_span_off / iter_ns_off;
+    let on_vs_off_pct = 100.0 * (1.0 - on.mean / off.mean.max(1e-12));
+    println!("  train it/s: off {off}, on {on} ({on_vs_off_pct:+.1}% slower when on)");
+    println!(
+        "  {spans_per_iter:.0} span events/iter -> predicted disabled-mode overhead \
+         {predicted_pct:.4}% of an iteration"
+    );
+
+    // The invariants this bench exists to enforce.
+    assert!(
+        per_span_off < 100.0,
+        "disabled span! costs {per_span_off:.1} ns — the off fast path regressed"
+    );
+    assert!(
+        predicted_pct < 3.0,
+        "disabled-mode telemetry predicted to cost {predicted_pct:.2}% of an iteration \
+         ({spans_per_iter:.0} spans x {per_span_off:.1} ns vs {iter_ns_off:.0} ns/iter)"
+    );
+
+    let mut table = BenchTable::new(
+        "telemetry_overhead — span cost and end-to-end impact",
+        &["Metric", "Value"],
+    );
+    table.row_strs(&["span! disabled (ns/call)", &format!("{per_span_off:.2}")]);
+    table.row_strs(&["span! enabled (ns/call)", &format!("{per_span_on:.1}")]);
+    table.row_strs(&["train it/s (telemetry off)", &format!("{off}")]);
+    table.row_strs(&["train it/s (telemetry on)", &format!("{on}")]);
+    table.row_strs(&["span events / iteration", &format!("{spans_per_iter:.0}")]);
+    table.row_strs(&["predicted overhead when off", &format!("{predicted_pct:.4}%")]);
+    table.print();
+
+    let mut bj = BenchJson::new("telemetry");
+    bj.meta("probe_n", Json::Num(probe_n as f64));
+    bj.meta("iters", Json::Num(iters as f64));
+    bj.meta("repeats", Json::Num(repeats as f64));
+    bj.row(Json::obj(vec![
+        ("span_disabled_ns", Json::Num(per_span_off)),
+        ("span_enabled_ns", Json::Num(per_span_on)),
+        ("it_per_sec_off", itps_json(&off)),
+        ("it_per_sec_on", itps_json(&on)),
+        ("spans_per_iter", Json::Num(spans_per_iter)),
+        ("predicted_overhead_pct_off", Json::Num(predicted_pct)),
+        ("telemetry", gfnx::telemetry::global().phases_json()),
+    ]));
+    match bj.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_telemetry.json write failed: {e}"),
+    }
+}

@@ -77,6 +77,23 @@ pub fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Run `f` once with hot-path telemetry enabled on a freshly reset global
+/// registry and return the phase-timing breakdown
+/// ([`Registry::phases_json`]) for attaching as a `telemetry` sub-object to
+/// a [`BenchJson`] row. The enabled flag is restored afterwards, so benches
+/// call this *after* their timed windows and the throughput numbers stay
+/// uninstrumented-mode.
+///
+/// [`Registry::phases_json`]: crate::telemetry::Registry::phases_json
+pub fn telemetry_phases<F: FnOnce()>(f: F) -> Json {
+    let was = crate::telemetry::enabled();
+    crate::telemetry::global().reset();
+    crate::telemetry::set_enabled(true);
+    f();
+    crate::telemetry::set_enabled(was);
+    crate::telemetry::global().phases_json()
+}
+
 /// Machine-readable bench emission: one JSON document per bench binary,
 /// written to `BENCH_<name>.json` (in `GFNX_BENCH_JSON_DIR`, defaulting to
 /// the working directory). The document is
@@ -292,6 +309,18 @@ mod tests {
     fn table_checks_arity() {
         let mut t = BenchTable::new("x", &["a", "b"]);
         t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn telemetry_phases_captures_span_breakdown() {
+        let _guard = crate::telemetry::flag_test_lock();
+        let was = crate::telemetry::enabled();
+        let phases = telemetry_phases(|| {
+            let _t = crate::span!("bench.phase.unit");
+        });
+        assert_eq!(crate::telemetry::enabled(), was, "enabled flag restored");
+        let h = phases.get("bench.phase.unit").expect("span present in breakdown");
+        assert_eq!(h.get("count").unwrap().as_usize(), Some(1));
     }
 
     #[test]

@@ -245,11 +245,17 @@ impl<'a, E: VecEnv, B: Backend> Trainer<'a, E, B> {
         &mut self,
         extra: &ExtraSource<'_, E>,
     ) -> anyhow::Result<(IterStats, Vec<E::Obj>)> {
-        let (mut batch, objs, replayed) = self.assemble_batch(extra)?;
+        let (mut batch, objs, replayed) = {
+            let _t = crate::span!("trainer.rollout");
+            self.assemble_batch(extra)?
+        };
         if self.mdb_deltas {
             batch.extra_to_deltas();
         }
-        let (loss, log_z) = self.backend.train_step(&batch)?;
+        let (loss, log_z) = {
+            let _t = crate::span!("trainer.train_step");
+            self.backend.train_step(&batch)?
+        };
         self.step += 1;
         if !replayed {
             // Replay iterations do not re-bank their own draws — only fresh

@@ -358,15 +358,18 @@ fn actor_loop<E, P>(
             }
         }
         let eps = explore.at(snap.steps);
-        let assembled = assemble_batch_with_policy(
-            env,
-            &mut policy,
-            &mut ctx,
-            &mut rng,
-            eps,
-            shard.as_mut().map(|(c, b)| (&*c, b)),
-            extra,
-        );
+        let assembled = {
+            let _t = crate::span!("engine.rollout");
+            assemble_batch_with_policy(
+                env,
+                &mut policy,
+                &mut ctx,
+                &mut rng,
+                eps,
+                shard.as_mut().map(|(c, b)| (&*c, b)),
+                extra,
+            )
+        };
         let item = match assembled {
             Ok((batch, objs, replayed)) => {
                 if !replayed {
@@ -379,7 +382,13 @@ fn actor_loop<E, P>(
             Err(e) => Err(e),
         };
         let failed = item.is_err();
-        if !chan.push_blocking(item) || failed {
+        let pushed = {
+            // Time spent here beyond the channel's own bookkeeping is the
+            // actor blocked on backpressure (queue full).
+            let _t = crate::span!("engine.actor_push_wait");
+            chan.push_blocking(item)
+        };
+        if !pushed || failed {
             // Channel closed (learner done) or own rollout failure — either
             // way this actor is finished.
             return;
@@ -462,10 +471,16 @@ where
                      learner: &mut L,
                      version: u64|
          -> anyhow::Result<()> {
-            let mut tagged = chan
-                .pop_blocking()
-                .expect("engine channel closed while the learner still runs")?;
-            let s = learner.learn(&mut tagged)?;
+            let mut tagged = {
+                // Learner blocked on an empty queue (actor-bound runs).
+                let _t = crate::span!("engine.learner_pop_wait");
+                chan.pop_blocking()
+            }
+            .expect("engine channel closed while the learner still runs")?;
+            let s = {
+                let _t = crate::span!("engine.learn");
+                learner.learn(&mut tagged)
+            }?;
             anyhow::ensure!(
                 s.loss.is_finite(),
                 "engine loss diverged at step {} (actor {}, version {})",
@@ -473,9 +488,15 @@ where
                 tagged.actor,
                 tagged.version
             );
+            // Re-expose the staleness/batch accounting through the global
+            // registry (same numbers as `EngineStats`, live instead of
+            // end-of-run).
+            crate::record!("engine.staleness", version - tagged.version);
+            crate::count!("engine.batches", 1);
             *stats.staleness_hist.entry(version - tagged.version).or_insert(0) += 1;
             stats.batches_per_actor[tagged.actor] += 1;
             if tagged.replayed {
+                crate::count!("engine.replay_batches", 1);
                 stats.replay_batches += 1;
             }
             stats.losses.push(s.loss);
@@ -489,16 +510,24 @@ where
                 learn(&mut stats, learner, version)?;
                 if (step + 1) % cfg.publish_every == 0 || step + 1 == iters {
                     version += 1;
-                    let snap = Arc::new(Snapshot {
-                        version,
-                        steps: learner.steps(),
-                        policy: learner.snapshot(),
-                    });
-                    hub.publish(Arc::clone(&snap));
+                    // Per-publish snapshot latency: snapshot + hub publish +
+                    // optional checkpoint (the user `on_publish` hook is
+                    // excluded — it is not engine cost).
+                    let snap = {
+                        let _t = crate::span!("engine.publish");
+                        let snap = Arc::new(Snapshot {
+                            version,
+                            steps: learner.steps(),
+                            policy: learner.snapshot(),
+                        });
+                        hub.publish(Arc::clone(&snap));
+                        if let Some(path) = &cfg.checkpoint {
+                            learner.checkpoint(path)?;
+                        }
+                        snap
+                    };
                     stats.publishes += 1;
-                    if let Some(path) = &cfg.checkpoint {
-                        learner.checkpoint(path)?;
-                    }
+                    crate::count!("engine.publishes", 1);
                     on_publish(&snap)?;
                 }
             }
@@ -606,6 +635,52 @@ mod tests {
         // Sync mode is staleness-free by construction.
         assert_eq!(stats.staleness_hist.keys().copied().collect::<Vec<_>>(), vec![0]);
         assert_eq!(stats.publishes, iters);
+    }
+
+    /// Acceptance criterion: instrumentation is timing-only and must not
+    /// perturb RNG streams — the bitwise sync parity guarantee holds with
+    /// telemetry *enabled*, and the hot-path spans actually record.
+    #[test]
+    fn sync_mode_parity_holds_with_telemetry_enabled() {
+        let _guard = crate::telemetry::flag_test_lock();
+        let was = crate::telemetry::enabled();
+        crate::telemetry::set_enabled(true);
+
+        let e = env(6);
+        let iters = 40u64;
+        let seed = 21u64;
+        let mut serial =
+            Trainer::with_backend(&e, backend(&e, "tb", seed), seed, EpsSchedule::none())
+                .unwrap();
+        let mut serial_losses = Vec::new();
+        for _ in 0..iters {
+            let (s, _) = serial.train_iter(&ExtraSource::None).unwrap();
+            serial_losses.push(s.loss.to_bits());
+        }
+        let mut be = backend(&e, "tb", seed);
+        let stats = train(
+            &e,
+            &mut be,
+            EpsSchedule::none(),
+            &ExtraSource::None,
+            &EngineConfig::sync(seed),
+            iters,
+            |_| Ok(()),
+        )
+        .unwrap();
+        crate::telemetry::set_enabled(was);
+
+        assert_eq!(
+            stats.losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            serial_losses,
+            "telemetry must not change the loss trace"
+        );
+        assert_eq!(param_bits(&serial.backend), param_bits(&be));
+        let reg = crate::telemetry::global();
+        for span in ["engine.rollout", "engine.learn", "engine.publish"] {
+            assert!(reg.histogram(span).count() > 0, "span '{span}' did not record");
+        }
+        assert!(reg.value_histogram("engine.staleness").count() >= iters);
     }
 
     /// Sync-mode parity extends to replay mixing and ε-exploration: the

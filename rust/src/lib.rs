@@ -57,6 +57,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod engine;
 pub mod serve;
+pub mod telemetry;
 pub mod bench;
 
 /// Convenience prelude for examples and benches.

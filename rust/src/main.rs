@@ -13,9 +13,13 @@
 //!                [--serve [--serve-samples N]]   live hot-swapped serving
 //!                [--save <ckpt> --resume <ckpt>]   checkpointed resume
 //!                [--ebgfn [--sigma S] [--samples N]]   EB-GFN (ising only)
+//!                [--telemetry | --telemetry-file <p.jsonl>]   hot-path spans
+//!                [--telemetry-interval <secs>]   export cadence
 //!   list-configs
 //!   info         --config <name> --loss <l>   (print the artifact manifest)
 //!   check-bench  <BENCH_*.json...>   (validate emitted bench documents)
+//!   check-telemetry  <telemetry.jsonl> [required-span ...]   (validate a
+//!                --telemetry-file export; used by the CI telemetry smoke)
 //!
 //! The default `--backend native` trains end-to-end in pure Rust with no
 //! AOT artifacts; `--backend xla` replays the fused AOT graphs (requires
@@ -37,11 +41,14 @@ use gfnx::envs::VecEnv;
 use gfnx::reward::ising::torus_adjacency;
 use gfnx::runtime::{Artifact, Backend, NativeBackend, NativeConfig, NativePolicy};
 use gfnx::serve::SamplerService;
+use gfnx::telemetry;
 use gfnx::util::cli::{Args, Cli};
 use gfnx::util::linalg::Mat;
 use gfnx::util::logging::MetricsLog;
 use gfnx::util::rng::Rng;
 use gfnx::util::threadpool::default_workers;
+use gfnx::{log_error, log_info, log_warn};
+use std::sync::Arc;
 
 fn main() {
     let env_help = registry::env_usage();
@@ -89,6 +96,17 @@ fn main() {
     .flag("sigma", "0.2", "true Ising coupling strength (ebgfn / ising reward)")
     .flag("samples", "2000", "EB-GFN dataset size (paper Table 9)")
     .flag("log", "", "JSONL metrics path (empty = stdout only)")
+    .switch(
+        "telemetry",
+        "enable hot-path telemetry (span histograms, counters; also via \
+         GFNX_TELEMETRY=1) and print the registry at end of run",
+    )
+    .flag(
+        "telemetry-file",
+        "",
+        "append periodic registry snapshots to this JSONL file (implies --telemetry)",
+    )
+    .flag("telemetry-interval", "1", "seconds between telemetry snapshots")
     .switch("quiet", "suppress progress lines");
     let args = cli.parse();
     let command = args
@@ -109,14 +127,87 @@ fn main() {
             };
             info(config, args.get("loss"))
         }
-        "train" => train(&args),
+        "train" => (|| {
+            let tel = telemetry_setup(&args)?;
+            let out = train(&args);
+            // Print/export the registry even on failure — a run that died
+            // mid-training is exactly when the phase timings matter.
+            tel.finish();
+            out
+        })(),
         "check-bench" => check_bench(&args),
+        "check-telemetry" => check_telemetry(&args),
         other => Err(anyhow::anyhow!("unknown command {other:?}")),
     };
     if let Err(e) = result {
-        eprintln!("error: {e}");
+        log_error!("error: {e}");
         std::process::exit(1);
     }
+}
+
+/// Telemetry lifecycle of one `train` run: resolve the enabled flag from
+/// `GFNX_TELEMETRY` / `--telemetry` / `--telemetry-file`, spawn the JSONL
+/// exporter when a file is given, and render the registry at the end.
+struct Telemetry {
+    exporter: Option<telemetry::Exporter>,
+    enabled: bool,
+}
+
+fn telemetry_setup(args: &Args) -> anyhow::Result<Telemetry> {
+    telemetry::init_from_env();
+    let file = args.get("telemetry-file");
+    if args.get_bool("telemetry") || !file.is_empty() {
+        telemetry::set_enabled(true);
+    }
+    let enabled = telemetry::enabled();
+    let exporter = if enabled && !file.is_empty() {
+        let secs = args.get_f64("telemetry-interval");
+        anyhow::ensure!(
+            secs.is_finite() && secs > 0.0,
+            "--telemetry-interval must be a positive number of seconds (got {secs})"
+        );
+        Some(telemetry::Exporter::spawn(
+            "gfnx.train",
+            std::path::Path::new(file),
+            std::time::Duration::from_secs_f64(secs),
+            Arc::clone(telemetry::global()),
+        )?)
+    } else {
+        None
+    };
+    Ok(Telemetry { exporter, enabled })
+}
+
+impl Telemetry {
+    /// Write the final snapshot (joining the exporter thread) and print the
+    /// end-of-run span/counter table.
+    fn finish(self) {
+        if let Some(exp) = self.exporter {
+            exp.stop();
+        }
+        if self.enabled {
+            print!("{}", telemetry::global().render());
+        }
+    }
+}
+
+/// Validate telemetry JSONL exports (CLI
+/// `check-telemetry <file> [required-span ...]`; CI runs this after the
+/// telemetry train smoke with the hot-path span names).
+fn check_telemetry(args: &Args) -> anyhow::Result<()> {
+    let pos = args.positional();
+    anyhow::ensure!(
+        pos.len() >= 2,
+        "usage: gfnx check-telemetry <telemetry.jsonl> [required-span ...]"
+    );
+    let file = &pos[1];
+    let spans: Vec<&str> = pos[2..].iter().map(|s| s.as_str()).collect();
+    let text = std::fs::read_to_string(file)
+        .map_err(|e| anyhow::anyhow!("reading {file}: {e}"))?;
+    let summary = telemetry::check_telemetry_jsonl(&text, &spans)
+        .map_err(|e| anyhow::anyhow!("{file}: {e}"))?;
+    println!("ok {file} ({summary})");
+    Ok(())
 }
 
 /// Registry-generated config listing: families, sized configs, losses.
@@ -241,7 +332,7 @@ fn native_backend_for<E: VecEnv>(
         0 => default_workers(),
         w => w,
     };
-    println!(
+    log_info!(
         "resumed from {resume} at {} steps (Adam t = {}, batch {}, hidden {})",
         backend.steps(),
         backend.adam_t(),
@@ -293,7 +384,7 @@ where
             let save = args.get("save");
             if !save.is_empty() {
                 trainer.backend.save_checkpoint(std::path::Path::new(save))?;
-                println!("saved checkpoint to {save}");
+                log_info!("saved checkpoint to {save}");
             }
             Ok(())
         }
@@ -315,7 +406,7 @@ where
                 || args.get_usize("layers") != 2
                 || args.get_usize("workers") != 0
             {
-                eprintln!(
+                log_warn!(
                     "note: --batch/--hidden/--layers/--workers apply to the native \
                      backend only; the xla backend uses the artifact's baked-in shapes"
                 );
@@ -350,7 +441,7 @@ where
 {
     let name = format!("{config}.{loss}");
     let svc = spawn_serve::<E>(args, env, backend.to_policy());
-    println!(
+    log_info!(
         "training {name} on the async engine: {} actor(s), publish every {}, {}{}",
         cfg.actors,
         cfg.publish_every,
@@ -382,9 +473,14 @@ where
     if !args.get_bool("serve") {
         return None;
     }
-    Some(SamplerService::spawn(env.clone(), move || {
-        Ok(Box::new(initial) as Box<dyn gfnx::runtime::BatchPolicy>)
-    }))
+    let factory = move || Ok(Box::new(initial) as Box<dyn gfnx::runtime::BatchPolicy>);
+    // Under --telemetry the service registers its serve.* metrics in the
+    // global registry, so they ride the same export stream as the trainer's.
+    Some(if telemetry::enabled() {
+        SamplerService::spawn_in(env.clone(), factory, Arc::clone(telemetry::global()))
+    } else {
+        SamplerService::spawn(env.clone(), factory)
+    })
 }
 
 /// Post-training serve probe: draw `--serve-samples` objects from the live
@@ -399,7 +495,7 @@ fn finish_serve<Obj: Send + 'static>(
     let mean_lr =
         outs.iter().map(|o| o.log_reward).sum::<f64>() / outs.len().max(1) as f64;
     let snap = svc.stats();
-    println!(
+    log_info!(
         "served {} objects from the final policy: mean log-reward {mean_lr:.3}; \
          {} hot-swap(s) applied, {} rejected, occupancy {:.2}",
         outs.len(),
@@ -426,12 +522,12 @@ fn report_engine(name: &str, stats: &EngineStats, args: &Args) -> anyhow::Result
     let w = stats.losses.len().min(10);
     let head = mean(&stats.losses[..w]);
     let tail = mean(&stats.losses[stats.losses.len() - w..]);
-    println!(
+    log_info!(
         "trained {name} for {} steps / {} publishes: loss {head:.4} (first {w}) -> \
          {tail:.4} (last {w}), logZ {:.3}",
         stats.iters, stats.publishes, stats.final_log_z
     );
-    println!(
+    log_info!(
         "  throughput {:.1} batches/s; staleness mean {:.2} / max {} publishes; \
          batches per actor {:?}; {} replay batches",
         stats.batches_per_sec(),
@@ -446,7 +542,7 @@ fn report_engine(name: &str, stats: &EngineStats, args: &Args) -> anyhow::Result
             .iter()
             .map(|(s, c)| format!("{s}:{c}"))
             .collect();
-        println!("  staleness histogram [{}]", hist.join(" "));
+        log_info!("  staleness histogram [{}]", hist.join(" "));
     }
     Ok(())
 }
@@ -509,7 +605,7 @@ fn train_ebgfn(args: &Args, config: &str, n: usize) -> anyhow::Result<()> {
     j_true.scale(sigma);
     let mut data_rng = Rng::new(seed);
     let dataset = generate_ising_dataset(n, sigma, args.get_usize("samples"), &mut data_rng);
-    println!(
+    log_info!(
         "EB-GFN: {} MCMC samples from the {n}x{n} torus, sigma = {sigma}",
         dataset.len()
     );
@@ -574,7 +670,7 @@ fn run_ebgfn_engine(
         env,
         trainer.backend.to_policy(),
     );
-    println!(
+    log_info!(
         "training {name} on the async engine: {} actor(s), publish every {}{}",
         cfg.actors,
         cfg.publish_every,
@@ -605,7 +701,7 @@ fn run_ebgfn_engine(
         )?
     };
     report_engine(&name, &stats, args)?;
-    println!(
+    log_info!(
         "  -log RMSE(J) {init_nlr:.3} (init) -> {best_nlr:.3} (best); MH accept {:.2}",
         trainer.accept_rate
     );
@@ -641,7 +737,7 @@ fn run_ebgfn<B: Backend>(
     } else {
         MetricsLog::to_file(&name, std::path::Path::new(log_path))?
     };
-    println!(
+    log_info!(
         "training {name} on the {} backend ({} iters, batch {})",
         trainer.backend.backend_name(),
         iters,
@@ -679,7 +775,7 @@ fn run_ebgfn<B: Backend>(
         }
     }
     let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
-    println!(
+    log_info!(
         "trained {name} for {iters} iters on {}: GFN loss {:.3} (first {w}) -> {:.3} (last {w}); \
          -log RMSE(J) {init_nlr:.3} (init) -> {best_nlr:.3} (best)",
         trainer.backend.backend_name(),
@@ -717,7 +813,7 @@ fn run_train<E: VecEnv, B: Backend>(
     } else {
         MetricsLog::to_file(&name, std::path::Path::new(log_path))?
     };
-    println!(
+    log_info!(
         "training {name} on the {} backend ({} iters, batch {})",
         trainer.backend.backend_name(),
         iters,
@@ -745,14 +841,14 @@ fn run_train<E: VecEnv, B: Backend>(
         }
     }
     let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
-    println!(
+    log_info!(
         "trained {name} for {iters} iterations on {}: loss {:.4} (first 10 iters) -> {:.4} (last 10)",
         trainer.backend.backend_name(),
         mean(&first_window),
         mean(&last_window)
     );
     if trainer.replay_len() > 0 {
-        println!("replay buffer holds {} high-reward objects", trainer.replay_len());
+        log_info!("replay buffer holds {} high-reward objects", trainer.replay_len());
     }
     Ok(())
 }

@@ -624,22 +624,29 @@ impl Backend for NativeBackend {
     }
 
     fn train_step(&mut self, batch: &TrajBatch) -> anyhow::Result<(f32, f32)> {
-        let (loss, grads) = self.compute(batch)?;
+        // Phase spans: forward + loss + manual backward vs the Adam update.
+        let (loss, grads) = {
+            let _t = crate::span!("native.loss_backward");
+            self.compute(batch)?
+        };
         let hyper = adam::AdamHyper {
             lr: self.net.cfg.lr,
             z_lr: self.net.cfg.z_lr,
             weight_decay: self.net.cfg.weight_decay,
         };
         let logz_idx = self.net.idx_logz();
-        adam::adam_step(
-            self.net.leaves_mut(),
-            &mut self.m,
-            &mut self.v,
-            &mut self.t,
-            &grads.leaves,
-            logz_idx,
-            hyper,
-        );
+        {
+            let _t = crate::span!("native.adam");
+            adam::adam_step(
+                self.net.leaves_mut(),
+                &mut self.m,
+                &mut self.v,
+                &mut self.t,
+                &grads.leaves,
+                logz_idx,
+                hyper,
+            );
+        }
         self.steps += 1;
         Ok((loss as f32, self.net.log_z() as f32))
     }

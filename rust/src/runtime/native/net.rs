@@ -242,6 +242,7 @@ impl NativeNet {
                 && bwd_mask.len() == c.batch * c.n_bwd_actions,
             "native policy: input shape mismatch"
         );
+        let _t = crate::span!("native.dispatch");
         let cache = self.forward(obs, fwd_mask, bwd_mask, c.batch, true);
         Ok((cache.fwd_logp, cache.bwd_logp, cache.flow))
     }
@@ -379,6 +380,10 @@ pub(crate) fn dense_rows(
     debug_assert_eq!(x.len(), n * k);
     debug_assert_eq!(w.len(), k * m);
     debug_assert_eq!(bias.len(), m);
+    // Per-GEMM span + rows×inner×cols FLOP counter (2 FLOPs per fused
+    // multiply-add); the registry derives `native.gemm.dense.gflops`.
+    let _t = crate::span!("native.gemm.dense");
+    crate::count!("native.gemm.dense.flops", 2 * n * k * m);
     let workers = effective_workers(workers, n, n * k * m);
     let rows_per = ((n + workers - 1) / workers).max(1);
     let n_chunks = (n + rows_per - 1) / rows_per;
@@ -425,6 +430,8 @@ pub(crate) fn matmul_tn(
 ) -> Vec<f32> {
     debug_assert_eq!(x.len(), n * k);
     debug_assert_eq!(g.len(), n * m);
+    let _t = crate::span!("native.gemm.tn");
+    crate::count!("native.gemm.tn.flops", 2 * n * k * m);
     let workers = effective_workers(workers, k, n * k * m);
     let rows_per = ((k + workers - 1) / workers).max(1);
     let n_chunks = (k + rows_per - 1) / rows_per;
@@ -470,6 +477,8 @@ pub(crate) fn matmul_nt(
 ) -> Vec<f32> {
     debug_assert_eq!(g.len(), n * m);
     debug_assert_eq!(w.len(), k * m);
+    let _t = crate::span!("native.gemm.nt");
+    crate::count!("native.gemm.nt.flops", 2 * n * m * k);
     let workers = effective_workers(workers, n, n * m * k);
     let rows_per = ((n + workers - 1) / workers).max(1);
     let n_chunks = (n + rows_per - 1) / rows_per;

@@ -30,8 +30,11 @@
 //!   takes effect at the next dispatch, mid-drain included, which is how
 //!   the training engine's `train --serve` keeps live requests on the
 //!   improving policy (see [`crate::engine`]).
-//! - [`stats::ServeStats`] — atomic counters (dispatches, occupancy,
-//!   trajectories/sec) readable from any thread.
+//! - [`stats::ServeStats`] — the service's metrics (dispatches, occupancy,
+//!   request latency histograms, trajectories/sec), registered as `serve.*`
+//!   entries in a telemetry [`Registry`](crate::telemetry::Registry) and
+//!   readable from any thread; [`SamplerService::spawn_in`] folds them into
+//!   the process-wide telemetry export.
 //!
 //! ## Determinism
 //!

@@ -1,29 +1,54 @@
-//! Service counters: lock-free, written by the worker thread, snapshot-read
-//! from any thread (the monitoring side of the QPS story).
+//! Service metrics, exposed *through* the telemetry [`Registry`]: every
+//! counter, latency histogram, and gauge of one [`SamplerService`] is a
+//! named registry metric (`serve.*`), so a service's stats appear in the
+//! same `Registry::to_json` payload / JSONL export as the trainer's and
+//! engine's — there is no second bookkeeping system beside the registry.
+//!
+//! The handles are plain `Arc`ed atomics, written lock-free by the worker
+//! thread and snapshot-read from any thread. By default each service gets
+//! its own scoped registry (tests and multiple services do not share
+//! counters); [`SamplerService::spawn_in`] lets a caller hand in the
+//! process-wide [`telemetry::global`] registry so serve metrics ride the
+//! `--telemetry-file` export stream.
+//!
+//! [`SamplerService`]: crate::serve::SamplerService
+//! [`SamplerService::spawn_in`]: crate::serve::SamplerService::spawn_in
+//! [`telemetry::global`]: crate::telemetry::global
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::telemetry::{Counter, Gauge, Histogram, Registry};
+use std::sync::Arc;
 use std::time::Instant;
 
-/// Shared atomic counters of one [`SamplerService`].
+/// Shared metric handles of one [`SamplerService`], all registered in a
+/// telemetry [`Registry`] under `serve.*` names.
 ///
 /// [`SamplerService`]: crate::serve::SamplerService
 pub struct ServeStats {
-    pub requests_submitted: AtomicU64,
-    pub requests_completed: AtomicU64,
+    registry: Arc<Registry>,
+    pub requests_submitted: Arc<Counter>,
+    pub requests_completed: Arc<Counter>,
     /// Requests answered with an error (shutdown, policy failure). Together
     /// with `requests_completed` this accounts for every submitted request,
     /// so "pending = submitted − completed − failed" stays meaningful for
     /// monitors after a failure.
-    pub requests_failed: AtomicU64,
-    pub trajectories_completed: AtomicU64,
-    pub policy_dispatches: AtomicU64,
-    pub active_row_steps: AtomicU64,
-    pub total_row_steps: AtomicU64,
+    pub requests_failed: Arc<Counter>,
+    pub trajectories_completed: Arc<Counter>,
+    pub policy_dispatches: Arc<Counter>,
+    pub active_row_steps: Arc<Counter>,
+    pub total_row_steps: Arc<Counter>,
     /// Hot-swaps applied by the worker (see `SamplerService::hot_swap`).
-    pub policy_swaps: AtomicU64,
+    pub policy_swaps: Arc<Counter>,
     /// Hot-swaps dropped because the incoming policy's dispatch shape did
     /// not match the serving one.
-    pub swaps_rejected: AtomicU64,
+    pub swaps_rejected: Arc<Counter>,
+    /// Enqueue → ticket-fulfilled latency per completed request (ns).
+    pub request_latency: Arc<Histogram>,
+    /// Enqueue → first trajectory issued into the slot table (ns): the
+    /// queueing + admission delay a request sees before work starts.
+    pub first_dispatch_latency: Arc<Histogram>,
+    /// Cumulative slot occupancy (active / total row-steps), refreshed
+    /// after each drain.
+    pub occupancy: Arc<Gauge>,
     started: Instant,
 }
 
@@ -34,32 +59,49 @@ impl Default for ServeStats {
 }
 
 impl ServeStats {
+    /// Stats backed by a fresh scoped registry (the default for tests and
+    /// standalone services).
     pub fn new() -> ServeStats {
+        Self::in_registry(Arc::new(Registry::new()))
+    }
+
+    /// Register the `serve.*` metrics in `registry` (get-or-register, so
+    /// two services sharing a registry share — i.e. merge — counters).
+    pub fn in_registry(registry: Arc<Registry>) -> ServeStats {
         ServeStats {
-            requests_submitted: AtomicU64::new(0),
-            requests_completed: AtomicU64::new(0),
-            requests_failed: AtomicU64::new(0),
-            trajectories_completed: AtomicU64::new(0),
-            policy_dispatches: AtomicU64::new(0),
-            active_row_steps: AtomicU64::new(0),
-            total_row_steps: AtomicU64::new(0),
-            policy_swaps: AtomicU64::new(0),
-            swaps_rejected: AtomicU64::new(0),
+            requests_submitted: registry.counter("serve.requests_submitted"),
+            requests_completed: registry.counter("serve.requests_completed"),
+            requests_failed: registry.counter("serve.requests_failed"),
+            trajectories_completed: registry.counter("serve.trajectories_completed"),
+            policy_dispatches: registry.counter("serve.policy_dispatches"),
+            active_row_steps: registry.counter("serve.active_row_steps"),
+            total_row_steps: registry.counter("serve.total_row_steps"),
+            policy_swaps: registry.counter("serve.policy_swaps"),
+            swaps_rejected: registry.counter("serve.swaps_rejected"),
+            request_latency: registry.histogram("serve.request_latency"),
+            first_dispatch_latency: registry.histogram("serve.first_dispatch_latency"),
+            occupancy: registry.gauge("serve.occupancy"),
             started: Instant::now(),
+            registry,
         }
+    }
+
+    /// The backing registry (scoped or shared-global).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
     }
 
     pub fn snapshot(&self) -> ServeSnapshot {
         ServeSnapshot {
-            requests_submitted: self.requests_submitted.load(Ordering::Relaxed),
-            requests_completed: self.requests_completed.load(Ordering::Relaxed),
-            requests_failed: self.requests_failed.load(Ordering::Relaxed),
-            trajectories_completed: self.trajectories_completed.load(Ordering::Relaxed),
-            policy_dispatches: self.policy_dispatches.load(Ordering::Relaxed),
-            active_row_steps: self.active_row_steps.load(Ordering::Relaxed),
-            total_row_steps: self.total_row_steps.load(Ordering::Relaxed),
-            policy_swaps: self.policy_swaps.load(Ordering::Relaxed),
-            swaps_rejected: self.swaps_rejected.load(Ordering::Relaxed),
+            requests_submitted: self.requests_submitted.get(),
+            requests_completed: self.requests_completed.get(),
+            requests_failed: self.requests_failed.get(),
+            trajectories_completed: self.trajectories_completed.get(),
+            policy_dispatches: self.policy_dispatches.get(),
+            active_row_steps: self.active_row_steps.get(),
+            total_row_steps: self.total_row_steps.get(),
+            policy_swaps: self.policy_swaps.get(),
+            swaps_rejected: self.swaps_rejected.get(),
             elapsed_s: self.started.elapsed().as_secs_f64(),
         }
     }
@@ -103,18 +145,62 @@ impl ServeSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json::Json;
 
     #[test]
     fn snapshot_reflects_counters() {
         let s = ServeStats::new();
-        s.trajectories_completed.fetch_add(10, Ordering::Relaxed);
-        s.active_row_steps.fetch_add(30, Ordering::Relaxed);
-        s.total_row_steps.fetch_add(40, Ordering::Relaxed);
+        s.trajectories_completed.add(10);
+        s.active_row_steps.add(30);
+        s.total_row_steps.add(40);
         let snap = s.snapshot();
         assert_eq!(snap.trajectories_completed, 10);
         assert!((snap.occupancy() - 0.75).abs() < 1e-12);
         assert!(snap.elapsed_s >= 0.0);
         let empty = ServeStats::new().snapshot();
         assert_eq!(empty.occupancy(), 1.0);
+    }
+
+    /// The stats ARE registry metrics: the same atoms are reachable by name
+    /// and appear in the registry's JSON payload.
+    #[test]
+    fn stats_are_registry_metrics() {
+        let s = ServeStats::new();
+        s.requests_submitted.add(3);
+        s.request_latency.record(1_000);
+        s.occupancy.set(0.9);
+        let reg = s.registry();
+        assert_eq!(reg.counter("serve.requests_submitted").get(), 3);
+        assert_eq!(reg.histogram("serve.request_latency").count(), 1);
+        let j = reg.to_json();
+        assert_eq!(
+            j.get("counters")
+                .and_then(|c| c.get("serve.requests_submitted"))
+                .and_then(Json::as_usize),
+            Some(3)
+        );
+        assert!(j
+            .get("histograms")
+            .and_then(|h| h.get("serve.request_latency"))
+            .is_some());
+        assert_eq!(
+            j.get("gauges")
+                .and_then(|g| g.get("serve.occupancy"))
+                .and_then(Json::as_f64),
+            Some(0.9)
+        );
+    }
+
+    /// Two services sharing one registry merge their counters (get-or-
+    /// register semantics) — the documented behavior for the global
+    /// registry under `--serve --telemetry`.
+    #[test]
+    fn shared_registry_merges_counters() {
+        let reg = Arc::new(Registry::new());
+        let a = ServeStats::in_registry(Arc::clone(&reg));
+        let b = ServeStats::in_registry(Arc::clone(&reg));
+        a.requests_submitted.inc();
+        b.requests_submitted.inc();
+        assert_eq!(reg.counter("serve.requests_submitted").get(), 2);
     }
 }

@@ -19,11 +19,12 @@ use super::stats::{ServeSnapshot, ServeStats};
 use super::traj_seed;
 use crate::envs::VecEnv;
 use crate::runtime::policy::{BatchPolicy, PolicyShape};
+use crate::telemetry::Registry;
 use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// The hot-swap mailbox: latest-wins slot holding the next policy to serve
 /// (see [`SamplerService::hot_swap`]).
@@ -49,12 +50,12 @@ impl SwappablePolicy {
         drop(slot);
         if next.shape() == self.current.shape() {
             self.current = next;
-            self.stats.policy_swaps.fetch_add(1, Ordering::Relaxed);
+            self.stats.policy_swaps.inc();
         } else {
             // A mis-shaped policy would corrupt the running slot table;
             // drop it and count the rejection instead of poisoning the
             // service.
-            self.stats.swaps_rejected.fetch_add(1, Ordering::Relaxed);
+            self.stats.swaps_rejected.inc();
         }
     }
 }
@@ -78,6 +79,9 @@ impl BatchPolicy for SwappablePolicy {
 struct WorkItem<Obj> {
     req: SampleRequest,
     ticket: Arc<TicketShared<Obj>>,
+    /// Enqueue time, for the `serve.request_latency` and
+    /// `serve.first_dispatch_latency` histograms.
+    submitted: Instant,
 }
 
 /// An in-flight request inside one worker drain.
@@ -88,6 +92,7 @@ struct InFlight<Obj> {
     issued: usize,
     done: usize,
     outputs: Vec<Option<SampleOutput<Obj>>>,
+    submitted: Instant,
 }
 
 /// Bookkeeping of one worker drain. A drain can run indefinitely under
@@ -125,8 +130,24 @@ impl<Obj: Send + 'static> SamplerService<Obj> {
         E: VecEnv<Obj = Obj> + Send + 'static,
         F: FnOnce() -> anyhow::Result<Box<dyn BatchPolicy>> + Send + 'static,
     {
+        Self::spawn_in(env, policy_factory, Arc::new(Registry::new()))
+    }
+
+    /// Like [`SamplerService::spawn`], but register the service's `serve.*`
+    /// metrics in `registry` instead of a fresh scoped one — pass
+    /// [`crate::telemetry::global`] to fold serve stats into the process
+    /// telemetry export (`train --serve --telemetry-file …`).
+    pub fn spawn_in<E, F>(
+        env: E,
+        policy_factory: F,
+        registry: Arc<Registry>,
+    ) -> SamplerService<Obj>
+    where
+        E: VecEnv<Obj = Obj> + Send + 'static,
+        F: FnOnce() -> anyhow::Result<Box<dyn BatchPolicy>> + Send + 'static,
+    {
         let queue: Queue<WorkItem<Obj>> = Queue::new();
-        let stats = Arc::new(ServeStats::new());
+        let stats = Arc::new(ServeStats::in_registry(registry));
         let swap: SwapSlot = Arc::new(Mutex::new(None));
         let worker_queue = queue.clone();
         let worker_stats = Arc::clone(&stats);
@@ -154,13 +175,13 @@ impl<Obj: Send + 'static> SamplerService<Obj> {
     /// Enqueue a request; returns immediately with a waitable ticket.
     pub fn submit(&self, req: SampleRequest) -> SampleTicket<Obj> {
         let shared = TicketShared::new();
-        self.stats.requests_submitted.fetch_add(1, Ordering::Relaxed);
-        let item = WorkItem { req, ticket: Arc::clone(&shared) };
+        self.stats.requests_submitted.inc();
+        let item = WorkItem { req, ticket: Arc::clone(&shared), submitted: Instant::now() };
         if !self.queue.push(item) {
             shared.fulfill(Err(anyhow::anyhow!(
                 "sampler service is shut down (queue closed)"
             )));
-            self.stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+            self.stats.requests_failed.inc();
         }
         SampleTicket { shared }
     }
@@ -178,6 +199,12 @@ impl<Obj: Send + 'static> SamplerService<Obj> {
     /// Point-in-time service counters.
     pub fn stats(&self) -> ServeSnapshot {
         self.stats.snapshot()
+    }
+
+    /// The telemetry registry backing this service's `serve.*` metrics
+    /// (scoped by default; shared if spawned via [`SamplerService::spawn_in`]).
+    pub fn registry(&self) -> &Arc<Registry> {
+        self.stats.registry()
     }
 
     /// Stop accepting requests, finish queued + in-flight work, join the
@@ -213,7 +240,8 @@ fn admit<Obj>(
     if item.req.n_samples == 0 {
         // Count before fulfilling: a waiter that wakes on fulfill() must
         // already see the completion in a stats snapshot.
-        stats.requests_completed.fetch_add(1, Ordering::Relaxed);
+        stats.requests_completed.inc();
+        stats.request_latency.record(item.submitted.elapsed().as_nanos() as u64);
         item.ticket.fulfill(Ok(Vec::new()));
         return;
     }
@@ -230,6 +258,7 @@ fn admit<Obj>(
             issued: 0,
             done: 0,
             outputs: (0..n).map(|_| None).collect(),
+            submitted: item.submitted,
         },
     );
     s.pending.push_back(id);
@@ -252,7 +281,7 @@ fn worker_loop<E, F>(
             queue.close();
             while let Some(item) = queue.try_pop() {
                 item.ticket.fulfill(Err(anyhow::anyhow!("policy init failed: {e}")));
-                stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+                stats.requests_failed.inc();
             }
             return;
         }
@@ -283,6 +312,13 @@ fn worker_loop<E, F>(
                             .expect("pending id without in-flight entry");
                         if f.issued < f.n {
                             let i = f.issued;
+                            if i == 0 {
+                                // First trajectory of this request enters
+                                // the slot table: queueing delay is over.
+                                stats
+                                    .first_dispatch_latency
+                                    .record(f.submitted.elapsed().as_nanos() as u64);
+                            }
                             f.issued += 1;
                             let seed = traj_seed(f.seed, i as u64);
                             if f.issued == f.n {
@@ -299,7 +335,7 @@ fn worker_loop<E, F>(
                 }
             },
             |r: TrajResult<E::Obj>| {
-                stats.trajectories_completed.fetch_add(1, Ordering::Relaxed);
+                stats.trajectories_completed.inc();
                 let mut guard = drain.borrow_mut();
                 let f = guard
                     .inflight
@@ -325,7 +361,8 @@ fn worker_loop<E, F>(
                         .collect();
                     // Count before fulfilling (see admit()): waiters woken
                     // by fulfill() read a consistent stats snapshot.
-                    stats.requests_completed.fetch_add(1, Ordering::Relaxed);
+                    stats.requests_completed.inc();
+                    stats.request_latency.record(f.submitted.elapsed().as_nanos() as u64);
                     f.ticket.fulfill(Ok(outs));
                 }
             },
@@ -333,9 +370,15 @@ fn worker_loop<E, F>(
 
         match result {
             Ok(s) => {
-                stats.policy_dispatches.fetch_add(s.dispatches, Ordering::Relaxed);
-                stats.active_row_steps.fetch_add(s.active_row_steps, Ordering::Relaxed);
-                stats.total_row_steps.fetch_add(s.total_row_steps, Ordering::Relaxed);
+                stats.policy_dispatches.add(s.dispatches);
+                stats.active_row_steps.add(s.active_row_steps);
+                stats.total_row_steps.add(s.total_row_steps);
+                let total = stats.total_row_steps.get();
+                if total > 0 {
+                    stats
+                        .occupancy
+                        .set(stats.active_row_steps.get() as f64 / total as f64);
+                }
             }
             Err(e) => {
                 // The engine is wedged (policy failure or env invariant
@@ -344,12 +387,12 @@ fn worker_loop<E, F>(
                 let msg = format!("serve worker failed: {e}");
                 for f in drain.borrow_mut().inflight.values() {
                     f.ticket.fulfill(Err(anyhow::anyhow!("{msg}")));
-                    stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+                    stats.requests_failed.inc();
                 }
                 queue.close();
                 while let Some(item) = queue.try_pop() {
                     item.ticket.fulfill(Err(anyhow::anyhow!("{msg}")));
-                    stats.requests_failed.fetch_add(1, Ordering::Relaxed);
+                    stats.requests_failed.inc();
                 }
                 return;
             }
@@ -491,5 +534,74 @@ mod tests {
         let _ = svc.sample(4, 0).unwrap();
         assert_eq!(svc.stats().policy_swaps, 1, "only the latest pending swap applies");
         svc.shutdown();
+    }
+
+    /// Satellite: failure accounting. With a policy that fails mid-serve,
+    /// every submitted request is answered exactly once — completed (the
+    /// zero-sample fast path) or failed (in-flight, queued, and
+    /// post-shutdown submissions) — so
+    /// `submitted == completed + failed + pending` holds with `pending = 0`
+    /// once all tickets resolve.
+    #[test]
+    fn failure_accounting_balances_under_worker_shutdown() {
+        struct FailingPolicy {
+            shape: PolicyShape,
+        }
+        impl BatchPolicy for FailingPolicy {
+            fn shape(&self) -> PolicyShape {
+                self.shape
+            }
+            fn eval(
+                &mut self,
+                _obs: &[f32],
+                _fwd: &[f32],
+                _bwd: &[f32],
+            ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+                anyhow::bail!("injected policy failure")
+            }
+        }
+        let env = HypergridEnv::new(2, 6, HypergridReward::standard(6));
+        let shape = PolicyShape::of_env(&env, 4);
+        let svc: SamplerService<Vec<i32>> = SamplerService::spawn(env, move || {
+            Ok(Box::new(FailingPolicy { shape }) as Box<dyn BatchPolicy>)
+        });
+        let t0 = svc.submit(SampleRequest { n_samples: 0, seed: 1 });
+        let t1 = svc.submit(SampleRequest { n_samples: 5, seed: 2 });
+        let t2 = svc.submit(SampleRequest { n_samples: 3, seed: 3 });
+        assert!(t0.wait().is_ok(), "empty request completes before any dispatch");
+        assert!(t1.wait().is_err(), "in-flight request fails with the worker");
+        assert!(t2.wait().is_err(), "queued request fails on worker shutdown");
+        // The worker has stopped serving: a late submission fails too,
+        // either immediately (queue closed) or via the drain loop.
+        let t3 = svc.submit(SampleRequest { n_samples: 2, seed: 4 });
+        assert!(t3.wait().is_err());
+        let snap = svc.stats();
+        assert_eq!(snap.requests_submitted, 4);
+        assert_eq!(snap.requests_completed, 1);
+        assert_eq!(snap.requests_failed, 3);
+        assert_eq!(
+            snap.requests_submitted,
+            snap.requests_completed + snap.requests_failed,
+            "no request lost or double-counted"
+        );
+        svc.shutdown();
+    }
+
+    /// The service's latency histograms and occupancy gauge live in its
+    /// registry and populate per request.
+    #[test]
+    fn latency_histograms_and_occupancy_populate() {
+        let svc = service(4);
+        let reg = Arc::clone(svc.registry());
+        let outs = svc.sample(8, 5).unwrap();
+        assert_eq!(outs.len(), 8);
+        svc.shutdown(); // drain accounting (occupancy gauge) lands by join
+        let lat = reg.histogram("serve.request_latency").snapshot();
+        assert_eq!(lat.count, 1, "one completed request, one latency sample");
+        assert!(lat.sum > 0);
+        assert!(lat.percentile(0.5) <= lat.percentile(0.99));
+        assert_eq!(reg.histogram("serve.first_dispatch_latency").count(), 1);
+        let occ = reg.gauge("serve.occupancy").get();
+        assert!(occ > 0.0 && occ <= 1.0, "occupancy gauge set after drain: {occ}");
     }
 }

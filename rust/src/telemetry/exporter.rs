@@ -1,0 +1,246 @@
+//! Periodic JSONL export of registry snapshots, plus the schema validator
+//! behind the `check-telemetry` CLI subcommand.
+//!
+//! The exporter reuses the [`MetricsLog`] JSONL stream: each line is
+//! `{"run": ..., "step": k, "t": secs, "telemetry": <Registry::to_json()>}`
+//! where `step` counts snapshots. A final snapshot is always written on
+//! [`Exporter::stop`] (or drop), so even runs shorter than the export
+//! interval produce at least one line.
+
+use crate::telemetry::Registry;
+use crate::util::json::Json;
+use crate::util::logging::MetricsLog;
+use std::path::Path;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+struct Shared {
+    stop: Mutex<bool>,
+    cv: Condvar,
+}
+
+/// Background thread appending registry snapshots to a JSONL file every
+/// `interval`. Stop (or drop) flushes one last snapshot and joins.
+pub struct Exporter {
+    shared: Arc<Shared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Exporter {
+    /// Spawn the exporter thread. The file is opened (append mode) in the
+    /// caller's thread so setup errors surface immediately.
+    pub fn spawn(
+        run: &str,
+        path: &Path,
+        interval: Duration,
+        registry: Arc<Registry>,
+    ) -> anyhow::Result<Exporter> {
+        let mut log = MetricsLog::to_file(run, path)?;
+        let shared = Arc::new(Shared { stop: Mutex::new(false), cv: Condvar::new() });
+        let thread_shared = shared.clone();
+        let interval = interval.max(Duration::from_millis(10));
+        let handle = std::thread::Builder::new()
+            .name("gfnx-telemetry".to_string())
+            .spawn(move || {
+                let mut step = 0u64;
+                loop {
+                    let stopped = {
+                        let guard = thread_shared.stop.lock().unwrap();
+                        if *guard {
+                            true
+                        } else {
+                            let (guard, _) =
+                                thread_shared.cv.wait_timeout(guard, interval).unwrap();
+                            *guard
+                        }
+                    };
+                    step += 1;
+                    log.log_values(step, &[("telemetry", registry.to_json())]);
+                    if stopped {
+                        break;
+                    }
+                }
+                log.flush();
+            })?;
+        Ok(Exporter { shared, handle: Some(handle) })
+    }
+
+    /// Write a final snapshot, flush, and join the exporter thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(h) = self.handle.take() {
+            *self.shared.stop.lock().unwrap() = true;
+            self.shared.cv.notify_all();
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Exporter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Validate a telemetry JSONL file (the `check-telemetry` subcommand).
+///
+/// Every line must be a JSON object with `run`/`step`/`t` and a `telemetry`
+/// object holding `counters`/`gauges`/`histograms`; each histogram needs
+/// numeric `count`/`sum`/`max`/`mean`/`p50`/`p90`/`p99` with monotone
+/// percentiles. Each name in `required_spans` must appear in the **final**
+/// snapshot's histograms with a nonzero count. Returns a summary line.
+pub fn check_telemetry_jsonl(text: &str, required_spans: &[&str]) -> anyhow::Result<String> {
+    let mut snapshots = 0usize;
+    let mut last: Option<Json> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        j.req_str("run")?;
+        for key in ["step", "t"] {
+            j.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("line {}: '{key}' is not a number", lineno + 1))?;
+        }
+        let tel = j.req("telemetry")?;
+        tel.req("elapsed_s")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("line {}: 'elapsed_s' is not a number", lineno + 1))?;
+        for section in ["counters", "gauges", "histograms"] {
+            tel.req(section)?
+                .as_obj()
+                .ok_or_else(|| {
+                    anyhow::anyhow!("line {}: '{section}' is not an object", lineno + 1)
+                })?;
+        }
+        let hists = tel.get("histograms").unwrap().as_obj().unwrap();
+        for (name, h) in hists {
+            let field = |key: &str| -> anyhow::Result<f64> {
+                h.req(key)?.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "line {}: histogram '{name}' field '{key}' is not a number",
+                        lineno + 1
+                    )
+                })
+            };
+            let count = field("count")?;
+            let sum = field("sum")?;
+            field("max")?;
+            field("mean")?;
+            let p50 = field("p50")?;
+            let p90 = field("p90")?;
+            let p99 = field("p99")?;
+            anyhow::ensure!(
+                count >= 0.0 && sum >= 0.0,
+                "line {}: histogram '{name}' has negative count/sum",
+                lineno + 1
+            );
+            anyhow::ensure!(
+                p50 <= p90 && p90 <= p99,
+                "line {}: histogram '{name}' percentiles not monotone ({p50} / {p90} / {p99})",
+                lineno + 1
+            );
+        }
+        snapshots += 1;
+        last = Some(j);
+    }
+    anyhow::ensure!(snapshots > 0, "no telemetry snapshots found");
+    let last = last.unwrap();
+    let hists = last.get("telemetry").unwrap().get("histograms").unwrap();
+    for span in required_spans {
+        let h = hists
+            .get(span)
+            .ok_or_else(|| anyhow::anyhow!("required span '{span}' missing from final snapshot"))?;
+        let count = h.get("count").and_then(Json::as_f64).unwrap_or(0.0);
+        anyhow::ensure!(count > 0.0, "required span '{span}' has zero count in final snapshot");
+    }
+    let n_hists = hists.as_obj().map(|m| m.len()).unwrap_or(0);
+    Ok(format!(
+        "ok: {snapshots} snapshots, {n_hists} histograms in final snapshot, {} required spans nonzero",
+        required_spans.len()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exporter_writes_final_snapshot_on_stop() {
+        let dir = std::env::temp_dir().join("gfnx_telemetry_test");
+        let path = dir.join("export.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let reg = Arc::new(Registry::new());
+        reg.histogram("trainer.rollout").record(1_000);
+        reg.counter("engine.batches").add(7);
+        let exp = Exporter::spawn("unit", &path, Duration::from_secs(3600), reg.clone())
+            .unwrap();
+        reg.histogram("trainer.rollout").record(2_000);
+        // Stop long before the first interval elapses: the final snapshot
+        // must still be written.
+        exp.stop();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let summary = check_telemetry_jsonl(&text, &["trainer.rollout"]).unwrap();
+        assert!(summary.starts_with("ok:"), "{summary}");
+        let last = Json::parse(text.lines().last().unwrap()).unwrap();
+        assert_eq!(last.get("run").unwrap().as_str(), Some("unit"));
+        let h = last
+            .get("telemetry")
+            .unwrap()
+            .get("histograms")
+            .unwrap()
+            .get("trainer.rollout")
+            .unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize(), Some(2));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn exporter_emits_periodic_snapshots() {
+        let dir = std::env::temp_dir().join("gfnx_telemetry_test");
+        let path = dir.join("periodic.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let reg = Arc::new(Registry::new());
+        reg.counter("c").add(1);
+        let exp =
+            Exporter::spawn("unit", &path, Duration::from_millis(20), reg.clone()).unwrap();
+        std::thread::sleep(Duration::from_millis(120));
+        exp.stop();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines = text.lines().filter(|l| !l.trim().is_empty()).count();
+        assert!(lines >= 3, "expected several periodic snapshots, got {lines}");
+        check_telemetry_jsonl(&text, &[]).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn validator_rejects_bad_input() {
+        assert!(check_telemetry_jsonl("", &[]).is_err());
+        assert!(check_telemetry_jsonl("not json\n", &[]).is_err());
+        // Valid shell but missing the telemetry payload.
+        let line = r#"{"run":"x","step":1,"t":0.5}"#;
+        assert!(check_telemetry_jsonl(line, &[]).is_err());
+        // Monotone-percentile violation.
+        let bad = r#"{"run":"x","step":1,"t":0.5,"telemetry":{"elapsed_s":1,"counters":{},"gauges":{},"histograms":{"s":{"count":1,"sum":5,"max":5,"mean":5,"p50":7,"p90":3,"p99":7,"unit":"ns","buckets":[[2,1]]}}}}"#;
+        assert!(check_telemetry_jsonl(bad, &[]).is_err());
+        // Required span missing or zero.
+        let reg = Registry::new();
+        reg.histogram("present").record(5);
+        let good = Json::obj(vec![
+            ("run", Json::Str("x".into())),
+            ("step", Json::Num(1.0)),
+            ("t", Json::Num(0.1)),
+            ("telemetry", reg.to_json()),
+        ])
+        .to_string();
+        check_telemetry_jsonl(&good, &["present"]).unwrap();
+        assert!(check_telemetry_jsonl(&good, &["absent"]).is_err());
+    }
+}

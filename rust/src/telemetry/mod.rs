@@ -1,0 +1,758 @@
+//! Unified metrics registry: counters, gauges, log-bucketed histograms, and
+//! RAII span timers for the trainer / engine / serve hot paths.
+//!
+//! Design goals, in order:
+//!
+//! 1. **Near-zero cost when off.** Every instrumentation macro
+//!    ([`span!`], [`count!`], [`record!`]) starts with one `Relaxed` load of
+//!    a global [`AtomicBool`]; when telemetry is disabled that is the entire
+//!    cost — no `Instant::now()`, no allocation, no lock. The
+//!    `telemetry_overhead` bench measures this.
+//! 2. **Lock-free hot path when on.** Metric handles are `Arc`s of plain
+//!    atomics. Each macro call site caches its handle in a local
+//!    `OnceLock`, so after first use a span is two `Instant::now()` calls
+//!    plus a few `fetch_add`s. The only mutex in the subsystem guards the
+//!    name → handle registration map, touched once per call site.
+//! 3. **Determinism-safe.** Instrumentation only reads clocks and bumps
+//!    atomics; it never draws randomness or changes control flow, so the
+//!    `--sync` engine parity and serve bit-reproducibility guarantees hold
+//!    with telemetry enabled.
+//!
+//! A [`Registry`] is either *scoped* (one per [`SamplerService`], so tests
+//! and multiple services do not share counters) or the process-wide
+//! [`global()`] registry that the macros feed. [`Registry::to_json`] is the
+//! exact payload a future `/stats` endpoint serves; [`Exporter`] appends it
+//! periodically to a [`MetricsLog`] JSONL stream.
+//!
+//! Histograms are power-of-two bucketed (the engine's staleness histogram,
+//! generalized): bucket 0 holds values `0..=1`, bucket `i` holds
+//! `[2^i, 2^(i+1))`, bucket 63 holds `>= 2^63`. A percentile is the upper
+//! bound of the first bucket whose cumulative count reaches
+//! `ceil(q * n)` — exact on hand-built contents, conservative (never
+//! under-reports) on real ones. Span histograms record **nanoseconds**.
+//!
+//! [`SamplerService`]: crate::serve::SamplerService
+//! [`MetricsLog`]: crate::util::logging::MetricsLog
+
+pub mod exporter;
+
+pub use exporter::{check_telemetry_jsonl, Exporter};
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Global enabled flag + global registry
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+
+/// Fast-path check used by the instrumentation macros.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn hot-path instrumentation on or off (process-wide).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Enable telemetry if the `GFNX_TELEMETRY` env var is truthy (`1`, `true`,
+/// `on`). Returns the resulting enabled state.
+pub fn init_from_env() -> bool {
+    if let Ok(v) = std::env::var("GFNX_TELEMETRY") {
+        let v = v.to_ascii_lowercase();
+        if v == "1" || v == "true" || v == "on" {
+            set_enabled(true);
+        }
+    }
+    enabled()
+}
+
+/// The process-wide registry fed by [`span!`], [`count!`], [`record!`].
+pub fn global() -> &'static Arc<Registry> {
+    GLOBAL.get_or_init(|| Arc::new(Registry::new()))
+}
+
+/// Serializes tests that toggle the process-wide enabled flag (the flag is
+/// global state; concurrent toggling tests would race). Test support only.
+#[doc(hidden)]
+pub fn flag_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Metric primitives
+// ---------------------------------------------------------------------------
+
+/// A monotonically increasing counter.
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A last-write-wins `f64` gauge (stored as bits in an `AtomicU64`).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    pub fn set(&self, x: f64) {
+        self.bits.store(x.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    pub fn reset(&self) {
+        self.set(0.0);
+    }
+}
+
+/// Number of power-of-two buckets (covers the full `u64` range).
+pub const HIST_BUCKETS: usize = 64;
+
+/// Bucket index for a recorded value: 0 for `0..=1`, else `floor(log2 v)`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        63 - v.leading_zeros() as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (the value percentiles report).
+pub fn bucket_upper(i: usize) -> u64 {
+    if i >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << (i + 1)) - 1
+    }
+}
+
+/// A lock-free log₂-bucketed histogram. Span histograms record nanoseconds;
+/// value histograms (e.g. `engine.staleness`) record raw magnitudes.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+    /// `"ns"` for duration histograms, `""` for raw values. Display only.
+    unit: &'static str,
+}
+
+impl Histogram {
+    fn new(unit: &'static str) -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            unit,
+        }
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn unit(&self) -> &'static str {
+        self.unit
+    }
+
+    /// Consistent point-in-time copy (bucket counts are authoritative).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (i, b) in self.buckets.iter().enumerate() {
+            buckets[i] = b.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            count: buckets.iter().sum(),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            buckets,
+            unit: self.unit,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total of all recorded values (ns for span histograms).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn percentile(&self, q: f64) -> u64 {
+        self.snapshot().percentile(q)
+    }
+
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`]; percentile math runs here so the
+/// three quantiles of one snapshot are mutually consistent.
+#[derive(Clone)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub buckets: [u64; HIST_BUCKETS],
+    pub unit: &'static str,
+}
+
+impl HistSnapshot {
+    /// The upper bound of the first bucket whose cumulative count reaches
+    /// `ceil(q * count)`; 0 on an empty histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if c > 0 && cum >= rank {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(HIST_BUCKETS - 1)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut nonzero = Vec::new();
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 {
+                nonzero.push(Json::Arr(vec![
+                    Json::Num(i as f64),
+                    Json::Num(c as f64),
+                ]));
+            }
+        }
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum as f64)),
+            ("max", Json::Num(self.max as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("p50", Json::Num(self.percentile(0.50) as f64)),
+            ("p90", Json::Num(self.percentile(0.90) as f64)),
+            ("p99", Json::Num(self.percentile(0.99) as f64)),
+            ("unit", Json::Str(self.unit.to_string())),
+            ("buckets", Json::Arr(nonzero)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A named collection of metrics. Registration (name lookup) takes a mutex;
+/// handle updates are pure atomics. Create scoped registries with
+/// `Registry::new()` or use the process-wide [`global()`].
+pub struct Registry {
+    start: Instant,
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { start: Instant::now(), metrics: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Get-or-register a counter. Panics if `name` is already a different
+    /// metric kind (a programming error, not a runtime condition).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("telemetry metric '{name}' is not a counter"),
+        }
+    }
+
+    /// Get-or-register a gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())))
+        {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("telemetry metric '{name}' is not a gauge"),
+        }
+    }
+
+    /// Get-or-register a duration histogram (records nanoseconds).
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histogram_with_unit(name, "ns")
+    }
+
+    /// Get-or-register a raw-value histogram (e.g. staleness in versions).
+    pub fn value_histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histogram_with_unit(name, "")
+    }
+
+    fn histogram_with_unit(&self, name: &str, unit: &'static str) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(unit))))
+        {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("telemetry metric '{name}' is not a histogram"),
+        }
+    }
+
+    /// Zero every metric's value. Registrations (and cached call-site
+    /// handles) stay valid, so benches can reset between phases.
+    pub fn reset(&self) {
+        let m = self.metrics.lock().unwrap();
+        for v in m.values() {
+            match v {
+                Metric::Counter(c) => c.reset(),
+                Metric::Gauge(g) => g.reset(),
+                Metric::Histogram(h) => h.reset(),
+            }
+        }
+    }
+
+    /// Seconds since the registry was created.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Full snapshot: `{elapsed_s, counters, gauges, histograms}`.
+    ///
+    /// Derived metrics: for every counter `X.flops` with a sibling span
+    /// histogram `X` (sum in ns), a gauge `X.gflops` is added —
+    /// FLOPs/ns happens to equal GFLOP/s numerically.
+    pub fn to_json(&self) -> Json {
+        // Clone handles under the lock, read values outside it.
+        let handles: Vec<(String, Metric)> = {
+            let m = self.metrics.lock().unwrap();
+            m.iter()
+                .map(|(k, v)| {
+                    let h = match v {
+                        Metric::Counter(c) => Metric::Counter(c.clone()),
+                        Metric::Gauge(g) => Metric::Gauge(g.clone()),
+                        Metric::Histogram(h) => Metric::Histogram(h.clone()),
+                    };
+                    (k.clone(), h)
+                })
+                .collect()
+        };
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut hists = BTreeMap::new();
+        let mut hist_sums: BTreeMap<String, u64> = BTreeMap::new();
+        for (name, metric) in &handles {
+            match metric {
+                Metric::Counter(c) => {
+                    counters.insert(name.clone(), Json::Num(c.get() as f64));
+                }
+                Metric::Gauge(g) => {
+                    gauges.insert(name.clone(), Json::Num(g.get()));
+                }
+                Metric::Histogram(h) => {
+                    let snap = h.snapshot();
+                    hist_sums.insert(name.clone(), snap.sum);
+                    hists.insert(name.clone(), snap.to_json());
+                }
+            }
+        }
+        for (name, metric) in &handles {
+            if let (Metric::Counter(c), Some(stem)) = (metric, name.strip_suffix(".flops")) {
+                if let Some(&sum_ns) = hist_sums.get(stem) {
+                    if sum_ns > 0 {
+                        gauges.insert(
+                            format!("{stem}.gflops"),
+                            Json::Num(c.get() as f64 / sum_ns as f64),
+                        );
+                    }
+                }
+            }
+        }
+        Json::obj(vec![
+            ("elapsed_s", Json::Num(self.elapsed_s())),
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+        ])
+    }
+
+    /// Phase-timing breakdown only (histograms), for `BenchJson` rows.
+    pub fn phases_json(&self) -> Json {
+        match self.to_json().get("histograms") {
+            Some(h) => h.clone(),
+            None => Json::Obj(BTreeMap::new()),
+        }
+    }
+
+    /// Human-readable end-of-run table (sorted by name; ns histograms are
+    /// shown as total ms / per-event µs).
+    pub fn render(&self) -> String {
+        let j = self.to_json();
+        let mut s = format!("telemetry (elapsed {:.1}s)\n", self.elapsed_s());
+        if let Some(h) = j.get("histograms").and_then(Json::as_obj) {
+            if !h.is_empty() {
+                s.push_str(&format!(
+                    "  {:<28} {:>10} {:>12} {:>10} {:>10} {:>10} {:>10}\n",
+                    "span/hist", "count", "total", "mean", "p50", "p90", "p99"
+                ));
+                for (name, v) in h {
+                    let count = v.get("count").and_then(Json::as_f64).unwrap_or(0.0);
+                    let sum = v.get("sum").and_then(Json::as_f64).unwrap_or(0.0);
+                    let mean = v.get("mean").and_then(Json::as_f64).unwrap_or(0.0);
+                    let p50 = v.get("p50").and_then(Json::as_f64).unwrap_or(0.0);
+                    let p90 = v.get("p90").and_then(Json::as_f64).unwrap_or(0.0);
+                    let p99 = v.get("p99").and_then(Json::as_f64).unwrap_or(0.0);
+                    let ns = v.get("unit").and_then(Json::as_str) == Some("ns");
+                    if ns {
+                        s.push_str(&format!(
+                            "  {:<28} {:>10} {:>10.1}ms {:>8.1}µs {:>8.1}µs {:>8.1}µs {:>8.1}µs\n",
+                            name,
+                            count,
+                            sum / 1e6,
+                            mean / 1e3,
+                            p50 / 1e3,
+                            p90 / 1e3,
+                            p99 / 1e3,
+                        ));
+                    } else {
+                        s.push_str(&format!(
+                            "  {:<28} {:>10} {:>12} {:>10.1} {:>10} {:>10} {:>10}\n",
+                            name, count, sum, mean, p50, p90, p99,
+                        ));
+                    }
+                }
+            }
+        }
+        if let Some(c) = j.get("counters").and_then(Json::as_obj) {
+            for (name, v) in c {
+                s.push_str(&format!(
+                    "  counter {name} = {}\n",
+                    v.as_f64().unwrap_or(0.0)
+                ));
+            }
+        }
+        if let Some(g) = j.get("gauges").and_then(Json::as_obj) {
+            for (name, v) in g {
+                s.push_str(&format!(
+                    "  gauge   {name} = {:.4}\n",
+                    v.as_f64().unwrap_or(0.0)
+                ));
+            }
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RAII span timer
+// ---------------------------------------------------------------------------
+
+/// RAII guard recording elapsed nanoseconds into a histogram on drop.
+/// Construct via the [`span!`] macro (which handles the enabled fast path).
+pub struct SpanGuard {
+    inner: Option<(Arc<Histogram>, Instant)>,
+}
+
+impl SpanGuard {
+    /// An active guard: starts timing now, records on drop.
+    pub fn active(h: Arc<Histogram>) -> SpanGuard {
+        SpanGuard { inner: Some((h, Instant::now())) }
+    }
+
+    /// A disabled guard: drop is a no-op.
+    pub fn off() -> SpanGuard {
+        SpanGuard { inner: None }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((h, t0)) = self.inner.take() {
+            h.record(t0.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+/// Time a scope into a global-registry span histogram (nanoseconds):
+/// `let _t = crate::span!("native.dispatch");` — near-zero cost when
+/// telemetry is disabled.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {{
+        if $crate::telemetry::enabled() {
+            static __H: std::sync::OnceLock<std::sync::Arc<$crate::telemetry::Histogram>> =
+                std::sync::OnceLock::new();
+            $crate::telemetry::SpanGuard::active(
+                __H.get_or_init(|| $crate::telemetry::global().histogram($name)).clone(),
+            )
+        } else {
+            $crate::telemetry::SpanGuard::off()
+        }
+    }};
+}
+
+/// Bump a global-registry counter by `n` when telemetry is enabled:
+/// `crate::count!("native.gemm.dense.flops", flops);`
+#[macro_export]
+macro_rules! count {
+    ($name:expr, $n:expr) => {{
+        if $crate::telemetry::enabled() {
+            static __C: std::sync::OnceLock<std::sync::Arc<$crate::telemetry::Counter>> =
+                std::sync::OnceLock::new();
+            __C.get_or_init(|| $crate::telemetry::global().counter($name))
+                .add(($n) as u64);
+        }
+    }};
+}
+
+/// Record a raw value into a global-registry value histogram when telemetry
+/// is enabled: `crate::record!("engine.staleness", staleness);`
+#[macro_export]
+macro_rules! record {
+    ($name:expr, $v:expr) => {{
+        if $crate::telemetry::enabled() {
+            static __H: std::sync::OnceLock<std::sync::Arc<$crate::telemetry::Histogram>> =
+                std::sync::OnceLock::new();
+            __H.get_or_init(|| $crate::telemetry::global().value_histogram($name))
+                .record(($v) as u64);
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let reg = Registry::new();
+        let c = reg.counter("a.b");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        assert_eq!(reg.counter("a.b").get(), 5, "get-or-register returns the same atom");
+        let g = reg.gauge("occ");
+        g.set(0.75);
+        assert!((reg.gauge("occ").get() - 0.75).abs() < 1e-12);
+        reg.reset();
+        assert_eq!(c.get(), 0);
+        assert_eq!(g.get(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a gauge")]
+    fn kind_mismatch_panics() {
+        let reg = Registry::new();
+        let _ = reg.counter("x");
+        let _ = reg.gauge("x");
+    }
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(7), 2);
+        assert_eq!(bucket_index(8), 3);
+        assert_eq!(bucket_index(1 << 20), 20);
+        assert_eq!(bucket_index((1 << 21) - 1), 20);
+        assert_eq!(bucket_index(u64::MAX), 63);
+        assert_eq!(bucket_upper(0), 1);
+        assert_eq!(bucket_upper(2), 7);
+        assert_eq!(bucket_upper(63), u64::MAX);
+    }
+
+    /// Satellite: percentile math exact on hand-built bucket contents.
+    #[test]
+    fn percentiles_exact_on_hand_built_buckets() {
+        let h = Histogram::new("ns");
+        // 50 values in bucket 0 (v=1), 45 in bucket 6 (v=100: 64..127),
+        // 5 in bucket 13 (v=10_000: 8192..16383). n = 100.
+        for _ in 0..50 {
+            h.record(1);
+        }
+        for _ in 0..45 {
+            h.record(100);
+        }
+        for _ in 0..5 {
+            h.record(10_000);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.sum, 50 + 45 * 100 + 5 * 10_000);
+        assert_eq!(s.max, 10_000);
+        // p50: rank ceil(0.5*100)=50, cum(bucket 0)=50 >= 50 → upper(0)=1.
+        assert_eq!(s.percentile(0.50), 1);
+        // p90: rank 90, cum(bucket 6)=95 >= 90 → upper(6)=127.
+        assert_eq!(s.percentile(0.90), 127);
+        // p99: rank 99, cum(bucket 13)=100 >= 99 → upper(13)=16383.
+        assert_eq!(s.percentile(0.99), 16383);
+        // p100 and p0 edge cases.
+        assert_eq!(s.percentile(1.0), 16383);
+        assert_eq!(s.percentile(0.0), 1);
+        assert_eq!(Histogram::new("ns").snapshot().percentile(0.5), 0);
+    }
+
+    #[test]
+    fn percentile_rank_uses_first_covering_bucket() {
+        let h = Histogram::new("");
+        // 1..=100 → bucket 0 holds {1}, bucket i holds [2^i, 2^{i+1}) ∩ [1,100].
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        // cum by bucket: b0=1, b1=3, b2=7, b3=15, b4=31, b5=63, b6=100.
+        assert_eq!(s.percentile(0.50), 63); // rank 50 lands in bucket 5
+        assert_eq!(s.percentile(0.90), 127); // rank 90 lands in bucket 6
+        assert_eq!(s.percentile(0.99), 127);
+    }
+
+    #[test]
+    fn histogram_reset_clears_everything() {
+        let h = Histogram::new("ns");
+        h.record(5);
+        h.record(500);
+        h.reset();
+        let s = h.snapshot();
+        assert_eq!((s.count, s.sum, s.max), (0, 0, 0));
+        assert!(s.buckets.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn to_json_shape_and_derived_gflops() {
+        let reg = Registry::new();
+        reg.counter("native.gemm.dense.flops").add(2_000);
+        let h = reg.histogram("native.gemm.dense");
+        h.record(500);
+        h.record(500); // sum = 1000 ns → 2000 flops / 1000 ns = 2.0 GFLOP/s
+        reg.gauge("serve.occupancy").set(0.5);
+        let j = reg.to_json();
+        assert!(j.get("elapsed_s").and_then(Json::as_f64).unwrap() >= 0.0);
+        let c = j.get("counters").unwrap();
+        assert_eq!(c.get("native.gemm.dense.flops").unwrap().as_usize(), Some(2000));
+        let g = j.get("gauges").unwrap();
+        assert_eq!(g.get("serve.occupancy").unwrap().as_f64(), Some(0.5));
+        assert_eq!(g.get("native.gemm.dense.gflops").unwrap().as_f64(), Some(2.0));
+        let hist = j.get("histograms").unwrap().get("native.gemm.dense").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_usize(), Some(2));
+        assert_eq!(hist.get("sum").unwrap().as_usize(), Some(1000));
+        assert_eq!(hist.get("unit").unwrap().as_str(), Some("ns"));
+        // Round-trips through the project's JSON writer/parser.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert!(parsed.get("histograms").is_some());
+        // Render mentions the span and doesn't panic.
+        assert!(reg.render().contains("native.gemm.dense"));
+    }
+
+    #[test]
+    fn span_macro_times_into_global_registry() {
+        let _guard = flag_test_lock();
+        let was = enabled();
+        set_enabled(true);
+        let h = global().histogram("test.span.unit");
+        let before = h.count();
+        {
+            let _t = crate::span!("test.span.unit");
+            std::hint::black_box(1 + 1);
+        }
+        assert!(h.count() > before, "enabled span must record");
+        set_enabled(false);
+        let at_off = h.count();
+        {
+            let _t = crate::span!("test.span.unit");
+        }
+        assert_eq!(h.count(), at_off, "disabled span must not record");
+        crate::count!("test.span.counter", 3); // disabled → no-op
+        assert_eq!(global().counter("test.span.counter").get(), 0);
+        set_enabled(was);
+    }
+
+    #[test]
+    fn value_record_macro_feeds_value_histogram() {
+        let _guard = flag_test_lock();
+        let was = enabled();
+        set_enabled(true);
+        crate::record!("test.record.unit", 9usize);
+        let h = global().value_histogram("test.record.unit");
+        assert!(h.count() >= 1);
+        assert_eq!(h.unit(), "");
+        set_enabled(was);
+    }
+}

@@ -1,20 +1,147 @@
-//! Metrics logging: JSONL run logs plus lightweight stdout progress.
+//! Run logging: JSONL metrics writer plus a tiny leveled stderr/stdout
+//! logger.
 //!
 //! Every trainer/bench run appends one JSON object per logging step to a
 //! `.jsonl` file, mirroring the experiment-tracking discipline of the paper's
 //! single-file baselines (step, wall-clock seconds, named scalar metrics).
+//!
+//! The writer batches: lines are flushed every [`FLUSH_EVERY`] records or
+//! [`FLUSH_INTERVAL`] of wall clock, whichever comes first, and always on
+//! drop — so hot training loops don't pay a syscall per step but nothing is
+//! lost when the run ends.
+//!
+//! Diagnostics go through the [`log_error!`]/[`log_warn!`]/[`log_info!`]/
+//! [`log_debug!`] macros, gated by the `GFNX_LOG` env var
+//! (`error|warn|info|debug`, default `info`) so benches and parity tests can
+//! run quiet with `GFNX_LOG=error`. Error/warn print to stderr, info/debug
+//! to stdout. Command *output* (e.g. `list-configs`) stays on plain
+//! `println!` — it is the product of the command, not a diagnostic.
 
 use crate::util::json::Json;
 use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::Path;
-use std::time::Instant;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Leveled logger
+// ---------------------------------------------------------------------------
+
+/// Log severity, ordered so `Error < Warn < Info < Debug`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            3 => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+
+    /// Parse a `GFNX_LOG` value; unknown strings fall back to `Info`.
+    pub fn parse(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" | "e" | "0" => Level::Error,
+            "warn" | "warning" | "w" | "1" => Level::Warn,
+            "debug" | "d" | "3" => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+}
+
+/// Sentinel meaning "not yet initialized from the environment".
+const LEVEL_UNSET: u8 = u8::MAX;
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+
+/// The active maximum level (lazily read from `GFNX_LOG` on first use).
+pub fn max_level() -> Level {
+    let v = MAX_LEVEL.load(Ordering::Relaxed);
+    if v != LEVEL_UNSET {
+        return Level::from_u8(v);
+    }
+    let lvl = std::env::var("GFNX_LOG")
+        .map(|s| Level::parse(&s))
+        .unwrap_or(Level::Info);
+    MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+    lvl
+}
+
+/// Override the level programmatically (tests, embedding).
+pub fn set_level(l: Level) {
+    MAX_LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Would a message at `l` be printed?
+#[inline]
+pub fn log_enabled(l: Level) -> bool {
+    l <= max_level()
+}
+
+/// Log at error level (stderr); always printed.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        if $crate::util::logging::log_enabled($crate::util::logging::Level::Error) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// Log at warn level (stderr).
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::util::logging::log_enabled($crate::util::logging::Level::Warn) {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// Log at info level (stdout); the default for progress and summaries.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::logging::log_enabled($crate::util::logging::Level::Info) {
+            println!($($arg)*);
+        }
+    };
+}
+
+/// Log at debug level (stdout); off unless `GFNX_LOG=debug`.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::logging::log_enabled($crate::util::logging::Level::Debug) {
+            println!($($arg)*);
+        }
+    };
+}
+
+// ---------------------------------------------------------------------------
+// JSONL metrics writer
+// ---------------------------------------------------------------------------
+
+/// Flush after this many buffered records.
+pub const FLUSH_EVERY: usize = 32;
+/// ... or after this much wall clock since the last flush.
+pub const FLUSH_INTERVAL: Duration = Duration::from_secs(1);
 
 /// A JSONL metrics writer bound to one run.
 pub struct MetricsLog {
     out: Option<BufWriter<File>>,
     start: Instant,
     run: String,
+    pending: usize,
+    last_flush: Instant,
 }
 
 impl MetricsLog {
@@ -28,12 +155,20 @@ impl MetricsLog {
             out: Some(BufWriter::new(f)),
             start: Instant::now(),
             run: run.to_string(),
+            pending: 0,
+            last_flush: Instant::now(),
         })
     }
 
     /// A no-file logger (keeps timing, prints only).
     pub fn stdout_only(run: &str) -> Self {
-        MetricsLog { out: None, start: Instant::now(), run: run.to_string() }
+        MetricsLog {
+            out: None,
+            start: Instant::now(),
+            run: run.to_string(),
+            pending: 0,
+            last_flush: Instant::now(),
+        }
     }
 
     /// Seconds since this log was created.
@@ -43,23 +178,47 @@ impl MetricsLog {
 
     /// Record one step of named scalar metrics.
     pub fn log(&mut self, step: u64, metrics: &[(&str, f64)]) {
+        let pairs: Vec<(&str, Json)> =
+            metrics.iter().map(|(k, v)| (*k, Json::Num(*v))).collect();
+        self.log_values(step, &pairs);
+    }
+
+    /// Record one step of named JSON values (e.g. a telemetry snapshot).
+    pub fn log_values(&mut self, step: u64, values: &[(&str, Json)]) {
         let mut pairs: Vec<(&str, Json)> = vec![
             ("run", Json::Str(self.run.clone())),
             ("step", Json::Num(step as f64)),
             ("t", Json::Num(self.elapsed_s())),
         ];
-        for (k, v) in metrics {
-            pairs.push((k, Json::Num(*v)));
+        for (k, v) in values {
+            pairs.push((k, v.clone()));
         }
         let line = Json::obj(pairs).to_string();
         if let Some(out) = &mut self.out {
             let _ = writeln!(out, "{line}");
-            let _ = out.flush();
+            self.pending += 1;
+            if self.pending >= FLUSH_EVERY || self.last_flush.elapsed() >= FLUSH_INTERVAL {
+                let _ = out.flush();
+                self.pending = 0;
+                self.last_flush = Instant::now();
+            }
         }
     }
 
-    /// Print a human-readable progress line.
+    /// Force buffered lines to disk.
+    pub fn flush(&mut self) {
+        if let Some(out) = &mut self.out {
+            let _ = out.flush();
+        }
+        self.pending = 0;
+        self.last_flush = Instant::now();
+    }
+
+    /// Print a human-readable progress line (info level).
     pub fn progress(&self, step: u64, total: u64, metrics: &[(&str, f64)]) {
+        if !log_enabled(Level::Info) {
+            return;
+        }
         let mut s = format!(
             "[{}] step {step}/{total} t={:.1}s",
             self.run,
@@ -69,6 +228,12 @@ impl MetricsLog {
             s.push_str(&format!(" {k}={v:.4}"));
         }
         eprintln!("{s}");
+    }
+}
+
+impl Drop for MetricsLog {
+    fn drop(&mut self) {
+        self.flush();
     }
 }
 
@@ -96,10 +261,87 @@ mod tests {
         let _ = std::fs::remove_file(&path);
     }
 
+    /// Satellite: batching must not lose records — everything still buffered
+    /// (fewer than `FLUSH_EVERY` lines, well under `FLUSH_INTERVAL`) reaches
+    /// disk when the log is dropped.
+    #[test]
+    fn nothing_lost_on_drop_with_buffered_lines() {
+        let dir = std::env::temp_dir().join("gfnx_log_test");
+        let path = dir.join("drop.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let n = FLUSH_EVERY - 1; // guaranteed still buffered
+        {
+            let mut log = MetricsLog::to_file("unit", &path).unwrap();
+            for i in 0..n as u64 {
+                log.log(i, &[("v", i as f64)]);
+            }
+        } // drop flushes
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), n);
+        for (i, line) in text.lines().enumerate() {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("step").unwrap().as_usize(), Some(i));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn count_based_flush_hits_disk_before_drop() {
+        let dir = std::env::temp_dir().join("gfnx_log_test");
+        let path = dir.join("batch.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let mut log = MetricsLog::to_file("unit", &path).unwrap();
+        for i in 0..FLUSH_EVERY as u64 {
+            log.log(i, &[("v", 1.0)]);
+        }
+        // The FLUSH_EVERY-th record triggered a flush; read while live.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), FLUSH_EVERY);
+        drop(log);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn log_values_embeds_json_objects() {
+        let dir = std::env::temp_dir().join("gfnx_log_test");
+        let path = dir.join("values.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut log = MetricsLog::to_file("unit", &path).unwrap();
+            let payload = Json::obj(vec![("inner", Json::Num(3.0))]);
+            log.log_values(7, &[("telemetry", payload)]);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(j.get("step").unwrap().as_usize(), Some(7));
+        assert_eq!(
+            j.get("telemetry").unwrap().get("inner").unwrap().as_f64(),
+            Some(3.0)
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
     #[test]
     fn stdout_only_does_not_crash() {
         let mut log = MetricsLog::stdout_only("x");
         log.log(0, &[("a", 1.0)]);
+        log.flush();
         assert!(log.elapsed_s() >= 0.0);
+    }
+
+    #[test]
+    fn level_parsing_and_gating() {
+        assert_eq!(Level::parse("error"), Level::Error);
+        assert_eq!(Level::parse("WARN"), Level::Warn);
+        assert_eq!(Level::parse("debug"), Level::Debug);
+        assert_eq!(Level::parse("bogus"), Level::Info);
+        assert!(Level::Error < Level::Debug);
+        let before = max_level();
+        set_level(Level::Warn);
+        assert!(log_enabled(Level::Error));
+        assert!(log_enabled(Level::Warn));
+        assert!(!log_enabled(Level::Info));
+        assert!(!log_enabled(Level::Debug));
+        set_level(before);
     }
 }
