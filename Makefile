@@ -5,7 +5,7 @@
 
 ARTIFACTS_DIR := rust/artifacts
 
-.PHONY: artifacts test bench-serve clean-artifacts
+.PHONY: artifacts test bench-serve bench-gemm clean-artifacts
 
 artifacts:
 	cd python && python -m compile.aot --preset default --out ../$(ARTIFACTS_DIR)
@@ -15,6 +15,9 @@ test:
 
 bench-serve:
 	cargo bench --bench serve_qps
+
+bench-gemm:
+	cargo bench --bench gemm_kernels
 
 clean-artifacts:
 	rm -rf $(ARTIFACTS_DIR)

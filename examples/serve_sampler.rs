@@ -63,7 +63,9 @@ fn main() -> anyhow::Result<()> {
             }
         }
         println!("trained native policy for {train_iters} iters (final loss {last_loss:.4})");
-        Some(trainer.backend.to_policy())
+        // Serving honors GFNX_FASTMATH; training above always ran in the
+        // deterministic f64 mode.
+        Some(trainer.backend.to_policy().with_fastmath(gfnx::runtime::fastmath_from_env()))
     } else {
         None
     };

@@ -1,0 +1,232 @@
+//! GEMM micro-benchmark: the tiled/panel-packed kernels vs the pre-tiling
+//! scalar kernels, at serve-typical shapes.
+//!
+//! The comparator is a faithful vendored copy of the pre-PR hot path:
+//! per-row scalar loops with f64 accumulation, re-converting the weight
+//! matrix row-by-row, dispatched on spawn-per-call scoped threads with the
+//! spawn-calibrated 2¹⁸ work quantum, and concatenating per-block `Vec`s.
+//! Measuring against the vendored copy (same binary, same toolchain) keeps
+//! the before/after honest without needing two checkouts.
+//!
+//! Grid: batch ∈ {16, 64, 256} × hidden (`GFNX_GEMM_HIDDEN`, default 256)
+//! × mode ∈ {scalar, det, fast} × workers ∈ {1, default}. Emits
+//! `BENCH_gemm.json` with GFLOP/s per cell plus `speedup_vs_scalar` /
+//! `speedup_fast_vs_det` meta fields, and (unless
+//! `GFNX_GEMM_MIN_SPEEDUP=0`) asserts the acceptance bar: deterministic
+//! tiled ≥ 2× scalar at batch 256, fast strictly faster than deterministic.
+//!
+//! Knobs: `GFNX_GEMM_ITERS` (calls per timed window, default 10),
+//! `GFNX_BENCH_REPEATS` (windows, default 5), `GFNX_GEMM_HIDDEN`,
+//! `GFNX_GEMM_MIN_SPEEDUP` (default 2.0).
+
+use gfnx::bench::harness::{env_usize, itps_json, measure_it_per_sec, BenchJson, BenchTable};
+use gfnx::runtime::native::gemm::dense_rows_mode;
+use gfnx::util::json::Json;
+use gfnx::util::rng::Rng;
+use gfnx::util::threadpool::default_workers;
+
+// --- vendored pre-PR scalar path -------------------------------------------
+
+const OLD_PAR_FLOP_QUANTUM: usize = 1 << 18;
+
+fn old_effective_workers(workers: usize, rows: usize, flops: usize) -> usize {
+    (flops / OLD_PAR_FLOP_QUANTUM).max(1).min(workers.max(1)).min(rows.max(1))
+}
+
+/// The pre-pool `parallel_map`: scoped spawn/join on every call.
+fn spawn_parallel_map<T: Send, F: Fn(usize) -> T + Sync>(
+    n: usize,
+    workers: usize,
+    f: F,
+) -> Vec<T> {
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots_ptr = slots.as_mut_ptr() as usize;
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY: each index is claimed exactly once.
+                unsafe { (slots_ptr as *mut Option<T>).add(i).write(Some(v)) };
+            });
+        }
+    });
+    slots.into_iter().map(|v| v.unwrap()).collect()
+}
+
+/// The pre-tiling `dense_rows`: per-row scalar loops, f64 accumulation,
+/// per-block output `Vec`s concatenated at the end.
+#[allow(clippy::too_many_arguments)]
+fn scalar_dense_rows(
+    x: &[f32],
+    n: usize,
+    k: usize,
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    relu: bool,
+    workers: usize,
+) -> Vec<f32> {
+    let workers = old_effective_workers(workers, n, n * k * m);
+    let rows_per = ((n + workers - 1) / workers).max(1);
+    let n_chunks = (n + rows_per - 1) / rows_per;
+    let blocks = spawn_parallel_map(n_chunks, workers, |c| {
+        let lo = c * rows_per;
+        let hi = ((c + 1) * rows_per).min(n);
+        let mut out = vec![0f32; (hi - lo) * m];
+        let mut acc = vec![0f64; m];
+        for r in lo..hi {
+            for (j, a) in acc.iter_mut().enumerate() {
+                *a = bias[j] as f64;
+            }
+            let xrow = &x[r * k..(r + 1) * k];
+            for (t, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let xv = xv as f64;
+                let wrow = &w[t * m..(t + 1) * m];
+                for j in 0..m {
+                    acc[j] += xv * wrow[j] as f64;
+                }
+            }
+            let orow = &mut out[(r - lo) * m..(r - lo + 1) * m];
+            for j in 0..m {
+                let v = acc[j];
+                orow[j] = if relu && v < 0.0 { 0.0 } else { v as f32 };
+            }
+        }
+        out
+    });
+    let mut out = Vec::with_capacity(n * m);
+    for b in blocks {
+        out.extend_from_slice(&b);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+
+fn envf(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct Cell {
+    batch: usize,
+    mode: &'static str,
+    workers: usize,
+    gflops: f64,
+    itps: gfnx::util::stats::ItPerSec,
+}
+
+fn main() {
+    let hidden = env_usize("GFNX_GEMM_HIDDEN", 256);
+    let iters = env_usize("GFNX_GEMM_ITERS", 10);
+    let repeats = env_usize("GFNX_BENCH_REPEATS", 5);
+    let min_speedup = envf("GFNX_GEMM_MIN_SPEEDUP", 2.0);
+    let (k, m) = (hidden, hidden);
+    let batches = [16usize, 64, 256];
+    let worker_grid = [1usize, default_workers()];
+
+    let mut rng = Rng::new(7);
+    let mut x = vec![0f32; *batches.iter().max().unwrap() * k];
+    let mut w = vec![0f32; k * m];
+    let mut b = vec![0f32; m];
+    rng.fill_normal_f32(&mut x, 1.0);
+    rng.fill_normal_f32(&mut w, 1.0);
+    rng.fill_normal_f32(&mut b, 1.0);
+
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut table = BenchTable::new(
+        &format!("Forward GEMM [n, {k}] × [{k}, {m}] (dense_rows)"),
+        &["batch", "mode", "workers", "GFLOP/s", "calls/s"],
+    );
+
+    for &n in &batches {
+        let flops = (2 * n * k * m) as f64;
+        for &workers in &worker_grid {
+            for mode in ["scalar", "det", "fast"] {
+                let xs = &x[..n * k];
+                let r = measure_it_per_sec(2, repeats, iters, || {
+                    let out = match mode {
+                        "scalar" => scalar_dense_rows(xs, n, k, &w, &b, m, true, workers),
+                        "det" => dense_rows_mode(xs, n, k, &w, &b, m, true, workers, false),
+                        _ => dense_rows_mode(xs, n, k, &w, &b, m, true, workers, true),
+                    };
+                    std::hint::black_box(&out);
+                });
+                let gflops = r.mean * flops / 1e9;
+                table.row(&[
+                    n.to_string(),
+                    mode.to_string(),
+                    workers.to_string(),
+                    format!("{gflops:.2}"),
+                    format!("{:.1}±{:.1}", r.mean, r.sem3),
+                ]);
+                cells.push(Cell { batch: n, mode, workers, gflops, itps: r });
+            }
+        }
+    }
+    table.print();
+
+    let pick = |batch: usize, mode: &str, workers: usize| -> f64 {
+        cells
+            .iter()
+            .find(|c| c.batch == batch && c.mode == mode && c.workers == workers)
+            .map(|c| c.gflops)
+            .unwrap_or(0.0)
+    };
+    let wmax = default_workers();
+    let speedup = pick(256, "det", wmax) / pick(256, "scalar", wmax).max(1e-12);
+    let fast_speedup = pick(256, "fast", wmax) / pick(256, "det", wmax).max(1e-12);
+    println!("det vs scalar speedup at batch 256 / hidden {hidden}: {speedup:.2}x");
+    println!("fast vs det speedup at batch 256 / hidden {hidden}: {fast_speedup:.2}x");
+
+    let mut bj = BenchJson::new("gemm");
+    bj.meta("hidden", Json::Num(hidden as f64));
+    bj.meta("iters", Json::Num(iters as f64));
+    bj.meta("repeats", Json::Num(repeats as f64));
+    bj.meta("default_workers", Json::Num(wmax as f64));
+    bj.meta("speedup_vs_scalar", Json::Num(speedup));
+    bj.meta("speedup_fast_vs_det", Json::Num(fast_speedup));
+    for c in &cells {
+        bj.row(Json::obj(vec![
+            ("kernel", Json::Str("dense_rows".into())),
+            ("n", Json::Num(c.batch as f64)),
+            ("k", Json::Num(k as f64)),
+            ("m", Json::Num(m as f64)),
+            ("mode", Json::Str(c.mode.into())),
+            ("workers", Json::Num(c.workers as f64)),
+            ("gflops", Json::Num(c.gflops)),
+            ("calls_per_sec", itps_json(&c.itps)),
+        ]));
+    }
+    match bj.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("BENCH_gemm.json write failed: {e}"),
+    }
+
+    // Acceptance bar (ISSUE 7): ≥2× deterministic dispatch throughput vs
+    // the pre-PR scalar path at batch 256 / hidden 256, fast strictly
+    // faster still. GFNX_GEMM_MIN_SPEEDUP=0 disables the gate (e.g. for
+    // exploratory runs on loaded machines).
+    if min_speedup > 0.0 {
+        assert!(
+            speedup >= min_speedup,
+            "tiled deterministic GEMM speedup {speedup:.2}x below the \
+             {min_speedup:.2}x bar at batch 256 / hidden {hidden}"
+        );
+        assert!(
+            fast_speedup > 1.0,
+            "fastmath mode ({fast_speedup:.2}x vs det) must beat deterministic mode"
+        );
+    }
+}

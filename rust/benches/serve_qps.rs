@@ -60,7 +60,11 @@ fn make_policy(
     match backend {
         "native" => {
             let cfg = NativeConfig::for_env(e, shape.batch, "tb").with_hidden(64);
-            Box::new(NativeBackend::new(cfg, 0).expect("native backend").to_policy())
+            let policy = NativeBackend::new(cfg, 0)
+                .expect("native backend")
+                .to_policy()
+                .with_fastmath(gfnx::runtime::fastmath_from_env());
+            Box::new(policy)
         }
         _ => Box::new(UniformPolicy::with_work(shape, synth)),
     }

@@ -448,9 +448,10 @@ where
         if cfg.sync { "sync (deterministic)" } else { "async" },
         if svc.is_some() { ", serving live" } else { "" }
     );
+    let fm = gfnx::runtime::fastmath_from_env();
     let stats = engine::train(env, &mut backend, explore, extra, &cfg, iters, |snap| {
         if let Some(svc) = &svc {
-            svc.hot_swap(Box::new(snap.policy.clone()));
+            svc.hot_swap(Box::new(snap.policy.clone().with_fastmath(fm)));
         }
         Ok(())
     })?;
@@ -473,6 +474,9 @@ where
     if !args.get_bool("serve") {
         return None;
     }
+    // Serve-only fast accumulation: training dispatch above stays in the
+    // deterministic f64 mode regardless of the env var.
+    let initial = initial.with_fastmath(gfnx::runtime::fastmath_from_env());
     let factory = move || Ok(Box::new(initial) as Box<dyn gfnx::runtime::BatchPolicy>);
     // Under --telemetry the service registers its serve.* metrics in the
     // global registry, so they ride the same export stream as the trainer's.
@@ -682,6 +686,7 @@ fn run_ebgfn_engine(
     // the very sequence that generated the actor's rollouts.
     trainer.rng = Rng::new(cfg.seed).split();
     let mut best_nlr = f64::NEG_INFINITY;
+    let fm = gfnx::runtime::fastmath_from_env();
     let stats = {
         let mut learner = EbGfnLearner { tr: trainer };
         engine::run(
@@ -694,7 +699,7 @@ fn run_ebgfn_engine(
             |snap| {
                 best_nlr = best_nlr.max(neg_log_rmse_of(&reward, j_true));
                 if let Some(svc) = &svc {
-                    svc.hot_swap(Box::new(snap.policy.clone()));
+                    svc.hot_swap(Box::new(snap.policy.clone().with_fastmath(fm)));
                 }
                 Ok(())
             },

@@ -1,0 +1,851 @@
+//! Cache-blocked, panel-packed GEMM kernels for the native MLP hot path.
+//!
+//! The three batched matmuls behind [`super::net::NativeNet`] — forward
+//! dispatch (`dense_rows`), weight gradients (`matmul_tn`) and input
+//! gradients (`matmul_nt`) — plus the bias-gradient column sum all run
+//! through one tiled engine:
+//!
+//! - The B operand (weights or upstream gradients) is packed once per call
+//!   into contiguous `NR`-wide column panels, converting to the
+//!   accumulator type during the pack, so the inner loop is stride-1 and
+//!   conversion-free in both operands (the old kernels re-converted the
+//!   whole weight matrix from f32 once *per output row*).
+//! - Output rows are processed in `MR`-row tiles; each tile packs its A
+//!   rows into an interleaved `[steps × MR]` strip and runs a micro-kernel
+//!   holding an `MR × NR` accumulator block in registers. Tiles are laid
+//!   out globally (tile `i` always covers rows `i·MR..`), and workers take
+//!   whole tiles, so the result is **bitwise independent of the worker
+//!   count** in every mode.
+//! - Parallel regions run on the persistent
+//!   [`crate::util::threadpool::ThreadPool`] (no per-call thread spawns)
+//!   and write straight into the caller's output buffer (no per-block
+//!   `Vec` + concat copy).
+//!
+//! Two accumulation modes:
+//!
+//! - **Deterministic** (the default, and the only mode the trainer
+//!   accepts): every output element is one f64 accumulator advanced in
+//!   ascending reduction order — exactly the old scalar kernels' order —
+//!   so training, the engine's `--sync` parity and serve determinism all
+//!   keep their bitwise guarantees.
+//! - **Fast** (`NativeConfig::fastmath` / `GFNX_FASTMATH=1`, serve-only
+//!   dispatch): micro-kernels keep eight-wide `[f32; 8]` lane sums and
+//!   never widen to f64. Still bit-reproducible for a fixed seed and
+//!   worker-count-invariant, but *not* bitwise-equal to the deterministic
+//!   mode (error is bounded by the usual `O(k·ε)` dot-product bound; see
+//!   the tolerance test below).
+//!
+//! The zero-skip shortcut for one-hot-heavy observations is adaptive: each
+//! A tile's density is counted during packing (which walks every element
+//! anyway), and tiles above [`DENSE_PATH_MIN_DENSITY`] take the
+//! branch-free path. The choice is a pure function of the tile data, so it
+//! cannot break worker-count invariance.
+
+use std::cell::RefCell;
+
+use crate::util::threadpool::ThreadPool;
+
+/// Column-panel width — also the f32 lane width of the fast micro-kernel
+/// (`[f32; 8]` lowers to two SSE / one AVX vector; std::simd is nightly).
+const NR: usize = 8;
+/// Row-tile height of the deterministic (f64) micro-kernel. 2×8 f64
+/// accumulators are 8 SSE registers, leaving room for the packed operands.
+const MR_DET: usize = 2;
+/// Row-tile height of the fast (f32) micro-kernel (4×8 f32 = 8 SSE regs).
+const MR_FAST: usize = 4;
+
+/// Fraction of nonzero A-tile entries above which the branch-free
+/// micro-kernel wins over the zero-skip path. One-hot observation blocks
+/// sit near `1/obs_dim`; dense inputs (ising spins, qm9 features) sit at
+/// ~1.0; the crossover is broad, so a coarse threshold is fine.
+const DENSE_PATH_MIN_DENSITY: f32 = 0.25;
+
+/// Per-worker work quantum: grant one worker per this many fused
+/// multiply-adds. Re-derived for the persistent pool: waking parked
+/// workers costs ~1–3 µs (a condvar signal, measured the same way the
+/// `telemetry_overhead` bench measures span cost) versus ~20–60 µs for
+/// the old spawn/join-per-call design, so the profitable-parallelism
+/// threshold drops from 2¹⁸ to 2¹⁶ — 2¹⁶ madds are ~20–60 µs of scalar
+/// work, amortizing a pool wake ≥ 10×. Small rollout dispatches (e.g.
+/// 4×64×64) still stay single-worker.
+pub(crate) const PAR_FLOP_QUANTUM: usize = 1 << 16;
+
+/// Effective worker count: at least 1, at most `rows`, at most the
+/// requested count, and at most one worker per [`PAR_FLOP_QUANTUM`] of
+/// total work.
+#[inline]
+pub(crate) fn effective_workers(workers: usize, rows: usize, flops: usize) -> usize {
+    (flops / PAR_FLOP_QUANTUM).max(1).min(workers.max(1)).min(rows.max(1))
+}
+
+/// A-operand view: element `(row, step)` of the reduction lives at
+/// `data[row·row_stride + step·step_stride]`.
+#[derive(Clone, Copy)]
+struct AView<'a> {
+    data: &'a [f32],
+    row_stride: usize,
+    step_stride: usize,
+}
+
+impl AView<'_> {
+    #[inline(always)]
+    fn at(&self, row: usize, step: usize) -> f32 {
+        self.data[row * self.row_stride + step * self.step_stride]
+    }
+}
+
+/// B-operand view: element `(step, col)` lives at
+/// `data[step·step_stride + col·col_stride]`.
+#[derive(Clone, Copy)]
+struct BView<'a> {
+    data: &'a [f32],
+    step_stride: usize,
+    col_stride: usize,
+}
+
+/// Reusable per-thread packing scratch: B panels on the submitting thread,
+/// A strips on each executor. Persistent pool workers keep theirs across
+/// calls, so the steady-state hot path allocates nothing.
+struct Scratch {
+    f64buf: Vec<f64>,
+    f32buf: Vec<f32>,
+}
+
+thread_local! {
+    static PACK_B: RefCell<Scratch> =
+        RefCell::new(Scratch { f64buf: Vec::new(), f32buf: Vec::new() });
+    static PACK_A: RefCell<Scratch> =
+        RefCell::new(Scratch { f64buf: Vec::new(), f32buf: Vec::new() });
+}
+
+/// Shared output pointer for disjoint tile writes from pool workers.
+#[derive(Clone, Copy)]
+struct OutPtr(*mut f32);
+// SAFETY: every (row, col) cell is written by exactly one executor — row
+// tiles partition the rows and each tile is owned by one chunk.
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+impl OutPtr {
+    /// SAFETY: caller must guarantee exclusive access to cell `i`.
+    #[inline(always)]
+    unsafe fn write(self, i: usize, v: f32) {
+        *self.0.add(i) = v;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic engine: fixed-order f64 accumulation, MR_DET × NR tiles.
+// ---------------------------------------------------------------------------
+
+fn pack_b_f64(b: BView, steps: usize, cols: usize, n_panels: usize, buf: &mut Vec<f64>) {
+    buf.clear();
+    buf.resize(n_panels * steps * NR, 0.0); // padding columns stay 0.0
+    for p in 0..n_panels {
+        let c0 = p * NR;
+        let nc = NR.min(cols - c0);
+        let dst = &mut buf[p * steps * NR..(p + 1) * steps * NR];
+        for s in 0..steps {
+            let base = s * b.step_stride;
+            let row = &mut dst[s * NR..s * NR + nc];
+            for (cc, slot) in row.iter_mut().enumerate() {
+                *slot = b.data[base + (c0 + cc) * b.col_stride] as f64;
+            }
+        }
+    }
+}
+
+/// Pack one MR_DET-row strip (zero-padded below `mr`) and count nonzeros
+/// for the adaptive density decision.
+fn pack_a_f64(a: AView, r0: usize, mr: usize, steps: usize, buf: &mut [f64]) -> usize {
+    let mut nnz = 0usize;
+    for s in 0..steps {
+        for rr in 0..MR_DET {
+            let v = if rr < mr { a.at(r0 + rr, s) } else { 0.0 };
+            nnz += (v != 0.0) as usize;
+            buf[s * MR_DET + rr] = v as f64;
+        }
+    }
+    nnz
+}
+
+/// Branch-free micro-kernel: `acc[rr][cc] += a[rr][s] · b[s][cc]` with `s`
+/// ascending — the same per-element reduction order as the scalar
+/// reference, so results are bitwise tile-layout-invariant.
+#[inline]
+fn micro_f64(ap: &[f64], panel: &[f64], steps: usize, acc: &mut [[f64; NR]; MR_DET]) {
+    for s in 0..steps {
+        let bv: &[f64; NR] = panel[s * NR..s * NR + NR].try_into().unwrap();
+        let av: &[f64; MR_DET] = ap[s * MR_DET..s * MR_DET + MR_DET].try_into().unwrap();
+        for rr in 0..MR_DET {
+            let x = av[rr];
+            for cc in 0..NR {
+                acc[rr][cc] += x * bv[cc];
+            }
+        }
+    }
+}
+
+/// Zero-skip micro-kernel for sparse tiles (one-hot-heavy observations).
+/// Skipping exact-zero terms keeps the surviving reduction order intact.
+#[inline]
+fn micro_f64_sparse(
+    ap: &[f64],
+    panel: &[f64],
+    steps: usize,
+    mr: usize,
+    acc: &mut [[f64; NR]; MR_DET],
+) {
+    for rr in 0..mr {
+        let row = &mut acc[rr];
+        for s in 0..steps {
+            let x = ap[s * MR_DET + rr];
+            if x == 0.0 {
+                continue;
+            }
+            let bv: &[f64; NR] = panel[s * NR..s * NR + NR].try_into().unwrap();
+            for cc in 0..NR {
+                row[cc] += x * bv[cc];
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_tiles_f64(
+    a: AView,
+    bp: &[f64],
+    bias: Option<&[f32]>,
+    relu: bool,
+    rows: usize,
+    steps: usize,
+    cols: usize,
+    n_panels: usize,
+    t_lo: usize,
+    t_hi: usize,
+    out: OutPtr,
+    ascratch: &mut Vec<f64>,
+) {
+    ascratch.clear();
+    ascratch.resize(steps * MR_DET, 0.0);
+    for ti in t_lo..t_hi {
+        let r0 = ti * MR_DET;
+        let mr = MR_DET.min(rows - r0);
+        let nnz = pack_a_f64(a, r0, mr, steps, ascratch);
+        let dense = nnz as f32 >= DENSE_PATH_MIN_DENSITY * (mr * steps) as f32;
+        for p in 0..n_panels {
+            let c0 = p * NR;
+            let nc = NR.min(cols - c0);
+            let mut acc = [[0f64; NR]; MR_DET];
+            if let Some(bias) = bias {
+                for row in acc.iter_mut() {
+                    for (cc, slot) in row.iter_mut().take(nc).enumerate() {
+                        *slot = bias[c0 + cc] as f64;
+                    }
+                }
+            }
+            let panel = &bp[p * steps * NR..(p + 1) * steps * NR];
+            if dense {
+                micro_f64(ascratch, panel, steps, &mut acc);
+            } else {
+                micro_f64_sparse(ascratch, panel, steps, mr, &mut acc);
+            }
+            for rr in 0..mr {
+                for cc in 0..nc {
+                    let v = acc[rr][cc];
+                    let v = if relu && v < 0.0 { 0.0 } else { v as f32 };
+                    // SAFETY: this chunk owns tiles t_lo..t_hi, and tiles
+                    // partition the output rows.
+                    unsafe { out.write((r0 + rr) * cols + c0 + cc, v) };
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_f64(
+    a: AView,
+    b: BView,
+    bias: Option<&[f32]>,
+    relu: bool,
+    rows: usize,
+    steps: usize,
+    cols: usize,
+    workers: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let workers = effective_workers(workers, rows, rows * steps * cols);
+    let n_tiles = rows.div_ceil(MR_DET);
+    let n_panels = cols.div_ceil(NR);
+    PACK_B.with(|cell| {
+        let mut pb = cell.borrow_mut();
+        pack_b_f64(b, steps, cols, n_panels, &mut pb.f64buf);
+        let bp: &[f64] = &pb.f64buf;
+        let tiles_per = n_tiles.div_ceil(workers);
+        let n_chunks = n_tiles.div_ceil(tiles_per);
+        let optr = OutPtr(out.as_mut_ptr());
+        ThreadPool::global().run(n_chunks, workers, |chunk| {
+            let t_lo = chunk * tiles_per;
+            let t_hi = ((chunk + 1) * tiles_per).min(n_tiles);
+            PACK_A.with(|acell| {
+                let pa = &mut acell.borrow_mut().f64buf;
+                run_tiles_f64(
+                    a, bp, bias, relu, rows, steps, cols, n_panels, t_lo, t_hi, optr, pa,
+                );
+            });
+        });
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fast engine: [f32; 8] lane sums, MR_FAST × NR tiles (serve-only mode).
+// ---------------------------------------------------------------------------
+
+fn pack_b_f32(b: BView, steps: usize, cols: usize, n_panels: usize, buf: &mut Vec<f32>) {
+    buf.clear();
+    buf.resize(n_panels * steps * NR, 0.0);
+    for p in 0..n_panels {
+        let c0 = p * NR;
+        let nc = NR.min(cols - c0);
+        let dst = &mut buf[p * steps * NR..(p + 1) * steps * NR];
+        for s in 0..steps {
+            let base = s * b.step_stride;
+            let row = &mut dst[s * NR..s * NR + nc];
+            for (cc, slot) in row.iter_mut().enumerate() {
+                *slot = b.data[base + (c0 + cc) * b.col_stride];
+            }
+        }
+    }
+}
+
+fn pack_a_f32(a: AView, r0: usize, mr: usize, steps: usize, buf: &mut [f32]) -> usize {
+    let mut nnz = 0usize;
+    for s in 0..steps {
+        for rr in 0..MR_FAST {
+            let v = if rr < mr { a.at(r0 + rr, s) } else { 0.0 };
+            nnz += (v != 0.0) as usize;
+            buf[s * MR_FAST + rr] = v;
+        }
+    }
+    nnz
+}
+
+#[inline]
+fn micro_f32(ap: &[f32], panel: &[f32], steps: usize, acc: &mut [[f32; NR]; MR_FAST]) {
+    for s in 0..steps {
+        let bv: &[f32; NR] = panel[s * NR..s * NR + NR].try_into().unwrap();
+        let av: &[f32; MR_FAST] = ap[s * MR_FAST..s * MR_FAST + MR_FAST].try_into().unwrap();
+        for rr in 0..MR_FAST {
+            let x = av[rr];
+            for cc in 0..NR {
+                acc[rr][cc] += x * bv[cc];
+            }
+        }
+    }
+}
+
+#[inline]
+fn micro_f32_sparse(
+    ap: &[f32],
+    panel: &[f32],
+    steps: usize,
+    mr: usize,
+    acc: &mut [[f32; NR]; MR_FAST],
+) {
+    for rr in 0..mr {
+        let row = &mut acc[rr];
+        for s in 0..steps {
+            let x = ap[s * MR_FAST + rr];
+            if x == 0.0 {
+                continue;
+            }
+            let bv: &[f32; NR] = panel[s * NR..s * NR + NR].try_into().unwrap();
+            for cc in 0..NR {
+                row[cc] += x * bv[cc];
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_tiles_f32(
+    a: AView,
+    bp: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+    rows: usize,
+    steps: usize,
+    cols: usize,
+    n_panels: usize,
+    t_lo: usize,
+    t_hi: usize,
+    out: OutPtr,
+    ascratch: &mut Vec<f32>,
+) {
+    ascratch.clear();
+    ascratch.resize(steps * MR_FAST, 0.0);
+    for ti in t_lo..t_hi {
+        let r0 = ti * MR_FAST;
+        let mr = MR_FAST.min(rows - r0);
+        let nnz = pack_a_f32(a, r0, mr, steps, ascratch);
+        let dense = nnz as f32 >= DENSE_PATH_MIN_DENSITY * (mr * steps) as f32;
+        for p in 0..n_panels {
+            let c0 = p * NR;
+            let nc = NR.min(cols - c0);
+            let mut acc = [[0f32; NR]; MR_FAST];
+            if let Some(bias) = bias {
+                for row in acc.iter_mut() {
+                    row[..nc].copy_from_slice(&bias[c0..c0 + nc]);
+                }
+            }
+            let panel = &bp[p * steps * NR..(p + 1) * steps * NR];
+            if dense {
+                micro_f32(ascratch, panel, steps, &mut acc);
+            } else {
+                micro_f32_sparse(ascratch, panel, steps, mr, &mut acc);
+            }
+            for rr in 0..mr {
+                for cc in 0..nc {
+                    let v = acc[rr][cc];
+                    let v = if relu && v < 0.0 { 0.0 } else { v };
+                    // SAFETY: as in run_tiles_f64 — tiles partition rows.
+                    unsafe { out.write((r0 + rr) * cols + c0 + cc, v) };
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_f32(
+    a: AView,
+    b: BView,
+    bias: Option<&[f32]>,
+    relu: bool,
+    rows: usize,
+    steps: usize,
+    cols: usize,
+    workers: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let workers = effective_workers(workers, rows, rows * steps * cols);
+    let n_tiles = rows.div_ceil(MR_FAST);
+    let n_panels = cols.div_ceil(NR);
+    PACK_B.with(|cell| {
+        let mut pb = cell.borrow_mut();
+        pack_b_f32(b, steps, cols, n_panels, &mut pb.f32buf);
+        let bp: &[f32] = &pb.f32buf;
+        let tiles_per = n_tiles.div_ceil(workers);
+        let n_chunks = n_tiles.div_ceil(tiles_per);
+        let optr = OutPtr(out.as_mut_ptr());
+        ThreadPool::global().run(n_chunks, workers, |chunk| {
+            let t_lo = chunk * tiles_per;
+            let t_hi = ((chunk + 1) * tiles_per).min(n_tiles);
+            PACK_A.with(|acell| {
+                let pa = &mut acell.borrow_mut().f32buf;
+                run_tiles_f32(
+                    a, bp, bias, relu, rows, steps, cols, n_panels, t_lo, t_hi, optr, pa,
+                );
+            });
+        });
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Public kernels (bench-facing; `net.rs` re-exports them crate-internally).
+// ---------------------------------------------------------------------------
+
+/// `out = act(x · w + bias)` over `n` rows in the requested accumulation
+/// mode (`fastmath = false` → deterministic f64, the only mode training
+/// accepts; `true` → `[f32; 8]` lane sums for serve-only dispatch).
+#[allow(clippy::too_many_arguments)]
+pub fn dense_rows_mode(
+    x: &[f32],
+    n: usize,
+    k: usize,
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    relu: bool,
+    workers: usize,
+    fastmath: bool,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(w.len(), k * m);
+    debug_assert_eq!(bias.len(), m);
+    // Per-GEMM span + rows×inner×cols FLOP counter (2 FLOPs per fused
+    // multiply-add); the registry derives `native.gemm.dense.gflops`.
+    let _t = crate::span!("native.gemm.dense");
+    crate::count!("native.gemm.dense.flops", 2 * n * k * m);
+    let mut out = vec![0f32; n * m];
+    let a = AView { data: x, row_stride: k, step_stride: 1 };
+    let b = BView { data: w, step_stride: m, col_stride: 1 };
+    if fastmath {
+        gemm_f32(a, b, Some(bias), relu, n, k, m, workers, &mut out);
+    } else {
+        gemm_f64(a, b, Some(bias), relu, n, k, m, workers, &mut out);
+    }
+    out
+}
+
+/// `out = act(x · w + bias)` in deterministic mode (bitwise
+/// worker-count-invariant; per-element fixed-order f64 accumulation).
+#[allow(clippy::too_many_arguments)]
+pub fn dense_rows(
+    x: &[f32],
+    n: usize,
+    k: usize,
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    relu: bool,
+    workers: usize,
+) -> Vec<f32> {
+    dense_rows_mode(x, n, k, w, bias, m, relu, workers, false)
+}
+
+/// `out = xᵀ · g` (`[k, m]` from `x [n, k]`, `g [n, m]`): the weight-grad
+/// matmul. Deterministic mode only (it feeds the optimizer).
+pub fn matmul_tn(x: &[f32], n: usize, k: usize, g: &[f32], m: usize, workers: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(g.len(), n * m);
+    let _t = crate::span!("native.gemm.tn");
+    crate::count!("native.gemm.tn.flops", 2 * n * k * m);
+    let mut out = vec![0f32; k * m];
+    // Output row t, reduction step r: A(t, r) = x[r·k + t].
+    let a = AView { data: x, row_stride: 1, step_stride: k };
+    let b = BView { data: g, step_stride: m, col_stride: 1 };
+    gemm_f64(a, b, None, false, k, n, m, workers, &mut out);
+    out
+}
+
+/// `out = g · wᵀ` (`[n, k]` from `g [n, m]`, `w [k, m]`): the input-grad
+/// matmul. Deterministic mode only.
+pub fn matmul_nt(g: &[f32], n: usize, m: usize, w: &[f32], k: usize, workers: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), n * m);
+    debug_assert_eq!(w.len(), k * m);
+    let _t = crate::span!("native.gemm.nt");
+    crate::count!("native.gemm.nt.flops", 2 * n * m * k);
+    let mut out = vec![0f32; n * k];
+    // Output row r, reduction step j: A(r, j) = g[r·m + j] (stride-1).
+    let a = AView { data: g, row_stride: m, step_stride: 1 };
+    // Output col t, reduction step j: B(j, t) = w[t·m + j] (transposed).
+    let b = BView { data: w, step_stride: 1, col_stride: m };
+    gemm_f64(a, b, None, false, n, m, k, workers, &mut out);
+    out
+}
+
+/// Column sums of `g [n, m]` (bias gradients), f64-accumulated in row
+/// order through `[f64; 8]` lane groups (same per-column order as a scalar
+/// loop, so results are bitwise unchanged — the lanes are disjoint
+/// columns).
+pub fn col_sum(g: &[f32], n: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), n * m);
+    let _t = crate::span!("native.gemm.colsum");
+    // One add per element; the registry derives `native.gemm.colsum.gflops`.
+    crate::count!("native.gemm.colsum.flops", n * m);
+    let mut acc = vec![0f64; m];
+    let lanes = m - m % NR;
+    for r in 0..n {
+        let grow = &g[r * m..(r + 1) * m];
+        let mut j = 0;
+        while j < lanes {
+            let gv: &[f32; NR] = grow[j..j + NR].try_into().unwrap();
+            let av: &mut [f64; NR] = (&mut acc[j..j + NR]).try_into().unwrap();
+            for cc in 0..NR {
+                av[cc] += gv[cc] as f64;
+            }
+            j += NR;
+        }
+        for jj in lanes..m {
+            acc[jj] += grow[jj] as f64;
+        }
+    }
+    acc.iter().map(|&v| v as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::threadpool::spawned_threads;
+
+    // Naive references mirroring the pre-tiling scalar kernels exactly
+    // (per-element f64 accumulation in ascending reduction order, with the
+    // unconditional zero-skip the old kernels applied).
+    fn ref_dense(x: &[f32], n: usize, k: usize, w: &[f32], b: &[f32], m: usize, relu: bool) -> Vec<f32> {
+        let mut out = vec![0f32; n * m];
+        for r in 0..n {
+            let mut acc: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+            for t in 0..k {
+                let xv = x[r * k + t];
+                if xv == 0.0 {
+                    continue;
+                }
+                for j in 0..m {
+                    acc[j] += xv as f64 * w[t * m + j] as f64;
+                }
+            }
+            for j in 0..m {
+                let v = acc[j];
+                out[r * m + j] = if relu && v < 0.0 { 0.0 } else { v as f32 };
+            }
+        }
+        out
+    }
+
+    fn ref_tn(x: &[f32], n: usize, k: usize, g: &[f32], m: usize) -> Vec<f32> {
+        let mut out = vec![0f32; k * m];
+        for t in 0..k {
+            let mut acc = vec![0f64; m];
+            for r in 0..n {
+                let xv = x[r * k + t];
+                if xv == 0.0 {
+                    continue;
+                }
+                for j in 0..m {
+                    acc[j] += xv as f64 * g[r * m + j] as f64;
+                }
+            }
+            for j in 0..m {
+                out[t * m + j] = acc[j] as f32;
+            }
+        }
+        out
+    }
+
+    fn ref_nt(g: &[f32], n: usize, m: usize, w: &[f32], k: usize) -> Vec<f32> {
+        let mut out = vec![0f32; n * k];
+        for r in 0..n {
+            for t in 0..k {
+                let mut acc = 0f64;
+                for j in 0..m {
+                    acc += g[r * m + j] as f64 * w[t * m + j] as f64;
+                }
+                out[r * k + t] = acc as f32;
+            }
+        }
+        out
+    }
+
+    fn normal(rng: &mut Rng, len: usize) -> Vec<f32> {
+        let mut v = vec![0f32; len];
+        rng.fill_normal_f32(&mut v, 1.0);
+        v
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Ragged shapes off every tile/lane boundary, including 1×1×1, k < 8
+    /// and the m = 1 flow-head shape.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 3, 1),
+        (2, 8, 8),
+        (3, 5, 2),
+        (5, 7, 9),
+        (8, 3, 8),
+        (9, 16, 7),
+        (17, 13, 33),
+        (33, 31, 1),
+        (16, 9, 24),
+    ];
+
+    #[test]
+    fn tiled_kernels_match_reference_on_ragged_shapes() {
+        for (i, &(n, k, m)) in SHAPES.iter().enumerate() {
+            let mut rng = Rng::new(100 + i as u64);
+            let x = normal(&mut rng, n * k);
+            let w = normal(&mut rng, k * m);
+            let g = normal(&mut rng, n * m);
+            let b = normal(&mut rng, m);
+            for workers in [1usize, 3] {
+                assert_eq!(
+                    dense_rows(&x, n, k, &w, &b, m, false, workers),
+                    ref_dense(&x, n, k, &w, &b, m, false),
+                    "dense {n}x{k}x{m} workers {workers}"
+                );
+                assert_eq!(
+                    dense_rows(&x, n, k, &w, &b, m, true, workers),
+                    ref_dense(&x, n, k, &w, &b, m, true),
+                    "dense+relu {n}x{k}x{m}"
+                );
+                assert_eq!(
+                    matmul_tn(&x, n, k, &g, m, workers),
+                    ref_tn(&x, n, k, &g, m),
+                    "tn {n}x{k}x{m}"
+                );
+                assert_eq!(
+                    matmul_nt(&g, n, m, &w, k, workers),
+                    ref_nt(&g, n, m, &w, k),
+                    "nt {n}x{k}x{m}"
+                );
+            }
+            let refsum: Vec<f32> = (0..m)
+                .map(|j| (0..n).map(|r| g[r * m + j] as f64).sum::<f64>() as f32)
+                .collect();
+            assert_eq!(col_sum(&g, n, m), refsum, "colsum {n}x{m}");
+        }
+    }
+
+    #[test]
+    fn deterministic_mode_is_bitwise_worker_invariant() {
+        // Include a shape big enough that effective_workers really grants
+        // several workers (64·96·80 ≈ 2^19 madds → up to 7).
+        let shapes = [(5, 7, 9), (17, 13, 33), (64, 96, 80)];
+        for (i, &(n, k, m)) in shapes.iter().enumerate() {
+            let mut rng = Rng::new(200 + i as u64);
+            let x = normal(&mut rng, n * k);
+            let w = normal(&mut rng, k * m);
+            let g = normal(&mut rng, n * m);
+            let b = normal(&mut rng, m);
+            let d1 = dense_rows(&x, n, k, &w, &b, m, true, 1);
+            let t1 = matmul_tn(&x, n, k, &g, m, 1);
+            let n1 = matmul_nt(&g, n, m, &w, k, 1);
+            let f1 = dense_rows_mode(&x, n, k, &w, &b, m, true, 1, true);
+            for workers in [2usize, 3, 5, 16] {
+                assert_eq!(bits(&d1), bits(&dense_rows(&x, n, k, &w, &b, m, true, workers)));
+                assert_eq!(bits(&t1), bits(&matmul_tn(&x, n, k, &g, m, workers)));
+                assert_eq!(bits(&n1), bits(&matmul_nt(&g, n, m, &w, k, workers)));
+                // The fast mode is also worker-count-invariant (tiles are
+                // global), just not bitwise-equal to deterministic mode.
+                assert_eq!(
+                    bits(&f1),
+                    bits(&dense_rows_mode(&x, n, k, &w, &b, m, true, workers, true))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fast_mode_error_is_bounded() {
+        let (n, k, m) = (37, 160, 21);
+        let mut rng = Rng::new(7);
+        let x = normal(&mut rng, n * k);
+        let w = normal(&mut rng, k * m);
+        let b = normal(&mut rng, m);
+        let fast = dense_rows_mode(&x, n, k, &w, &b, m, false, 3, true);
+        // Standard dot-product bound: |err| ≤ γ_k · Σ|aᵢbᵢ| with
+        // γ_k ≈ k·ε; ×4 margin for the bias add and f32 storage rounding.
+        for r in 0..n {
+            for j in 0..m {
+                let mut exact = b[j] as f64;
+                let mut absum = (b[j] as f64).abs();
+                for t in 0..k {
+                    let p = x[r * k + t] as f64 * w[t * m + j] as f64;
+                    exact += p;
+                    absum += p.abs();
+                }
+                let tol = 4.0 * k as f64 * f32::EPSILON as f64 * absum + 1e-6;
+                let got = fast[r * m + j] as f64;
+                assert!(
+                    (got - exact).abs() <= tol,
+                    "fast mode error {} exceeds bound {tol} at ({r},{j})",
+                    (got - exact).abs()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_density_paths_agree_with_reference() {
+        let mut rng = Rng::new(11);
+        let (n, k, m) = (19, 24, 13);
+        let w = normal(&mut rng, k * m);
+        let b = normal(&mut rng, m);
+
+        // Sparse regime: one-hot rows (density 1/k ≪ threshold takes the
+        // zero-skip micro-kernel).
+        let mut onehot = vec![0f32; n * k];
+        for r in 0..n {
+            onehot[r * k + (r * 7) % k] = 1.0;
+        }
+        let g = normal(&mut rng, n * m);
+        assert_eq!(
+            dense_rows(&onehot, n, k, &w, &b, m, false, 2),
+            ref_dense(&onehot, n, k, &w, &b, m, false),
+            "one-hot (sparse path)"
+        );
+        assert_eq!(
+            matmul_tn(&onehot, n, k, &g, m, 2),
+            ref_tn(&onehot, n, k, &g, m),
+            "one-hot tn (sparse path)"
+        );
+
+        // Dense regime: every entry ±1 (ising spins) takes the
+        // branch-free micro-kernel.
+        let spins: Vec<f32> = (0..n * k)
+            .map(|i| if (i * 2654435761) % 3 == 0 { -1.0 } else { 1.0 })
+            .collect();
+        assert_eq!(
+            dense_rows(&spins, n, k, &w, &b, m, false, 2),
+            ref_dense(&spins, n, k, &w, &b, m, false),
+            "spins (dense path)"
+        );
+        assert_eq!(
+            matmul_tn(&spins, n, k, &g, m, 2),
+            ref_tn(&spins, n, k, &g, m),
+            "spins tn (dense path)"
+        );
+
+        // Mixed regime: one-hot and dense rows interleaved inside the
+        // same row tiles — per-tile density sampling must still agree
+        // with the reference on both kinds of rows.
+        let mut mixed = spins.clone();
+        for r in (0..n).step_by(2) {
+            for t in 0..k {
+                mixed[r * k + t] = if t == r % k { 1.0 } else { 0.0 };
+            }
+        }
+        assert_eq!(
+            dense_rows(&mixed, n, k, &w, &b, m, true, 3),
+            ref_dense(&mixed, n, k, &w, &b, m, true),
+            "mixed tiles"
+        );
+    }
+
+    #[test]
+    fn small_gemms_stay_single_worker() {
+        // Pooled-dispatch calibration: 4×64×64 (a small rollout dispatch)
+        // is below one PAR_FLOP_QUANTUM and must not wake the pool…
+        assert_eq!(effective_workers(8, 4, 4 * 64 * 64), 1);
+        // …while a mid-size train-step GEMM (2^20 madds) now gets 16
+        // workers where the old spawn-calibrated 2^18 quantum allowed 4.
+        assert_eq!(effective_workers(16, 64, 1 << 20), 16);
+        // The big-matmul grant the worker-invariance test relies on.
+        assert_eq!(effective_workers(4, 256, 256 * 128 * 128), 4);
+    }
+
+    #[test]
+    fn gemm_dispatch_reuses_pool_threads() {
+        let (n, k, m) = (64, 128, 128); // 2^20 madds → genuinely parallel
+        let mut rng = Rng::new(21);
+        let x = normal(&mut rng, n * k);
+        let w = normal(&mut rng, k * m);
+        let g = normal(&mut rng, n * m);
+        let b = normal(&mut rng, m);
+        let _ = dense_rows(&x, n, k, &w, &b, m, true, 4); // warm the pool
+        let spawned = spawned_threads();
+        for _ in 0..32 {
+            let _ = dense_rows(&x, n, k, &w, &b, m, true, 4);
+            let _ = matmul_tn(&x, n, k, &g, m, 4);
+            let _ = matmul_nt(&g, n, m, &w, k, 4);
+        }
+        assert_eq!(
+            spawned_threads(),
+            spawned,
+            "GEMM dispatch spawned threads after pool warm-up"
+        );
+    }
+}

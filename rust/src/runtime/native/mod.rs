@@ -18,6 +18,7 @@
 //! seed when no artifact exists.
 
 pub mod adam;
+pub mod gemm;
 pub mod loss;
 pub mod net;
 
@@ -59,6 +60,14 @@ pub struct NativeConfig {
     /// Worker threads for batched dispatch matmuls (1 = single-threaded;
     /// results are bitwise identical for every worker count).
     pub workers: usize,
+    /// Serve-only fast accumulation: forward GEMMs use `[f32; 8]` lane
+    /// sums instead of fixed-order f64. Still worker-count-invariant and
+    /// bit-reproducible per seed, but not bitwise-equal to deterministic
+    /// mode — so `validate()` rejects it on every *training* construction
+    /// path; flip it on a [`NativePolicy`] via
+    /// [`NativePolicy::with_fastmath`] (typically from `GFNX_FASTMATH=1`,
+    /// see [`fastmath_from_env`]).
+    pub fastmath: bool,
 }
 
 impl NativeConfig {
@@ -81,6 +90,7 @@ impl NativeConfig {
             z_lr: 1e-1,
             weight_decay: 0.0,
             workers: 1,
+            fastmath: false,
         }
     }
 
@@ -102,6 +112,12 @@ impl NativeConfig {
     pub fn with_lr(mut self, lr: f32, z_lr: f32) -> NativeConfig {
         self.lr = lr;
         self.z_lr = z_lr;
+        self
+    }
+
+    /// Request fast accumulation (serve-only; see the `fastmath` field).
+    pub fn with_fastmath(mut self, on: bool) -> NativeConfig {
+        self.fastmath = on;
         self
     }
 
@@ -139,6 +155,12 @@ impl NativeConfig {
         anyhow::ensure!(
             self.n_layers == 0 || self.hidden > 0,
             "native config: hidden must be positive when n_layers > 0"
+        );
+        anyhow::ensure!(
+            !self.fastmath,
+            "fastmath is a serve-only dispatch mode: training requires the \
+             deterministic f64 accumulation (set it on the policy via \
+             NativePolicy::with_fastmath, not on the backend config)"
         );
         Ok(())
     }
@@ -277,6 +299,7 @@ impl NativeBackend {
             z_lr: 1e-1,
             weight_decay: 0.0,
             workers: 1,
+            fastmath: false,
         };
         cfg.validate()?;
         let leaves: Vec<Leaf> = params
@@ -698,6 +721,27 @@ impl SnapshotBackend for NativeBackend {
 #[derive(Clone, Debug)]
 pub struct NativePolicy {
     pub net: NativeNet,
+}
+
+impl NativePolicy {
+    /// Switch this serving snapshot's forward GEMMs between deterministic
+    /// f64 accumulation (`false`, the default — bitwise-equal to training
+    /// dispatch) and the fast `[f32; 8]` lane-sum mode (`true`). Fastmath
+    /// results stay bit-reproducible per seed and worker-count-invariant;
+    /// they are just not bitwise-equal to the deterministic mode.
+    pub fn with_fastmath(mut self, on: bool) -> NativePolicy {
+        self.net.cfg.fastmath = on;
+        self
+    }
+}
+
+/// `true` when `GFNX_FASTMATH` is set to `1`/`true`/`on`: serve surfaces
+/// use this to opt snapshots into fast accumulation at hot-swap time.
+pub fn fastmath_from_env() -> bool {
+    matches!(
+        std::env::var("GFNX_FASTMATH").ok().as_deref(),
+        Some("1") | Some("true") | Some("on")
+    )
 }
 
 impl BatchPolicy for NativePolicy {

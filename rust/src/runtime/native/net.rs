@@ -8,16 +8,23 @@
 //! head_flow_w, head_flow_b, logZ`), so a [`NativeNet`] can be initialized
 //! from the same `Manifest` + blob an XLA artifact uses.
 //!
-//! All batched matmuls run through [`parallel_map`] over row blocks with
-//! per-row `f64` accumulation, so results are **bitwise independent of the
-//! worker count** (and of how rows are chunked) — the property that keeps
-//! the serve subsystem's determinism guarantee intact when a `NativePolicy`
-//! backs the slot engine.
+//! All batched matmuls run through the cache-blocked kernels in
+//! [`super::gemm`], dispatched on the persistent worker pool. In the
+//! default deterministic mode every output element is a fixed-order `f64`
+//! accumulation, so results are **bitwise independent of the worker
+//! count** (and of how rows are tiled) — the property that keeps the
+//! serve subsystem's determinism guarantee intact when a `NativePolicy`
+//! backs the slot engine. The serve-only `NativeConfig::fastmath` mode
+//! (`GFNX_FASTMATH=1`) switches the forward pass to `[f32; 8]` lane-sum
+//! accumulation: still worker-count-invariant and reproducible per seed,
+//! but not bitwise-equal to the deterministic mode.
 
+use super::gemm::{col_sum, dense_rows_mode, matmul_nt, matmul_tn};
 use super::NativeConfig;
 use crate::runtime::policy::{masked_uniform_rows, MASKED_NEG};
 use crate::util::tensor::TensorF32;
-use crate::util::threadpool::parallel_map;
+#[cfg(test)]
+use super::gemm::{dense_rows, effective_workers};
 
 /// One named parameter leaf (weights `[in, out]`, biases `[out]`, `logZ`
 /// `[1]`), stored in the manifest blob layout order.
@@ -189,7 +196,7 @@ impl NativeNet {
             };
             let w = self.leaves[self.idx_w(i)].tensor.data();
             let b = self.leaves[self.idx_b(i)].tensor.data();
-            let h = dense_rows(x, n, k, w, b, c.hidden, true, workers);
+            let h = dense_rows_mode(x, n, k, w, b, c.hidden, true, workers, c.fastmath);
             acts.push(h);
         }
         let (h_last, hk): (&[f32], usize) = if c.n_layers == 0 {
@@ -197,7 +204,7 @@ impl NativeNet {
         } else {
             (&acts[c.n_layers - 1], c.hidden)
         };
-        let fwd_logits = dense_rows(
+        let fwd_logits = dense_rows_mode(
             h_last,
             n,
             hk,
@@ -206,8 +213,9 @@ impl NativeNet {
             c.n_actions,
             false,
             workers,
+            c.fastmath,
         );
-        let flow = dense_rows(
+        let flow = dense_rows_mode(
             h_last,
             n,
             hk,
@@ -216,6 +224,7 @@ impl NativeNet {
             1,
             false,
             workers,
+            c.fastmath,
         );
         let fwd_logp = masked_log_softmax_rows(&fwd_logits, fwd_mask, n, c.n_actions);
         let bwd_logp = if with_bwd {
@@ -346,185 +355,6 @@ impl NativeNet {
         }
         Grads { leaves: grads }
     }
-}
-
-/// Per-worker work quantum: spawn one worker per this many fused
-/// multiply-adds. [`parallel_map`] is scoped-thread based (spawn/join per
-/// call, not a persistent pool), so the thread cost must be amortized by
-/// enough work — small-batch rollout dispatches stay single-threaded and a
-/// many-core default cannot oversubscribe a just-parallel matmul; the big
-/// `[B·T1, hidden]` train-step matmuls go wide.
-const PAR_FLOP_QUANTUM: usize = 1 << 18;
-
-/// Effective worker count: at least 1, at most `rows`, at most the
-/// requested count, and at most one worker per [`PAR_FLOP_QUANTUM`] of
-/// total work.
-#[inline]
-fn effective_workers(workers: usize, rows: usize, flops: usize) -> usize {
-    (flops / PAR_FLOP_QUANTUM).max(1).min(workers.max(1)).min(rows.max(1))
-}
-
-/// `out = act(x · w + bias)` over `n` rows, parallelized over row blocks.
-/// Per-row accumulation is `f64` in a fixed order, so the result is bitwise
-/// identical for every worker count.
-pub(crate) fn dense_rows(
-    x: &[f32],
-    n: usize,
-    k: usize,
-    w: &[f32],
-    bias: &[f32],
-    m: usize,
-    relu: bool,
-    workers: usize,
-) -> Vec<f32> {
-    debug_assert_eq!(x.len(), n * k);
-    debug_assert_eq!(w.len(), k * m);
-    debug_assert_eq!(bias.len(), m);
-    // Per-GEMM span + rows×inner×cols FLOP counter (2 FLOPs per fused
-    // multiply-add); the registry derives `native.gemm.dense.gflops`.
-    let _t = crate::span!("native.gemm.dense");
-    crate::count!("native.gemm.dense.flops", 2 * n * k * m);
-    let workers = effective_workers(workers, n, n * k * m);
-    let rows_per = ((n + workers - 1) / workers).max(1);
-    let n_chunks = (n + rows_per - 1) / rows_per;
-    let blocks = parallel_map(n_chunks, workers, |c| {
-        let lo = c * rows_per;
-        let hi = ((c + 1) * rows_per).min(n);
-        let mut out = vec![0f32; (hi - lo) * m];
-        let mut acc = vec![0f64; m];
-        for r in lo..hi {
-            for (j, a) in acc.iter_mut().enumerate() {
-                *a = bias[j] as f64;
-            }
-            let xrow = &x[r * k..(r + 1) * k];
-            for (t, &xv) in xrow.iter().enumerate() {
-                if xv == 0.0 {
-                    continue; // one-hot-heavy observations: skip zero columns
-                }
-                let xv = xv as f64;
-                let wrow = &w[t * m..(t + 1) * m];
-                for j in 0..m {
-                    acc[j] += xv * wrow[j] as f64;
-                }
-            }
-            let orow = &mut out[(r - lo) * m..(r - lo + 1) * m];
-            for j in 0..m {
-                let v = acc[j];
-                orow[j] = if relu && v < 0.0 { 0.0 } else { v as f32 };
-            }
-        }
-        out
-    });
-    concat_blocks(blocks, n * m)
-}
-
-/// `out = xᵀ · g` (`[k, m]` from `x [n, k]`, `g [n, m]`): the weight-grad
-/// matmul, parallelized over output rows.
-pub(crate) fn matmul_tn(
-    x: &[f32],
-    n: usize,
-    k: usize,
-    g: &[f32],
-    m: usize,
-    workers: usize,
-) -> Vec<f32> {
-    debug_assert_eq!(x.len(), n * k);
-    debug_assert_eq!(g.len(), n * m);
-    let _t = crate::span!("native.gemm.tn");
-    crate::count!("native.gemm.tn.flops", 2 * n * k * m);
-    let workers = effective_workers(workers, k, n * k * m);
-    let rows_per = ((k + workers - 1) / workers).max(1);
-    let n_chunks = (k + rows_per - 1) / rows_per;
-    let blocks = parallel_map(n_chunks, workers, |c| {
-        let lo = c * rows_per;
-        let hi = ((c + 1) * rows_per).min(k);
-        let mut out = vec![0f32; (hi - lo) * m];
-        let mut acc = vec![0f64; m];
-        for t in lo..hi {
-            for a in acc.iter_mut() {
-                *a = 0.0;
-            }
-            for r in 0..n {
-                let xv = x[r * k + t];
-                if xv == 0.0 {
-                    continue;
-                }
-                let xv = xv as f64;
-                let grow = &g[r * m..(r + 1) * m];
-                for j in 0..m {
-                    acc[j] += xv * grow[j] as f64;
-                }
-            }
-            let orow = &mut out[(t - lo) * m..(t - lo + 1) * m];
-            for j in 0..m {
-                orow[j] = acc[j] as f32;
-            }
-        }
-        out
-    });
-    concat_blocks(blocks, k * m)
-}
-
-/// `out = g · wᵀ` (`[n, k]` from `g [n, m]`, `w [k, m]`): the input-grad
-/// matmul, parallelized over rows.
-pub(crate) fn matmul_nt(
-    g: &[f32],
-    n: usize,
-    m: usize,
-    w: &[f32],
-    k: usize,
-    workers: usize,
-) -> Vec<f32> {
-    debug_assert_eq!(g.len(), n * m);
-    debug_assert_eq!(w.len(), k * m);
-    let _t = crate::span!("native.gemm.nt");
-    crate::count!("native.gemm.nt.flops", 2 * n * m * k);
-    let workers = effective_workers(workers, n, n * m * k);
-    let rows_per = ((n + workers - 1) / workers).max(1);
-    let n_chunks = (n + rows_per - 1) / rows_per;
-    let blocks = parallel_map(n_chunks, workers, |c| {
-        let lo = c * rows_per;
-        let hi = ((c + 1) * rows_per).min(n);
-        let mut out = vec![0f32; (hi - lo) * k];
-        for r in lo..hi {
-            let grow = &g[r * m..(r + 1) * m];
-            let orow = &mut out[(r - lo) * k..(r - lo + 1) * k];
-            for t in 0..k {
-                let wrow = &w[t * m..(t + 1) * m];
-                let mut acc = 0f64;
-                for j in 0..m {
-                    acc += grow[j] as f64 * wrow[j] as f64;
-                }
-                orow[t] = acc as f32;
-            }
-        }
-        out
-    });
-    concat_blocks(blocks, n * k)
-}
-
-/// Column sums of `g [n, m]` (bias gradients), `f64`-accumulated.
-pub(crate) fn col_sum(g: &[f32], n: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(g.len(), n * m);
-    let mut acc = vec![0f64; m];
-    for r in 0..n {
-        let grow = &g[r * m..(r + 1) * m];
-        for j in 0..m {
-            acc[j] += grow[j] as f64;
-        }
-    }
-    acc.iter().map(|&v| v as f32).collect()
-}
-
-fn concat_blocks(blocks: Vec<Vec<f32>>, total: usize) -> Vec<f32> {
-    if blocks.len() == 1 {
-        return blocks.into_iter().next().unwrap();
-    }
-    let mut out = Vec::with_capacity(total);
-    for b in blocks {
-        out.extend_from_slice(&b);
-    }
-    out
 }
 
 /// Row-wise masked log-softmax with the kernel's `-1e30` convention:

@@ -1,15 +1,255 @@
-//! A minimal scoped thread pool (the image has no `rayon`/`tokio`).
+//! A persistent worker pool (the image has no `rayon`/`tokio`).
 //!
-//! Used for parallel evaluation work that is independent across items
-//! (exact-posterior enumeration chunks, MCMC chains, baseline sweeps).
-//! The device hot path stays single-threaded by design — PJRT CPU already
-//! parallelizes inside a computation.
+//! The GEMM hot path dispatches thousands of small parallel regions per
+//! second; spawning OS threads per call (the old `std::thread::scope`
+//! design) costs ~20–60 µs per region, which dwarfs a batch-16 dispatch.
+//! [`ThreadPool`] keeps parked workers alive across calls: a scope-style
+//! [`ThreadPool::run`] pushes one job (an index range + a borrowed
+//! closure) onto a queue, wakes workers, participates itself, and returns
+//! once every index ran — so waking a region costs a condvar signal
+//! (~1–3 µs) instead of a spawn/join cycle.
+//!
+//! [`parallel_map`] is a thin wrapper over the global pool and keeps its
+//! original signature, so existing call sites (exact-posterior enumeration
+//! chunks, MCMC chains, baseline sweeps, the GEMM kernels) are unchanged.
+//!
+//! Nested `run` calls are safe: the submitting thread always participates
+//! in its own job, so progress never depends on a parked worker being
+//! free, and pool workers that finish a job go back to the queue for the
+//! next one.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Run `f(i)` for every `i in 0..n` across `workers` OS threads and collect
-/// results in index order.
+/// Process-wide count of pool threads ever spawned. Tests assert this
+/// stays flat across repeated dispatches (no per-call spawns remain).
+static SPAWNED_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Total pool threads spawned since process start (across all pools).
+pub fn spawned_threads() -> usize {
+    SPAWNED_THREADS.load(Ordering::Relaxed)
+}
+
+/// One queued parallel region: `n` indexes claimed via an atomic counter
+/// by up to `cap` executors (the submitter + admitted pool workers).
+struct Job {
+    n: usize,
+    /// Max concurrent executors (submitter included).
+    cap: usize,
+    /// Next index to claim.
+    next: AtomicUsize,
+    /// Indexes fully executed; the job is finished at `done == n`.
+    done: AtomicUsize,
+    /// Executors currently admitted (submitter counts as one). Incremented
+    /// under the pool lock, so admission never overshoots `cap`.
+    joined: AtomicUsize,
+    /// A task panicked; the submitter re-raises after the job drains.
+    panicked: AtomicBool,
+    /// The borrowed task closure, lifetime-erased. SAFETY: only
+    /// dereferenced for a successfully *claimed* index `i < n`; a claimed
+    /// index keeps `done < n` until it runs, and the submitting `run`
+    /// frame (which owns the closure) cannot return before `done == n`.
+    task: TaskPtr,
+    fin: Mutex<bool>,
+    fin_cv: Condvar,
+}
+
+impl Job {
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.n
+    }
+}
+
+struct TaskPtr(*const (dyn Fn(usize) + Sync + 'static));
+// SAFETY: the target is `Sync` (shared calls from many threads are fine)
+// and the pointer is only dereferenced while the owning stack frame is
+// alive (see the field's invariant above).
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+struct PoolState {
+    jobs: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+/// A fixed set of parked worker threads executing queued [`Job`]s.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `size` parked workers (0 is valid: every `run` executes
+    /// inline on the submitter).
+    pub fn new(size: usize) -> ThreadPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { jobs: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let handles = (0..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                SPAWNED_THREADS.fetch_add(1, Ordering::Relaxed);
+                std::thread::Builder::new()
+                    .name(format!("gfnx-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        ThreadPool { shared, handles, size }
+    }
+
+    /// The process-wide pool, sized [`default_workers`] and spawned on
+    /// first use. Never shut down — workers park between jobs.
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(|| ThreadPool::new(default_workers()))
+    }
+
+    /// Parked worker threads in this pool.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `f(i)` for every `i in 0..n` across at most `max_workers`
+    /// concurrent executors (the calling thread participates and counts).
+    /// Returns when every index has executed. Panics from `f` are caught
+    /// on the worker, drained, and re-raised here.
+    pub fn run<F>(&self, n: usize, max_workers: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let cap = max_workers.max(1).min(n);
+        if cap <= 1 || self.size == 0 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: lifetime erasure only — `run` blocks until `done == n`,
+        // so the pointee outlives every dereference (see TaskPtr invariant).
+        let task = TaskPtr(unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                *const (dyn Fn(usize) + Sync + 'static),
+            >(f_ref)
+        });
+        let job = Arc::new(Job {
+            n,
+            cap,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            joined: AtomicUsize::new(1), // the submitter
+            panicked: AtomicBool::new(false),
+            task,
+            fin: Mutex::new(false),
+            fin_cv: Condvar::new(),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.jobs.push_back(Arc::clone(&job));
+        }
+        self.shared.work_cv.notify_all();
+        execute(&job);
+        let mut fin = job.fin.lock().unwrap();
+        while !*fin {
+            fin = job.fin_cv.wait(fin).unwrap();
+        }
+        drop(fin);
+        {
+            // The job may still sit in the queue (workers prune lazily).
+            let mut st = self.shared.state.lock().unwrap();
+            st.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("gfnx threadpool: a pooled task panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim-and-run loop shared by workers and submitters.
+fn execute(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n {
+            break;
+        }
+        // SAFETY: index `i` was claimed, so the submitter is still inside
+        // `run` (it blocks until `done == n` and our claim holds done back)
+        // and the closure it owns is alive.
+        let f = unsafe { &*job.task.0 };
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+        if r.is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        // AcqRel chains every executor's writes into the final increment,
+        // so the submitter (which locks `fin` after the last one) observes
+        // all task effects.
+        if job.done.fetch_add(1, Ordering::AcqRel) + 1 == job.n {
+            let mut fin = job.fin.lock().unwrap();
+            *fin = true;
+            job.fin_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                st.jobs.retain(|j| !j.exhausted());
+                let found = st.jobs.iter().find_map(|j| {
+                    let joined = j.joined.load(Ordering::Relaxed);
+                    if joined < j.cap && !j.exhausted() {
+                        // Admission happens under the pool lock, so two
+                        // workers can never both take the last slot.
+                        j.joined.store(joined + 1, Ordering::Relaxed);
+                        Some(Arc::clone(j))
+                    } else {
+                        None
+                    }
+                });
+                match found {
+                    Some(j) => break j,
+                    None => st = shared.work_cv.wait(st).unwrap(),
+                }
+            }
+        };
+        execute(&job);
+        job.joined.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Run `f(i)` for every `i in 0..n` across up to `workers` executors on
+/// the global pool and collect results in index order.
 pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -19,28 +259,14 @@ where
     if workers <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
-    let next = Arc::new(AtomicUsize::new(0));
     let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let slots_ptr = SlotsPtr(slots.as_mut_ptr());
-
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let next = Arc::clone(&next);
-            let f = &f;
-            let slots_ptr = slots_ptr;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let v = f(i);
-                // SAFETY: each index i is claimed by exactly one worker via
-                // the atomic counter, so writes to slots[i] never alias.
-                unsafe { slots_ptr.write(i, v) }
-            });
-        }
+    ThreadPool::global().run(n, workers, |i| {
+        let v = f(i);
+        // SAFETY: each index i is claimed by exactly one executor via the
+        // job's atomic counter, so writes to slots[i] never alias.
+        unsafe { slots_ptr.write(i, v) }
     });
-
     slots.into_iter().map(|s| s.expect("worker missed slot")).collect()
 }
 
@@ -68,7 +294,7 @@ unsafe impl<T: Send> Send for SlotsPtr<T> {}
 unsafe impl<T: Send> Sync for SlotsPtr<T> {}
 
 /// Default worker count: available parallelism minus one (leave a core for
-/// the PJRT runtime), at least 1.
+/// the submitting thread), at least 1.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism()
         .map(|p| p.get().saturating_sub(1).max(1))
@@ -102,5 +328,79 @@ mod tests {
         let out = parallel_map(1000, 8, |i| i % 7);
         assert_eq!(out.len(), 1000);
         assert_eq!(out[999], 999 % 7);
+    }
+
+    #[test]
+    fn pool_threads_are_persistent_across_dispatches() {
+        // Warm the global pool, then assert repeated parallel regions
+        // spawn zero additional threads (the acceptance bar: no per-call
+        // spawns remain anywhere in the dispatch path).
+        let _ = parallel_map(64, 4, |i| i);
+        let spawned = spawned_threads();
+        for _ in 0..100 {
+            let out = parallel_map(64, 4, |i| i * 2);
+            assert_eq!(out[63], 126);
+        }
+        assert_eq!(
+            spawned_threads(),
+            spawned,
+            "parallel dispatch spawned new threads after pool warm-up"
+        );
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                scope.spawn(move || {
+                    for _ in 0..20 {
+                        let out = parallel_map(97, 4, move |i| i + t);
+                        assert_eq!(out, (0..97).map(|i| i + t).collect::<Vec<_>>());
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn nested_runs_complete() {
+        // A pooled task submitting its own parallel region must not
+        // deadlock: submitters always participate in their own job.
+        let out = parallel_map(4, 4, |i| {
+            let inner = parallel_map(8, 2, move |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        assert_eq!(out, (0..4).map(|i| (0..8).map(|j| i * 10 + j).sum()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "pooled task panicked")]
+    fn task_panics_propagate_to_submitter() {
+        ThreadPool::global().run(16, 4, |i| {
+            if i == 7 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn zero_size_pool_runs_inline() {
+        let pool = ThreadPool::new(0);
+        let hits = AtomicUsize::new(0);
+        pool.run(10, 4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn private_pool_shuts_down_cleanly() {
+        let pool = ThreadPool::new(2);
+        let hits = AtomicUsize::new(0);
+        pool.run(100, 3, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+        drop(pool); // joins both workers
     }
 }
