@@ -7,7 +7,9 @@
 //! small/large batch regimes), plus the host-synchronized
 //! [`BaselineTrainer`] at batch 16 — the per-sample-dispatch +
 //! per-call-parameter-upload comparator of Tables 1–2 — so the it/s ratio
-//! is measurable without artifacts.
+//! is measurable without artifacts. The registry table adds one
+//! transformer-policy row (seq_small, per-family preset) next to its MLP
+//! twin, so the model-layer cost is visible in the same document.
 //!
 //! Run:   cargo bench --bench native_train
 //! Env:   GFNX_NATIVE_HIDDEN    MLP trunk width (default 128)
@@ -79,6 +81,9 @@ fn bench_env<E: VecEnv>(
 /// log-scores — are supplied by the registry, so fldb/mdb run for real).
 struct RegistryBench {
     loss: &'static str,
+    /// "mlp" | "transformer" (transformer uses the registry's per-family
+    /// preset — token-grid envs only).
+    model: &'static str,
     batch: usize,
     hidden: usize,
     workers: usize,
@@ -93,7 +98,7 @@ impl EnvDriver for RegistryBench {
         self,
         env: &E,
         extra: &ExtraSource<'_, E>,
-        _fam: &'static EnvFamily,
+        fam: &'static EnvFamily,
         config: &str,
     ) -> anyhow::Result<ItPerSec>
     where
@@ -101,16 +106,23 @@ impl EnvDriver for RegistryBench {
         E::State: Clone,
         E::Obj: PartialEq + std::fmt::Debug,
     {
-        let cfg = NativeConfig::for_env(env, self.batch, self.loss)
+        let mut cfg = NativeConfig::for_env(env, self.batch, self.loss)
             .with_hidden(self.hidden)
             .with_workers(self.workers);
+        if self.model == "transformer" {
+            let arch = registry::transformer_arch(fam, &env.spec())?;
+            cfg = cfg.with_model(gfnx::runtime::ModelSpec::Transformer(arch));
+        }
         let backend = NativeBackend::new(cfg, 0)?;
         let mut trainer = Trainer::with_backend(env, backend, 0, EpsSchedule::none())?;
         let r = measure_it_per_sec(1, self.repeats, self.iters, || {
             let (stats, _objs) = trainer.train_iter(extra).unwrap();
             assert!(stats.loss.is_finite(), "{config}: loss diverged");
         });
-        println!("  {config:<24} {:<8} batch {:>3}: {r}", self.loss, self.batch);
+        println!(
+            "  {config:<24} {:<8} {:<12} batch {:>3}: {r}",
+            self.loss, self.model, self.batch
+        );
         Ok(r)
     }
 }
@@ -168,18 +180,20 @@ fn main() {
     // Registry rows: one per newly CLI-trainable family (tb everywhere,
     // plus the extras-dependent objectives on their home envs).
     println!("registry envs (native backend, batch 16):");
-    let reg_rows: Vec<(&str, &str, ItPerSec)> = [
-        ("seq_small", "tb"),
-        ("tfbind8", "tb"),
-        ("qm9", "tb"),
-        ("amp_small", "tb"),
-        ("phylo_small", "fldb"),
-        ("bayesnet_d5", "mdb"),
+    let reg_rows: Vec<(&str, &str, &str, ItPerSec)> = [
+        ("seq_small", "tb", "mlp"),
+        ("seq_small", "tb", "transformer"),
+        ("tfbind8", "tb", "mlp"),
+        ("qm9", "tb", "mlp"),
+        ("amp_small", "tb", "mlp"),
+        ("phylo_small", "fldb", "mlp"),
+        ("bayesnet_d5", "mdb", "mlp"),
     ]
     .into_iter()
-    .map(|(config, loss)| {
+    .map(|(config, loss, model)| {
         let bench = RegistryBench {
             loss,
+            model,
             batch: 16,
             hidden,
             workers,
@@ -187,16 +201,22 @@ fn main() {
             repeats,
         };
         let r = registry::with_env(config, EnvParams::default(), bench)
-            .unwrap_or_else(|e| panic!("{config}.{loss}: {e}"));
-        (config, loss, r)
+            .unwrap_or_else(|e| panic!("{config}.{loss} ({model}): {e}"));
+        (config, loss, model, r)
     })
     .collect();
     let mut reg_table = BenchTable::new(
         "native_train — registry envs (one row per newly-trainable family)",
-        &["Config", "Loss", "Batch", "it/s"],
+        &["Config", "Loss", "Model", "Batch", "it/s"],
     );
-    for (config, loss, r) in &reg_rows {
-        reg_table.row(&[config.to_string(), loss.to_string(), "16".to_string(), r.to_string()]);
+    for (config, loss, model, r) in &reg_rows {
+        reg_table.row(&[
+            config.to_string(),
+            loss.to_string(),
+            model.to_string(),
+            "16".to_string(),
+            r.to_string(),
+        ]);
     }
     reg_table.print();
 
@@ -234,10 +254,11 @@ fn main() {
         }
         bj.row(Json::obj(fields));
     }
-    for (config, loss, r) in &reg_rows {
+    for (config, loss, model, r) in &reg_rows {
         bj.row(Json::obj(vec![
             ("env", Json::Str(config.to_string())),
             ("mode", Json::Str(format!("registry:{loss}"))),
+            ("model", Json::Str(model.to_string())),
             ("batch", Json::Num(16.0)),
             ("it_per_sec", itps_json(r)),
         ]));

@@ -8,7 +8,10 @@
 //! synthetic fixed-shape dispatch cost (the cost of one dispatch does not
 //! depend on how many rows are live — the defining property of an
 //! accelerator dispatch), so the measured ratio isolates the *scheduling*
-//! effect: slot refill vs padding. No AOT artifacts required.
+//! effect: slot refill vs padding. No AOT artifacts required. A final
+//! section times the native transformer policy on seq_small with its
+//! per-slot KV cache on vs off (bitwise-equal outputs, O(T) vs O(T²)
+//! attention per decode step).
 //!
 //! Run:   cargo bench --bench serve_qps
 //! Env:   GFNX_SERVE_B        slot-table width / batch (default 64)
@@ -22,16 +25,84 @@
 //! Emits `BENCH_serve.json` (see `bench::harness::BenchJson`).
 
 use gfnx::bench::harness::{itps_json, measure_items_per_sec, BenchJson, BenchTable};
+use gfnx::coordinator::registry::{self, EnvDriver, EnvFamily, EnvParams};
 use gfnx::coordinator::rollout::{forward_rollout_with_policy, ExtraSource, RolloutCtx};
 use gfnx::envs::hypergrid::HypergridEnv;
 use gfnx::envs::VecEnv;
 use gfnx::reward::hypergrid::HypergridReward;
 use gfnx::runtime::policy::{BatchPolicy, PolicyShape, UniformPolicy};
-use gfnx::runtime::{NativeBackend, NativeConfig};
-use gfnx::serve::{sample_stream, SampleRequest, SamplerService, TrajJob};
+use gfnx::runtime::{ModelSpec, NativeBackend, NativeConfig, NativePolicy};
+use gfnx::serve::{sample_stream, traj_seed, SampleRequest, SamplerService, TrajJob};
 use gfnx::util::json::Json;
 use gfnx::util::rng::Rng;
 use gfnx::util::stats::ItPerSec;
+
+/// Seq-env transformer decode row: the KV-cached incremental path (O(T)
+/// attention per step, per-slot caches keyed by committed prefixes) vs full
+/// re-encode (O(T²) per step), same weights, same per-trajectory seeds.
+/// Outputs are bitwise-equal by construction (the runtime's KV-equivalence
+/// test asserts it); this measures what the equality costs/saves.
+struct TransformerDecode {
+    b: usize,
+    objs: usize,
+    repeats: usize,
+}
+
+impl EnvDriver for TransformerDecode {
+    type Out = (ItPerSec, ItPerSec);
+
+    fn drive<E>(
+        self,
+        env: &E,
+        _extra: &ExtraSource<'_, E>,
+        fam: &'static EnvFamily,
+        _config: &str,
+    ) -> anyhow::Result<(ItPerSec, ItPerSec)>
+    where
+        E: VecEnv,
+        E::State: Clone,
+        E::Obj: PartialEq + std::fmt::Debug,
+    {
+        let arch = registry::transformer_arch(fam, &env.spec())?;
+        let base = NativeBackend::new(
+            NativeConfig::for_env(env, self.b, "tb").with_model(ModelSpec::Transformer(arch)),
+            0,
+        )?
+        .to_policy();
+        let mut run = |mut policy: NativePolicy| {
+            let mut window = 0u64;
+            measure_items_per_sec(1, self.repeats, || {
+                let seed_base = 77_000 * window;
+                window += 1;
+                let mut next = 0usize;
+                let mut produced = 0usize;
+                sample_stream(
+                    env,
+                    &mut policy,
+                    || {
+                        if next < self.objs {
+                            let j = TrajJob {
+                                request: 0,
+                                traj_index: next,
+                                seed: traj_seed(seed_base, next as u64),
+                            };
+                            next += 1;
+                            Some(j)
+                        } else {
+                            None
+                        }
+                    },
+                    |_r| produced += 1,
+                )
+                .unwrap();
+                produced
+            })
+        };
+        let kv = run(base.clone());
+        let full = run(base.with_kv_cache(false));
+        Ok((kv, full))
+    }
+}
 
 fn envv(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -177,6 +248,16 @@ fn main() {
         (r, snap)
     };
 
+    // --- Transformer decode: per-slot KV cache on vs off (seq env). ------
+    let objs_tf = (objs_per_window / 16).max(64);
+    let (tf_kv, tf_full) = registry::with_env(
+        "seq_small",
+        EnvParams::default(),
+        TransformerDecode { b, objs: objs_tf, repeats },
+    )
+    .expect("seq_small transformer decode");
+    let kv_speedup = tf_kv.mean / tf_full.mean;
+
     let speedup = refill.mean / padded.mean;
     let occupancy = refill_stats.occupancy();
 
@@ -204,6 +285,23 @@ fn main() {
     ]);
     table.print();
 
+    let mut tf_table = BenchTable::new(
+        "serve_qps — transformer decode on seq_small (same weights, same seeds, \
+         bitwise-equal outputs)",
+        &["Mode", "objs/s", "Speedup"],
+    );
+    tf_table.row(&[
+        "full re-encode (O(T²)/step)".to_string(),
+        tf_full.to_string(),
+        "1.0x".to_string(),
+    ]);
+    tf_table.row(&[
+        "KV-cached decode (O(T)/step)".to_string(),
+        tf_kv.to_string(),
+        format!("{kv_speedup:.2}x"),
+    ]);
+    tf_table.print();
+
     let mut bj = BenchJson::new("serve");
     bj.meta("policy_backend", Json::Str(backend.clone()));
     bj.meta("env", Json::Str(format!("hypergrid_2d_{h}")));
@@ -222,6 +320,18 @@ fn main() {
         Some(service.1.occupancy()),
         service.0.mean / padded.mean,
     ));
+    bj.meta("transformer_env", Json::Str("seq_small".to_string()));
+    bj.meta("transformer_objs_per_window", Json::Num(objs_tf as f64));
+    bj.row(Json::obj(vec![
+        ("mode", Json::Str("seq_transformer_full_reencode".to_string())),
+        ("objs_per_sec", itps_json(&tf_full)),
+        ("speedup_vs_full_reencode", Json::Num(1.0)),
+    ]));
+    bj.row(Json::obj(vec![
+        ("mode", Json::Str("seq_transformer_kv_decode".to_string())),
+        ("objs_per_sec", itps_json(&tf_kv)),
+        ("speedup_vs_full_reencode", Json::Num(kv_speedup)),
+    ]));
     match bj.write() {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("BENCH_serve.json write failed: {e}"),
@@ -231,6 +341,9 @@ fn main() {
         "\ncontinuous batching speedup over padded rollout: {speedup:.2}x \
          (target ≥ 1.3x; slot occupancy {:.1}%)",
         100.0 * occupancy
+    );
+    println!(
+        "transformer KV-cached decode speedup over full re-encode: {kv_speedup:.2}x"
     );
     if speedup < 1.3 {
         eprintln!("WARNING: speedup below the 1.3x acceptance bar");

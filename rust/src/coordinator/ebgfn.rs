@@ -101,7 +101,11 @@ impl<'a, B: Backend> EbGfnTrainer<'a, B> {
             backend.loss_name()
         );
         let shape = backend.shape();
-        crate::runtime::policy::check_env_shape(&env.spec(), &shape)?;
+        crate::runtime::policy::check_env_token_shape(
+            &env.spec(),
+            &shape,
+            backend.token_shape(),
+        )?;
         anyhow::ensure!(
             dataset.iter().all(|x| x.len() == env.d),
             "dataset objects must have D = {} spins",

@@ -257,6 +257,36 @@ pub fn check_loss(fam: &EnvFamily, loss: &str) -> anyhow::Result<()> {
     )
 }
 
+/// Per-family native transformer preset: the env's token grid
+/// ([`crate::envs::EnvSpec::token_shape`]) at embed 64, 4 heads, ff 128 —
+/// sized for every registered family's token dims while staying cheap
+/// enough for CPU training. The left-to-right appending sequence families
+/// (seq, tfbind8, amp) get the **causal** attention pattern, which is what
+/// unlocks the per-slot KV-cached O(T) serve decode; everything else runs
+/// the bidirectional encoder. Families with flat observations (ising,
+/// bayesnet) are rejected — the transformer has no token grid to attend
+/// over there.
+pub fn transformer_arch(
+    fam: &EnvFamily,
+    spec: &crate::envs::EnvSpec,
+) -> anyhow::Result<crate::runtime::TransformerArch> {
+    let (seq_len, token_dim) = spec.token_shape.ok_or_else(|| {
+        anyhow::anyhow!(
+            "env {} has flat observations (no token grid) — the transformer \
+             policy needs per-position tokens; train it with --model mlp",
+            fam.name
+        )
+    })?;
+    Ok(crate::runtime::TransformerArch {
+        seq_len,
+        token_dim,
+        embed: 64,
+        n_heads: 4,
+        ff_hidden: 128,
+        causal: matches!(fam.name, "seq" | "tfbind8" | "amp"),
+    })
+}
+
 /// The N×N lattice side behind an ising config name (shared by the
 /// standard trainer path and the EB-GFN workload, which builds its own
 /// shared-reward env). Derived from the name (`ising_n<N>`), so adding a
@@ -538,6 +568,62 @@ mod tests {
                     .unwrap_or_else(|e| panic!("{c}: {e}"));
                 assert_eq!(name, f.name);
             }
+        }
+    }
+
+    /// Every tokenized family gets a transformer preset that factors its
+    /// observation exactly; flat-observation families are rejected with an
+    /// error pointing back at `--model mlp`. Causal mode engages only for
+    /// the left-to-right appending sequence families.
+    #[test]
+    fn transformer_presets_cover_tokenized_families() {
+        struct ArchProbe;
+        impl EnvDriver for ArchProbe {
+            type Out = ();
+            fn drive<E>(
+                self,
+                env: &E,
+                _extra: &ExtraSource<'_, E>,
+                fam: &'static EnvFamily,
+                _config: &str,
+            ) -> anyhow::Result<()>
+            where
+                E: VecEnv,
+                E::State: Clone,
+                E::Obj: PartialEq + std::fmt::Debug,
+            {
+                let spec = env.spec();
+                match transformer_arch(fam, &spec) {
+                    Ok(a) => {
+                        assert_eq!(
+                            a.seq_len * a.token_dim,
+                            spec.obs_dim,
+                            "{}: preset must factor obs_dim",
+                            fam.name
+                        );
+                        assert_eq!(a.embed % a.n_heads, 0, "{}", fam.name);
+                        assert_eq!(
+                            a.causal,
+                            matches!(fam.name, "seq" | "tfbind8" | "amp"),
+                            "{}: causal set",
+                            fam.name
+                        );
+                    }
+                    Err(e) => {
+                        assert!(
+                            spec.token_shape.is_none(),
+                            "{}: preset rejected a tokenized env: {e}",
+                            fam.name
+                        );
+                        assert!(e.to_string().contains("--model mlp"), "{e}");
+                    }
+                }
+                Ok(())
+            }
+        }
+        for f in families() {
+            with_env(f.default_config, EnvParams::default(), ArchProbe)
+                .unwrap_or_else(|e| panic!("{}: {e}", f.name));
         }
     }
 }

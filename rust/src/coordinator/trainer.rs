@@ -162,7 +162,11 @@ impl<'a, E: VecEnv, B: Backend> Trainer<'a, E, B> {
         explore: EpsSchedule,
     ) -> anyhow::Result<Self> {
         let shape = backend.shape();
-        crate::runtime::policy::check_env_shape(&env.spec(), &shape)?;
+        crate::runtime::policy::check_env_token_shape(
+            &env.spec(),
+            &shape,
+            backend.token_shape(),
+        )?;
         let mdb_deltas = backend.loss_name() == "mdb";
         Ok(Trainer {
             env,

@@ -562,7 +562,11 @@ where
     B: SnapshotBackend,
     F: FnMut(&Arc<Snapshot<B::Snapshot>>) -> anyhow::Result<()>,
 {
-    crate::runtime::policy::check_env_shape(&env.spec(), &backend.shape())?;
+    crate::runtime::policy::check_env_token_shape(
+        &env.spec(),
+        &backend.shape(),
+        backend.token_shape(),
+    )?;
     let mut learner = LossLearner::new(backend);
     run(env, &mut learner, explore, extra, cfg, iters, on_publish)
 }

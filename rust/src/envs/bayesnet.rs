@@ -104,6 +104,8 @@ impl<R: RewardModule<u64>> VecEnv for BayesNetEnv<R> {
             n_actions: self.d * self.d + 1,
             n_bwd_actions: self.d * self.d,
             t_max: self.d * (self.d - 1) / 2 + 1,
+            // Flat adjacency bitmap, not per-node feature tokens.
+            token_shape: None,
         }
     }
 

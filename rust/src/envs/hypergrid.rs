@@ -84,6 +84,8 @@ impl<R: RewardModule<Vec<i32>>> VecEnv for HypergridEnv<R> {
             n_actions: self.dim + 1,
             n_bwd_actions: self.dim,
             t_max: self.dim * (self.side - 1) + 1,
+            // One coordinate one-hot per grid dimension.
+            token_shape: Some((self.dim, self.side)),
         }
     }
 

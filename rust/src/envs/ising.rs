@@ -59,6 +59,9 @@ impl<R: RewardModule<Vec<i8>>> VecEnv for IsingEnv<R> {
             n_actions: 2 * self.d,
             n_bwd_actions: self.d,
             t_max: self.d,
+            // Channel-major layout (all spins, then all masks) — not a
+            // per-site token grid.
+            token_shape: None,
         }
     }
 

@@ -46,6 +46,13 @@ pub struct EnvSpec {
     /// Maximum trajectory length (number of forward transitions, including
     /// the stop transition if any). Rollout buffers are padded to this.
     pub t_max: usize,
+    /// The `[seq_len, token_dim]` grid the flat observation factors into,
+    /// for envs whose observations are per-position feature blocks (one-hot
+    /// tokens, per-slot descriptors). `None` for genuinely flat
+    /// observations. Tokenizing policies (the native transformer) only bind
+    /// to envs where this is `Some` and matches their architecture — see
+    /// `runtime::policy::check_env_token_shape`.
+    pub token_shape: Option<(usize, usize)>,
 }
 
 /// Result of stepping a batch of environments.

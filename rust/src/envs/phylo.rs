@@ -194,6 +194,7 @@ impl VecEnv for PhyloEnv {
             n_actions: self.n_pairs(),
             n_bwd_actions: self.n_species,
             t_max: self.n_species - 1,
+            token_shape: Some((self.n_species, 1 + 4 * m)),
         }
     }
 

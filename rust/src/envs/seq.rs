@@ -96,6 +96,7 @@ impl<R: RewardModule<Vec<i16>>> VecEnv for SeqEnv<R> {
             n_actions,
             n_bwd_actions: n_bwd,
             t_max,
+            token_shape: Some((self.max_len, self.vocab + 1)),
         }
     }
 

@@ -8,6 +8,8 @@
 //!                                                 that supply extras)
 //!                --backend <native|xla>  [--iters N] [--hidden H]
 //!                [--layers L] [--workers W]
+//!                [--model <mlp|transformer>]   (transformer: token-grid
+//!                                               envs, native backend)
 //!                [--replay-cap N --replay-frac P]   off-policy replay
 //!                [--actors N --publish-every K | --sync]   async engine
 //!                [--serve [--serve-samples N]]   live hot-swapped serving
@@ -71,7 +73,14 @@ fn main() {
     .flag("seed", "0", "rng seed (also seeds generated datasets)")
     .flag("batch", "16", "batch width (native backend)")
     .flag("hidden", "256", "MLP trunk width (native backend)")
-    .flag("layers", "2", "MLP trunk depth (native backend)")
+    .flag("layers", "2", "MLP trunk depth / transformer block count (native backend)")
+    .flag(
+        "model",
+        "mlp",
+        "policy model: mlp | transformer (native backend; transformer uses the \
+         per-family preset — embed 64, 4 heads, ff 128 — and needs an env with \
+         a token grid)",
+    )
     .flag("workers", "0", "dispatch worker threads, 0 = all cores (native backend)")
     .flag("replay-cap", "0", "off-policy replay buffer capacity (0 = on-policy only)")
     .flag("replay-frac", "0.5", "probability an iteration trains on replay batches")
@@ -270,7 +279,7 @@ impl EnvDriver for TrainDriver<'_> {
         self,
         env: &E,
         extra: &ExtraSource<'_, E>,
-        _fam: &'static EnvFamily,
+        fam: &'static EnvFamily,
         config: &str,
     ) -> anyhow::Result<()>
     where
@@ -278,7 +287,7 @@ impl EnvDriver for TrainDriver<'_> {
         E::State: Clone,
         E::Obj: PartialEq + std::fmt::Debug + Send + 'static,
     {
-        train_env(self.args, config, self.args.get("loss"), env, extra)
+        train_env(self.args, config, self.args.get("loss"), env, extra, fam)
     }
 }
 
@@ -305,25 +314,31 @@ fn engine_config(args: &Args) -> anyhow::Result<Option<EngineConfig>> {
     Ok(Some(cfg))
 }
 
-/// Fresh (or `--resume`d) native backend shaped for `env`.
+/// Fresh (or `--resume`d) native backend shaped for `env`, running the
+/// `--model` the CLI requested.
 fn native_backend_for<E: VecEnv>(
     args: &Args,
     env: &E,
     loss: &str,
+    fam: &'static EnvFamily,
 ) -> anyhow::Result<NativeBackend> {
+    let want = native_config(args, env, loss, fam)?;
     let resume = args.get("resume");
     if resume.is_empty() {
-        return NativeBackend::new(native_config(args, env, loss), args.get_u64("seed"));
+        return NativeBackend::new(want, args.get_u64("seed"));
     }
     let backend = NativeBackend::load_checkpoint(std::path::Path::new(resume))?;
     let shape = backend.shape();
-    gfnx::runtime::policy::check_env_shape(&env.spec(), &shape)
+    gfnx::runtime::policy::check_env_token_shape(&env.spec(), &shape, backend.token_shape())
         .map_err(|e| anyhow::anyhow!("checkpoint {resume:?} was trained on a different env: {e}"))?;
     anyhow::ensure!(
         backend.loss_name() == loss,
         "checkpoint {resume:?} trains loss {:?}, but --loss {loss} was requested",
         backend.loss_name()
     );
+    backend
+        .ensure_model(&want)
+        .map_err(|e| anyhow::anyhow!("cannot resume from {resume:?}: {e}"))?;
     let mut backend = backend;
     // Worker count is a property of the resuming host, not of the model:
     // a checkpoint from a 32-core box must not oversubscribe a 2-core one.
@@ -333,11 +348,11 @@ fn native_backend_for<E: VecEnv>(
         w => w,
     };
     log_info!(
-        "resumed from {resume} at {} steps (Adam t = {}, batch {}, hidden {})",
+        "resumed from {resume} at {} steps (Adam t = {}, batch {}, {})",
         backend.steps(),
         backend.adam_t(),
         shape.batch,
-        backend.net().cfg.hidden
+        backend.net().cfg.describe_model()
     );
     Ok(backend)
 }
@@ -349,6 +364,7 @@ fn train_env<E>(
     loss: &str,
     env: &E,
     extra: &ExtraSource<'_, E>,
+    fam: &'static EnvFamily,
 ) -> anyhow::Result<()>
 where
     E: VecEnv + Clone + Send + Sync + 'static,
@@ -363,7 +379,7 @@ where
 
     match args.get("backend") {
         "native" => {
-            let backend = native_backend_for(args, env, loss)?;
+            let backend = native_backend_for(args, env, loss, fam)?;
             if let Some(ecfg) = engine_config(args)? {
                 return run_engine(args, config, loss, env, extra, backend, rc.explore, iters, ecfg);
             }
@@ -399,6 +415,10 @@ where
                 "--save/--resume are native-backend checkpoints"
             );
             anyhow::ensure!(!args.get_bool("serve"), "--serve requires --backend native");
+            anyhow::ensure!(
+                args.get("model") == "mlp",
+                "--model transformer is native-only; the xla artifacts bake in the MLP"
+            );
             // The artifact manifest dictates batch/architecture; flag the
             // native-only knobs so a user doesn't misread the run.
             if args.get_usize("batch") != 16
@@ -569,15 +589,28 @@ fn check_bench(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn native_config<E: VecEnv>(args: &Args, env: &E, loss: &str) -> NativeConfig {
+fn native_config<E: VecEnv>(
+    args: &Args,
+    env: &E,
+    loss: &str,
+    fam: &'static EnvFamily,
+) -> anyhow::Result<NativeConfig> {
     let workers = match args.get_usize("workers") {
         0 => default_workers(),
         w => w,
     };
-    NativeConfig::for_env(env, args.get_usize("batch"), loss)
+    let cfg = NativeConfig::for_env(env, args.get_usize("batch"), loss)
         .with_hidden(args.get_usize("hidden"))
         .with_layers(args.get_usize("layers"))
-        .with_workers(workers)
+        .with_workers(workers);
+    match args.get("model") {
+        "mlp" => Ok(cfg),
+        "transformer" => {
+            let arch = registry::transformer_arch(fam, &env.spec())?;
+            Ok(cfg.with_model(gfnx::runtime::ModelSpec::Transformer(arch)))
+        }
+        other => anyhow::bail!("unknown model {other:?} (mlp | transformer)"),
+    }
 }
 
 fn replay_config(args: &Args) -> anyhow::Result<Option<ReplayConfig>> {
@@ -620,9 +653,22 @@ fn train_ebgfn(args: &Args, config: &str, n: usize) -> anyhow::Result<()> {
         args.get("save").is_empty() && args.get("resume").is_empty(),
         "--save/--resume are not supported with --ebgfn (J_φ is not serialized)"
     );
+    anyhow::ensure!(
+        args.get("model") == "mlp",
+        "--ebgfn trains the MLP policy (ising has flat observations, no token \
+         grid for --model transformer)"
+    );
     match args.get("backend") {
         "native" => {
-            let backend = NativeBackend::new(native_config(args, &env, "tb"), seed)?;
+            let workers = match args.get_usize("workers") {
+                0 => default_workers(),
+                w => w,
+            };
+            let cfg = NativeConfig::for_env(&env, args.get_usize("batch"), "tb")
+                .with_hidden(args.get_usize("hidden"))
+                .with_layers(args.get_usize("layers"))
+                .with_workers(workers);
+            let backend = NativeBackend::new(cfg, seed)?;
             let mut trainer = EbGfnTrainer::with_backend(&env, backend, reward.clone(), dataset, seed)?;
             if let Some(ecfg) = engine_config(args)? {
                 anyhow::ensure!(

@@ -9,12 +9,13 @@
 //!   `coordinator::Trainer`. Executes the PJRT-compiled policy and
 //!   rollout-loss-grad-Adam graphs (requires `make artifacts` and the real
 //!   xla-rs crate).
-//! - [`NativeBackend`](super::native::NativeBackend) — a pure-Rust MLP with
-//!   a manual backward pass, TB/DB/MDB objectives and an Adam step, sharing
-//!   the artifact init-blob layout ([`Manifest`](super::Manifest)
-//!   `blob_layout`) so the two backends are initialization-compatible.
-//!   Needs no artifacts and no XLA: the full train → sample → metric loop
-//!   runs in-repo.
+//! - [`NativeBackend`](super::native::NativeBackend) — pure-Rust models (an
+//!   MLP and a KV-cached transformer, pluggable behind the native `Model`
+//!   trait) with manual backward passes, TB/DB/MDB objectives and an Adam
+//!   step; the MLP shares the artifact init-blob layout
+//!   ([`Manifest`](super::Manifest) `blob_layout`) so the two backends are
+//!   initialization-compatible. Needs no artifacts and no XLA: the full
+//!   train → sample → metric loop runs in-repo.
 //!
 //! Everything above this trait — [`Trainer`](crate::coordinator::Trainer),
 //! the eval protocols, the benches, the `--backend` CLI selector — is
@@ -44,6 +45,14 @@ pub trait Backend {
 
     /// The fixed dispatch shape (constant over the backend's lifetime).
     fn shape(&self) -> PolicyShape;
+
+    /// The `[seq_len, token_dim]` factorization this backend's model
+    /// imposes on the flat observation, if any (see
+    /// [`BatchPolicy::token_shape`]). `None` (the default) means the model
+    /// consumes observations flat.
+    fn token_shape(&self) -> Option<(usize, usize)> {
+        None
+    }
 
     /// The objective this backend trains ("tb" | "db" | "subtb" | "fldb" |
     /// "mdb").
@@ -119,6 +128,10 @@ pub struct BackendPolicy<'a, B: Backend + ?Sized> {
 impl<B: Backend + ?Sized> BatchPolicy for BackendPolicy<'_, B> {
     fn shape(&self) -> PolicyShape {
         self.backend.shape()
+    }
+
+    fn token_shape(&self) -> Option<(usize, usize)> {
+        self.backend.token_shape()
     }
 
     fn eval(

@@ -21,7 +21,10 @@ pub mod policy;
 pub use artifact::Artifact;
 pub use backend::{Backend, BackendPolicy, SnapshotBackend, XlaBackend};
 pub use manifest::{Manifest, TensorSpec};
-pub use native::{fastmath_from_env, NativeBackend, NativeConfig, NativePolicy};
+pub use native::{
+    fastmath_from_env, Loss, ModelKind, ModelSpec, NativeBackend, NativeConfig,
+    NativePolicy, TransformerArch,
+};
 pub use policy::{ArtifactPolicy, BatchPolicy, OwnedArtifactPolicy, PolicyShape, UniformPolicy};
 pub use state::TrainState;
 

@@ -17,6 +17,66 @@
 
 use crate::coordinator::rollout::TrajBatch;
 
+/// The native training objectives, parsed once at the CLI/registry/blob
+/// boundary so the hot path and the checkpoint loaders match exhaustively
+/// instead of comparing strings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    Tb,
+    Db,
+    SubTb,
+    Fldb,
+    Mdb,
+}
+
+impl Loss {
+    /// Parse the canonical lowercase name (the CLI/manifest spelling).
+    pub fn parse(s: &str) -> anyhow::Result<Loss> {
+        Ok(match s {
+            "tb" => Loss::Tb,
+            "db" => Loss::Db,
+            "subtb" => Loss::SubTb,
+            "fldb" => Loss::Fldb,
+            "mdb" => Loss::Mdb,
+            other => anyhow::bail!(
+                "native backend does not implement loss {other:?} (tb|db|subtb|fldb|mdb)"
+            ),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Loss::Tb => "tb",
+            Loss::Db => "db",
+            Loss::SubTb => "subtb",
+            Loss::Fldb => "fldb",
+            Loss::Mdb => "mdb",
+        }
+    }
+}
+
+impl std::fmt::Display for Loss {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Loss {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Loss> {
+        Loss::parse(s)
+    }
+}
+
+/// Lets config assertions compare against the canonical name directly
+/// (`assert_eq!(cfg.loss, "subtb")`).
+impl PartialEq<&str> for Loss {
+    fn eq(&self, other: &&str) -> bool {
+        self.as_str() == *other
+    }
+}
+
 /// Loss value and upstream gradients for [`NativeNet::backward`].
 ///
 /// [`NativeNet::backward`]: super::net::NativeNet::backward
@@ -37,7 +97,7 @@ pub(crate) struct LossGrads {
 /// `subtb_lambda` is the λ of the SubTB pair weights (ignored by the other
 /// objectives).
 pub(crate) fn loss_grads(
-    loss: &str,
+    loss: Loss,
     batch: &TrajBatch,
     fwd_logp: &[f32],
     flow: &[f32],
@@ -73,7 +133,7 @@ pub(crate) fn loss_grads(
     match loss {
         // Trajectory Balance (eq. 4): mean over trajectories of
         // (logZ + Σ logP_F − logR − Σ logP_B)².
-        "tb" => {
+        Loss::Tb => {
             for rb in 0..b {
                 let len = batch.length[rb] as usize;
                 let mut resid = log_z - batch.log_reward[rb] as f64;
@@ -91,7 +151,7 @@ pub(crate) fn loss_grads(
         }
         // Detailed Balance (eq. 3) with F(s_T) ≡ R at the terminal state;
         // normalized by the number of real transitions.
-        "db" => {
+        Loss::Db => {
             let mut m_count = 0usize;
             for rb in 0..b {
                 m_count += batch.length[rb] as usize;
@@ -124,7 +184,7 @@ pub(crate) fn loss_grads(
         //   A[j,k] = f_j − f_k + Σ_{j≤t<k} (logP_F − logP_B),
         // so d/d(transition t) accumulates over all pairs spanning t —
         // implemented with a difference array + prefix sum.
-        "subtb" => {
+        Loss::SubTb => {
             for rb in 0..b {
                 let len = batch.length[rb] as usize;
                 // f[k] with terminal substitution, cum[k] prefix sums.
@@ -177,7 +237,7 @@ pub(crate) fn loss_grads(
         //   log F̃(s_t) + logP_F − log F̃(s_{t+1}) − logP_B + E(s_{t+1}) − E(s_t)
         // with F̃(terminal) ≡ 1 (log F̃ = 0); `extra` holds per-state
         // energies, terminal-padded. Normalized like DB.
-        "fldb" => {
+        Loss::Fldb => {
             let mut m_count = 0usize;
             for rb in 0..b {
                 m_count += batch.length[rb] as usize;
@@ -204,7 +264,7 @@ pub(crate) fn loss_grads(
         // Modified DB (Deleu et al. 2022, delta-score form): over non-stop
         // transitions t < len − 1, with `extra` holding per-transition
         // Δscore values (see `TrajBatch::extra_to_deltas`).
-        "mdb" => {
+        Loss::Mdb => {
             let stop = a - 1;
             let mut m_count = 0usize;
             for rb in 0..b {
@@ -228,9 +288,6 @@ pub(crate) fn loss_grads(
             }
             loss_acc /= mm;
         }
-        other => anyhow::bail!(
-            "native backend does not implement loss {other:?} (tb|db|subtb|fldb|mdb)"
-        ),
     }
     Ok(LossGrads { loss: loss_acc, d_fwd_logp: d_fwd, d_flow, d_logz: d_logz as f32 })
 }

@@ -1,28 +1,41 @@
-//! The native training backend: a pure-Rust MLP policy with a manual
-//! backward pass, the full TB/DB/SubTB/FLDB/MDB objective set and an Adam
-//! step — the whole train → sample → metric loop with **no artifacts and
-//! no XLA**.
+//! The native training backend: pure-Rust policies with manual backward
+//! passes, the full TB/DB/SubTB/FLDB/MDB objective set and an Adam step —
+//! the whole train → sample → metric loop with **no artifacts and no
+//! XLA**.
 //!
 //! Structure:
-//! - [`net`] — the MLP ([`NativeNet`]): forward, masked log-softmax heads,
-//!   hand-written backward, threadpool-parallel batched matmuls.
+//! - [`model`] — the pluggable [`Model`] trait + [`ModelSpec`] descriptor:
+//!   everything above it treats the network as an opaque tree of named
+//!   leaves.
+//! - [`net`] — the model-agnostic front-end ([`NativeNet`]) and the MLP
+//!   implementation: forward, masked log-softmax heads, hand-written
+//!   backward, threadpool-parallel batched matmuls.
+//! - [`transformer`] — the pre-LN encoder of
+//!   `python/compile/models/transformer.py` with a causal mode + per-slot
+//!   KV cache for O(T)-per-step serve decode.
 //! - [`loss`] — TB/DB/SubTB/FLDB/MDB losses + gradients over a padded
 //!   `TrajBatch` (mirrors `python/compile/losses.py`; FD- and
-//!   JAX-cross-validated).
-//! - [`adam`] — Adam(W) mirroring `python/compile/optim.py`.
+//!   JAX-cross-validated), keyed by the [`Loss`] enum.
+//! - [`adam`] — Adam(W) mirroring `python/compile/optim.py`, generic over
+//!   the leaf tree.
 //!
-//! Parameter leaves use the artifact init-blob layout, so
+//! MLP parameter leaves use the artifact init-blob layout, so
 //! [`NativeBackend::from_blob`] can start from the exact initialization an
 //! XLA artifact ships ([`Manifest::blob_layout`]), and
-//! [`NativeBackend::new`] He-initializes the same leaf structure from a
-//! seed when no artifact exists.
+//! [`NativeBackend::new`] initializes the configured model's leaf
+//! structure from a seed when no artifact exists.
 
 pub mod adam;
 pub mod gemm;
 pub mod loss;
+pub mod model;
 pub mod net;
+pub mod transformer;
 
+pub use loss::Loss;
+pub use model::{Model, ModelKind, ModelSpec, TransformerArch};
 pub use net::{ForwardCache, Grads, Leaf, NativeNet};
+pub use transformer::{KvCaches, TransformerModel};
 
 use super::backend::{Backend, SnapshotBackend};
 use super::manifest::{ArtifactConfig, BlobEntry, Manifest};
@@ -48,8 +61,11 @@ pub struct NativeConfig {
     /// Uniform backward policy over legal parents (the only mode the
     /// native *trainer* supports; matches every MLP preset).
     pub uniform_pb: bool,
-    /// Objective: "tb" | "db" | "subtb" | "fldb" | "mdb".
-    pub loss: String,
+    /// Training objective, parsed once at the CLI/registry/blob boundary.
+    pub loss: Loss,
+    /// Which policy network this config builds (MLP by default; the
+    /// transformer carries its architecture in the spec).
+    pub model: ModelSpec,
     /// λ of the SubTB pair weights (paper default 0.9; ignored by the
     /// other objectives).
     pub subtb_lambda: f64,
@@ -72,7 +88,9 @@ pub struct NativeConfig {
 
 impl NativeConfig {
     /// Defaults matching the paper's MLP presets (2×256 trunk, lr 1e-3,
-    /// z_lr 1e-1), shaped for `env` at batch width `batch`.
+    /// z_lr 1e-1), shaped for `env` at batch width `batch`. The loss name
+    /// is parsed here — call sites are the CLI/registry boundary, which
+    /// pre-validates it, so an unknown name is a programming error.
     pub fn for_env<E: VecEnv>(env: &E, batch: usize, loss: &str) -> NativeConfig {
         let s = env.spec();
         NativeConfig {
@@ -84,7 +102,8 @@ impl NativeConfig {
             hidden: 256,
             n_layers: 2,
             uniform_pb: true,
-            loss: loss.to_string(),
+            loss: Loss::parse(loss).expect("unknown loss name"),
+            model: ModelSpec::Mlp,
             subtb_lambda: 0.9,
             lr: 1e-3,
             z_lr: 1e-1,
@@ -121,6 +140,25 @@ impl NativeConfig {
         self
     }
 
+    /// Select the policy model (`n_layers` counts encoder blocks for the
+    /// transformer, trunk layers for the MLP).
+    pub fn with_model(mut self, model: ModelSpec) -> NativeConfig {
+        self.model = model;
+        self
+    }
+
+    /// Human-readable architecture description for cross-model error
+    /// messages ("mlp(hidden=256, layers=2)" /
+    /// "transformer(seq_len=8, …) × 2 blocks").
+    pub fn describe_model(&self) -> String {
+        match &self.model {
+            ModelSpec::Mlp => {
+                format!("mlp(hidden={}, layers={})", self.hidden, self.n_layers)
+            }
+            ModelSpec::Transformer(a) => format!("{a} × {} blocks", self.n_layers),
+        }
+    }
+
     /// The fixed dispatch shape this config produces.
     pub fn shape(&self) -> PolicyShape {
         PolicyShape {
@@ -134,11 +172,6 @@ impl NativeConfig {
     }
 
     fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            matches!(self.loss.as_str(), "tb" | "db" | "subtb" | "fldb" | "mdb"),
-            "native backend supports tb|db|subtb|fldb|mdb (got {:?})",
-            self.loss
-        );
         anyhow::ensure!(
             self.subtb_lambda > 0.0 && self.subtb_lambda <= 1.0,
             "subtb_lambda {} outside (0, 1]",
@@ -162,6 +195,30 @@ impl NativeConfig {
              deterministic f64 accumulation (set it on the policy via \
              NativePolicy::with_fastmath, not on the backend config)"
         );
+        if let ModelSpec::Transformer(a) = &self.model {
+            anyhow::ensure!(
+                a.seq_len > 0 && a.token_dim >= 2,
+                "transformer arch needs seq_len > 0 and token_dim ≥ 2 \
+                 (the last token class is the empty slot): {a}"
+            );
+            anyhow::ensure!(
+                a.seq_len * a.token_dim == self.obs_dim,
+                "transformer token shape {}×{} does not factor obs_dim {}",
+                a.seq_len,
+                a.token_dim,
+                self.obs_dim
+            );
+            anyhow::ensure!(
+                a.n_heads > 0 && a.embed % a.n_heads == 0,
+                "transformer embed {} is not divisible by {} heads",
+                a.embed,
+                a.n_heads
+            );
+            anyhow::ensure!(
+                a.embed > 0 && a.ff_hidden > 0,
+                "degenerate transformer arch {a}"
+            );
+        }
         Ok(())
     }
 }
@@ -293,7 +350,8 @@ impl NativeBackend {
             hidden,
             n_layers,
             uniform_pb: c.uniform_pb,
-            loss: c.loss.clone(),
+            loss: Loss::parse(&c.loss)?,
+            model: ModelSpec::Mlp,
             subtb_lambda: 0.9,
             lr: 1e-3,
             z_lr: 1e-1,
@@ -367,7 +425,7 @@ impl NativeBackend {
             name: format!("native.{}", c.loss),
             config: ArtifactConfig {
                 config_name: "native".to_string(),
-                loss: c.loss.clone(),
+                loss: c.loss.to_string(),
                 obs_dim: c.obs_dim,
                 n_actions: c.n_actions,
                 n_bwd_actions: c.n_bwd_actions,
@@ -412,9 +470,18 @@ impl NativeBackend {
                 })
                 .collect(),
         );
-        let header = Json::obj(vec![
+        let mut fields = vec![
             ("kind", Json::Str(CKPT_KIND.to_string())),
-            ("loss", Json::Str(c.loss.clone())),
+            // Header format v2: carries the model kind (+ arch for the
+            // transformer). v1 files have no "model" key and load as MLP.
+            ("version", Json::Num(2.0)),
+            ("model", Json::Str(c.model.kind().as_str().to_string())),
+        ];
+        if let ModelSpec::Transformer(a) = &c.model {
+            fields.push(("arch", a.to_json()));
+        }
+        fields.extend([
+            ("loss", Json::Str(c.loss.as_str().to_string())),
             ("obs_dim", Json::Num(c.obs_dim as f64)),
             ("n_actions", Json::Num(c.n_actions as f64)),
             ("n_bwd_actions", Json::Num(c.n_bwd_actions as f64)),
@@ -430,8 +497,8 @@ impl NativeBackend {
             ("steps", Json::Num(self.steps as f64)),
             ("adam_t", Json::Num(self.t as f64)),
             ("layout", layout),
-        ])
-        .to_string();
+        ]);
+        let header = Json::obj(fields).to_string();
         let mut bytes: Vec<u8> =
             Vec::with_capacity(CKPT_MAGIC.len() + 8 + header.len() + blob.len());
         bytes.extend_from_slice(CKPT_MAGIC);
@@ -446,11 +513,12 @@ impl NativeBackend {
         Ok(())
     }
 
-    /// Load a [`NativeBackend::save_checkpoint`] file: bitwise-restores the
-    /// parameters and Adam moments through [`NativeBackend::from_blob`],
-    /// then overlays the header's exact counters and optimizer
-    /// hyperparameters, so `save → load → train` continues the interrupted
-    /// run bitwise-identically (given the same batch stream).
+    /// Load a [`NativeBackend::save_checkpoint`] file: rebuilds the full
+    /// [`NativeConfig`] (model kind + arch included) from the header,
+    /// validates the stored leaf layout against it, and bitwise-restores
+    /// parameters, Adam moments and the exact u64 counters — so
+    /// `save → load → train` continues the interrupted run
+    /// bitwise-identically (given the same batch stream).
     pub fn load_checkpoint(path: &std::path::Path) -> anyhow::Result<NativeBackend> {
         let bytes = std::fs::read(path)
             .map_err(|e| anyhow::anyhow!("reading checkpoint {path:?}: {e}"))?;
@@ -491,43 +559,92 @@ impl NativeBackend {
                 })
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
-        let manifest = Manifest {
-            name: "native-checkpoint".to_string(),
-            config: ArtifactConfig {
-                config_name: "native".to_string(),
-                loss: j.req_str("loss")?.to_string(),
-                obs_dim: j.req_usize("obs_dim")?,
-                n_actions: j.req_usize("n_actions")?,
-                n_bwd_actions: j.req_usize("n_bwd_actions")?,
-                t_max: j.req_usize("t_max")?,
-                batch: j.req_usize("batch")?,
-                uniform_pb: true,
-            },
-            params: Vec::new(),
-            policy_file: String::new(),
-            policy_inputs: Vec::new(),
-            policy_outputs: Vec::new(),
-            train_file: String::new(),
-            train_state: Vec::new(),
-            train_batch: Vec::new(),
-            blob_file: String::new(),
-            blob_layout: layout,
-        };
-        let mut backend = Self::from_blob(&manifest, blob)?;
-        // The header's optimizer hyperparameters and exact u64 counters
-        // override from_blob's defaults (and the blob's f32 `t` leaf).
         let num = |key: &str| -> anyhow::Result<f64> {
             j.req(key)?
                 .as_f64()
                 .ok_or_else(|| anyhow::anyhow!("checkpoint header {key:?} is not a number"))
         };
-        {
-            let cfg = backend.config_mut();
-            cfg.subtb_lambda = num("subtb_lambda")?;
-            cfg.lr = num("lr")? as f32;
-            cfg.z_lr = num("z_lr")? as f32;
-            cfg.weight_decay = num("weight_decay")? as f32;
-            cfg.workers = j.req_usize("workers")?.max(1);
+        // Header v2 names the model; v1 files predate the model layer and
+        // are MLP checkpoints by construction.
+        let model = match j.get("model").and_then(|m| m.as_str()).unwrap_or("mlp") {
+            "mlp" => ModelSpec::Mlp,
+            "transformer" => ModelSpec::Transformer(TransformerArch::from_json(
+                j.req("arch")
+                    .map_err(|_| anyhow::anyhow!("transformer checkpoint is missing its arch"))?,
+            )?),
+            other => anyhow::bail!("checkpoint model {other:?} unknown to this build"),
+        };
+        let cfg = NativeConfig {
+            obs_dim: j.req_usize("obs_dim")?,
+            n_actions: j.req_usize("n_actions")?,
+            n_bwd_actions: j.req_usize("n_bwd_actions")?,
+            t_max: j.req_usize("t_max")?,
+            batch: j.req_usize("batch")?,
+            hidden: j.req_usize("hidden")?,
+            n_layers: j.req_usize("n_layers")?,
+            uniform_pb: true,
+            loss: Loss::parse(j.req_str("loss")?)?,
+            model,
+            subtb_lambda: num("subtb_lambda")?,
+            lr: num("lr")? as f32,
+            z_lr: num("z_lr")? as f32,
+            weight_decay: num("weight_decay")? as f32,
+            workers: j.req_usize("workers")?.max(1),
+            fastmath: false,
+        };
+        cfg.validate()?;
+        // The layout's param leaves must match what the described model
+        // serializes — name for name, shape for shape.
+        let want = NativeNet::layout(&cfg);
+        let params: Vec<_> = layout.iter().filter(|e| e.group == "param").collect();
+        anyhow::ensure!(
+            params.len() == want.len(),
+            "checkpoint has {} param leaves but {} serializes {}",
+            params.len(),
+            cfg.describe_model(),
+            want.len()
+        );
+        let norm = |shape: &[usize]| -> Vec<usize> {
+            if shape.is_empty() {
+                vec![1]
+            } else {
+                shape.to_vec()
+            }
+        };
+        let read = |offset: usize, shape: &[usize], name: &str| -> anyhow::Result<Vec<f32>> {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let end = offset + 4 * n;
+            anyhow::ensure!(end <= blob.len(), "checkpoint blob truncated at leaf {name:?}");
+            Ok(blob[offset..end]
+                .chunks_exact(4)
+                .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+                .collect())
+        };
+        let mut leaves: Vec<Leaf> = Vec::with_capacity(want.len());
+        for (e, (want_name, want_shape)) in params.iter().zip(&want) {
+            anyhow::ensure!(
+                &e.name == want_name && norm(&e.shape) == *want_shape,
+                "checkpoint leaf {:?} {:?} where {} expects {want_name:?} {want_shape:?}",
+                e.name,
+                e.shape,
+                cfg.describe_model()
+            );
+            leaves.push(Leaf {
+                name: e.name.clone(),
+                tensor: crate::util::tensor::TensorF32::from_vec(
+                    &norm(&e.shape),
+                    read(e.offset, &e.shape, &e.name)?,
+                ),
+            });
+        }
+        let mut backend = Self::from_net(NativeNet::from_leaves(cfg, leaves));
+        for (group, dst) in [("m", &mut backend.m), ("v", &mut backend.v)] {
+            let entries: Vec<_> = layout.iter().filter(|e| e.group == group).collect();
+            if entries.len() == backend.net.leaves().len() {
+                for (i, e) in entries.iter().enumerate() {
+                    dst[i] = read(e.offset, &e.shape, &e.name)?;
+                }
+            }
         }
         backend.t = num("adam_t")? as u64;
         backend.steps = num("steps")? as u64;
@@ -559,9 +676,27 @@ impl NativeBackend {
     }
 
     /// Snapshot the current parameters as an owned, `Send` serving policy
-    /// for the serve subsystem's worker threads.
+    /// for the serve subsystem's worker threads. Causal transformer
+    /// snapshots serve through the KV-cached decode path by default
+    /// (bitwise-equal to full re-encode; see
+    /// [`NativePolicy::with_kv_cache`]).
     pub fn to_policy(&self) -> NativePolicy {
-        NativePolicy { net: self.net.clone() }
+        NativePolicy { net: self.net.clone(), kv_enabled: true, kv: None }
+    }
+
+    /// Guard a `--resume` against a checkpoint trained with a different
+    /// architecture than the run requests. Only the [`ModelSpec`] is
+    /// compared: MLP sizing knobs (`hidden`, `n_layers`) stay with the
+    /// checkpoint on resume, like every other model-state knob.
+    pub fn ensure_model(&self, want: &NativeConfig) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.net.cfg.model == want.model,
+            "checkpoint was trained with {} but this run requests {} — \
+             cross-model resume is not a thing; pick a matching --model or a fresh run dir",
+            self.net.cfg.describe_model(),
+            want.describe_model()
+        );
+        Ok(())
     }
 
     /// The Adam step count (u64 internally; `as f32` only when written back
@@ -594,7 +729,7 @@ impl NativeBackend {
         let n = batch.b * batch.t1;
         let cache = self.net.forward(&batch.obs, &batch.fwd_masks, &batch.bwd_masks, n, false);
         Ok(loss::loss_grads(
-            &self.net.cfg.loss,
+            self.net.cfg.loss,
             batch,
             &cache.fwd_logp,
             &cache.flow,
@@ -611,7 +746,7 @@ impl NativeBackend {
         let n = batch.b * batch.t1;
         let cache = self.net.forward(&batch.obs, &batch.fwd_masks, &batch.bwd_masks, n, false);
         let lg = loss::loss_grads(
-            &c.loss,
+            c.loss,
             batch,
             &cache.fwd_logp,
             &cache.flow,
@@ -633,8 +768,12 @@ impl Backend for NativeBackend {
         self.net.cfg.shape()
     }
 
+    fn token_shape(&self) -> Option<(usize, usize)> {
+        self.net.cfg.model.token_shape()
+    }
+
     fn loss_name(&self) -> &str {
-        &self.net.cfg.loss
+        self.net.cfg.loss.as_str()
     }
 
     fn policy_dispatch(
@@ -718,9 +857,24 @@ impl SnapshotBackend for NativeBackend {
 /// are live, it has fixed-shape dispatch economics (like an accelerator
 /// graph), and the serve subsystem's per-trajectory determinism guarantee
 /// carries over.
-#[derive(Clone, Debug)]
+///
+/// Causal transformer snapshots additionally keep a per-slot KV cache
+/// ([`KvCaches`]) so each serve step encodes only the *new* token —
+/// O(T) instead of O(T²) per step — with results bitwise-equal to a full
+/// re-encode (see `runtime::native::transformer`). Cloning a policy drops
+/// the cache (it is rebuilt lazily per worker), which is exactly right:
+/// serve workers each own their slots.
+#[derive(Debug)]
 pub struct NativePolicy {
     pub net: NativeNet,
+    kv_enabled: bool,
+    kv: Option<KvCaches>,
+}
+
+impl Clone for NativePolicy {
+    fn clone(&self) -> NativePolicy {
+        NativePolicy { net: self.net.clone(), kv_enabled: self.kv_enabled, kv: None }
+    }
 }
 
 impl NativePolicy {
@@ -728,9 +882,23 @@ impl NativePolicy {
     /// f64 accumulation (`false`, the default — bitwise-equal to training
     /// dispatch) and the fast `[f32; 8]` lane-sum mode (`true`). Fastmath
     /// results stay bit-reproducible per seed and worker-count-invariant;
-    /// they are just not bitwise-equal to the deterministic mode.
+    /// they are just not bitwise-equal to the deterministic mode. The
+    /// transformer ignores this knob entirely (its GEMMs always run
+    /// deterministic, which is what keeps KV decode bitwise-exact).
     pub fn with_fastmath(mut self, on: bool) -> NativePolicy {
         self.net.cfg.fastmath = on;
+        self
+    }
+
+    /// Enable/disable the incremental KV-cached decode path (on by
+    /// default; only engages for causal transformer snapshots). `false`
+    /// forces full re-encode every step — same bits, O(T²) work — which is
+    /// what the serve bench compares against.
+    pub fn with_kv_cache(mut self, on: bool) -> NativePolicy {
+        self.kv_enabled = on;
+        if !on {
+            self.kv = None;
+        }
         self
     }
 }
@@ -749,12 +917,26 @@ impl BatchPolicy for NativePolicy {
         self.net.cfg.shape()
     }
 
+    fn token_shape(&self) -> Option<(usize, usize)> {
+        self.net.cfg.model.token_shape()
+    }
+
     fn eval(
         &mut self,
         obs: &[f32],
         fwd_mask: &[f32],
         bwd_mask: &[f32],
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        if self.kv_enabled {
+            let (batch, n_layers) = (self.net.cfg.batch, self.net.cfg.n_layers);
+            if let Some(tf) = self.net.transformer() {
+                if tf.arch().causal {
+                    let kv =
+                        self.kv.get_or_insert_with(|| KvCaches::new(batch, n_layers));
+                    return tf.eval_kv(&self.net.cfg, obs, fwd_mask, bwd_mask, kv);
+                }
+            }
+        }
         self.net.eval(obs, fwd_mask, bwd_mask)
     }
 }
@@ -934,7 +1116,9 @@ mod tests {
             0.0, 0.8, 0.2, 0.5, 0.5,
         ];
         let run = |loss: &str, bch: &crate::coordinator::rollout::TrajBatch| {
-            loss::loss_grads(loss, bch, &fwd_logp, &flow, 0.3, 0.9).unwrap().loss
+            loss::loss_grads(Loss::parse(loss).unwrap(), bch, &fwd_logp, &flow, 0.3, 0.9)
+                .unwrap()
+                .loss
         };
         // JAX f32 reference values (python/compile/losses.py on this batch).
         assert!((run("tb", &batch) - 3.2414188385).abs() < 1e-5);
@@ -1301,5 +1485,383 @@ mod tests {
             objs
         };
         assert_eq!(run(3), run(8));
+    }
+
+    // ---- transformer model ------------------------------------------------
+
+    /// The golden-batch transformer arch: 4 tokens × 5 classes (last class
+    /// = empty slot), embed 8, 2 heads, ff 16, 2 blocks.
+    fn tf_arch(causal: bool) -> TransformerArch {
+        TransformerArch {
+            seq_len: 4,
+            token_dim: 5,
+            embed: 8,
+            n_heads: 2,
+            ff_hidden: 16,
+            causal,
+        }
+    }
+
+    fn tf_cfg(causal: bool) -> NativeConfig {
+        NativeConfig {
+            obs_dim: 20,
+            n_actions: 4,
+            n_bwd_actions: 2,
+            t_max: 3,
+            batch: 3,
+            hidden: 8,
+            n_layers: 2,
+            uniform_pb: true,
+            loss: Loss::Tb,
+            model: ModelSpec::Transformer(tf_arch(causal)),
+            subtb_lambda: 0.9,
+            lr: 1e-3,
+            z_lr: 1e-1,
+            weight_decay: 0.0,
+            workers: 1,
+            fastmath: false,
+        }
+    }
+
+    /// Deterministic pattern-filled leaves — the exact fill the JAX
+    /// reference run used to produce the baked-in goldens: for leaf index
+    /// `li`, flat element `i`, `base = (i·37 + li·101 + 7) mod 61 − 30`;
+    /// gains get `1 + base·0.005`, biases/logZ `base·0.01`, weights
+    /// `base·0.02` (all in f32).
+    fn tf_golden_net(causal: bool) -> NativeNet {
+        let cfg = tf_cfg(causal);
+        let leaves: Vec<Leaf> = NativeNet::layout(&cfg)
+            .iter()
+            .enumerate()
+            .map(|(li, (name, shape))| {
+                let n: usize = shape.iter().product();
+                let data: Vec<f32> = (0..n)
+                    .map(|i| {
+                        let base = (((i * 37 + li * 101 + 7) % 61) as i64 - 30) as f32;
+                        if name.ends_with("_g") {
+                            1.0f32 + base * 0.005f32
+                        } else if name.ends_with("_b") || name == "logZ" {
+                            base * 0.01f32
+                        } else {
+                            base * 0.02f32
+                        }
+                    })
+                    .collect();
+                Leaf {
+                    name: name.clone(),
+                    tensor: crate::util::tensor::TensorF32::from_vec(shape, data),
+                }
+            })
+            .collect();
+        NativeNet::from_leaves(cfg, leaves)
+    }
+
+    /// One-hot tokenization of the golden batch: `-1` = empty slot
+    /// (class D−1 = 4).
+    fn tf_obs(tok_ids: &[&[i64]]) -> Vec<f32> {
+        let (s, d) = (4usize, 5usize);
+        let mut obs = vec![0f32; tok_ids.len() * s * d];
+        for (r, row) in tok_ids.iter().enumerate() {
+            for p in 0..s {
+                let cls = match row.get(p) {
+                    Some(&t) if t >= 0 => t as usize,
+                    _ => d - 1,
+                };
+                obs[(r * s + p) * d + cls] = 1.0;
+            }
+        }
+        obs
+    }
+
+    /// Forward + manual backward of the native transformer against the JAX
+    /// reference (`python/compile/models/transformer.py` semantics) on a
+    /// committed golden batch — both attention modes. The reference values
+    /// come from a JAX run whose autodiff gradients the port matched to
+    /// ≤ 6e-7 relative error, so the tolerances here are generous only
+    /// against f32 reassociation, not against wrong math.
+    #[test]
+    fn transformer_matches_jax_reference_on_golden_batch() {
+        let tok_ids: [&[i64]; 3] = [&[1, 3, -1, -1], &[2, 0, 1, 3], &[-1, -1, -1, -1]];
+        let obs = tf_obs(&tok_ids);
+        let (b, a, ab) = (3usize, 4usize, 2usize);
+        let fwd_mask: Vec<f32> = [
+            [1., 1., 1., 0.],
+            [1., 0., 1., 1.],
+            [1., 1., 1., 1.],
+        ]
+        .concat();
+        let bwd_mask = vec![1f32; b * ab];
+        // Cotangents of the scalar probe loss Σ ct_f·logp + Σ ct_flow·flow.
+        let mut ct_f = vec![0f32; b * a];
+        for r in 0..b {
+            for j in 0..a {
+                if fwd_mask[r * a + j] != 0.0 {
+                    ct_f[r * a + j] =
+                        (((r * 7 + j * 3 + 1) % 11) as i64 - 5) as f32 * 0.03f32;
+                }
+            }
+        }
+        let ct_flow: Vec<f32> =
+            (0..b).map(|r| ((((r * 5 + 2) % 7) as i64 - 3) as f64 * 0.05) as f32).collect();
+
+        // (loss, fwd_logp[12], flow[3], per-leaf grad (sum, first)) per mode.
+        struct Golden {
+            loss: f64,
+            fwd_logp: [f64; 12],
+            flow: [f64; 3],
+            grads: [(f64, f64); 34],
+        }
+        let noncausal = Golden {
+            loss: -0.31661856174468994,
+            fwd_logp: [
+                -0.7303171157836914, -0.7789152264595032, -2.8244681358337402, -1e30,
+                -2.9992661476135254, -1e30, -1.2908539772033691, -0.3928343653678894,
+                -1.5093588829040527, -3.639862298965454, -3.8180899620056152,
+                -0.3137214183807373,
+            ],
+            flow: [-0.7636059522628784, -3.792567491531372, 0.5663578510284424],
+            grads: [
+                (-8.8861832395e-02, 2.0331738517e-02),  // embed_w
+                (-8.8861905038e-02, -1.3074803352e+00), // embed_b
+                (-8.8861912489e-02, 8.8941805065e-02),  // pos
+                (1.8405264959e-01, -1.9642454386e-01),  // l0_qkv_w
+                (-5.7869142015e-01, -2.3186919093e-01), // l0_qkv_b
+                (2.5643333457e-01, 3.4820269793e-02),   // l0_proj_w
+                (-8.8861893862e-02, 3.0572557449e-01),  // l0_proj_b
+                (2.8510297993e-01, 1.8535025418e-01),   // l0_ff1_w
+                (5.3813979262e-01, 1.3583397865e-01),   // l0_ff1_b
+                (-5.0155861149e-01, -3.5238533746e-03), // l0_ff2_w
+                (-8.8861913420e-02, 1.2859855592e-01),  // l0_ff2_b
+                (1.6466026753e-01, 5.0305664539e-01),   // l0_ln1_g
+                (-4.1629837453e-01, -5.8214664459e-01), // l0_ln1_b
+                (3.0596727878e-01, 2.2071668506e-01),   // l0_ln2_g
+                (9.6262312494e-02, 1.7942897975e-01),   // l0_ln2_b
+                (-2.7717509051e-01, 3.0750378966e-02),  // l1_qkv_w
+                (5.3121818719e-01, 3.3332102001e-02),   // l1_qkv_b
+                (-5.4392961727e-02, -2.0770106465e-02), // l1_proj_w
+                (-8.8861928321e-02, -1.1220688373e-01), // l1_proj_b
+                (-3.2013905467e-02, -4.3706227094e-02), // l1_ff1_w
+                (-4.5201138966e-01, -3.9869695902e-02), // l1_ff1_b
+                (-1.7413510301e-02, -6.8390280940e-03), // l1_ff2_w
+                (-8.8861897588e-02, -1.2189693749e-01), // l1_ff2_b
+                (1.3338751718e-01, 3.5984826088e-01),   // l1_ln1_g
+                (-2.6776307076e-01, 2.5197494030e-01),  // l1_ln1_b
+                (-5.6559231505e-01, -4.9705073237e-02), // l1_ln2_g
+                (-1.0233402252e-01, -7.6412096620e-02), // l1_ln2_b
+                (4.7497451305e-08, -2.0066498220e-01),  // head_fwd_w
+                (-2.2351741791e-08, -3.9526015520e-02), // head_fwd_b
+                (0.0, 0.0),                             // head_bwd_w
+                (0.0, 0.0),                             // head_bwd_b
+                (1.1527734995e-01, 3.8048781455e-02),   // head_flow_w
+                (-1.0000000894e-01, -1.0000000894e-01), // head_flow_b
+                (0.0, 0.0),                             // logZ
+            ],
+        };
+        let causal = Golden {
+            loss: -1.0501561164855957,
+            fwd_logp: [
+                -0.14968696236610413, -2.1624743938446045, -3.7304329872131348, -1e30,
+                -2.477524518966675, -1e30, -4.679112434387207, -0.09787530452013016,
+                -1.039034366607666, -6.644870758056641, -6.975772380828857,
+                -0.44010478258132935,
+            ],
+            flow: [0.23763997852802277, -1.6542503833770752, 1.7402188777923584],
+            grads: [
+                (-1.0356363619e-01, -1.9539115950e-02), // embed_w
+                (-1.0356363619e-01, -7.4107226136e-01), // embed_b
+                (-1.0356363619e-01, -3.2967455685e-01), // pos
+                (2.2666414857e-01, -2.2487510491e-01),  // l0_qkv_w
+                (-3.8845764167e-01, -1.6986974662e-01), // l0_qkv_b
+                (4.5463896412e-01, 3.9297544029e-02),   // l0_proj_w
+                (-1.0356361828e-01, 8.1997892434e-02),  // l0_proj_b
+                (-1.8181131449e-01, -3.5450795117e-02), // l0_ff1_w
+                (-2.1581793761e-01, 2.6663308894e-02),  // l0_ff1_b
+                (-7.2931543567e-01, 4.1638479363e-02),  // l0_ff2_w
+                (-1.0356363199e-01, 7.2888996747e-02),  // l0_ff2_b
+                (-6.8517717442e-01, -3.4801021963e-02), // l0_ln1_g
+                (-2.1327561035e-01, -4.1387190577e-01), // l0_ln1_b
+                (-3.0325397039e-01, -5.5910569765e-02), // l0_ln2_g
+                (1.0767417243e-01, -2.0243930188e-02),  // l0_ln2_b
+                (-2.8745131775e-01, 8.8353087347e-03),  // l1_qkv_w
+                (4.2571090271e-01, 5.8653876767e-03),   // l1_qkv_b
+                (-3.6809769328e-01, -1.3428187924e-01), // l1_proj_w
+                (-1.0356362257e-01, -5.6986406446e-02), // l1_proj_b
+                (-2.7121243270e-01, -1.7065241224e-01), // l1_ff1_w
+                (-6.6801944887e-01, -9.0703278780e-02), // l1_ff1_b
+                (-2.7619590367e-01, -7.0526030051e-02), // l1_ff2_w
+                (-1.0356361012e-01, -1.2085010111e-01), // l1_ff2_b
+                (2.6530037149e-01, 2.7131050993e-01),   // l1_ln1_g
+                (-1.3009560949e-01, 2.3385961009e-01),  // l1_ln1_b
+                (-6.6904256533e-01, -1.0772503640e-01), // l1_ln2_g
+                (-1.0411117657e-01, -5.2785463282e-02), // l1_ln2_b
+                (-1.3322073444e-09, -1.4636984299e-01), // head_fwd_w
+                (0.0, -1.9390732050e-02),               // head_fwd_b
+                (0.0, 0.0),                             // head_bwd_w
+                (0.0, 0.0),                             // head_bwd_b
+                (1.6287302305e-01, -1.0787874309e-01),  // head_flow_w
+                (-1.0000000522e-01, -1.0000000522e-01), // head_flow_b
+                (0.0, 0.0),                             // logZ
+            ],
+        };
+
+        for (mode, golden) in [(false, &noncausal), (true, &causal)] {
+            let net = tf_golden_net(mode);
+            let cache = net.forward(&obs, &fwd_mask, &bwd_mask, b, false);
+            for (i, &want) in golden.fwd_logp.iter().enumerate() {
+                let got = cache.fwd_logp[i] as f64;
+                if fwd_mask[i] == 0.0 {
+                    assert!(got < -1e20, "causal={mode} logp[{i}] not masked: {got}");
+                } else {
+                    assert!(
+                        (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                        "causal={mode} logp[{i}]: {got} vs {want}"
+                    );
+                }
+            }
+            for (i, &want) in golden.flow.iter().enumerate() {
+                let got = cache.flow[i] as f64;
+                assert!(
+                    (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                    "causal={mode} flow[{i}]: {got} vs {want}"
+                );
+            }
+            let probe: f64 = ct_f
+                .iter()
+                .zip(&cache.fwd_logp)
+                .filter(|(c, _)| **c != 0.0)
+                .map(|(&c, &l)| c as f64 * l as f64)
+                .sum::<f64>()
+                + ct_flow.iter().zip(&cache.flow).map(|(&c, &f)| c as f64 * f as f64).sum::<f64>();
+            assert!(
+                (probe - golden.loss).abs() <= 1e-4 * golden.loss.abs(),
+                "causal={mode} probe loss {probe} vs {}",
+                golden.loss
+            );
+
+            let grads = net.backward(&obs, &cache, &ct_f, &ct_flow);
+            assert_eq!(grads.leaves.len(), 34);
+            for (li, (&(want_sum, want_first), leaf)) in
+                golden.grads.iter().zip(net.leaves()).enumerate()
+            {
+                let g = &grads.leaves[li];
+                let sum: f64 = g.iter().map(|&v| v as f64).sum();
+                let first = g[0] as f64;
+                let tol = |r: f64| 2e-3 * r.abs().max(1e-2);
+                assert!(
+                    (sum - want_sum).abs() <= tol(want_sum),
+                    "causal={mode} grad {} sum: {sum:.10e} vs {want_sum:.10e}",
+                    leaf.name
+                );
+                assert!(
+                    (first - want_first).abs() <= tol(want_first),
+                    "causal={mode} grad {} first: {first:.10e} vs {want_first:.10e}",
+                    leaf.name
+                );
+            }
+        }
+    }
+
+    /// The incremental per-slot KV decode must be *bitwise* equal to full
+    /// re-encode — across ragged slot lengths, slot reuse, and a
+    /// mid-stream reset that invalidates a cached prefix. This is the
+    /// determinism contract that lets serve workers switch to O(T) decode
+    /// without perturbing a single sampled trajectory.
+    #[test]
+    fn kv_incremental_decode_is_bitwise_equal_to_full_reencode() {
+        let net = NativeNet::init(tf_cfg(true), 99);
+        let mut kv_policy = NativePolicy { net: net.clone(), kv_enabled: true, kv: None };
+        let mut full_policy = kv_policy.clone().with_kv_cache(false);
+        let (b, a, ab) = (3usize, 4usize, 2usize);
+        let fwd_mask = vec![1f32; b * a];
+        let mut bwd_mask = vec![1f32; b * ab];
+        bwd_mask[1] = 0.0; // a ragged parent count, for the uniform-P_B rows
+        // Ragged prefix growth per step; row 0 resets mid-stream (step 3),
+        // row 1 jumps two tokens at once, row 2 stays empty for a while.
+        let steps: [[&[i64]; 3]; 5] = [
+            [&[], &[0], &[]],
+            [&[1], &[0, 2], &[]],
+            [&[1, 3], &[0, 2, 1, 3], &[2]],
+            [&[2], &[0, 2, 1, 3], &[2, 0]],
+            [&[2, 1, 0], &[0, 2, 1, 3], &[2, 0, 3, 1]],
+        ];
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for (si, rows) in steps.iter().enumerate() {
+            let obs = tf_obs(rows);
+            let (f_kv, b_kv, fl_kv) = kv_policy.eval(&obs, &fwd_mask, &bwd_mask).unwrap();
+            let (f_full, b_full, fl_full) =
+                full_policy.eval(&obs, &fwd_mask, &bwd_mask).unwrap();
+            assert_eq!(bits(&f_kv), bits(&f_full), "step {si}: fwd_logp diverged");
+            assert_eq!(bits(&b_kv), bits(&b_full), "step {si}: bwd_logp diverged");
+            assert_eq!(bits(&fl_kv), bits(&fl_full), "step {si}: flow diverged");
+        }
+    }
+
+    /// Transformer checkpoints round-trip bitwise (model kind + arch ride
+    /// in the v2 header), and a cross-model `--resume` is rejected with an
+    /// error naming both architectures.
+    #[test]
+    fn transformer_checkpoint_roundtrips_and_cross_model_resume_is_rejected() {
+        let mut be = NativeBackend::new(tf_cfg(true), 21).unwrap();
+        be.t = 12;
+        be.steps = 34;
+        let dir = std::env::temp_dir().join("gfnx_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("transformer.ckpt");
+        be.save_checkpoint(&path).unwrap();
+
+        let loaded = NativeBackend::load_checkpoint(&path).unwrap();
+        assert_eq!(loaded.net.cfg.model, ModelSpec::Transformer(tf_arch(true)));
+        assert_eq!(loaded.steps(), 34);
+        assert_eq!(loaded.adam_t(), 12);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for (x, y) in be.net.leaves().iter().zip(loaded.net.leaves()) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(bits(x.tensor.data()), bits(y.tensor.data()), "leaf {}", x.name);
+        }
+
+        // Cross-model resume: the run wants an MLP, the checkpoint holds a
+        // transformer — the guard names both.
+        let want = NativeConfig { model: ModelSpec::Mlp, ..tf_cfg(true) };
+        let err = loaded.ensure_model(&want).unwrap_err().to_string();
+        assert!(
+            err.contains("transformer(") && err.contains("mlp("),
+            "error should name both architectures: {err}"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// End-to-end: a (non-causal) transformer backend trains through the
+    /// stock Trainer on hypergrid — finite losses that trend down. The
+    /// exact math is locked by the golden-batch test; this guards the
+    /// trainer/Adam/rollout integration.
+    #[test]
+    fn transformer_training_decreases_loss_on_hypergrid() {
+        let e = env(4);
+        let s = e.spec();
+        let arch = TransformerArch {
+            seq_len: 2,
+            token_dim: s.obs_dim / 2,
+            embed: 16,
+            n_heads: 2,
+            ff_hidden: 32,
+            causal: false,
+        };
+        let cfg = NativeConfig::for_env(&e, 8, "tb")
+            .with_model(ModelSpec::Transformer(arch))
+            .with_lr(3e-3, 1e-1);
+        let backend = NativeBackend::new(cfg, 31).unwrap();
+        let mut trainer = Trainer::with_backend(&e, backend, 31, EpsSchedule::none()).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..120 {
+            let (stats, _) = trainer.train_iter(&ExtraSource::None).unwrap();
+            assert!(stats.loss.is_finite(), "transformer loss not finite");
+            losses.push(stats.loss as f64);
+        }
+        let head = losses[..20].iter().sum::<f64>() / 20.0;
+        let tail = losses[100..].iter().sum::<f64>() / 20.0;
+        assert!(
+            tail < head,
+            "transformer TB loss should trend down: {head:.3} -> {tail:.3}"
+        );
     }
 }

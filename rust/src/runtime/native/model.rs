@@ -1,0 +1,184 @@
+//! The pluggable model layer of the native backend.
+//!
+//! [`Model`] is the seam between "what the backend does" (losses, Adam,
+//! checkpointing, serve snapshots — all generic over a parameter tree of
+//! named [`Leaf`]s) and "what the network is" (MLP trunk, transformer
+//! encoder). Each implementation owns its leaves in a fixed serialization
+//! order, exposes forward/backward over flat `[n, obs_dim]` batches, and
+//! describes its architecture for checkpoint headers via [`ModelSpec`].
+//!
+//! Two implementations ship in-tree:
+//! - [`MlpModel`](super::net::MlpModel) — the original MLP trunk + three
+//!   heads (`python/compile/models/mlp.py`), bit-for-bit the pre-trait
+//!   [`NativeNet`](super::NativeNet) math.
+//! - [`TransformerModel`](super::transformer::TransformerModel) — the
+//!   pre-LN encoder of `python/compile/models/transformer.py`, with an
+//!   optional causal mode + per-slot KV cache for O(T)-per-step serve
+//!   decode.
+
+use super::net::{ForwardCache, Grads, Leaf};
+use super::transformer::TransformerModel;
+use super::NativeConfig;
+use crate::util::json::Json;
+
+/// Which architecture a model (or checkpoint) is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Mlp,
+    Transformer,
+}
+
+impl ModelKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp",
+            ModelKind::Transformer => "transformer",
+        }
+    }
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Architecture of a [`TransformerModel`]: the flat observation is
+/// reshaped to `[seq_len, token_dim]` tokens, embedded into `embed` dims,
+/// and run through `NativeConfig::n_layers` pre-LN encoder blocks.
+///
+/// `causal` switches the attention pattern: `false` is the bidirectional
+/// JAX reference (mean-pool over positions); `true` masks attention to
+/// `key ≤ query` and pools at the first unfilled position, which is what
+/// makes the per-slot KV cache ([`super::transformer::KvCaches`]) exact —
+/// only left-to-right appending envs (seq, tfbind8, amp) qualify.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransformerArch {
+    pub seq_len: usize,
+    pub token_dim: usize,
+    pub embed: usize,
+    pub n_heads: usize,
+    pub ff_hidden: usize,
+    pub causal: bool,
+}
+
+impl TransformerArch {
+    /// Checkpoint-header descriptor (inverse of [`TransformerArch::from_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seq_len", Json::Num(self.seq_len as f64)),
+            ("token_dim", Json::Num(self.token_dim as f64)),
+            ("embed", Json::Num(self.embed as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("ff_hidden", Json::Num(self.ff_hidden as f64)),
+            ("causal", Json::Bool(self.causal)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<TransformerArch> {
+        Ok(TransformerArch {
+            seq_len: j.req_usize("seq_len")?,
+            token_dim: j.req_usize("token_dim")?,
+            embed: j.req_usize("embed")?,
+            n_heads: j.req_usize("n_heads")?,
+            ff_hidden: j.req_usize("ff_hidden")?,
+            causal: j
+                .req("causal")?
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("transformer arch: causal is not a bool"))?,
+        })
+    }
+}
+
+impl std::fmt::Display for TransformerArch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "transformer(seq_len={}, token_dim={}, embed={}, heads={}, ff={}, causal={})",
+            self.seq_len, self.token_dim, self.embed, self.n_heads, self.ff_hidden, self.causal
+        )
+    }
+}
+
+/// Which model a [`NativeConfig`] builds (plus its architecture, for
+/// everything the shared shape fields don't capture).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelSpec {
+    Mlp,
+    Transformer(TransformerArch),
+}
+
+impl ModelSpec {
+    pub fn kind(&self) -> ModelKind {
+        match self {
+            ModelSpec::Mlp => ModelKind::Mlp,
+            ModelSpec::Transformer(_) => ModelKind::Transformer,
+        }
+    }
+
+    /// The `[seq_len, token_dim]` factorization this model imposes on the
+    /// flat observation (`None` for models that consume it flat).
+    pub fn token_shape(&self) -> Option<(usize, usize)> {
+        match self {
+            ModelSpec::Mlp => None,
+            ModelSpec::Transformer(a) => Some((a.seq_len, a.token_dim)),
+        }
+    }
+}
+
+/// A native policy network architecture: a parameter tree of named leaves
+/// plus forward/backward over flat observation batches.
+///
+/// Everything above this trait (losses, Adam, blob/checkpoint round trips,
+/// serve snapshots, the engine) treats the model as an opaque leaf vector;
+/// `forward`/`backward` receive the owning [`NativeConfig`] so shared
+/// shape/hyperparameter state lives in exactly one place.
+pub trait Model: std::fmt::Debug + Send + Sync {
+    /// Architecture tag for checkpoint headers and error messages.
+    fn kind(&self) -> ModelKind;
+
+    /// Parameter leaves in serialization order.
+    fn leaves(&self) -> &[Leaf];
+
+    /// Mutable leaves (optimizer step, checkpoint restore).
+    fn leaves_mut(&mut self) -> &mut [Leaf];
+
+    /// Index of the `logZ` leaf.
+    fn idx_logz(&self) -> usize;
+
+    /// Forward pass over `n` rows, keeping intermediates for `backward`.
+    fn forward(
+        &self,
+        cfg: &NativeConfig,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+        n: usize,
+        with_bwd: bool,
+    ) -> ForwardCache;
+
+    /// Backward pass: upstream gradients on the masked forward log-probs
+    /// and the flow head → per-leaf parameter gradients.
+    fn backward(
+        &self,
+        cfg: &NativeConfig,
+        obs: &[f32],
+        cache: &ForwardCache,
+        d_fwd_logp: &[f32],
+        d_flow: &[f32],
+    ) -> Grads;
+
+    /// Clone behind the trait object (snapshots, policy clones).
+    fn box_clone(&self) -> Box<dyn Model>;
+
+    /// Downcast hook for the transformer-only serve paths (KV cache).
+    fn as_transformer(&self) -> Option<&TransformerModel> {
+        None
+    }
+}
+
+impl Clone for Box<dyn Model> {
+    fn clone(&self) -> Box<dyn Model> {
+        self.box_clone()
+    }
+}

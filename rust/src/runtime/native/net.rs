@@ -1,12 +1,15 @@
-//! The native policy network: an MLP trunk with forward / backward / flow
-//! heads, a hand-written backward pass, and masked log-softmax heads — the
+//! The native policy network front-end ([`NativeNet`]) and the MLP model
+//! ([`MlpModel`]): an MLP trunk with forward / backward / flow heads, a
+//! hand-written backward pass, and masked log-softmax heads — the
 //! pure-Rust counterpart of `python/compile/models/mlp.py` +
 //! `kernels/masked_softmax.py`.
 //!
-//! Parameter leaves follow the exact artifact init-blob layout
-//! (`w0, b0, …, head_fwd_w, head_fwd_b, head_bwd_w, head_bwd_b,
-//! head_flow_w, head_flow_b, logZ`), so a [`NativeNet`] can be initialized
-//! from the same `Manifest` + blob an XLA artifact uses.
+//! [`NativeNet`] itself is model-agnostic: it owns a [`NativeConfig`] and
+//! a boxed [`Model`] (MLP or transformer, per [`ModelSpec`]) and forwards
+//! every call. The MLP's parameter leaves follow the exact artifact
+//! init-blob layout (`w0, b0, …, head_fwd_w, head_fwd_b, head_bwd_w,
+//! head_bwd_b, head_flow_w, head_flow_b, logZ`), so a [`NativeNet`] can be
+//! initialized from the same `Manifest` + blob an XLA artifact uses.
 //!
 //! All batched matmuls run through the cache-blocked kernels in
 //! [`super::gemm`], dispatched on the persistent worker pool. In the
@@ -20,6 +23,8 @@
 //! but not bitwise-equal to the deterministic mode.
 
 use super::gemm::{col_sum, dense_rows_mode, matmul_nt, matmul_tn};
+use super::model::{Model, ModelKind, ModelSpec};
+use super::transformer::{self, TransformerModel};
 use super::NativeConfig;
 use crate::runtime::policy::{masked_uniform_rows, MASKED_NEG};
 use crate::util::tensor::TensorF32;
@@ -35,11 +40,22 @@ pub struct Leaf {
 }
 
 impl Leaf {
-    fn zeros(name: &str, shape: &[usize]) -> Leaf {
+    pub(crate) fn zeros(name: &str, shape: &[usize]) -> Leaf {
         Leaf { name: name.to_string(), tensor: TensorF32::zeros(shape) }
     }
 
-    fn normal(name: &str, shape: &[usize], rng: &mut crate::util::rng::Rng, std: f32) -> Leaf {
+    pub(crate) fn full(name: &str, shape: &[usize], v: f32) -> Leaf {
+        let mut t = TensorF32::zeros(shape);
+        t.data_mut().fill(v);
+        Leaf { name: name.to_string(), tensor: t }
+    }
+
+    pub(crate) fn normal(
+        name: &str,
+        shape: &[usize],
+        rng: &mut crate::util::rng::Rng,
+        std: f32,
+    ) -> Leaf {
         let mut t = TensorF32::zeros(shape);
         rng.fill_normal_f32(t.data_mut(), std);
         Leaf { name: name.to_string(), tensor: t }
@@ -56,7 +72,9 @@ pub struct Grads {
 pub struct ForwardCache {
     /// Number of rows evaluated.
     pub n: usize,
-    /// Post-ReLU trunk activations per layer, each `[n, hidden]`.
+    /// Post-ReLU trunk activations per layer, each `[n, hidden]` (MLP
+    /// model only; empty for the transformer, whose intermediates live in
+    /// `tf`).
     pub acts: Vec<Vec<f32>>,
     /// Masked forward log-probabilities `[n, n_actions]`.
     pub fwd_logp: Vec<f32>,
@@ -66,22 +84,163 @@ pub struct ForwardCache {
     pub bwd_logp: Vec<f32>,
     /// Log-flow head `[n]`.
     pub flow: Vec<f32>,
+    /// Transformer intermediates (attention probabilities, LayerNorm
+    /// statistics, residual-stream snapshots); `None` for the MLP.
+    pub(crate) tf: Option<Box<transformer::TfCache>>,
 }
 
-/// The pure forward part of the native backend: parameter leaves + config.
-/// `Clone + Send`, so a snapshot can be shipped to serve worker threads.
+/// The pure forward part of the native backend: a boxed [`Model`] +
+/// config. `Clone + Send`, so a snapshot can be shipped to serve worker
+/// threads.
 #[derive(Clone, Debug)]
 pub struct NativeNet {
     pub cfg: NativeConfig,
-    leaves: Vec<Leaf>,
+    model: Box<dyn Model>,
 }
 
 impl NativeNet {
+    /// Seed-initialized network for `cfg.model` (He init for the MLP
+    /// trunk, the JAX reference's per-leaf scales for the transformer).
+    pub fn init(cfg: NativeConfig, seed: u64) -> NativeNet {
+        let model: Box<dyn Model> = match cfg.model {
+            ModelSpec::Mlp => Box::new(MlpModel::init(&cfg, seed)),
+            ModelSpec::Transformer(arch) => {
+                Box::new(TransformerModel::init(&cfg, arch, seed))
+            }
+        };
+        NativeNet { cfg, model }
+    }
+
+    /// Build from externally loaded leaves (the manifest-blob and
+    /// checkpoint paths). The leaf vector must follow `cfg.model`'s
+    /// serialization layout.
+    pub(super) fn from_leaves(cfg: NativeConfig, leaves: Vec<Leaf>) -> NativeNet {
+        let model: Box<dyn Model> = match cfg.model {
+            ModelSpec::Mlp => {
+                debug_assert_eq!(leaves.len(), Self::n_leaves(cfg.n_layers));
+                Box::new(MlpModel { n_layers: cfg.n_layers, leaves })
+            }
+            ModelSpec::Transformer(arch) => {
+                Box::new(TransformerModel::from_leaves(&cfg, arch, leaves))
+            }
+        };
+        NativeNet { cfg, model }
+    }
+
+    /// Leaf count of the MLP layout for a given trunk depth.
+    pub fn n_leaves(n_layers: usize) -> usize {
+        2 * n_layers + 7
+    }
+
+    /// Expected `(name, shape)` leaf layout for a config (both models) —
+    /// what blob/checkpoint loaders validate against.
+    pub fn layout(cfg: &NativeConfig) -> Vec<(String, Vec<usize>)> {
+        match cfg.model {
+            ModelSpec::Mlp => MlpModel::layout(cfg),
+            ModelSpec::Transformer(arch) => transformer::layout(cfg, &arch),
+        }
+    }
+
+    /// The model's architecture tag.
+    pub fn model_kind(&self) -> ModelKind {
+        self.model.kind()
+    }
+
+    /// Transformer view of the model, when it is one (serve KV path).
+    pub(super) fn transformer(&self) -> Option<&TransformerModel> {
+        self.model.as_transformer()
+    }
+
+    /// Parameter leaves in manifest blob order (read access).
+    pub fn leaves(&self) -> &[Leaf] {
+        self.model.leaves()
+    }
+
+    /// Mutable parameter leaves (optimizer step, checkpoint restore).
+    pub fn leaves_mut(&mut self) -> &mut [Leaf] {
+        self.model.leaves_mut()
+    }
+
+    /// Index of the `logZ` leaf.
+    #[inline]
+    pub fn idx_logz(&self) -> usize {
+        self.model.idx_logz()
+    }
+
+    /// Current `logZ` value.
+    pub fn log_z(&self) -> f64 {
+        let idx = self.idx_logz();
+        self.leaves()[idx].tensor.data()[0] as f64
+    }
+
+    /// Forward pass over `n` rows of `[n, obs_dim]` observations with
+    /// `[n, A]` / `[n, A']` masks, keeping intermediates for backward.
+    ///
+    /// `with_bwd` controls whether the backward-policy log-probabilities
+    /// are produced (the dispatch contract needs them; the training loss
+    /// derives its uniform P_B directly from the batch masks, so the
+    /// train-step path skips the work and leaves `bwd_logp` empty).
+    pub fn forward(
+        &self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+        n: usize,
+        with_bwd: bool,
+    ) -> ForwardCache {
+        self.model.forward(&self.cfg, obs, fwd_mask, bwd_mask, n, with_bwd)
+    }
+
+    /// One fixed-shape policy dispatch (`n = cfg.batch` rows).
+    pub fn eval(
+        &self,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let c = &self.cfg;
+        anyhow::ensure!(
+            obs.len() == c.batch * c.obs_dim
+                && fwd_mask.len() == c.batch * c.n_actions
+                && bwd_mask.len() == c.batch * c.n_bwd_actions,
+            "native policy: input shape mismatch"
+        );
+        let _t = crate::span!("native.dispatch");
+        let cache = self.forward(obs, fwd_mask, bwd_mask, c.batch, true);
+        Ok((cache.fwd_logp, cache.bwd_logp, cache.flow))
+    }
+
+    /// Backward pass: upstream gradients on the masked forward
+    /// log-probabilities (`[n, A]`) and the flow head (`[n]`) → per-leaf
+    /// parameter gradients. The backward-head leaves stay zero under
+    /// `uniform_pb` (the head is dead, exactly as in the AOT graph).
+    pub fn backward(
+        &self,
+        obs: &[f32],
+        cache: &ForwardCache,
+        d_fwd_logp: &[f32],
+        d_flow: &[f32],
+    ) -> Grads {
+        self.model.backward(&self.cfg, obs, cache, d_fwd_logp, d_flow)
+    }
+}
+
+/// The MLP model: trunk of ReLU dense layers + the three heads, in the
+/// artifact init-blob leaf order. The math is byte-for-byte the pre-trait
+/// `NativeNet` implementation — every existing golden/bitwise test pins
+/// that.
+#[derive(Clone, Debug)]
+pub(crate) struct MlpModel {
+    n_layers: usize,
+    leaves: Vec<Leaf>,
+}
+
+impl MlpModel {
     /// He-initialized network (mirrors `init_mlp`: He for the trunk,
     /// `1/√h` for the heads, zero biases and logZ).
-    pub fn init(cfg: NativeConfig, seed: u64) -> NativeNet {
+    pub(crate) fn init(cfg: &NativeConfig, seed: u64) -> MlpModel {
         let mut rng = crate::util::rng::Rng::new(seed);
-        let mut leaves = Vec::with_capacity(Self::n_leaves(cfg.n_layers));
+        let mut leaves = Vec::with_capacity(NativeNet::n_leaves(cfg.n_layers));
         let mut fan_in = cfg.obs_dim;
         for i in 0..cfg.n_layers {
             let std = (2.0 / fan_in as f64).sqrt() as f32;
@@ -98,28 +257,27 @@ impl NativeNet {
         leaves.push(Leaf::normal("head_flow_w", &[h, 1], &mut rng, hs));
         leaves.push(Leaf::zeros("head_flow_b", &[1]));
         leaves.push(Leaf::zeros("logZ", &[1]));
-        NativeNet { cfg, leaves }
+        MlpModel { n_layers: cfg.n_layers, leaves }
     }
 
-    /// Build from externally loaded leaves (the manifest-blob path).
-    pub(super) fn from_leaves(cfg: NativeConfig, leaves: Vec<Leaf>) -> NativeNet {
-        debug_assert_eq!(leaves.len(), Self::n_leaves(cfg.n_layers));
-        NativeNet { cfg, leaves }
-    }
-
-    /// Leaf count of the MLP layout for a given trunk depth.
-    pub fn n_leaves(n_layers: usize) -> usize {
-        2 * n_layers + 7
-    }
-
-    /// Parameter leaves in manifest blob order (read access).
-    pub fn leaves(&self) -> &[Leaf] {
-        &self.leaves
-    }
-
-    /// Mutable parameter leaves (optimizer step, checkpoint restore).
-    pub fn leaves_mut(&mut self) -> &mut [Leaf] {
-        &mut self.leaves
+    /// Expected `(name, shape)` layout for a config.
+    fn layout(cfg: &NativeConfig) -> Vec<(String, Vec<usize>)> {
+        let mut out = Vec::with_capacity(NativeNet::n_leaves(cfg.n_layers));
+        let mut fan_in = cfg.obs_dim;
+        for i in 0..cfg.n_layers {
+            out.push((format!("w{i}"), vec![fan_in, cfg.hidden]));
+            out.push((format!("b{i}"), vec![cfg.hidden]));
+            fan_in = cfg.hidden;
+        }
+        let h = fan_in;
+        out.push(("head_fwd_w".into(), vec![h, cfg.n_actions]));
+        out.push(("head_fwd_b".into(), vec![cfg.n_actions]));
+        out.push(("head_bwd_w".into(), vec![h, cfg.n_bwd_actions]));
+        out.push(("head_bwd_b".into(), vec![cfg.n_bwd_actions]));
+        out.push(("head_flow_w".into(), vec![h, 1]));
+        out.push(("head_flow_b".into(), vec![1]));
+        out.push(("logZ".into(), vec![1]));
+        out
     }
 
     #[inline]
@@ -134,51 +292,53 @@ impl NativeNet {
 
     #[inline]
     fn idx_head_fwd_w(&self) -> usize {
-        2 * self.cfg.n_layers
+        2 * self.n_layers
     }
 
     #[inline]
     fn idx_head_fwd_b(&self) -> usize {
-        2 * self.cfg.n_layers + 1
+        2 * self.n_layers + 1
     }
 
     #[inline]
     fn idx_head_flow_w(&self) -> usize {
-        2 * self.cfg.n_layers + 4
+        2 * self.n_layers + 4
     }
 
     #[inline]
     fn idx_head_flow_b(&self) -> usize {
-        2 * self.cfg.n_layers + 5
+        2 * self.n_layers + 5
+    }
+}
+
+impl Model for MlpModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Mlp
     }
 
-    /// Index of the `logZ` leaf.
+    fn leaves(&self) -> &[Leaf] {
+        &self.leaves
+    }
+
+    fn leaves_mut(&mut self) -> &mut [Leaf] {
+        &mut self.leaves
+    }
+
     #[inline]
-    pub fn idx_logz(&self) -> usize {
-        2 * self.cfg.n_layers + 6
+    fn idx_logz(&self) -> usize {
+        2 * self.n_layers + 6
     }
 
-    /// Current `logZ` value.
-    pub fn log_z(&self) -> f64 {
-        self.leaves[self.idx_logz()].tensor.data()[0] as f64
-    }
-
-    /// Forward pass over `n` rows of `[n, obs_dim]` observations with
-    /// `[n, A]` / `[n, A']` masks, keeping trunk activations for backward.
-    ///
-    /// `with_bwd` controls whether the backward-policy log-probabilities
-    /// are produced (the dispatch contract needs them; the training loss
-    /// derives its uniform P_B directly from the batch masks, so the
-    /// train-step path skips the work and leaves `bwd_logp` empty).
-    pub fn forward(
+    fn forward(
         &self,
+        cfg: &NativeConfig,
         obs: &[f32],
         fwd_mask: &[f32],
         bwd_mask: &[f32],
         n: usize,
         with_bwd: bool,
     ) -> ForwardCache {
-        let c = &self.cfg;
+        let c = cfg;
         // `NativeConfig::validate` rejects learned-P_B configs on every
         // construction path; a net that reaches here without uniform_pb is
         // a bug, not an input error (the bwd head has no backward pass).
@@ -234,65 +394,25 @@ impl NativeNet {
         } else {
             Vec::new()
         };
-        ForwardCache { n, acts, fwd_logp, bwd_logp, flow }
+        ForwardCache { n, acts, fwd_logp, bwd_logp, flow, tf: None }
     }
 
-    /// One fixed-shape policy dispatch (`n = cfg.batch` rows).
-    pub fn eval(
+    fn backward(
         &self,
-        obs: &[f32],
-        fwd_mask: &[f32],
-        bwd_mask: &[f32],
-    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        let c = &self.cfg;
-        anyhow::ensure!(
-            obs.len() == c.batch * c.obs_dim
-                && fwd_mask.len() == c.batch * c.n_actions
-                && bwd_mask.len() == c.batch * c.n_bwd_actions,
-            "native policy: input shape mismatch"
-        );
-        let _t = crate::span!("native.dispatch");
-        let cache = self.forward(obs, fwd_mask, bwd_mask, c.batch, true);
-        Ok((cache.fwd_logp, cache.bwd_logp, cache.flow))
-    }
-
-    /// Backward pass: upstream gradients on the masked forward
-    /// log-probabilities (`[n, A]`) and the flow head (`[n]`) → per-leaf
-    /// parameter gradients. The backward-head leaves stay zero under
-    /// `uniform_pb` (the head is dead, exactly as in the AOT graph).
-    pub fn backward(
-        &self,
+        cfg: &NativeConfig,
         obs: &[f32],
         cache: &ForwardCache,
         d_fwd_logp: &[f32],
         d_flow: &[f32],
     ) -> Grads {
-        let c = &self.cfg;
+        let c = cfg;
         let n = cache.n;
         let a = c.n_actions;
         let workers = c.workers.max(1);
         debug_assert_eq!(d_fwd_logp.len(), n * a);
         debug_assert_eq!(d_flow.len(), n);
 
-        // Masked log-softmax backward: dlogit_j = dlogp_j − p_j · Σ dlogp.
-        let mut d_logits = vec![0f32; n * a];
-        for r in 0..n {
-            let dl = &d_fwd_logp[r * a..(r + 1) * a];
-            let mut s = 0f64;
-            for &v in dl {
-                s += v as f64;
-            }
-            if s == 0.0 && dl.iter().all(|&v| v == 0.0) {
-                continue;
-            }
-            let lp = &cache.fwd_logp[r * a..(r + 1) * a];
-            let drow = &mut d_logits[r * a..(r + 1) * a];
-            for j in 0..a {
-                if lp[j] > MASKED_NEG / 2.0 {
-                    drow[j] = (dl[j] as f64 - (lp[j] as f64).exp() * s) as f32;
-                }
-            }
-        }
+        let d_logits = masked_log_softmax_backward(&cache.fwd_logp, d_fwd_logp, n, a);
 
         let mut grads: Vec<Vec<f32>> =
             self.leaves.iter().map(|l| vec![0f32; l.tensor.len()]).collect();
@@ -355,6 +475,40 @@ impl NativeNet {
         }
         Grads { leaves: grads }
     }
+
+    fn box_clone(&self) -> Box<dyn Model> {
+        Box::new(self.clone())
+    }
+}
+
+/// Masked log-softmax backward, shared by every model's head:
+/// `dlogit_j = dlogp_j − p_j · Σ dlogp` on legal entries, zero on masked
+/// ones. Rows whose upstream gradient is entirely zero are skipped.
+pub(crate) fn masked_log_softmax_backward(
+    fwd_logp: &[f32],
+    d_fwd_logp: &[f32],
+    n: usize,
+    a: usize,
+) -> Vec<f32> {
+    let mut d_logits = vec![0f32; n * a];
+    for r in 0..n {
+        let dl = &d_fwd_logp[r * a..(r + 1) * a];
+        let mut s = 0f64;
+        for &v in dl {
+            s += v as f64;
+        }
+        if s == 0.0 && dl.iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        let lp = &fwd_logp[r * a..(r + 1) * a];
+        let drow = &mut d_logits[r * a..(r + 1) * a];
+        for j in 0..a {
+            if lp[j] > MASKED_NEG / 2.0 {
+                drow[j] = (dl[j] as f64 - (lp[j] as f64).exp() * s) as f32;
+            }
+        }
+    }
+    d_logits
 }
 
 /// Row-wise masked log-softmax with the kernel's `-1e30` convention:
@@ -471,5 +625,22 @@ mod tests {
         assert!((p - 1.0).abs() < 1e-6);
         // Row with no legal entries is fully masked.
         assert!(lp[3..6].iter().all(|&v| v == MASKED_NEG));
+    }
+
+    #[test]
+    fn mlp_layout_matches_init() {
+        let e = crate::envs::hypergrid::HypergridEnv::new(
+            2,
+            4,
+            crate::reward::hypergrid::HypergridReward::standard(4),
+        );
+        let cfg = NativeConfig::for_env(&e, 2, "tb").with_hidden(8).with_layers(2);
+        let net = NativeNet::init(cfg.clone(), 1);
+        let layout = NativeNet::layout(&cfg);
+        assert_eq!(layout.len(), net.leaves().len());
+        for (leaf, (name, shape)) in net.leaves().iter().zip(&layout) {
+            assert_eq!(&leaf.name, name);
+            assert_eq!(leaf.tensor.shape(), &shape[..]);
+        }
     }
 }

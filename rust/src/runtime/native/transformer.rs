@@ -1,0 +1,1124 @@
+//! The native transformer policy: the pre-LN encoder of
+//! `python/compile/models/transformer.py` (MHA + FFN blocks on the
+//! [`super::gemm`] kernels, learned positional embeddings, pooled heads)
+//! with a hand-written backward pass and an optional causal mode whose
+//! serve dispatch runs through a per-slot KV cache.
+//!
+//! The flat `[n, obs_dim]` observation is reshaped to `[seq_len,
+//! token_dim]` one-hot-ish tokens, embedded into `embed` dims, offset by a
+//! learned positional table, and run through `n_layers` blocks of
+//! `x += MHA(LN1(x)); x += FFN(LN2(x))`. Non-causal mode mean-pools over
+//! all positions (the JAX reference exactly); causal mode masks attention
+//! to `key ≤ query` and pools at the frontier position `p =
+//! min(prefix_len, seq_len−1)`, where `prefix_len` counts the leading
+//! positions holding a real (non-empty-class) token.
+//!
+//! Numerics follow the MLP's conventions so every guarantee carries over:
+//! f32 storage, fixed-order f64 accumulation in every dense op (the
+//! deterministic gemm mode — the transformer ignores
+//! `NativeConfig::fastmath`), f64 LayerNorm statistics, f64
+//! ascending-key attention scores and softmax with the probabilities cast
+//! to f32 before the value mix. Dispatch is bitwise worker-count
+//! invariant, and — because the gemm kernels are also row-tiling
+//! invariant and the batched and incremental paths share `ln_row` /
+//! `attn_row` — the KV-cached decode below is **bitwise equal** to a full
+//! causal re-encode.
+//!
+//! The KV cache ([`KvCaches`]) holds, per serve slot and layer, the K/V
+//! rows of every *ingested* (committed) position plus the raw token
+//! vectors for prefix matching. One dispatch step re-embeds only the new
+//! frontier: positions `lcp..p` are ingested (O(1) amortized per step),
+//! the query at `p` is evaluated transiently without being committed, and
+//! a prefix mismatch (slot reset, hot-swap, env restart) truncates to the
+//! longest bitwise-common prefix. Per token step that is O(T) attention
+//! work instead of the O(T²) full re-encode.
+
+use super::gemm::{col_sum, dense_rows_mode, matmul_nt, matmul_tn};
+use super::model::{Model, ModelKind, TransformerArch};
+use super::net::{
+    masked_log_softmax_backward, masked_log_softmax_rows, ForwardCache, Grads, Leaf,
+};
+use super::NativeConfig;
+use crate::runtime::policy::masked_uniform_rows;
+
+/// Leaves per encoder block (qkv, proj, ff1, ff2 weight+bias pairs + two
+/// LayerNorm gain/bias pairs).
+const LEAVES_PER_LAYER: usize = 12;
+/// Leaves before the first block (embed_w, embed_b, pos).
+const STEM_LEAVES: usize = 3;
+/// Head leaves after the blocks (three weight+bias pairs + logZ).
+const HEAD_LEAVES: usize = 7;
+
+/// Expected `(name, shape)` leaf layout — the serialization order used by
+/// init, checkpoints, and blob validation.
+pub(crate) fn layout(cfg: &NativeConfig, arch: &TransformerArch) -> Vec<(String, Vec<usize>)> {
+    let (s, d, e, f) = (arch.seq_len, arch.token_dim, arch.embed, arch.ff_hidden);
+    let mut out = Vec::with_capacity(n_leaves(cfg.n_layers));
+    out.push(("embed_w".into(), vec![d, e]));
+    out.push(("embed_b".into(), vec![e]));
+    out.push(("pos".into(), vec![s, e]));
+    for l in 0..cfg.n_layers {
+        out.push((format!("l{l}_qkv_w"), vec![e, 3 * e]));
+        out.push((format!("l{l}_qkv_b"), vec![3 * e]));
+        out.push((format!("l{l}_proj_w"), vec![e, e]));
+        out.push((format!("l{l}_proj_b"), vec![e]));
+        out.push((format!("l{l}_ff1_w"), vec![e, f]));
+        out.push((format!("l{l}_ff1_b"), vec![f]));
+        out.push((format!("l{l}_ff2_w"), vec![f, e]));
+        out.push((format!("l{l}_ff2_b"), vec![e]));
+        out.push((format!("l{l}_ln1_g"), vec![e]));
+        out.push((format!("l{l}_ln1_b"), vec![e]));
+        out.push((format!("l{l}_ln2_g"), vec![e]));
+        out.push((format!("l{l}_ln2_b"), vec![e]));
+    }
+    out.push(("head_fwd_w".into(), vec![e, cfg.n_actions]));
+    out.push(("head_fwd_b".into(), vec![cfg.n_actions]));
+    out.push(("head_bwd_w".into(), vec![e, cfg.n_bwd_actions]));
+    out.push(("head_bwd_b".into(), vec![cfg.n_bwd_actions]));
+    out.push(("head_flow_w".into(), vec![e, 1]));
+    out.push(("head_flow_b".into(), vec![1]));
+    out.push(("logZ".into(), vec![1]));
+    out
+}
+
+/// Leaf count of the transformer layout for a given block depth.
+pub(crate) fn n_leaves(n_layers: usize) -> usize {
+    STEM_LEAVES + LEAVES_PER_LAYER * n_layers + HEAD_LEAVES
+}
+
+/// Intermediates of one batched transformer forward pass, kept on the
+/// [`ForwardCache`] for the backward pass.
+#[derive(Debug)]
+pub(crate) struct TfCache {
+    layers: Vec<TfLayerCache>,
+    /// Pooled residual-stream rows `[n, E]` feeding the heads.
+    pooled: Vec<f32>,
+    /// Causal pool positions per row (empty in non-causal mode).
+    pool_pos: Vec<usize>,
+}
+
+#[derive(Debug)]
+struct TfLayerCache {
+    /// Residual stream entering the block `[n·S, E]`.
+    x_in: Vec<f32>,
+    /// LN1 output `[n·S, E]`.
+    h1: Vec<f32>,
+    /// LN1 per-row `(mean, rstd)` statistics `[n·S]`.
+    st1: Vec<(f64, f64)>,
+    /// Fused q/k/v projections `[n·S, 3E]`.
+    qkv: Vec<f32>,
+    /// Attention probabilities `[n, H, S, S]` (zeros at `key > query` in
+    /// causal mode).
+    att: Vec<f32>,
+    /// Head-concatenated attention mix `[n·S, E]`.
+    att_out: Vec<f32>,
+    /// Residual stream after the attention residual `[n·S, E]`.
+    x_mid: Vec<f32>,
+    /// LN2 output `[n·S, E]`.
+    h2: Vec<f32>,
+    /// LN2 per-row statistics `[n·S]`.
+    st2: Vec<(f64, f64)>,
+    /// Post-ReLU FFN hidden `[n·S, F]`.
+    f1: Vec<f32>,
+}
+
+/// Per-slot, per-layer key/value cache for the incremental causal decode.
+#[derive(Clone, Debug)]
+pub struct KvCaches {
+    slots: Vec<KvSlot>,
+}
+
+#[derive(Clone, Debug)]
+struct KvSlot {
+    /// Number of ingested (committed) positions.
+    len: usize,
+    /// Raw token vectors of the ingested positions `[len, D]`, compared
+    /// bitwise against incoming observations to find the reusable prefix.
+    tokens: Vec<f32>,
+    /// Per layer: cached K rows `[len, E]`.
+    k: Vec<Vec<f32>>,
+    /// Per layer: cached V rows `[len, E]`.
+    v: Vec<Vec<f32>>,
+}
+
+impl KvCaches {
+    pub fn new(batch: usize, n_layers: usize) -> KvCaches {
+        KvCaches {
+            slots: (0..batch)
+                .map(|_| KvSlot {
+                    len: 0,
+                    tokens: Vec::new(),
+                    k: vec![Vec::new(); n_layers],
+                    v: vec![Vec::new(); n_layers],
+                })
+                .collect(),
+        }
+    }
+}
+
+/// The transformer model. Like [`super::net::MlpModel`], shared
+/// shape/hyperparameter state stays on the [`NativeConfig`] (`n_layers`,
+/// head widths); everything transformer-specific lives in the
+/// [`TransformerArch`].
+#[derive(Clone, Debug)]
+pub struct TransformerModel {
+    arch: TransformerArch,
+    n_layers: usize,
+    leaves: Vec<Leaf>,
+}
+
+impl TransformerModel {
+    /// Seed-initialized model with the JAX reference's per-leaf scales:
+    /// `1/√fan_in` normals for projections (`2/fan_in` for the ReLU ff1),
+    /// 0.02 for the positional table, ones for LayerNorm gains, zeros for
+    /// biases and logZ.
+    pub(crate) fn init(cfg: &NativeConfig, arch: TransformerArch, seed: u64) -> TransformerModel {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let (e, f) = (arch.embed, arch.ff_hidden);
+        let std_of = |name: &str| -> Option<f32> {
+            let fan_inv = match name {
+                "embed_w" => 1.0 / arch.token_dim as f64,
+                "pos" => return Some(0.02),
+                n if n.ends_with("_ff1_w") => 2.0 / e as f64,
+                n if n.ends_with("_ff2_w") => 1.0 / f as f64,
+                n if n.ends_with("_w") => 1.0 / e as f64,
+                _ => return None,
+            };
+            Some(fan_inv.sqrt() as f32)
+        };
+        let leaves = layout(cfg, &arch)
+            .into_iter()
+            .map(|(name, shape)| {
+                if let Some(std) = std_of(&name) {
+                    Leaf::normal(&name, &shape, &mut rng, std)
+                } else if name.ends_with("_g") {
+                    Leaf::full(&name, &shape, 1.0)
+                } else {
+                    Leaf::zeros(&name, &shape)
+                }
+            })
+            .collect();
+        TransformerModel { arch, n_layers: cfg.n_layers, leaves }
+    }
+
+    /// Build from externally loaded leaves (checkpoint restore). The
+    /// loader validates names/shapes against [`layout`] before calling.
+    pub(crate) fn from_leaves(
+        cfg: &NativeConfig,
+        arch: TransformerArch,
+        leaves: Vec<Leaf>,
+    ) -> TransformerModel {
+        assert_eq!(
+            leaves.len(),
+            n_leaves(cfg.n_layers),
+            "transformer leaf count mismatch"
+        );
+        TransformerModel { arch, n_layers: cfg.n_layers, leaves }
+    }
+
+    pub(crate) fn arch(&self) -> &TransformerArch {
+        &self.arch
+    }
+
+    // Leaf indices in layout order.
+    #[inline]
+    fn idx_embed_w(&self) -> usize {
+        0
+    }
+    #[inline]
+    fn idx_embed_b(&self) -> usize {
+        1
+    }
+    #[inline]
+    fn idx_pos(&self) -> usize {
+        2
+    }
+    /// Base index of block `l`'s 12 leaves (qkv_w, qkv_b, proj_w, proj_b,
+    /// ff1_w, ff1_b, ff2_w, ff2_b, ln1_g, ln1_b, ln2_g, ln2_b).
+    #[inline]
+    fn idx_layer(&self, l: usize) -> usize {
+        STEM_LEAVES + LEAVES_PER_LAYER * l
+    }
+    #[inline]
+    fn idx_heads(&self) -> usize {
+        STEM_LEAVES + LEAVES_PER_LAYER * self.n_layers
+    }
+
+    #[inline]
+    fn leaf(&self, idx: usize) -> &[f32] {
+        self.leaves[idx].tensor.data()
+    }
+
+    /// `prefix_len` of one `[S·D]` observation row: the number of leading
+    /// positions holding a real token (any nonzero entry outside the
+    /// empty-class column `D−1`).
+    fn prefix_len(&self, obs_row: &[f32]) -> usize {
+        let (s_len, d) = (self.arch.seq_len, self.arch.token_dim);
+        for s in 0..s_len {
+            let tok = &obs_row[s * d..(s + 1) * d];
+            if !tok[..d - 1].iter().any(|&x| x != 0.0) {
+                return s;
+            }
+        }
+        s_len
+    }
+
+    /// Causal pool position for one observation row.
+    #[inline]
+    fn pool_position(&self, obs_row: &[f32]) -> usize {
+        self.prefix_len(obs_row).min(self.arch.seq_len - 1)
+    }
+
+    /// One position through all blocks using the slot's cached K/V;
+    /// mirrors the batched forward row-for-row (same `ln_row`/`attn_row`
+    /// helpers, same gemm kernels), which is what makes incremental decode
+    /// bitwise-equal to full re-encode. `commit` appends this position's
+    /// K/V rows to the cache (ingest); the query step leaves the cache
+    /// untouched. Returns the final residual-stream row `[E]`.
+    fn kv_step(&self, token: &[f32], pos_idx: usize, slot: &mut KvSlot, commit: bool) -> Vec<f32> {
+        let a = &self.arch;
+        let (d, e) = (a.token_dim, a.embed);
+        let hd = e / a.n_heads;
+        let mut x = dense_rows_mode(
+            token,
+            1,
+            d,
+            self.leaf(self.idx_embed_w()),
+            self.leaf(self.idx_embed_b()),
+            e,
+            false,
+            1,
+            false,
+        );
+        let pos = self.leaf(self.idx_pos());
+        for i in 0..e {
+            x[i] += pos[pos_idx * e + i];
+        }
+        let mut h = vec![0f32; e];
+        let mut att_tmp = vec![0f32; a.seq_len];
+        let mut head_out = vec![0f32; hd];
+        for l in 0..self.n_layers {
+            let lb = self.idx_layer(l);
+            ln_row(&x, self.leaf(lb + 8), self.leaf(lb + 9), &mut h);
+            let qkv = dense_rows_mode(
+                &h,
+                1,
+                e,
+                self.leaf(lb),
+                self.leaf(lb + 1),
+                3 * e,
+                false,
+                1,
+                false,
+            );
+            let n_keys = slot.len + 1;
+            // Contiguous [n_keys, E] K/V scratch: cached rows + this
+            // position's own k/v (attended to but only cached on commit).
+            let mut keys = Vec::with_capacity(n_keys * e);
+            keys.extend_from_slice(&slot.k[l]);
+            keys.extend_from_slice(&qkv[e..2 * e]);
+            let mut vals = Vec::with_capacity(n_keys * e);
+            vals.extend_from_slice(&slot.v[l]);
+            vals.extend_from_slice(&qkv[2 * e..3 * e]);
+            let mut att_out = vec![0f32; e];
+            for hh in 0..a.n_heads {
+                attn_row(
+                    &qkv[hh * hd..(hh + 1) * hd],
+                    hd,
+                    &keys,
+                    e,
+                    hh * hd,
+                    &vals,
+                    e,
+                    hh * hd,
+                    n_keys,
+                    &mut att_tmp[..n_keys],
+                    &mut head_out,
+                );
+                att_out[hh * hd..(hh + 1) * hd].copy_from_slice(&head_out);
+            }
+            let proj = dense_rows_mode(
+                &att_out,
+                1,
+                e,
+                self.leaf(lb + 2),
+                self.leaf(lb + 3),
+                e,
+                false,
+                1,
+                false,
+            );
+            for i in 0..e {
+                x[i] += proj[i];
+            }
+            ln_row(&x, self.leaf(lb + 10), self.leaf(lb + 11), &mut h);
+            let f1 = dense_rows_mode(
+                &h,
+                1,
+                e,
+                self.leaf(lb + 4),
+                self.leaf(lb + 5),
+                a.ff_hidden,
+                true,
+                1,
+                false,
+            );
+            let f2 = dense_rows_mode(
+                &f1,
+                1,
+                a.ff_hidden,
+                self.leaf(lb + 6),
+                self.leaf(lb + 7),
+                e,
+                false,
+                1,
+                false,
+            );
+            for i in 0..e {
+                x[i] += f2[i];
+            }
+            if commit {
+                slot.k[l].extend_from_slice(&keys[slot.len * e..]);
+                slot.v[l].extend_from_slice(&vals[slot.len * e..]);
+            }
+        }
+        if commit {
+            slot.tokens.extend_from_slice(token);
+            slot.len += 1;
+        }
+        x
+    }
+
+    /// Incremental causal dispatch over a full batch: per slot, reuse the
+    /// bitwise-matching cached prefix, ingest the new positions, evaluate
+    /// the frontier query, then run the heads. Output contract is
+    /// identical to the batched `eval` path.
+    pub(crate) fn eval_kv(
+        &self,
+        cfg: &NativeConfig,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+        kv: &mut KvCaches,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let c = cfg;
+        let a = &self.arch;
+        anyhow::ensure!(a.causal, "KV-cached decode requires causal mode");
+        anyhow::ensure!(
+            obs.len() == c.batch * c.obs_dim
+                && fwd_mask.len() == c.batch * c.n_actions
+                && bwd_mask.len() == c.batch * c.n_bwd_actions,
+            "native policy: input shape mismatch"
+        );
+        anyhow::ensure!(
+            kv.slots.len() == c.batch,
+            "KV cache sized for {} slots, batch is {}",
+            kv.slots.len(),
+            c.batch
+        );
+        let _t = crate::span!("native.dispatch");
+        let (d, e) = (a.token_dim, a.embed);
+        let hb = self.idx_heads();
+        let mut fwd_logits = vec![0f32; c.batch * c.n_actions];
+        let mut flow = vec![0f32; c.batch];
+        let mut ingested = 0usize;
+        for r in 0..c.batch {
+            let obs_row = &obs[r * c.obs_dim..(r + 1) * c.obs_dim];
+            let p = self.pool_position(obs_row);
+            let slot = &mut kv.slots[r];
+            // Longest bitwise-common prefix of the cached tokens and this
+            // observation, capped at the ingest frontier.
+            let mut lcp = 0;
+            while lcp < slot.len.min(p) {
+                let cached = &slot.tokens[lcp * d..(lcp + 1) * d];
+                let fresh = &obs_row[lcp * d..(lcp + 1) * d];
+                if !cached
+                    .iter()
+                    .zip(fresh)
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+                {
+                    break;
+                }
+                lcp += 1;
+            }
+            if lcp < slot.len {
+                slot.len = lcp;
+                slot.tokens.truncate(lcp * d);
+                for l in 0..self.n_layers {
+                    slot.k[l].truncate(lcp * e);
+                    slot.v[l].truncate(lcp * e);
+                }
+            }
+            for j in slot.len..p {
+                let tok: Vec<f32> = obs_row[j * d..(j + 1) * d].to_vec();
+                self.kv_step(&tok, j, slot, true);
+                ingested += 1;
+            }
+            let x_q = self.kv_step(&obs_row[p * d..(p + 1) * d], p, slot, false);
+            let frow = dense_rows_mode(
+                &x_q,
+                1,
+                e,
+                self.leaf(hb),
+                self.leaf(hb + 1),
+                c.n_actions,
+                false,
+                1,
+                false,
+            );
+            fwd_logits[r * c.n_actions..(r + 1) * c.n_actions].copy_from_slice(&frow);
+            flow[r] = dense_rows_mode(
+                &x_q,
+                1,
+                e,
+                self.leaf(hb + 4),
+                self.leaf(hb + 5),
+                1,
+                false,
+                1,
+                false,
+            )[0];
+        }
+        crate::count!("native.kv_ingest", ingested);
+        let fwd_logp = masked_log_softmax_rows(&fwd_logits, fwd_mask, c.batch, c.n_actions);
+        let mut bwd_logp = Vec::new();
+        masked_uniform_rows(bwd_mask, c.batch, c.n_bwd_actions, &mut bwd_logp);
+        Ok((fwd_logp, bwd_logp, flow))
+    }
+}
+
+impl Model for TransformerModel {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Transformer
+    }
+
+    fn leaves(&self) -> &[Leaf] {
+        &self.leaves
+    }
+
+    fn leaves_mut(&mut self) -> &mut [Leaf] {
+        &mut self.leaves
+    }
+
+    #[inline]
+    fn idx_logz(&self) -> usize {
+        self.idx_heads() + 6
+    }
+
+    fn forward(
+        &self,
+        cfg: &NativeConfig,
+        obs: &[f32],
+        fwd_mask: &[f32],
+        bwd_mask: &[f32],
+        n: usize,
+        with_bwd: bool,
+    ) -> ForwardCache {
+        let c = cfg;
+        assert!(c.uniform_pb, "native net supports uniform P_B only");
+        let a = &self.arch;
+        let (s_len, d, e, f) = (a.seq_len, a.token_dim, a.embed, a.ff_hidden);
+        let hd = e / a.n_heads;
+        debug_assert_eq!(obs.len(), n * c.obs_dim);
+        debug_assert_eq!(c.obs_dim, s_len * d);
+        debug_assert_eq!(fwd_mask.len(), n * c.n_actions);
+        debug_assert_eq!(bwd_mask.len(), n * c.n_bwd_actions);
+        let workers = c.workers.max(1);
+        let ns = n * s_len;
+
+        // Embed every position, then add the positional table (plain f32
+        // adds, matching the incremental path).
+        let mut x = dense_rows_mode(
+            obs,
+            ns,
+            d,
+            self.leaf(self.idx_embed_w()),
+            self.leaf(self.idx_embed_b()),
+            e,
+            false,
+            workers,
+            false,
+        );
+        let pos = self.leaf(self.idx_pos());
+        for r in 0..n {
+            for s in 0..s_len {
+                let row = &mut x[(r * s_len + s) * e..(r * s_len + s + 1) * e];
+                for i in 0..e {
+                    row[i] += pos[s * e + i];
+                }
+            }
+        }
+
+        let mut layers = Vec::with_capacity(self.n_layers);
+        let mut att_tmp_head = vec![0f32; hd];
+        for l in 0..self.n_layers {
+            let lb = self.idx_layer(l);
+            let x_in = x.clone();
+            let mut h1 = vec![0f32; ns * e];
+            let mut st1 = vec![(0f64, 0f64); ns];
+            for rs in 0..ns {
+                st1[rs] = ln_row(
+                    &x[rs * e..(rs + 1) * e],
+                    self.leaf(lb + 8),
+                    self.leaf(lb + 9),
+                    &mut h1[rs * e..(rs + 1) * e],
+                );
+            }
+            let qkv = dense_rows_mode(
+                &h1,
+                ns,
+                e,
+                self.leaf(lb),
+                self.leaf(lb + 1),
+                3 * e,
+                false,
+                workers,
+                false,
+            );
+            let mut att = vec![0f32; n * a.n_heads * s_len * s_len];
+            let mut att_out = vec![0f32; ns * e];
+            for r in 0..n {
+                let buf = &qkv[r * s_len * 3 * e..(r + 1) * s_len * 3 * e];
+                for hh in 0..a.n_heads {
+                    for s in 0..s_len {
+                        let kk = if a.causal { s + 1 } else { s_len };
+                        let att_row = &mut att[((r * a.n_heads + hh) * s_len + s) * s_len..]
+                            [..kk];
+                        attn_row(
+                            &buf[s * 3 * e + hh * hd..s * 3 * e + (hh + 1) * hd],
+                            hd,
+                            buf,
+                            3 * e,
+                            e + hh * hd,
+                            buf,
+                            3 * e,
+                            2 * e + hh * hd,
+                            kk,
+                            att_row,
+                            &mut att_tmp_head,
+                        );
+                        att_out[(r * s_len + s) * e + hh * hd..(r * s_len + s) * e
+                            + (hh + 1) * hd]
+                            .copy_from_slice(&att_tmp_head);
+                    }
+                }
+            }
+            let proj = dense_rows_mode(
+                &att_out,
+                ns,
+                e,
+                self.leaf(lb + 2),
+                self.leaf(lb + 3),
+                e,
+                false,
+                workers,
+                false,
+            );
+            for (xi, pi) in x.iter_mut().zip(&proj) {
+                *xi += *pi;
+            }
+            let x_mid = x.clone();
+            let mut h2 = vec![0f32; ns * e];
+            let mut st2 = vec![(0f64, 0f64); ns];
+            for rs in 0..ns {
+                st2[rs] = ln_row(
+                    &x[rs * e..(rs + 1) * e],
+                    self.leaf(lb + 10),
+                    self.leaf(lb + 11),
+                    &mut h2[rs * e..(rs + 1) * e],
+                );
+            }
+            let f1 = dense_rows_mode(
+                &h2,
+                ns,
+                e,
+                self.leaf(lb + 4),
+                self.leaf(lb + 5),
+                f,
+                true,
+                workers,
+                false,
+            );
+            let f2 = dense_rows_mode(
+                &f1,
+                ns,
+                f,
+                self.leaf(lb + 6),
+                self.leaf(lb + 7),
+                e,
+                false,
+                workers,
+                false,
+            );
+            for (xi, fi) in x.iter_mut().zip(&f2) {
+                *xi += *fi;
+            }
+            layers.push(TfLayerCache {
+                x_in,
+                h1,
+                st1,
+                qkv,
+                att,
+                att_out,
+                x_mid,
+                h2,
+                st2,
+                f1,
+            });
+        }
+
+        // Pool: frontier row in causal mode, f64 ascending mean otherwise.
+        let mut pooled = vec![0f32; n * e];
+        let mut pool_pos = Vec::new();
+        if a.causal {
+            pool_pos.reserve(n);
+            for r in 0..n {
+                let p = self.pool_position(&obs[r * c.obs_dim..(r + 1) * c.obs_dim]);
+                pool_pos.push(p);
+                pooled[r * e..(r + 1) * e]
+                    .copy_from_slice(&x[(r * s_len + p) * e..(r * s_len + p + 1) * e]);
+            }
+        } else {
+            for r in 0..n {
+                for i in 0..e {
+                    let mut acc = 0f64;
+                    for s in 0..s_len {
+                        acc += x[(r * s_len + s) * e + i] as f64;
+                    }
+                    pooled[r * e + i] = (acc / s_len as f64) as f32;
+                }
+            }
+        }
+
+        let hb = self.idx_heads();
+        let fwd_logits = dense_rows_mode(
+            &pooled,
+            n,
+            e,
+            self.leaf(hb),
+            self.leaf(hb + 1),
+            c.n_actions,
+            false,
+            workers,
+            false,
+        );
+        let flow = dense_rows_mode(
+            &pooled,
+            n,
+            e,
+            self.leaf(hb + 4),
+            self.leaf(hb + 5),
+            1,
+            false,
+            workers,
+            false,
+        );
+        let fwd_logp = masked_log_softmax_rows(&fwd_logits, fwd_mask, n, c.n_actions);
+        let bwd_logp = if with_bwd {
+            let mut out = Vec::new();
+            masked_uniform_rows(bwd_mask, n, c.n_bwd_actions, &mut out);
+            out
+        } else {
+            Vec::new()
+        };
+        ForwardCache {
+            n,
+            acts: Vec::new(),
+            fwd_logp,
+            bwd_logp,
+            flow,
+            tf: Some(Box::new(TfCache { layers, pooled, pool_pos })),
+        }
+    }
+
+    fn backward(
+        &self,
+        cfg: &NativeConfig,
+        obs: &[f32],
+        cache: &ForwardCache,
+        d_fwd_logp: &[f32],
+        d_flow: &[f32],
+    ) -> Grads {
+        let c = cfg;
+        let a = &self.arch;
+        let (s_len, d, e, f) = (a.seq_len, a.token_dim, a.embed, a.ff_hidden);
+        let hd = e / a.n_heads;
+        let n = cache.n;
+        let na = c.n_actions;
+        let workers = c.workers.max(1);
+        let ns = n * s_len;
+        let tf = cache
+            .tf
+            .as_ref()
+            .expect("transformer backward requires a transformer forward cache");
+        debug_assert_eq!(d_fwd_logp.len(), n * na);
+        debug_assert_eq!(d_flow.len(), n);
+
+        let d_logits = masked_log_softmax_backward(&cache.fwd_logp, d_fwd_logp, n, na);
+
+        let mut grads: Vec<Vec<f32>> =
+            self.leaves.iter().map(|l| vec![0f32; l.tensor.len()]).collect();
+        let hb = self.idx_heads();
+
+        grads[hb] = matmul_tn(&tf.pooled, n, e, &d_logits, na, workers);
+        grads[hb + 1] = col_sum(&d_logits, n, na);
+        grads[hb + 4] = matmul_tn(&tf.pooled, n, e, d_flow, 1, workers);
+        grads[hb + 5] = vec![d_flow.iter().map(|&v| v as f64).sum::<f64>() as f32];
+
+        let mut d_pooled = matmul_nt(&d_logits, n, na, self.leaf(hb), e, workers);
+        let d_pooled_flow = matmul_nt(d_flow, n, 1, self.leaf(hb + 4), e, workers);
+        for (x, y) in d_pooled.iter_mut().zip(&d_pooled_flow) {
+            *x += *y;
+        }
+
+        // Pool backward: scatter to the frontier row (causal) or broadcast
+        // the f32 mean weight (non-causal).
+        let mut dx = vec![0f32; ns * e];
+        if a.causal {
+            for r in 0..n {
+                let p = tf.pool_pos[r];
+                dx[(r * s_len + p) * e..(r * s_len + p + 1) * e]
+                    .copy_from_slice(&d_pooled[r * e..(r + 1) * e]);
+            }
+        } else {
+            let inv = 1.0f32 / s_len as f32;
+            for r in 0..n {
+                for s in 0..s_len {
+                    for i in 0..e {
+                        dx[(r * s_len + s) * e + i] = d_pooled[r * e + i] * inv;
+                    }
+                }
+            }
+        }
+
+        let scale = 1.0 / (hd as f64).sqrt();
+        for l in (0..self.n_layers).rev() {
+            let lb = self.idx_layer(l);
+            let lc = &tf.layers[l];
+
+            // FFN backward.
+            grads[lb + 6] = matmul_tn(&lc.f1, ns, f, &dx, e, workers);
+            grads[lb + 7] = col_sum(&dx, ns, e);
+            let mut d_f1 = matmul_nt(&dx, ns, e, self.leaf(lb + 6), f, workers);
+            for (dv, &fv) in d_f1.iter_mut().zip(&lc.f1) {
+                if fv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            grads[lb + 4] = matmul_tn(&lc.h2, ns, e, &d_f1, f, workers);
+            grads[lb + 5] = col_sum(&d_f1, ns, f);
+            let d_h2 = matmul_nt(&d_f1, ns, f, self.leaf(lb + 4), e, workers);
+
+            // LN2 backward into the post-attention residual stream.
+            let mut dx_mid = dx.clone();
+            let mut dg2 = vec![0f64; e];
+            let mut db2 = vec![0f64; e];
+            for rs in 0..ns {
+                ln_backward_row(
+                    &d_h2[rs * e..(rs + 1) * e],
+                    &lc.x_mid[rs * e..(rs + 1) * e],
+                    lc.st2[rs],
+                    self.leaf(lb + 10),
+                    &mut dx_mid[rs * e..(rs + 1) * e],
+                    &mut dg2,
+                    &mut db2,
+                );
+            }
+            for i in 0..e {
+                grads[lb + 10][i] = dg2[i] as f32;
+                grads[lb + 11][i] = db2[i] as f32;
+            }
+
+            // Attention backward.
+            grads[lb + 2] = matmul_tn(&lc.att_out, ns, e, &dx_mid, e, workers);
+            grads[lb + 3] = col_sum(&dx_mid, ns, e);
+            let d_att_out = matmul_nt(&dx_mid, ns, e, self.leaf(lb + 2), e, workers);
+            let mut d_qkv = vec![0f32; ns * 3 * e];
+            // f64 per-(row, head) scratch; causal zeros in the cached
+            // probabilities make the full-S loops correct in both modes.
+            let mut d_att = vec![0f64; s_len * s_len];
+            let mut d_score = vec![0f64; s_len * s_len];
+            for r in 0..n {
+                let qkv = &lc.qkv[r * s_len * 3 * e..(r + 1) * s_len * 3 * e];
+                for hh in 0..a.n_heads {
+                    let att =
+                        &lc.att[((r * a.n_heads + hh) * s_len) * s_len..][..s_len * s_len];
+                    let q_at = |s: usize, i: usize| qkv[s * 3 * e + hh * hd + i] as f64;
+                    let k_at = |s: usize, i: usize| qkv[s * 3 * e + e + hh * hd + i] as f64;
+                    let v_at =
+                        |s: usize, i: usize| qkv[s * 3 * e + 2 * e + hh * hd + i] as f64;
+                    let dout_at =
+                        |s: usize, i: usize| d_att_out[(r * s_len + s) * e + hh * hd + i] as f64;
+                    // d_v[k] = Σ_q att[q][k] · d_out[q]
+                    for k in 0..s_len {
+                        for i in 0..hd {
+                            let mut acc = 0f64;
+                            for q in 0..s_len {
+                                acc += att[q * s_len + k] as f64 * dout_at(q, i);
+                            }
+                            d_qkv[(r * s_len + k) * 3 * e + 2 * e + hh * hd + i] = acc as f32;
+                        }
+                    }
+                    // d_att[q][k] = d_out[q] · v[k]
+                    for q in 0..s_len {
+                        for k in 0..s_len {
+                            let mut acc = 0f64;
+                            for i in 0..hd {
+                                acc += dout_at(q, i) * v_at(k, i);
+                            }
+                            d_att[q * s_len + k] = acc;
+                        }
+                    }
+                    // Softmax backward: d_score = att ⊙ (d_att − Σ_k d_att ⊙ att)
+                    for q in 0..s_len {
+                        let mut rowsum = 0f64;
+                        for k in 0..s_len {
+                            rowsum += d_att[q * s_len + k] * att[q * s_len + k] as f64;
+                        }
+                        for k in 0..s_len {
+                            d_score[q * s_len + k] =
+                                att[q * s_len + k] as f64 * (d_att[q * s_len + k] - rowsum);
+                        }
+                    }
+                    // d_q[q] = Σ_k d_score[q][k] · k[k] · scale
+                    for q in 0..s_len {
+                        for i in 0..hd {
+                            let mut acc = 0f64;
+                            for k in 0..s_len {
+                                acc += d_score[q * s_len + k] * k_at(k, i);
+                            }
+                            d_qkv[(r * s_len + q) * 3 * e + hh * hd + i] =
+                                (acc * scale) as f32;
+                        }
+                    }
+                    // d_k[k] = Σ_q d_score[q][k] · q[q] · scale
+                    for k in 0..s_len {
+                        for i in 0..hd {
+                            let mut acc = 0f64;
+                            for q in 0..s_len {
+                                acc += d_score[q * s_len + k] * q_at(q, i);
+                            }
+                            d_qkv[(r * s_len + k) * 3 * e + e + hh * hd + i] =
+                                (acc * scale) as f32;
+                        }
+                    }
+                }
+            }
+            grads[lb] = matmul_tn(&lc.h1, ns, e, &d_qkv, 3 * e, workers);
+            grads[lb + 1] = col_sum(&d_qkv, ns, 3 * e);
+            let d_h1 = matmul_nt(&d_qkv, ns, 3 * e, self.leaf(lb), e, workers);
+
+            // LN1 backward into the block's input stream.
+            dx = dx_mid;
+            let mut dg1 = vec![0f64; e];
+            let mut db1 = vec![0f64; e];
+            for rs in 0..ns {
+                ln_backward_row(
+                    &d_h1[rs * e..(rs + 1) * e],
+                    &lc.x_in[rs * e..(rs + 1) * e],
+                    lc.st1[rs],
+                    self.leaf(lb + 8),
+                    &mut dx[rs * e..(rs + 1) * e],
+                    &mut dg1,
+                    &mut db1,
+                );
+            }
+            for i in 0..e {
+                grads[lb + 8][i] = dg1[i] as f32;
+                grads[lb + 9][i] = db1[i] as f32;
+            }
+        }
+
+        // Stem backward: positional table (f64 column sums over rows),
+        // then the embedding projection.
+        let mut g_pos = vec![0f64; s_len * e];
+        for r in 0..n {
+            for s in 0..s_len {
+                for i in 0..e {
+                    g_pos[s * e + i] += dx[(r * s_len + s) * e + i] as f64;
+                }
+            }
+        }
+        for (gp, &v) in grads[self.idx_pos()].iter_mut().zip(&g_pos) {
+            *gp = v as f32;
+        }
+        grads[self.idx_embed_w()] = matmul_tn(obs, ns, d, &dx, e, workers);
+        grads[self.idx_embed_b()] = col_sum(&dx, ns, e);
+
+        Grads { leaves: grads }
+    }
+
+    fn box_clone(&self) -> Box<dyn Model> {
+        Box::new(self.clone())
+    }
+
+    fn as_transformer(&self) -> Option<&TransformerModel> {
+        Some(self)
+    }
+}
+
+/// LayerNorm one row: f64 mean / biased variance / rstd (eps 1e-5),
+/// `y = x̂·g + b` cast to f32. Returns `(mean, rstd)` for backward.
+fn ln_row(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) -> (f64, f64) {
+    let e = x.len();
+    let mut mu = 0f64;
+    for &v in x {
+        mu += v as f64;
+    }
+    mu /= e as f64;
+    let mut var = 0f64;
+    for &v in x {
+        let dv = v as f64 - mu;
+        var += dv * dv;
+    }
+    var /= e as f64;
+    let rstd = 1.0 / (var + 1e-5).sqrt();
+    for i in 0..e {
+        out[i] = ((x[i] as f64 - mu) * rstd * g[i] as f64 + b[i] as f64) as f32;
+    }
+    (mu, rstd)
+}
+
+/// LayerNorm backward one row:
+/// `dx = rstd·(dx̂ − mean(dx̂) − x̂·mean(dx̂·x̂))`, accumulated onto
+/// `dx_acc` as f32 (matching the residual add); `dg += dy·x̂`, `db += dy`
+/// stay in f64 across the batch.
+fn ln_backward_row(
+    dy: &[f32],
+    x: &[f32],
+    (mu, rstd): (f64, f64),
+    g: &[f32],
+    dx_acc: &mut [f32],
+    dg: &mut [f64],
+    db: &mut [f64],
+) {
+    let e = x.len();
+    let mut m1 = 0f64;
+    let mut m2 = 0f64;
+    for i in 0..e {
+        let xhat = (x[i] as f64 - mu) * rstd;
+        let dyf = dy[i] as f64;
+        dg[i] += dyf * xhat;
+        db[i] += dyf;
+        let dxhat = dyf * g[i] as f64;
+        m1 += dxhat;
+        m2 += dxhat * xhat;
+    }
+    m1 /= e as f64;
+    m2 /= e as f64;
+    for i in 0..e {
+        let xhat = (x[i] as f64 - mu) * rstd;
+        let dxhat = dy[i] as f64 * g[i] as f64;
+        dx_acc[i] += (rstd * (dxhat - m1 - xhat * m2)) as f32;
+    }
+}
+
+/// One (query, head) attention row over `n_keys` keys: f64 ascending-key
+/// score dots (· 1/√hd), f64 softmax with probabilities cast to f32 into
+/// `att`, then the value mix accumulated in f64 ascending-key order.
+///
+/// `keys`/`vals` are row-major buffers whose key `k` head-slice starts at
+/// `k·stride + off` — the batched path points both at the fused `[S, 3E]`
+/// qkv block, the KV path at contiguous `[n_keys, E]` scratch. Reads and
+/// arithmetic order are identical either way, which is what the bitwise
+/// KV-equals-full guarantee rests on.
+#[allow(clippy::too_many_arguments)]
+fn attn_row(
+    q: &[f32],
+    hd: usize,
+    keys: &[f32],
+    k_stride: usize,
+    k_off: usize,
+    vals: &[f32],
+    v_stride: usize,
+    v_off: usize,
+    n_keys: usize,
+    att: &mut [f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), hd);
+    debug_assert!(att.len() >= n_keys && out.len() == hd);
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut mx = f64::NEG_INFINITY;
+    let mut scores = [0f64; 64];
+    let scores = if n_keys <= 64 {
+        &mut scores[..n_keys]
+    } else {
+        // Fallback for very long sequences; heap-allocating per call.
+        return attn_row_long(
+            q, hd, keys, k_stride, k_off, vals, v_stride, v_off, n_keys, att, out,
+        );
+    };
+    for k in 0..n_keys {
+        let kb = &keys[k * k_stride + k_off..k * k_stride + k_off + hd];
+        let mut acc = 0f64;
+        for i in 0..hd {
+            acc += q[i] as f64 * kb[i] as f64;
+        }
+        let sc = acc * scale;
+        scores[k] = sc;
+        if sc > mx {
+            mx = sc;
+        }
+    }
+    let mut sum = 0f64;
+    for k in 0..n_keys {
+        scores[k] = (scores[k] - mx).exp();
+        sum += scores[k];
+    }
+    for k in 0..n_keys {
+        att[k] = (scores[k] / sum) as f32;
+    }
+    for i in 0..hd {
+        let mut acc = 0f64;
+        for k in 0..n_keys {
+            acc += att[k] as f64 * vals[k * v_stride + v_off + i] as f64;
+        }
+        out[i] = acc as f32;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn attn_row_long(
+    q: &[f32],
+    hd: usize,
+    keys: &[f32],
+    k_stride: usize,
+    k_off: usize,
+    vals: &[f32],
+    v_stride: usize,
+    v_off: usize,
+    n_keys: usize,
+    att: &mut [f32],
+    out: &mut [f32],
+) {
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut scores = vec![0f64; n_keys];
+    let mut mx = f64::NEG_INFINITY;
+    for k in 0..n_keys {
+        let kb = &keys[k * k_stride + k_off..k * k_stride + k_off + hd];
+        let mut acc = 0f64;
+        for i in 0..hd {
+            acc += q[i] as f64 * kb[i] as f64;
+        }
+        scores[k] = acc * scale;
+        if scores[k] > mx {
+            mx = scores[k];
+        }
+    }
+    let mut sum = 0f64;
+    for k in 0..n_keys {
+        scores[k] = (scores[k] - mx).exp();
+        sum += scores[k];
+    }
+    for k in 0..n_keys {
+        att[k] = (scores[k] / sum) as f32;
+    }
+    for i in 0..hd {
+        let mut acc = 0f64;
+        for k in 0..n_keys {
+            acc += att[k] as f64 * vals[k * v_stride + v_off + i] as f64;
+        }
+        out[i] = acc as f32;
+    }
+}

@@ -95,10 +95,49 @@ pub fn check_env_shape(
     Ok(())
 }
 
+/// Model-aware extension of [`check_env_shape`]: a policy that imposes a
+/// `[seq_len, token_dim]` factorization on the flat observation (the
+/// transformer — [`BatchPolicy::token_shape`]) is only compatible with an
+/// env whose observations *are* that token grid
+/// ([`crate::envs::EnvSpec::token_shape`]). Flat policies (`None`) accept
+/// any env the plain shape check accepts. Used on the serve hot-swap and
+/// checkpoint-resume paths, where the env is fixed and the incoming policy
+/// is not.
+pub fn check_env_token_shape(
+    spec: &crate::envs::EnvSpec,
+    shape: &PolicyShape,
+    token_shape: Option<(usize, usize)>,
+) -> anyhow::Result<()> {
+    check_env_shape(spec, shape)?;
+    if let Some((s, d)) = token_shape {
+        match spec.token_shape {
+            Some((es, ed)) => anyhow::ensure!(
+                (es, ed) == (s, d),
+                "policy tokenizes observations as {s}×{d} but the env's token \
+                 grid is {es}×{ed}"
+            ),
+            None => anyhow::bail!(
+                "policy tokenizes observations as {s}×{d} but the env has no \
+                 token structure (flat observations; use an mlp policy)"
+            ),
+        }
+    }
+    Ok(())
+}
+
 /// One fixed-shape policy dispatch.
 pub trait BatchPolicy {
     /// The dispatch shape (constant over the policy's lifetime).
     fn shape(&self) -> PolicyShape;
+
+    /// The `[seq_len, token_dim]` factorization this policy imposes on the
+    /// flat observation, if any. `None` (the default) means the policy
+    /// consumes observations flat and is compatible with any env of the
+    /// right `obs_dim`; `Some` engages the stricter
+    /// [`check_env_token_shape`] compatibility rule.
+    fn token_shape(&self) -> Option<(usize, usize)> {
+        None
+    }
 
     /// Evaluate the policy on a full batch. Inputs are row-major
     /// `[B, obs_dim]`, `[B, n_actions]`, `[B, n_bwd_actions]`; returns

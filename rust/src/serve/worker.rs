@@ -17,8 +17,8 @@ use super::request::{SampleOutput, SampleRequest, SampleTicket, TicketShared};
 use super::sampler::{sample_stream, TrajJob, TrajResult};
 use super::stats::{ServeSnapshot, ServeStats};
 use super::traj_seed;
-use crate::envs::VecEnv;
-use crate::runtime::policy::{BatchPolicy, PolicyShape};
+use crate::envs::{EnvSpec, VecEnv};
+use crate::runtime::policy::{check_env_token_shape, BatchPolicy, PolicyShape};
 use crate::telemetry::Registry;
 use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
@@ -41,6 +41,9 @@ struct SwappablePolicy {
     current: Box<dyn BatchPolicy>,
     slot: SwapSlot,
     stats: Arc<ServeStats>,
+    /// Spec of the env this worker serves — the fixed side of the swap
+    /// compatibility check.
+    spec: EnvSpec,
 }
 
 impl SwappablePolicy {
@@ -48,13 +51,17 @@ impl SwappablePolicy {
         let Ok(mut slot) = self.slot.try_lock() else { return };
         let Some(next) = slot.take() else { return };
         drop(slot);
-        if next.shape() == self.current.shape() {
+        if next.shape() == self.current.shape()
+            && check_env_token_shape(&self.spec, &next.shape(), next.token_shape()).is_ok()
+        {
             self.current = next;
             self.stats.policy_swaps.inc();
         } else {
-            // A mis-shaped policy would corrupt the running slot table;
-            // drop it and count the rejection instead of poisoning the
-            // service.
+            // A mis-shaped policy would corrupt the running slot table, and
+            // one that factorizes observations into the wrong token grid
+            // (transformer trained for a different env) would silently
+            // misread every row; drop it and count the rejection instead of
+            // poisoning the service.
             self.stats.swaps_rejected.inc();
         }
     }
@@ -63,6 +70,10 @@ impl SwappablePolicy {
 impl BatchPolicy for SwappablePolicy {
     fn shape(&self) -> PolicyShape {
         self.current.shape()
+    }
+
+    fn token_shape(&self) -> Option<(usize, usize)> {
+        self.current.token_shape()
     }
 
     fn eval(
@@ -274,8 +285,9 @@ fn worker_loop<E, F>(
     E: VecEnv,
     F: FnOnce() -> anyhow::Result<Box<dyn BatchPolicy>>,
 {
+    let spec = env.spec();
     let mut policy = match policy_factory() {
-        Ok(p) => SwappablePolicy { current: p, slot: swap, stats: Arc::clone(&stats) },
+        Ok(p) => SwappablePolicy { current: p, slot: swap, stats: Arc::clone(&stats), spec },
         Err(e) => {
             // Refuse service: fail the backlog and all future submissions.
             queue.close();
@@ -519,6 +531,55 @@ mod tests {
         let snap = svc.stats();
         assert_eq!(snap.swaps_rejected, 1);
         assert_eq!(snap.policy_swaps, 0);
+        svc.shutdown();
+    }
+
+    /// Model-aware swap gate: a transformer policy whose token grid
+    /// factorizes the right `obs_dim` the wrong way (3×4 over hypergrid's
+    /// 2×6) passes the plain shape check but is rejected by the token-shape
+    /// check; one that matches the env's grid swaps in and serves.
+    #[test]
+    fn hot_swap_rejects_token_grid_mismatch_and_accepts_match() {
+        use crate::runtime::{ModelSpec, NativeBackend, NativeConfig, TransformerArch};
+        let env = HypergridEnv::new(2, 6, HypergridReward::standard(6));
+        let svc = service(4);
+
+        // Same PolicyShape (obs_dim 12), wrong factorization: 3×4 ≠ 2×6.
+        let arch = |seq_len, token_dim| TransformerArch {
+            seq_len,
+            token_dim,
+            embed: 8,
+            n_heads: 2,
+            ff_hidden: 16,
+            causal: false,
+        };
+        let bad = NativeBackend::new(
+            NativeConfig::for_env(&env, 4, "tb")
+                .with_model(ModelSpec::Transformer(arch(3, 4))),
+            5,
+        )
+        .unwrap()
+        .to_policy();
+        svc.hot_swap(Box::new(bad));
+        let outs = svc.sample(6, 11).unwrap();
+        assert_eq!(outs.len(), 6, "service keeps serving after a rejected swap");
+        assert_eq!(svc.stats().swaps_rejected, 1);
+        assert_eq!(svc.stats().policy_swaps, 0);
+
+        // Matching grid (2×6): the swap applies and the service serves from
+        // the transformer.
+        let good = NativeBackend::new(
+            NativeConfig::for_env(&env, 4, "tb")
+                .with_model(ModelSpec::Transformer(arch(2, 6))),
+            5,
+        )
+        .unwrap()
+        .to_policy();
+        svc.hot_swap(Box::new(good));
+        let outs = svc.sample(6, 12).unwrap();
+        assert_eq!(outs.len(), 6);
+        assert_eq!(svc.stats().policy_swaps, 1);
+        assert_eq!(svc.stats().swaps_rejected, 1);
         svc.shutdown();
     }
 
