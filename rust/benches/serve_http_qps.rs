@@ -1,0 +1,202 @@
+//! serve_http_qps — end-to-end HTTP sampling throughput (requests/second)
+//! of the network front end: many concurrent keep-alive clients posting
+//! mixed-size `/sample` requests over real TCP sockets, multiplexed onto
+//! one slot-refill [`SamplerService`].
+//!
+//! Two workload rows:
+//!   - `hypergrid_mlp` — the native MLP policy on hypergrid_small (mixed
+//!     trajectory lengths from the grid walk),
+//!   - `seq_transformer_kv` — the native transformer on seq_small with its
+//!     per-slot KV cache on (the serving configuration).
+//!
+//! Every measured request crosses the full stack: HTTP parse → admission
+//! (bounded queue) → per-client fairness lane → slot-refill drain →
+//! JSON response. The queue capacity is set well above the in-flight
+//! request count so the bench measures throughput, not shedding; the
+//! `serve.shed` counter is exported as meta and expected to be 0.
+//!
+//! Run:   cargo bench --bench serve_http_qps
+//! Env:   GFNX_HTTP_CLIENTS   concurrent connections (default 8)
+//!        GFNX_HTTP_REQS      requests per client per window (default 12)
+//!        GFNX_HTTP_B         service slot-table width (default 32)
+//!        GFNX_BENCH_REPEATS  timed windows (default 3)
+//!
+//! Emits `BENCH_http.json` (see `bench::harness::BenchJson`).
+
+use gfnx::bench::harness::{itps_json, measure_items_per_sec, BenchJson, BenchTable};
+use gfnx::coordinator::registry::{self, EnvDriver, EnvFamily, EnvParams};
+use gfnx::coordinator::rollout::ExtraSource;
+use gfnx::envs::VecEnv;
+use gfnx::runtime::{BatchPolicy, ModelSpec, NativeBackend, NativeConfig};
+use gfnx::serve::conn::HttpClient;
+use gfnx::serve::{HttpServer, HttpServerConfig, SamplerService, ServeIdentity, ServeSnapshot};
+use gfnx::telemetry::Registry;
+use gfnx::util::json::Json;
+use gfnx::util::stats::ItPerSec;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One HTTP throughput row: stand up the full server stack for this env,
+/// hammer it with concurrent keep-alive clients, tear it down.
+struct HttpWorkload {
+    transformer: bool,
+    b: usize,
+    clients: usize,
+    reqs_per_client: usize,
+    repeats: usize,
+}
+
+/// Request sizes cycled across clients/requests — small pings mixed with
+/// batch pulls, so the worker's round-robin interleaving is exercised.
+const REQUEST_NS: [usize; 4] = [1, 4, 16, 48];
+
+impl EnvDriver for HttpWorkload {
+    type Out = (ItPerSec, u64, ServeSnapshot);
+
+    fn drive<E>(
+        self,
+        env: &E,
+        _extra: &ExtraSource<'_, E>,
+        fam: &'static EnvFamily,
+        config: &str,
+    ) -> anyhow::Result<(ItPerSec, u64, ServeSnapshot)>
+    where
+        E: VecEnv + Clone + Send + Sync + 'static,
+        E::State: Clone,
+        E::Obj: PartialEq + std::fmt::Debug + Send + 'static + gfnx::serve::ObjJson,
+    {
+        let mut cfg = NativeConfig::for_env(env, self.b, "tb").with_hidden(64);
+        if self.transformer {
+            let arch = registry::transformer_arch(fam, &env.spec())?;
+            cfg = cfg.with_model(ModelSpec::Transformer(arch));
+        }
+        let policy = NativeBackend::new(cfg, 0)?
+            .to_policy()
+            .with_fastmath(gfnx::runtime::fastmath_from_env())
+            .with_kv_cache(true);
+        let factory = move || Ok(Box::new(policy) as Box<dyn BatchPolicy>);
+        let svc = Arc::new(SamplerService::spawn_with(
+            env.clone(),
+            factory,
+            Arc::new(Registry::new()),
+            Some(4096),
+        ));
+        let identity = ServeIdentity {
+            family: fam.name.to_string(),
+            config: config.to_string(),
+            model: if self.transformer { "transformer" } else { "mlp" }.to_string(),
+        };
+        let http = HttpServer::serve(
+            "127.0.0.1:0",
+            Arc::clone(&svc),
+            identity,
+            HttpServerConfig::default(),
+        )?;
+        let addr = http.local_addr().to_string();
+
+        let total_objs = Arc::new(AtomicU64::new(0));
+        let mut window = 0u64;
+        let qps = measure_items_per_sec(1, self.repeats, || {
+            window += 1;
+            let handles: Vec<_> = (0..self.clients)
+                .map(|c| {
+                    let addr = addr.clone();
+                    let objs = Arc::clone(&total_objs);
+                    let reqs = self.reqs_per_client;
+                    let w = window;
+                    std::thread::spawn(move || {
+                        let mut client = HttpClient::connect(&addr).expect("connect");
+                        let mut done = 0usize;
+                        for r in 0..reqs {
+                            let n = REQUEST_NS[(c + r) % REQUEST_NS.len()];
+                            let seed = w * 1_000_000 + (c as u64) * 1000 + r as u64;
+                            let body = format!("{{\"n\": {n}, \"seed\": {seed}}}");
+                            let (status, resp) =
+                                client.post_json("/sample", &body).expect("request");
+                            assert_eq!(
+                                status,
+                                200,
+                                "sample failed: {}",
+                                String::from_utf8_lossy(&resp)
+                            );
+                            objs.fetch_add(n as u64, Ordering::Relaxed);
+                            done += 1;
+                        }
+                        done
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("client thread")).sum()
+        });
+
+        http.shutdown();
+        let snap = svc.stats();
+        drop(svc);
+        Ok((qps, total_objs.load(Ordering::Relaxed), snap))
+    }
+}
+
+fn envv(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let clients = envv("GFNX_HTTP_CLIENTS", 8);
+    let reqs = envv("GFNX_HTTP_REQS", 12);
+    let b = envv("GFNX_HTTP_B", 32);
+    let repeats = envv("GFNX_BENCH_REPEATS", 3);
+    println!(
+        "workload: {clients} concurrent connections x {reqs} keep-alive requests/window, \
+         n cycled over {REQUEST_NS:?}, slot width {b}"
+    );
+
+    let rows = [
+        ("hypergrid_mlp", "hypergrid_small", false),
+        ("seq_transformer_kv", "seq_small", true),
+    ];
+    let mut table = BenchTable::new(
+        "serve_http_qps — HTTP requests/second through the full network stack",
+        &["Workload", "reqs/s", "objs served", "Occupancy"],
+    );
+    let mut bj = BenchJson::new("http");
+    bj.meta("clients", Json::Num(clients as f64));
+    bj.meta("reqs_per_client", Json::Num(reqs as f64));
+    bj.meta("batch", Json::Num(b as f64));
+    bj.meta("repeats", Json::Num(repeats as f64));
+    bj.meta(
+        "request_ns",
+        Json::Arr(REQUEST_NS.iter().map(|&n| Json::Num(n as f64)).collect()),
+    );
+
+    for (label, config, transformer) in rows {
+        let (qps, objs, snap) = registry::with_env(
+            config,
+            EnvParams::default(),
+            HttpWorkload { transformer, b, clients, reqs_per_client: reqs, repeats },
+        )
+        .expect(config);
+        assert_eq!(snap.shed, 0, "throughput bench should not shed");
+        table.row(&[
+            label.to_string(),
+            qps.to_string(),
+            objs.to_string(),
+            format!("{:.1}%", 100.0 * snap.occupancy()),
+        ]);
+        bj.row(Json::obj(vec![
+            ("workload", Json::Str(label.to_string())),
+            ("config", Json::Str(config.to_string())),
+            ("requests_per_sec", itps_json(&qps)),
+            ("objects_served", Json::Num(objs as f64)),
+            ("occupancy", Json::Num(snap.occupancy())),
+            ("shed", Json::Num(snap.shed as f64)),
+            ("requests_completed", Json::Num(snap.requests_completed as f64)),
+        ]));
+        println!("{label}: {qps} reqs/s ({objs} objects)");
+    }
+    table.print();
+
+    match bj.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("BENCH_http.json write failed: {e}"),
+    }
+}

@@ -85,6 +85,7 @@ impl EnvDriver for TransformerDecode {
                                 request: 0,
                                 traj_index: next,
                                 seed: traj_seed(seed_base, next as u64),
+                                temperature: 1.0,
                             };
                             next += 1;
                             Some(j)
@@ -206,6 +207,7 @@ fn main() {
                             request: 0,
                             traj_index: next,
                             seed: gfnx::serve::traj_seed(seed_base, next as u64),
+                            temperature: 1.0,
                         };
                         next += 1;
                         Some(j)

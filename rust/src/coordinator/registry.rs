@@ -329,10 +329,13 @@ impl Default for EnvParams {
 /// The bounds are the superset the CLI's engine/serve paths need: every
 /// registered env is an owned-data value (`Clone + Send + Sync + 'static`),
 /// so drivers can clone one into a [`SamplerService`] worker or share it
-/// across the engine's actor threads; implementors that need less may
-/// declare weaker bounds on their `drive`.
+/// across the engine's actor threads, and every family's terminal object
+/// is JSON-serializable ([`ObjJson`]) so the HTTP front end can put it on
+/// the wire; implementors that need less may declare weaker bounds on
+/// their `drive`.
 ///
 /// [`SamplerService`]: crate::serve::SamplerService
+/// [`ObjJson`]: crate::serve::ObjJson
 pub trait EnvDriver {
     type Out;
     fn drive<E>(
@@ -345,7 +348,7 @@ pub trait EnvDriver {
     where
         E: VecEnv + Clone + Send + Sync + 'static,
         E::State: Clone,
-        E::Obj: PartialEq + std::fmt::Debug + Send + 'static;
+        E::Obj: PartialEq + std::fmt::Debug + Send + 'static + crate::serve::ObjJson;
 }
 
 /// Build the concrete environment for `config` (generating any dataset it

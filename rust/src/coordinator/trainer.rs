@@ -312,6 +312,7 @@ impl<'a, E: VecEnv, B: Backend> Trainer<'a, E, B> {
                         request: 0,
                         traj_index: next,
                         seed: traj_seed(seed, next as u64),
+                        temperature: 1.0,
                     };
                     next += 1;
                     Some(job)

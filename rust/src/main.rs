@@ -17,6 +17,14 @@
 //!                [--ebgfn [--sigma S] [--samples N]]   EB-GFN (ising only)
 //!                [--telemetry | --telemetry-file <p.jsonl>]   hot-path spans
 //!                [--telemetry-interval <secs>]   export cadence
+//!                [--listen <addr>]   (with --serve: HTTP endpoint over the
+//!                                     live hot-swapped policy)
+//!   serve        --env <family> | --config <name>  --listen <addr>
+//!                [--resume <ckpt>] [--model <mlp|transformer>]
+//!                [--queue-cap N] [--deadline-ms D] [--addr-file <p>]
+//!                [--serve-duration <secs>]
+//!                (standalone HTTP sampling server; see README "Serving
+//!                over HTTP")
 //!   list-configs
 //!   info         --config <name> --loss <l>   (print the artifact manifest)
 //!   check-bench  <BENCH_*.json...>   (validate emitted bench documents)
@@ -42,7 +50,7 @@ use gfnx::envs::ising::IsingEnv;
 use gfnx::envs::VecEnv;
 use gfnx::reward::ising::torus_adjacency;
 use gfnx::runtime::{Artifact, Backend, NativeBackend, NativeConfig, NativePolicy};
-use gfnx::serve::SamplerService;
+use gfnx::serve::{HttpServer, HttpServerConfig, ObjJson, SamplerService, ServeIdentity};
 use gfnx::telemetry;
 use gfnx::util::cli::{Args, Cli};
 use gfnx::util::linalg::Mat;
@@ -59,7 +67,10 @@ fn main() {
         "gfnx",
         "Rust+JAX+Pallas GFlowNet benchmark infrastructure (gfnx reproduction)",
     )
-    .positional("command", "train | list-configs | info | check-bench <BENCH_*.json...>")
+    .positional(
+        "command",
+        "train | serve | list-configs | info | check-bench <BENCH_*.json...>",
+    )
     .flag(
         "config",
         "",
@@ -99,6 +110,36 @@ fn main() {
     )
     .switch("serve", "serve the improving policy while training (engine hot-swap)")
     .flag("serve-samples", "64", "objects sampled from the served policy after training")
+    .flag(
+        "listen",
+        "",
+        "HTTP listen address (e.g. 127.0.0.1:8080; port 0 = ephemeral). With \
+         the serve command: required. With train --serve: also expose the \
+         live hot-swapped policy over HTTP",
+    )
+    .flag(
+        "queue-cap",
+        "256",
+        "bounded admission-queue depth for the sampling service; over-capacity \
+         requests are shed with 503 (0 = unbounded)",
+    )
+    .flag(
+        "deadline-ms",
+        "30000",
+        "default per-request deadline for HTTP sampling (client deadline_ms \
+         overrides, clamped to the server max)",
+    )
+    .flag(
+        "addr-file",
+        "",
+        "write the bound HTTP address to this file (ephemeral-port discovery \
+         for scripts/CI)",
+    )
+    .flag(
+        "serve-duration",
+        "0",
+        "serve command: seconds to serve before exiting (0 = until killed)",
+    )
     .flag("save", "", "checkpoint path (engine: saved on every publish; serial: at end)")
     .flag("resume", "", "resume training from a checkpoint file (native backend)")
     .switch("ebgfn", "EB-GFN joint EBM+GFN training (ising only; paper Table 8)")
@@ -141,6 +182,12 @@ fn main() {
             let out = train(&args);
             // Print/export the registry even on failure — a run that died
             // mid-training is exactly when the phase timings matter.
+            tel.finish();
+            out
+        })(),
+        "serve" => (|| {
+            let tel = telemetry_setup(&args)?;
+            let out = serve_cmd(&args);
             tel.finish();
             out
         })(),
@@ -254,22 +301,29 @@ fn train(args: &Args) -> anyhow::Result<()> {
     }
     let (fam, config) = registry::resolve(env_flag, config_flag)?;
     let loss = args.get("loss");
+    // Satellite fix: GFNX_FASTMATH is resolved exactly once per process and
+    // threaded through — the engine, the serve path and EB-GFN used to each
+    // re-read the env var, so a mid-run setenv (or a future per-site
+    // default drift) could leave them disagreeing about accumulation mode.
+    let fastmath = gfnx::runtime::fastmath_from_env();
     if args.get_bool("ebgfn") {
         anyhow::ensure!(
             fam.name == "ising",
             "--ebgfn is the Ising Table 8 workload; pass --env ising"
         );
-        return train_ebgfn(args, &config, registry::ising_side(&config)?);
+        return train_ebgfn(args, &config, registry::ising_side(&config)?, fastmath);
     }
     registry::check_loss(fam, loss)?;
     let params = EnvParams { seed: args.get_u64("seed"), sigma: args.get_f64("sigma") };
-    registry::with_env(&config, params, TrainDriver { args })
+    registry::with_env(&config, params, TrainDriver { args, fastmath })
 }
 
 /// The CLI's [`EnvDriver`]: backend selection + replay wiring + the train
 /// loop, generic over whatever env the registry built.
 struct TrainDriver<'a> {
     args: &'a Args,
+    /// `GFNX_FASTMATH`, resolved once at startup.
+    fastmath: bool,
 }
 
 impl EnvDriver for TrainDriver<'_> {
@@ -285,10 +339,144 @@ impl EnvDriver for TrainDriver<'_> {
     where
         E: VecEnv + Clone + Send + Sync + 'static,
         E::State: Clone,
-        E::Obj: PartialEq + std::fmt::Debug + Send + 'static,
+        E::Obj: PartialEq + std::fmt::Debug + Send + 'static + ObjJson,
     {
-        train_env(self.args, config, self.args.get("loss"), env, extra, fam)
+        train_env(self.args, config, self.args.get("loss"), env, extra, fam, self.fastmath)
     }
+}
+
+/// Standalone HTTP sampling server (CLI `serve --listen <addr>`): load a
+/// checkpoint (or stand up a fresh policy) for the resolved env and serve
+/// it until `--serve-duration` elapses or the process is killed.
+fn serve_cmd(args: &Args) -> anyhow::Result<()> {
+    let (env_flag, mut config_flag) = (args.get("env"), args.get("config"));
+    if env_flag.is_empty() && config_flag.is_empty() {
+        config_flag = "hypergrid_small";
+    }
+    let (fam, config) = registry::resolve(env_flag, config_flag)?;
+    registry::check_loss(fam, args.get("loss"))?;
+    anyhow::ensure!(
+        !args.get("listen").is_empty(),
+        "serve needs --listen <addr> (e.g. --listen 127.0.0.1:8080)"
+    );
+    anyhow::ensure!(
+        args.get("backend") == "native",
+        "serve runs on the native backend (owned policies; xla's PJRT state \
+         is thread-local)"
+    );
+    let fastmath = gfnx::runtime::fastmath_from_env();
+    let params = EnvParams { seed: args.get_u64("seed"), sigma: args.get_f64("sigma") };
+    registry::with_env(&config, params, ServeDriver { args, fastmath })
+}
+
+/// [`EnvDriver`] for the standalone `serve` command.
+struct ServeDriver<'a> {
+    args: &'a Args,
+    fastmath: bool,
+}
+
+impl EnvDriver for ServeDriver<'_> {
+    type Out = ();
+
+    fn drive<E>(
+        self,
+        env: &E,
+        _extra: &ExtraSource<'_, E>,
+        fam: &'static EnvFamily,
+        config: &str,
+    ) -> anyhow::Result<()>
+    where
+        E: VecEnv + Clone + Send + Sync + 'static,
+        E::State: Clone,
+        E::Obj: PartialEq + std::fmt::Debug + Send + 'static + ObjJson,
+    {
+        serve_env(self.args, config, env, fam, self.fastmath)
+    }
+}
+
+/// Stand up the sampling service + HTTP front end for one env and block.
+fn serve_env<E>(
+    args: &Args,
+    config: &str,
+    env: &E,
+    fam: &'static EnvFamily,
+    fastmath: bool,
+) -> anyhow::Result<()>
+where
+    E: VecEnv + Clone + Send + Sync + 'static,
+    E::Obj: ObjJson + Send + 'static,
+{
+    let loss = args.get("loss");
+    let backend = native_backend_for(args, env, loss, fam)?;
+    // Serving is pure inference: fastmath per GFNX_FASTMATH, KV cache on
+    // (an O(T) decode win for causal-transformer checkpoints; a no-op for
+    // MLPs and bidirectional models).
+    let policy = backend.to_policy().with_fastmath(fastmath).with_kv_cache(true);
+    let factory = move || Ok(Box::new(policy) as Box<dyn gfnx::runtime::BatchPolicy>);
+    let reg = if telemetry::enabled() {
+        Arc::clone(telemetry::global())
+    } else {
+        Arc::new(telemetry::Registry::new())
+    };
+    let cap = match args.get_usize("queue-cap") {
+        0 => None,
+        c => Some(c),
+    };
+    let svc = Arc::new(SamplerService::spawn_with(env.clone(), factory, reg, cap));
+    let http = start_http(args, Arc::clone(&svc), fam.name, config)?;
+    log_info!(
+        "serving {config} ({}) at http://{} (queue cap {}, default deadline {} ms)",
+        backend.net().cfg.describe_model(),
+        http.local_addr(),
+        cap.map(|c| c.to_string()).unwrap_or_else(|| "unbounded".to_string()),
+        args.get_u64("deadline-ms"),
+    );
+    let dur = args.get_f64("serve-duration");
+    if dur > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(dur));
+        log_info!("serve duration elapsed; shutting down");
+    } else {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    http.shutdown();
+    let snap = svc.stats();
+    log_info!(
+        "served {} requests ({} completed, {} shed, {} timed out)",
+        snap.requests_submitted,
+        snap.requests_completed,
+        snap.shed,
+        snap.requests_timedout
+    );
+    drop(svc); // last Arc: closes the queue and joins the worker
+    Ok(())
+}
+
+/// Bind the HTTP front end over a running service; writes `--addr-file`
+/// for ephemeral-port discovery.
+fn start_http<Obj: ObjJson + Send + 'static>(
+    args: &Args,
+    svc: Arc<SamplerService<Obj>>,
+    family: &str,
+    config: &str,
+) -> anyhow::Result<HttpServer> {
+    let mut cfg = HttpServerConfig::default();
+    let dl = args.get_u64("deadline-ms");
+    anyhow::ensure!(dl > 0, "--deadline-ms must be > 0");
+    cfg.default_deadline = std::time::Duration::from_millis(dl);
+    let identity = ServeIdentity {
+        family: family.to_string(),
+        config: config.to_string(),
+        model: args.get("model").to_string(),
+    };
+    let server = HttpServer::serve(args.get("listen"), svc, identity, cfg)?;
+    let addr_file = args.get("addr-file");
+    if !addr_file.is_empty() {
+        std::fs::write(addr_file, server.local_addr().to_string())
+            .map_err(|e| anyhow::anyhow!("writing --addr-file {addr_file}: {e}"))?;
+    }
+    Ok(server)
 }
 
 /// Engine topology from the CLI flags. `None` = the serial training loop
@@ -365,10 +553,11 @@ fn train_env<E>(
     env: &E,
     extra: &ExtraSource<'_, E>,
     fam: &'static EnvFamily,
+    fastmath: bool,
 ) -> anyhow::Result<()>
 where
     E: VecEnv + Clone + Send + Sync + 'static,
-    E::Obj: Send + 'static,
+    E::Obj: Send + 'static + ObjJson,
 {
     let rc = run_config(config, loss);
     let iters = match args.get_u64("iters") {
@@ -381,7 +570,10 @@ where
         "native" => {
             let backend = native_backend_for(args, env, loss, fam)?;
             if let Some(ecfg) = engine_config(args)? {
-                return run_engine(args, config, loss, env, extra, backend, rc.explore, iters, ecfg);
+                return run_engine(
+                    args, config, loss, env, extra, backend, rc.explore, iters, ecfg, fam.name,
+                    fastmath,
+                );
             }
             anyhow::ensure!(
                 !args.get_bool("serve"),
@@ -454,13 +646,15 @@ fn run_engine<E>(
     explore: gfnx::coordinator::explore::EpsSchedule,
     iters: u64,
     cfg: EngineConfig,
+    family: &str,
+    fastmath: bool,
 ) -> anyhow::Result<()>
 where
     E: VecEnv + Clone + Send + Sync + 'static,
-    E::Obj: Send + 'static,
+    E::Obj: Send + 'static + ObjJson,
 {
     let name = format!("{config}.{loss}");
-    let svc = spawn_serve::<E>(args, env, backend.to_policy());
+    let svc = spawn_serve::<E>(args, env, backend.to_policy(), fastmath, family, config)?;
     log_info!(
         "training {name} on the async engine: {} actor(s), publish every {}, {}{}",
         cfg.actors,
@@ -468,10 +662,9 @@ where
         if cfg.sync { "sync (deterministic)" } else { "async" },
         if svc.is_some() { ", serving live" } else { "" }
     );
-    let fm = gfnx::runtime::fastmath_from_env();
     let stats = engine::train(env, &mut backend, explore, extra, &cfg, iters, |snap| {
         if let Some(svc) = &svc {
-            svc.hot_swap(Box::new(snap.policy.clone().with_fastmath(fm)));
+            svc.hot_swap(Box::new(snap.policy.clone().with_fastmath(fastmath)));
         }
         Ok(())
     })?;
@@ -479,46 +672,86 @@ where
     finish_serve(args, svc)
 }
 
+/// A live sampling service plus its (optional) HTTP front end, as spawned
+/// for `train --serve [--listen]`.
+struct ServeHandle<Obj: Send + 'static> {
+    svc: Arc<SamplerService<Obj>>,
+    http: Option<HttpServer>,
+}
+
+impl<Obj: Send + 'static> ServeHandle<Obj> {
+    fn hot_swap(&self, policy: Box<dyn gfnx::runtime::BatchPolicy + Send>) {
+        self.svc.hot_swap(policy);
+    }
+}
+
 /// Spawn the live sampling service when `--serve` is set (the worker's env
 /// is an owned clone; shared-reward envs share their `Arc`s, so EB-GFN's
-/// improving J is visible to served rewards too).
+/// improving J is visible to served rewards too). With `--listen` the
+/// service additionally gets the HTTP front end, so network clients sample
+/// from the improving policy while it trains.
 fn spawn_serve<E>(
     args: &Args,
     env: &E,
     initial: NativePolicy,
-) -> Option<SamplerService<E::Obj>>
+    fastmath: bool,
+    family: &str,
+    config: &str,
+) -> anyhow::Result<Option<ServeHandle<E::Obj>>>
 where
     E: VecEnv + Clone + Send + Sync + 'static,
-    E::Obj: Send + 'static,
+    E::Obj: Send + 'static + ObjJson,
 {
     if !args.get_bool("serve") {
-        return None;
+        anyhow::ensure!(
+            args.get("listen").is_empty(),
+            "--listen rides on the sampling service; pass --serve too"
+        );
+        return Ok(None);
     }
     // Serve-only fast accumulation: training dispatch above stays in the
     // deterministic f64 mode regardless of the env var.
-    let initial = initial.with_fastmath(gfnx::runtime::fastmath_from_env());
+    let initial = initial.with_fastmath(fastmath);
     let factory = move || Ok(Box::new(initial) as Box<dyn gfnx::runtime::BatchPolicy>);
     // Under --telemetry the service registers its serve.* metrics in the
     // global registry, so they ride the same export stream as the trainer's.
-    Some(if telemetry::enabled() {
-        SamplerService::spawn_in(env.clone(), factory, Arc::clone(telemetry::global()))
+    let reg = if telemetry::enabled() {
+        Arc::clone(telemetry::global())
     } else {
-        SamplerService::spawn(env.clone(), factory)
-    })
+        Arc::new(telemetry::Registry::new())
+    };
+    let cap = match args.get_usize("queue-cap") {
+        0 => None,
+        c => Some(c),
+    };
+    let svc = Arc::new(SamplerService::spawn_with(env.clone(), factory, reg, cap));
+    let http = if args.get("listen").is_empty() {
+        None
+    } else {
+        Some(start_http(args, Arc::clone(&svc), family, config)?)
+    };
+    Ok(Some(ServeHandle { svc, http }))
 }
 
 /// Post-training serve probe: draw `--serve-samples` objects from the live
 /// (hot-swapped) policy and print the service counters.
 fn finish_serve<Obj: Send + 'static>(
     args: &Args,
-    svc: Option<SamplerService<Obj>>,
+    handle: Option<ServeHandle<Obj>>,
 ) -> anyhow::Result<()> {
-    let Some(svc) = svc else { return Ok(()) };
+    let Some(mut handle) = handle else { return Ok(()) };
+    // Stop accepting network requests before the final probe; in-flight
+    // HTTP requests resolve first because shutdown joins the handlers.
+    if let Some(http) = handle.http.take() {
+        let addr = http.local_addr();
+        http.shutdown();
+        log_info!("http front end at {addr} shut down");
+    }
     let n = args.get_usize("serve-samples");
-    let outs = svc.sample(n, args.get_u64("seed") ^ 0x5EED_CAFE)?;
+    let outs = handle.svc.sample(n, args.get_u64("seed") ^ 0x5EED_CAFE)?;
     let mean_lr =
         outs.iter().map(|o| o.log_reward).sum::<f64>() / outs.len().max(1) as f64;
-    let snap = svc.stats();
+    let snap = handle.svc.stats();
     log_info!(
         "served {} objects from the final policy: mean log-reward {mean_lr:.3}; \
          {} hot-swap(s) applied, {} rejected, occupancy {:.2}",
@@ -534,7 +767,7 @@ fn finish_serve<Obj: Send + 'static>(
         n == 0 || snap.policy_swaps > 0,
         "--serve ran but no snapshot was ever hot-swapped into the service"
     );
-    svc.shutdown();
+    drop(handle.svc); // last Arc: closes the queue and joins the worker
     Ok(())
 }
 
@@ -629,7 +862,7 @@ fn replay_config(args: &Args) -> anyhow::Result<Option<ReplayConfig>> {
 /// The EB-GFN workload (paper §B.5, Table 8): joint CD learning of the
 /// coupling matrix J_φ and TB training of the GFlowNet sampler, from an
 /// MCMC dataset of the true model. Artifact-free on the native backend.
-fn train_ebgfn(args: &Args, config: &str, n: usize) -> anyhow::Result<()> {
+fn train_ebgfn(args: &Args, config: &str, n: usize, fastmath: bool) -> anyhow::Result<()> {
     let loss = args.get("loss");
     anyhow::ensure!(loss == "tb", "EB-GFN trains the GFlowNet with TB (got --loss {loss})");
     let sigma = args.get_f64("sigma");
@@ -675,7 +908,9 @@ fn train_ebgfn(args: &Args, config: &str, n: usize) -> anyhow::Result<()> {
                     ecfg.replay.is_none(),
                     "--replay-cap is not part of the EB-GFN Table 8 dynamics"
                 );
-                return run_ebgfn_engine(args, config, iters, &j_true, &env, reward, &mut trainer, ecfg);
+                return run_ebgfn_engine(
+                    args, config, iters, &j_true, &env, reward, &mut trainer, ecfg, fastmath,
+                );
             }
             anyhow::ensure!(
                 !args.get_bool("serve"),
@@ -710,6 +945,7 @@ fn run_ebgfn_engine(
     reward: SharedIsingReward,
     trainer: &mut EbGfnTrainer<'_, NativeBackend>,
     cfg: EngineConfig,
+    fastmath: bool,
 ) -> anyhow::Result<()> {
     use gfnx::coordinator::ebgfn::neg_log_rmse_of;
     use gfnx::coordinator::explore::EpsSchedule;
@@ -719,7 +955,10 @@ fn run_ebgfn_engine(
         args,
         env,
         trainer.backend.to_policy(),
-    );
+        fastmath,
+        "ising",
+        config,
+    )?;
     log_info!(
         "training {name} on the async engine: {} actor(s), publish every {}{}",
         cfg.actors,
@@ -732,7 +971,6 @@ fn run_ebgfn_engine(
     // the very sequence that generated the actor's rollouts.
     trainer.rng = Rng::new(cfg.seed).split();
     let mut best_nlr = f64::NEG_INFINITY;
-    let fm = gfnx::runtime::fastmath_from_env();
     let stats = {
         let mut learner = EbGfnLearner { tr: trainer };
         engine::run(
@@ -745,7 +983,7 @@ fn run_ebgfn_engine(
             |snap| {
                 best_nlr = best_nlr.max(neg_log_rmse_of(&reward, j_true));
                 if let Some(svc) = &svc {
-                    svc.hot_swap(Box::new(snap.policy.clone().with_fastmath(fm)));
+                    svc.hot_swap(Box::new(snap.policy.clone().with_fastmath(fastmath)));
                 }
                 Ok(())
             },

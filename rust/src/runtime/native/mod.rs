@@ -1471,7 +1471,12 @@ mod tests {
                 &mut policy,
                 || {
                     if next < 12 {
-                        let j = TrajJob { request: 0, traj_index: next, seed: traj_seed(4, next as u64) };
+                        let j = TrajJob {
+                            request: 0,
+                            traj_index: next,
+                            seed: traj_seed(4, next as u64),
+                            temperature: 1.0,
+                        };
                         next += 1;
                         Some(j)
                     } else {

@@ -1,0 +1,382 @@
+//! HTTP/1.1 connection plumbing for the serve front end: a hardened
+//! request reader, a response writer, and a small keep-alive client used
+//! by the integration tests and the `serve_http_qps` bench.
+//!
+//! Std-only by necessity (the image carries no hyper/tokio): requests are
+//! parsed off a blocking `TcpStream` with a short OS read timeout, so the
+//! reader can poll a shutdown flag between reads instead of blocking in
+//! the kernel forever. The subset of HTTP/1.1 implemented is exactly what
+//! the front end needs — request line, headers, `Content-Length` bodies,
+//! keep-alive — with hard caps on header and body size so a hostile peer
+//! cannot buffer us into OOM (the connection-level twin of the sampler's
+//! bounded admission queue).
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Cap on the request head (request line + headers). Generous for any
+/// legitimate client of this API.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+    /// `false` once the client sent `Connection: close`.
+    pub keep_alive: bool,
+}
+
+/// Why [`read_request`] returned without a request.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A complete request was parsed.
+    Request(Request),
+    /// The peer closed (or half-closed) the connection cleanly.
+    Eof,
+    /// The server is shutting down (`stop` was raised mid-read).
+    Stopped,
+    /// The peer sent nothing for `idle_timeout` — close the connection.
+    IdleTimeout,
+    /// Malformed or over-limit request; the caller should answer 400 and
+    /// close.
+    Bad(String),
+}
+
+/// Read one request off `stream`, polling `stop` between reads.
+///
+/// `idle_timeout` bounds how long we wait for the *start* of a request on
+/// a keep-alive connection; once bytes arrive the same budget bounds the
+/// remainder (a trickling peer cannot hold the handler hostage).
+pub fn read_request(
+    stream: &mut TcpStream,
+    max_body: usize,
+    idle_timeout: Duration,
+    stop: &AtomicBool,
+) -> ReadOutcome {
+    // Short OS timeout so the loop can notice `stop` promptly; the real
+    // deadline accounting happens here, not in the kernel.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(25)));
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let started = Instant::now();
+    // Phase 1: the head, terminated by CRLFCRLF.
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return ReadOutcome::Bad(format!(
+                "request head exceeds {MAX_HEAD_BYTES} bytes"
+            ));
+        }
+        if stop.load(Ordering::Relaxed) {
+            return ReadOutcome::Stopped;
+        }
+        if started.elapsed() > idle_timeout {
+            return ReadOutcome::IdleTimeout;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                return if buf.is_empty() {
+                    ReadOutcome::Eof
+                } else {
+                    ReadOutcome::Bad("connection closed mid-request".to_string())
+                };
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return ReadOutcome::Bad(format!("read error: {e}")),
+        }
+    };
+
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(h) => h,
+        Err(_) => return ReadOutcome::Bad("request head is not UTF-8".to_string()),
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if v.starts_with("HTTP/1.") => {
+            (m.to_string(), p.to_string())
+        }
+        _ => return ReadOutcome::Bad(format!("malformed request line {request_line:?}")),
+    };
+    let mut content_length = 0usize;
+    let mut keep_alive = true;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = match value.parse() {
+                Ok(n) => n,
+                Err(_) => {
+                    return ReadOutcome::Bad(format!("bad content-length {value:?}"))
+                }
+            };
+        } else if name.eq_ignore_ascii_case("connection")
+            && value.eq_ignore_ascii_case("close")
+        {
+            keep_alive = false;
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            // Chunked bodies are out of scope for this API; refuse rather
+            // than misparse.
+            return ReadOutcome::Bad("transfer-encoding is not supported".to_string());
+        }
+    }
+    if content_length > max_body {
+        return ReadOutcome::Bad(format!(
+            "body of {content_length} bytes exceeds the {max_body}-byte limit"
+        ));
+    }
+
+    // Phase 2: the body — whatever followed the head in the buffer, plus
+    // reads up to content-length.
+    let mut body = buf.split_off(head_end + 4);
+    while body.len() < content_length {
+        if stop.load(Ordering::Relaxed) {
+            return ReadOutcome::Stopped;
+        }
+        if started.elapsed() > idle_timeout {
+            return ReadOutcome::IdleTimeout;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return ReadOutcome::Bad("connection closed mid-body".to_string()),
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return ReadOutcome::Bad(format!("read error: {e}")),
+        }
+    }
+    body.truncate(content_length);
+    ReadOutcome::Request(Request { method, path, body, keep_alive })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Write one response. `extra_headers` are preformatted `Name: value`
+/// lines (no CRLF).
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &[u8],
+    extra_headers: &[&str],
+) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Response",
+    };
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
+        body.len()
+    );
+    for h in extra_headers {
+        head.push_str(h);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// A minimal blocking keep-alive HTTP/1.1 client, enough for the
+/// integration tests and the QPS bench (the image has no curl-equivalent
+/// crate). One connection per client; requests are serial.
+pub struct HttpClient {
+    stream: TcpStream,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> anyhow::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(HttpClient { stream })
+    }
+
+    /// Issue one request, block for the full response, return
+    /// `(status, body)`. The connection stays open for the next call.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> anyhow::Result<(u16, Vec<u8>)> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: gfnx\r\ncontent-length: {}\r\n\r\n",
+            body.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body)?;
+        self.stream.flush()?;
+
+        let mut buf: Vec<u8> = Vec::new();
+        let mut chunk = [0u8; 4096];
+        let head_end = loop {
+            if let Some(pos) = find_head_end(&buf) {
+                break pos;
+            }
+            let n = self.stream.read(&mut chunk)?;
+            anyhow::ensure!(n > 0, "server closed before a full response head");
+            buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = std::str::from_utf8(&buf[..head_end])?;
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("malformed status line {status_line:?}"))?;
+        let mut content_length = 0usize;
+        for line in lines {
+            if let Some((name, value)) = line.split_once(':') {
+                if name.eq_ignore_ascii_case("content-length") {
+                    content_length = value.trim().parse()?;
+                }
+            }
+        }
+        let mut body = buf.split_off(head_end + 4);
+        while body.len() < content_length {
+            let n = self.stream.read(&mut chunk)?;
+            anyhow::ensure!(n > 0, "server closed mid-body");
+            body.extend_from_slice(&chunk[..n]);
+        }
+        body.truncate(content_length);
+        Ok((status, body))
+    }
+
+    /// POST a JSON body.
+    pub fn post_json(&mut self, path: &str, json: &str) -> anyhow::Result<(u16, Vec<u8>)> {
+        self.request("POST", path, json.as_bytes())
+    }
+
+    /// GET a path.
+    pub fn get(&mut self, path: &str) -> anyhow::Result<(u16, Vec<u8>)> {
+        self.request("GET", path, &[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::sync::Arc;
+
+    fn serve_once<F>(handler: F) -> String
+    where
+        F: FnOnce(TcpStream) + Send + 'static,
+    {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            if let Ok((stream, _)) = listener.accept() {
+                handler(stream);
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn parses_request_with_body_and_answers() {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let addr = serve_once(move |mut s| {
+            match read_request(&mut s, 1024, Duration::from_secs(5), &stop2) {
+                ReadOutcome::Request(req) => {
+                    assert_eq!(req.method, "POST");
+                    assert_eq!(req.path, "/sample");
+                    assert_eq!(req.body, b"{\"n\":3}");
+                    assert!(req.keep_alive);
+                    write_response(&mut s, 200, b"{\"ok\":true}", &[]).unwrap();
+                }
+                other => panic!("expected a request, got {other:?}"),
+            }
+        });
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let (status, body) = c.post_json("/sample", "{\"n\":3}").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"ok\":true}");
+    }
+
+    #[test]
+    fn oversized_bodies_and_heads_are_refused() {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let addr = serve_once(move |mut s| {
+            match read_request(&mut s, 16, Duration::from_secs(5), &stop2) {
+                ReadOutcome::Bad(msg) => {
+                    assert!(msg.contains("exceeds"), "{msg}");
+                    write_response(&mut s, 400, b"{}", &[]).unwrap();
+                }
+                other => panic!("expected Bad, got {other:?}"),
+            }
+        });
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let big = "x".repeat(64);
+        let (status, _) = c.post_json("/sample", &big).unwrap();
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn clean_eof_and_keep_alive_sequences() {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let addr = serve_once(move |mut s| {
+            // Two requests on one connection, then EOF.
+            for i in 0..2 {
+                match read_request(&mut s, 1024, Duration::from_secs(5), &stop2) {
+                    ReadOutcome::Request(req) => {
+                        assert_eq!(req.path, format!("/r{i}"));
+                        write_response(&mut s, 200, b"[]", &[]).unwrap();
+                    }
+                    other => panic!("request {i}: got {other:?}"),
+                }
+            }
+            assert!(matches!(
+                read_request(&mut s, 1024, Duration::from_secs(5), &stop2),
+                ReadOutcome::Eof
+            ));
+        });
+        let mut c = HttpClient::connect(&addr).unwrap();
+        assert_eq!(c.get("/r0").unwrap().0, 200);
+        assert_eq!(c.get("/r1").unwrap().0, 200);
+        drop(c);
+        // Give the server thread a beat to observe EOF (assertions panic
+        // inside it if this fails; nothing to join here).
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    #[test]
+    fn stop_flag_interrupts_an_idle_read() {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let t0 = Instant::now();
+            let out = read_request(&mut s, 1024, Duration::from_secs(30), &stop2);
+            (t0.elapsed(), matches!(out, ReadOutcome::Stopped))
+        });
+        let _c = HttpClient::connect(&addr).unwrap(); // connect, send nothing
+        std::thread::sleep(Duration::from_millis(60));
+        stop.store(true, Ordering::Relaxed);
+        let (elapsed, stopped) = h.join().unwrap();
+        assert!(stopped, "reader must notice the stop flag");
+        assert!(elapsed < Duration::from_secs(5), "promptly: {elapsed:?}");
+    }
+}

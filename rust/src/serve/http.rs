@@ -1,0 +1,587 @@
+//! The network front end: an HTTP/1.1 server multiplexing many concurrent
+//! clients onto one [`SamplerService`].
+//!
+//! ## Routes
+//!
+//! - `POST /sample` — body `{"n": 64, "seed": 7}` plus optional
+//!   `"temperature"` (softmax temperature, default 1.0), `"deadline_ms"`
+//!   (clamped to the server's max), and `"config"`/`"model"` (validated
+//!   against what this server actually serves — a client asking for a
+//!   different checkpoint gets 400, not silently wrong samples). Answers
+//!   `200` with `{"outputs": [{"obj", "log_pf", "log_reward", "length"}…]}`,
+//!   `503` when the admission queue sheds (`Retry-After: 1`), `504` when
+//!   the request's deadline expires (in queue or mid-drain), `400` on
+//!   malformed or mismatched requests.
+//! - `GET /stats` — the service's telemetry [`Registry`] as JSON (the
+//!   `serve.*` counters/histograms/gauges), wrapped with the served
+//!   family/config/model identity.
+//! - `GET /healthz` — `{"ok": true}` liveness probe.
+//!
+//! ## Concurrency shape
+//!
+//! One accept thread (non-blocking listener polled against a stop flag)
+//! spawns a handler thread per connection, capped at
+//! [`HttpServerConfig::max_connections`] — beyond the cap a connection is
+//! answered `503` immediately and closed, the connection-level twin of
+//! queue shedding. Each connection gets a distinct fairness lane
+//! ([`SubmitOptions::client`]), so the worker round-robins trajectories
+//! across connections and a greedy client cannot starve the rest. Every
+//! request carries a deadline (client-supplied or the server default),
+//! enforced by the worker in-queue and mid-drain, and the handler waits
+//! with [`SampleTicket::wait_timeout`] at 2× the deadline so even a wedged
+//! worker cannot strand a connection.
+//!
+//! [`SampleTicket::wait_timeout`]: super::request::SampleTicket::wait_timeout
+
+use super::conn::{read_request, write_response, ReadOutcome, Request};
+use super::request::{is_timeout, SampleRequest};
+use super::worker::{SamplerService, SubmitOptions, SubmitOutcome};
+use crate::reward::parsimony::PhyloTree;
+use crate::util::json::Json;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Terminal objects a server can put on the wire. Implemented by every
+/// registered env family's `Obj` type (the registry's `EnvDriver` bound),
+/// so `serve --env <any-of-9>` type-checks.
+pub trait ObjJson {
+    fn to_json(&self) -> Json;
+}
+
+impl ObjJson for Vec<i32> {
+    fn to_json(&self) -> Json {
+        Json::Arr(self.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+}
+
+impl ObjJson for Vec<i16> {
+    fn to_json(&self) -> Json {
+        Json::Arr(self.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+}
+
+impl ObjJson for Vec<i8> {
+    fn to_json(&self) -> Json {
+        Json::Arr(self.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+}
+
+impl ObjJson for u64 {
+    /// Bayesnet adjacency masks can exceed 2^53, so a JSON number (f64)
+    /// would silently round; serialize as a decimal string.
+    fn to_json(&self) -> Json {
+        Json::Str(self.to_string())
+    }
+}
+
+impl ObjJson for PhyloTree {
+    /// Leaves as numbers, internal nodes as `[left, right]`.
+    fn to_json(&self) -> Json {
+        match self {
+            PhyloTree::Leaf(i) => Json::Num(*i as f64),
+            PhyloTree::Node(l, r) => Json::Arr(vec![l.to_json(), r.to_json()]),
+        }
+    }
+}
+
+/// What this server serves, echoed on `/stats` and validated against the
+/// optional `"config"`/`"model"` fields of sample requests.
+#[derive(Clone, Debug)]
+pub struct ServeIdentity {
+    pub family: String,
+    pub config: String,
+    /// `"mlp"` or `"transformer"` — whatever checkpoint/backend is live.
+    pub model: String,
+}
+
+/// Tunables of the HTTP front end.
+#[derive(Clone, Debug)]
+pub struct HttpServerConfig {
+    /// Concurrent-connection cap; excess connections get an immediate 503.
+    pub max_connections: usize,
+    /// Deadline applied when a request names none.
+    pub default_deadline: Duration,
+    /// Upper clamp on client-supplied `deadline_ms`.
+    pub max_deadline: Duration,
+    /// Request body cap in bytes.
+    pub max_body: usize,
+    /// Keep-alive idle window before a silent connection is closed.
+    pub idle_timeout: Duration,
+    /// Per-request sample-count cap (`n`).
+    pub max_n: usize,
+}
+
+impl Default for HttpServerConfig {
+    fn default() -> Self {
+        HttpServerConfig {
+            max_connections: 256,
+            default_deadline: Duration::from_secs(30),
+            max_deadline: Duration::from_secs(120),
+            max_body: 64 * 1024,
+            idle_timeout: Duration::from_secs(60),
+            max_n: 100_000,
+        }
+    }
+}
+
+/// A running HTTP front end. Dropping (or [`HttpServer::shutdown`]) stops
+/// the accept loop and joins every connection handler.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `listen` (e.g. `127.0.0.1:8080`, or port `0` for an ephemeral
+    /// port — read it back via [`HttpServer::local_addr`]) and serve `svc`.
+    pub fn serve<Obj>(
+        listen: &str,
+        svc: Arc<SamplerService<Obj>>,
+        identity: ServeIdentity,
+        cfg: HttpServerConfig,
+    ) -> anyhow::Result<HttpServer>
+    where
+        Obj: ObjJson + Send + 'static,
+    {
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| anyhow::anyhow!("cannot bind {listen}: {e}"))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("gfnx-http-accept".to_string())
+            .spawn(move || accept_loop(listener, svc, identity, cfg, accept_stop))
+            .expect("failed to spawn http accept thread");
+        Ok(HttpServer { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain connection handlers, join.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop<Obj>(
+    listener: TcpListener,
+    svc: Arc<SamplerService<Obj>>,
+    identity: ServeIdentity,
+    cfg: HttpServerConfig,
+    stop: Arc<AtomicBool>,
+) where
+    Obj: ObjJson + Send + 'static,
+{
+    let identity = Arc::new(identity);
+    let cfg = Arc::new(cfg);
+    let next_client = Arc::new(AtomicU64::new(1)); // 0 is the anonymous lane
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    let conn_refused = svc.registry().counter("serve.http.conn_refused");
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                handlers.retain(|h| !h.is_finished());
+                if handlers.len() >= cfg.max_connections {
+                    // Connection-level shedding: answer 503 and close
+                    // instead of queueing unbounded handler threads.
+                    conn_refused.inc();
+                    let _ = write_response(
+                        &mut stream,
+                        503,
+                        br#"{"error":"connection limit reached"}"#,
+                        &["retry-after: 1"],
+                    );
+                    continue;
+                }
+                let svc = Arc::clone(&svc);
+                let identity = Arc::clone(&identity);
+                let cfg = Arc::clone(&cfg);
+                let stop = Arc::clone(&stop);
+                let client = next_client.fetch_add(1, Ordering::Relaxed);
+                if let Ok(h) = std::thread::Builder::new()
+                    .name(format!("gfnx-http-conn-{client}"))
+                    .spawn(move || handle_connection(stream, svc, identity, cfg, client, stop))
+                {
+                    handlers.push(h);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+fn handle_connection<Obj>(
+    mut stream: TcpStream,
+    svc: Arc<SamplerService<Obj>>,
+    identity: Arc<ServeIdentity>,
+    cfg: Arc<HttpServerConfig>,
+    client: u64,
+    stop: Arc<AtomicBool>,
+) where
+    Obj: ObjJson + Send + 'static,
+{
+    let requests = svc.registry().counter("serve.http.requests");
+    loop {
+        let req = match read_request(&mut stream, cfg.max_body, cfg.idle_timeout, &stop) {
+            ReadOutcome::Request(r) => r,
+            ReadOutcome::Eof | ReadOutcome::Stopped | ReadOutcome::IdleTimeout => return,
+            ReadOutcome::Bad(msg) => {
+                let _ = write_response(&mut stream, 400, &error_body(&msg), &[]);
+                return;
+            }
+        };
+        requests.inc();
+        let keep_alive = req.keep_alive;
+        let (status, body, extra): (u16, String, &[&str]) =
+            match (req.method.as_str(), req.path.as_str()) {
+                ("POST", "/sample") => match handle_sample(&req, &svc, &identity, &cfg, client) {
+                    Ok(body) => (200, body, &[]),
+                    Err(SampleError::Shed) => (
+                        503,
+                        r#"{"error":"overloaded: request shed (queue full)"}"#.to_string(),
+                        &["retry-after: 1"],
+                    ),
+                    Err(SampleError::Closed) => {
+                        (503, r#"{"error":"service is shutting down"}"#.to_string(), &[])
+                    }
+                    Err(SampleError::Timeout(msg)) => (504, error_body_str(&msg), &[]),
+                    Err(SampleError::Bad(msg)) => (400, error_body_str(&msg), &[]),
+                    Err(SampleError::Internal(msg)) => (500, error_body_str(&msg), &[]),
+                },
+                ("GET", "/stats") => (200, stats_body(&svc, &identity), &[]),
+                ("GET", "/healthz") => (200, r#"{"ok":true}"#.to_string(), &[]),
+                ("GET", "/sample") | ("POST", "/stats") | ("POST", "/healthz") => {
+                    (405, r#"{"error":"method not allowed"}"#.to_string(), &[])
+                }
+                (_, path) => (404, error_body_str(&format!("no route {path}")), &[]),
+            };
+        if write_response(&mut stream, status, body.as_bytes(), extra).is_err() {
+            return;
+        }
+        if !keep_alive {
+            return;
+        }
+    }
+}
+
+enum SampleError {
+    Shed,
+    Closed,
+    Timeout(String),
+    Bad(String),
+    Internal(String),
+}
+
+fn handle_sample<Obj>(
+    req: &Request,
+    svc: &SamplerService<Obj>,
+    identity: &ServeIdentity,
+    cfg: &HttpServerConfig,
+    client: u64,
+) -> Result<String, SampleError>
+where
+    Obj: ObjJson + Send + 'static,
+{
+    let body = std::str::from_utf8(&req.body)
+        .map_err(|_| SampleError::Bad("body is not UTF-8".to_string()))?;
+    let json = Json::parse(body).map_err(|e| SampleError::Bad(e.to_string()))?;
+
+    let n = json
+        .get("n")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| SampleError::Bad("missing or non-numeric field 'n'".to_string()))?;
+    if n > cfg.max_n {
+        return Err(SampleError::Bad(format!(
+            "n = {n} exceeds this server's limit of {}",
+            cfg.max_n
+        )));
+    }
+    let seed = parse_seed(&json)?;
+
+    // A client may pin the config/model it expects; serving something else
+    // silently would hand it samples from the wrong distribution.
+    for (field, served) in [("config", &identity.config), ("model", &identity.model)] {
+        if let Some(want) = json.get(field).and_then(Json::as_str) {
+            if want != served {
+                return Err(SampleError::Bad(format!(
+                    "this server serves {field} {served:?}, not {want:?}"
+                )));
+            }
+        }
+    }
+
+    let temperature = match json.get("temperature") {
+        None => 1.0,
+        Some(t) => t.as_f64().filter(|t| t.is_finite() && *t > 0.0).ok_or_else(|| {
+            SampleError::Bad("'temperature' must be a finite number > 0".to_string())
+        })?,
+    };
+
+    let deadline = match json.get("deadline_ms") {
+        None => cfg.default_deadline,
+        Some(d) => {
+            let ms = d.as_f64().filter(|m| m.is_finite() && *m > 0.0).ok_or_else(|| {
+                SampleError::Bad("'deadline_ms' must be a number > 0".to_string())
+            })?;
+            Duration::from_millis(ms as u64).min(cfg.max_deadline)
+        }
+    };
+
+    let now = Instant::now();
+    let opts = SubmitOptions {
+        deadline: Some(now + deadline),
+        temperature,
+        client,
+    };
+    let ticket = match svc.try_submit(SampleRequest { n_samples: n, seed }, opts) {
+        SubmitOutcome::Ticket(t) => t,
+        SubmitOutcome::Shed => return Err(SampleError::Shed),
+        SubmitOutcome::Closed => return Err(SampleError::Closed),
+    };
+    // The worker resolves expiries itself (in-queue and mid-drain); the 2×
+    // client-side bound only exists so a wedged worker cannot strand the
+    // connection — and it keeps the "resolve within 2× deadline" guarantee
+    // unconditional.
+    let outputs = match ticket.wait_timeout(2 * deadline) {
+        Ok(outs) => outs,
+        Err(e) if is_timeout(&e) => return Err(SampleError::Timeout(e.to_string())),
+        Err(e) => return Err(SampleError::Internal(e.to_string())),
+    };
+
+    let rows: Vec<Json> = outputs
+        .iter()
+        .map(|o| {
+            Json::obj(vec![
+                ("obj", o.obj.to_json()),
+                ("log_pf", Json::Num(o.log_pf)),
+                ("log_reward", Json::Num(o.log_reward)),
+                ("length", Json::Num(o.length as f64)),
+                ("traj_index", Json::Num(o.traj_index as f64)),
+            ])
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("seed", Json::Str(seed.to_string())),
+        ("temperature", Json::Num(temperature)),
+        ("outputs", Json::Arr(rows)),
+    ])
+    .to_string())
+}
+
+/// Seeds are u64; JSON numbers are f64 and lose precision past 2^53, so a
+/// string form is accepted (and echoed back) for full-range seeds.
+fn parse_seed(json: &Json) -> Result<u64, SampleError> {
+    match json.get("seed") {
+        None => Err(SampleError::Bad("missing field 'seed'".to_string())),
+        Some(Json::Num(x)) if *x >= 0.0 && x.fract() == 0.0 && *x <= 2f64.powi(53) => {
+            Ok(*x as u64)
+        }
+        Some(Json::Str(s)) => s.parse::<u64>().map_err(|_| {
+            SampleError::Bad(format!("'seed' string {s:?} is not a u64"))
+        }),
+        Some(_) => Err(SampleError::Bad(
+            "'seed' must be a non-negative integer (use a string beyond 2^53)".to_string(),
+        )),
+    }
+}
+
+fn stats_body<Obj: Send + 'static>(
+    svc: &SamplerService<Obj>,
+    identity: &ServeIdentity,
+) -> String {
+    Json::obj(vec![
+        ("family", Json::Str(identity.family.clone())),
+        ("config", Json::Str(identity.config.clone())),
+        ("model", Json::Str(identity.model.clone())),
+        ("registry", svc.registry().to_json()),
+    ])
+    .to_string()
+}
+
+fn error_body(msg: &str) -> Vec<u8> {
+    error_body_str(msg).into_bytes()
+}
+
+fn error_body_str(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::hypergrid::HypergridEnv;
+    use crate::reward::hypergrid::HypergridReward;
+    use crate::runtime::policy::{BatchPolicy, PolicyShape, UniformPolicy};
+    use crate::serve::conn::HttpClient;
+
+    fn http_service() -> (Arc<SamplerService<Vec<i32>>>, HttpServer, String) {
+        let env = HypergridEnv::new(2, 6, HypergridReward::standard(6));
+        let shape = PolicyShape::of_env(&env, 4);
+        let svc = Arc::new(SamplerService::spawn(env, move || {
+            Ok(Box::new(UniformPolicy::new(shape)) as Box<dyn BatchPolicy>)
+        }));
+        let server = HttpServer::serve(
+            "127.0.0.1:0",
+            Arc::clone(&svc),
+            ServeIdentity {
+                family: "hypergrid".to_string(),
+                config: "hypergrid_small".to_string(),
+                model: "mlp".to_string(),
+            },
+            HttpServerConfig::default(),
+        )
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        (svc, server, addr)
+    }
+
+    #[test]
+    fn sample_roundtrip_is_deterministic_and_complete() {
+        let (_svc, server, addr) = http_service();
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let (status, body) = c.post_json("/sample", r#"{"n":5,"seed":3}"#).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let outs = j.req_arr("outputs").unwrap();
+        assert_eq!(outs.len(), 5);
+        for o in outs {
+            let obj = o.req_arr("obj").unwrap();
+            assert!(obj.iter().all(|c| (0.0..6.0).contains(&c.as_f64().unwrap())));
+            assert!(o.get("log_pf").unwrap().as_f64().unwrap() < 0.0);
+            assert!(o.get("log_reward").unwrap().as_f64().is_some());
+            assert!(o.req_usize("length").unwrap() >= 1);
+        }
+        // Same request, same bytes: the seed pins the trajectory streams.
+        let (_, body2) = c.post_json("/sample", r#"{"n":5,"seed":3}"#).unwrap();
+        assert_eq!(body, body2, "repeat requests must be bit-identical");
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_route_serves_registry_json_with_identity() {
+        let (_svc, server, addr) = http_service();
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let (status, _) = c.post_json("/sample", r#"{"n":2,"seed":1}"#).unwrap();
+        assert_eq!(status, 200);
+        let (status, body) = c.get("/stats").unwrap();
+        assert_eq!(status, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.req_str("family").unwrap(), "hypergrid");
+        assert_eq!(j.req_str("config").unwrap(), "hypergrid_small");
+        assert_eq!(j.req_str("model").unwrap(), "mlp");
+        let reg = j.req("registry").unwrap();
+        // Registry::to_json schema: counters/gauges/histograms objects.
+        let counters = reg.get("counters").expect("registry.counters");
+        assert_eq!(
+            counters.get("serve.requests_completed").and_then(Json::as_usize),
+            Some(1)
+        );
+        assert!(counters.get("serve.http.requests").is_some());
+        assert!(reg
+            .get("histograms")
+            .and_then(|h| h.get("serve.request_latency"))
+            .is_some());
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_and_mismatched_requests_get_400() {
+        let (_svc, server, addr) = http_service();
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let cases: &[(&str, &str)] = &[
+            ("{not json", "parse"),
+            (r#"{"seed":1}"#, "'n'"),
+            (r#"{"n":3}"#, "'seed'"),
+            (r#"{"n":3,"seed":-2}"#, "'seed'"),
+            (r#"{"n":3,"seed":1,"temperature":0}"#, "'temperature'"),
+            (r#"{"n":3,"seed":1,"deadline_ms":"soon"}"#, "'deadline_ms'"),
+            (r#"{"n":3,"seed":1,"config":"hypergrid_8d_10"}"#, "hypergrid_small"),
+            (r#"{"n":3,"seed":1,"model":"transformer"}"#, "mlp"),
+        ];
+        for (body, needle) in cases {
+            let (status, resp) = c.post_json("/sample", body).unwrap();
+            let resp = String::from_utf8_lossy(&resp).to_string();
+            assert_eq!(status, 400, "{body} -> {resp}");
+            assert!(
+                resp.to_lowercase().contains(&needle.to_lowercase()),
+                "{body}: error {resp:?} should mention {needle:?}"
+            );
+        }
+        // Still serving after a pile of bad requests.
+        let (status, _) = c.post_json("/sample", r#"{"n":1,"seed":9}"#).unwrap();
+        assert_eq!(status, 200);
+        server.shutdown();
+    }
+
+    #[test]
+    fn routing_unknown_paths_and_methods() {
+        let (_svc, server, addr) = http_service();
+        let mut c = HttpClient::connect(&addr).unwrap();
+        assert_eq!(c.get("/healthz").unwrap().0, 200);
+        assert_eq!(c.get("/nope").unwrap().0, 404);
+        assert_eq!(c.get("/sample").unwrap().0, 405);
+        assert_eq!(c.post_json("/stats", "{}").unwrap().0, 405);
+        server.shutdown();
+    }
+
+    #[test]
+    fn seed_accepts_full_range_strings() {
+        let (_svc, server, addr) = http_service();
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let big = u64::MAX.to_string();
+        let (status, body) = c
+            .post_json("/sample", &format!(r#"{{"n":2,"seed":"{big}"}}"#))
+            .unwrap();
+        assert_eq!(status, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.req_str("seed").unwrap(), big, "seed echoed losslessly");
+        server.shutdown();
+    }
+
+    #[test]
+    fn obj_json_covers_every_family_obj_type() {
+        assert_eq!(vec![1i32, 2].to_json().to_string(), "[1,2]");
+        assert_eq!(vec![3i16].to_json().to_string(), "[3]");
+        assert_eq!(vec![-1i8, 1].to_json().to_string(), "[-1,1]");
+        assert_eq!(u64::MAX.to_json().to_string(), format!("\"{}\"", u64::MAX));
+        let tree = PhyloTree::Node(
+            Box::new(PhyloTree::Leaf(0)),
+            Box::new(PhyloTree::Node(
+                Box::new(PhyloTree::Leaf(1)),
+                Box::new(PhyloTree::Leaf(2)),
+            )),
+        );
+        assert_eq!(tree.to_json().to_string(), "[0,[1,2]]");
+    }
+}

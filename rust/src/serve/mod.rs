@@ -35,6 +35,24 @@
 //!   entries in a telemetry [`Registry`](crate::telemetry::Registry) and
 //!   readable from any thread; [`SamplerService::spawn_in`] folds them into
 //!   the process-wide telemetry export.
+//! - [`http::HttpServer`] (+ [`conn`]) — the std-only HTTP/1.1 front end:
+//!   accepts JSON sample requests over TCP and multiplexes many concurrent
+//!   clients onto one `SamplerService`, adding the production envelope —
+//!   bounded-queue load shedding (503), per-request deadlines (504, enforced
+//!   in-queue and mid-drain), per-client round-robin fairness, and a
+//!   `/stats` route serving the telemetry registry as JSON. See the README's
+//!   "Serving over HTTP" section for the wire format.
+//!
+//! ## The production envelope
+//!
+//! [`SamplerService::spawn_with`] bounds the request queue; over-capacity
+//! submissions are *shed* ([`SubmitOutcome::Shed`], `serve.shed`) instead of
+//! growing an unbounded backlog. [`SamplerService::submit_opts`] carries
+//! per-request [`SubmitOptions`]: an absolute **deadline** (expired requests
+//! resolve with a [`TIMEOUT_ERROR`] error whether still queued or already
+//! mid-drain), a sampling **temperature**, and a **client** id for
+//! round-robin fairness across clients sharing the slot table. On the
+//! client side, [`SampleTicket::wait_timeout`] bounds the wait itself.
 //!
 //! ## Determinism
 //!
@@ -58,16 +76,22 @@
 //! [`VecEnv::reset_row`]: crate::envs::VecEnv::reset_row
 //! [`BatchPolicy::eval`]: crate::runtime::policy::BatchPolicy::eval
 
+pub mod conn;
+pub mod http;
 pub mod queue;
 pub mod request;
 pub mod sampler;
 pub mod stats;
 pub mod worker;
 
-pub use request::{SampleOutput, SampleRequest, SampleTicket};
+pub use http::{HttpServer, HttpServerConfig, ObjJson, ServeIdentity};
+pub use queue::PushError;
+pub use request::{
+    is_timeout, SampleOutput, SampleRequest, SampleTicket, TIMEOUT_ERROR,
+};
 pub use sampler::{sample_stream, StreamStats, TrajJob, TrajResult};
 pub use stats::{ServeSnapshot, ServeStats};
-pub use worker::SamplerService;
+pub use worker::{SamplerService, SubmitOptions, SubmitOutcome};
 
 /// Derive the RNG seed of trajectory `traj_index` within a request seeded
 /// with `request_seed` (SplitMix64-style mixing, matching how

@@ -1,13 +1,39 @@
-//! A std-only MPSC queue with close semantics.
+//! A std-only MPSC queue with close semantics and an optional depth bound.
 //!
-//! `std::sync::mpsc` lacks the two things the serve worker needs — a
+//! `std::sync::mpsc` lacks the three things the serve worker needs — a
 //! non-blocking `try_pop` usable alongside blocking pops from the same
-//! consumer, and an observable close state that immediately wakes blocked
-//! consumers — so, in the spirit of `util::threadpool` (no rayon/tokio in
-//! the image), this is a small `Mutex` + `Condvar` queue.
+//! consumer, an observable close state that immediately wakes blocked
+//! consumers, and a non-blocking bounded `push` whose "full" outcome is
+//! distinguishable from "closed" (the HTTP admission layer sheds on the
+//! former and errors on the latter) — so, in the spirit of
+//! `util::threadpool` (no rayon/tokio in the image), this is a small
+//! `Mutex` + `Condvar` queue.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Why a [`Queue::push`] was refused. The rejected item is handed back so
+/// the caller can resolve its ticket (nothing is silently dropped).
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at its capacity bound (backpressure — shed the item).
+    Full(T),
+    /// The queue is closed (service shut down — fail the item).
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    /// Recover the rejected item.
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(t) | PushError::Closed(t) => t,
+        }
+    }
+
+    pub fn is_full(&self) -> bool {
+        matches!(self, PushError::Full(_))
+    }
+}
 
 struct QueueState<T> {
     items: VecDeque<T>,
@@ -17,6 +43,8 @@ struct QueueState<T> {
 struct Inner<T> {
     state: Mutex<QueueState<T>>,
     cv: Condvar,
+    /// Depth bound; `usize::MAX` = unbounded.
+    capacity: usize,
 }
 
 /// A multi-producer queue; clones share the same underlying channel.
@@ -37,25 +65,39 @@ impl<T> Default for Queue<T> {
 }
 
 impl<T> Queue<T> {
+    /// An unbounded queue (pushes only fail once closed).
     pub fn new() -> Queue<T> {
+        Self::with_capacity(usize::MAX)
+    }
+
+    /// A queue that refuses pushes beyond `capacity` queued items with
+    /// [`PushError::Full`] — non-blocking backpressure, not a blocking
+    /// bound: the producer (an HTTP connection thread) must be able to
+    /// answer 503 immediately instead of stalling on a slow worker.
+    pub fn with_capacity(capacity: usize) -> Queue<T> {
         Queue {
             inner: Arc::new(Inner {
                 state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
                 cv: Condvar::new(),
+                capacity,
             }),
         }
     }
 
-    /// Enqueue an item. Returns `false` (dropping the item) if the queue is
-    /// closed.
-    pub fn push(&self, item: T) -> bool {
+    /// Enqueue an item. Refuses with [`PushError::Closed`] after
+    /// [`Queue::close`] and with [`PushError::Full`] at the capacity bound,
+    /// handing the item back either way.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
         let mut g = self.inner.state.lock().unwrap();
         if g.closed {
-            return false;
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.inner.capacity {
+            return Err(PushError::Full(item));
         }
         g.items.push_back(item);
         self.inner.cv.notify_one();
-        true
+        Ok(())
     }
 
     /// Dequeue, blocking until an item arrives or the queue is closed *and*
@@ -109,7 +151,7 @@ mod tests {
         let q = Queue::new();
         assert!(q.is_empty());
         for i in 0..5 {
-            assert!(q.push(i));
+            assert!(q.push(i).is_ok());
         }
         assert_eq!(q.len(), 5);
         for i in 0..5 {
@@ -121,10 +163,13 @@ mod tests {
     #[test]
     fn close_drains_then_ends() {
         let q = Queue::new();
-        q.push(1);
-        q.push(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
         q.close();
-        assert!(!q.push(3), "push after close must fail");
+        assert!(
+            matches!(q.push(3), Err(PushError::Closed(3))),
+            "push after close must fail Closed and hand the item back"
+        );
         assert_eq!(q.pop_blocking(), Some(1));
         assert_eq!(q.pop_blocking(), Some(2));
         assert_eq!(q.pop_blocking(), None);
@@ -148,7 +193,7 @@ mod tests {
                 let q = q.clone();
                 std::thread::spawn(move || {
                     for i in 0..100 {
-                        assert!(q.push(p * 100 + i));
+                        assert!(q.push(p * 100 + i).is_ok());
                     }
                 })
             })
@@ -164,5 +209,50 @@ mod tests {
         }
         got.sort_unstable();
         assert_eq!(got, (0..400).collect::<Vec<_>>());
+    }
+
+    /// The capacity bound sheds with `Full` (distinct from `Closed`), and
+    /// popping reopens exactly that much headroom.
+    #[test]
+    fn bounded_queue_sheds_with_full_not_closed() {
+        let q = Queue::with_capacity(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        match q.push(3) {
+            Err(PushError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        assert_eq!(q.len(), 2, "shed items are not enqueued");
+        assert_eq!(q.try_pop(), Some(1));
+        q.push(4).unwrap(); // headroom back after a pop
+        assert!(matches!(q.push(5), Err(PushError::Full(5))));
+        let e = q.push(6).unwrap_err();
+        assert!(e.is_full());
+        assert_eq!(e.into_inner(), 6);
+    }
+
+    /// Regression (satellite): closing a *full* bounded queue must drain
+    /// cleanly — consumers see the whole backlog then `None`, producers see
+    /// `Closed` (not `Full`), and nothing deadlocks.
+    #[test]
+    fn close_while_full_drains_without_deadlock() {
+        let q = Queue::with_capacity(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert!(q.push(3).unwrap_err().is_full());
+        q.close();
+        // Closed wins over Full: a producer must learn the queue is gone,
+        // not be told to retry a shed.
+        assert!(matches!(q.push(4), Err(PushError::Closed(4))));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = q2.pop_blocking() {
+                got.push(v);
+            }
+            got
+        });
+        assert_eq!(consumer.join().unwrap(), vec![1, 2]);
+        assert_eq!(q.pop_blocking(), None);
     }
 }

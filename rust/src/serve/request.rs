@@ -6,6 +6,18 @@
 //! Tickets are plain `Mutex` + `Condvar` (no async runtime in the image).
 
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Marker carried by every deadline/timeout error in the serve stack (the
+/// worker's in-queue and mid-drain cancels, and [`SampleTicket::wait_timeout`]
+/// giving up client-side). The HTTP layer maps errors containing this to 504;
+/// everything else is a 500.
+pub const TIMEOUT_ERROR: &str = "deadline exceeded";
+
+/// Is this a serve-stack timeout (vs a policy/env/shutdown failure)?
+pub fn is_timeout(err: &anyhow::Error) -> bool {
+    err.to_string().contains(TIMEOUT_ERROR)
+}
 
 /// A sampling request.
 #[derive(Clone, Copy, Debug)]
@@ -39,6 +51,9 @@ pub(crate) enum TicketCell<Obj> {
     Pending,
     Ready(anyhow::Result<Vec<SampleOutput<Obj>>>),
     Taken,
+    /// The waiter gave up ([`SampleTicket::wait_timeout`]); a later
+    /// [`TicketShared::fulfill`] is a no-op (the result has no reader).
+    TimedOut,
 }
 
 pub(crate) struct TicketShared<Obj> {
@@ -78,7 +93,38 @@ impl<Obj> SampleTicket<Obj> {
                     *g = TicketCell::Pending;
                     g = self.shared.cv.wait(g).unwrap();
                 }
-                TicketCell::Taken => unreachable!("ticket consumed twice"),
+                TicketCell::Taken | TicketCell::TimedOut => {
+                    unreachable!("ticket consumed twice")
+                }
+            }
+        }
+    }
+
+    /// Like [`SampleTicket::wait`], but give up after `timeout`: the cell
+    /// moves to a timed-out terminal state (a late worker fulfillment
+    /// becomes a no-op) and a [`TIMEOUT_ERROR`] error is returned. This is
+    /// the client-side half of the deadline story — a stalled or wedged
+    /// worker can no longer strand a caller forever.
+    pub fn wait_timeout(self, timeout: Duration) -> anyhow::Result<Vec<SampleOutput<Obj>>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.shared.cell.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *g, TicketCell::Taken) {
+                TicketCell::Ready(r) => return r,
+                TicketCell::Pending => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        *g = TicketCell::TimedOut;
+                        return Err(anyhow::anyhow!(
+                            "{TIMEOUT_ERROR}: no result within {timeout:?}"
+                        ));
+                    }
+                    *g = TicketCell::Pending;
+                    g = self.shared.cv.wait_timeout(g, deadline - now).unwrap().0;
+                }
+                TicketCell::Taken | TicketCell::TimedOut => {
+                    unreachable!("ticket consumed twice")
+                }
             }
         }
     }
@@ -120,5 +166,35 @@ mod tests {
         shared.fulfill(Ok(vec![]));
         let ticket = SampleTicket { shared };
         assert_eq!(ticket.wait().unwrap_err().to_string(), "first");
+    }
+
+    /// `wait_timeout` returns a recognizable timeout error when nobody
+    /// fulfills, and a late fulfillment against the timed-out cell is a
+    /// silent no-op (no panic, no resurrected reader).
+    #[test]
+    fn wait_timeout_expires_and_late_fulfill_is_noop() {
+        let shared = TicketShared::<u32>::new();
+        let ticket = SampleTicket { shared: shared.clone() };
+        let t0 = Instant::now();
+        let err = ticket.wait_timeout(Duration::from_millis(30)).unwrap_err();
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        assert!(is_timeout(&err), "timeout errors must carry the marker: {err}");
+        shared.fulfill(Ok(vec![])); // must not panic or flip the state
+        assert!(matches!(*shared.cell.lock().unwrap(), TicketCell::TimedOut));
+    }
+
+    /// A fulfillment racing in before the timeout wins: the waiter gets the
+    /// result, not the timeout.
+    #[test]
+    fn wait_timeout_returns_result_when_fulfilled_in_time() {
+        let shared = TicketShared::<u32>::new();
+        let ticket = SampleTicket { shared: shared.clone() };
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            shared.fulfill(Ok(vec![]));
+        });
+        let out = ticket.wait_timeout(Duration::from_secs(5)).unwrap();
+        t.join().unwrap();
+        assert!(out.is_empty());
     }
 }

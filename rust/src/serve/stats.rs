@@ -27,11 +27,20 @@ pub struct ServeStats {
     registry: Arc<Registry>,
     pub requests_submitted: Arc<Counter>,
     pub requests_completed: Arc<Counter>,
-    /// Requests answered with an error (shutdown, policy failure). Together
-    /// with `requests_completed` this accounts for every submitted request,
-    /// so "pending = submitted − completed − failed" stays meaningful for
-    /// monitors after a failure.
+    /// Requests answered with an error (shutdown, policy failure, shed,
+    /// deadline). Together with `requests_completed` this accounts for every
+    /// submitted request, so "pending = submitted − completed − failed"
+    /// stays meaningful for monitors after a failure.
     pub requests_failed: Arc<Counter>,
+    /// Requests refused at admission because the bounded queue was full
+    /// (load shedding; a subset of `requests_failed`). The HTTP layer
+    /// answers these with 503.
+    pub shed: Arc<Counter>,
+    /// Requests cancelled by the worker because their deadline expired
+    /// in-queue or mid-drain (a subset of `requests_failed`). Client-side
+    /// `wait_timeout` expiries are *not* counted here — from the service's
+    /// view those requests still complete.
+    pub requests_timedout: Arc<Counter>,
     pub trajectories_completed: Arc<Counter>,
     pub policy_dispatches: Arc<Counter>,
     pub active_row_steps: Arc<Counter>,
@@ -72,6 +81,8 @@ impl ServeStats {
             requests_submitted: registry.counter("serve.requests_submitted"),
             requests_completed: registry.counter("serve.requests_completed"),
             requests_failed: registry.counter("serve.requests_failed"),
+            shed: registry.counter("serve.shed"),
+            requests_timedout: registry.counter("serve.requests_timedout"),
             trajectories_completed: registry.counter("serve.trajectories_completed"),
             policy_dispatches: registry.counter("serve.policy_dispatches"),
             active_row_steps: registry.counter("serve.active_row_steps"),
@@ -96,6 +107,8 @@ impl ServeStats {
             requests_submitted: self.requests_submitted.get(),
             requests_completed: self.requests_completed.get(),
             requests_failed: self.requests_failed.get(),
+            shed: self.shed.get(),
+            requests_timedout: self.requests_timedout.get(),
             trajectories_completed: self.trajectories_completed.get(),
             policy_dispatches: self.policy_dispatches.get(),
             active_row_steps: self.active_row_steps.get(),
@@ -113,6 +126,8 @@ pub struct ServeSnapshot {
     pub requests_submitted: u64,
     pub requests_completed: u64,
     pub requests_failed: u64,
+    pub shed: u64,
+    pub requests_timedout: u64,
     pub trajectories_completed: u64,
     pub policy_dispatches: u64,
     pub active_row_steps: u64,
@@ -189,6 +204,25 @@ mod tests {
                 .and_then(Json::as_f64),
             Some(0.9)
         );
+    }
+
+    /// The production-envelope counters are registry metrics too, so the
+    /// HTTP `/stats` route (which serializes the registry) exposes shedding
+    /// and deadline cancels without extra plumbing.
+    #[test]
+    fn shed_and_timeout_counters_reach_registry_json() {
+        let s = ServeStats::new();
+        s.shed.add(2);
+        s.requests_timedout.inc();
+        let snap = s.snapshot();
+        assert_eq!(snap.shed, 2);
+        assert_eq!(snap.requests_timedout, 1);
+        let j = s.registry().to_json();
+        let counter = |name: &str| {
+            j.get("counters").and_then(|c| c.get(name)).and_then(Json::as_usize)
+        };
+        assert_eq!(counter("serve.shed"), Some(2));
+        assert_eq!(counter("serve.requests_timedout"), Some(1));
     }
 
     /// Two services sharing one registry merge their counters (get-or-

@@ -8,12 +8,29 @@
 //! requests to drain. Tickets complete per request as soon as that
 //! request's last trajectory finishes.
 //!
+//! On top of the batching engine sits the production envelope:
+//!
+//! - **Admission control**: the queue may be depth-bounded
+//!   ([`SamplerService::spawn_with`]); over-capacity submissions are *shed*
+//!   ([`SubmitOutcome::Shed`], counted as `serve.shed`) instead of growing
+//!   an unbounded backlog until OOM.
+//! - **Deadlines**: a request may carry an absolute deadline
+//!   ([`SubmitOptions::deadline`]). Expired requests are cancelled at
+//!   admission (in-queue expiry) or mid-drain (a deadline min-heap swept on
+//!   every job-source poll); their tickets resolve with a
+//!   [`TIMEOUT_ERROR`] error and already-running trajectories finish into
+//!   a discard list, so a cancelled request never corrupts the slot table.
+//! - **Per-client fairness**: trajectories are issued round-robin across
+//!   clients ([`SubmitOptions::client`]), one trajectory per turn, so a
+//!   client with one huge request cannot starve small requests from other
+//!   clients — their trajectories interleave in the same slot table.
+//!
 //! The policy is built *on* the worker thread by a `Send` factory closure:
 //! PJRT clients are `Rc`-based thread-locals, so an `OwnedArtifactPolicy`
 //! must be constructed where it will run.
 
-use super::queue::Queue;
-use super::request::{SampleOutput, SampleRequest, SampleTicket, TicketShared};
+use super::queue::{PushError, Queue};
+use super::request::{SampleOutput, SampleRequest, SampleTicket, TicketShared, TIMEOUT_ERROR};
 use super::sampler::{sample_stream, TrajJob, TrajResult};
 use super::stats::{ServeSnapshot, ServeStats};
 use super::traj_seed;
@@ -21,7 +38,8 @@ use crate::envs::{EnvSpec, VecEnv};
 use crate::runtime::policy::{check_env_token_shape, BatchPolicy, PolicyShape};
 use crate::telemetry::Registry;
 use std::cell::RefCell;
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -87,8 +105,52 @@ impl BatchPolicy for SwappablePolicy {
     }
 }
 
+/// Per-request submission options beyond the [`SampleRequest`] itself.
+#[derive(Clone, Copy, Debug)]
+pub struct SubmitOptions {
+    /// Absolute deadline. Past it the worker cancels the request — whether
+    /// it is still queued or already mid-drain — and resolves its ticket
+    /// with a [`TIMEOUT_ERROR`] error (counted as `serve.requests_timedout`).
+    pub deadline: Option<Instant>,
+    /// Sampling temperature (`1.0` = the policy's training distribution;
+    /// see [`TrajJob::temperature`]). Must be finite and positive.
+    pub temperature: f64,
+    /// Client identity for round-robin fairness. Requests sharing a client
+    /// id share one issuance lane; distinct ids interleave one trajectory
+    /// per turn. `0` (the default) is the anonymous shared lane.
+    pub client: u64,
+}
+
+impl Default for SubmitOptions {
+    fn default() -> Self {
+        SubmitOptions { deadline: None, temperature: 1.0, client: 0 }
+    }
+}
+
+/// What [`SamplerService::try_submit`] did with a request.
+pub enum SubmitOutcome<Obj> {
+    /// Admitted; wait on the ticket.
+    Ticket(SampleTicket<Obj>),
+    /// Refused — the bounded queue is at capacity (load shed; the HTTP
+    /// layer answers 503). Counted as `serve.shed` *and* `serve.requests_failed`.
+    Shed,
+    /// Refused — the service is shut down.
+    Closed,
+}
+
+impl<Obj> std::fmt::Debug for SubmitOutcome<Obj> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SubmitOutcome::Ticket(_) => "Ticket(..)",
+            SubmitOutcome::Shed => "Shed",
+            SubmitOutcome::Closed => "Closed",
+        })
+    }
+}
+
 struct WorkItem<Obj> {
     req: SampleRequest,
+    opts: SubmitOptions,
     ticket: Arc<TicketShared<Obj>>,
     /// Enqueue time, for the `serve.request_latency` and
     /// `serve.first_dispatch_latency` histograms.
@@ -104,23 +166,42 @@ struct InFlight<Obj> {
     done: usize,
     outputs: Vec<Option<SampleOutput<Obj>>>,
     submitted: Instant,
+    temperature: f64,
 }
 
 /// Bookkeeping of one worker drain. A drain can run indefinitely under
 /// sustained traffic, so this must not grow with the number of requests
-/// served: completed requests are pruned from `inflight`, and the job
-/// source only ever looks at the front of `pending` (requests that still
-/// have unissued trajectories) instead of scanning history.
+/// served: completed requests are pruned from `inflight`, per-client lanes
+/// are dropped when they empty, heap entries and lane ids for departed
+/// requests are skipped lazily, and `cancelled` entries die with their last
+/// in-slot trajectory.
 struct DrainState<Obj> {
     next_id: u64,
     inflight: HashMap<u64, InFlight<Obj>>,
-    /// FIFO of request ids with `issued < n`.
-    pending: VecDeque<u64>,
+    /// Round-robin rotation of client ids that have unissued work.
+    rotation: VecDeque<u64>,
+    /// Client id → FIFO of request ids with `issued < n`.
+    per_client: HashMap<u64, VecDeque<u64>>,
+    /// Deadline min-heap over admitted requests (lazy deletion: entries
+    /// whose id has left `inflight` are skipped on pop).
+    deadlines: BinaryHeap<Reverse<(Instant, u64)>>,
+    /// Cancelled request id → trajectories still occupying slots
+    /// (`issued − done` at cancel time). The sink discards their late
+    /// results and removes the entry at zero, keeping this map bounded by
+    /// the slot-table width.
+    cancelled: HashMap<u64, usize>,
 }
 
 impl<Obj> DrainState<Obj> {
     fn new() -> DrainState<Obj> {
-        DrainState { next_id: 0, inflight: HashMap::new(), pending: VecDeque::new() }
+        DrainState {
+            next_id: 0,
+            inflight: HashMap::new(),
+            rotation: VecDeque::new(),
+            per_client: HashMap::new(),
+            deadlines: BinaryHeap::new(),
+            cancelled: HashMap::new(),
+        }
     }
 }
 
@@ -141,7 +222,7 @@ impl<Obj: Send + 'static> SamplerService<Obj> {
         E: VecEnv<Obj = Obj> + Send + 'static,
         F: FnOnce() -> anyhow::Result<Box<dyn BatchPolicy>> + Send + 'static,
     {
-        Self::spawn_in(env, policy_factory, Arc::new(Registry::new()))
+        Self::spawn_with(env, policy_factory, Arc::new(Registry::new()), None)
     }
 
     /// Like [`SamplerService::spawn`], but register the service's `serve.*`
@@ -157,7 +238,35 @@ impl<Obj: Send + 'static> SamplerService<Obj> {
         E: VecEnv<Obj = Obj> + Send + 'static,
         F: FnOnce() -> anyhow::Result<Box<dyn BatchPolicy>> + Send + 'static,
     {
-        let queue: Queue<WorkItem<Obj>> = Queue::new();
+        Self::spawn_with(env, policy_factory, registry, None)
+    }
+
+    /// The fully general constructor: `queue_capacity` bounds the request
+    /// backlog (`None` = unbounded). Over-capacity submissions are shed
+    /// non-blockingly — the backpressure the network front end needs to
+    /// answer 503 instead of buffering until OOM.
+    ///
+    /// The capacity also bounds *admission depth*: the worker stops pulling
+    /// queued requests into the drain while `queue_capacity` requests are
+    /// already in flight, so the backlog genuinely accumulates in the
+    /// bounded queue instead of being swallowed into unbounded in-flight
+    /// state. Total accepted-but-unresolved requests are therefore capped
+    /// at `2 * queue_capacity` (in flight + queued); everything beyond that
+    /// sheds.
+    pub fn spawn_with<E, F>(
+        env: E,
+        policy_factory: F,
+        registry: Arc<Registry>,
+        queue_capacity: Option<usize>,
+    ) -> SamplerService<Obj>
+    where
+        E: VecEnv<Obj = Obj> + Send + 'static,
+        F: FnOnce() -> anyhow::Result<Box<dyn BatchPolicy>> + Send + 'static,
+    {
+        let queue: Queue<WorkItem<Obj>> = match queue_capacity {
+            Some(cap) => Queue::with_capacity(cap),
+            None => Queue::new(),
+        };
         let stats = Arc::new(ServeStats::in_registry(registry));
         let swap: SwapSlot = Arc::new(Mutex::new(None));
         let worker_queue = queue.clone();
@@ -166,7 +275,14 @@ impl<Obj: Send + 'static> SamplerService<Obj> {
         let handle = std::thread::Builder::new()
             .name("gfnx-serve-worker".to_string())
             .spawn(move || {
-                worker_loop(env, policy_factory, worker_queue, worker_stats, worker_swap)
+                worker_loop(
+                    env,
+                    policy_factory,
+                    worker_queue,
+                    worker_stats,
+                    worker_swap,
+                    queue_capacity,
+                )
             })
             .expect("failed to spawn serve worker thread");
         SamplerService { queue, stats, swap, handle: Some(handle) }
@@ -183,18 +299,62 @@ impl<Obj: Send + 'static> SamplerService<Obj> {
         *self.swap.lock().unwrap() = Some(policy);
     }
 
-    /// Enqueue a request; returns immediately with a waitable ticket.
+    /// Enqueue a request; returns immediately with a waitable ticket
+    /// (pre-failed if the service is shut down or shedding — use
+    /// [`SamplerService::try_submit`] to distinguish those without paying
+    /// for an error allocation).
     pub fn submit(&self, req: SampleRequest) -> SampleTicket<Obj> {
+        self.submit_opts(req, SubmitOptions::default())
+    }
+
+    /// [`SamplerService::submit`] with explicit per-request options.
+    pub fn submit_opts(&self, req: SampleRequest, opts: SubmitOptions) -> SampleTicket<Obj> {
+        match self.try_submit(req, opts) {
+            SubmitOutcome::Ticket(t) => t,
+            SubmitOutcome::Shed => {
+                let shared = TicketShared::new();
+                shared.fulfill(Err(anyhow::anyhow!(
+                    "sampler service overloaded: request shed (queue full)"
+                )));
+                SampleTicket { shared }
+            }
+            SubmitOutcome::Closed => {
+                let shared = TicketShared::new();
+                shared.fulfill(Err(anyhow::anyhow!(
+                    "sampler service is shut down (queue closed)"
+                )));
+                SampleTicket { shared }
+            }
+        }
+    }
+
+    /// Admission-controlled submit: returns [`SubmitOutcome::Shed`] when
+    /// the bounded queue is at capacity and [`SubmitOutcome::Closed`] after
+    /// shutdown, instead of a pre-failed ticket. Every outcome is counted —
+    /// `submitted == completed + failed` still balances once all tickets
+    /// resolve, with shed/closed requests resolving (and recording their
+    /// ~zero latency) at the submission site itself.
+    pub fn try_submit(&self, req: SampleRequest, opts: SubmitOptions) -> SubmitOutcome<Obj> {
         let shared = TicketShared::new();
         self.stats.requests_submitted.inc();
-        let item = WorkItem { req, ticket: Arc::clone(&shared), submitted: Instant::now() };
-        if !self.queue.push(item) {
-            shared.fulfill(Err(anyhow::anyhow!(
-                "sampler service is shut down (queue closed)"
-            )));
-            self.stats.requests_failed.inc();
+        let submitted = Instant::now();
+        let item = WorkItem { req, opts, ticket: Arc::clone(&shared), submitted };
+        match self.queue.push(item) {
+            Ok(()) => SubmitOutcome::Ticket(SampleTicket { shared }),
+            Err(e) => {
+                // Failures record latency too (satellite fix): the
+                // histogram accounts for every resolved request, not only
+                // the happy path.
+                self.stats.requests_failed.inc();
+                self.stats.request_latency.record(submitted.elapsed().as_nanos() as u64);
+                if e.is_full() {
+                    self.stats.shed.inc();
+                    SubmitOutcome::Shed
+                } else {
+                    SubmitOutcome::Closed
+                }
+            }
         }
-        SampleTicket { shared }
     }
 
     /// Convenience: submit and block for the result.
@@ -219,7 +379,7 @@ impl<Obj: Send + 'static> SamplerService<Obj> {
     }
 
     /// Stop accepting requests, finish queued + in-flight work, join the
-    /// worker.
+    /// worker. (Dropping the service — or its last `Arc` — does the same.)
     pub fn shutdown(mut self) {
         self.close_and_join();
     }
@@ -241,13 +401,51 @@ impl<Obj> Drop for SamplerService<Obj> {
     }
 }
 
-/// Admit a work item: zero-sample requests complete immediately; others
-/// enter the in-flight table under a fresh stable id.
+/// Resolve a work item with a timeout error and account for it.
+fn fail_timeout<Obj>(
+    ticket: &TicketShared<Obj>,
+    submitted: Instant,
+    detail: &str,
+    stats: &ServeStats,
+) {
+    stats.requests_timedout.inc();
+    stats.requests_failed.inc();
+    stats.request_latency.record(submitted.elapsed().as_nanos() as u64);
+    ticket.fulfill(Err(anyhow::anyhow!("{TIMEOUT_ERROR}: {detail}")));
+}
+
+/// Admit a work item: expired requests fail immediately (in-queue deadline
+/// enforcement), zero-sample requests complete immediately; others enter
+/// the in-flight table under a fresh stable id and join their client's
+/// issuance lane.
 fn admit<Obj>(
     drain: &RefCell<DrainState<Obj>>,
     item: WorkItem<Obj>,
     stats: &ServeStats,
 ) {
+    if let Some(d) = item.opts.deadline {
+        if Instant::now() >= d {
+            fail_timeout(
+                &item.ticket,
+                item.submitted,
+                &format!("expired in queue after {:?}", item.submitted.elapsed()),
+                stats,
+            );
+            return;
+        }
+    }
+    if !(item.opts.temperature.is_finite() && item.opts.temperature > 0.0) {
+        // Reject here rather than letting the sampler's refill invariant
+        // fire mid-drain, which would fail *every* in-flight request over
+        // one bad parameter.
+        stats.requests_failed.inc();
+        stats.request_latency.record(item.submitted.elapsed().as_nanos() as u64);
+        item.ticket.fulfill(Err(anyhow::anyhow!(
+            "invalid temperature {}: must be finite and > 0",
+            item.opts.temperature
+        )));
+        return;
+    }
     if item.req.n_samples == 0 {
         // Count before fulfilling: a waiter that wakes on fulfill() must
         // already see the completion in a stats snapshot.
@@ -270,9 +468,47 @@ fn admit<Obj>(
             done: 0,
             outputs: (0..n).map(|_| None).collect(),
             submitted: item.submitted,
+            temperature: item.opts.temperature,
         },
     );
-    s.pending.push_back(id);
+    if let Some(d) = item.opts.deadline {
+        s.deadlines.push(Reverse((d, id)));
+    }
+    let client = item.opts.client;
+    match s.per_client.entry(client) {
+        std::collections::hash_map::Entry::Occupied(e) => e.into_mut().push_back(id),
+        std::collections::hash_map::Entry::Vacant(e) => {
+            e.insert(VecDeque::from([id]));
+            s.rotation.push_back(client);
+        }
+    }
+}
+
+/// Mid-drain deadline sweep: cancel every admitted request whose deadline
+/// has passed. Trajectories already in the slot table keep running (the
+/// engine has no preemption) but their results are diverted to the
+/// `cancelled` discard ledger, so the ticket resolves *now*, not when the
+/// stragglers finish.
+fn expire_due<Obj>(s: &mut DrainState<Obj>, now: Instant, stats: &ServeStats) {
+    while let Some(&Reverse((d, id))) = s.deadlines.peek() {
+        if d > now {
+            break;
+        }
+        s.deadlines.pop();
+        let Some(f) = s.inflight.remove(&id) else {
+            continue; // completed before its deadline; stale heap entry
+        };
+        let outstanding = f.issued - f.done;
+        if outstanding > 0 {
+            s.cancelled.insert(id, outstanding);
+        }
+        fail_timeout(
+            &f.ticket,
+            f.submitted,
+            &format!("cancelled mid-drain with {}/{} trajectories done", f.done, f.n),
+            stats,
+        );
+    }
 }
 
 fn worker_loop<E, F>(
@@ -281,6 +517,7 @@ fn worker_loop<E, F>(
     queue: Queue<WorkItem<E::Obj>>,
     stats: Arc<ServeStats>,
     swap: SwapSlot,
+    max_inflight: Option<usize>,
 ) where
     E: VecEnv,
     F: FnOnce() -> anyhow::Result<Box<dyn BatchPolicy>>,
@@ -292,8 +529,9 @@ fn worker_loop<E, F>(
             // Refuse service: fail the backlog and all future submissions.
             queue.close();
             while let Some(item) = queue.try_pop() {
-                item.ticket.fulfill(Err(anyhow::anyhow!("policy init failed: {e}")));
                 stats.requests_failed.inc();
+                stats.request_latency.record(item.submitted.elapsed().as_nanos() as u64);
+                item.ticket.fulfill(Err(anyhow::anyhow!("policy init failed: {e}")));
             }
             return;
         }
@@ -313,43 +551,105 @@ fn worker_loop<E, F>(
         let result = sample_stream(
             &env,
             &mut policy,
-            || loop {
-                {
-                    let mut guard = drain.borrow_mut();
-                    let s = &mut *guard;
-                    while let Some(&id) = s.pending.front() {
-                        let f = s
-                            .inflight
-                            .get_mut(&id)
-                            .expect("pending id without in-flight entry");
-                        if f.issued < f.n {
-                            let i = f.issued;
-                            if i == 0 {
-                                // First trajectory of this request enters
-                                // the slot table: queueing delay is over.
-                                stats
-                                    .first_dispatch_latency
-                                    .record(f.submitted.elapsed().as_nanos() as u64);
-                            }
-                            f.issued += 1;
-                            let seed = traj_seed(f.seed, i as u64);
-                            if f.issued == f.n {
-                                s.pending.pop_front();
-                            }
-                            return Some(TrajJob { request: id, traj_index: i, seed });
+            || {
+                // Admit everything waiting (up to the in-flight bound)
+                // before deciding what to issue: fairness requires
+                // late-arriving clients to be in the rotation while an
+                // earlier client's backlog is still being issued (the
+                // pre-fairness code only polled the queue once the admitted
+                // work was fully issued, which let one huge request starve
+                // admission itself). The bound keeps admission from
+                // swallowing the bounded queue into unbounded in-flight
+                // state — with it, a flood genuinely backs up in the queue
+                // and overflow sheds.
+                loop {
+                    if let Some(cap) = max_inflight {
+                        if drain.borrow().inflight.len() >= cap {
+                            break;
                         }
-                        s.pending.pop_front();
+                    }
+                    match queue.try_pop() {
+                        Some(item) => admit(&drain, item, &stats),
+                        None => break,
                     }
                 }
-                match queue.try_pop() {
-                    Some(item) => admit(&drain, item, &stats),
-                    None => return None,
+                let mut guard = drain.borrow_mut();
+                let s = &mut *guard;
+                if s.deadlines.peek().is_some() {
+                    expire_due(s, Instant::now(), &stats);
                 }
+                // Round-robin across clients: issue ONE trajectory from the
+                // front client's oldest request, then rotate, so no client's
+                // backlog monopolizes slot refills.
+                while let Some(&client) = s.rotation.front() {
+                    let fifo = s
+                        .per_client
+                        .get_mut(&client)
+                        .expect("rotation entry without per-client lane");
+                    let mut job = None;
+                    while let Some(&id) = fifo.front() {
+                        // Lazy cleanup: ids whose request completed at issue
+                        // time or was cancelled have left `inflight`.
+                        let Some(f) = s.inflight.get_mut(&id) else {
+                            fifo.pop_front();
+                            continue;
+                        };
+                        debug_assert!(f.issued < f.n, "fully issued id still in lane");
+                        let i = f.issued;
+                        if i == 0 {
+                            // First trajectory of this request enters the
+                            // slot table: queueing delay is over.
+                            stats
+                                .first_dispatch_latency
+                                .record(f.submitted.elapsed().as_nanos() as u64);
+                        }
+                        f.issued += 1;
+                        if f.issued == f.n {
+                            fifo.pop_front();
+                        }
+                        job = Some(TrajJob {
+                            request: id,
+                            traj_index: i,
+                            seed: traj_seed(f.seed, i as u64),
+                            temperature: f.temperature,
+                        });
+                        break;
+                    }
+                    match job {
+                        Some(job) => {
+                            let c = s.rotation.pop_front().unwrap();
+                            if s.per_client.get(&c).is_some_and(|f| !f.is_empty()) {
+                                s.rotation.push_back(c);
+                            } else {
+                                s.per_client.remove(&c);
+                            }
+                            return Some(job);
+                        }
+                        None => {
+                            // Lane drained: drop it (re-created on the
+                            // client's next admission).
+                            s.per_client.remove(&client);
+                            s.rotation.pop_front();
+                        }
+                    }
+                }
+                None
             },
             |r: TrajResult<E::Obj>| {
                 stats.trajectories_completed.inc();
                 let mut guard = drain.borrow_mut();
-                let f = guard
+                let s = &mut *guard;
+                if let Some(left) = s.cancelled.get_mut(&r.request) {
+                    // Straggler of a deadline-cancelled request: its ticket
+                    // already resolved; discard the result and forget the
+                    // request once its last slot drains.
+                    *left -= 1;
+                    if *left == 0 {
+                        s.cancelled.remove(&r.request);
+                    }
+                    return;
+                }
+                let f = s
                     .inflight
                     .get_mut(&r.request)
                     .expect("trajectory for unknown request");
@@ -365,7 +665,7 @@ fn worker_loop<E, F>(
                 if f.done == f.n {
                     // Prune the completed request so a long-lived drain does
                     // not accumulate history.
-                    let f = guard.inflight.remove(&r.request).unwrap();
+                    let f = s.inflight.remove(&r.request).unwrap();
                     let outs: Vec<SampleOutput<E::Obj>> = f
                         .outputs
                         .into_iter()
@@ -398,13 +698,15 @@ fn worker_loop<E, F>(
                 // serving — later submissions error immediately.
                 let msg = format!("serve worker failed: {e}");
                 for f in drain.borrow_mut().inflight.values() {
-                    f.ticket.fulfill(Err(anyhow::anyhow!("{msg}")));
                     stats.requests_failed.inc();
+                    stats.request_latency.record(f.submitted.elapsed().as_nanos() as u64);
+                    f.ticket.fulfill(Err(anyhow::anyhow!("{msg}")));
                 }
                 queue.close();
                 while let Some(item) = queue.try_pop() {
-                    item.ticket.fulfill(Err(anyhow::anyhow!("{msg}")));
                     stats.requests_failed.inc();
+                    stats.request_latency.record(item.submitted.elapsed().as_nanos() as u64);
+                    item.ticket.fulfill(Err(anyhow::anyhow!("{msg}")));
                 }
                 return;
             }
@@ -418,6 +720,9 @@ mod tests {
     use crate::envs::hypergrid::HypergridEnv;
     use crate::reward::hypergrid::HypergridReward;
     use crate::runtime::policy::{PolicyShape, UniformPolicy};
+    use crate::serve::request::is_timeout;
+    use std::sync::Condvar;
+    use std::time::Duration;
 
     fn service(b: usize) -> SamplerService<Vec<i32>> {
         let env = HypergridEnv::new(2, 6, HypergridReward::standard(6));
@@ -664,5 +969,290 @@ mod tests {
         assert_eq!(reg.histogram("serve.first_dispatch_latency").count(), 1);
         let occ = reg.gauge("serve.occupancy").get();
         assert!(occ > 0.0 && occ <= 1.0, "occupancy gauge set after drain: {occ}");
+    }
+
+    // ---- production-envelope tests (bounded queue, deadlines, fairness) ----
+
+    #[derive(Default)]
+    struct GateState {
+        arrived: bool,
+        open: bool,
+    }
+    type Gate = Arc<(Mutex<GateState>, Condvar)>;
+
+    /// A policy that parks every `eval` until the gate opens, and flags
+    /// when the worker first arrives — lets tests line up queue states
+    /// deterministically instead of racing on sleeps.
+    struct GatedPolicy {
+        inner: UniformPolicy,
+        gate: Gate,
+    }
+
+    impl BatchPolicy for GatedPolicy {
+        fn shape(&self) -> PolicyShape {
+            self.inner.shape()
+        }
+        fn eval(
+            &mut self,
+            obs: &[f32],
+            fwd: &[f32],
+            bwd: &[f32],
+        ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+            let (m, cv) = &*self.gate;
+            let mut st = m.lock().unwrap();
+            st.arrived = true;
+            cv.notify_all();
+            while !st.open {
+                st = cv.wait(st).unwrap();
+            }
+            drop(st);
+            self.inner.eval(obs, fwd, bwd)
+        }
+    }
+
+    fn gated_service(b: usize, cap: Option<usize>) -> (SamplerService<Vec<i32>>, Gate) {
+        let env = HypergridEnv::new(2, 6, HypergridReward::standard(6));
+        let shape = PolicyShape::of_env(&env, b);
+        let gate: Gate = Arc::new((Mutex::new(GateState::default()), Condvar::new()));
+        let g = Arc::clone(&gate);
+        let svc = SamplerService::spawn_with(
+            env,
+            move || {
+                Ok(Box::new(GatedPolicy { inner: UniformPolicy::new(shape), gate: g })
+                    as Box<dyn BatchPolicy>)
+            },
+            Arc::new(Registry::new()),
+            cap,
+        );
+        (svc, gate)
+    }
+
+    fn wait_arrived(gate: &Gate) {
+        let (m, cv) = &**gate;
+        let mut st = m.lock().unwrap();
+        while !st.arrived {
+            st = cv.wait(st).unwrap();
+        }
+    }
+
+    fn open_gate(gate: &Gate) {
+        let (m, cv) = &**gate;
+        m.lock().unwrap().open = true;
+        cv.notify_all();
+    }
+
+    /// Satellite: bounded-queue admission. With the worker parked mid-eval
+    /// and a capacity-1 queue, the first extra submission queues, the
+    /// second is shed (`SubmitOutcome::Shed`, `serve.shed`), and after the
+    /// gate opens the admitted requests complete — the accounting and the
+    /// latency histogram cover all three resolutions.
+    #[test]
+    fn bounded_queue_sheds_and_counts() {
+        let (svc, gate) = gated_service(2, Some(1));
+        let t_a = svc.submit(SampleRequest { n_samples: 2, seed: 1 });
+        wait_arrived(&gate); // worker parked in eval; backlog empty
+        let t_b = match svc.try_submit(SampleRequest { n_samples: 2, seed: 2 }, SubmitOptions::default()) {
+            SubmitOutcome::Ticket(t) => t,
+            other => panic!("expected admission, got {other:?}"),
+        };
+        assert!(
+            matches!(
+                svc.try_submit(SampleRequest { n_samples: 2, seed: 3 }, SubmitOptions::default()),
+                SubmitOutcome::Shed
+            ),
+            "capacity-1 queue must shed the second extra request"
+        );
+        assert_eq!(svc.stats().shed, 1);
+        // submit() over a full queue resolves the same way, via a
+        // pre-failed ticket.
+        let t_d = svc.submit(SampleRequest { n_samples: 2, seed: 4 });
+        assert!(t_d.wait().is_err());
+        open_gate(&gate);
+        assert_eq!(t_a.wait().unwrap().len(), 2);
+        assert_eq!(t_b.wait().unwrap().len(), 2);
+        let snap = svc.stats();
+        assert_eq!(snap.requests_submitted, 4);
+        assert_eq!(snap.requests_completed, 2);
+        assert_eq!(snap.requests_failed, 2);
+        assert_eq!(snap.shed, 2);
+        assert_eq!(
+            svc.registry().histogram("serve.request_latency").count(),
+            4,
+            "failed (shed) requests record latency too"
+        );
+        svc.shutdown();
+    }
+
+    /// Satellite: in-queue deadline expiry. A request whose deadline passes
+    /// while it waits behind a parked worker is failed at admission with a
+    /// recognizable timeout error; the service keeps serving.
+    #[test]
+    fn deadline_expires_in_queue() {
+        let (svc, gate) = gated_service(2, None);
+        let t_a = svc.submit(SampleRequest { n_samples: 1, seed: 1 });
+        wait_arrived(&gate);
+        let t_b = svc.submit_opts(
+            SampleRequest { n_samples: 1, seed: 2 },
+            SubmitOptions {
+                deadline: Some(Instant::now() + Duration::from_millis(20)),
+                ..SubmitOptions::default()
+            },
+        );
+        std::thread::sleep(Duration::from_millis(50)); // let it expire in queue
+        open_gate(&gate);
+        let err = t_b.wait().unwrap_err();
+        assert!(is_timeout(&err), "expected a timeout error, got: {err}");
+        assert_eq!(t_a.wait().unwrap().len(), 1);
+        let snap = svc.stats();
+        assert_eq!(snap.requests_timedout, 1);
+        assert_eq!(snap.requests_failed, 1);
+        assert_eq!(snap.requests_completed, 1);
+        svc.shutdown();
+    }
+
+    /// A policy that sleeps per eval — slow enough that deadlines and
+    /// fairness observations are deterministic at test timescales.
+    struct SlowPolicy {
+        inner: UniformPolicy,
+        delay: Duration,
+    }
+
+    impl BatchPolicy for SlowPolicy {
+        fn shape(&self) -> PolicyShape {
+            self.inner.shape()
+        }
+        fn eval(
+            &mut self,
+            obs: &[f32],
+            fwd: &[f32],
+            bwd: &[f32],
+        ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+            std::thread::sleep(self.delay);
+            self.inner.eval(obs, fwd, bwd)
+        }
+    }
+
+    fn slow_service(b: usize, delay: Duration) -> SamplerService<Vec<i32>> {
+        let env = HypergridEnv::new(2, 6, HypergridReward::standard(6));
+        let shape = PolicyShape::of_env(&env, b);
+        SamplerService::spawn(env, move || {
+            Ok(Box::new(SlowPolicy { inner: UniformPolicy::new(shape), delay })
+                as Box<dyn BatchPolicy>)
+        })
+    }
+
+    /// Satellite: mid-drain deadline expiry. A request far too large to
+    /// finish by its deadline is cancelled *while draining* — the ticket
+    /// resolves with a timeout well within 2× the deadline (not after all
+    /// n trajectories), already-running slot work is discarded harmlessly,
+    /// and the service keeps serving afterwards.
+    #[test]
+    fn deadline_expires_mid_drain() {
+        let svc = slow_service(2, Duration::from_millis(5));
+        let deadline = Duration::from_millis(300);
+        let t0 = Instant::now();
+        let t_big = svc.submit_opts(
+            SampleRequest { n_samples: 500, seed: 7 },
+            SubmitOptions {
+                deadline: Some(t0 + deadline),
+                ..SubmitOptions::default()
+            },
+        );
+        let err = t_big.wait().unwrap_err();
+        let elapsed = t0.elapsed();
+        assert!(is_timeout(&err), "expected a timeout error, got: {err}");
+        assert!(
+            elapsed < 2 * deadline,
+            "cancel must land promptly after the deadline, took {elapsed:?}"
+        );
+        // The drain survived the cancellation: stragglers were discarded,
+        // and fresh requests are served.
+        let outs = svc.sample(3, 9).unwrap();
+        assert_eq!(outs.len(), 3);
+        let snap = svc.stats();
+        assert_eq!(snap.requests_timedout, 1);
+        assert_eq!(snap.requests_completed, 1);
+        assert_eq!(
+            snap.requests_submitted,
+            snap.requests_completed + snap.requests_failed
+        );
+        svc.shutdown();
+    }
+
+    /// Satellite: per-client round-robin fairness. A small request from
+    /// client 2 submitted behind a huge request from client 1 interleaves
+    /// into the slot table and resolves while the big one is still
+    /// draining — no starvation.
+    #[test]
+    fn concurrent_clients_do_not_starve() {
+        let svc = slow_service(2, Duration::from_millis(2));
+        let t_big = svc.submit_opts(
+            SampleRequest { n_samples: 300, seed: 1 },
+            SubmitOptions { client: 1, ..SubmitOptions::default() },
+        );
+        let t_small = svc.submit_opts(
+            SampleRequest { n_samples: 4, seed: 2 },
+            SubmitOptions { client: 2, ..SubmitOptions::default() },
+        );
+        let outs = t_small.wait().unwrap();
+        assert_eq!(outs.len(), 4);
+        assert!(
+            !t_big.is_ready(),
+            "the huge request must still be draining when the small one resolves"
+        );
+        assert_eq!(t_big.wait().unwrap().len(), 300);
+        let snap = svc.stats();
+        assert_eq!(snap.requests_completed, 2);
+        svc.shutdown();
+    }
+
+    /// Temperature rides `SubmitOptions` end-to-end: T = 1 is bitwise
+    /// identical to a plain submit; an invalid temperature fails the
+    /// request (and the whole worker refuses it before corrupting state).
+    #[test]
+    fn submit_opts_temperature_end_to_end() {
+        let svc = service(4);
+        let a: Vec<Vec<i32>> = svc
+            .submit_opts(
+                SampleRequest { n_samples: 10, seed: 5 },
+                SubmitOptions { temperature: 1.0, ..SubmitOptions::default() },
+            )
+            .wait()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.obj)
+            .collect();
+        let b: Vec<Vec<i32>> =
+            svc.sample(10, 5).unwrap().into_iter().map(|o| o.obj).collect();
+        assert_eq!(a, b, "T = 1.0 must be bitwise identical to the default path");
+        svc.shutdown();
+
+        // Hot sampling still returns valid objects (distribution checks
+        // live in the rng/sampler tests; here we prove the plumbing).
+        let svc = service(4);
+        let outs = svc
+            .submit_opts(
+                SampleRequest { n_samples: 6, seed: 8 },
+                SubmitOptions { temperature: 3.0, ..SubmitOptions::default() },
+            )
+            .wait()
+            .unwrap();
+        assert_eq!(outs.len(), 6);
+        for o in &outs {
+            assert!(o.obj.iter().all(|&c| (0..6).contains(&c)));
+        }
+
+        // An invalid temperature fails only its own request — the service
+        // keeps serving everyone else.
+        let err = svc
+            .submit_opts(
+                SampleRequest { n_samples: 2, seed: 1 },
+                SubmitOptions { temperature: 0.0, ..SubmitOptions::default() },
+            )
+            .wait()
+            .unwrap_err();
+        assert!(err.to_string().contains("invalid temperature"), "{err}");
+        assert_eq!(svc.sample(2, 2).unwrap().len(), 2);
+        svc.shutdown();
     }
 }

@@ -153,6 +153,21 @@ impl Rng {
     ///
     /// Returns the sampled index. Panics (debug) if no action is legal.
     pub fn categorical_masked(&mut self, logits: &[f32], mask: &[bool]) -> usize {
+        self.categorical_masked_scaled(logits, mask, 1.0)
+    }
+
+    /// [`Rng::categorical_masked`] at sampling temperature `T = 1/inv_t`:
+    /// Gumbel-max over `logits[i]·inv_t`, i.e. softmax(logits/T) restricted
+    /// to the mask. `inv_t = 1.0` is **bitwise identical** to the unscaled
+    /// path (`x·1.0 ≡ x` in IEEE-754), and one Gumbel is drawn per legal
+    /// index regardless of `inv_t`, so temperature never perturbs the RNG
+    /// stream consumption the determinism contract counts.
+    pub fn categorical_masked_scaled(
+        &mut self,
+        logits: &[f32],
+        mask: &[bool],
+        inv_t: f64,
+    ) -> usize {
         debug_assert_eq!(logits.len(), mask.len());
         let mut best = usize::MAX;
         let mut best_v = f64::NEG_INFINITY;
@@ -160,7 +175,7 @@ impl Rng {
             if !mask[i] {
                 continue;
             }
-            let v = logits[i] as f64 + self.gumbel();
+            let v = logits[i] as f64 * inv_t + self.gumbel();
             if v > best_v {
                 best_v = v;
                 best = i;
@@ -307,6 +322,39 @@ mod tests {
             let p = (logits[i] as f64).exp() / z;
             let phat = counts[i] as f64 / n as f64;
             assert!((p - phat).abs() < 0.01, "i={i} p={p} phat={phat}");
+        }
+    }
+
+    /// `inv_t = 1.0` is the identity (bitwise: same seed, same draws), a
+    /// sharp `inv_t` concentrates on the argmax, a flat one approaches
+    /// uniform over the legal entries.
+    #[test]
+    fn categorical_masked_scaled_temperature_behavior() {
+        let logits = [1.0f32, 0.0, 2.0, -1.0];
+        let mask = [true, true, true, false];
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..500 {
+            assert_eq!(
+                a.categorical_masked(&logits, &mask),
+                b.categorical_masked_scaled(&logits, &mask, 1.0),
+                "inv_t = 1.0 must replay the T = 1 stream exactly"
+            );
+        }
+        let mut r = Rng::new(10);
+        let n = 20_000;
+        let (mut sharp_argmax, mut counts) = (0usize, [0usize; 4]);
+        for _ in 0..n {
+            if r.categorical_masked_scaled(&logits, &mask, 50.0) == 2 {
+                sharp_argmax += 1;
+            }
+            counts[r.categorical_masked_scaled(&logits, &mask, 1e-3)] += 1;
+        }
+        assert!(sharp_argmax as f64 / n as f64 > 0.999, "T→0 is greedy");
+        assert_eq!(counts[3], 0, "mask still respected at any temperature");
+        for &c in &counts[..3] {
+            let p = c as f64 / n as f64;
+            assert!((p - 1.0 / 3.0).abs() < 0.02, "T→∞ is uniform, got {p}");
         }
     }
 

@@ -133,3 +133,166 @@ fn service_runs_on_bitseq_fixed_length_sequences() {
     }
     svc.shutdown();
 }
+
+// ---------------------------------------------------------------------------
+// HTTP front end over real TCP sockets: the full network stack under test is
+// conn parse → admission (bounded queue) → fairness lanes → drain → JSON.
+// ---------------------------------------------------------------------------
+
+mod http_stack {
+    use super::*;
+    use gfnx::serve::conn::HttpClient;
+    use gfnx::serve::{HttpServer, HttpServerConfig, SamplerService, ServeIdentity};
+    use gfnx::telemetry::Registry;
+    use gfnx::util::json::Json;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    /// A policy whose FIRST eval stalls for `hold`, then behaves uniformly.
+    /// Lets a test wedge the worker mid-drain deterministically (no timing
+    /// races: while the worker sleeps in eval, nothing drains the queue).
+    struct SlowStart {
+        inner: UniformPolicy,
+        hold: Duration,
+        held: bool,
+    }
+
+    impl BatchPolicy for SlowStart {
+        fn shape(&self) -> PolicyShape {
+            BatchPolicy::shape(&self.inner)
+        }
+        fn eval(
+            &mut self,
+            obs: &[f32],
+            fwd: &[f32],
+            bwd: &[f32],
+        ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+            if !self.held {
+                self.held = true;
+                std::thread::sleep(self.hold);
+            }
+            self.inner.eval(obs, fwd, bwd)
+        }
+    }
+
+    fn serve_http(
+        queue_cap: Option<usize>,
+        hold: Duration,
+        b: usize,
+    ) -> (HttpServer, Arc<SamplerService<Vec<i32>>>) {
+        let env = hypergrid(8);
+        let shape = PolicyShape::of_env(&env, b);
+        let svc = Arc::new(SamplerService::spawn_with(
+            env,
+            move || {
+                Ok(Box::new(SlowStart { inner: UniformPolicy::new(shape), hold, held: false })
+                    as Box<dyn BatchPolicy>)
+            },
+            Arc::new(Registry::new()),
+            queue_cap,
+        ));
+        let identity = ServeIdentity {
+            family: "hypergrid".to_string(),
+            config: "hypergrid_small".to_string(),
+            model: "mlp".to_string(),
+        };
+        let http = HttpServer::serve(
+            "127.0.0.1:0",
+            Arc::clone(&svc),
+            identity,
+            HttpServerConfig::default(),
+        )
+        .unwrap();
+        (http, svc)
+    }
+
+    #[test]
+    fn flood_against_bounded_queue_sheds_with_503_not_oom() {
+        // Wedge the worker (first eval holds 800 ms), then flood 10 requests
+        // at a cap-2 queue: exactly 2 are admitted, 8 get 503 + Retry-After.
+        let (http, svc) = serve_http(Some(2), Duration::from_millis(800), 4);
+        let addr = http.local_addr().to_string();
+        let mut wedge = HttpClient::connect(&addr).unwrap();
+        let wedge_thread = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = HttpClient::connect(&addr).unwrap();
+                c.post_json("/sample", "{\"n\": 8, \"seed\": 1}").unwrap()
+            })
+        };
+        std::thread::sleep(Duration::from_millis(200)); // worker now asleep in eval
+        let floods: Vec<_> = (0..10)
+            .map(|k| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = HttpClient::connect(&addr).unwrap();
+                    let body = format!("{{\"n\": 2, \"seed\": {}}}", 100 + k);
+                    c.post_json("/sample", &body).unwrap().0
+                })
+            })
+            .collect();
+        let statuses: Vec<u16> = floods.into_iter().map(|h| h.join().unwrap()).collect();
+        let ok = statuses.iter().filter(|&&s| s == 200).count();
+        let shed = statuses.iter().filter(|&&s| s == 503).count();
+        assert_eq!((ok, shed), (2, 8), "statuses: {statuses:?}");
+        let (s, _) = wedge_thread.join().unwrap();
+        assert_eq!(s, 200, "the wedging request itself completes");
+        // The shed counter made it to the registry served by /stats.
+        let (s, body) = wedge.get("/stats").unwrap();
+        assert_eq!(s, 200);
+        let stats = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let counters = stats.req("registry").unwrap().req("counters").unwrap();
+        let shed_count = counters.req("serve.shed").unwrap().as_f64().unwrap();
+        assert_eq!(shed_count as usize, 8);
+        http.shutdown();
+        drop(svc);
+    }
+
+    #[test]
+    fn expired_deadline_gets_504_within_twice_the_deadline() {
+        // Wedge the worker past the request's deadline: the heap sweep fails
+        // it mid-drain, and the handler's 2x wait_timeout bounds the answer
+        // even if the worker stayed wedged.
+        let (http, svc) = serve_http(None, Duration::from_millis(700), 4);
+        let addr = http.local_addr().to_string();
+        let mut client = HttpClient::connect(&addr).unwrap();
+        let t0 = Instant::now();
+        let (status, body) = client
+            .post_json("/sample", "{\"n\": 64, \"seed\": 3, \"deadline_ms\": 250}")
+            .unwrap();
+        let elapsed = t0.elapsed();
+        assert_eq!(status, 504, "{}", String::from_utf8_lossy(&body));
+        assert!(
+            elapsed < Duration::from_millis(2 * 250 + 750),
+            "504 took {elapsed:?}, budget is 2x the 250 ms deadline (+ slack)"
+        );
+        // The service survives the expiry: a follow-up request succeeds.
+        let (status, _) = client.post_json("/sample", "{\"n\": 3, \"seed\": 4}").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(svc.stats().requests_timedout, 1);
+        http.shutdown();
+        drop(svc);
+    }
+
+    #[test]
+    fn stats_and_health_routes_answer_over_real_sockets() {
+        let (http, svc) = serve_http(None, Duration::ZERO, 4);
+        let mut client = HttpClient::connect(&http.local_addr().to_string()).unwrap();
+        let (status, _) = client.post_json("/sample", "{\"n\": 5, \"seed\": 11}").unwrap();
+        assert_eq!(status, 200);
+        let (status, body) = client.get("/stats").unwrap();
+        assert_eq!(status, 200);
+        let stats = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(stats.req("family").unwrap().as_str(), Some("hypergrid"));
+        assert_eq!(stats.req("model").unwrap().as_str(), Some("mlp"));
+        let counters = stats.req("registry").unwrap().req("counters").unwrap();
+        let completed =
+            counters.req("serve.requests_completed").unwrap().as_f64().unwrap();
+        assert!(completed >= 1.0);
+        let (status, body) = client.get("/healthz").unwrap();
+        assert_eq!(status, 200);
+        assert!(String::from_utf8_lossy(&body).contains("true"));
+        http.shutdown();
+        drop(svc);
+    }
+}
