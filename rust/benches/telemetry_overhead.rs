@@ -14,6 +14,11 @@
 //!    (`spans/iter x disabled-span-ns / iter-ns`), which is asserted to be
 //!    under a few percent. This is the invariant CI enforces: shipping the
 //!    instrumented binary costs (nearly) nothing unless `--telemetry` is on.
+//! 4. **Trace sites**: ns per `trace::try_start` when tracing is off (one
+//!    `Relaxed` load, asserted < 100 ns) and the amortized cost at the
+//!    default 1/64 sampling rate including the sampled records' full
+//!    mint-and-push path — asserted under 3% of a training iteration (one
+//!    traced unit per step/request).
 //!
 //! Run:   cargo bench --bench telemetry_overhead
 //! Env:   GFNX_TELEMETRY_PROBE   span-probe loop count (default 2_000_000)
@@ -130,6 +135,43 @@ fn main() {
          ({spans_per_iter:.0} spans x {per_span_off:.1} ns vs {iter_ns_off:.0} ns/iter)"
     );
 
+    // 4) Trace call sites. Disabled: `try_start` is one Relaxed load.
+    // Enabled at the default 1/64 rate: most calls add a counter fetch_add;
+    // one in 64 pays the full mint + record + ring-push path (finish()
+    // included, so the sampled branch is the real one, not a stub).
+    use gfnx::telemetry::trace;
+    trace::set_trace_rate(0.0);
+    let trace_off_ns = ns_per_op(probe_n, |i| {
+        std::hint::black_box(trace::try_start("overhead.trace"));
+        std::hint::black_box(i);
+    });
+    let per_trace_off = (trace_off_ns - baseline_ns).max(0.0);
+    trace::set_trace_rate(trace::DEFAULT_RATE);
+    let trace_on_ns = ns_per_op(probe_n, |i| {
+        if let Some(tr) = trace::try_start("overhead.trace") {
+            tr.finish(true);
+        }
+        std::hint::black_box(i);
+    });
+    trace::set_trace_rate(0.0);
+    let per_trace_on = (trace_on_ns - baseline_ns).max(0.0);
+    // One traced unit (request / engine step) per iteration: the amortized
+    // enabled cost as a fraction of the measured iteration.
+    let trace_enabled_pct = 100.0 * per_trace_on / iter_ns_off;
+    println!(
+        "  trace site: disabled {per_trace_off:.2} ns, enabled@default {per_trace_on:.1} ns \
+         -> {trace_enabled_pct:.4}% of an iteration"
+    );
+    assert!(
+        per_trace_off < 100.0,
+        "disabled trace::try_start costs {per_trace_off:.1} ns — the off fast path regressed"
+    );
+    assert!(
+        trace_enabled_pct < 3.0,
+        "tracing at the default rate predicted to cost {trace_enabled_pct:.2}% of an iteration \
+         ({per_trace_on:.1} ns vs {iter_ns_off:.0} ns/iter)"
+    );
+
     let mut table = BenchTable::new(
         "telemetry_overhead — span cost and end-to-end impact",
         &["Metric", "Value"],
@@ -140,6 +182,9 @@ fn main() {
     table.row_strs(&["train it/s (telemetry on)", &format!("{on}")]);
     table.row_strs(&["span events / iteration", &format!("{spans_per_iter:.0}")]);
     table.row_strs(&["predicted overhead when off", &format!("{predicted_pct:.4}%")]);
+    table.row_strs(&["trace site disabled (ns/call)", &format!("{per_trace_off:.2}")]);
+    table.row_strs(&["trace site enabled@1/64 (ns/call)", &format!("{per_trace_on:.1}")]);
+    table.row_strs(&["trace overhead at default rate", &format!("{trace_enabled_pct:.4}%")]);
     table.print();
 
     let mut bj = BenchJson::new("telemetry");
@@ -153,6 +198,9 @@ fn main() {
         ("it_per_sec_on", itps_json(&on)),
         ("spans_per_iter", Json::Num(spans_per_iter)),
         ("predicted_overhead_pct_off", Json::Num(predicted_pct)),
+        ("trace_disabled_ns", Json::Num(per_trace_off)),
+        ("trace_enabled_ns", Json::Num(per_trace_on)),
+        ("trace_overhead_pct", Json::Num(trace_enabled_pct)),
         ("telemetry", gfnx::telemetry::global().phases_json()),
     ]));
     match bj.write() {

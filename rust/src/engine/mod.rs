@@ -25,6 +25,11 @@
 //! for every consumed batch in a per-staleness histogram
 //! ([`EngineStats::staleness_hist`]).
 //!
+//! With tracing on ([`telemetry::trace`](crate::telemetry::trace)), sampled
+//! learner steps record an `engine_step` waterfall — rollout → push_wait →
+//! pop_wait → learn → publish, annotated with actor/version/staleness —
+//! and every step touches the `engine.learner_heartbeat_s` watchdog gauge.
+//!
 //! ## Determinism
 //!
 //! Async mode is nondeterministic by construction (thread interleaving
@@ -52,9 +57,11 @@ use crate::envs::VecEnv;
 use crate::runtime::backend::SnapshotBackend;
 use crate::runtime::policy::BatchPolicy;
 use crate::serve::traj_seed;
+use crate::telemetry::trace::{self, TraceRecord, TraceSegment};
 use channel::Bounded;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -160,6 +167,13 @@ pub struct TaggedBatch<Obj> {
     pub actor: usize,
     /// Whether this was a replay (backward-rollout) batch.
     pub replayed: bool,
+    /// Actor-side assembly time of this batch (0 when tracing is off).
+    pub rollout_ns: u64,
+    /// Time the producing actor spent blocked pushing this batch
+    /// (backpressure). The actor stores it *after* `push_blocking` returns,
+    /// so a learner that pops the batch immediately may read 0 — a benign
+    /// race; the value is best-effort trace annotation, never control flow.
+    pub push_wait_ns: Arc<AtomicU64>,
 }
 
 /// What the engine needs from "the thing that learns": consume one tagged
@@ -290,6 +304,57 @@ impl EngineStats {
     }
 }
 
+/// Timings of one sampled learner step, waiting for the publish phase (the
+/// body loop owns publish timing) before the `engine_step` trace record is
+/// assembled.
+struct PendingStepTrace {
+    rollout_ns: u64,
+    push_wait_ns: u64,
+    pop_wait_ns: u64,
+    learn_ns: u64,
+    actor: usize,
+    version: u64,
+    staleness: u64,
+    replayed: bool,
+}
+
+/// Assemble and push one `engine_step` trace record. The phases overlap in
+/// wall-clock (the actor rolls out batch `i+1` while the learner trains on
+/// batch `i`), so segments are laid out at *logical* sequential offsets —
+/// the waterfall reads as one batch's journey through the pipeline, and
+/// `total_ns` is that journey's critical-path length, not the step's
+/// wall-clock.
+fn push_step_trace(p: PendingStepTrace, publish_ns: u64, step: u64) {
+    let phases = [
+        ("rollout", p.rollout_ns),
+        ("push_wait", p.push_wait_ns),
+        ("pop_wait", p.pop_wait_ns),
+        ("learn", p.learn_ns),
+        ("publish", publish_ns),
+    ];
+    let mut segments = Vec::with_capacity(phases.len());
+    let mut cursor = 0u64;
+    for (name, dur_ns) in phases {
+        segments.push(TraceSegment { name: name.to_string(), start_ns: cursor, dur_ns });
+        cursor += dur_ns;
+    }
+    let tracer = trace::tracer();
+    tracer.push_record(TraceRecord {
+        id: tracer.mint_id(),
+        kind: "engine_step".to_string(),
+        total_ns: cursor,
+        ok: true,
+        segments,
+        meta: vec![
+            ("step".to_string(), step as f64),
+            ("actor".to_string(), p.actor as f64),
+            ("version".to_string(), p.version as f64),
+            ("staleness".to_string(), p.staleness as f64),
+            ("replayed".to_string(), if p.replayed { 1.0 } else { 0.0 }),
+        ],
+    });
+}
+
 /// Runs its closure on drop — the engine's shutdown guard (see its use in
 /// [`run`]).
 struct CloseOnDrop<F: FnMut()>(F);
@@ -358,6 +423,9 @@ fn actor_loop<E, P>(
             }
         }
         let eps = explore.at(snap.steps);
+        // Trace annotations are clock reads only (no RNG, no control flow),
+        // so the sync-mode parity contract holds with tracing on.
+        let rollout_start = trace::trace_enabled().then(Instant::now);
         let assembled = {
             let _t = crate::span!("engine.rollout");
             assemble_batch_with_policy(
@@ -370,6 +438,8 @@ fn actor_loop<E, P>(
                 extra,
             )
         };
+        let rollout_ns =
+            rollout_start.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
         let item = match assembled {
             Ok((batch, objs, replayed)) => {
                 if !replayed {
@@ -377,17 +447,31 @@ fn actor_loop<E, P>(
                         bank_top_half(buf, &batch, &objs);
                     }
                 }
-                Ok(TaggedBatch { batch, objs, version: snap.version, actor, replayed })
+                Ok(TaggedBatch {
+                    batch,
+                    objs,
+                    version: snap.version,
+                    actor,
+                    replayed,
+                    rollout_ns,
+                    push_wait_ns: Arc::new(AtomicU64::new(0)),
+                })
             }
             Err(e) => Err(e),
         };
         let failed = item.is_err();
+        let push_wait =
+            item.as_ref().ok().map(|t| Arc::clone(&t.push_wait_ns));
+        let push_start = trace::trace_enabled().then(Instant::now);
         let pushed = {
             // Time spent here beyond the channel's own bookkeeping is the
             // actor blocked on backpressure (queue full).
             let _t = crate::span!("engine.actor_push_wait");
             chan.push_blocking(item)
         };
+        if let (Some(pw), Some(t0)) = (push_wait, push_start) {
+            pw.store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
         if !pushed || failed {
             // Channel closed (learner done) or own rollout failure — either
             // way this actor is finished.
@@ -470,17 +554,30 @@ where
         let learn = |stats: &mut EngineStats,
                      learner: &mut L,
                      version: u64|
-         -> anyhow::Result<()> {
+         -> anyhow::Result<Option<PendingStepTrace>> {
+            // Sampling decision is counter-based (no RNG) and made up
+            // front, so an untraced step pays one relaxed load and zero
+            // clock reads beyond the existing spans.
+            let traced = trace::sampled();
+            let pop_start = traced.then(Instant::now);
             let mut tagged = {
                 // Learner blocked on an empty queue (actor-bound runs).
                 let _t = crate::span!("engine.learner_pop_wait");
                 chan.pop_blocking()
             }
             .expect("engine channel closed while the learner still runs")?;
+            let pop_wait_ns =
+                pop_start.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
+            let learn_start = traced.then(Instant::now);
             let s = {
                 let _t = crate::span!("engine.learn");
                 learner.learn(&mut tagged)
             }?;
+            let learn_ns =
+                learn_start.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
+            // Liveness heartbeat for the watchdog: unconditional, one gauge
+            // store per step on the shared registry clock.
+            trace::beat(crate::telemetry::global(), "engine.learner_heartbeat_s");
             anyhow::ensure!(
                 s.loss.is_finite(),
                 "engine loss diverged at step {} (actor {}, version {})",
@@ -503,13 +600,24 @@ where
             stats.final_log_z = s.log_z;
             stats.final_mean_log_reward = s.mean_log_reward;
             stats.iters += 1;
-            Ok(())
+            Ok(traced.then(|| PendingStepTrace {
+                rollout_ns: tagged.rollout_ns,
+                push_wait_ns: tagged.push_wait_ns.load(Ordering::Relaxed),
+                pop_wait_ns,
+                learn_ns,
+                actor: tagged.actor,
+                version,
+                staleness: version - tagged.version,
+                replayed: tagged.replayed,
+            }))
         };
         let body = (|| -> anyhow::Result<()> {
             for step in 0..iters {
-                learn(&mut stats, learner, version)?;
+                let pending = learn(&mut stats, learner, version)?;
+                let mut publish_ns = 0u64;
                 if (step + 1) % cfg.publish_every == 0 || step + 1 == iters {
                     version += 1;
+                    let publish_start = pending.is_some().then(Instant::now);
                     // Per-publish snapshot latency: snapshot + hub publish +
                     // optional checkpoint (the user `on_publish` hook is
                     // excluded — it is not engine cost).
@@ -526,9 +634,17 @@ where
                         }
                         snap
                     };
+                    publish_ns = publish_start
+                        .map(|t| t.elapsed().as_nanos() as u64)
+                        .unwrap_or(0);
                     stats.publishes += 1;
                     crate::count!("engine.publishes", 1);
                     on_publish(&snap)?;
+                }
+                // Sampled step trace: the publish segment is 0 on
+                // non-publish steps (nothing was published).
+                if let Some(p) = pending {
+                    push_step_trace(p, publish_ns, step);
                 }
             }
             Ok(())
@@ -685,6 +801,71 @@ mod tests {
             assert!(reg.histogram(span).count() > 0, "span '{span}' did not record");
         }
         assert!(reg.value_histogram("engine.staleness").count() >= iters);
+    }
+
+    /// Step tracing at rate 1 records a full `engine_step` waterfall per
+    /// learner step (rollout → push_wait → pop_wait → learn → publish at
+    /// logical offsets) — without perturbing the bitwise sync parity,
+    /// because the sampler is counter-based and instrumentation only reads
+    /// clocks.
+    #[test]
+    fn step_traces_record_without_perturbing_sync_parity() {
+        let _guard = crate::telemetry::flag_test_lock();
+        trace::set_trace_rate(1.0);
+        trace::reset_sampler();
+
+        let e = env(6);
+        let iters = 20u64;
+        let seed = 13u64;
+        let mut serial =
+            Trainer::with_backend(&e, backend(&e, "tb", seed), seed, EpsSchedule::none())
+                .unwrap();
+        let mut serial_losses = Vec::new();
+        for _ in 0..iters {
+            let (s, _) = serial.train_iter(&ExtraSource::None).unwrap();
+            serial_losses.push(s.loss.to_bits());
+        }
+        let mut be = backend(&e, "tb", seed);
+        let stats = train(
+            &e,
+            &mut be,
+            EpsSchedule::none(),
+            &ExtraSource::None,
+            &EngineConfig::sync(seed),
+            iters,
+            |_| Ok(()),
+        )
+        .unwrap();
+        trace::set_trace_rate(0.0);
+
+        assert_eq!(
+            stats.losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+            serial_losses,
+            "tracing must not change the loss trace"
+        );
+        assert_eq!(param_bits(&serial.backend), param_bits(&be));
+
+        let steps: Vec<_> = trace::tracer()
+            .recent(iters as usize)
+            .into_iter()
+            .filter(|r| r.kind == "engine_step")
+            .collect();
+        assert!(!steps.is_empty(), "rate-1 tracing must record step waterfalls");
+        let rec = &steps[0];
+        let names: Vec<&str> = rec.segments.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["rollout", "push_wait", "pop_wait", "learn", "publish"]);
+        assert_eq!(
+            rec.total_ns,
+            rec.segments.iter().map(|s| s.dur_ns).sum::<u64>(),
+            "logical offsets: total is the sum of the phases"
+        );
+        assert!(rec.ok);
+        for key in ["step", "actor", "version", "staleness", "replayed"] {
+            assert!(rec.meta.iter().any(|(k, _)| k == key), "missing meta {key}");
+        }
+        // Learner heartbeat gauge was touched on the global registry clock.
+        let reg = crate::telemetry::global();
+        assert!(reg.gauge("engine.learner_heartbeat_s").get() > 0.0);
     }
 
     /// Sync-mode parity extends to replay mixing and ε-exploration: the

@@ -17,12 +17,17 @@
 //!                [--ebgfn [--sigma S] [--samples N]]   EB-GFN (ising only)
 //!                [--telemetry | --telemetry-file <p.jsonl>]   hot-path spans
 //!                [--telemetry-interval <secs>]   export cadence
+//!                [--trace <on|rate> | --trace-file <p.jsonl>]   sampled
+//!                                                engine-step waterfalls
 //!                [--listen <addr>]   (with --serve: HTTP endpoint over the
 //!                                     live hot-swapped policy)
 //!   serve        --env <family> | --config <name>  --listen <addr>
 //!                [--resume <ckpt>] [--model <mlp|transformer>]
 //!                [--queue-cap N] [--deadline-ms D] [--addr-file <p>]
 //!                [--serve-duration <secs>]
+//!                [--trace <on|rate> | --trace-file <p.jsonl>]   sampled
+//!                                                request waterfalls
+//!                [--stall-window-ms D]   /healthz watchdog window
 //!                (standalone HTTP sampling server; see README "Serving
 //!                over HTTP")
 //!   list-configs
@@ -30,6 +35,8 @@
 //!   check-bench  <BENCH_*.json...>   (validate emitted bench documents)
 //!   check-telemetry  <telemetry.jsonl> [required-span ...]   (validate a
 //!                --telemetry-file export; used by the CI telemetry smoke)
+//!   check-trace  <trace.jsonl> [required-segment ...]   (validate a
+//!                --trace-file export; used by the CI observability smoke)
 //!
 //! The default `--backend native` trains end-to-end in pure Rust with no
 //! AOT artifacts; `--backend xla` replays the fused AOT graphs (requires
@@ -52,6 +59,7 @@ use gfnx::reward::ising::torus_adjacency;
 use gfnx::runtime::{Artifact, Backend, NativeBackend, NativeConfig, NativePolicy};
 use gfnx::serve::{HttpServer, HttpServerConfig, ObjJson, SamplerService, ServeIdentity};
 use gfnx::telemetry;
+use gfnx::telemetry::trace;
 use gfnx::util::cli::{Args, Cli};
 use gfnx::util::linalg::Mat;
 use gfnx::util::logging::MetricsLog;
@@ -157,6 +165,27 @@ fn main() {
         "append periodic registry snapshots to this JSONL file (implies --telemetry)",
     )
     .flag("telemetry-interval", "1", "seconds between telemetry snapshots")
+    .flag(
+        "trace",
+        "",
+        "sampled per-request / per-step tracing: on (1/64) | off | <rate in \
+         (0,1]> (also via GFNX_TRACE; recent waterfalls are served at \
+         GET /trace)",
+    )
+    .flag(
+        "trace-file",
+        "",
+        "append completed trace records to this JSONL file (implies tracing \
+         at the default 1/64 rate when --trace is absent; validate with \
+         check-trace)",
+    )
+    .flag(
+        "stall-window-ms",
+        "",
+        "/healthz watchdog: worker-heartbeat age (ms) beyond which a worker \
+         with pending work reports worker_stalled (default 10000; also via \
+         GFNX_STALL_WINDOW_MS)",
+    )
     .switch("quiet", "suppress progress lines");
     let args = cli.parse();
     let command = args
@@ -193,6 +222,7 @@ fn main() {
         })(),
         "check-bench" => check_bench(&args),
         "check-telemetry" => check_telemetry(&args),
+        "check-trace" => check_trace(&args),
         other => Err(anyhow::anyhow!("unknown command {other:?}")),
     };
     if let Err(e) = result {
@@ -201,12 +231,17 @@ fn main() {
     }
 }
 
-/// Telemetry lifecycle of one `train` run: resolve the enabled flag from
-/// `GFNX_TELEMETRY` / `--telemetry` / `--telemetry-file`, spawn the JSONL
-/// exporter when a file is given, and render the registry at the end.
+/// Telemetry lifecycle of one `train`/`serve` run: resolve the enabled flag
+/// from `GFNX_TELEMETRY` / `--telemetry` / `--telemetry-file`, spawn the
+/// JSONL exporter when a file is given, configure sampled tracing from
+/// `GFNX_TRACE` / `--trace` / `--trace-file`, and render the registry at
+/// the end.
 struct Telemetry {
     exporter: Option<telemetry::Exporter>,
     enabled: bool,
+    /// A `--trace-file` sink is attached and must be detached (flushed) at
+    /// the end of the run.
+    trace_sink: bool,
 }
 
 fn telemetry_setup(args: &Args) -> anyhow::Result<Telemetry> {
@@ -231,15 +266,46 @@ fn telemetry_setup(args: &Args) -> anyhow::Result<Telemetry> {
     } else {
         None
     };
-    Ok(Telemetry { exporter, enabled })
+
+    // Tracing: env first, then the flag (same grammar), then the sink.
+    trace::init_from_env();
+    match args.get("trace").to_ascii_lowercase().as_str() {
+        "" => {}
+        "on" | "true" => trace::set_trace_rate(trace::DEFAULT_RATE),
+        "off" | "false" | "0" => trace::set_trace_rate(0.0),
+        other => {
+            let rate: f64 = other.parse().map_err(|_| {
+                anyhow::anyhow!("--trace must be on | off | a rate in (0, 1] (got {other:?})")
+            })?;
+            anyhow::ensure!(
+                rate > 0.0 && rate <= 1.0,
+                "--trace rate {rate} outside (0, 1]"
+            );
+            trace::set_trace_rate(rate);
+        }
+    }
+    let trace_file = args.get("trace-file");
+    let trace_sink = if trace_file.is_empty() {
+        false
+    } else {
+        if !trace::trace_enabled() {
+            trace::set_trace_rate(trace::DEFAULT_RATE);
+        }
+        trace::tracer().set_sink("gfnx.trace", std::path::Path::new(trace_file))?;
+        true
+    };
+    Ok(Telemetry { exporter, enabled, trace_sink })
 }
 
 impl Telemetry {
-    /// Write the final snapshot (joining the exporter thread) and print the
-    /// end-of-run span/counter table.
+    /// Write the final snapshot (joining the exporter thread), detach the
+    /// trace sink, and print the end-of-run span/counter table.
     fn finish(self) {
         if let Some(exp) = self.exporter {
             exp.stop();
+        }
+        if self.trace_sink {
+            trace::tracer().clear_sink();
         }
         if self.enabled {
             print!("{}", telemetry::global().render());
@@ -261,6 +327,25 @@ fn check_telemetry(args: &Args) -> anyhow::Result<()> {
     let text = std::fs::read_to_string(file)
         .map_err(|e| anyhow::anyhow!("reading {file}: {e}"))?;
     let summary = telemetry::check_telemetry_jsonl(&text, &spans)
+        .map_err(|e| anyhow::anyhow!("{file}: {e}"))?;
+    println!("ok {file} ({summary})");
+    Ok(())
+}
+
+/// Validate trace JSONL exports (CLI
+/// `check-trace <file> [required-segment ...]`; CI runs this after the
+/// observability smoke with the request-waterfall segment names).
+fn check_trace(args: &Args) -> anyhow::Result<()> {
+    let pos = args.positional();
+    anyhow::ensure!(
+        pos.len() >= 2,
+        "usage: gfnx check-trace <trace.jsonl> [required-segment ...]"
+    );
+    let file = &pos[1];
+    let segments: Vec<&str> = pos[2..].iter().map(|s| s.as_str()).collect();
+    let text = std::fs::read_to_string(file)
+        .map_err(|e| anyhow::anyhow!("reading {file}: {e}"))?;
+    let summary = telemetry::check_trace_jsonl(&text, &segments)
         .map_err(|e| anyhow::anyhow!("{file}: {e}"))?;
     println!("ok {file} ({summary})");
     Ok(())
@@ -465,6 +550,16 @@ fn start_http<Obj: ObjJson + Send + 'static>(
     let dl = args.get_u64("deadline-ms");
     anyhow::ensure!(dl > 0, "--deadline-ms must be > 0");
     cfg.default_deadline = std::time::Duration::from_millis(dl);
+    // The default already honors GFNX_STALL_WINDOW_MS; the flag, when
+    // given, wins over both.
+    let sw = args.get("stall-window-ms");
+    if !sw.is_empty() {
+        let ms: u64 = sw
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--stall-window-ms must be an integer (got {sw:?})"))?;
+        anyhow::ensure!(ms > 0, "--stall-window-ms must be > 0");
+        cfg.stall_window = std::time::Duration::from_millis(ms);
+    }
     let identity = ServeIdentity {
         family: family.to_string(),
         config: config.to_string(),

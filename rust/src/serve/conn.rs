@@ -161,12 +161,30 @@ fn find_head_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-/// Write one response. `extra_headers` are preformatted `Name: value`
+/// Media type for the JSON routes.
+pub const CONTENT_TYPE_JSON: &str = "application/json";
+
+/// Media type for Prometheus text exposition (`GET /metrics`).
+pub const CONTENT_TYPE_PROMETHEUS: &str = "text/plain; version=0.0.4";
+
+/// Write one JSON response. `extra_headers` are preformatted `Name: value`
 /// lines (no CRLF).
 pub fn write_response(
     stream: &mut TcpStream,
     status: u16,
     body: &[u8],
+    extra_headers: &[&str],
+) -> std::io::Result<()> {
+    write_response_typed(stream, status, body, CONTENT_TYPE_JSON, extra_headers)
+}
+
+/// Write one response with an explicit media type (the `/metrics` route
+/// serves Prometheus text, everything else JSON).
+pub fn write_response_typed(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &[u8],
+    content_type: &str,
     extra_headers: &[&str],
 ) -> std::io::Result<()> {
     let reason = match status {
@@ -180,7 +198,7 @@ pub fn write_response(
         _ => "Response",
     };
     let mut head = format!(
-        "HTTP/1.1 {status} {reason}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
+        "HTTP/1.1 {status} {reason}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\n",
         body.len()
     );
     for h in extra_headers {
@@ -215,6 +233,19 @@ impl HttpClient {
         path: &str,
         body: &[u8],
     ) -> anyhow::Result<(u16, Vec<u8>)> {
+        let (status, _headers, body) = self.request_full(method, path, body)?;
+        Ok((status, body))
+    }
+
+    /// Like [`HttpClient::request`] but also returns the response headers
+    /// as lowercased `(name, value)` pairs, so tests can assert media
+    /// types and backpressure hints.
+    pub fn request_full(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> anyhow::Result<(u16, Vec<(String, String)>, Vec<u8>)> {
         let head = format!(
             "{method} {path} HTTP/1.1\r\nhost: gfnx\r\ncontent-length: {}\r\n\r\n",
             body.len()
@@ -242,11 +273,14 @@ impl HttpClient {
             .and_then(|s| s.parse().ok())
             .ok_or_else(|| anyhow::anyhow!("malformed status line {status_line:?}"))?;
         let mut content_length = 0usize;
+        let mut headers = Vec::new();
         for line in lines {
             if let Some((name, value)) = line.split_once(':') {
+                let value = value.trim();
                 if name.eq_ignore_ascii_case("content-length") {
-                    content_length = value.trim().parse()?;
+                    content_length = value.parse()?;
                 }
+                headers.push((name.to_ascii_lowercase(), value.to_string()));
             }
         }
         let mut body = buf.split_off(head_end + 4);
@@ -256,7 +290,7 @@ impl HttpClient {
             body.extend_from_slice(&chunk[..n]);
         }
         body.truncate(content_length);
-        Ok((status, body))
+        Ok((status, headers, body))
     }
 
     /// POST a JSON body.
@@ -267,6 +301,14 @@ impl HttpClient {
     /// GET a path.
     pub fn get(&mut self, path: &str) -> anyhow::Result<(u16, Vec<u8>)> {
         self.request("GET", path, &[])
+    }
+
+    /// GET a path, returning status, headers, and body.
+    pub fn get_full(
+        &mut self,
+        path: &str,
+    ) -> anyhow::Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+        self.request_full("GET", path, &[])
     }
 }
 
@@ -310,6 +352,47 @@ mod tests {
         let (status, body) = c.post_json("/sample", "{\"n\":3}").unwrap();
         assert_eq!(status, 200);
         assert_eq!(body, b"{\"ok\":true}");
+    }
+
+    #[test]
+    fn responses_carry_an_explicit_content_type() {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let addr = serve_once(move |mut s| {
+            for _ in 0..2 {
+                match read_request(&mut s, 1024, Duration::from_secs(5), &stop2) {
+                    ReadOutcome::Request(req) if req.path == "/json" => {
+                        write_response(&mut s, 200, b"{}", &[]).unwrap();
+                    }
+                    ReadOutcome::Request(_) => {
+                        write_response_typed(
+                            &mut s,
+                            200,
+                            b"# TYPE x counter\nx 1\n",
+                            CONTENT_TYPE_PROMETHEUS,
+                            &[],
+                        )
+                        .unwrap();
+                    }
+                    other => panic!("expected a request, got {other:?}"),
+                }
+            }
+        });
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let ctype = |headers: &[(String, String)]| {
+            headers
+                .iter()
+                .find(|(n, _)| n == "content-type")
+                .map(|(_, v)| v.clone())
+                .expect("content-type header present")
+        };
+        let (status, headers, _) = c.get_full("/json").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(ctype(&headers), CONTENT_TYPE_JSON);
+        let (status, headers, body) = c.get_full("/metrics").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(ctype(&headers), CONTENT_TYPE_PROMETHEUS);
+        assert!(body.starts_with(b"# TYPE"));
     }
 
     #[test]

@@ -15,7 +15,32 @@
 //! - `GET /stats` — the service's telemetry [`Registry`] as JSON (the
 //!   `serve.*` counters/histograms/gauges), wrapped with the served
 //!   family/config/model identity.
-//! - `GET /healthz` — `{"ok": true}` liveness probe.
+//! - `GET /metrics` — the same registry in Prometheus text exposition
+//!   (`text/plain; version=0.0.4`): counters, gauges, and histograms with
+//!   cumulative `le` buckets, `_sum`, `_count`.
+//! - `GET /trace?n=K` — the most recent `K` (default 16) sampled request
+//!   waterfalls from the in-process trace ring (see
+//!   [`telemetry::trace`](crate::telemetry::trace)); empty unless tracing
+//!   is enabled (`GFNX_TRACE` / `--trace`).
+//! - `GET /healthz` — watchdog-backed readiness. Healthy answers `200`
+//!   `{"ok": true, "reasons": []}`; a degraded service answers `503` with
+//!   machine-readable reasons: `worker_stalled` when work is pending
+//!   (backlog or in-flight requests) but the worker heartbeat is older
+//!   than [`HttpServerConfig::stall_window`], and `service_closed` once
+//!   the admission queue has shut. The body always carries
+//!   `worker_heartbeat_age_s`, `queue_depth`, `inflight`, and
+//!   `queue_high_water` so a probe can alert on trends, not just the flip.
+//!
+//! Every JSON route answers `content-type: application/json` (error bodies
+//! included); `/metrics` answers the Prometheus media type.
+//!
+//! ## Request tracing
+//!
+//! When tracing is on, a sampled `POST /sample` mints a trace id at accept
+//! and records a waterfall — `parse`, `queue_wait` (stamped by the worker
+//! at first dispatch), per-dispatch `dispatch` slices, `drain`, and the
+//! final `write` — whose `queue_wait + drain` interval reconciles exactly
+//! with the `serve.request_latency` histogram sample for that request.
 //!
 //! ## Concurrency shape
 //!
@@ -33,10 +58,14 @@
 //!
 //! [`SampleTicket::wait_timeout`]: super::request::SampleTicket::wait_timeout
 
-use super::conn::{read_request, write_response, ReadOutcome, Request};
+use super::conn::{
+    read_request, write_response, write_response_typed, ReadOutcome, Request,
+    CONTENT_TYPE_JSON, CONTENT_TYPE_PROMETHEUS,
+};
 use super::request::{is_timeout, SampleRequest};
 use super::worker::{SamplerService, SubmitOptions, SubmitOutcome};
 use crate::reward::parsimony::PhyloTree;
+use crate::telemetry::trace::{self, ActiveTrace};
 use crate::util::json::Json;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -112,10 +141,21 @@ pub struct HttpServerConfig {
     pub idle_timeout: Duration,
     /// Per-request sample-count cap (`n`).
     pub max_n: usize,
+    /// Watchdog window for `/healthz`: with work pending (backlog or
+    /// in-flight requests), a worker heartbeat older than this flips the
+    /// probe to `503 worker_stalled`. An *idle* worker is allowed an
+    /// arbitrarily old heartbeat. Defaults to 10 s, overridable via the
+    /// `GFNX_STALL_WINDOW_MS` env var (or `serve --stall-window-ms`).
+    pub stall_window: Duration,
 }
 
 impl Default for HttpServerConfig {
     fn default() -> Self {
+        let stall_window = std::env::var("GFNX_STALL_WINDOW_MS")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .map(Duration::from_millis)
+            .unwrap_or(Duration::from_secs(10));
         HttpServerConfig {
             max_connections: 256,
             default_deadline: Duration::from_secs(30),
@@ -123,6 +163,7 @@ impl Default for HttpServerConfig {
             max_body: 64 * 1024,
             idle_timeout: Duration::from_secs(60),
             max_n: 100_000,
+            stall_window,
         }
     }
 }
@@ -262,36 +303,138 @@ fn handle_connection<Obj>(
         };
         requests.inc();
         let keep_alive = req.keep_alive;
-        let (status, body, extra): (u16, String, &[&str]) =
-            match (req.method.as_str(), req.path.as_str()) {
-                ("POST", "/sample") => match handle_sample(&req, &svc, &identity, &cfg, client) {
-                    Ok(body) => (200, body, &[]),
-                    Err(SampleError::Shed) => (
-                        503,
-                        r#"{"error":"overloaded: request shed (queue full)"}"#.to_string(),
-                        &["retry-after: 1"],
-                    ),
-                    Err(SampleError::Closed) => {
-                        (503, r#"{"error":"service is shutting down"}"#.to_string(), &[])
+        // Routes may carry a query string (`/trace?n=4`); match on the bare
+        // path and hand the query to the handler.
+        let (path, query) = match req.path.split_once('?') {
+            Some((p, q)) => (p, Some(q)),
+            None => (req.path.as_str(), None),
+        };
+        // Sampled tracing: mint the trace at accept so the waterfall covers
+        // the whole request, parse included. One relaxed atomic load when
+        // tracing is off.
+        let req_trace = if req.method == "POST" && path == "/sample" {
+            trace::try_start("http_request")
+        } else {
+            None
+        };
+        let (status, body, content_type, extra): (u16, String, &str, &[&str]) =
+            match (req.method.as_str(), path) {
+                ("POST", "/sample") => {
+                    match handle_sample(&req, &svc, &identity, &cfg, client, req_trace.as_ref()) {
+                        Ok(body) => (200, body, CONTENT_TYPE_JSON, &[]),
+                        Err(SampleError::Shed) => (
+                            503,
+                            r#"{"error":"overloaded: request shed (queue full)"}"#.to_string(),
+                            CONTENT_TYPE_JSON,
+                            &["retry-after: 1"],
+                        ),
+                        Err(SampleError::Closed) => (
+                            503,
+                            r#"{"error":"service is shutting down"}"#.to_string(),
+                            CONTENT_TYPE_JSON,
+                            &[],
+                        ),
+                        Err(SampleError::Timeout(msg)) => {
+                            (504, error_body_str(&msg), CONTENT_TYPE_JSON, &[])
+                        }
+                        Err(SampleError::Bad(msg)) => {
+                            (400, error_body_str(&msg), CONTENT_TYPE_JSON, &[])
+                        }
+                        Err(SampleError::Internal(msg)) => {
+                            (500, error_body_str(&msg), CONTENT_TYPE_JSON, &[])
+                        }
                     }
-                    Err(SampleError::Timeout(msg)) => (504, error_body_str(&msg), &[]),
-                    Err(SampleError::Bad(msg)) => (400, error_body_str(&msg), &[]),
-                    Err(SampleError::Internal(msg)) => (500, error_body_str(&msg), &[]),
-                },
-                ("GET", "/stats") => (200, stats_body(&svc, &identity), &[]),
-                ("GET", "/healthz") => (200, r#"{"ok":true}"#.to_string(), &[]),
-                ("GET", "/sample") | ("POST", "/stats") | ("POST", "/healthz") => {
-                    (405, r#"{"error":"method not allowed"}"#.to_string(), &[])
                 }
-                (_, path) => (404, error_body_str(&format!("no route {path}")), &[]),
+                ("GET", "/stats") => (200, stats_body(&svc, &identity), CONTENT_TYPE_JSON, &[]),
+                ("GET", "/metrics") => (
+                    200,
+                    svc.registry().render_prometheus(),
+                    CONTENT_TYPE_PROMETHEUS,
+                    &[],
+                ),
+                ("GET", "/trace") => {
+                    let n = query_param(query, "n")
+                        .and_then(|v| v.parse::<usize>().ok())
+                        .unwrap_or(16);
+                    (200, trace::tracer().recent_json(n).to_string(), CONTENT_TYPE_JSON, &[])
+                }
+                ("GET", "/healthz") => {
+                    let (status, body) = healthz_body(&svc, cfg.stall_window);
+                    (status, body, CONTENT_TYPE_JSON, &[])
+                }
+                ("GET", "/sample")
+                | ("POST", "/stats")
+                | ("POST", "/metrics")
+                | ("POST", "/trace")
+                | ("POST", "/healthz") => (
+                    405,
+                    r#"{"error":"method not allowed"}"#.to_string(),
+                    CONTENT_TYPE_JSON,
+                    &[],
+                ),
+                (_, path) => {
+                    (404, error_body_str(&format!("no route {path}")), CONTENT_TYPE_JSON, &[])
+                }
             };
-        if write_response(&mut stream, status, body.as_bytes(), extra).is_err() {
-            return;
+        let write_start = Instant::now();
+        let write_ok =
+            write_response_typed(&mut stream, status, body.as_bytes(), content_type, extra)
+                .is_ok();
+        if let Some(tr) = &req_trace {
+            tr.segment("write", write_start, Instant::now());
+            tr.meta("status", status as f64);
+            tr.meta("body_bytes", body.len() as f64);
+            tr.finish(status == 200);
         }
-        if !keep_alive {
+        if !write_ok || !keep_alive {
             return;
         }
     }
+}
+
+/// Pull one `key=value` pair out of a raw query string.
+fn query_param<'a>(query: Option<&'a str>, key: &str) -> Option<&'a str> {
+    query?
+        .split('&')
+        .find_map(|kv| kv.split_once('=').filter(|(k, _)| *k == key).map(|(_, v)| v))
+}
+
+/// The watchdog verdict behind `GET /healthz`: status code plus a JSON body
+/// with machine-readable degradation reasons and the raw gauges they were
+/// judged from.
+fn healthz_body<Obj: Send + 'static>(
+    svc: &SamplerService<Obj>,
+    stall_window: Duration,
+) -> (u16, String) {
+    let stats = svc.stats_handles();
+    let backlog = svc.backlog();
+    let inflight = stats.inflight.get();
+    let age = stats.heartbeat_age_s();
+    let window_s = stall_window.as_secs_f64();
+    let mut reasons: Vec<Json> = Vec::new();
+    if svc.is_closed() {
+        reasons.push(Json::Str("service_closed".to_string()));
+    }
+    // A stall is only a stall if there is work the worker should be moving:
+    // an idle worker parked in pop_blocking legitimately stops beating.
+    if (backlog > 0 || inflight > 0.0) && age > window_s {
+        reasons.push(Json::Str(format!(
+            "worker_stalled: serve.worker_heartbeat_s is {age:.3}s old \
+             (stall window {window_s:.3}s) with work pending"
+        )));
+    }
+    let ok = reasons.is_empty();
+    let body = Json::obj(vec![
+        ("ok", Json::Bool(ok)),
+        ("reasons", Json::Arr(reasons)),
+        ("worker_heartbeat_age_s", Json::Num(age)),
+        ("stall_window_s", Json::Num(window_s)),
+        ("queue_depth", Json::Num(backlog as f64)),
+        ("inflight", Json::Num(inflight)),
+        ("queue_high_water", Json::Num(svc.queue_high_water() as f64)),
+    ])
+    .to_string();
+    (if ok { 200 } else { 503 }, body)
 }
 
 enum SampleError {
@@ -308,13 +451,18 @@ fn handle_sample<Obj>(
     identity: &ServeIdentity,
     cfg: &HttpServerConfig,
     client: u64,
+    req_trace: Option<&Arc<ActiveTrace>>,
 ) -> Result<String, SampleError>
 where
     Obj: ObjJson + Send + 'static,
 {
+    let parse_start = Instant::now();
     let body = std::str::from_utf8(&req.body)
         .map_err(|_| SampleError::Bad("body is not UTF-8".to_string()))?;
     let json = Json::parse(body).map_err(|e| SampleError::Bad(e.to_string()))?;
+    if let Some(tr) = req_trace {
+        tr.segment("parse", parse_start, Instant::now());
+    }
 
     let n = json
         .get("n")
@@ -363,7 +511,11 @@ where
         temperature,
         client,
     };
-    let ticket = match svc.try_submit(SampleRequest { n_samples: n, seed }, opts) {
+    let ticket = match svc.try_submit_traced(
+        SampleRequest { n_samples: n, seed },
+        opts,
+        req_trace.cloned(),
+    ) {
         SubmitOutcome::Ticket(t) => t,
         SubmitOutcome::Shed => return Err(SampleError::Shed),
         SubmitOutcome::Closed => return Err(SampleError::Closed),
@@ -566,6 +718,223 @@ mod tests {
         assert_eq!(status, 200);
         let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
         assert_eq!(j.req_str("seed").unwrap(), big, "seed echoed losslessly");
+        server.shutdown();
+    }
+
+    fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+        headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Every JSON route — success and error bodies alike — declares
+    /// `application/json`; `/metrics` declares the Prometheus media type.
+    #[test]
+    fn responses_declare_content_types() {
+        let (_svc, server, addr) = http_service();
+        let mut c = HttpClient::connect(&addr).unwrap();
+        for path in ["/stats", "/healthz", "/trace"] {
+            let (status, headers, _) = c.get_full(path).unwrap();
+            assert_eq!(status, 200, "{path}");
+            assert_eq!(header(&headers, "content-type"), Some(CONTENT_TYPE_JSON), "{path}");
+        }
+        let (status, headers, _) =
+            c.request_full("POST", "/sample", br#"{"n":2,"seed":1}"#).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(header(&headers, "content-type"), Some(CONTENT_TYPE_JSON));
+        let (status, headers, _) = c.request_full("POST", "/sample", b"{not json").unwrap();
+        assert_eq!(status, 400, "error bodies are JSON too");
+        assert_eq!(header(&headers, "content-type"), Some(CONTENT_TYPE_JSON));
+        let (status, headers, _) = c.get_full("/nope").unwrap();
+        assert_eq!(status, 404);
+        assert_eq!(header(&headers, "content-type"), Some(CONTENT_TYPE_JSON));
+        let (status, headers, _) = c.get_full("/metrics").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(header(&headers, "content-type"), Some(CONTENT_TYPE_PROMETHEUS));
+        server.shutdown();
+    }
+
+    /// `/metrics` renders the same registry `/stats` serializes, as valid
+    /// Prometheus text: `# TYPE` lines, cumulative `le` buckets, `_count`
+    /// consistent with the completed-request count.
+    #[test]
+    fn metrics_route_serves_prometheus_text() {
+        let (_svc, server, addr) = http_service();
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let (status, _) = c.post_json("/sample", r#"{"n":3,"seed":2}"#).unwrap();
+        assert_eq!(status, 200);
+        let (status, body) = c.get("/metrics").unwrap();
+        assert_eq!(status, 200);
+        let text = String::from_utf8(body).unwrap();
+        assert!(text.contains("# TYPE serve_requests_completed counter"), "{text}");
+        assert!(text.contains("serve_requests_completed 1"), "{text}");
+        assert!(text.contains("# TYPE serve_request_latency histogram"), "{text}");
+        assert!(text.contains("serve_request_latency_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("serve_request_latency_count 1"), "{text}");
+        let mut last = 0u64;
+        for line in
+            text.lines().filter(|l| l.starts_with("serve_request_latency_bucket{"))
+        {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "bucket counts must be cumulative: {line}");
+            last = v;
+        }
+        assert_eq!(last, 1, "+Inf bucket equals the sample count");
+        server.shutdown();
+    }
+
+    /// With tracing on at rate 1, a `POST /sample` leaves a full waterfall
+    /// (parse → queue_wait → dispatch → drain → write) in the ring,
+    /// readable over `GET /trace`.
+    #[test]
+    fn trace_route_returns_sampled_request_waterfalls() {
+        let _guard = crate::telemetry::flag_test_lock();
+        trace::set_trace_rate(1.0);
+        trace::reset_sampler();
+        let (_svc, server, addr) = http_service();
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let (status, _) = c.post_json("/sample", r#"{"n":4,"seed":11}"#).unwrap();
+        assert_eq!(status, 200);
+        let (status, body) = c.get("/trace?n=4").unwrap();
+        trace::set_trace_rate(0.0);
+        assert_eq!(status, 200);
+        let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(j.get("rate").and_then(Json::as_f64), Some(1.0));
+        let traces = j.req_arr("traces").unwrap();
+        assert!(!traces.is_empty(), "rate-1 tracing must capture the request");
+        // Newest first; nothing else pushed under the flag lock.
+        let t = &traces[0];
+        assert_eq!(t.req_str("kind").unwrap(), "http_request");
+        assert_eq!(t.get("ok").and_then(Json::as_bool), Some(true));
+        let total = t.get("total_ns").and_then(Json::as_f64).unwrap();
+        let segs = t.req_arr("segments").unwrap();
+        let names: Vec<String> =
+            segs.iter().map(|s| s.req_str("name").unwrap().to_string()).collect();
+        for want in ["parse", "queue_wait", "dispatch", "drain", "write"] {
+            assert!(names.iter().any(|n| n == want), "missing segment {want}: {names:?}");
+        }
+        for s in segs {
+            let start = s.get("start_ns").and_then(Json::as_f64).unwrap();
+            let dur = s.get("dur_ns").and_then(Json::as_f64).unwrap();
+            assert!(start + dur <= total, "segment exceeds the trace window");
+        }
+        server.shutdown();
+    }
+
+    /// The watchdog: a wedged worker with work pending flips `/healthz` to
+    /// 503 naming the stalled heartbeat; an idle worker with an old
+    /// heartbeat stays healthy; recovery flips it back.
+    #[test]
+    fn healthz_flags_wedged_worker_within_stall_window() {
+        use std::sync::{Condvar, Mutex};
+
+        #[derive(Default)]
+        struct WedgeState {
+            arrived: bool,
+            open: bool,
+        }
+        type WedgeGate = Arc<(Mutex<WedgeState>, Condvar)>;
+        struct WedgePolicy {
+            inner: UniformPolicy,
+            gate: WedgeGate,
+        }
+        impl BatchPolicy for WedgePolicy {
+            fn shape(&self) -> PolicyShape {
+                self.inner.shape()
+            }
+            fn eval(
+                &mut self,
+                obs: &[f32],
+                fwd: &[f32],
+                bwd: &[f32],
+            ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+                let (m, cv) = &*self.gate;
+                let mut st = m.lock().unwrap();
+                st.arrived = true;
+                cv.notify_all();
+                while !st.open {
+                    st = cv.wait(st).unwrap();
+                }
+                drop(st);
+                self.inner.eval(obs, fwd, bwd)
+            }
+        }
+
+        let env = HypergridEnv::new(2, 6, HypergridReward::standard(6));
+        let shape = PolicyShape::of_env(&env, 4);
+        let gate: WedgeGate = Arc::new((Mutex::new(WedgeState::default()), Condvar::new()));
+        let g = Arc::clone(&gate);
+        let svc = Arc::new(SamplerService::spawn(env, move || {
+            Ok(Box::new(WedgePolicy { inner: UniformPolicy::new(shape), gate: Arc::clone(&g) })
+                as Box<dyn BatchPolicy>)
+        }));
+        let cfg = HttpServerConfig {
+            stall_window: Duration::from_millis(50),
+            ..HttpServerConfig::default()
+        };
+        let server = HttpServer::serve(
+            "127.0.0.1:0",
+            Arc::clone(&svc),
+            ServeIdentity {
+                family: "hypergrid".to_string(),
+                config: "hypergrid_small".to_string(),
+                model: "mlp".to_string(),
+            },
+            cfg,
+        )
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let mut c = HttpClient::connect(&addr).unwrap();
+
+        // Idle: healthy no matter how stale the heartbeat grows.
+        std::thread::sleep(Duration::from_millis(80));
+        let (status, body) = c.get("/healthz").unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+
+        // Submit work the wedged policy will sit on.
+        let addr2 = addr.clone();
+        let waiter = std::thread::spawn(move || {
+            let mut c = HttpClient::connect(&addr2).unwrap();
+            c.post_json("/sample", r#"{"n":2,"seed":5}"#).unwrap()
+        });
+        {
+            let (m, cv) = &*gate;
+            let deadline = Instant::now() + Duration::from_secs(10);
+            let mut st = m.lock().unwrap();
+            while !st.arrived {
+                let (g2, _) = cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
+                st = g2;
+                assert!(Instant::now() < deadline, "worker never dispatched");
+            }
+        }
+        std::thread::sleep(Duration::from_millis(120)); // age past the window
+
+        let (status, body) = c.get("/healthz").unwrap();
+        let body = String::from_utf8(body).unwrap();
+        assert_eq!(status, 503, "{body}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        let reasons = j.req_arr("reasons").unwrap();
+        assert!(
+            reasons
+                .iter()
+                .any(|r| r.as_str().is_some_and(|s| s.contains("worker_stalled"))),
+            "{body}"
+        );
+        assert!(
+            body.contains("worker_heartbeat_s"),
+            "reason names the stalled heartbeat gauge: {body}"
+        );
+        assert!(j.get("inflight").and_then(Json::as_f64).unwrap() >= 1.0, "{body}");
+
+        // Open the gate: the request completes and health recovers.
+        {
+            let (m, cv) = &*gate;
+            m.lock().unwrap().open = true;
+            cv.notify_all();
+        }
+        let (status, _) = waiter.join().unwrap();
+        assert_eq!(status, 200);
+        let (status, body) = c.get("/healthz").unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
         server.shutdown();
     }
 

@@ -39,9 +39,13 @@
 //!   accepts JSON sample requests over TCP and multiplexes many concurrent
 //!   clients onto one `SamplerService`, adding the production envelope —
 //!   bounded-queue load shedding (503), per-request deadlines (504, enforced
-//!   in-queue and mid-drain), per-client round-robin fairness, and a
-//!   `/stats` route serving the telemetry registry as JSON. See the README's
-//!   "Serving over HTTP" section for the wire format.
+//!   in-queue and mid-drain), per-client round-robin fairness, and the
+//!   observability routes — `/stats` (telemetry registry as JSON),
+//!   `/metrics` (Prometheus text exposition), `/trace` (recent sampled
+//!   request waterfalls), and a watchdog-backed `/healthz` that reports
+//!   machine-readable degradation reasons (stalled worker, closed service)
+//!   instead of an unconditional ok. See the README's "Serving over HTTP"
+//!   section for the wire format.
 //!
 //! ## The production envelope
 //!

@@ -38,6 +38,8 @@ impl<T> PushError<T> {
 struct QueueState<T> {
     items: VecDeque<T>,
     closed: bool,
+    /// Deepest backlog ever observed (set at push, under the same lock).
+    high_water: usize,
 }
 
 struct Inner<T> {
@@ -77,7 +79,11 @@ impl<T> Queue<T> {
     pub fn with_capacity(capacity: usize) -> Queue<T> {
         Queue {
             inner: Arc::new(Inner {
-                state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+                state: Mutex::new(QueueState {
+                    items: VecDeque::new(),
+                    closed: false,
+                    high_water: 0,
+                }),
                 cv: Condvar::new(),
                 capacity,
             }),
@@ -96,6 +102,7 @@ impl<T> Queue<T> {
             return Err(PushError::Full(item));
         }
         g.items.push_back(item);
+        g.high_water = g.high_water.max(g.items.len());
         self.inner.cv.notify_one();
         Ok(())
     }
@@ -139,6 +146,13 @@ impl<T> Queue<T> {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Deepest backlog this queue has ever held — the watchdog's
+    /// "how close did admission come to shedding" signal. Monotone;
+    /// unaffected by pops.
+    pub fn high_water(&self) -> usize {
+        self.inner.state.lock().unwrap().high_water
     }
 }
 
@@ -229,6 +243,26 @@ mod tests {
         let e = q.push(6).unwrap_err();
         assert!(e.is_full());
         assert_eq!(e.into_inner(), 6);
+    }
+
+    /// High-water marks the deepest backlog ever held, surviving pops.
+    #[test]
+    fn high_water_tracks_peak_depth() {
+        let q = Queue::new();
+        assert_eq!(q.high_water(), 0);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.push(3).unwrap();
+        assert_eq!(q.high_water(), 3);
+        q.try_pop();
+        q.try_pop();
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.high_water(), 3, "high-water is monotone");
+        q.push(4).unwrap();
+        assert_eq!(q.high_water(), 3, "depth 2 does not move a peak of 3");
+        q.push(5).unwrap();
+        q.push(6).unwrap();
+        assert_eq!(q.high_water(), 4);
     }
 
     /// Regression (satellite): closing a *full* bounded queue must drain

@@ -58,6 +58,16 @@ pub struct ServeStats {
     /// Cumulative slot occupancy (active / total row-steps), refreshed
     /// after each drain.
     pub occupancy: Arc<Gauge>,
+    /// Watchdog heartbeat: the registry's elapsed-seconds clock at the
+    /// worker's last sign of progress (job-source poll / dispatch / drain).
+    /// `/healthz` computes the age as `registry.elapsed_s() - heartbeat` —
+    /// same clock on both sides, no skew. Touch via [`ServeStats::beat`].
+    pub worker_heartbeat_s: Arc<Gauge>,
+    /// Requests currently admitted into the slot table (in-flight drains).
+    pub inflight: Arc<Gauge>,
+    /// Deepest admission-queue backlog seen so far (mirrors
+    /// `Queue::high_water` into the registry so `/metrics` exports it).
+    pub queue_high_water: Arc<Gauge>,
     started: Instant,
 }
 
@@ -92,9 +102,24 @@ impl ServeStats {
             request_latency: registry.histogram("serve.request_latency"),
             first_dispatch_latency: registry.histogram("serve.first_dispatch_latency"),
             occupancy: registry.gauge("serve.occupancy"),
+            worker_heartbeat_s: registry.gauge("serve.worker_heartbeat_s"),
+            inflight: registry.gauge("serve.inflight"),
+            queue_high_water: registry.gauge("serve.queue_high_water"),
             started: Instant::now(),
             registry,
         }
+    }
+
+    /// Touch the worker heartbeat (stores the registry clock; see the
+    /// field docs). Unconditional — liveness reporting must not depend on
+    /// the telemetry flag.
+    pub fn beat(&self) {
+        self.worker_heartbeat_s.set(self.registry.elapsed_s());
+    }
+
+    /// Seconds since the last [`ServeStats::beat`] on the registry clock.
+    pub fn heartbeat_age_s(&self) -> f64 {
+        (self.registry.elapsed_s() - self.worker_heartbeat_s.get()).max(0.0)
     }
 
     /// The backing registry (scoped or shared-global).
@@ -223,6 +248,21 @@ mod tests {
         };
         assert_eq!(counter("serve.shed"), Some(2));
         assert_eq!(counter("serve.requests_timedout"), Some(1));
+    }
+
+    /// Watchdog gauges live in the registry and the heartbeat age is
+    /// computed on the registry's own clock.
+    #[test]
+    fn heartbeat_and_watchdog_gauges_reach_registry() {
+        let s = ServeStats::new();
+        s.beat();
+        s.inflight.set(2.0);
+        s.queue_high_water.set(5.0);
+        assert!(s.heartbeat_age_s() < 1.0, "fresh beat has ~zero age");
+        let reg = s.registry();
+        assert!(reg.gauge("serve.worker_heartbeat_s").get() >= 0.0);
+        assert_eq!(reg.gauge("serve.inflight").get(), 2.0);
+        assert_eq!(reg.gauge("serve.queue_high_water").get(), 5.0);
     }
 
     /// Two services sharing one registry merge their counters (get-or-

@@ -36,10 +36,12 @@ use super::stats::{ServeSnapshot, ServeStats};
 use super::traj_seed;
 use crate::envs::{EnvSpec, VecEnv};
 use crate::runtime::policy::{check_env_token_shape, BatchPolicy, PolicyShape};
+use crate::telemetry::trace::{self, ActiveTrace};
 use crate::telemetry::Registry;
 use std::cell::RefCell;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::rc::Rc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -47,6 +49,13 @@ use std::time::Instant;
 /// The hot-swap mailbox: latest-wins slot holding the next policy to serve
 /// (see [`SamplerService::hot_swap`]).
 type SwapSlot = Arc<Mutex<Option<Box<dyn BatchPolicy + Send>>>>;
+
+/// Traced requests currently draining (request id → trace handle): the
+/// policy wrapper appends one `dispatch` slice per eval to each. Worker-
+/// thread-only state (`Rc`), shared between the drain closures and the
+/// policy; empty whenever no sampled request is in flight, so untraced
+/// serving never takes the slow path.
+type ActiveTraces = Rc<RefCell<Vec<(u64, Arc<ActiveTrace>)>>>;
 
 /// The worker's serving policy: the current policy plus the swap mailbox.
 /// Each [`BatchPolicy::eval`] first applies a pending swap (via `try_lock`,
@@ -62,6 +71,9 @@ struct SwappablePolicy {
     /// Spec of the env this worker serves — the fixed side of the swap
     /// compatibility check.
     spec: EnvSpec,
+    /// Traced in-flight requests; each eval while this is non-empty gets
+    /// timed as a `dispatch` waterfall slice on every listed trace.
+    active_traces: ActiveTraces,
 }
 
 impl SwappablePolicy {
@@ -101,7 +113,19 @@ impl BatchPolicy for SwappablePolicy {
         bwd_mask: &[f32],
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
         self.apply_pending();
-        self.current.eval(obs, fwd_mask, bwd_mask)
+        // One relaxed load when tracing is off; the slice-timing path only
+        // runs while a sampled request is actually draining.
+        if trace::trace_enabled() && !self.active_traces.borrow().is_empty() {
+            let t0 = Instant::now();
+            let out = self.current.eval(obs, fwd_mask, bwd_mask);
+            let t1 = Instant::now();
+            for (_, tr) in self.active_traces.borrow().iter() {
+                tr.segment("dispatch", t0, t1);
+            }
+            out
+        } else {
+            self.current.eval(obs, fwd_mask, bwd_mask)
+        }
     }
 }
 
@@ -155,6 +179,8 @@ struct WorkItem<Obj> {
     /// Enqueue time, for the `serve.request_latency` and
     /// `serve.first_dispatch_latency` histograms.
     submitted: Instant,
+    /// Sampled-request trace handle (see [`SamplerService::try_submit_traced`]).
+    trace: Option<Arc<ActiveTrace>>,
 }
 
 /// An in-flight request inside one worker drain.
@@ -167,6 +193,11 @@ struct InFlight<Obj> {
     outputs: Vec<Option<SampleOutput<Obj>>>,
     submitted: Instant,
     temperature: f64,
+    trace: Option<Arc<ActiveTrace>>,
+    /// When the request's first trajectory entered the slot table — the
+    /// shared instant that makes `queue_wait + drain` reconcile *exactly*
+    /// with the `serve.request_latency` sample for this request.
+    issued_at: Option<Instant>,
 }
 
 /// Bookkeeping of one worker drain. A drain can run indefinitely under
@@ -335,12 +366,35 @@ impl<Obj: Send + 'static> SamplerService<Obj> {
     /// resolve, with shed/closed requests resolving (and recording their
     /// ~zero latency) at the submission site itself.
     pub fn try_submit(&self, req: SampleRequest, opts: SubmitOptions) -> SubmitOutcome<Obj> {
+        self.try_submit_traced(req, opts, None)
+    }
+
+    /// [`SamplerService::try_submit`] carrying an optional trace handle
+    /// (minted by the HTTP front end for sampled requests): the worker adds
+    /// `queue_wait`, per-eval `dispatch` slices, and `drain` segments to it
+    /// as the request moves through the drain. The caller keeps its own
+    /// `Arc` and finishes the trace once the ticket resolves.
+    pub fn try_submit_traced(
+        &self,
+        req: SampleRequest,
+        opts: SubmitOptions,
+        request_trace: Option<Arc<ActiveTrace>>,
+    ) -> SubmitOutcome<Obj> {
         let shared = TicketShared::new();
         self.stats.requests_submitted.inc();
         let submitted = Instant::now();
-        let item = WorkItem { req, opts, ticket: Arc::clone(&shared), submitted };
+        let item = WorkItem {
+            req,
+            opts,
+            ticket: Arc::clone(&shared),
+            submitted,
+            trace: request_trace,
+        };
         match self.queue.push(item) {
-            Ok(()) => SubmitOutcome::Ticket(SampleTicket { shared }),
+            Ok(()) => {
+                self.stats.queue_high_water.set(self.queue.high_water() as f64);
+                SubmitOutcome::Ticket(SampleTicket { shared })
+            }
             Err(e) => {
                 // Failures record latency too (satellite fix): the
                 // histogram accounts for every resolved request, not only
@@ -365,6 +419,24 @@ impl<Obj: Send + 'static> SamplerService<Obj> {
     /// Current request backlog (excluding in-flight work).
     pub fn backlog(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Whether the service has stopped accepting requests (shutdown begun,
+    /// or the worker died and closed the queue behind it). `/healthz`
+    /// reports this as a `service_closed` degradation.
+    pub fn is_closed(&self) -> bool {
+        self.queue.is_closed()
+    }
+
+    /// Deepest admission-queue backlog seen so far.
+    pub fn queue_high_water(&self) -> usize {
+        self.queue.high_water()
+    }
+
+    /// The shared stats handles (heartbeat age, in-flight gauge) for the
+    /// health watchdog.
+    pub fn stats_handles(&self) -> &Arc<ServeStats> {
+        &self.stats
     }
 
     /// Point-in-time service counters.
@@ -469,8 +541,11 @@ fn admit<Obj>(
             outputs: (0..n).map(|_| None).collect(),
             submitted: item.submitted,
             temperature: item.opts.temperature,
+            trace: item.trace,
+            issued_at: None,
         },
     );
+    stats.inflight.set(s.inflight.len() as f64);
     if let Some(d) = item.opts.deadline {
         s.deadlines.push(Reverse((d, id)));
     }
@@ -489,7 +564,12 @@ fn admit<Obj>(
 /// engine has no preemption) but their results are diverted to the
 /// `cancelled` discard ledger, so the ticket resolves *now*, not when the
 /// stragglers finish.
-fn expire_due<Obj>(s: &mut DrainState<Obj>, now: Instant, stats: &ServeStats) {
+fn expire_due<Obj>(
+    s: &mut DrainState<Obj>,
+    now: Instant,
+    stats: &ServeStats,
+    active: &ActiveTraces,
+) {
     while let Some(&Reverse((d, id))) = s.deadlines.peek() {
         if d > now {
             break;
@@ -498,6 +578,13 @@ fn expire_due<Obj>(s: &mut DrainState<Obj>, now: Instant, stats: &ServeStats) {
         let Some(f) = s.inflight.remove(&id) else {
             continue; // completed before its deadline; stale heap entry
         };
+        stats.inflight.set(s.inflight.len() as f64);
+        if f.trace.is_some() {
+            // Stop attributing dispatch slices to a cancelled request; the
+            // front end finishes its trace when the ticket's timeout error
+            // comes back.
+            active.borrow_mut().retain(|(tid, _)| *tid != id);
+        }
         let outstanding = f.issued - f.done;
         if outstanding > 0 {
             s.cancelled.insert(id, outstanding);
@@ -523,8 +610,15 @@ fn worker_loop<E, F>(
     F: FnOnce() -> anyhow::Result<Box<dyn BatchPolicy>>,
 {
     let spec = env.spec();
+    let active: ActiveTraces = Rc::new(RefCell::new(Vec::new()));
     let mut policy = match policy_factory() {
-        Ok(p) => SwappablePolicy { current: p, slot: swap, stats: Arc::clone(&stats), spec },
+        Ok(p) => SwappablePolicy {
+            current: p,
+            slot: swap,
+            stats: Arc::clone(&stats),
+            spec,
+            active_traces: Rc::clone(&active),
+        },
         Err(e) => {
             // Refuse service: fail the backlog and all future submissions.
             queue.close();
@@ -537,12 +631,15 @@ fn worker_loop<E, F>(
         }
     };
 
+    stats.beat(); // ready to serve: the watchdog's liveness baseline
+
     loop {
         // Block for work (or shutdown once the queue is closed and drained).
         let first = match queue.pop_blocking() {
             Some(item) => item,
             None => return,
         };
+        stats.beat();
         let drain: RefCell<DrainState<E::Obj>> = RefCell::new(DrainState::new());
         admit(&drain, first, &stats);
 
@@ -573,10 +670,15 @@ fn worker_loop<E, F>(
                         None => break,
                     }
                 }
+                // Every job-source poll is dispatch progress: touch the
+                // watchdog heartbeat so stall detection only fires when the
+                // worker is genuinely stuck (e.g. parked inside an eval),
+                // not merely busy.
+                stats.beat();
                 let mut guard = drain.borrow_mut();
                 let s = &mut *guard;
                 if s.deadlines.peek().is_some() {
-                    expire_due(s, Instant::now(), &stats);
+                    expire_due(s, Instant::now(), &stats, &active);
                 }
                 // Round-robin across clients: issue ONE trajectory from the
                 // front client's oldest request, then rotate, so no client's
@@ -598,10 +700,20 @@ fn worker_loop<E, F>(
                         let i = f.issued;
                         if i == 0 {
                             // First trajectory of this request enters the
-                            // slot table: queueing delay is over.
-                            stats
-                                .first_dispatch_latency
-                                .record(f.submitted.elapsed().as_nanos() as u64);
+                            // slot table: queueing delay is over. One shared
+                            // instant ends `queue_wait` and starts `drain`,
+                            // so the two segments tile the request's latency
+                            // with no gap or overlap.
+                            let issue = Instant::now();
+                            stats.first_dispatch_latency.record(
+                                issue.saturating_duration_since(f.submitted).as_nanos()
+                                    as u64,
+                            );
+                            f.issued_at = Some(issue);
+                            if let Some(tr) = &f.trace {
+                                tr.segment("queue_wait", f.submitted, issue);
+                                active.borrow_mut().push((id, Arc::clone(tr)));
+                            }
                         }
                         f.issued += 1;
                         if f.issued == f.n {
@@ -666,15 +778,26 @@ fn worker_loop<E, F>(
                     // Prune the completed request so a long-lived drain does
                     // not accumulate history.
                     let f = s.inflight.remove(&r.request).unwrap();
+                    stats.inflight.set(s.inflight.len() as f64);
                     let outs: Vec<SampleOutput<E::Obj>> = f
                         .outputs
                         .into_iter()
                         .map(|o| o.expect("missing trajectory"))
                         .collect();
                     // Count before fulfilling (see admit()): waiters woken
-                    // by fulfill() read a consistent stats snapshot.
+                    // by fulfill() read a consistent stats snapshot. The
+                    // single `done` instant both closes the trace's `drain`
+                    // segment and stamps the latency histogram, so
+                    // queue_wait + drain equals the recorded latency exactly.
+                    let done = Instant::now();
                     stats.requests_completed.inc();
-                    stats.request_latency.record(f.submitted.elapsed().as_nanos() as u64);
+                    stats.request_latency.record(
+                        done.saturating_duration_since(f.submitted).as_nanos() as u64,
+                    );
+                    if let Some(tr) = &f.trace {
+                        tr.segment("drain", f.issued_at.unwrap_or(f.submitted), done);
+                        active.borrow_mut().retain(|(id, _)| *id != r.request);
+                    }
                     f.ticket.fulfill(Ok(outs));
                 }
             },
@@ -682,6 +805,8 @@ fn worker_loop<E, F>(
 
         match result {
             Ok(s) => {
+                stats.beat();
+                stats.inflight.set(drain.borrow().inflight.len() as f64);
                 stats.policy_dispatches.add(s.dispatches);
                 stats.active_row_steps.add(s.active_row_steps);
                 stats.total_row_steps.add(s.total_row_steps);
@@ -697,11 +822,13 @@ fn worker_loop<E, F>(
                 // breach): fail everything in flight and queued, then stop
                 // serving — later submissions error immediately.
                 let msg = format!("serve worker failed: {e}");
+                active.borrow_mut().clear();
                 for f in drain.borrow_mut().inflight.values() {
                     stats.requests_failed.inc();
                     stats.request_latency.record(f.submitted.elapsed().as_nanos() as u64);
                     f.ticket.fulfill(Err(anyhow::anyhow!("{msg}")));
                 }
+                stats.inflight.set(0.0);
                 queue.close();
                 while let Some(item) = queue.try_pop() {
                     stats.requests_failed.inc();
@@ -969,6 +1096,76 @@ mod tests {
         assert_eq!(reg.histogram("serve.first_dispatch_latency").count(), 1);
         let occ = reg.gauge("serve.occupancy").get();
         assert!(occ > 0.0 && occ <= 1.0, "occupancy gauge set after drain: {occ}");
+    }
+
+    /// Tentpole: a traced request's waterfall reconciles *exactly* with the
+    /// `serve.request_latency` histogram — `queue_wait + drain` equals the
+    /// recorded latency to the nanosecond (shared instants at both segment
+    /// boundaries), the two segments tile without gap, and every `dispatch`
+    /// slice nests inside `drain`.
+    #[test]
+    fn traced_request_reconciles_with_latency_histogram() {
+        let _g = crate::telemetry::flag_test_lock();
+        trace::set_trace_rate(1.0);
+        trace::reset_sampler();
+        let svc = service(4);
+        let tr = trace::try_start("http_request").expect("rate 1.0 samples everything");
+        let ticket = match svc.try_submit_traced(
+            SampleRequest { n_samples: 6, seed: 3 },
+            SubmitOptions::default(),
+            Some(Arc::clone(&tr)),
+        ) {
+            SubmitOutcome::Ticket(t) => t,
+            other => panic!("expected admission, got {other:?}"),
+        };
+        assert_eq!(ticket.wait().unwrap().len(), 6);
+        tr.finish(true);
+        trace::set_trace_rate(0.0);
+
+        let rec = trace::tracer()
+            .recent(trace::TRACE_RING)
+            .into_iter()
+            .find(|r| r.id == tr.id())
+            .expect("finished trace in the ring");
+        assert!(rec.ok);
+        let segs = |name: &str| -> Vec<_> {
+            rec.segments.iter().filter(|s| s.name == name).collect()
+        };
+        let qw = segs("queue_wait");
+        let dr = segs("drain");
+        let dispatch = segs("dispatch");
+        assert_eq!(qw.len(), 1, "exactly one queue_wait: {:?}", rec.segments);
+        assert_eq!(dr.len(), 1, "exactly one drain: {:?}", rec.segments);
+        assert!(!dispatch.is_empty(), "at least one dispatch slice");
+        // Exact reconciliation with the histogram's single sample.
+        let lat = svc.registry().histogram("serve.request_latency").sum();
+        assert_eq!(qw[0].dur_ns + dr[0].dur_ns, lat);
+        // queue_wait and drain tile the request with no gap or overlap.
+        assert_eq!(qw[0].start_ns + qw[0].dur_ns, dr[0].start_ns);
+        // Dispatch slices nest inside the drain window.
+        let drain_end = dr[0].start_ns + dr[0].dur_ns;
+        for s in &dispatch {
+            assert!(s.start_ns >= dr[0].start_ns && s.start_ns + s.dur_ns <= drain_end);
+        }
+        assert!(dispatch.iter().map(|s| s.dur_ns).sum::<u64>() <= dr[0].dur_ns);
+        svc.shutdown();
+    }
+
+    /// Untraced requests leave no segments behind and the dispatch-slice
+    /// log stays empty (the disabled fast path).
+    #[test]
+    fn untraced_requests_record_no_waterfall() {
+        let _g = crate::telemetry::flag_test_lock();
+        trace::set_trace_rate(0.0);
+        let before = trace::tracer().recent(trace::TRACE_RING).len();
+        let svc = service(4);
+        assert_eq!(svc.sample(5, 2).unwrap().len(), 5);
+        svc.shutdown();
+        assert_eq!(
+            trace::tracer().recent(trace::TRACE_RING).len(),
+            before,
+            "tracing off: no new records"
+        );
     }
 
     // ---- production-envelope tests (bounded queue, deadlines, fairness) ----

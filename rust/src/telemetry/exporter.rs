@@ -203,6 +203,51 @@ mod tests {
     }
 
     #[test]
+    fn exporter_dropped_before_first_interval_writes_exactly_one_line() {
+        let dir = std::env::temp_dir().join("gfnx_telemetry_test");
+        let path = dir.join("dropped.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let reg = Arc::new(Registry::new());
+        reg.counter("c").add(1);
+        let exp = Exporter::spawn("unit", &path, Duration::from_secs(3600), reg).unwrap();
+        drop(exp);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines = text.lines().filter(|l| !l.trim().is_empty()).count();
+        assert_eq!(lines, 1, "drop before the first interval must write exactly one snapshot");
+        check_telemetry_jsonl(&text, &[]).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn zero_interval_is_clamped() {
+        let dir = std::env::temp_dir().join("gfnx_telemetry_test");
+        let path = dir.join("clamped.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let reg = Arc::new(Registry::new());
+        reg.counter("c").add(1);
+        let exp = Exporter::spawn("unit", &path, Duration::ZERO, reg).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        exp.stop();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines = text.lines().filter(|l| !l.trim().is_empty()).count();
+        // The 10 ms floor bounds a zero interval: ~5-6 snapshots in 50 ms
+        // plus the final one, not a busy loop's thousands.
+        assert!((1..=25).contains(&lines), "zero interval not clamped: {lines} lines in 50ms");
+        check_telemetry_jsonl(&text, &[]).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unwritable_path_surfaces_spawn_error() {
+        let dir = std::env::temp_dir().join("gfnx_telemetry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // The directory itself is not openable as an append-mode file: the
+        // error must surface from spawn(), not die inside the thread.
+        let err = Exporter::spawn("unit", &dir, Duration::from_millis(20), Arc::new(Registry::new()));
+        assert!(err.is_err(), "spawning onto a directory path must fail");
+    }
+
+    #[test]
     fn exporter_emits_periodic_snapshots() {
         let dir = std::env::temp_dir().join("gfnx_telemetry_test");
         let path = dir.join("periodic.jsonl");

@@ -35,8 +35,10 @@
 //! [`MetricsLog`]: crate::util::logging::MetricsLog
 
 pub mod exporter;
+pub mod trace;
 
 pub use exporter::{check_telemetry_jsonl, Exporter};
+pub use trace::{check_trace_jsonl, trace_enabled, ActiveTrace, TraceRecord, Tracer};
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -275,12 +277,17 @@ impl HistSnapshot {
         }
     }
 
+    /// Occupied buckets as `[index, upper_bound, count]` triples: the
+    /// explicit upper bound makes exported histograms reconstructable by
+    /// consumers (Prometheus `le` mapping, external dashboards) without
+    /// knowledge of the internal log₂ bucketing.
     pub fn to_json(&self) -> Json {
         let mut nonzero = Vec::new();
         for (i, &c) in self.buckets.iter().enumerate() {
             if c > 0 {
                 nonzero.push(Json::Arr(vec![
                     Json::Num(i as f64),
+                    Json::Num(bucket_upper(i) as f64),
                     Json::Num(c as f64),
                 ]));
             }
@@ -516,6 +523,79 @@ impl Registry {
         }
         s
     }
+
+    /// Render the registry in Prometheus text exposition format (served by
+    /// `GET /metrics` with `Content-Type: text/plain; version=0.0.4`).
+    ///
+    /// Dotted metric names are sanitized to `[a-zA-Z0-9_:]`. Each log₂
+    /// histogram maps to a cumulative `le`-bucketed Prometheus histogram:
+    /// every occupied bucket emits one line keyed by its inclusive upper
+    /// bound ([`bucket_upper`]), closed by `le="+Inf"`, `_sum`, and
+    /// `_count`. The series reads the same atomics as [`Registry::to_json`],
+    /// so `/metrics` and `/stats` agree.
+    pub fn render_prometheus(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            let mut s: String = name
+                .chars()
+                .map(|c| {
+                    if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                        c
+                    } else {
+                        '_'
+                    }
+                })
+                .collect();
+            if s.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+                s.insert(0, '_');
+            }
+            s
+        }
+        // Clone handles under the lock, read values outside it (the same
+        // discipline as to_json: exposition must not stall the hot path).
+        let handles: Vec<(String, Metric)> = {
+            let m = self.metrics.lock().unwrap();
+            m.iter()
+                .map(|(k, v)| {
+                    let h = match v {
+                        Metric::Counter(c) => Metric::Counter(c.clone()),
+                        Metric::Gauge(g) => Metric::Gauge(g.clone()),
+                        Metric::Histogram(h) => Metric::Histogram(h.clone()),
+                    };
+                    (k.clone(), h)
+                })
+                .collect()
+        };
+        let mut out = String::new();
+        for (name, metric) in &handles {
+            let n = sanitize(name);
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE {n} counter\n{n} {}\n", c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", g.get()));
+                }
+                Metric::Histogram(h) => {
+                    let s = h.snapshot();
+                    out.push_str(&format!("# TYPE {n} histogram\n"));
+                    let mut cum = 0u64;
+                    for (i, &c) in s.buckets.iter().enumerate() {
+                        if c > 0 {
+                            cum += c;
+                            out.push_str(&format!(
+                                "{n}_bucket{{le=\"{}\"}} {cum}\n",
+                                bucket_upper(i)
+                            ));
+                        }
+                    }
+                    out.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {}\n", s.count));
+                    out.push_str(&format!("{n}_sum {}\n", s.sum));
+                    out.push_str(&format!("{n}_count {}\n", s.count));
+                }
+            }
+        }
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -719,6 +799,78 @@ mod tests {
         assert!(parsed.get("histograms").is_some());
         // Render mentions the span and doesn't panic.
         assert!(reg.render().contains("native.gemm.dense"));
+    }
+
+    /// Satellite: exported buckets carry explicit `[index, upper, count]`
+    /// triples, exact on hand-built contents.
+    #[test]
+    fn hist_json_buckets_carry_explicit_upper_bounds() {
+        let h = Histogram::new("ns");
+        for _ in 0..3 {
+            h.record(1); // bucket 0, upper 1
+        }
+        for _ in 0..2 {
+            h.record(100); // bucket 6 (64..=127), upper 127
+        }
+        h.record(u64::MAX); // bucket 63, upper u64::MAX
+        let j = h.snapshot().to_json();
+        // Existing fields are unchanged.
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(6));
+        assert_eq!(j.get("p50").unwrap().as_usize(), Some(127));
+        let buckets = j.get("buckets").and_then(Json::as_arr).unwrap();
+        let triple = |b: &Json| {
+            let t = b.as_arr().unwrap();
+            (
+                t[0].as_f64().unwrap(),
+                t[1].as_f64().unwrap(),
+                t[2].as_f64().unwrap(),
+            )
+        };
+        assert_eq!(buckets.len(), 3, "only occupied buckets exported");
+        assert_eq!(triple(&buckets[0]), (0.0, 1.0, 3.0));
+        assert_eq!(triple(&buckets[1]), (6.0, 127.0, 2.0));
+        assert_eq!(triple(&buckets[2]), (63.0, u64::MAX as f64, 1.0));
+        // Round-trips through the project's JSON writer/parser.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let rt = parsed.get("buckets").and_then(Json::as_arr).unwrap();
+        assert_eq!(triple(&rt[1]), (6.0, 127.0, 2.0));
+    }
+
+    #[test]
+    fn prometheus_rendering_is_cumulative_and_consistent() {
+        let reg = Registry::new();
+        reg.counter("serve.requests_completed").add(7);
+        reg.gauge("serve.occupancy").set(0.25);
+        let h = reg.histogram("serve.request_latency");
+        for _ in 0..3 {
+            h.record(1);
+        }
+        for _ in 0..2 {
+            h.record(100);
+        }
+        h.record(10_000);
+        let text = reg.render_prometheus();
+        // Names are sanitized and typed.
+        assert!(text.contains("# TYPE serve_requests_completed counter\n"));
+        assert!(text.contains("serve_requests_completed 7\n"));
+        assert!(text.contains("# TYPE serve_occupancy gauge\n"));
+        assert!(text.contains("serve_occupancy 0.25\n"));
+        assert!(text.contains("# TYPE serve_request_latency histogram\n"));
+        // Buckets are cumulative: 3 @ le=1, 5 @ le=127, 6 @ le=16383, +Inf.
+        assert!(text.contains("serve_request_latency_bucket{le=\"1\"} 3\n"));
+        assert!(text.contains("serve_request_latency_bucket{le=\"127\"} 5\n"));
+        assert!(text.contains("serve_request_latency_bucket{le=\"16383\"} 6\n"));
+        assert!(text.contains("serve_request_latency_bucket{le=\"+Inf\"} 6\n"));
+        assert!(text.contains("serve_request_latency_sum 10203\n"));
+        assert!(text.contains("serve_request_latency_count 6\n"));
+        // Cumulative counts are monotone non-decreasing in le order.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("serve_request_latency_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "bucket counts must be cumulative: {line}");
+            last = v;
+        }
+        assert_eq!(last, 6);
     }
 
     #[test]

@@ -275,6 +275,63 @@ mod http_stack {
     }
 
     #[test]
+    fn traced_request_reconciles_with_recorded_latency() {
+        // At rate 1.0 the POST /sample below is sampled; its waterfall's
+        // queue_wait + drain segments are stamped from the same two Instants
+        // the worker uses to record serve.request_latency, so with exactly
+        // one request against a fresh registry the sums must match to the
+        // nanosecond (ns values are far below 2^53, so f64 is exact).
+        let _guard = gfnx::telemetry::flag_test_lock();
+        gfnx::telemetry::trace::set_trace_rate(1.0);
+        gfnx::telemetry::trace::reset_sampler();
+        let (http, svc) = serve_http(None, Duration::ZERO, 4);
+        let mut client = HttpClient::connect(&http.local_addr().to_string()).unwrap();
+        let (status, _) = client.post_json("/sample", "{\"n\": 6, \"seed\": 21}").unwrap();
+        // Same keep-alive connection: the handler finished the trace before
+        // it started reading this GET, so the record is already in the ring.
+        let (trace_status, trace_body) = client.get("/trace?n=8").unwrap();
+        gfnx::telemetry::trace::set_trace_rate(0.0);
+        assert_eq!(status, 200);
+        assert_eq!(trace_status, 200);
+        let traces = Json::parse(std::str::from_utf8(&trace_body).unwrap()).unwrap();
+        let recs = traces.req_arr("traces").unwrap();
+        let rec = recs
+            .iter()
+            .find(|r| r.get("kind").and_then(Json::as_str) == Some("http_request"))
+            .expect("a sampled http_request trace");
+        let seg_ns = |name: &str| -> f64 {
+            rec.req_arr("segments")
+                .unwrap()
+                .iter()
+                .find(|s| s.get("name").and_then(Json::as_str) == Some(name))
+                .unwrap_or_else(|| panic!("segment '{name}' missing: {rec}"))
+                .req("dur_ns")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        let queued_plus_drained = seg_ns("queue_wait") + seg_ns("drain");
+        let (status, body) = client.get("/stats").unwrap();
+        assert_eq!(status, 200);
+        let stats = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let lat = stats
+            .req("registry")
+            .unwrap()
+            .req("histograms")
+            .unwrap()
+            .req("serve.request_latency")
+            .unwrap();
+        assert_eq!(lat.req("count").unwrap().as_f64(), Some(1.0));
+        let recorded_ns = lat.req("sum").unwrap().as_f64().unwrap();
+        assert_eq!(
+            queued_plus_drained, recorded_ns,
+            "queue_wait + drain must equal the recorded request latency exactly"
+        );
+        http.shutdown();
+        drop(svc);
+    }
+
+    #[test]
     fn stats_and_health_routes_answer_over_real_sockets() {
         let (http, svc) = serve_http(None, Duration::ZERO, 4);
         let mut client = HttpClient::connect(&http.local_addr().to_string()).unwrap();
